@@ -1,0 +1,100 @@
+//! Serving example: the L3 coordinator in front of the AOT-compiled
+//! JAX/Pallas `transform` artifact, under a concurrent client load.
+//! Python is not running — the artifact was compiled by `make artifacts`
+//! and is executed through PJRT from Rust worker threads.
+//!
+//! Falls back to the native engine (same math, pure Rust) when the
+//! artifacts are missing, so the example always runs.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_features`
+
+use rfdot::coordinator::{
+    BackendFactory, Coordinator, CoordinatorConfig, NativeFactory, PjrtTransformFactory,
+};
+use rfdot::kernels::Exponential;
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
+use rfdot::metrics::Stopwatch;
+use rfdot::rng::Rng;
+use rfdot::runtime::ArtifactMeta;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> rfdot::Result<()> {
+    let artifact_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    let artifact = "transform_serve";
+    let kernel = Exponential::new(1.0);
+    let mut rng = Rng::seed_from(7);
+
+    // Prefer PJRT; fall back to native if `make artifacts` has not run.
+    let manifest = artifact_dir.join(format!("{artifact}.json"));
+    let (factory, d, engine_name): (Arc<dyn BackendFactory>, usize, &str) = if manifest.exists() {
+        let meta = ArtifactMeta::parse(&std::fs::read_to_string(&manifest)?)?;
+        let d = meta.inputs[0].shape[1];
+        let n_max = meta.inputs[1].shape[0] as u32;
+        let features = meta.inputs[1].shape[2];
+        let map = Arc::new(RandomMaclaurin::sample(
+            &kernel,
+            d,
+            features,
+            RmConfig::default().with_max_order(n_max),
+            &mut rng,
+        ));
+        (
+            Arc::new(PjrtTransformFactory::new(&artifact_dir, artifact, map)?),
+            d,
+            "pjrt (AOT JAX/Pallas artifact)",
+        )
+    } else {
+        eprintln!("artifacts missing; using the native engine (run `make artifacts` for PJRT)");
+        let d = 22;
+        let map = Arc::new(RandomMaclaurin::sample(
+            &kernel,
+            d,
+            512,
+            RmConfig::default().with_max_order(8),
+            &mut rng,
+        ));
+        (Arc::new(NativeFactory::new(map)), d, "native")
+    };
+
+    let coord = Arc::new(Coordinator::start(
+        factory,
+        CoordinatorConfig {
+            max_batch: 256,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 8192,
+            workers: 2,
+        },
+    ));
+
+    let clients = 4;
+    let per_client = 1000;
+    println!("engine: {engine_name}");
+    println!("load: {clients} clients x {per_client} requests, d = {d}");
+
+    let sw = Stopwatch::start();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from(100 + c as u64);
+            let mut ok = 0;
+            for _ in 0..per_client {
+                let mut x: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+                rfdot::linalg::normalize(&mut x);
+                if let Ok(t) = coord.submit(x) {
+                    if t.wait().is_ok() {
+                        ok += 1;
+                    }
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let dt = sw.elapsed_secs();
+
+    println!("served {total} requests in {:.2}s = {:.0} req/s", dt, total as f64 / dt);
+    println!("coordinator: {}", coord.stats().summary());
+    Ok(())
+}

@@ -1,0 +1,107 @@
+"""AOT pipeline: lower the L2 graphs to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+For every config in `manifest.CONFIGS` this writes
+
+    artifacts/<name>.hlo.txt   the lowered module
+    artifacts/<name>.json      shapes + argument order for the Rust side
+
+Usage: python -m compile.aot [--out DIR] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import manifest, model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def build_fn(name: str):
+    """The jittable function + example args for a manifest entry."""
+    cfg = manifest.CONFIGS[name]
+    kind = cfg["kind"]
+    specs = [_spec(i["shape"]) for i in manifest.artifact_inputs(name)]
+    if kind == "transform":
+
+        def fn(x, omega, mask, coeff):
+            return (model.rm_transform(x, omega, mask, coeff),)
+
+    elif kind == "transform_score":
+
+        def fn(x, omega, mask, coeff, w, b):
+            return (model.transform_score(x, omega, mask, coeff, w, b),)
+
+    elif kind == "train_step":
+
+        def fn(w, b, z, y, lr, reg):
+            return model.train_step(w, b, z, y, lr, reg)
+
+    else:
+        raise ValueError(f"unknown kind {kind}")
+    return fn, specs
+
+
+def emit(name: str, out_dir: pathlib.Path) -> pathlib.Path:
+    """Lower one artifact and write the .hlo.txt + .json pair."""
+    fn, specs = build_fn(name)
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    hlo_path = out_dir / f"{name}.hlo.txt"
+    hlo_path.write_text(text)
+    meta = {
+        "name": name,
+        "config": manifest.CONFIGS[name],
+        "inputs": manifest.artifact_inputs(name),
+        "outputs": manifest.artifact_outputs(name),
+        "format": "hlo-text/return-tuple",
+    }
+    (out_dir / f"{name}.json").write_text(json.dumps(meta, indent=2) + "\n")
+    return hlo_path
+
+
+@functools.cache
+def _repo_root() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parents[2]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out", default=str(_repo_root() / "artifacts"), help="output directory"
+    )
+    parser.add_argument("--only", default=None, help="emit a single artifact")
+    args = parser.parse_args()
+    out_dir = pathlib.Path(args.out)
+    names = [args.only] if args.only else list(manifest.CONFIGS)
+    for name in names:
+        path = emit(name, out_dir)
+        print(f"wrote {path} ({path.stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracles for the Pallas kernel.
+
+Two independent formulations:
+
+* :func:`rm_features_ref` — the padded-dense einsum formulation (same
+  math as the kernel, different execution path).
+* :func:`rm_features_literal` — the paper's Algorithm 1 verbatim: a
+  Python loop over features, each multiplying its own ragged list of
+  Rademacher projections. Slow, but bit-for-bit the published
+  construction; validating the padded formulation against it is what
+  justifies the TPU restructuring.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def rm_features_ref(x, omega, mask, coeff):
+    """Padded-dense oracle: same contraction as the Pallas kernel.
+
+    x: [B, d], omega: [n_max, d, D], mask: [n_max, D], coeff: [D]
+    returns [B, D].
+    """
+    # P[b, j, i] = sum_k x[b, k] * omega[j, k, i]
+    p = jnp.einsum("bd,jdi->bji", x, omega)
+    t = mask[None, :, :] * p + (1.0 - mask[None, :, :])
+    return coeff[None, :] * jnp.prod(t, axis=1)
+
+
+def rm_features_literal(x, orders, signs, weights):
+    """Algorithm 1, literally (numpy, per-feature ragged loop).
+
+    x: [B, d]; orders: [D] ints; signs: [sum(orders), d] of ±1 rows;
+    weights: [D]. Returns [B, D] float64 (the oracle runs in f64 to make
+    tolerance comparisons one-sided).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    signs = np.asarray(signs, dtype=np.float64)
+    b = x.shape[0]
+    d_out = len(orders)
+    out = np.zeros((b, d_out))
+    offsets = np.concatenate([[0], np.cumsum(orders)]).astype(int)
+    for i in range(d_out):
+        prod = np.full(b, float(weights[i]))
+        for j in range(offsets[i], offsets[i + 1]):
+            prod = prod * (x @ signs[j])
+        out[:, i] = prod
+    return out

@@ -1,0 +1,137 @@
+"""L1: the Random Maclaurin feature map as a Pallas TPU kernel.
+
+The hot spot of the paper's system is applying the sampled map to a
+batch: for every output feature `i` with order `N_i` and Rademacher
+vectors `w_1..w_{N_i}`, compute `coeff_i * prod_j <w_j, x>`.
+
+Hardware adaptation (DESIGN.md §8): the reference implementations are
+CPU loops over ragged per-feature omega lists (BLAS-1). On TPU we
+restructure the computation so the MXU does the work — the per-feature
+Rademacher stacks are padded along an order axis into dense matrices
+
+    omega: [n_max, d, D]    mask: [n_max, D]    coeff: [D]
+
+and the kernel computes, for each order slot j,
+
+    P_j = X @ omega[j]                        # [B, D] matmul on the MXU
+    T_j = mask[j] * P_j + (1 - mask[j])       # padded slots -> identity
+    Z   = coeff * prod_j T_j
+
+The `pallas_call` grid tiles over (B, D); each grid step keeps an
+`[Bt, d]` X tile and the `[n_max, d, Dt]` omega tile in VMEM and loops
+the order axis *inside* the kernel, which is the HBM->VMEM schedule a
+CUDA implementation would express with threadblocks. The order loop is
+a static Python loop, so it unrolls into n_max fused MXU contractions.
+
+`interpret=True` is required on CPU PJRT — real TPU lowering emits a
+Mosaic custom-call the CPU plugin cannot execute. Correctness is
+checked against the pure-jnp oracle in `ref.py` by the pytest suite.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rm_kernel(x_ref, omega_ref, mask_ref, coeff_ref, out_ref, *, n_max: int):
+    """One (B-tile, D-tile) grid step.
+
+    x_ref:     [bB, d]       VMEM tile of the input batch
+    omega_ref: [n_max, d, bD] order-padded Rademacher tile
+    mask_ref:  [n_max, bD]
+    coeff_ref: [1, bD]
+    out_ref:   [bB, bD]
+    """
+    x = x_ref[...]
+    acc = None
+    for j in range(n_max):  # static unroll: n_max MXU contractions
+        p = jnp.dot(x, omega_ref[j], preferred_element_type=jnp.float32)
+        m = mask_ref[j][None, :]
+        t = m * p + (1.0 - m)
+        acc = t if acc is None else acc * t
+    if acc is None:  # n_max == 0: every feature is the empty product
+        acc = jnp.ones_like(out_ref)
+    out_ref[...] = coeff_ref[0][None, :] * acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_d", "interpret")
+)
+def rm_features(
+    x: jax.Array,
+    omega: jax.Array,
+    mask: jax.Array,
+    coeff: jax.Array,
+    *,
+    block_b: int = 128,
+    block_d: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Apply a padded Random Maclaurin map to a batch.
+
+    Args:
+      x:     [B, d] float32 input batch.
+      omega: [n_max, d, D] order-padded Rademacher stacks (0 in padding).
+      mask:  [n_max, D] 1.0 where the order slot is active.
+      coeff: [D] per-feature weights (the 1/sqrt(D) scale included).
+      block_b / block_d: VMEM tile sizes (clamped to the actual dims).
+      interpret: must stay True on CPU PJRT (see module docstring).
+
+    Returns: [B, D] float32 features.
+    """
+    b, d = x.shape
+    n_max, d2, dd = omega.shape
+    assert d == d2, f"omega dim {d2} != x dim {d}"
+    assert mask.shape == (n_max, dd)
+    assert coeff.shape == (dd,)
+
+    if n_max == 0:
+        # Degenerate map: every feature is the empty product (= 1).
+        return jnp.broadcast_to(coeff[None, :], (b, dd)).astype(jnp.float32)
+
+    bb = min(block_b, b)
+    bd = min(block_d, dd)
+    # Pallas needs the grid to cover the arrays exactly; fall back to one
+    # tile when the dims do not divide.
+    if b % bb != 0:
+        bb = b
+    if dd % bd != 0:
+        bd = dd
+
+    grid = (b // bb, dd // bd)
+    kernel = functools.partial(_rm_kernel, n_max=n_max)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_max, d, bd), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((n_max, bd), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bd), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, dd), jnp.float32),
+        interpret=interpret,
+    )(x, omega, mask, coeff.reshape(1, -1))
+
+
+def vmem_footprint_bytes(
+    block_b: int, d: int, n_max: int, block_d: int
+) -> int:
+    """Estimated VMEM bytes per grid step (f32 words x 4).
+
+    x tile + omega tile + mask/coeff + output accumulator. Used by the
+    §Perf analysis in EXPERIMENTS.md; must stay well under ~16 MiB.
+    """
+    words = (
+        block_b * d  # x
+        + n_max * d * block_d  # omega
+        + n_max * block_d  # mask
+        + block_d  # coeff
+        + 2 * block_b * block_d  # P_j and the running product
+    )
+    return 4 * words

@@ -1,0 +1,126 @@
+"""Named AOT artifact configurations.
+
+Each entry pins the static shapes one compiled PJRT executable serves.
+The Rust runtime reads the emitted `<name>.json` manifests to know the
+argument order and shapes; `aot.py` iterates this dict.
+
+Shapes are deliberately few and fixed — the dynamic batcher in the Rust
+coordinator pads ragged tails up to `batch` and slices replies, which is
+how fixed-shape artifacts serve variable-size request streams.
+"""
+
+from __future__ import annotations
+
+# kind: "transform" | "transform_score" | "train_step"
+CONFIGS: dict[str, dict] = {
+    # Quickstart / cross-engine test artifact (small, fast to compile).
+    "transform_quickstart": {
+        "kind": "transform",
+        "batch": 128,
+        "d": 16,
+        "n_max": 8,
+        "features": 256,
+    },
+    # Serving artifacts for the IJCNN-surrogate shaped workload (d=22),
+    # used by examples/serve_features.rs. Three batch buckets of the
+    # same computation: the Rust coordinator routes each dynamic batch
+    # to the smallest bucket that fits, cutting padding waste at low
+    # occupancy ("one compiled executable per model variant").
+    "transform_serve": {
+        "kind": "transform",
+        "batch": 256,
+        "d": 22,
+        "n_max": 8,
+        "features": 512,
+    },
+    "transform_serve_b64": {
+        "kind": "transform",
+        "batch": 64,
+        "d": 22,
+        "n_max": 8,
+        "features": 512,
+    },
+    "transform_serve_b16": {
+        "kind": "transform",
+        "batch": 16,
+        "d": 22,
+        "n_max": 8,
+        "features": 512,
+    },
+    # Fused transform + linear scoring (single dispatch serving route).
+    "score_serve": {
+        "kind": "transform_score",
+        "batch": 256,
+        "d": 22,
+        "n_max": 8,
+        "features": 512,
+    },
+    # PJRT-side linear training step on transformed features.
+    "train_step": {
+        "kind": "train_step",
+        "batch": 256,
+        "features": 512,
+    },
+}
+
+
+def artifact_inputs(name: str) -> list[dict]:
+    """Describe the input literals (order, shape, dtype) of an artifact."""
+    cfg = CONFIGS[name]
+    kind = cfg["kind"]
+    if kind == "transform":
+        return [
+            {"name": "x", "shape": [cfg["batch"], cfg["d"]], "dtype": "f32"},
+            {
+                "name": "omega",
+                "shape": [cfg["n_max"], cfg["d"], cfg["features"]],
+                "dtype": "f32",
+            },
+            {"name": "mask", "shape": [cfg["n_max"], cfg["features"]], "dtype": "f32"},
+            {"name": "coeff", "shape": [cfg["features"]], "dtype": "f32"},
+        ]
+    if kind == "transform_score":
+        return artifact_inputs_transform_score(cfg)
+    if kind == "train_step":
+        return [
+            {"name": "w", "shape": [cfg["features"]], "dtype": "f32"},
+            {"name": "b", "shape": [], "dtype": "f32"},
+            {"name": "z", "shape": [cfg["batch"], cfg["features"]], "dtype": "f32"},
+            {"name": "y", "shape": [cfg["batch"]], "dtype": "f32"},
+            {"name": "lr", "shape": [], "dtype": "f32"},
+            {"name": "reg", "shape": [], "dtype": "f32"},
+        ]
+    raise ValueError(f"unknown kind {kind}")
+
+
+def artifact_inputs_transform_score(cfg: dict) -> list[dict]:
+    return [
+        {"name": "x", "shape": [cfg["batch"], cfg["d"]], "dtype": "f32"},
+        {
+            "name": "omega",
+            "shape": [cfg["n_max"], cfg["d"], cfg["features"]],
+            "dtype": "f32",
+        },
+        {"name": "mask", "shape": [cfg["n_max"], cfg["features"]], "dtype": "f32"},
+        {"name": "coeff", "shape": [cfg["features"]], "dtype": "f32"},
+        {"name": "w", "shape": [cfg["features"]], "dtype": "f32"},
+        {"name": "b", "shape": [], "dtype": "f32"},
+    ]
+
+
+def artifact_outputs(name: str) -> list[dict]:
+    cfg = CONFIGS[name]
+    kind = cfg["kind"]
+    if kind == "transform":
+        return [
+            {"name": "z", "shape": [cfg["batch"], cfg["features"]], "dtype": "f32"}
+        ]
+    if kind == "transform_score":
+        return [{"name": "scores", "shape": [cfg["batch"]], "dtype": "f32"}]
+    if kind == "train_step":
+        return [
+            {"name": "w", "shape": [cfg["features"]], "dtype": "f32"},
+            {"name": "b", "shape": [], "dtype": "f32"},
+            {"name": "loss", "shape": [], "dtype": "f32"},
+        ]
+    raise ValueError(f"unknown kind {kind}")

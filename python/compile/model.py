@@ -1,0 +1,76 @@
+"""L2: the JAX compute graph built on the L1 Pallas kernel.
+
+Everything here is build-time only: `aot.py` lowers these functions to
+HLO text once, and the Rust coordinator executes the compiled artifacts
+through PJRT. Python never runs on the request path.
+
+Exported graphs:
+
+* :func:`rm_transform`       — feature map application (the paper's hot
+  path: test-time feature construction).
+* :func:`transform_score`    — transform fused with a linear scorer, the
+  serving path's single-artifact fast route (one PJRT call per batch).
+* :func:`train_step`         — one squared-hinge SGD step on transformed
+  features, so the coordinator can run linear-model training through
+  PJRT too (online-learning mode of the serving example).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.rm_features import rm_features
+
+
+def rm_transform(x, omega, mask, coeff, *, interpret: bool = True):
+    """Z = RM(x): [B, d] -> [B, D] via the Pallas kernel."""
+    return rm_features(x, omega, mask, coeff, interpret=interpret)
+
+
+def linear_score(z, w, b):
+    """Decision values of a linear model: [B, D] @ [D] + b -> [B]."""
+    return z @ w + b
+
+
+def transform_score(x, omega, mask, coeff, w, b, *, interpret: bool = True):
+    """Fused feature map + linear scorer: [B, d] -> [B] decisions.
+
+    One artifact, one PJRT dispatch per batch; XLA fuses the elementwise
+    chain after the kernel's matmuls.
+    """
+    z = rm_transform(x, omega, mask, coeff, interpret=interpret)
+    return linear_score(z, w, b)
+
+
+def train_step(w, b, z, y, lr, reg):
+    """One SGD step on L2-regularized squared hinge loss.
+
+    loss = 0.5 * reg * ||w||^2 + mean(max(0, 1 - y * s)^2),  s = z @ w + b
+
+    Args:
+      w: [D] weights; b: scalar bias; z: [B, D] features; y: [B] ±1
+      labels; lr/reg: scalars.
+
+    Returns: (w', b', loss) — donated-style functional update.
+    """
+    s = z @ w + b
+    margin = jnp.maximum(0.0, 1.0 - y * s)
+    loss = 0.5 * reg * jnp.sum(w * w) + jnp.mean(margin * margin)
+    # d loss / d s = -2 y margin / B
+    g_s = -2.0 * y * margin / z.shape[0]
+    g_w = reg * w + z.T @ g_s
+    g_b = jnp.sum(g_s)
+    return w - lr * g_w, b - lr * g_b, loss
+
+
+def train_epoch(w, b, z, y, lr, reg, steps: int):
+    """`steps` full-batch updates rolled into one artifact via scan."""
+
+    def body(carry, _):
+        w, b = carry
+        w2, b2, loss = train_step(w, b, z, y, lr, reg)
+        return (w2, b2), loss
+
+    (w, b), losses = jax.lax.scan(body, (w, b), None, length=steps)
+    return w, b, losses

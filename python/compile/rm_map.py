@@ -1,0 +1,229 @@
+"""Reader/writer for the canonical `.rfdm` Random Maclaurin map blobs.
+
+The Rust library serializes sampled maps (`maclaurin::serialize`) into
+this format; the Python build path reads them to expand the exact same
+map into the dense `omega / mask / coeff` tensors the AOT artifact
+consumes. A writer is provided too so the pytest suite can round-trip
+without Rust in the loop.
+
+Layout (little-endian) — must stay in sync with
+`rust/src/maclaurin/serialize.rs`:
+
+    magic   8   b"RFDM0001"
+    d       u32
+    D       u32
+    p       f64
+    h01     u8
+    maxord  u32
+    wconst  f32
+    wlin    f32
+    klen    u32, then klen bytes of utf-8 kernel name
+    orders  u32 x D
+    weights f32 x D
+    rows    u32
+    words   u64 x (rows * ceil(d / 64))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import numpy as np
+
+MAGIC = b"RFDM0001"
+
+
+@dataclasses.dataclass
+class RmMap:
+    """A sampled Random Maclaurin map (mirror of the Rust struct)."""
+
+    d: int
+    n_random: int
+    p: float
+    h01: bool
+    max_order: int
+    w_const: float
+    w_linear: float
+    kernel_name: str
+    orders: np.ndarray  # uint32 [D]
+    weights: np.ndarray  # float32 [D]
+    words: np.ndarray  # uint64 [rows * words_per_row]
+
+    @property
+    def rows(self) -> int:
+        return int(self.orders.sum())
+
+    @property
+    def words_per_row(self) -> int:
+        return (self.d + 63) // 64
+
+    def signs(self) -> np.ndarray:
+        """Expand packed words to a dense ±1.0 matrix [rows, d]."""
+        w = self.words.reshape(self.rows, self.words_per_row)
+        # bit k of word j encodes coordinate j*64+k; set bit => -1.
+        bits = np.zeros((self.rows, self.words_per_row * 64), dtype=bool)
+        for k in range(64):
+            bits[:, k::64] = (w >> np.uint64(k)) & np.uint64(1)
+        return np.where(bits[:, : self.d], -1.0, 1.0).astype(np.float32)
+
+    def padded_dense(self, n_max: int):
+        """Expand into (omega [n_max, d, D], mask [n_max, D], coeff [D]).
+
+        Mirrors `RandomMaclaurin::to_padded_dense` exactly: padded slots
+        hold zeros in omega and mask, so the artifact's
+        `mask * (x @ omega_j) + (1 - mask)` contributes a multiplicative
+        identity for them.
+        """
+        if self.orders.max(initial=0) > n_max:
+            raise ValueError(
+                f"sampled order {self.orders.max()} exceeds padding {n_max}"
+            )
+        dense = self.signs()
+        omega = np.zeros((n_max, self.d, self.n_random), dtype=np.float32)
+        mask = np.zeros((n_max, self.n_random), dtype=np.float32)
+        offsets = np.concatenate([[0], np.cumsum(self.orders)]).astype(np.int64)
+        for i in range(self.n_random):
+            n = int(self.orders[i])
+            for j in range(n):
+                omega[j, :, i] = dense[offsets[i] + j]
+                mask[j, i] = 1.0
+        return omega, mask, self.weights.astype(np.float32)
+
+
+def loads(buf: bytes) -> RmMap:
+    """Parse an `.rfdm` blob."""
+    if buf[:8] != MAGIC:
+        raise ValueError("bad RFDM magic")
+    off = 8
+    d, n_random = struct.unpack_from("<II", buf, off)
+    off += 8
+    (p,) = struct.unpack_from("<d", buf, off)
+    off += 8
+    h01 = buf[off] != 0
+    off += 1
+    (max_order,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    w_const, w_linear = struct.unpack_from("<ff", buf, off)
+    off += 8
+    (klen,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    kernel_name = buf[off : off + klen].decode("utf-8")
+    off += klen
+    orders = np.frombuffer(buf, dtype="<u4", count=n_random, offset=off).copy()
+    off += 4 * n_random
+    weights = np.frombuffer(buf, dtype="<f4", count=n_random, offset=off).copy()
+    off += 4 * n_random
+    (rows,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    if rows != orders.sum():
+        raise ValueError("row count does not match order sum")
+    wpr = (d + 63) // 64
+    nwords = rows * wpr
+    words = np.frombuffer(buf, dtype="<u8", count=nwords, offset=off).copy()
+    off += 8 * nwords
+    if off != len(buf):
+        raise ValueError("trailing bytes in RFDM blob")
+    return RmMap(
+        d=d,
+        n_random=n_random,
+        p=p,
+        h01=h01,
+        max_order=max_order,
+        w_const=w_const,
+        w_linear=w_linear,
+        kernel_name=kernel_name,
+        orders=orders,
+        weights=weights,
+        words=words,
+    )
+
+
+def load(path) -> RmMap:
+    with open(path, "rb") as f:
+        return loads(f.read())
+
+
+def dumps(m: RmMap) -> bytes:
+    """Serialize (inverse of :func:`loads`)."""
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<II", m.d, m.n_random)
+    out += struct.pack("<d", m.p)
+    out += bytes([1 if m.h01 else 0])
+    out += struct.pack("<I", m.max_order)
+    out += struct.pack("<ff", m.w_const, m.w_linear)
+    kname = m.kernel_name.encode("utf-8")
+    out += struct.pack("<I", len(kname))
+    out += kname
+    out += np.asarray(m.orders, dtype="<u4").tobytes()
+    out += np.asarray(m.weights, dtype="<f4").tobytes()
+    out += struct.pack("<I", int(m.orders.sum()))
+    out += np.asarray(m.words, dtype="<u8").tobytes()
+    return bytes(out)
+
+
+def pack_signs(signs: np.ndarray) -> np.ndarray:
+    """Pack a ±1 matrix [rows, d] into the bit-word layout (−1 ⇒ bit set)."""
+    rows, d = signs.shape
+    wpr = (d + 63) // 64
+    words = np.zeros((rows, wpr), dtype=np.uint64)
+    for j in range(d):
+        bit = (signs[:, j] < 0).astype(np.uint64)
+        words[:, j // 64] |= bit << np.uint64(j % 64)
+    return words.reshape(-1)
+
+
+def sample_map(
+    d: int,
+    n_random: int,
+    coeffs,
+    *,
+    p: float = 2.0,
+    max_order: int = 8,
+    seed: int = 0,
+    kernel_name: str = "python-sampled",
+) -> RmMap:
+    """Sample a map in Python (for tests that do not involve Rust).
+
+    `coeffs[n]` are the Maclaurin coefficients a_n for n <= max_order.
+    Uses the same capped-geometric external measure as the Rust sampler
+    (tail mass lands on the cap; importance weight uses the emission
+    probability) but numpy's RNG, so the *distribution* matches while the
+    draws differ.
+    """
+    rng = np.random.default_rng(seed)
+    q = 1.0 / p
+    u = rng.random(n_random)
+    orders = np.minimum(
+        np.floor(np.log(1.0 - u) / np.log(q)).astype(np.int64), max_order
+    ).astype(np.uint32)
+
+    def pmf_capped(n):
+        return (1 - q) * q**n if n < max_order else q**max_order
+
+    coeffs = np.asarray(coeffs, dtype=np.float64)
+    a = np.zeros(max_order + 1)
+    a[: min(len(coeffs), max_order + 1)] = coeffs[: max_order + 1]
+    weights = np.array(
+        [
+            np.sqrt(a[n] / pmf_capped(int(n))) / np.sqrt(n_random)
+            for n in orders
+        ],
+        dtype=np.float32,
+    )
+    rows = int(orders.sum())
+    signs = rng.choice([1.0, -1.0], size=(rows, d)).astype(np.float32)
+    return RmMap(
+        d=d,
+        n_random=n_random,
+        p=p,
+        h01=False,
+        max_order=max_order,
+        w_const=0.0,
+        w_linear=0.0,
+        kernel_name=kernel_name,
+        orders=orders,
+        weights=weights,
+        words=pack_signs(signs),
+    )

@@ -1,0 +1,72 @@
+"""AOT pipeline tests: lowering to HLO text, manifests, shape agreement.
+
+The quickstart artifact is lowered for real (slow-ish but the critical
+path); the rest are validated through the manifest consistency checks.
+"""
+
+import json
+import pathlib
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot, manifest
+
+
+def test_manifest_shapes_consistent():
+    for name, cfg in manifest.CONFIGS.items():
+        ins = manifest.artifact_inputs(name)
+        outs = manifest.artifact_outputs(name)
+        assert ins and outs
+        if cfg["kind"] in ("transform", "transform_score"):
+            assert ins[0]["shape"] == [cfg["batch"], cfg["d"]]
+            assert ins[1]["shape"] == [cfg["n_max"], cfg["d"], cfg["features"]]
+        if cfg["kind"] == "transform":
+            assert outs[0]["shape"] == [cfg["batch"], cfg["features"]]
+
+
+def test_emit_quickstart_artifact():
+    with tempfile.TemporaryDirectory() as td:
+        out = pathlib.Path(td)
+        path = aot.emit("transform_quickstart", out)
+        text = path.read_text()
+        assert text.startswith("HloModule"), text[:80]
+        # The kernel's matmuls must appear as dot ops.
+        assert " dot(" in text or " dot." in text
+        meta = json.loads((out / "transform_quickstart.json").read_text())
+        assert meta["format"] == "hlo-text/return-tuple"
+        assert meta["config"]["features"] == 256
+
+
+def test_hlo_text_parses_back():
+    """The emitted HLO text must re-parse through the same text parser the
+    Rust runtime uses (`HloModuleProto::from_text_file` wraps it), with the
+    expected entry signature. Full load-and-execute is covered by the Rust
+    integration tests (rust/tests/pjrt_roundtrip.rs)."""
+    from jax._src.lib import xla_client as xc
+
+    name = "transform_quickstart"
+    cfg = manifest.CONFIGS[name]
+    fn, specs = aot.build_fn(name)
+    import jax
+
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+
+    module = xc._xla.hlo_module_from_text(text)
+    proto = module.as_serialized_hlo_module_proto()
+    assert len(proto) > 100
+    # Entry signature: 4 parameters, tuple result with the right shape.
+    text2 = module.to_string()
+    assert f"f32[{cfg['batch']},{cfg['d']}]" in text2
+    assert f"f32[{cfg['batch']},{cfg['features']}]" in text2
+
+
+@pytest.mark.parametrize("name", list(manifest.CONFIGS))
+def test_build_fn_traces(name):
+    """Every artifact must at least trace (shape-check) cleanly."""
+    import jax
+
+    fn, specs = aot.build_fn(name)
+    jax.eval_shape(fn, *specs)

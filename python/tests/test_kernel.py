@@ -1,0 +1,153 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp / literal oracles.
+
+This is the core correctness signal for the compiled hot path: hypothesis
+sweeps shapes and order structure, and every case asserts the Pallas
+kernel (interpret mode), the padded-dense einsum oracle and the literal
+Algorithm 1 loop agree.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.ref import rm_features_literal, rm_features_ref
+from compile.kernels.rm_features import rm_features, vmem_footprint_bytes
+from compile import rm_map
+
+
+def make_case(rng, b, d, n_feat, n_max):
+    """Random padded map + batch."""
+    x = rng.standard_normal((b, d)).astype(np.float32)
+    x /= np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-9)
+    orders = rng.integers(0, n_max + 1, size=n_feat)
+    signs = rng.choice([1.0, -1.0], size=(int(orders.sum()), d)).astype(np.float32)
+    weights = (rng.random(n_feat) * 2.0).astype(np.float32)
+    omega = np.zeros((n_max, d, n_feat), dtype=np.float32)
+    mask = np.zeros((n_max, n_feat), dtype=np.float32)
+    offs = np.concatenate([[0], np.cumsum(orders)]).astype(int)
+    for i in range(n_feat):
+        for j in range(int(orders[i])):
+            omega[j, :, i] = signs[offs[i] + j]
+            mask[j, i] = 1.0
+    return x, omega, mask, weights, orders, signs
+
+
+class TestPallasVsOracles:
+    @pytest.mark.parametrize(
+        "b,d,n_feat,n_max",
+        [
+            (4, 3, 5, 2),
+            (8, 16, 32, 4),
+            (128, 16, 256, 8),  # the quickstart artifact shape
+            (16, 7, 33, 5),  # ragged tile fallback
+            (1, 1, 1, 1),
+        ],
+    )
+    def test_matches_ref_and_literal(self, b, d, n_feat, n_max):
+        rng = np.random.default_rng(42 + b + d)
+        x, omega, mask, weights, orders, signs = make_case(rng, b, d, n_feat, n_max)
+        z_pallas = np.asarray(rm_features(x, omega, mask, weights))
+        z_ref = np.asarray(rm_features_ref(x, omega, mask, weights))
+        z_lit = rm_features_literal(x, orders, signs, weights)
+        np.testing.assert_allclose(z_pallas, z_ref, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(z_pallas, z_lit, rtol=1e-4, atol=1e-5)
+
+    def test_zero_order_features_are_constant(self):
+        rng = np.random.default_rng(0)
+        b, d, n_feat, n_max = 6, 4, 8, 3
+        x, omega, mask, weights, orders, _ = make_case(rng, b, d, n_feat, n_max)
+        z = np.asarray(rm_features(x, omega, mask, weights))
+        for i in range(n_feat):
+            if orders[i] == 0:
+                np.testing.assert_allclose(z[:, i], weights[i], rtol=1e-6)
+
+    def test_tile_boundaries(self):
+        # Shapes that exactly hit and just miss the default 128 tiles.
+        rng = np.random.default_rng(7)
+        for b, n_feat in [(128, 128), (256, 384), (129, 130)]:
+            x, omega, mask, weights, *_ = make_case(rng, b, 8, n_feat, 4)
+            z = np.asarray(rm_features(x, omega, mask, weights))
+            z_ref = np.asarray(rm_features_ref(x, omega, mask, weights))
+            np.testing.assert_allclose(z, z_ref, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 32),
+        d=st.integers(1, 24),
+        n_feat=st.integers(1, 48),
+        n_max=st.integers(0, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, b, d, n_feat, n_max, seed):
+        rng = np.random.default_rng(seed)
+        if n_max == 0:
+            # All features are empty products.
+            x = rng.standard_normal((b, d)).astype(np.float32)
+            omega = np.zeros((0, d, n_feat), dtype=np.float32)
+            mask = np.zeros((0, n_feat), dtype=np.float32)
+            weights = rng.random(n_feat).astype(np.float32)
+            z = np.asarray(rm_features(x, omega, mask, weights))
+            np.testing.assert_allclose(
+                z, np.broadcast_to(weights, (b, n_feat)), rtol=1e-6
+            )
+            return
+        x, omega, mask, weights, orders, signs = make_case(rng, b, d, n_feat, n_max)
+        z = np.asarray(rm_features(x, omega, mask, weights))
+        z_lit = rm_features_literal(x, orders, signs, weights)
+        np.testing.assert_allclose(z, z_lit, rtol=1e-4, atol=1e-5)
+
+    def test_dtype_is_f32(self):
+        rng = np.random.default_rng(3)
+        x, omega, mask, weights, *_ = make_case(rng, 4, 4, 4, 2)
+        z = rm_features(x, omega, mask, weights)
+        assert z.dtype == jnp.float32
+
+
+class TestStatistics:
+    def test_unbiased_estimate_of_kernel(self):
+        """Lemma 7 in the padded formulation: averaging <Z(x), Z(y)> over
+        many sampled maps approaches f(<x, y>) for f = (1 + t)^3."""
+        rng = np.random.default_rng(11)
+        d, n_feat, n_max = 6, 64, 6
+        coeffs = [1.0, 3.0, 3.0, 1.0]  # (1 + t)^3
+        x = rng.standard_normal((2, d)).astype(np.float32)
+        x /= np.linalg.norm(x, axis=1, keepdims=True)
+        t = float(x[0] @ x[1])
+        exact = (1.0 + t) ** 3
+        acc = 0.0
+        n_maps = 150
+        for s in range(n_maps):
+            m = rm_map.sample_map(d, n_feat, coeffs, max_order=n_max, seed=1000 + s)
+            omega, mask, coeff = m.padded_dense(n_max)
+            z = np.asarray(rm_features(x, omega, mask, coeff))
+            acc += float(z[0] @ z[1])
+        mean = acc / n_maps
+        assert abs(mean - exact) < 0.35, f"mean {mean} vs exact {exact}"
+
+    def test_estimator_bound(self):
+        """Lemma 8: D * |Z_i(x) Z_i(y)| <= p f(p R^2) on the L1 ball."""
+        rng = np.random.default_rng(13)
+        d, n_feat, n_max = 5, 128, 10
+        sigma2 = 1.0
+        import math
+
+        coeffs = [1.0 / sigma2**n / math.factorial(n) for n in range(n_max + 1)]
+        m = rm_map.sample_map(d, n_feat, coeffs, max_order=n_max, seed=5)
+        omega, mask, coeff = m.padded_dense(n_max)
+        bound = 2.0 * np.exp(2.0)  # p f(p R^2), p = 2, R = 1, f = exp
+        for s in range(20):
+            x = rng.standard_normal((2, d)).astype(np.float32)
+            x /= np.abs(x).sum(axis=1, keepdims=True)  # L1 ball
+            z = np.asarray(rm_features(x, omega, mask, coeff))
+            prods = np.abs(z[0] * z[1]) * n_feat
+            assert prods.max() <= bound * (1 + 1e-5), f"{prods.max()} > {bound}"
+
+
+class TestVmem:
+    def test_default_tile_fits_vmem(self):
+        # DESIGN.md §8: default tile must stay well under 16 MiB.
+        bytes_ = vmem_footprint_bytes(128, 128, 8, 128)
+        assert bytes_ < 4 * 1024 * 1024, f"VMEM estimate {bytes_} too large"

@@ -1,0 +1,63 @@
+"""L2 graph tests: shapes, fusion semantics, training step descent."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile import model, rm_map
+
+
+def setup_map(d=8, n_feat=64, n_max=4, seed=0):
+    coeffs = [1.0, 2.0, 1.5, 0.5, 0.25]
+    m = rm_map.sample_map(d, n_feat, coeffs, max_order=n_max, seed=seed)
+    return m.padded_dense(n_max)
+
+
+def test_transform_shapes():
+    omega, mask, coeff = setup_map()
+    x = np.random.default_rng(0).standard_normal((16, 8)).astype(np.float32)
+    z = model.rm_transform(x, omega, mask, coeff)
+    assert z.shape == (16, 64)
+
+
+def test_transform_score_equals_manual():
+    omega, mask, coeff = setup_map()
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((16, 8)).astype(np.float32)
+    w = rng.standard_normal(64).astype(np.float32)
+    b = np.float32(0.3)
+    fused = model.transform_score(x, omega, mask, coeff, w, b)
+    manual = model.rm_transform(x, omega, mask, coeff) @ w + b
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(manual), rtol=1e-5)
+
+
+def test_train_step_reduces_loss():
+    rng = np.random.default_rng(2)
+    b_sz, d_feat = 64, 32
+    z = rng.standard_normal((b_sz, d_feat)).astype(np.float32)
+    true_w = rng.standard_normal(d_feat).astype(np.float32)
+    y = np.sign(z @ true_w + 0.1).astype(np.float32)
+    w = jnp.zeros(d_feat)
+    bias = jnp.float32(0.0)
+    losses = []
+    for _ in range(60):
+        w, bias, loss = model.train_step(w, bias, z, y, 0.5, 1e-4)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, f"no descent: {losses[0]} -> {losses[-1]}"
+    acc = float((np.sign(np.asarray(z @ w + bias)) == y).mean())
+    assert acc > 0.9, f"train acc {acc}"
+
+
+def test_train_epoch_matches_unrolled_steps():
+    rng = np.random.default_rng(3)
+    z = rng.standard_normal((32, 16)).astype(np.float32)
+    y = np.sign(rng.standard_normal(32)).astype(np.float32)
+    w0 = jnp.zeros(16)
+    b0 = jnp.float32(0.0)
+    w_scan, b_scan, losses = model.train_epoch(w0, b0, z, y, 0.1, 1e-3, 5)
+    w, b = w0, b0
+    for _ in range(5):
+        w, b, _ = model.train_step(w, b, z, y, 0.1, 1e-3)
+    np.testing.assert_allclose(np.asarray(w_scan), np.asarray(w), rtol=1e-5)
+    np.testing.assert_allclose(float(b_scan), float(b), rtol=1e-5)
+    assert losses.shape == (5,)

@@ -1,0 +1,76 @@
+"""`.rfdm` wire-format tests: roundtrip, bit-packing, padded expansion."""
+
+import numpy as np
+import pytest
+
+from compile import rm_map
+from compile.kernels.ref import rm_features_literal, rm_features_ref
+
+
+def test_roundtrip():
+    m = rm_map.sample_map(7, 16, [1.0, 2.0, 1.0], seed=3)
+    blob = rm_map.dumps(m)
+    m2 = rm_map.loads(blob)
+    assert m2.d == m.d and m2.n_random == m.n_random
+    assert m2.p == m.p and m2.max_order == m.max_order
+    np.testing.assert_array_equal(m2.orders, m.orders)
+    np.testing.assert_array_equal(m2.weights, m.weights)
+    np.testing.assert_array_equal(m2.words, m.words)
+    assert m2.kernel_name == m.kernel_name
+
+
+def test_pack_unpack_signs():
+    rng = np.random.default_rng(1)
+    for d in [1, 63, 64, 65, 100]:
+        signs = rng.choice([1.0, -1.0], size=(5, d)).astype(np.float32)
+        words = rm_map.pack_signs(signs)
+        m = rm_map.RmMap(
+            d=d,
+            n_random=5,
+            p=2.0,
+            h01=False,
+            max_order=1,
+            w_const=0.0,
+            w_linear=0.0,
+            kernel_name="t",
+            orders=np.ones(5, dtype=np.uint32),
+            weights=np.ones(5, dtype=np.float32),
+            words=words,
+        )
+        np.testing.assert_array_equal(m.signs(), signs)
+
+
+def test_rejects_corruption():
+    m = rm_map.sample_map(4, 8, [1.0, 1.0], seed=4)
+    blob = rm_map.dumps(m)
+    with pytest.raises(ValueError):
+        rm_map.loads(b"XXXX" + blob[4:])
+    with pytest.raises(Exception):
+        rm_map.loads(blob[:-5])
+    with pytest.raises(ValueError):
+        rm_map.loads(blob + b"\x00")
+
+
+def test_padded_dense_consistent_with_literal():
+    m = rm_map.sample_map(6, 24, [0.5, 1.0, 0.25, 0.125], max_order=5, seed=9)
+    omega, mask, coeff = m.padded_dense(5)
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((7, 6)).astype(np.float32) * 0.3
+    z_ref = np.asarray(rm_features_ref(x, omega, mask, coeff))
+    z_lit = rm_features_literal(x, m.orders, m.signs(), m.weights)
+    np.testing.assert_allclose(z_ref, z_lit, rtol=1e-4, atol=1e-6)
+
+
+def test_padded_dense_rejects_small_n_max():
+    m = rm_map.sample_map(4, 16, [1.0, 1.0, 1.0], max_order=6, seed=11)
+    if m.orders.max() > 2:
+        with pytest.raises(ValueError):
+            m.padded_dense(2)
+
+
+def test_order_distribution_is_capped_geometric():
+    m = rm_map.sample_map(3, 20000, [1.0] * 9, max_order=8, seed=13)
+    frac0 = float((m.orders == 0).mean())
+    frac_cap = float((m.orders == 8).mean())
+    assert abs(frac0 - 0.5) < 0.02  # pmf(0) = 1/2 at p=2
+    assert abs(frac_cap - 2.0**-8) < 0.01  # survival mass at the cap

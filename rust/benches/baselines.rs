@@ -1,0 +1,109 @@
+//! Extension benches beyond the paper's tables:
+//!
+//! 1. **Approximation-family comparison** — Random Maclaurin vs
+//!    TensorSketch (Pham & Pagh 2013) vs Nyström (Bach & Jordan 2005,
+//!    named in the paper's §2) at equal output dimension, on the
+//!    polynomial kernel both can represent.
+//! 2. **Curse of support** (paper §1) — support-vector count and test
+//!    cost of the exact kernel SVM vs training-set size, against the
+//!    size-independent cost of the RM + linear pipeline.
+//!
+//! Run: `cargo bench --bench baselines`
+
+use rfdot::bench::{fmt_duration, time_once, Table};
+use rfdot::data::UciSurrogate;
+use rfdot::kernels::{gram, mean_abs_gram_error, Polynomial};
+use rfdot::linalg::Matrix;
+use rfdot::maclaurin::{feature_gram, FeatureMap, RandomMaclaurin, RmConfig};
+use rfdot::nystrom::Nystrom;
+use rfdot::rng::Rng;
+use rfdot::svm::{Classifier, KernelSvm, LinearSvm, LinearSvmParams, SmoParams};
+use rfdot::tensorsketch::TensorSketch;
+
+fn sphere_points(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seed_from(seed);
+    let rows: Vec<Vec<f32>> =
+        (0..n).map(|_| rfdot::prop::gens::unit_vec(&mut rng, d)).collect();
+    Matrix::from_rows(&rows).unwrap()
+}
+
+fn approximation_families() {
+    println!("== approximation families on (1 + <x,y>)^3, d=16, 60 points ==");
+    let kernel = Polynomial::new(3, 1.0);
+    let d = 16;
+    let x = sphere_points(60, d, 1);
+    let exact = gram(&kernel, &x);
+    let mut table = Table::new(&["D", "RandomMaclaurin", "TensorSketch", "Nystrom"]);
+    for n_feat in [32usize, 128, 512, 2048] {
+        let mut rng = Rng::seed_from(100 + n_feat as u64);
+        let rm = RandomMaclaurin::sample(&kernel, d, n_feat, RmConfig::default(), &mut rng);
+        let ts = TensorSketch::sample(3, 1.0, d, n_feat, &mut rng);
+        let ny_err = if n_feat <= x.rows() {
+            let ny = Nystrom::fit(Box::new(kernel), &x, n_feat, &mut rng).unwrap();
+            format!("{:.5}", mean_abs_gram_error(&exact, &feature_gram(&ny, &x)))
+        } else {
+            "n/a (m>n)".to_string()
+        };
+        table.row(&[
+            format!("{n_feat}"),
+            format!("{:.5}", mean_abs_gram_error(&exact, &feature_gram(&rm, &x))),
+            format!("{:.5}", mean_abs_gram_error(&exact, &feature_gram(&ts, &x))),
+            ny_err,
+        ]);
+    }
+    table.print();
+    println!("expected: TensorSketch tightest for pure polynomials; Nystrom excellent");
+    println!("at m close to n (data-dependent); RandomMaclaurin is the only one that");
+    println!("generalizes to arbitrary dot product kernels.");
+}
+
+fn curse_of_support() {
+    println!("\n== curse of support (paper §1): exact SVM cost vs training size ==");
+    let mut table = Table::new(&[
+        "n_train", "n_sv", "sv frac", "K tst(1k)", "RF tst(1k)", "tst speedup",
+    ]);
+    let kernel = Polynomial::new(10, 1.0);
+    for &scale in &[0.01f64, 0.02, 0.05, 0.1] {
+        let ds = UciSurrogate::CodRna.load(scale, 7);
+        let mut rng = Rng::seed_from(8);
+        let (train, test) = ds.split(0.6, 20_000, &mut rng);
+        let test_1k = {
+            let n = test.len().min(1000);
+            rfdot::data::Dataset::new(
+                "t",
+                test.x.slice_rows(0, n),
+                test.y[..n].to_vec(),
+            )
+            .unwrap()
+        };
+        let model =
+            KernelSvm::train(&train, Box::new(kernel), SmoParams::default()).unwrap();
+        let (_, k_tst) = time_once(|| model.accuracy_on(&test_1k));
+
+        let map = RandomMaclaurin::sample(&kernel, train.dim(), 500, RmConfig::default(), &mut rng);
+        let z_train = map.transform_batch(&train.x);
+        let zds = rfdot::data::Dataset::new("z", z_train, train.y.clone()).unwrap();
+        let lin = LinearSvm::train(&zds, LinearSvmParams::default()).unwrap();
+        let (_, rf_tst) = time_once(|| {
+            let z = map.transform_batch(&test_1k.x);
+            lin.accuracy(&z, &test_1k.y)
+        });
+
+        table.row(&[
+            format!("{}", train.len()),
+            format!("{}", model.n_support()),
+            format!("{:.0}%", 100.0 * model.n_support() as f64 / train.len() as f64),
+            fmt_duration(k_tst),
+            fmt_duration(rf_tst),
+            format!("{:.1}x", k_tst / rf_tst.max(1e-9)),
+        ]);
+    }
+    table.print();
+    println!("expected: n_sv grows with n (Steinwart 2003) so exact test cost grows");
+    println!("without bound; the RF pipeline's cost is independent of n.");
+}
+
+fn main() {
+    approximation_families();
+    curse_of_support();
+}

@@ -1,0 +1,70 @@
+//! Figure 2 reproduction: H0/1 vs plain RF as a function of D on four
+//! dataset/kernel pairs — (a) test accuracy, (b) training time,
+//! (c) testing time.
+//!
+//! Paper columns: Spambase+polynomial, Nursery+polynomial,
+//! IJCNN+exponential, Cod-RNA+exponential.
+//!
+//! Run: `cargo bench --bench fig2`
+//! Env: RFDOT_SCALE (default 0.05 of the paper's dataset sizes),
+//!      RFDOT_SEED.
+
+use rfdot::bench::{experiment, fmt_duration, Table};
+use rfdot::config::{ExperimentConfig, KernelSpec};
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let scale = env_f64("RFDOT_SCALE", 0.05);
+    let seed = env_f64("RFDOT_SEED", 42.0) as u64;
+    let d_grid = [10usize, 25, 50, 100, 200, 400];
+
+    let cases: [(&str, KernelSpec); 4] = [
+        ("spambase", KernelSpec::Polynomial { degree: 10, offset: 1.0 }),
+        ("nursery", KernelSpec::Polynomial { degree: 10, offset: 1.0 }),
+        ("ijcnn", KernelSpec::Exponential { sigma2: 0.0 }),
+        ("cod-rna", KernelSpec::Exponential { sigma2: 0.0 }),
+    ];
+
+    for (dataset, kernel) in cases {
+        let config = ExperimentConfig {
+            dataset: dataset.into(),
+            kernel: kernel.clone(),
+            scale,
+            seed,
+            ..Default::default()
+        };
+        let prep = match experiment::prepare(&config) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("skip {dataset}: {e}");
+                continue;
+            }
+        };
+        println!(
+            "\n== fig2: {dataset} + {} (train {}, test {}, scale {scale}) ==",
+            prep.kernel.name(),
+            prep.train.len(),
+            prep.test.len()
+        );
+        let mut table =
+            Table::new(&["D", "variant", "acc (fig2a)", "trn (fig2b)", "tst (fig2c)"]);
+        for &n_feat in &d_grid {
+            for h01 in [false, true] {
+                let cell = experiment::run_random_features(&prep, n_feat, h01, n_feat as u64);
+                table.row(&[
+                    format!("{n_feat}"),
+                    cell.label.clone(),
+                    format!("{:.2}%", cell.accuracy * 100.0),
+                    fmt_duration(cell.train_s),
+                    fmt_duration(cell.test_s),
+                ]);
+            }
+        }
+        table.print();
+    }
+    println!("\npaper shape (fig 2): at small D, H0/1 accuracy >> RF accuracy;");
+    println!("H0/1 gap narrows as D grows; H0/1 test time overtakes RF at large D.");
+}

@@ -1,0 +1,341 @@
+//! Hot-path microbenchmarks (the §Perf instrumentation):
+//!
+//! * native feature-map application throughput across (d, D) shapes,
+//! * bit-packed vs dense-f32 Rademacher projection,
+//! * PJRT artifact execution latency/throughput per batch,
+//! * coordinator end-to-end round trip under load,
+//! * SVM solver throughput on surrogate data.
+//!
+//! Run: `cargo bench --bench micro`
+//! Env: RFDOT_MICRO_FAST=1 trims iteration counts for smoke runs.
+
+use rfdot::bench::{bench, fmt_duration, Table};
+use rfdot::coordinator::{Coordinator, CoordinatorConfig, NativeFactory, PjrtTransformFactory};
+use rfdot::kernels::Exponential;
+use rfdot::linalg::Matrix;
+use rfdot::maclaurin::{FeatureMap, RandomMaclaurin, RmConfig};
+use rfdot::rng::{RademacherMatrix, Rng};
+use rfdot::runtime::{ArtifactMeta, Engine};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn fast() -> bool {
+    std::env::var("RFDOT_MICRO_FAST").is_ok()
+}
+
+fn artifact_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+}
+
+fn batch(rows: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seed_from(seed);
+    let mut x = Matrix::zeros(rows, d);
+    for i in 0..rows {
+        for j in 0..d {
+            x.set(i, j, rng.f32() - 0.5);
+        }
+        rfdot::linalg::normalize(x.row_mut(i));
+    }
+    x
+}
+
+fn bench_native_transform() {
+    println!("\n== native transform throughput ==");
+    let kernel = Exponential::new(1.0);
+    let mut table = Table::new(&["d", "D", "batch", "time/batch", "vectors/s"]);
+    let iters = if fast() { 3 } else { 10 };
+    for (d, n_feat) in [(8usize, 100usize), (22, 512), (54, 1000), (123, 500)] {
+        let mut rng = Rng::seed_from(1);
+        let map = RandomMaclaurin::sample(&kernel, d, n_feat, RmConfig::default(), &mut rng);
+        let x = batch(1024, d, 2);
+        let m = bench("native", 2, iters, || map.transform_batch(&x));
+        let per = m.mean_s();
+        table.row(&[
+            format!("{d}"),
+            format!("{n_feat}"),
+            "1024".into(),
+            fmt_duration(per),
+            format!("{:.0}", 1024.0 / per),
+        ]);
+    }
+    table.print();
+}
+
+fn bench_rademacher_projection() {
+    println!("\n== rademacher projection: packed bits vs dense f32 ==");
+    let mut table = Table::new(&["d", "rows", "packed", "dense-f32", "packed/dense"]);
+    let iters = if fast() { 5 } else { 20 };
+    for d in [64usize, 128, 512] {
+        let rows = 1024;
+        let mut rng = Rng::seed_from(3);
+        let m = RademacherMatrix::sample(rows, d, &mut rng);
+        let dense = Matrix::from_vec(rows, d, m.to_dense()).unwrap();
+        let x: Vec<f32> = (0..d).map(|i| (i as f32 * 0.1).sin()).collect();
+        let mut out = vec![0.0f32; rows];
+        let packed = bench("packed", 3, iters, || m.project_all(&x, &mut out));
+        let mut out2 = vec![0.0f32; rows];
+        let densem = bench("dense", 3, iters, || {
+            for i in 0..rows {
+                out2[i] = rfdot::linalg::dot(dense.row(i), &x);
+            }
+        });
+        table.row(&[
+            format!("{d}"),
+            format!("{rows}"),
+            fmt_duration(packed.mean_s()),
+            fmt_duration(densem.mean_s()),
+            format!("{:.2}x", packed.mean_s() / densem.mean_s()),
+        ]);
+    }
+    table.print();
+}
+
+fn bench_pjrt_execute() {
+    println!("\n== pjrt artifact execution (transform_serve) ==");
+    let name = "transform_serve";
+    if !artifact_dir().join(format!("{name}.hlo.txt")).exists() {
+        println!("   (skipped: run `make artifacts`)");
+        return;
+    }
+    let meta = ArtifactMeta::parse(
+        &std::fs::read_to_string(artifact_dir().join(format!("{name}.json"))).unwrap(),
+    )
+    .unwrap();
+    let d = meta.inputs[0].shape[1];
+    let b = meta.batch();
+    let n_max = meta.inputs[1].shape[0] as u32;
+    let features = meta.inputs[1].shape[2];
+    let mut rng = Rng::seed_from(5);
+    let map = RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        d,
+        features,
+        RmConfig::default().with_max_order(n_max),
+        &mut rng,
+    );
+    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let loaded = engine.load(name).unwrap();
+    let backend =
+        rfdot::coordinator::PjrtTransformBackend::new(loaded, &map).unwrap();
+    use rfdot::coordinator::Backend;
+    let x = batch(b, d, 6);
+    let iters = if fast() { 5 } else { 30 };
+    let m = bench("pjrt", 3, iters, || backend.run_batch(&x).unwrap());
+    println!(
+        "   batch {b} x d={d} -> D={features}: {} per batch = {:.0} vectors/s",
+        fmt_duration(m.mean_s()),
+        b as f64 / m.mean_s()
+    );
+
+    // Native engine on identical shapes, for the engine-vs-engine ratio.
+    let mnat = bench("native", 2, iters, || map.transform_batch(&x));
+    println!(
+        "   native same shapes: {} per batch = {:.0} vectors/s ({}x vs pjrt)",
+        fmt_duration(mnat.mean_s()),
+        b as f64 / mnat.mean_s(),
+        (m.mean_s() / mnat.mean_s()).round()
+    );
+}
+
+fn bench_coordinator_roundtrip() {
+    println!("\n== coordinator end-to-end (native backend) ==");
+    let mut rng = Rng::seed_from(7);
+    let map = Arc::new(RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        22,
+        512,
+        RmConfig::default(),
+        &mut rng,
+    ));
+    let coord = Arc::new(Coordinator::start(
+        Arc::new(NativeFactory::new(map)),
+        CoordinatorConfig {
+            max_batch: 128,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 8192,
+            workers: 2,
+        },
+    ));
+    let requests = if fast() { 500 } else { 5000 };
+    let clients = 4;
+    let sw = rfdot::metrics::Stopwatch::start();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from(100 + c as u64);
+            for _ in 0..requests / clients {
+                let x: Vec<f32> = (0..22).map(|_| rng.f32() - 0.5).collect();
+                if let Ok(t) = coord.submit(x) {
+                    let _ = t.wait();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let dt = sw.elapsed_secs();
+    println!("   {requests} requests in {} = {:.0} req/s", fmt_duration(dt), requests as f64 / dt);
+    println!("   {}", coord.stats().summary());
+}
+
+fn bench_pjrt_coordinator() {
+    println!("\n== coordinator end-to-end (pjrt backend) ==");
+    let name = "transform_serve";
+    if !artifact_dir().join(format!("{name}.hlo.txt")).exists() {
+        println!("   (skipped: run `make artifacts`)");
+        return;
+    }
+    let meta = ArtifactMeta::parse(
+        &std::fs::read_to_string(artifact_dir().join(format!("{name}.json"))).unwrap(),
+    )
+    .unwrap();
+    let d = meta.inputs[0].shape[1];
+    let n_max = meta.inputs[1].shape[0] as u32;
+    let features = meta.inputs[1].shape[2];
+    let mut rng = Rng::seed_from(9);
+    let map = Arc::new(RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        d,
+        features,
+        RmConfig::default().with_max_order(n_max),
+        &mut rng,
+    ));
+    let coord = Arc::new(Coordinator::start(
+        Arc::new(PjrtTransformFactory::new(artifact_dir(), name, map).unwrap()),
+        CoordinatorConfig {
+            max_batch: meta.batch(),
+            max_wait: Duration::from_millis(4),
+            queue_depth: 8192,
+            workers: 2,
+        },
+    ));
+    let requests = if fast() { 400 } else { 4000 };
+    let clients = 8;
+    let sw = rfdot::metrics::Stopwatch::start();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from(200 + c as u64);
+            for _ in 0..requests / clients {
+                let x: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+                if let Ok(t) = coord.submit(x) {
+                    let _ = t.wait();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let dt = sw.elapsed_secs();
+    println!("   {requests} requests in {} = {:.0} req/s", fmt_duration(dt), requests as f64 / dt);
+    println!("   {}", coord.stats().summary());
+}
+
+fn bench_pjrt_bucketed_coordinator() {
+    println!("\n== coordinator end-to-end (pjrt BUCKETED backend: 16/64/256) ==");
+    let names = ["transform_serve_b16", "transform_serve_b64", "transform_serve"];
+    if !names.iter().all(|n| artifact_dir().join(format!("{n}.hlo.txt")).exists()) {
+        println!("   (skipped: run `make artifacts`)");
+        return;
+    }
+    let meta = ArtifactMeta::parse(
+        &std::fs::read_to_string(artifact_dir().join("transform_serve.json")).unwrap(),
+    )
+    .unwrap();
+    let d = meta.inputs[0].shape[1];
+    let n_max = meta.inputs[1].shape[0] as u32;
+    let features = meta.inputs[1].shape[2];
+    let mut rng = Rng::seed_from(9);
+    let map = Arc::new(RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        d,
+        features,
+        RmConfig::default().with_max_order(n_max),
+        &mut rng,
+    ));
+    let factory = rfdot::coordinator::PjrtBucketedFactory::new(
+        artifact_dir(),
+        names.iter().map(|s| s.to_string()).collect(),
+        map,
+    )
+    .unwrap();
+    let coord = Arc::new(Coordinator::start(
+        Arc::new(factory),
+        CoordinatorConfig {
+            max_batch: meta.batch(),
+            max_wait: Duration::from_millis(4),
+            queue_depth: 8192,
+            workers: 2,
+        },
+    ));
+    let requests = if fast() { 400 } else { 4000 };
+    let clients = 8;
+    let sw = rfdot::metrics::Stopwatch::start();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from(200 + c as u64);
+            for _ in 0..requests / clients {
+                let x: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+                if let Ok(t) = coord.submit(x) {
+                    let _ = t.wait();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let dt = sw.elapsed_secs();
+    println!("   {requests} requests in {} = {:.0} req/s", fmt_duration(dt), requests as f64 / dt);
+    println!("   {}", coord.stats().summary());
+}
+
+fn bench_solvers() {
+    println!("\n== svm solver throughput (nursery surrogate, scale 0.05) ==");
+    use rfdot::data::UciSurrogate;
+    use rfdot::svm::{KernelSvm, LinearSvm, LinearSvmParams, SmoParams};
+    let ds = UciSurrogate::Nursery.load(0.05, 11);
+    let mut rng = Rng::seed_from(12);
+    let (train, _) = ds.split(0.6, 20_000, &mut rng);
+    let kernel = rfdot::kernels::Polynomial::new(10, 1.0);
+
+    let (model, t) = rfdot::bench::time_once(|| {
+        KernelSvm::train(&train, Box::new(kernel), SmoParams::default()).unwrap()
+    });
+    println!(
+        "   SMO: {} for {} examples ({} SVs, {} iters)",
+        fmt_duration(t),
+        train.len(),
+        model.n_support(),
+        model.iterations
+    );
+
+    let map = RandomMaclaurin::sample(&kernel, train.dim(), 500, RmConfig::default(), &mut rng);
+    let z = map.transform_batch(&train.x);
+    let zds = rfdot::data::Dataset::new("z", z, train.y.clone()).unwrap();
+    let (lin, t) = rfdot::bench::time_once(|| {
+        LinearSvm::train(&zds, LinearSvmParams::default()).unwrap()
+    });
+    println!(
+        "   DCD (D=500): {} for {} examples ({} epochs)",
+        fmt_duration(t),
+        zds.len(),
+        lin.epochs
+    );
+}
+
+fn main() {
+    bench_native_transform();
+    bench_rademacher_projection();
+    bench_pjrt_execute();
+    bench_coordinator_roundtrip();
+    bench_pjrt_coordinator();
+    bench_pjrt_bucketed_coordinator();
+    bench_solvers();
+}

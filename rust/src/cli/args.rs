@@ -1,0 +1,124 @@
+//! Tiny flag parser: `--key value` pairs plus boolean `--switch`es after
+//! a positional command word.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed argv.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    command: String,
+    flags: BTreeMap<String, String>,
+    /// Flags that were consumed by a getter (for unknown-flag warnings).
+    seen: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the binary name).
+    pub fn parse(argv: Vec<String>) -> Args {
+        let mut it = argv.into_iter().peekable();
+        let command = it.peek().map(|s| !s.starts_with("--")).unwrap_or(false);
+        let command = if command { it.next().unwrap_or_default() } else { String::new() };
+        let mut flags = BTreeMap::new();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let is_value_next =
+                    it.peek().map(|v| !v.starts_with("--")).unwrap_or(false);
+                if is_value_next {
+                    flags.insert(key.to_string(), it.next().expect("peeked"));
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                }
+            }
+            // bare positional tokens after the command are ignored
+        }
+        Args { command, flags, seen: Default::default() }
+    }
+
+    pub fn command(&self) -> &str {
+        &self.command
+    }
+
+    /// String flag with default.
+    pub fn str_flag(&mut self, key: &str, default: &str) -> String {
+        self.seen.insert(key.to_string());
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string flag.
+    pub fn require(&mut self, key: &str) -> Result<String> {
+        self.seen.insert(key.to_string());
+        self.flags
+            .get(key)
+            .cloned()
+            .ok_or_else(|| Error::Config(format!("missing required flag --{key}")))
+    }
+
+    /// Numeric flag with default.
+    pub fn num_flag(&mut self, key: &str, default: f64) -> Result<f64> {
+        self.seen.insert(key.to_string());
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("flag --{key} expects a number, got {v:?}"))),
+        }
+    }
+
+    /// Usize flag with default.
+    pub fn usize_flag(&mut self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.num_flag(key, default as f64)? as usize)
+    }
+
+    /// Boolean switch.
+    pub fn switch(&mut self, key: &str) -> bool {
+        self.seen.insert(key.to_string());
+        matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    /// Flags that were provided but never consumed — surfaced as a
+    /// warning so typos do not pass silently.
+    pub fn unknown_flags(&self) -> Vec<String> {
+        self.flags.keys().filter(|k| !self.seen.contains(*k)).cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let mut a = parse(&["serve", "--requests", "100", "--native"]);
+        assert_eq!(a.command(), "serve");
+        assert_eq!(a.usize_flag("requests", 0).unwrap(), 100);
+        assert!(a.switch("native"));
+        assert!(!a.switch("missing"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let mut a = parse(&["x"]);
+        assert_eq!(a.str_flag("kernel", "poly:10:1"), "poly:10:1");
+        assert!(a.require("input").is_err());
+        let mut b = parse(&["x", "--n", "abc"]);
+        assert!(b.num_flag("n", 1.0).is_err());
+    }
+
+    #[test]
+    fn no_command() {
+        let a = parse(&["--flag", "v"]);
+        assert_eq!(a.command(), "");
+    }
+
+    #[test]
+    fn unknown_flags_reported() {
+        let mut a = parse(&["cmd", "--used", "1", "--typo", "2"]);
+        let _ = a.usize_flag("used", 0);
+        assert_eq!(a.unknown_flags(), vec!["typo".to_string()]);
+    }
+}

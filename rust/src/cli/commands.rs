@@ -1,0 +1,395 @@
+//! CLI subcommand implementations.
+
+use super::Args;
+use crate::bench::{self, Table};
+use crate::config::{ExperimentConfig, KernelSpec};
+use crate::coordinator::{
+    BackendFactory, Coordinator, CoordinatorConfig, NativeFactory, PjrtTransformFactory,
+};
+use crate::data::libsvm;
+use crate::kernels::{gram, mean_abs_gram_error, DotProductKernel};
+use crate::linalg::Matrix;
+use crate::maclaurin::{feature_gram, FeatureMap, RandomMaclaurin, RmConfig};
+use crate::metrics::Stopwatch;
+use crate::rng::Rng;
+use crate::runtime::Engine;
+use crate::Result;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn warn_unknown(args: &Args) {
+    for f in args.unknown_flags() {
+        eprintln!("warning: unknown flag --{f} ignored");
+    }
+}
+
+/// `rfdot info` — engine and artifact inventory.
+pub fn info(args: &mut Args) -> Result<()> {
+    let dir = args.str_flag("artifact-dir", "artifacts");
+    warn_unknown(args);
+    println!("rfdot {}", crate::VERSION);
+    match Engine::cpu(&dir) {
+        Ok(engine) => println!("pjrt platform: {}", engine.platform()),
+        Err(e) => println!("pjrt unavailable: {e}"),
+    }
+    let mut found = false;
+    if let Ok(entries) = std::fs::read_dir(&dir) {
+        for e in entries.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                let size = e.metadata().map(|m| m.len()).unwrap_or(0);
+                println!("artifact: {stem} ({size} bytes)");
+                found = true;
+            }
+        }
+    }
+    if !found {
+        println!("no artifacts in {dir}/ — run `make artifacts`");
+    }
+    Ok(())
+}
+
+/// `rfdot quickstart` — map a toy dataset, check gram error, fit LIN.
+pub fn quickstart(args: &mut Args) -> Result<()> {
+    warn_unknown(args);
+    println!("== Random Maclaurin quickstart ==");
+    let kernel = crate::kernels::Polynomial::new(10, 1.0);
+    let (d, n_feat, n_pts) = (16usize, 512usize, 60usize);
+    let mut rng = Rng::seed_from(42);
+    let mut rows = Vec::new();
+    for _ in 0..n_pts {
+        rows.push(crate::prop::gens::unit_vec(&mut rng, d));
+    }
+    let x = Matrix::from_rows(&rows)?;
+    let map = RandomMaclaurin::sample(&kernel, d, n_feat, RmConfig::default(), &mut rng);
+    let exact = gram(&kernel, &x);
+    let approx = feature_gram(&map, &x);
+    let err = mean_abs_gram_error(&exact, &approx);
+    println!("kernel {} on {n_pts} unit vectors, D = {n_feat}", kernel.name());
+    println!("mean |<Z(x),Z(y)> - K(x,y)| = {err:.4}  (K up to {:.0})", kernel.f(1.0));
+    println!("(paper Fig 1b: error decays ~ 1/sqrt(D); try --features via gram-error)");
+    Ok(())
+}
+
+/// `rfdot gram-error` — one Figure-1 measurement.
+pub fn gram_error(args: &mut Args) -> Result<()> {
+    let kernel_spec = KernelSpec::parse(&args.str_flag("kernel", "poly:10:1"))?;
+    let d = args.usize_flag("d", 16)?;
+    let n_feat = args.usize_flag("features", 512)?;
+    let n_pts = args.usize_flag("points", 100)?;
+    let runs = args.usize_flag("runs", 5)?;
+    let h01 = args.switch("h01");
+    let seed = args.num_flag("seed", 7.0)? as u64;
+    warn_unknown(args);
+
+    let kernel = kernel_spec.build(1.0);
+    let mut rng = Rng::seed_from(seed);
+    let mut rows = Vec::new();
+    for _ in 0..n_pts {
+        rows.push(crate::prop::gens::unit_vec(&mut rng, d));
+    }
+    let x = Matrix::from_rows(&rows)?;
+    let exact = gram(kernel.as_ref(), &x);
+    let mut errs = Vec::new();
+    for _ in 0..runs {
+        let map = RandomMaclaurin::sample(
+            kernel.as_ref(),
+            d,
+            n_feat,
+            RmConfig::default().with_h01(h01),
+            &mut rng,
+        );
+        let approx = feature_gram(&map, &x);
+        errs.push(mean_abs_gram_error(&exact, &approx));
+    }
+    println!(
+        "kernel={} d={d} D={n_feat} h01={h01} runs={runs}: err = {:.5} ± {:.5}",
+        kernel.name(),
+        crate::linalg::mean(&errs),
+        crate::linalg::stddev(&errs),
+    );
+    Ok(())
+}
+
+/// `rfdot table1-row` — one row of Table 1.
+pub fn table1_row(args: &mut Args) -> Result<()> {
+    let mut config = ExperimentConfig {
+        dataset: args.str_flag("dataset", "nursery"),
+        kernel: KernelSpec::parse(&args.str_flag("kernel", "poly:10:1"))?,
+        scale: args.num_flag("scale", 0.1)?,
+        c: args.num_flag("c", 1.0)?,
+        seed: args.num_flag("seed", 42.0)? as u64,
+        ..Default::default()
+    };
+    let d_rf = args.usize_flag("features", 500)?;
+    let d_h01 = args.usize_flag("h01-features", 100)?;
+    config.n_features = d_rf;
+    config.validate()?;
+    warn_unknown(args);
+
+    let row = bench::run_row(&config, d_rf, d_h01)?;
+    print_rows(&[row]);
+    Ok(())
+}
+
+/// Render RowResults in the paper's Table 1 shape.
+pub fn print_rows(rows: &[bench::RowResult]) {
+    let mut t = Table::new(&[
+        "dataset", "N(train/test)", "d", "variant", "acc", "trn", "tst", "speedup(trn/tst)",
+        "size",
+    ]);
+    for row in rows {
+        for cell in [&row.exact, &row.rf, &row.h01] {
+            let (strn, stst) = row.speedup(cell);
+            t.row(&[
+                row.dataset.clone(),
+                format!("{}/{}", row.n_train, row.n_test),
+                format!("{}", row.d),
+                cell.label.clone(),
+                format!("{:.2}%", cell.accuracy * 100.0),
+                bench::fmt_duration(cell.train_s),
+                bench::fmt_duration(cell.test_s),
+                if cell.label == "K+SMO" {
+                    "-".into()
+                } else {
+                    format!("{strn:.1}x/{stst:.1}x")
+                },
+                format!("{}", cell.size),
+            ]);
+        }
+    }
+    t.print();
+}
+
+/// `rfdot transform` — featurize a LIBSVM file.
+pub fn transform(args: &mut Args) -> Result<()> {
+    let input = args.require("input")?;
+    let output = args.str_flag("output", "-");
+    let kernel_spec = KernelSpec::parse(&args.str_flag("kernel", "poly:10:1"))?;
+    let n_feat = args.usize_flag("features", 256)?;
+    let h01 = args.switch("h01");
+    let seed = args.num_flag("seed", 7.0)? as u64;
+    warn_unknown(args);
+
+    let mut ds = libsvm::parse_file(&input, None)?;
+    ds.normalize_rows();
+    let kernel = kernel_spec.build(1.0);
+    let mut rng = Rng::seed_from(seed);
+    let map = RandomMaclaurin::sample(
+        kernel.as_ref(),
+        ds.dim(),
+        n_feat,
+        RmConfig::default().with_h01(h01),
+        &mut rng,
+    );
+    let sw = Stopwatch::start();
+    let z = map.transform_batch(&ds.x);
+    let dt = sw.elapsed_secs();
+    let out_ds = crate::data::Dataset::new(ds.name.clone(), z, ds.y.clone())?;
+    let text = libsvm::to_string(&out_ds);
+    if output == "-" {
+        print!("{text}");
+    } else {
+        std::fs::write(&output, text)?;
+    }
+    eprintln!(
+        "transformed {} x {} -> {} features in {} ({:.0} vec/s)",
+        ds.len(),
+        ds.dim(),
+        map.output_dim(),
+        bench::fmt_duration(dt),
+        ds.len() as f64 / dt.max(1e-9),
+    );
+    Ok(())
+}
+
+/// `rfdot serve` — run the coordinator under a synthetic client load and
+/// report throughput/latency (the serving demo).
+pub fn serve(args: &mut Args) -> Result<()> {
+    let artifact = args.str_flag("artifact", "transform_serve");
+    let dir = args.str_flag("artifact-dir", "artifacts");
+    let requests = args.usize_flag("requests", 2000)?;
+    let clients = args.usize_flag("clients", 4)?.max(1);
+    let native = args.switch("native");
+    let workers = args.usize_flag("workers", 2)?;
+    let max_batch = args.usize_flag("max-batch", 256)?;
+    let max_wait_ms = args.num_flag("max-wait-ms", 2.0)?;
+    let seed = args.num_flag("seed", 7.0)? as u64;
+    warn_unknown(args);
+
+    // Kernel + map for the serving workload (d is fixed by the artifact).
+    let kernel = crate::kernels::Exponential::new(1.0);
+    let mut rng = Rng::seed_from(seed);
+
+    let (factory, d): (Arc<dyn BackendFactory>, usize) = if native {
+        let d = 22;
+        let map = RandomMaclaurin::sample(
+            &kernel,
+            d,
+            512,
+            RmConfig::default().with_max_order(8),
+            &mut rng,
+        );
+        (Arc::new(NativeFactory::new(Arc::new(map))), d)
+    } else {
+        // Probe the manifest (no PJRT) for the shapes, then hand the
+        // factory to the coordinator: each worker compiles its own
+        // executable.
+        let meta = crate::runtime::ArtifactMeta::parse(&std::fs::read_to_string(
+            std::path::Path::new(&dir).join(format!("{artifact}.json")),
+        )?)?;
+        let d = meta.inputs[0].shape[1];
+        let n_max = meta.inputs[1].shape[0] as u32;
+        let features = meta.inputs[1].shape[2];
+        let map = RandomMaclaurin::sample(
+            &kernel,
+            d,
+            features,
+            RmConfig::default().with_max_order(n_max),
+            &mut rng,
+        );
+        (Arc::new(PjrtTransformFactory::new(&dir, &artifact, Arc::new(map))?), d)
+    };
+
+    let coord = Arc::new(Coordinator::start(
+        factory,
+        CoordinatorConfig {
+            max_batch,
+            max_wait: Duration::from_micros((max_wait_ms * 1000.0) as u64),
+            queue_depth: 8192,
+            workers,
+        },
+    ));
+
+    println!(
+        "serving {requests} requests from {clients} clients (backend: {})",
+        if native { "native" } else { "pjrt" }
+    );
+    let sw = Stopwatch::start();
+    let per_client = requests / clients;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from(1000 + c as u64);
+            let mut ok = 0usize;
+            let mut rejected = 0usize;
+            for _ in 0..per_client {
+                let x: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+                match coord.submit(x) {
+                    Ok(t) => {
+                        if t.wait().is_ok() {
+                            ok += 1;
+                        }
+                    }
+                    Err(_) => rejected += 1,
+                }
+            }
+            (ok, rejected)
+        }));
+    }
+    let mut total_ok = 0;
+    let mut total_rej = 0;
+    for h in handles {
+        let (ok, rej) = h.join().expect("client thread");
+        total_ok += ok;
+        total_rej += rej;
+    }
+    let dt = sw.elapsed_secs();
+    let stats = coord.stats();
+    println!("completed {total_ok} ok, {total_rej} rejected in {}", bench::fmt_duration(dt));
+    println!("throughput: {:.0} req/s", total_ok as f64 / dt.max(1e-9));
+    println!("stats: {}", stats.summary());
+    assert_eq!(total_ok as u64, stats.completed.load(Ordering::Relaxed));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn quickstart_runs() {
+        quickstart(&mut argv(&["quickstart"])).unwrap();
+    }
+
+    #[test]
+    fn gram_error_runs_small() {
+        gram_error(&mut argv(&[
+            "gram-error", "--kernel", "poly:3:1", "--d", "6", "--features", "64", "--points",
+            "20", "--runs", "2",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn transform_requires_input() {
+        assert!(transform(&mut argv(&["transform"])).is_err());
+    }
+
+    #[test]
+    fn info_runs_without_artifacts() {
+        info(&mut argv(&["info", "--artifact-dir", "/nonexistent-dir"])).unwrap();
+    }
+
+    #[test]
+    fn table1_row_smoke() {
+        table1_row(&mut argv(&[
+            "table1-row",
+            "--dataset",
+            "nursery",
+            "--kernel",
+            "poly:3:1",
+            "--scale",
+            "0.02",
+            "--features",
+            "64",
+            "--h01-features",
+            "32",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn table1_row_rejects_bad_kernel() {
+        assert!(table1_row(&mut argv(&["table1-row", "--kernel", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn serve_native_smoke() {
+        serve(&mut argv(&[
+            "serve", "--native", "--requests", "40", "--clients", "2", "--workers", "1",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn transform_roundtrip_via_tempfile() {
+        let dir = std::env::temp_dir().join("rfdot_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let inp = dir.join("in.libsvm");
+        let out = dir.join("out.libsvm");
+        std::fs::write(&inp, "+1 1:0.5 2:1\n-1 1:1 3:0.25\n").unwrap();
+        transform(&mut argv(&[
+            "transform",
+            "--input",
+            inp.to_str().unwrap(),
+            "--output",
+            out.to_str().unwrap(),
+            "--kernel",
+            "poly:2:1",
+            "--features",
+            "16",
+        ]))
+        .unwrap();
+        let z = crate::data::libsvm::parse_file(&out, None).unwrap();
+        assert_eq!(z.len(), 2);
+        assert_eq!(z.y, vec![1.0, -1.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,61 @@
+//! Command-line interface (hand-rolled; `clap` is not reachable offline).
+//!
+//! ```text
+//! rfdot info                     # engine + artifact inventory
+//! rfdot quickstart               # tiny end-to-end demo
+//! rfdot gram-error [flags]       # Figure-1 style approximation error
+//! rfdot table1-row [flags]       # one Table-1 row (exact vs RF vs H0/1)
+//! rfdot transform [flags]        # featurize a LIBSVM file
+//! rfdot serve [flags]            # serving demo over the coordinator
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+use crate::Result;
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let mut args = Args::parse(argv);
+    match args.command() {
+        "info" => commands::info(&mut args),
+        "quickstart" => commands::quickstart(&mut args),
+        "gram-error" => commands::gram_error(&mut args),
+        "table1-row" => commands::table1_row(&mut args),
+        "transform" => commands::transform(&mut args),
+        "serve" => commands::serve(&mut args),
+        "help" | "" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print!("{}", HELP);
+            std::process::exit(2);
+        }
+    }
+}
+
+pub const HELP: &str = "\
+rfdot — Random Feature Maps for Dot Product Kernels (Kar & Karnick, 2012)
+
+USAGE: rfdot <command> [flags]
+
+COMMANDS:
+  info          PJRT engine info + artifact inventory
+  quickstart    tiny end-to-end demo (map, gram error, linear SVM)
+  gram-error    kernel approximation error vs D  (Figure 1 point)
+                  --kernel poly:10:1 | hom:10 | exp[:sigma2]   --d 16
+                  --features 512  --points 100  --runs 5  --h01
+  table1-row    exact kernel SVM vs RF vs H0/1   (Table 1 row)
+                  --dataset nursery --kernel poly:10:1 --scale 0.1
+                  --features 500 --h01-features 100 --c 1.0 --seed 42
+  transform     featurize a LIBSVM file with a sampled map
+                  --input FILE --output FILE --kernel ... --features N
+  serve         coordinator serving demo
+                  --artifact transform_serve --artifact-dir artifacts
+                  --requests 2000 --clients 4 --native
+  help          this message
+";

@@ -1,0 +1,275 @@
+//! Configuration system.
+//!
+//! [`json`] is the low-level parser (also used for artifact manifests);
+//! [`ExperimentConfig`] / [`ServeConfig`] are the typed configs the CLI
+//! and bench harness consume, loadable from JSON files with environment
+//! overrides (`RFDOT_*`).
+
+pub mod json;
+
+use crate::{Error, Result};
+use json::Json;
+use std::path::Path;
+
+/// Which kernel to build a feature map for.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KernelSpec {
+    /// `⟨x, y⟩^degree`
+    Homogeneous { degree: u32 },
+    /// `(⟨x, y⟩ + offset)^degree`
+    Polynomial { degree: u32, offset: f64 },
+    /// `exp(⟨x, y⟩ / sigma2)`; `sigma2 = 0` means "fit from data" via
+    /// the paper's mean-pairwise-distance heuristic.
+    Exponential { sigma2: f64 },
+    /// Vovk's real polynomial kernel.
+    VovkReal { degree: u32 },
+    /// Scaled Vovk infinite kernel `1 / (1 − t/c)`.
+    VovkInfinite { scale: f64 },
+}
+
+impl KernelSpec {
+    /// Instantiate the kernel object (`sigma2_hint` resolves the
+    /// data-dependent exponential width).
+    pub fn build(&self, sigma2_hint: f64) -> Box<dyn crate::kernels::DotProductKernel> {
+        match *self {
+            KernelSpec::Homogeneous { degree } => {
+                Box::new(crate::kernels::Homogeneous::new(degree))
+            }
+            KernelSpec::Polynomial { degree, offset } => {
+                Box::new(crate::kernels::Polynomial::new(degree, offset))
+            }
+            KernelSpec::Exponential { sigma2 } => Box::new(crate::kernels::Exponential::new(
+                if sigma2 > 0.0 { sigma2 } else { sigma2_hint.max(1e-6) },
+            )),
+            KernelSpec::VovkReal { degree } => Box::new(crate::kernels::VovkReal::new(degree)),
+            KernelSpec::VovkInfinite { scale } => {
+                Box::new(crate::kernels::Scaled::new(crate::kernels::VovkInfinite, scale))
+            }
+        }
+    }
+
+    /// Parse from CLI-style strings like `poly:10:1.0`, `exp`, `hom:10`,
+    /// `vovk-real:6`, `vovk-inf:4`.
+    pub fn parse(s: &str) -> Result<KernelSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |i: usize, default: f64| -> Result<f64> {
+            parts
+                .get(i)
+                .map(|t| {
+                    t.parse::<f64>()
+                        .map_err(|_| Error::Config(format!("bad number {t:?} in kernel {s:?}")))
+                })
+                .unwrap_or(Ok(default))
+        };
+        Ok(match parts[0] {
+            "poly" | "polynomial" => KernelSpec::Polynomial {
+                degree: num(1, 10.0)? as u32,
+                offset: num(2, 1.0)?,
+            },
+            "hom" | "homogeneous" => KernelSpec::Homogeneous { degree: num(1, 10.0)? as u32 },
+            "exp" | "exponential" => KernelSpec::Exponential { sigma2: num(1, 0.0)? },
+            "vovk-real" => KernelSpec::VovkReal { degree: num(1, 6.0)? as u32 },
+            "vovk-inf" | "vovk-infinite" => KernelSpec::VovkInfinite { scale: num(1, 4.0)? },
+            other => return Err(Error::Config(format!("unknown kernel {other:?}"))),
+        })
+    }
+
+    fn from_json(v: &Json) -> Result<KernelSpec> {
+        let kind = v.req("kind")?.as_str().unwrap_or_default();
+        let f = |k: &str, d: f64| v.get(k).and_then(Json::as_f64).unwrap_or(d);
+        Ok(match kind {
+            "homogeneous" => KernelSpec::Homogeneous { degree: f("degree", 10.0) as u32 },
+            "polynomial" => KernelSpec::Polynomial {
+                degree: f("degree", 10.0) as u32,
+                offset: f("offset", 1.0),
+            },
+            "exponential" => KernelSpec::Exponential { sigma2: f("sigma2", 0.0) },
+            "vovk-real" => KernelSpec::VovkReal { degree: f("degree", 6.0) as u32 },
+            "vovk-infinite" => KernelSpec::VovkInfinite { scale: f("scale", 4.0) },
+            other => return Err(Error::Config(format!("unknown kernel kind {other:?}"))),
+        })
+    }
+}
+
+/// A full train/eval experiment description (one Table 1 cell group).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Dataset name (UCI surrogate) — see `data::UciSurrogate`.
+    pub dataset: String,
+    /// Size scale relative to the paper's N.
+    pub scale: f64,
+    pub kernel: KernelSpec,
+    /// Number of random features D.
+    pub n_features: usize,
+    /// Use H0/1.
+    pub h01: bool,
+    /// External measure parameter p.
+    pub p: f64,
+    /// SVM C.
+    pub c: f64,
+    /// RNG seed.
+    pub seed: u64,
+    /// Train fraction and cap (paper: 0.6 / 20000).
+    pub train_frac: f64,
+    pub max_train: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: "nursery".into(),
+            scale: 0.1,
+            kernel: KernelSpec::Polynomial { degree: 10, offset: 1.0 },
+            n_features: 500,
+            h01: false,
+            p: 2.0,
+            c: 1.0,
+            seed: 42,
+            train_frac: 0.6,
+            max_train: 20_000,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a JSON document, starting from defaults.
+    pub fn from_json(text: &str) -> Result<ExperimentConfig> {
+        let v = Json::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(s) = v.get("dataset").and_then(Json::as_str) {
+            cfg.dataset = s.to_string();
+        }
+        if let Some(n) = v.get("scale").and_then(Json::as_f64) {
+            cfg.scale = n;
+        }
+        if let Some(k) = v.get("kernel") {
+            cfg.kernel = KernelSpec::from_json(k)?;
+        }
+        if let Some(n) = v.get("n_features").and_then(Json::as_usize) {
+            cfg.n_features = n;
+        }
+        if let Some(b) = v.get("h01").and_then(Json::as_bool) {
+            cfg.h01 = b;
+        }
+        if let Some(n) = v.get("p").and_then(Json::as_f64) {
+            cfg.p = n;
+        }
+        if let Some(n) = v.get("c").and_then(Json::as_f64) {
+            cfg.c = n;
+        }
+        if let Some(n) = v.get("seed").and_then(Json::as_f64) {
+            cfg.seed = n as u64;
+        }
+        if let Some(n) = v.get("train_frac").and_then(Json::as_f64) {
+            cfg.train_frac = n;
+        }
+        if let Some(n) = v.get("max_train").and_then(Json::as_usize) {
+            cfg.max_train = n;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<ExperimentConfig> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    /// Sanity-check field ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_features == 0 {
+            return Err(Error::Config("n_features must be positive".into()));
+        }
+        if !(self.p > 1.0) {
+            return Err(Error::Config(format!("p must be > 1, got {}", self.p)));
+        }
+        if !(self.c > 0.0) {
+            return Err(Error::Config("C must be positive".into()));
+        }
+        if !(0.0 < self.train_frac && self.train_frac < 1.0) {
+            return Err(Error::Config("train_frac must be in (0, 1)".into()));
+        }
+        if !(self.scale > 0.0) {
+            return Err(Error::Config("scale must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Serving configuration (`rfdot serve` / examples/serve_features.rs).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Artifact name to load (kind `transform` or `transform_score`).
+    pub artifact: String,
+    pub artifact_dir: String,
+    pub max_batch: usize,
+    pub max_wait_ms: u64,
+    pub queue_depth: usize,
+    pub workers: usize,
+    /// Fall back to the native engine instead of PJRT.
+    pub native: bool,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifact: "transform_serve".into(),
+            artifact_dir: "artifacts".into(),
+            max_batch: 256,
+            max_wait_ms: 2,
+            queue_depth: 4096,
+            workers: 2,
+            native: false,
+            seed: 7,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_spec_cli_parse() {
+        assert_eq!(
+            KernelSpec::parse("poly:10:1").unwrap(),
+            KernelSpec::Polynomial { degree: 10, offset: 1.0 }
+        );
+        assert_eq!(KernelSpec::parse("hom:4").unwrap(), KernelSpec::Homogeneous { degree: 4 });
+        assert_eq!(KernelSpec::parse("exp").unwrap(), KernelSpec::Exponential { sigma2: 0.0 });
+        assert!(KernelSpec::parse("nope").is_err());
+        assert!(KernelSpec::parse("poly:x").is_err());
+    }
+
+    #[test]
+    fn kernel_spec_builds() {
+        let k = KernelSpec::parse("exp").unwrap().build(0.5);
+        assert!(k.name().contains("0.5"));
+        let k2 = KernelSpec::parse("exp:2.0").unwrap().build(0.5);
+        assert!(k2.name().contains("2"));
+    }
+
+    #[test]
+    fn experiment_config_from_json() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{"dataset": "spambase", "n_features": 100,
+                "kernel": {"kind": "exponential"}, "h01": true}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset, "spambase");
+        assert_eq!(cfg.n_features, 100);
+        assert!(cfg.h01);
+        assert_eq!(cfg.kernel, KernelSpec::Exponential { sigma2: 0.0 });
+        // Defaults survive.
+        assert_eq!(cfg.max_train, 20_000);
+    }
+
+    #[test]
+    fn experiment_config_validates() {
+        assert!(ExperimentConfig::from_json(r#"{"n_features": 0}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"p": 1.0}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"train_frac": 1.5}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"kernel": {"kind": "bad"}}"#).is_err());
+    }
+}

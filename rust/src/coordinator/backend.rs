@@ -1,0 +1,581 @@
+//! Execution backends for the coordinator.
+//!
+//! The `xla` crate's PJRT handles are deliberately `!Send` (raw C
+//! pointers + `Rc` internals), so backends are **thread-local**: the
+//! coordinator takes a [`BackendFactory`] (which *is* `Send + Sync`) and
+//! each worker thread builds and owns its own backend instance — for
+//! PJRT that means one compiled executable per worker, compiled from the
+//! same artifact. The factory also reports a [`BackendSpec`] up front
+//! (parsed from the artifact manifest, no PJRT needed) so the batcher
+//! can size batches before any worker exists.
+//!
+//! Engines:
+//! * [`NativeBackend`] — the pure-Rust bit-packed feature map (any
+//!   batch size, no artifacts needed);
+//! * [`PjrtTransformBackend`] / [`PjrtScoreBackend`] — the AOT-compiled
+//!   JAX/Pallas artifacts executed through PJRT (fixed batch; the map's
+//!   dense tensors are expanded once per worker).
+//!
+//! The cross-engine integration tests (rust/tests/pjrt_roundtrip.rs)
+//! hold both engines to identical outputs for identical sampled maps.
+
+use crate::linalg::Matrix;
+use crate::maclaurin::{FeatureMap, RandomMaclaurin};
+use crate::runtime::{ArtifactMeta, Engine, LoadedArtifact, Tensor};
+use crate::{Error, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Shape contract of a backend, known before construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BackendSpec {
+    pub input_dim: usize,
+    pub output_dim: usize,
+    /// Largest (or, when `fixed_batch`, exact) batch size.
+    pub max_batch: usize,
+    /// True if `run_batch` requires exactly `max_batch` rows.
+    pub fixed_batch: bool,
+}
+
+/// Something that can transform a batch of row vectors.
+/// Deliberately NOT `Send`: PJRT handles stay on the thread that built
+/// them.
+pub trait Backend {
+    fn spec(&self) -> BackendSpec;
+
+    /// Transform all rows of `x`.
+    fn run_batch(&self, x: &Matrix) -> Result<Matrix>;
+}
+
+/// Builds per-worker backends; shared across threads.
+pub trait BackendFactory: Send + Sync {
+    /// Shape contract (must match what `build()` produces).
+    fn spec(&self) -> BackendSpec;
+
+    /// Construct a thread-local backend instance.
+    fn build(&self) -> Result<Box<dyn Backend>>;
+}
+
+/// Factory from a closure + spec (used heavily in tests).
+pub struct ClosureFactory<F> {
+    pub spec: BackendSpec,
+    pub f: F,
+}
+
+impl<F> BackendFactory for ClosureFactory<F>
+where
+    F: Fn() -> Result<Box<dyn Backend>> + Send + Sync,
+{
+    fn spec(&self) -> BackendSpec {
+        self.spec
+    }
+
+    fn build(&self) -> Result<Box<dyn Backend>> {
+        (self.f)()
+    }
+}
+
+// ---------------------------------------------------------------- native
+
+/// Pure-Rust feature map backend.
+pub struct NativeBackend {
+    map: Arc<dyn FeatureMap>,
+}
+
+impl NativeBackend {
+    pub fn new(map: Arc<dyn FeatureMap>) -> Self {
+        NativeBackend { map }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn spec(&self) -> BackendSpec {
+        BackendSpec {
+            input_dim: self.map.input_dim(),
+            output_dim: self.map.output_dim(),
+            max_batch: usize::MAX,
+            fixed_batch: false,
+        }
+    }
+
+    fn run_batch(&self, x: &Matrix) -> Result<Matrix> {
+        Ok(self.map.transform_batch(x))
+    }
+}
+
+/// Factory for [`NativeBackend`] (the map is shared, not re-sampled).
+pub struct NativeFactory {
+    map: Arc<dyn FeatureMap>,
+}
+
+impl NativeFactory {
+    pub fn new(map: Arc<dyn FeatureMap>) -> Self {
+        NativeFactory { map }
+    }
+}
+
+impl BackendFactory for NativeFactory {
+    fn spec(&self) -> BackendSpec {
+        BackendSpec {
+            input_dim: self.map.input_dim(),
+            output_dim: self.map.output_dim(),
+            max_batch: usize::MAX,
+            fixed_batch: false,
+        }
+    }
+
+    fn build(&self) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(NativeBackend::new(self.map.clone())))
+    }
+}
+
+// ----------------------------------------------------------------- pjrt
+
+fn read_meta(dir: &std::path::Path, name: &str) -> Result<ArtifactMeta> {
+    let meta_path = dir.join(format!("{name}.json"));
+    ArtifactMeta::parse(&std::fs::read_to_string(&meta_path).map_err(|e| {
+        Error::Runtime(format!("manifest {}: {e} — run `make artifacts`", meta_path.display()))
+    })?)
+}
+
+fn check_transform_meta(meta: &ArtifactMeta, map: &RandomMaclaurin, kind: &str) -> Result<()> {
+    if meta.kind != kind {
+        return Err(Error::Runtime(format!(
+            "artifact {} has kind {}, expected {kind}",
+            meta.name, meta.kind
+        )));
+    }
+    let d = meta.inputs[0].shape[1];
+    let features = meta.inputs[1].shape[2];
+    if map.input_dim() != d || map.n_random() != features {
+        return Err(Error::shape(
+            format!("artifact d={d} D={features}"),
+            format!("map d={} D={}", map.input_dim(), map.n_random()),
+        ));
+    }
+    if map.config().h01 {
+        return Err(Error::Runtime(
+            "transform artifacts serve the random block only; H0/1 maps are served natively"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
+/// PJRT backend for `transform` artifacts: inputs `(x, omega, mask,
+/// coeff)`, output `z`. The map tensors are expanded once per instance.
+pub struct PjrtTransformBackend {
+    artifact: LoadedArtifact,
+    /// Pre-marshalled map literals, built once at construction:
+    /// rebuilding Omega's literal per call dominated the hot path
+    /// (section Perf).
+    omega_lit: xla::Literal,
+    mask_lit: xla::Literal,
+    coeff_lit: xla::Literal,
+    batch: usize,
+    d: usize,
+    features: usize,
+}
+
+impl PjrtTransformBackend {
+    /// Bind a sampled map to a loaded `transform` artifact. The map's
+    /// dense tensors are expanded and uploaded to the device once.
+    pub fn new(artifact: LoadedArtifact, map: &RandomMaclaurin) -> Result<Self> {
+        check_transform_meta(&artifact.meta, map, "transform")?;
+        let x_spec = &artifact.meta.inputs[0];
+        let omega_spec = &artifact.meta.inputs[1];
+        let (batch, d) = (x_spec.shape[0], x_spec.shape[1]);
+        let (n_max, _, features) =
+            (omega_spec.shape[0], omega_spec.shape[1], omega_spec.shape[2]);
+        let (omega, mask, coeff) = map.to_padded_dense(n_max as u32);
+        let omega_lit = artifact.marshal(&Tensor::new(vec![n_max, d, features], omega)?)?;
+        let mask_lit = artifact.marshal(&Tensor::new(vec![n_max, features], mask)?)?;
+        let coeff_lit = artifact.marshal(&Tensor::new(vec![features], coeff)?)?;
+        Ok(PjrtTransformBackend {
+            artifact,
+            omega_lit,
+            mask_lit,
+            coeff_lit,
+            batch,
+            d,
+            features,
+        })
+    }
+}
+
+impl Backend for PjrtTransformBackend {
+    fn spec(&self) -> BackendSpec {
+        BackendSpec {
+            input_dim: self.d,
+            output_dim: self.features,
+            max_batch: self.batch,
+            fixed_batch: true,
+        }
+    }
+
+    fn run_batch(&self, x: &Matrix) -> Result<Matrix> {
+        if x.rows() != self.batch || x.cols() != self.d {
+            return Err(Error::shape(
+                format!("[{}, {}]", self.batch, self.d),
+                format!("[{}, {}]", x.rows(), x.cols()),
+            ));
+        }
+        // Only the batch's literal is built per call.
+        let x_lit = self.artifact.marshal(&Tensor::from_matrix(x))?;
+        let mut out = self.artifact.execute_literals(&[
+            &x_lit,
+            &self.omega_lit,
+            &self.mask_lit,
+            &self.coeff_lit,
+        ])?;
+        out.remove(0).into_matrix()
+    }
+}
+
+/// Factory for [`PjrtTransformBackend`]: parses the manifest eagerly
+/// (shape contract, validation) and compiles one executable per worker.
+pub struct PjrtTransformFactory {
+    dir: PathBuf,
+    artifact: String,
+    map: Arc<RandomMaclaurin>,
+    spec: BackendSpec,
+}
+
+impl PjrtTransformFactory {
+    pub fn new(
+        dir: impl Into<PathBuf>,
+        artifact: impl Into<String>,
+        map: Arc<RandomMaclaurin>,
+    ) -> Result<Self> {
+        let dir = dir.into();
+        let artifact = artifact.into();
+        let meta = read_meta(&dir, &artifact)?;
+        check_transform_meta(&meta, &map, "transform")?;
+        let spec = BackendSpec {
+            input_dim: meta.inputs[0].shape[1],
+            output_dim: meta.inputs[1].shape[2],
+            max_batch: meta.batch(),
+            fixed_batch: true,
+        };
+        Ok(PjrtTransformFactory { dir, artifact, map, spec })
+    }
+}
+
+impl BackendFactory for PjrtTransformFactory {
+    fn spec(&self) -> BackendSpec {
+        self.spec
+    }
+
+    fn build(&self) -> Result<Box<dyn Backend>> {
+        let engine = Engine::cpu(&self.dir)?;
+        let loaded = engine.load(&self.artifact)?;
+        Ok(Box::new(PjrtTransformBackend::new(loaded, &self.map)?))
+    }
+}
+
+/// PJRT backend for fused `transform_score` artifacts: inputs
+/// `(x, omega, mask, coeff, w, b)`, output `scores [B]` (returned as a
+/// `[B, 1]` matrix so the reply plumbing stays uniform).
+pub struct PjrtScoreBackend {
+    artifact: LoadedArtifact,
+    omega: Tensor,
+    mask: Tensor,
+    coeff: Tensor,
+    w: Tensor,
+    b: Tensor,
+    batch: usize,
+    d: usize,
+}
+
+impl PjrtScoreBackend {
+    pub fn new(
+        artifact: LoadedArtifact,
+        map: &RandomMaclaurin,
+        w: Vec<f32>,
+        b: f32,
+    ) -> Result<Self> {
+        check_transform_meta(&artifact.meta, map, "transform_score")?;
+        let x_spec = &artifact.meta.inputs[0];
+        let omega_spec = &artifact.meta.inputs[1];
+        let (batch, d) = (x_spec.shape[0], x_spec.shape[1]);
+        let (n_max, _, features) =
+            (omega_spec.shape[0], omega_spec.shape[1], omega_spec.shape[2]);
+        if w.len() != features {
+            return Err(Error::shape(format!("w len {features}"), format!("{}", w.len())));
+        }
+        let (omega, mask, coeff) = map.to_padded_dense(n_max as u32);
+        Ok(PjrtScoreBackend {
+            artifact,
+            omega: Tensor::new(vec![n_max, d, features], omega)?,
+            mask: Tensor::new(vec![n_max, features], mask)?,
+            coeff: Tensor::new(vec![features], coeff)?,
+            w: Tensor::new(vec![features], w)?,
+            b: Tensor::scalar(b),
+            batch,
+            d,
+        })
+    }
+}
+
+impl Backend for PjrtScoreBackend {
+    fn spec(&self) -> BackendSpec {
+        BackendSpec {
+            input_dim: self.d,
+            output_dim: 1,
+            max_batch: self.batch,
+            fixed_batch: true,
+        }
+    }
+
+    fn run_batch(&self, x: &Matrix) -> Result<Matrix> {
+        if x.rows() != self.batch || x.cols() != self.d {
+            return Err(Error::shape(
+                format!("[{}, {}]", self.batch, self.d),
+                format!("[{}, {}]", x.rows(), x.cols()),
+            ));
+        }
+        let inputs = [
+            Tensor::from_matrix(x),
+            self.omega.clone(),
+            self.mask.clone(),
+            self.coeff.clone(),
+            self.w.clone(),
+            self.b.clone(),
+        ];
+        let out = self.artifact.execute(&inputs)?;
+        let scores = out[0].data().to_vec();
+        Matrix::from_vec(self.batch, 1, scores)
+    }
+}
+
+/// A bucketed PJRT transform backend: several compiled variants of the
+/// same computation at different batch sizes; each incoming batch is
+/// padded only up to the *smallest bucket that fits* (and chunked by
+/// the largest bucket when oversized). This is the §Perf fix for the
+/// padding waste a single fixed-256 artifact pays at low occupancy.
+pub struct PjrtBucketedBackend {
+    /// Ascending by batch size.
+    buckets: Vec<PjrtTransformBackend>,
+}
+
+impl PjrtBucketedBackend {
+    pub fn new(mut buckets: Vec<PjrtTransformBackend>) -> Result<Self> {
+        if buckets.is_empty() {
+            return Err(Error::Runtime("bucketed backend needs >= 1 bucket".into()));
+        }
+        buckets.sort_by_key(|b| b.batch);
+        let d = buckets[0].d;
+        let f = buckets[0].features;
+        if !buckets.iter().all(|b| b.d == d && b.features == f) {
+            return Err(Error::shape(
+                format!("uniform buckets d={d} D={f}"),
+                "mismatched bucket shapes",
+            ));
+        }
+        Ok(PjrtBucketedBackend { buckets })
+    }
+
+    fn bucket_for(&self, n: usize) -> &PjrtTransformBackend {
+        self.buckets
+            .iter()
+            .find(|b| b.batch >= n)
+            .unwrap_or_else(|| self.buckets.last().expect("non-empty"))
+    }
+}
+
+impl Backend for PjrtBucketedBackend {
+    fn spec(&self) -> BackendSpec {
+        let largest = self.buckets.last().expect("non-empty");
+        BackendSpec {
+            input_dim: largest.d,
+            output_dim: largest.features,
+            max_batch: largest.batch,
+            // The bucketed backend pads internally; the coordinator can
+            // hand it ragged batches directly.
+            fixed_batch: false,
+        }
+    }
+
+    fn run_batch(&self, x: &Matrix) -> Result<Matrix> {
+        let n = x.rows();
+        let d = self.buckets[0].d;
+        let features = self.buckets[0].features;
+        let mut out = Matrix::zeros(n, features);
+        let max_bucket = self.buckets.last().expect("non-empty").batch;
+        let mut start = 0usize;
+        while start < n {
+            let take = (n - start).min(max_bucket);
+            let backend = self.bucket_for(take);
+            let mut padded = Matrix::zeros(backend.batch, d);
+            for i in 0..take {
+                padded.row_mut(i).copy_from_slice(x.row(start + i));
+            }
+            let z = backend.run_batch(&padded)?;
+            for i in 0..take {
+                out.row_mut(start + i).copy_from_slice(z.row(i));
+            }
+            start += take;
+        }
+        Ok(out)
+    }
+}
+
+/// Factory for [`PjrtBucketedBackend`] over a list of artifact names
+/// (e.g. `transform_serve_b16`, `transform_serve_b64`,
+/// `transform_serve`).
+pub struct PjrtBucketedFactory {
+    dir: PathBuf,
+    artifacts: Vec<String>,
+    map: Arc<RandomMaclaurin>,
+    spec: BackendSpec,
+}
+
+impl PjrtBucketedFactory {
+    pub fn new(
+        dir: impl Into<PathBuf>,
+        artifacts: Vec<String>,
+        map: Arc<RandomMaclaurin>,
+    ) -> Result<Self> {
+        let dir = dir.into();
+        if artifacts.is_empty() {
+            return Err(Error::Config("need at least one artifact name".into()));
+        }
+        let mut max_batch = 0;
+        let mut input_dim = 0;
+        let mut output_dim = 0;
+        for name in &artifacts {
+            let meta = read_meta(&dir, name)?;
+            check_transform_meta(&meta, &map, "transform")?;
+            max_batch = max_batch.max(meta.batch());
+            input_dim = meta.inputs[0].shape[1];
+            output_dim = meta.inputs[1].shape[2];
+        }
+        let spec = BackendSpec { input_dim, output_dim, max_batch, fixed_batch: false };
+        Ok(PjrtBucketedFactory { dir, artifacts, map, spec })
+    }
+}
+
+impl BackendFactory for PjrtBucketedFactory {
+    fn spec(&self) -> BackendSpec {
+        self.spec
+    }
+
+    fn build(&self) -> Result<Box<dyn Backend>> {
+        let engine = Engine::cpu(&self.dir)?;
+        let mut buckets = Vec::with_capacity(self.artifacts.len());
+        for name in &self.artifacts {
+            let loaded = engine.load(name)?;
+            buckets.push(PjrtTransformBackend::new(loaded, &self.map)?);
+        }
+        Ok(Box::new(PjrtBucketedBackend::new(buckets)?))
+    }
+}
+
+/// Factory for [`PjrtScoreBackend`].
+pub struct PjrtScoreFactory {
+    dir: PathBuf,
+    artifact: String,
+    map: Arc<RandomMaclaurin>,
+    w: Vec<f32>,
+    b: f32,
+    spec: BackendSpec,
+}
+
+impl PjrtScoreFactory {
+    pub fn new(
+        dir: impl Into<PathBuf>,
+        artifact: impl Into<String>,
+        map: Arc<RandomMaclaurin>,
+        w: Vec<f32>,
+        b: f32,
+    ) -> Result<Self> {
+        let dir = dir.into();
+        let artifact = artifact.into();
+        let meta = read_meta(&dir, &artifact)?;
+        check_transform_meta(&meta, &map, "transform_score")?;
+        let spec = BackendSpec {
+            input_dim: meta.inputs[0].shape[1],
+            output_dim: 1,
+            max_batch: meta.batch(),
+            fixed_batch: true,
+        };
+        Ok(PjrtScoreFactory { dir, artifact, map, w, b, spec })
+    }
+}
+
+impl BackendFactory for PjrtScoreFactory {
+    fn spec(&self) -> BackendSpec {
+        self.spec
+    }
+
+    fn build(&self) -> Result<Box<dyn Backend>> {
+        let engine = Engine::cpu(&self.dir)?;
+        let loaded = engine.load(&self.artifact)?;
+        Ok(Box::new(PjrtScoreBackend::new(
+            loaded,
+            &self.map,
+            self.w.clone(),
+            self.b,
+        )?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Exponential;
+    use crate::maclaurin::RmConfig;
+    use crate::rng::Rng;
+
+    #[test]
+    fn native_backend_matches_map() {
+        let mut rng = Rng::seed_from(1);
+        let map = Arc::new(RandomMaclaurin::sample(
+            &Exponential::new(1.0),
+            4,
+            16,
+            RmConfig::default(),
+            &mut rng,
+        ));
+        let backend = NativeBackend::new(map.clone());
+        let spec = backend.spec();
+        assert_eq!(spec.input_dim, 4);
+        assert_eq!(spec.output_dim, 16);
+        assert!(!spec.fixed_batch);
+        let x = Matrix::from_rows(&[vec![0.1, 0.2, 0.3, 0.4]]).unwrap();
+        let out = backend.run_batch(&x).unwrap();
+        assert_eq!(out.row(0), &map.transform(x.row(0))[..]);
+    }
+
+    #[test]
+    fn native_factory_builds_consistent_spec() {
+        let mut rng = Rng::seed_from(2);
+        let map = Arc::new(RandomMaclaurin::sample(
+            &Exponential::new(1.0),
+            3,
+            8,
+            RmConfig::default(),
+            &mut rng,
+        ));
+        let factory = NativeFactory::new(map);
+        let b = factory.build().unwrap();
+        assert_eq!(factory.spec(), b.spec());
+    }
+
+    #[test]
+    fn pjrt_factory_rejects_missing_manifest() {
+        let mut rng = Rng::seed_from(3);
+        let map = Arc::new(RandomMaclaurin::sample(
+            &Exponential::new(1.0),
+            4,
+            8,
+            RmConfig::default(),
+            &mut rng,
+        ));
+        let err = match PjrtTransformFactory::new(std::env::temp_dir(), "nope", map) {
+            Err(e) => e,
+            Ok(_) => panic!("missing manifest must fail"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,571 @@
+//! L3 serving coordinator: request router + dynamic batcher + workers.
+//!
+//! The paper's feature maps turn kernel-machine serving into *linear*
+//! serving: transform a vector, dot it with a weight vector. This module
+//! is the production shell around that hot path:
+//!
+//! ```text
+//! clients ──submit(x)──▶ bounded queue ──▶ batcher thread
+//!                                            │ (coalesce ≤ max_batch
+//!                                            │  within max_wait)
+//!                                            ▼
+//!                                     batch queue ──▶ N worker threads
+//!                                                       │ thread-local
+//!                                                       │ Backend::run_batch
+//!                                                       ▼
+//!                                            per-request reply channels
+//! ```
+//!
+//! * **Backpressure** — the submit queue is bounded; when full, callers
+//!   get [`Error::Coordinator`] instead of unbounded memory growth.
+//! * **Thread-local backends** — PJRT handles are `!Send`, so each
+//!   worker builds its own executable from a shared [`BackendFactory`].
+//! * **Fixed-shape backends** — the PJRT artifacts take a fixed batch;
+//!   ragged tails are padded and the replies sliced (pad waste is
+//!   metered in [`crate::metrics::Stats::pad_slots`]).
+//! * **Exactly-once replies** — every accepted request receives exactly
+//!   one reply, including on worker build failure, backend failure or
+//!   shutdown drain; the tests in this module drive random schedules
+//!   against that invariant.
+
+pub mod backend;
+
+pub use backend::{
+    Backend, BackendFactory, BackendSpec, ClosureFactory, NativeBackend, NativeFactory,
+    PjrtBucketedBackend, PjrtBucketedFactory, PjrtScoreBackend, PjrtScoreFactory,
+    PjrtTransformBackend, PjrtTransformFactory,
+};
+
+use crate::metrics::Stats;
+use crate::{Error, Result};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching/queueing policy.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// Largest batch handed to the backend (clamped to the backend's
+    /// own `max_batch`).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch after the first
+    /// request arrives.
+    pub max_wait: Duration,
+    /// Bound on the submit queue (backpressure threshold).
+    pub queue_depth: usize,
+    /// Worker threads executing batches.
+    pub workers: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            max_batch: 128,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+            workers: 2,
+        }
+    }
+}
+
+struct Job {
+    x: Vec<f32>,
+    submitted: Instant,
+    reply: SyncSender<Result<Vec<f32>>>,
+}
+
+/// A handle to a reply; `wait` blocks until the coordinator answers.
+pub struct Ticket {
+    rx: Receiver<Result<Vec<f32>>>,
+}
+
+impl Ticket {
+    /// Block for the result.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Coordinator("coordinator dropped the request".into()))?
+    }
+
+    /// Block with a timeout.
+    pub fn wait_timeout(self, d: Duration) -> Result<Vec<f32>> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => {
+                Err(Error::Coordinator("timed out waiting for reply".into()))
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(Error::Coordinator("coordinator dropped the request".into()))
+            }
+        }
+    }
+}
+
+/// The serving coordinator. Create with [`Coordinator::start`], submit
+/// vectors with [`Coordinator::submit`], stop with
+/// [`Coordinator::shutdown`] (also runs on drop).
+pub struct Coordinator {
+    submit_tx: Option<SyncSender<Job>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    stats: Arc<Stats>,
+    spec: BackendSpec,
+}
+
+impl Coordinator {
+    /// Spin up the batcher + workers over a backend factory.
+    pub fn start(factory: Arc<dyn BackendFactory>, config: CoordinatorConfig) -> Coordinator {
+        let stats = Arc::new(Stats::new());
+        let spec = factory.spec();
+        let max_batch = config.max_batch.min(spec.max_batch).max(1);
+        let (submit_tx, submit_rx) = sync_channel::<Job>(config.queue_depth);
+        // Batch queue depth: enough to keep workers busy without
+        // hoarding requests away from latency accounting.
+        let (batch_tx, batch_rx) = sync_channel::<Vec<Job>>(config.workers * 2);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        let mut threads = Vec::new();
+
+        // Batcher thread.
+        {
+            let stats = stats.clone();
+            let max_wait = config.max_wait;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("rfdot-batcher".into())
+                    .spawn(move || {
+                        batcher_loop(submit_rx, batch_tx, max_batch, max_wait, stats);
+                    })
+                    .expect("spawn batcher"),
+            );
+        }
+
+        // Worker threads (each builds its own thread-local backend).
+        for w in 0..config.workers.max(1) {
+            let rx = batch_rx.clone();
+            let factory = factory.clone();
+            let stats = stats.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("rfdot-worker-{w}"))
+                    .spawn(move || worker_loop(rx, factory, stats))
+                    .expect("spawn worker"),
+            );
+        }
+
+        Coordinator { submit_tx: Some(submit_tx), threads, stats, spec }
+    }
+
+    /// Submit one vector; returns a [`Ticket`] for the reply, or an
+    /// immediate backpressure/shape error.
+    pub fn submit(&self, x: Vec<f32>) -> Result<Ticket> {
+        if x.len() != self.spec.input_dim {
+            return Err(Error::shape(
+                format!("dim {}", self.spec.input_dim),
+                format!("{}", x.len()),
+            ));
+        }
+        let tx = self
+            .submit_tx
+            .as_ref()
+            .ok_or_else(|| Error::Coordinator("coordinator is shut down".into()))?;
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let job = Job { x, submitted: Instant::now(), reply: reply_tx };
+        match tx.try_send(job) {
+            Ok(()) => {
+                self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(Ticket { rx: reply_rx })
+            }
+            Err(TrySendError::Full(_)) => {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(Error::Coordinator("queue full (backpressure)".into()))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                Err(Error::Coordinator("coordinator is shut down".into()))
+            }
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn transform(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(x)?.wait()
+    }
+
+    /// Output dimensionality of replies.
+    pub fn output_dim(&self) -> usize {
+        self.spec.output_dim
+    }
+
+    /// Live metrics handle.
+    pub fn stats(&self) -> &Stats {
+        &self.stats
+    }
+
+    /// Stop accepting requests, drain in-flight batches, join threads.
+    pub fn shutdown(&mut self) {
+        self.submit_tx.take(); // closes the submit queue
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn batcher_loop(
+    submit_rx: Receiver<Job>,
+    batch_tx: SyncSender<Vec<Job>>,
+    max_batch: usize,
+    max_wait: Duration,
+    stats: Arc<Stats>,
+) {
+    loop {
+        // Block for the first job of the batch.
+        let first = match submit_rx.recv() {
+            Ok(j) => j,
+            Err(_) => return, // submit side closed: drain done
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + max_wait;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match submit_rx.recv_timeout(deadline - now) {
+                Ok(j) => batch.push(j),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.batched_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        if batch_tx.send(batch).is_err() {
+            return; // workers gone
+        }
+    }
+}
+
+fn worker_loop(
+    batch_rx: Arc<Mutex<Receiver<Vec<Job>>>>,
+    factory: Arc<dyn BackendFactory>,
+    stats: Arc<Stats>,
+) {
+    // Build the thread-local backend; on failure, keep serving errors so
+    // accepted requests are still answered exactly once.
+    let backend = factory.build();
+    let spec = factory.spec();
+    loop {
+        let batch = {
+            let guard = batch_rx.lock().expect("batch queue lock");
+            match guard.recv() {
+                Ok(b) => b,
+                Err(_) => return, // batcher gone and queue drained
+            }
+        };
+        let backend = match &backend {
+            Ok(b) => b,
+            Err(e) => {
+                stats.backend_errors.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("backend build failed: {e}");
+                answer_all_err(batch, &msg, &stats);
+                continue;
+            }
+        };
+        let n = batch.len();
+        // Fixed-shape backends require padding to their batch size.
+        let padded = if spec.fixed_batch { spec.max_batch } else { n };
+        stats.pad_slots.fetch_add((padded - n) as u64, Ordering::Relaxed);
+        let mut x = crate::linalg::Matrix::zeros(padded, spec.input_dim);
+        for (i, job) in batch.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(&job.x);
+        }
+        match backend.run_batch(&x) {
+            Ok(out) => {
+                for (i, job) in batch.into_iter().enumerate() {
+                    let row = out.row(i).to_vec();
+                    stats.completed.fetch_add(1, Ordering::Relaxed);
+                    stats.record_latency(job.submitted.elapsed());
+                    let _ = job.reply.send(Ok(row));
+                }
+            }
+            Err(e) => {
+                stats.backend_errors.fetch_add(1, Ordering::Relaxed);
+                answer_all_err(batch, &e.to_string(), &stats);
+            }
+        }
+    }
+}
+
+fn answer_all_err(batch: Vec<Job>, msg: &str, stats: &Stats) {
+    for job in batch {
+        stats.completed.fetch_add(1, Ordering::Relaxed);
+        stats.record_latency(job.submitted.elapsed());
+        let _ = job.reply.send(Err(Error::Coordinator(msg.to_string())));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Polynomial;
+    use crate::maclaurin::{FeatureMap, RandomMaclaurin, RmConfig};
+    use crate::rng::Rng;
+
+    fn native_factory(d: usize, n_feat: usize) -> (Arc<dyn BackendFactory>, Arc<RandomMaclaurin>) {
+        let mut rng = Rng::seed_from(1);
+        let map = Arc::new(RandomMaclaurin::sample(
+            &Polynomial::new(3, 1.0),
+            d,
+            n_feat,
+            RmConfig::default(),
+            &mut rng,
+        ));
+        (Arc::new(NativeFactory::new(map.clone())), map)
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let (factory, map) = native_factory(4, 16);
+        let coord = Coordinator::start(factory, CoordinatorConfig::default());
+        let x = vec![0.1, -0.2, 0.3, 0.0];
+        let z = coord.transform(x.clone()).unwrap();
+        assert_eq!(z.len(), 16);
+        assert_eq!(z, map.transform(&x));
+    }
+
+    #[test]
+    fn rejects_wrong_dim() {
+        let (factory, _) = native_factory(4, 8);
+        let coord = Coordinator::start(factory, CoordinatorConfig::default());
+        assert!(coord.submit(vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn many_concurrent_clients_all_answered_exactly_once() {
+        let (factory, _) = native_factory(6, 32);
+        let coord = Arc::new(Coordinator::start(
+            factory,
+            CoordinatorConfig { max_batch: 16, workers: 3, ..Default::default() },
+        ));
+        let clients = 8;
+        let per_client = 50;
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let coord = coord.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::seed_from(c as u64);
+                let mut got = 0usize;
+                for _ in 0..per_client {
+                    let x: Vec<f32> = (0..6).map(|_| rng.f32() - 0.5).collect();
+                    match coord.submit(x) {
+                        Ok(t) => {
+                            t.wait().unwrap();
+                            got += 1;
+                        }
+                        Err(_) => {} // backpressure: allowed
+                    }
+                }
+                got
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let stats = coord.stats();
+        assert_eq!(total as u64, stats.completed.load(Ordering::Relaxed));
+        assert_eq!(
+            stats.submitted.load(Ordering::Relaxed),
+            stats.completed.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
+    fn replies_are_routed_to_the_right_client() {
+        // Content check: each client's reply must be the transform of
+        // *its own* input.
+        let (factory, map) = native_factory(3, 8);
+        let coord = Arc::new(Coordinator::start(
+            factory,
+            CoordinatorConfig { max_batch: 4, workers: 2, ..Default::default() },
+        ));
+        let mut handles = Vec::new();
+        for c in 0..6 {
+            let coord = coord.clone();
+            let map = map.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::seed_from(100 + c as u64);
+                for _ in 0..25 {
+                    let x: Vec<f32> = (0..3).map(|_| rng.f32() - 0.5).collect();
+                    if let Ok(t) = coord.submit(x.clone()) {
+                        let z = t.wait().unwrap();
+                        assert_eq!(z, map.transform(&x), "client {c} got someone else's reply");
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // A slow backend + tiny queue must surface rejections instead of
+        // queueing without bound.
+        struct Slow;
+        impl Backend for Slow {
+            fn spec(&self) -> BackendSpec {
+                BackendSpec { input_dim: 2, output_dim: 2, max_batch: 1, fixed_batch: false }
+            }
+            fn run_batch(&self, x: &crate::linalg::Matrix) -> Result<crate::linalg::Matrix> {
+                std::thread::sleep(Duration::from_millis(20));
+                Ok(x.clone())
+            }
+        }
+        let factory = Arc::new(ClosureFactory {
+            spec: BackendSpec { input_dim: 2, output_dim: 2, max_batch: 1, fixed_batch: false },
+            f: || Ok(Box::new(Slow) as Box<dyn Backend>),
+        });
+        let coord = Coordinator::start(
+            factory,
+            CoordinatorConfig {
+                max_batch: 1,
+                queue_depth: 2,
+                workers: 1,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        let mut rejected = 0;
+        let mut tickets = Vec::new();
+        for _ in 0..50 {
+            match coord.submit(vec![0.0, 0.0]) {
+                Ok(t) => tickets.push(t),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "expected backpressure rejections");
+        for t in tickets {
+            t.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn backend_errors_propagate_to_every_job() {
+        struct Failing;
+        impl Backend for Failing {
+            fn spec(&self) -> BackendSpec {
+                BackendSpec { input_dim: 2, output_dim: 2, max_batch: 8, fixed_batch: false }
+            }
+            fn run_batch(&self, _x: &crate::linalg::Matrix) -> Result<crate::linalg::Matrix> {
+                Err(Error::Runtime("injected failure".into()))
+            }
+        }
+        let factory = Arc::new(ClosureFactory {
+            spec: BackendSpec { input_dim: 2, output_dim: 2, max_batch: 8, fixed_batch: false },
+            f: || Ok(Box::new(Failing) as Box<dyn Backend>),
+        });
+        let coord = Coordinator::start(factory, CoordinatorConfig::default());
+        let tickets: Vec<_> =
+            (0..10).filter_map(|_| coord.submit(vec![1.0, 2.0]).ok()).collect();
+        for t in tickets {
+            let err = t.wait().unwrap_err();
+            assert!(err.to_string().contains("injected failure"));
+        }
+        assert!(coord.stats().backend_errors.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn worker_build_failure_still_answers() {
+        let factory = Arc::new(ClosureFactory {
+            spec: BackendSpec { input_dim: 2, output_dim: 2, max_batch: 8, fixed_batch: false },
+            f: || Err(Error::Runtime("no such artifact".into())),
+        });
+        let coord = Coordinator::start(factory, CoordinatorConfig::default());
+        let t = coord.submit(vec![1.0, 2.0]).unwrap();
+        let err = t.wait().unwrap_err();
+        assert!(err.to_string().contains("backend build failed"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_drains_inflight() {
+        let (factory, _) = native_factory(4, 8);
+        let mut coord = Coordinator::start(
+            factory,
+            CoordinatorConfig { max_wait: Duration::from_millis(10), ..Default::default() },
+        );
+        let tickets: Vec<_> =
+            (0..32).filter_map(|_| coord.submit(vec![0.1; 4]).ok()).collect();
+        coord.shutdown();
+        // Every accepted request must still be answered.
+        for t in tickets {
+            assert!(t.wait().is_ok());
+        }
+        // New submissions are refused.
+        assert!(coord.submit(vec![0.1; 4]).is_err());
+    }
+
+    #[test]
+    fn batches_respect_max_batch() {
+        let (factory, _) = native_factory(2, 4);
+        let coord = Arc::new(Coordinator::start(
+            factory,
+            CoordinatorConfig {
+                max_batch: 5,
+                max_wait: Duration::from_millis(50),
+                workers: 1,
+                ..Default::default()
+            },
+        ));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let coord = coord.clone();
+            handles.push(std::thread::spawn(move || {
+                let tickets: Vec<_> =
+                    (0..25).filter_map(|_| coord.submit(vec![0.5, 0.5]).ok()).collect();
+                for t in tickets {
+                    t.wait().unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let batches = coord.stats().batches.load(Ordering::Relaxed);
+        let items = coord.stats().batched_items.load(Ordering::Relaxed);
+        assert!(batches >= items / 5, "batch size exceeded: {items} items in {batches} batches");
+    }
+
+    #[test]
+    fn padding_metered_for_fixed_batch() {
+        // Fixed batch of 8 with single requests: each batch pads 7 slots.
+        struct Echo;
+        impl Backend for Echo {
+            fn spec(&self) -> BackendSpec {
+                BackendSpec { input_dim: 2, output_dim: 2, max_batch: 8, fixed_batch: true }
+            }
+            fn run_batch(&self, x: &crate::linalg::Matrix) -> Result<crate::linalg::Matrix> {
+                assert_eq!(x.rows(), 8, "fixed batch must always be full-size");
+                Ok(x.clone())
+            }
+        }
+        let factory = Arc::new(ClosureFactory {
+            spec: BackendSpec { input_dim: 2, output_dim: 2, max_batch: 8, fixed_batch: true },
+            f: || Ok(Box::new(Echo) as Box<dyn Backend>),
+        });
+        let coord = Coordinator::start(
+            factory,
+            CoordinatorConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+                workers: 1,
+                ..Default::default()
+            },
+        );
+        let t = coord.submit(vec![1.0, 2.0]).unwrap();
+        assert_eq!(t.wait().unwrap(), vec![1.0, 2.0]);
+        assert!(coord.stats().pad_slots.load(Ordering::Relaxed) >= 7);
+    }
+}

@@ -1,0 +1,87 @@
+//! Crate-wide error type.
+//!
+//! A single flat enum keeps `?` ergonomic across the substrates without
+//! pulling in `thiserror` (not vendored in this build environment).
+
+use std::fmt;
+
+/// Crate result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure modes surfaced by the library.
+#[derive(Debug)]
+pub enum Error {
+    /// A configuration value is out of range or inconsistent.
+    Config(String),
+    /// Kernel definition problem (negative Maclaurin coefficient,
+    /// evaluation outside the radius of convergence, ...).
+    Kernel(String),
+    /// Dataset parsing / generation problem.
+    Data(String),
+    /// Shape mismatch between tensors, models and maps.
+    Shape { expected: String, got: String },
+    /// Training failed to make progress / converge.
+    Solver(String),
+    /// PJRT runtime failure (artifact missing, compile error, ...).
+    Runtime(String),
+    /// Coordinator failure (queue closed, worker died, overload).
+    Coordinator(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Kernel(m) => write!(f, "kernel error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Shape { expected, got } => {
+                write!(f, "shape mismatch: expected {expected}, got {got}")
+            }
+            Error::Solver(m) => write!(f, "solver error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl Error {
+    /// Shorthand for shape errors.
+    pub fn shape(expected: impl Into<String>, got: impl Into<String>) -> Self {
+        Error::Shape { expected: expected.into(), got: got.into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_prefixed() {
+        assert!(Error::Config("bad".into()).to_string().starts_with("config"));
+        assert!(Error::shape("[2,2]", "[3]").to_string().contains("expected [2,2]"));
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        let e = Error::from(std::io::Error::new(std::io::ErrorKind::NotFound, "x"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

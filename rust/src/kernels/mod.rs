@@ -1,0 +1,156 @@
+//! Positive definite dot product kernels `K(x, y) = f(⟨x, y⟩)`.
+//!
+//! By Schoenberg's theorem (paper Theorem 1 / Corollary 5), `f` yields a
+//! positive definite kernel over every finite dimensional Euclidean space
+//! iff it is analytic with a Maclaurin expansion `f(t) = Σ a_n t^n` whose
+//! coefficients are all non-negative. The [`DotProductKernel`] trait
+//! exposes exactly that structure — `f`, `f'`, the coefficients `a_n`,
+//! and the radius of convergence — because every quantity in the paper's
+//! analysis (estimator weights `√(a_N / P[N])`, estimator bound
+//! `C_Ω = p·f(pR²)`, Lipschitz constant `L = R f'(R²) + p² R √d f'(pR²)`,
+//! truncation tails `Σ_{n>k} a_n R^{2n}`) is a functional of them.
+//!
+//! Provided kernels (paper §3.2): [`Homogeneous`], [`Polynomial`],
+//! [`Exponential`], [`VovkReal`], [`VovkInfinite`], plus the [`Scaled`]
+//! wrapper implementing the paper's `g(x) = f(x/c)` trick for finite
+//! radii of convergence and [`Truncated`] for the §4.2 alternative map.
+
+pub mod series;
+pub mod standard;
+
+pub use series::{binomial, MaclaurinSeries};
+pub use standard::{Exponential, Homogeneous, Polynomial, Scaled, Truncated, VovkInfinite, VovkReal};
+
+use crate::linalg::dot;
+
+/// A positive definite dot product kernel, exposed through its defining
+/// scalar function `f` and Maclaurin coefficients.
+pub trait DotProductKernel: Send + Sync {
+    /// Human-readable name used by configs, logs and bench tables.
+    fn name(&self) -> String;
+
+    /// Maclaurin coefficient `a_n ≥ 0` of `f(t) = Σ_n a_n t^n`.
+    fn coeff(&self, n: u32) -> f64;
+
+    /// Evaluate `f(t)` (closed form; must agree with the series inside
+    /// the radius of convergence).
+    fn f(&self, t: f64) -> f64;
+
+    /// Evaluate `f'(t)` (closed form).
+    fn f_prime(&self, t: f64) -> f64;
+
+    /// Radius of convergence of the Maclaurin series
+    /// (`f64::INFINITY` for entire functions).
+    fn radius(&self) -> f64 {
+        f64::INFINITY
+    }
+
+    /// Largest `n` with `a_n > 0`, if the expansion is finite
+    /// (polynomial kernels); `None` for infinite expansions.
+    fn max_order(&self) -> Option<u32> {
+        None
+    }
+
+    /// Kernel value on explicit vectors: `f(⟨x, y⟩)`.
+    fn eval(&self, x: &[f32], y: &[f32]) -> f64 {
+        self.f(dot(x, y) as f64)
+    }
+
+    /// The estimator bound of Lemma 8, `C_Ω = p · f(p R²)`: with the
+    /// normalized external measure (see [`crate::rng::Geometric`]) the
+    /// exact bound is `f(pR²)·p/(p−1)`, which equals the paper's `p·f(pR²)`
+    /// at the recommended `p = 2`.
+    fn estimator_bound(&self, p: f64, r: f64) -> f64 {
+        self.f(p * r * r) * p / (p - 1.0)
+    }
+
+    /// The Lipschitz constant bound of §4.1:
+    /// `L = R f'(R²) + p² R √d f'(pR²)` (with the same `p/(p−1)`
+    /// normalization correction folded into the second term).
+    fn lipschitz_bound(&self, p: f64, r: f64, d: usize) -> f64 {
+        r * self.f_prime(r * r)
+            + p * p / (p - 1.0) * r * (d as f64).sqrt() * self.f_prime(p * r * r)
+    }
+}
+
+/// Gram matrix of a kernel over a point set (rows of `x`).
+pub fn gram(kernel: &dyn DotProductKernel, x: &crate::linalg::Matrix) -> crate::linalg::Matrix {
+    let n = x.rows();
+    let mut g = crate::linalg::Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let v = kernel.eval(x.row(i), x.row(j)) as f32;
+            g.set(i, j, v);
+            g.set(j, i, v);
+        }
+    }
+    g
+}
+
+/// Mean absolute elementwise difference between two Gram matrices — the
+/// error metric of the paper's Figure 1 ("average absolute difference
+/// between the entries of the kernel matrix...").
+pub fn mean_abs_gram_error(a: &crate::linalg::Matrix, b: &crate::linalg::Matrix) -> f64 {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+    let n = a.rows() * a.cols();
+    if n == 0 {
+        return 0.0;
+    }
+    a.as_slice()
+        .iter()
+        .zip(b.as_slice())
+        .map(|(x, y)| (x - y).abs() as f64)
+        .sum::<f64>()
+        / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn eval_matches_f_of_dot() {
+        let k = Polynomial::new(3, 1.0);
+        let x = vec![0.5f32, 0.5];
+        let y = vec![0.2f32, -0.1];
+        let t = dot(&x, &y) as f64;
+        assert!((k.eval(&x, &y) - (1.0 + t).powi(3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gram_is_symmetric() {
+        let k = Exponential::new(1.0);
+        let x = Matrix::from_rows(&[vec![0.3, 0.1], vec![-0.2, 0.4], vec![0.0, 0.9]]).unwrap();
+        let g = gram(&k, &x);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(g.get(i, j), g.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn gram_error_metric() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![1., 2., 3., 8.]).unwrap();
+        assert!((mean_abs_gram_error(&a, &b) - 1.0).abs() < 1e-12);
+        assert_eq!(mean_abs_gram_error(&Matrix::zeros(0, 0), &Matrix::zeros(0, 0)), 0.0);
+    }
+
+    #[test]
+    fn estimator_bound_matches_paper_at_p2() {
+        // Lemma 8: |Z(x)Z(y)| <= p f(p R^2) at p = 2.
+        let k = Exponential::new(1.0);
+        let b = k.estimator_bound(2.0, 1.0);
+        assert!((b - 2.0 * (2.0f64).exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lipschitz_bound_positive_and_monotone_in_d() {
+        let k = Polynomial::new(10, 1.0);
+        let l8 = k.lipschitz_bound(2.0, 1.0, 8);
+        let l128 = k.lipschitz_bound(2.0, 1.0, 128);
+        assert!(l8 > 0.0 && l128 > l8);
+    }
+}

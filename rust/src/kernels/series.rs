@@ -1,0 +1,132 @@
+//! Maclaurin series utilities shared by the kernels and the feature maps.
+
+use super::DotProductKernel;
+
+/// Generalized binomial coefficient `C(n, k)` in `f64` (exact for the
+/// ranges used here: n ≤ ~60).
+pub fn binomial(n: u32, k: u32) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let k = k.min(n - k);
+    let mut acc = 1.0f64;
+    for i in 0..k {
+        acc = acc * (n - i) as f64 / (i + 1) as f64;
+    }
+    acc
+}
+
+/// A materialized prefix of a kernel's Maclaurin expansion plus the
+/// derived quantities the Random Maclaurin construction needs.
+#[derive(Clone, Debug)]
+pub struct MaclaurinSeries {
+    /// Coefficients `a_0 .. a_{n_max}`.
+    pub coeffs: Vec<f64>,
+    /// `f(R²)` — total series mass at the domain boundary.
+    pub total_mass: f64,
+    /// Domain bound `R` (data confined to `B_1(0, R)`).
+    pub r: f64,
+}
+
+impl MaclaurinSeries {
+    /// Materialize the first `n_max + 1` coefficients of `kernel` and the
+    /// mass bookkeeping at radius `r`.
+    pub fn materialize(kernel: &dyn DotProductKernel, n_max: u32, r: f64) -> Self {
+        let coeffs: Vec<f64> = (0..=n_max).map(|n| kernel.coeff(n)).collect();
+        MaclaurinSeries { coeffs, total_mass: kernel.f(r * r), r }
+    }
+
+    /// Mass of the prefix `Σ_{n ≤ k} a_n R^{2n}`.
+    pub fn prefix_mass(&self, k: u32) -> f64 {
+        let r2 = self.r * self.r;
+        let mut pow = 1.0;
+        let mut acc = 0.0;
+        for (n, &a) in self.coeffs.iter().enumerate() {
+            if n as u32 > k {
+                break;
+            }
+            acc += a * pow;
+            pow *= r2;
+        }
+        acc
+    }
+
+    /// Tail mass `Σ_{n > k} a_n R^{2n} = f(R²) − prefix(k)` — the uniform
+    /// truncation error bound of §4.2.
+    pub fn tail_mass(&self, k: u32) -> f64 {
+        (self.total_mass - self.prefix_mass(k)).max(0.0)
+    }
+
+    /// Smallest truncation order `k` such that the §4.2 residual bound
+    /// `Σ_{n>k} a_n R^{2n} ≤ eps`, capped at the materialized length.
+    pub fn truncation_order(&self, eps: f64) -> u32 {
+        let n_max = (self.coeffs.len() - 1) as u32;
+        for k in 0..=n_max {
+            if self.tail_mass(k) <= eps {
+                return k;
+            }
+        }
+        n_max
+    }
+
+    /// True if every materialized coefficient is non-negative —
+    /// Schoenberg's positive definiteness condition (Theorem 1).
+    pub fn is_positive_definite(&self) -> bool {
+        self.coeffs.iter().all(|&a| a >= 0.0)
+    }
+
+    /// Largest materialized order with a strictly positive coefficient.
+    pub fn last_nonzero_order(&self) -> Option<u32> {
+        self.coeffs
+            .iter()
+            .rposition(|&a| a > 0.0)
+            .map(|n| n as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Exponential, Polynomial};
+
+    #[test]
+    fn binomial_small_values() {
+        assert_eq!(binomial(5, 2), 10.0);
+        assert_eq!(binomial(10, 0), 1.0);
+        assert_eq!(binomial(10, 10), 1.0);
+        assert_eq!(binomial(3, 7), 0.0);
+        assert_eq!(binomial(52, 5), 2_598_960.0);
+    }
+
+    #[test]
+    fn prefix_plus_tail_is_total() {
+        let k = Exponential::new(1.0);
+        let s = MaclaurinSeries::materialize(&k, 40, 1.0);
+        for cut in [0u32, 3, 10, 40] {
+            let sum = s.prefix_mass(cut) + s.tail_mass(cut);
+            assert!((sum - s.total_mass).abs() < 1e-9, "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn truncation_order_meets_eps() {
+        let k = Exponential::new(1.0);
+        let s = MaclaurinSeries::materialize(&k, 60, 1.0);
+        let order = s.truncation_order(1e-6);
+        assert!(s.tail_mass(order) <= 1e-6);
+        assert!(order > 1 && order < 30, "order={order}");
+        // Stricter eps needs a larger order.
+        assert!(s.truncation_order(1e-12) >= order);
+    }
+
+    #[test]
+    fn polynomial_series_is_finite() {
+        let k = Polynomial::new(10, 1.0);
+        let s = MaclaurinSeries::materialize(&k, 20, 1.0);
+        assert_eq!(s.last_nonzero_order(), Some(10));
+        assert!(s.is_positive_definite());
+        // Exact: tail after order 10 is zero.
+        assert!(s.tail_mass(10).abs() < 1e-6 * s.total_mass);
+        assert_eq!(s.truncation_order(0.0), 10);
+    }
+}

@@ -1,0 +1,476 @@
+//! The paper's example kernels (§3.2) and the two kernel transformers
+//! used by its constructions (scaling, §3; truncation, §4.2).
+
+use super::DotProductKernel;
+use crate::kernels::series::binomial;
+
+/// Homogeneous polynomial kernel `K(x, y) = ⟨x, y⟩^p`.
+///
+/// Inseparable, hence *not* covered by Vedaldi & Zisserman's homogeneous
+/// additive maps — one of the paper's motivating examples.
+#[derive(Clone, Copy, Debug)]
+pub struct Homogeneous {
+    /// Degree `p ≥ 1`.
+    pub degree: u32,
+}
+
+impl Homogeneous {
+    pub fn new(degree: u32) -> Self {
+        assert!(degree >= 1, "degree must be >= 1");
+        Homogeneous { degree }
+    }
+}
+
+impl DotProductKernel for Homogeneous {
+    fn name(&self) -> String {
+        format!("homogeneous(p={})", self.degree)
+    }
+
+    fn coeff(&self, n: u32) -> f64 {
+        if n == self.degree {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    fn f(&self, t: f64) -> f64 {
+        t.powi(self.degree as i32)
+    }
+
+    fn f_prime(&self, t: f64) -> f64 {
+        self.degree as f64 * t.powi(self.degree as i32 - 1)
+    }
+
+    fn max_order(&self) -> Option<u32> {
+        Some(self.degree)
+    }
+}
+
+/// Non-homogeneous polynomial kernel `K(x, y) = (⟨x, y⟩ + r)^p`, `r > 0`.
+///
+/// Maclaurin: `a_n = C(p, n) r^(p−n)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Polynomial {
+    pub degree: u32,
+    pub offset: f64,
+}
+
+impl Polynomial {
+    pub fn new(degree: u32, offset: f64) -> Self {
+        assert!(degree >= 1, "degree must be >= 1");
+        assert!(offset >= 0.0, "offset must be >= 0 for positive definiteness");
+        Polynomial { degree, offset }
+    }
+}
+
+impl DotProductKernel for Polynomial {
+    fn name(&self) -> String {
+        format!("polynomial(p={}, r={})", self.degree, self.offset)
+    }
+
+    fn coeff(&self, n: u32) -> f64 {
+        if n > self.degree {
+            0.0
+        } else {
+            binomial(self.degree, n) * self.offset.powi((self.degree - n) as i32)
+        }
+    }
+
+    fn f(&self, t: f64) -> f64 {
+        (t + self.offset).powi(self.degree as i32)
+    }
+
+    fn f_prime(&self, t: f64) -> f64 {
+        self.degree as f64 * (t + self.offset).powi(self.degree as i32 - 1)
+    }
+
+    fn max_order(&self) -> Option<u32> {
+        Some(self.degree)
+    }
+}
+
+/// Exponential dot product kernel `K(x, y) = exp(⟨x, y⟩ / σ²)`.
+///
+/// Maclaurin: `a_n = σ^(−2n) / n!`. Universal on compact sets
+/// (Steinwart 2001); the Gaussian RBF is its normalized version.
+#[derive(Clone, Copy, Debug)]
+pub struct Exponential {
+    /// Width parameter `σ²`.
+    pub sigma2: f64,
+}
+
+impl Exponential {
+    pub fn new(sigma2: f64) -> Self {
+        assert!(sigma2 > 0.0, "sigma^2 must be positive");
+        Exponential { sigma2 }
+    }
+}
+
+impl DotProductKernel for Exponential {
+    fn name(&self) -> String {
+        format!("exponential(sigma2={})", self.sigma2)
+    }
+
+    fn coeff(&self, n: u32) -> f64 {
+        // a_n = (1/sigma2)^n / n!, computed multiplicatively to avoid
+        // overflowing n! for large n.
+        let mut a = 1.0f64;
+        for i in 1..=n {
+            a *= 1.0 / (self.sigma2 * i as f64);
+        }
+        a
+    }
+
+    fn f(&self, t: f64) -> f64 {
+        (t / self.sigma2).exp()
+    }
+
+    fn f_prime(&self, t: f64) -> f64 {
+        (t / self.sigma2).exp() / self.sigma2
+    }
+}
+
+/// Vovk's real polynomial kernel
+/// `K(x, y) = (1 − ⟨x, y⟩^p) / (1 − ⟨x, y⟩) = Σ_{n<p} ⟨x, y⟩^n`.
+#[derive(Clone, Copy, Debug)]
+pub struct VovkReal {
+    pub degree: u32,
+}
+
+impl VovkReal {
+    pub fn new(degree: u32) -> Self {
+        assert!(degree >= 1);
+        VovkReal { degree }
+    }
+}
+
+impl DotProductKernel for VovkReal {
+    fn name(&self) -> String {
+        format!("vovk-real(p={})", self.degree)
+    }
+
+    fn coeff(&self, n: u32) -> f64 {
+        if n < self.degree {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    fn f(&self, t: f64) -> f64 {
+        if (t - 1.0).abs() < 1e-12 {
+            self.degree as f64 // limit of the geometric sum at t = 1
+        } else {
+            (1.0 - t.powi(self.degree as i32)) / (1.0 - t)
+        }
+    }
+
+    fn f_prime(&self, t: f64) -> f64 {
+        // d/dt Σ_{n<p} t^n = Σ_{1<=n<p} n t^(n-1)
+        let mut acc = 0.0;
+        let mut pow = 1.0;
+        for n in 1..self.degree {
+            acc += n as f64 * pow;
+            pow *= t;
+        }
+        acc
+    }
+
+    fn max_order(&self) -> Option<u32> {
+        Some(self.degree.saturating_sub(1))
+    }
+}
+
+/// Vovk's infinite polynomial kernel `K(x, y) = 1 / (1 − ⟨x, y⟩)`
+/// (`a_n = 1` for all n; radius of convergence 1 — use [`Scaled`] to keep
+/// data strictly inside it).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VovkInfinite;
+
+impl DotProductKernel for VovkInfinite {
+    fn name(&self) -> String {
+        "vovk-infinite".to_string()
+    }
+
+    fn coeff(&self, _n: u32) -> f64 {
+        1.0
+    }
+
+    fn f(&self, t: f64) -> f64 {
+        assert!(t.abs() < 1.0, "vovk-infinite defined only for |t| < 1, got {t}");
+        1.0 / (1.0 - t)
+    }
+
+    fn f_prime(&self, t: f64) -> f64 {
+        assert!(t.abs() < 1.0);
+        1.0 / ((1.0 - t) * (1.0 - t))
+    }
+
+    fn radius(&self) -> f64 {
+        1.0
+    }
+}
+
+/// The paper's scaling construction (§3, end): if `f` is defined only on
+/// `(−γ, γ)` pick `c > I/γ` and use `g(x) = f(x/c)`, implicitly scaling
+/// the data down by `c`. Maclaurin: `g`'s coefficients are `a_n / c^n`;
+/// the radius of convergence grows by `c`.
+#[derive(Clone, Debug)]
+pub struct Scaled<K> {
+    pub inner: K,
+    pub c: f64,
+}
+
+impl<K: DotProductKernel> Scaled<K> {
+    pub fn new(inner: K, c: f64) -> Self {
+        assert!(c > 0.0);
+        Scaled { inner, c }
+    }
+}
+
+impl<K: DotProductKernel> DotProductKernel for Scaled<K> {
+    fn name(&self) -> String {
+        format!("scaled(c={}, {})", self.c, self.inner.name())
+    }
+
+    fn coeff(&self, n: u32) -> f64 {
+        self.inner.coeff(n) / self.c.powi(n as i32)
+    }
+
+    fn f(&self, t: f64) -> f64 {
+        self.inner.f(t / self.c)
+    }
+
+    fn f_prime(&self, t: f64) -> f64 {
+        self.inner.f_prime(t / self.c) / self.c
+    }
+
+    fn radius(&self) -> f64 {
+        self.inner.radius() * self.c
+    }
+
+    fn max_order(&self) -> Option<u32> {
+        self.inner.max_order()
+    }
+}
+
+/// The §4.2 truncated kernel `K̃(x, y) = Σ_{n ≤ k} a_n ⟨x, y⟩^n`.
+///
+/// Satisfies Schoenberg's condition itself, so it is positive definite,
+/// and `sup |K̃ − K| ≤ Σ_{n>k} a_n R^{2n}` on `B_1(0, R)`.
+#[derive(Clone, Debug)]
+pub struct Truncated<K> {
+    pub inner: K,
+    pub order: u32,
+}
+
+impl<K: DotProductKernel> Truncated<K> {
+    pub fn new(inner: K, order: u32) -> Self {
+        Truncated { inner, order }
+    }
+}
+
+impl<K: DotProductKernel> DotProductKernel for Truncated<K> {
+    fn name(&self) -> String {
+        format!("truncated(k={}, {})", self.order, self.inner.name())
+    }
+
+    fn coeff(&self, n: u32) -> f64 {
+        if n <= self.order {
+            self.inner.coeff(n)
+        } else {
+            0.0
+        }
+    }
+
+    fn f(&self, t: f64) -> f64 {
+        // Finite Horner evaluation of the truncated series.
+        let mut acc = 0.0;
+        for n in (0..=self.order).rev() {
+            acc = acc * t + self.inner.coeff(n);
+        }
+        acc
+    }
+
+    fn f_prime(&self, t: f64) -> f64 {
+        let mut acc = 0.0;
+        for n in (1..=self.order).rev() {
+            acc = acc * t + n as f64 * self.inner.coeff(n);
+        }
+        acc
+    }
+
+    fn max_order(&self) -> Option<u32> {
+        Some(match self.inner.max_order() {
+            Some(m) => m.min(self.order),
+            None => self.order,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gram;
+    use crate::linalg::{min_eigenvalue_sym, Matrix};
+    use crate::rng::Rng;
+
+    /// Σ a_n t^n via the coefficients must reproduce the closed form.
+    fn check_series_consistency(k: &dyn DotProductKernel, t: f64, n_terms: u32, tol: f64) {
+        let mut acc = 0.0;
+        let mut pow = 1.0;
+        for n in 0..=n_terms {
+            acc += k.coeff(n) * pow;
+            pow *= t;
+        }
+        let direct = k.f(t);
+        assert!(
+            (acc - direct).abs() <= tol * (1.0 + direct.abs()),
+            "{}: series {acc} vs f {direct} at t={t}",
+            k.name()
+        );
+    }
+
+    /// Numerical derivative must match f_prime.
+    fn check_derivative(k: &dyn DotProductKernel, t: f64) {
+        let h = 1e-6;
+        let num = (k.f(t + h) - k.f(t - h)) / (2.0 * h);
+        let ana = k.f_prime(t);
+        assert!(
+            (num - ana).abs() < 1e-3 * (1.0 + ana.abs()),
+            "{}: f' numeric {num} vs analytic {ana} at t={t}",
+            k.name()
+        );
+    }
+
+    #[test]
+    fn all_kernels_series_and_derivative_consistent() {
+        let kernels: Vec<Box<dyn DotProductKernel>> = vec![
+            Box::new(Homogeneous::new(10)),
+            Box::new(Polynomial::new(10, 1.0)),
+            Box::new(Polynomial::new(3, 0.5)),
+            Box::new(Exponential::new(1.0)),
+            Box::new(Exponential::new(4.0)),
+            Box::new(VovkReal::new(6)),
+            Box::new(VovkInfinite),
+            Box::new(Scaled::new(VovkInfinite, 4.0)),
+            Box::new(Truncated::new(Exponential::new(1.0), 8)),
+        ];
+        for k in &kernels {
+            for &t in &[-0.5, -0.1, 0.0, 0.3, 0.8] {
+                check_series_consistency(k.as_ref(), t, 120, 1e-8);
+                check_derivative(k.as_ref(), t);
+            }
+        }
+    }
+
+    #[test]
+    fn all_coefficients_nonnegative() {
+        // Schoenberg's condition — every built-in kernel must satisfy it.
+        let kernels: Vec<Box<dyn DotProductKernel>> = vec![
+            Box::new(Homogeneous::new(7)),
+            Box::new(Polynomial::new(10, 1.0)),
+            Box::new(Exponential::new(0.5)),
+            Box::new(VovkReal::new(4)),
+            Box::new(VovkInfinite),
+            Box::new(Scaled::new(Exponential::new(1.0), 2.0)),
+            Box::new(Truncated::new(Polynomial::new(5, 1.0), 3)),
+        ];
+        for k in &kernels {
+            for n in 0..60 {
+                assert!(k.coeff(n) >= 0.0, "{} a_{n} < 0", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn gram_matrices_are_psd() {
+        // Theorem 1: these kernels are PD on the unit ball. Check the
+        // min eigenvalue of random Gram matrices.
+        let mut rng = Rng::seed_from(42);
+        let kernels: Vec<Box<dyn DotProductKernel>> = vec![
+            Box::new(Homogeneous::new(4)),
+            Box::new(Polynomial::new(6, 1.0)),
+            Box::new(Exponential::new(1.0)),
+            Box::new(VovkReal::new(5)),
+            Box::new(Scaled::new(VovkInfinite, 2.0)),
+        ];
+        for k in &kernels {
+            let n = 15;
+            let d = 5;
+            let mut rows = Vec::new();
+            for _ in 0..n {
+                let mut v: Vec<f32> = (0..d).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                crate::linalg::normalize(&mut v);
+                // stay strictly inside the unit ball
+                crate::linalg::scale(0.9, &mut v);
+                rows.push(v);
+            }
+            let x = Matrix::from_rows(&rows).unwrap();
+            let g = gram(k.as_ref(), &x);
+            let e = min_eigenvalue_sym(&g, 600);
+            assert!(e > -1e-3, "{} gram min eig {e}", k.name());
+        }
+    }
+
+    #[test]
+    fn polynomial_binomial_expansion() {
+        let k = Polynomial::new(10, 1.0);
+        // (1 + t)^10: a_0 = 1, a_1 = 10, a_2 = 45, sum at t=1 is 2^10.
+        assert_eq!(k.coeff(0), 1.0);
+        assert_eq!(k.coeff(1), 10.0);
+        assert_eq!(k.coeff(2), 45.0);
+        assert_eq!(k.coeff(11), 0.0);
+        let total: f64 = (0..=10).map(|n| k.coeff(n)).sum();
+        assert!((total - 1024.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn homogeneous_has_single_term() {
+        let k = Homogeneous::new(10);
+        assert_eq!(k.coeff(10), 1.0);
+        assert_eq!(k.coeff(9), 0.0);
+        assert_eq!(k.coeff(0), 0.0);
+        assert_eq!(k.max_order(), Some(10));
+        // H0/1 has nothing to absorb: a_0 = a_1 = 0.
+        assert_eq!(k.coeff(0) + k.coeff(1), 0.0);
+    }
+
+    #[test]
+    fn vovk_real_at_one_is_degree() {
+        let k = VovkReal::new(6);
+        assert!((k.f(1.0) - 6.0).abs() < 1e-9);
+        assert!((k.f(0.5) - (1.0 - 0.5f64.powi(6)) / 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_extends_radius() {
+        let k = Scaled::new(VovkInfinite, 4.0);
+        assert_eq!(k.radius(), 4.0);
+        // g(t) = 1 / (1 - t/4); safe at t = 2 where the raw kernel blows up.
+        assert!((k.f(2.0) - 2.0).abs() < 1e-12);
+        assert!((k.coeff(3) - 1.0 / 64.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn truncated_tail_bound_holds() {
+        // §4.2: sup over the ball of |K̃ - K| <= tail mass.
+        let inner = Exponential::new(1.0);
+        let k = Truncated::new(inner, 4);
+        let series = crate::kernels::MaclaurinSeries::materialize(&inner, 60, 1.0);
+        let bound = series.tail_mass(4);
+        let mut rng = Rng::seed_from(3);
+        for _ in 0..200 {
+            let t = rng.f64() * 2.0 - 1.0; // <x,y> in [-1, 1] for R = 1
+            let err = (k.f(t) - inner.f(t)).abs();
+            assert!(err <= bound + 1e-12, "err {err} > bound {bound} at t={t}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn vovk_infinite_rejects_out_of_radius() {
+        VovkInfinite.f(1.5);
+    }
+}

@@ -1,0 +1,68 @@
+//! # rfdot — Random Feature Maps for Dot Product Kernels
+//!
+//! A full-stack reproduction of Kar & Karnick, *"Random Feature Maps for
+//! Dot Product Kernels"* (AISTATS 2012): low-distortion randomized
+//! embeddings `Z: R^d -> R^D` such that `⟨Z(x), Z(y)⟩ ≈ f(⟨x, y⟩)` for any
+//! positive definite dot product kernel, together with everything needed
+//! to reproduce the paper's evaluation:
+//!
+//! * [`kernels`] — dot product kernel definitions and Maclaurin-series
+//!   machinery (Schoenberg characterization, Theorem 1).
+//! * [`maclaurin`] — the Random Maclaurin feature maps (Algorithm 1), the
+//!   H0/1 heuristic (§6.1), the truncated deterministic variant (§4.2)
+//!   and compositional kernels (Algorithm 2).
+//! * [`rff`] — Random Fourier Features (Rahimi & Recht 2007), used both
+//!   as the paper's main point of comparison and as the black-box inner
+//!   map for compositional kernels.
+//! * [`svm`] — the learning substrates the paper benchmarks with: a
+//!   kernel SMO dual solver (LIBSVM stand-in) and a dual coordinate
+//!   descent linear SVM (LIBLINEAR stand-in).
+//! * [`data`] — dataset substrate: synthetic surrogates for the paper's
+//!   six UCI datasets plus a LIBSVM-format parser for real data.
+//! * [`coordinator`] + [`runtime`] — the serving layer: a dynamic
+//!   batcher/router in front of AOT-compiled JAX/Pallas artifacts
+//!   executed through PJRT (the `xla` crate). Python is build-time only.
+//! * [`bench`], [`prop`], [`metrics`], [`config`], [`rng`], [`linalg`] —
+//!   infrastructure substrates (no external crates are reachable in the
+//!   build environment, so benchmarking, property testing, config
+//!   parsing and RNG are provided in-tree).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use rfdot::kernels::Polynomial;
+//! use rfdot::maclaurin::{FeatureMap, RandomMaclaurin, RmConfig};
+//! use rfdot::rng::Rng;
+//!
+//! // K(x, y) = (1 + <x, y>)^10 approximated with 512 random features.
+//! let kernel = Polynomial::new(10, 1.0);
+//! let mut rng = Rng::seed_from(42);
+//! let map = RandomMaclaurin::sample(&kernel, 8, 512, RmConfig::default(), &mut rng);
+//! let x = vec![0.1f32; 8];
+//! let z = map.transform(&x);
+//! assert_eq!(z.len(), 512);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod kernels;
+pub mod linalg;
+pub mod maclaurin;
+pub mod metrics;
+pub mod nystrom;
+pub mod prop;
+pub mod rff;
+pub mod rng;
+pub mod runtime;
+pub mod svm;
+pub mod tensorsketch;
+pub mod unsup;
+
+mod error;
+pub use error::{Error, Result};
+
+/// Library version (mirrors the crate version).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

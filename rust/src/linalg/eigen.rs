@@ -1,0 +1,217 @@
+//! Symmetric eigendecomposition (cyclic Jacobi) — substrate for the
+//! Nyström baseline (`K_mm^{-1/2}`) and kernel PCA.
+//!
+//! Jacobi is O(n³) per sweep but robust and dependency-free; the
+//! landmark counts used here (m ≤ a few hundred) keep it comfortably
+//! fast.
+
+use super::Matrix;
+
+/// Eigendecomposition of a symmetric matrix: `a = V diag(λ) Vᵀ`.
+/// Returns (eigenvalues descending, V with eigenvectors as *columns*).
+pub fn eigh(a: &Matrix, max_sweeps: usize, tol: f64) -> (Vec<f64>, Matrix) {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "matrix must be square");
+    // Work in f64 for stability.
+    let mut m: Vec<f64> = a.as_slice().iter().map(|&v| v as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let off = |m: &[f64]| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    s += m[i * n + j] * m[i * n + j];
+                }
+            }
+        }
+        s.sqrt()
+    };
+
+    for _ in 0..max_sweeps {
+        if off(&m) < tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q.
+                for k in 0..n {
+                    let akp = m[k * n + p];
+                    let akq = m[k * n + q];
+                    m[k * n + p] = c * akp - s * akq;
+                    m[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[p * n + k];
+                    let aqk = m[q * n + k];
+                    m[p * n + k] = c * apk - s * aqk;
+                    m[q * n + k] = s * apk + c * aqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract, sort descending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[i * n + i], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).expect("finite eigenvalues"));
+    let eigvals: Vec<f64> = pairs.iter().map(|&(l, _)| l).collect();
+    let mut vecs = Matrix::zeros(n, n);
+    for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            vecs.set(r, new_col, v[r * n + old_col] as f32);
+        }
+    }
+    (eigvals, vecs)
+}
+
+/// `a^(−1/2)` for a symmetric PSD matrix, with eigenvalue floor `eps`
+/// (pseudo-inverse on the near-null space) — the Nyström normalizer.
+pub fn inv_sqrt_psd(a: &Matrix, eps: f64) -> Matrix {
+    let n = a.rows();
+    let (vals, vecs) = eigh(a, 30, 1e-10);
+    // B = V diag(1/sqrt(max(λ, eps_rel))) Vᵀ, dropping tiny/negative λ.
+    let lmax = vals.first().copied().unwrap_or(0.0).max(0.0);
+    let floor = (eps * lmax.max(1e-30)).max(1e-30);
+    let mut out = Matrix::zeros(n, n);
+    for k in 0..n {
+        let lk = vals[k];
+        if lk <= floor {
+            continue; // pseudo-inverse: skip the null space
+        }
+        let w = 1.0 / lk.sqrt();
+        for i in 0..n {
+            let vik = vecs.get(i, k) as f64;
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                let add = (w * vik * vecs.get(j, k) as f64) as f32;
+                out.set(i, j, out.get(i, j) + add);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_sym(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed_from(seed);
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.f32() - 0.5;
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn reconstructs_diagonal_matrix() {
+        let mut a = Matrix::zeros(3, 3);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, 1.0);
+        a.set(2, 2, 2.0);
+        let (vals, _) = eigh(&a, 20, 1e-12);
+        assert!((vals[0] - 3.0).abs() < 1e-6);
+        assert!((vals[1] - 2.0).abs() < 1e-6);
+        assert!((vals[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decomposition_reconstructs_matrix() {
+        let a = random_sym(8, 1);
+        let (vals, vecs) = eigh(&a, 30, 1e-12);
+        // A ?= V diag(vals) V^T
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut s = 0.0f64;
+                for k in 0..8 {
+                    s += vals[k] * vecs.get(i, k) as f64 * vecs.get(j, k) as f64;
+                }
+                assert!(
+                    (s - a.get(i, j) as f64).abs() < 1e-4,
+                    "({i},{j}): {s} vs {}",
+                    a.get(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_sym(10, 2);
+        let (_, vecs) = eigh(&a, 30, 1e-12);
+        for p in 0..10 {
+            for q in 0..10 {
+                let dot: f64 = (0..10)
+                    .map(|k| vecs.get(k, p) as f64 * vecs.get(k, q) as f64)
+                    .sum();
+                let expect = if p == q { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-5, "({p},{q}): {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn inv_sqrt_of_psd() {
+        // Build PSD A = B B^T, check (A^-1/2)^2 · A ≈ I on the range.
+        let b = random_sym(6, 3);
+        let a = b.matmul(&b.transpose()).unwrap();
+        let s = inv_sqrt_psd(&a, 1e-12);
+        let s2 = s.matmul(&s).unwrap();
+        let prod = s2.matmul(&a).unwrap();
+        for i in 0..6 {
+            for j in 0..6 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (prod.get(i, j) - expect).abs() < 1e-2,
+                    "({i},{j}): {}",
+                    prod.get(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn inv_sqrt_handles_rank_deficiency() {
+        // Rank-1 PSD matrix: pseudo-inverse must not blow up.
+        let mut a = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                a.set(i, j, 1.0); // ones = rank 1, eigenvalue 4
+            }
+        }
+        let s = inv_sqrt_psd(&a, 1e-9);
+        for v in s.as_slice() {
+            assert!(v.is_finite());
+        }
+        // A^{-1/2} of ones/4-projector scaled: s·a·s should be the projector.
+        let p = s.matmul(&a).unwrap().matmul(&s).unwrap();
+        assert!((p.get(0, 0) - 0.25).abs() < 1e-3, "{}", p.get(0, 0));
+    }
+}

@@ -1,0 +1,144 @@
+//! Iterative radix-2 complex FFT — substrate for the TensorSketch
+//! baseline (circular convolution of count sketches).
+
+/// In-place iterative Cooley-Tukey FFT over interleaved complex buffers
+/// (`re`, `im`); `inverse` applies the conjugate transform *and* the 1/n
+/// scale. Lengths must be powers of two.
+pub fn fft(re: &mut [f32], im: &mut [f32], inverse: bool) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(n.is_power_of_two(), "fft length must be a power of two, got {n}");
+    if n <= 1 {
+        return;
+    }
+
+    // Bit-reversal permutation.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = i.reverse_bits() >> (usize::BITS - bits);
+        if j > i {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+
+    let sign = if inverse { 1.0f64 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        for start in (0..n).step_by(len) {
+            let mut cur_r = 1.0f64;
+            let mut cur_i = 0.0f64;
+            for k in 0..len / 2 {
+                let a = start + k;
+                let b = start + k + len / 2;
+                let (ar, ai) = (re[a] as f64, im[a] as f64);
+                let (br, bi) = (re[b] as f64, im[b] as f64);
+                let tr = br * cur_r - bi * cur_i;
+                let ti = br * cur_i + bi * cur_r;
+                re[a] = (ar + tr) as f32;
+                im[a] = (ai + ti) as f32;
+                re[b] = (ar - tr) as f32;
+                im[b] = (ai - ti) as f32;
+                let nr = cur_r * wr - cur_i * wi;
+                cur_i = cur_r * wi + cur_i * wr;
+                cur_r = nr;
+            }
+        }
+        len <<= 1;
+    }
+
+    if inverse {
+        let scale = 1.0 / n as f32;
+        for v in re.iter_mut() {
+            *v *= scale;
+        }
+        for v in im.iter_mut() {
+            *v *= scale;
+        }
+    }
+}
+
+/// Elementwise complex multiply: `(ar, ai) *= (br, bi)`.
+pub fn complex_mul_inplace(ar: &mut [f32], ai: &mut [f32], br: &[f32], bi: &[f32]) {
+    for k in 0..ar.len() {
+        let r = ar[k] * br[k] - ai[k] * bi[k];
+        let i = ar[k] * bi[k] + ai[k] * br[k];
+        ar[k] = r;
+        ai[k] = i;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        let mut rng = Rng::seed_from(1);
+        for n in [1usize, 2, 8, 64, 256] {
+            let orig: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            let mut re = orig.clone();
+            let mut im = vec![0.0f32; n];
+            fft(&mut re, &mut im, false);
+            fft(&mut re, &mut im, true);
+            for k in 0..n {
+                assert!((re[k] - orig[k]).abs() < 1e-4, "n={n} k={k}");
+                assert!(im[k].abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        let mut rng = Rng::seed_from(2);
+        let n = 16;
+        let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+        let mut re = x.clone();
+        let mut im = vec![0.0f32; n];
+        fft(&mut re, &mut im, false);
+        for k in 0..n {
+            let (mut sr, mut si) = (0.0f64, 0.0f64);
+            for t in 0..n {
+                let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+                sr += x[t] as f64 * ang.cos();
+                si += x[t] as f64 * ang.sin();
+            }
+            assert!((re[k] as f64 - sr).abs() < 1e-3, "k={k}: {} vs {sr}", re[k]);
+            assert!((im[k] as f64 - si).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn convolution_theorem() {
+        // Circular convolution via FFT equals the naive sum.
+        let n = 8;
+        let a: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin()).collect();
+        let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3).cos()).collect();
+        let mut naive = vec![0.0f32; n];
+        for i in 0..n {
+            for j in 0..n {
+                naive[(i + j) % n] += a[i] * b[j];
+            }
+        }
+        let (mut ar, mut ai) = (a.clone(), vec![0.0f32; n]);
+        let (mut br, mut bi) = (b.clone(), vec![0.0f32; n]);
+        fft(&mut ar, &mut ai, false);
+        fft(&mut br, &mut bi, false);
+        complex_mul_inplace(&mut ar, &mut ai, &br, &bi);
+        fft(&mut ar, &mut ai, true);
+        for k in 0..n {
+            assert!((ar[k] - naive[k]).abs() < 1e-4, "k={k}: {} vs {}", ar[k], naive[k]);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        let mut re = vec![0.0f32; 6];
+        let mut im = vec![0.0f32; 6];
+        fft(&mut re, &mut im, false);
+    }
+}

@@ -1,0 +1,260 @@
+//! Row-major dense `f32` matrix.
+
+use crate::{Error, Result};
+
+/// A dense row-major matrix of `f32`, the interchange layout for the
+/// feature engines, the SVM solvers and the PJRT literals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero-filled `rows × cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(
+                format!("{rows}x{cols} ({} elems)", rows * cols),
+                format!("{} elems", data.len()),
+            ));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Build from a row iterator of equal-length slices.
+    pub fn from_rows(rows: &[Vec<f32>]) -> Result<Self> {
+        if rows.is_empty() {
+            return Ok(Matrix::zeros(0, 0));
+        }
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            if r.len() != cols {
+                return Err(Error::shape(format!("row len {cols}"), format!("{}", r.len())));
+            }
+            data.extend_from_slice(r);
+        }
+        Ok(Matrix { rows: rows.len(), cols, data })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Whole backing buffer (row-major).
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the backing buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Cache-blocked GEMM: `C = A · B` (ikj loop order with a 64-wide
+    /// column block, which keeps the `B` panel in L1/L2).
+    pub fn matmul(&self, b: &Matrix) -> Result<Matrix> {
+        if self.cols != b.rows {
+            return Err(Error::shape(
+                format!("inner dim {} == {}", self.cols, b.rows),
+                "mismatch".to_string(),
+            ));
+        }
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = Matrix::zeros(m, n);
+        const JB: usize = 64;
+        for j0 in (0..n).step_by(JB) {
+            let j1 = (j0 + JB).min(n);
+            for i in 0..m {
+                let a_row = self.row(i);
+                let c_row = &mut c.data[i * n..(i + 1) * n];
+                for (kk, &a_ik) in a_row.iter().enumerate().take(k) {
+                    if a_ik == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b.data[kk * n..(kk + 1) * n];
+                    for j in j0..j1 {
+                        c_row[j] += a_ik * b_row[j];
+                    }
+                }
+            }
+        }
+        Ok(c)
+    }
+
+    /// `out = self · v` (matrix-vector).
+    pub fn matvec(&self, v: &[f32]) -> Result<Vec<f32>> {
+        if v.len() != self.cols {
+            return Err(Error::shape(format!("vec len {}", self.cols), format!("{}", v.len())));
+        }
+        Ok((0..self.rows).map(|i| super::dot(self.row(i), v)).collect())
+    }
+
+    /// Vertical concatenation.
+    pub fn vstack(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.cols {
+            return Err(Error::shape(format!("cols {}", self.cols), format!("{}", other.cols)));
+        }
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Matrix::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    /// Horizontal concatenation (row-wise append of columns).
+    pub fn hstack(&self, other: &Matrix) -> Result<Matrix> {
+        if self.rows != other.rows {
+            return Err(Error::shape(format!("rows {}", self.rows), format!("{}", other.rows)));
+        }
+        let cols = self.cols + other.cols;
+        let mut data = Vec::with_capacity(self.rows * cols);
+        for i in 0..self.rows {
+            data.extend_from_slice(self.row(i));
+            data.extend_from_slice(other.row(i));
+        }
+        Matrix::from_vec(self.rows, cols, data)
+    }
+
+    /// Copy of the sub-block of rows `[r0, r1)`.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Matrix {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// Maximum absolute entry difference against another matrix.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(m.get(1, 2), 6.0);
+        assert_eq!(m.row(0), &[1., 2., 3.]);
+        assert!(Matrix::from_vec(2, 2, vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn from_rows_validates() {
+        assert!(Matrix::from_rows(&[vec![1., 2.], vec![3.]]).is_err());
+        let m = Matrix::from_rows(&[vec![1., 2.], vec![3., 4.]]).unwrap();
+        assert_eq!(m.get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![1., 1., 1., 1.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.as_slice(), &[3., 3., 7., 7.]);
+        assert!(a.matmul(&Matrix::zeros(3, 3)).is_err());
+    }
+
+    #[test]
+    fn matmul_matches_naive_odd_shapes() {
+        let mut rng = crate::rng::Rng::seed_from(1);
+        let (m, k, n) = (7, 13, 70); // crosses the column-block boundary
+        let a = Matrix::from_vec(m, k, (0..m * k).map(|_| rng.f32() - 0.5).collect()).unwrap();
+        let b = Matrix::from_vec(k, n, (0..k * n).map(|_| rng.f32() - 0.5).collect()).unwrap();
+        let c = a.matmul(&b).unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                let naive: f32 = (0..k).map(|kk| a.get(i, kk) * b.get(kk, j)).sum();
+                assert!((c.get(i, j) - naive).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = crate::rng::Rng::seed_from(2);
+        let a = Matrix::from_vec(3, 5, (0..15).map(|_| rng.f32()).collect()).unwrap();
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Matrix::from_vec(2, 3, vec![1., 0., 2., 0., 1., 1.]).unwrap();
+        let v = vec![1., 2., 3.];
+        assert_eq!(a.matvec(&v).unwrap(), vec![7., 5.]);
+        assert!(a.matvec(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn stacking() {
+        let a = Matrix::from_vec(1, 2, vec![1., 2.]).unwrap();
+        let b = Matrix::from_vec(1, 2, vec![3., 4.]).unwrap();
+        assert_eq!(a.vstack(&b).unwrap().as_slice(), &[1., 2., 3., 4.]);
+        assert_eq!(a.hstack(&b).unwrap().as_slice(), &[1., 2., 3., 4.]);
+        assert_eq!(a.hstack(&b).unwrap().cols(), 4);
+        assert!(a.vstack(&Matrix::zeros(1, 3)).is_err());
+    }
+
+    #[test]
+    fn slice_rows_copies_block() {
+        let m = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let s = m.slice_rows(1, 3);
+        assert_eq!(s.as_slice(), &[3., 4., 5., 6.]);
+    }
+}

@@ -1,0 +1,207 @@
+//! Minimal dense linear algebra used across the stack.
+//!
+//! Row-major `f32` matrices (matching the PJRT buffer layout) plus the
+//! handful of BLAS-1/3 routines the solvers and feature maps need. The
+//! GEMM is cache-blocked; it is not trying to beat MKL, only to keep the
+//! native engine within a small factor of memory bandwidth so the
+//! benchmark *shapes* are honest.
+
+pub mod eigen;
+pub mod fft;
+pub mod matrix;
+
+pub use eigen::{eigh, inv_sqrt_psd};
+pub use matrix::Matrix;
+
+/// Dot product with f32 accumulation in 4 independent lanes (helps the
+/// auto-vectorizer; exact association differences are irrelevant at the
+/// tolerances this library tests).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let k = i * 4;
+        acc[0] += a[k] * b[k];
+        acc[1] += a[k + 1] * b[k + 1];
+        acc[2] += a[k + 2] * b[k + 2];
+        acc[3] += a[k + 3] * b[k + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for k in chunks * 4..a.len() {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+/// 1-norm.
+#[inline]
+pub fn norm1(x: &[f32]) -> f32 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// Normalize `x` to unit 2-norm in place; returns the original norm.
+/// Zero vectors are left untouched.
+pub fn normalize(x: &mut [f32]) -> f32 {
+    let n = norm2(x);
+    if n > 0.0 {
+        scale(1.0 / n, x);
+    }
+    n
+}
+
+/// Mean of a slice (f64 accumulation).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Smallest eigenvalue estimate of a symmetric matrix by shifted power
+/// iteration: run power iteration on `c·I − A` (with `c` = a Gershgorin
+/// upper bound on `λ_max`), whose top eigenvalue is `c − λ_min(A)`.
+///
+/// Used by the PSD property tests on kernel Gram matrices.
+pub fn min_eigenvalue_sym(a: &Matrix, iters: usize) -> f64 {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "matrix must be square");
+    if n == 0 {
+        return 0.0;
+    }
+    // Gershgorin bound on the spectral radius.
+    let mut c = 0.0f64;
+    for i in 0..n {
+        let row = a.row(i);
+        let r: f64 = row.iter().map(|v| v.abs() as f64).sum();
+        c = c.max(r);
+    }
+    if c == 0.0 {
+        return 0.0;
+    }
+    let mut v = vec![1.0f64 / (n as f64).sqrt(); n];
+    let mut w = vec![0.0f64; n];
+    let mut lambda_shifted = 0.0f64;
+    for _ in 0..iters {
+        // w = (c I - A) v
+        for i in 0..n {
+            let row = a.row(i);
+            let mut s = 0.0f64;
+            for j in 0..n {
+                s += row[j] as f64 * v[j];
+            }
+            w[i] = c * v[i] - s;
+        }
+        let nw = (w.iter().map(|x| x * x).sum::<f64>()).sqrt();
+        if nw == 0.0 {
+            return 0.0; // A = c I exactly on this subspace
+        }
+        lambda_shifted = nw;
+        for i in 0..n {
+            v[i] = w[i] / nw;
+        }
+    }
+    c - lambda_shifted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..131).map(|i| (i as f32 * 0.1).sin()).collect();
+        let b: Vec<f32> = (0..131).map(|i| (i as f32 * 0.2).cos()).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, vec![6.0, 12.0, 18.0]);
+    }
+
+    #[test]
+    fn normalize_unit() {
+        let mut x = vec![3.0, 4.0];
+        let n = normalize(&mut x);
+        assert_eq!(n, 5.0);
+        assert!((norm2(&x) - 1.0).abs() < 1e-6);
+        let mut z = vec![0.0, 0.0];
+        assert_eq!(normalize(&mut z), 0.0);
+    }
+
+    #[test]
+    fn stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((stddev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(stddev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn min_eig_diagonal() {
+        let mut a = Matrix::zeros(3, 3);
+        a.set(0, 0, 5.0);
+        a.set(1, 1, 2.0);
+        a.set(2, 2, -1.0);
+        let e = min_eigenvalue_sym(&a, 500);
+        assert!((e - (-1.0)).abs() < 1e-3, "e={e}");
+    }
+
+    #[test]
+    fn min_eig_psd_gram() {
+        // Gram matrix of random vectors is PSD.
+        let mut rng = crate::rng::Rng::seed_from(1);
+        let n = 12;
+        let d = 6;
+        let pts: Vec<Vec<f32>> =
+            (0..n).map(|_| (0..d).map(|_| rng.f32() - 0.5).collect()).collect();
+        let mut g = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                g.set(i, j, dot(&pts[i], &pts[j]));
+            }
+        }
+        let e = min_eigenvalue_sym(&g, 800);
+        assert!(e > -1e-4, "gram should be PSD, min eig {e}");
+    }
+}

@@ -1,0 +1,274 @@
+//! Algorithm 2: Random Maclaurin feature maps for **compositional
+//! kernels** `K_co(x, y) = K_dp(K(x, y)) = f(K(x, y))`.
+//!
+//! Instead of Rademacher projections (whose products estimate powers of
+//! the *dot product*), each output coordinate multiplies `N` independent
+//! draws of a black-box scalar feature map `W` for the inner kernel `K`:
+//! `E[W(x)W(y)] = K(x, y)` makes `Π_j W_j(x) · Π_j W_j(y)` an unbiased
+//! estimate of `K(x, y)^N`, and the same external-measure reweighting as
+//! Algorithm 1 assembles `f(K(x, y))`. The paper's assumptions on `W`
+//! (unbiased, bounded by `√C_W`, Lipschitz on expectation — §5, items
+//! 4–6) are captured by [`ScalarMap`] / [`ScalarMapFactory`];
+//! [`crate::rff::RffScalarFactory`] realizes them for the Gaussian RBF.
+//!
+//! Note the paper's observation that Algorithm 1 *is* the special case
+//! where the inner map is a Rademacher projection (`W(x) = ω^T x`).
+
+use super::rm::RmConfig;
+use super::FeatureMap;
+use crate::kernels::DotProductKernel;
+use crate::rng::{Geometric, Rng};
+
+/// A single sampled scalar feature `W: R^d → R` for the inner kernel.
+pub trait ScalarMap: Send + Sync {
+    /// Evaluate `W(x)`.
+    fn eval(&self, x: &[f32]) -> f32;
+
+    /// `sup_x |W(x)| = √C_W` (assumption 5 of §5).
+    fn bound(&self) -> f64;
+}
+
+/// The black-box feature map selection routine `A` of §5: each call
+/// returns an independent scalar feature map for the inner kernel `K`.
+pub trait ScalarMapFactory: Send + Sync {
+    type Map: ScalarMap;
+
+    /// Input dimensionality the maps accept.
+    fn input_dim(&self) -> usize;
+
+    /// Draw one independent scalar map.
+    fn sample_scalar(&self, rng: &mut Rng) -> Self::Map;
+
+    /// The inner kernel `K(x, y) = E[W(x)W(y)]` (used by tests/benches).
+    fn kernel(&self, x: &[f32], y: &[f32]) -> f64;
+
+    /// `√C_W` for the maps this factory draws.
+    fn bound(&self) -> f64;
+}
+
+/// A sampled compositional feature map (Algorithm 2).
+pub struct CompositionalMaclaurin<F: ScalarMapFactory> {
+    factory: F,
+    n_features: usize,
+    /// `sqrt(a_N / P[N]) / sqrt(D)` per feature.
+    weights: Vec<f32>,
+    /// Feature `i` multiplies `maps[offsets[i]..offsets[i+1]]`.
+    offsets: Vec<u32>,
+    maps: Vec<F::Map>,
+    kernel_name: String,
+}
+
+impl<F: ScalarMapFactory> CompositionalMaclaurin<F> {
+    /// Sample a map for `f(K(·,·))` where `f` is `outer`'s Maclaurin
+    /// function and `K` is the kernel realized by `factory`.
+    pub fn sample(
+        outer: &dyn DotProductKernel,
+        factory: F,
+        n_features: usize,
+        config: RmConfig,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(n_features > 0);
+        assert!(!config.h01, "H0/1 applies to dot-product maps only");
+        let measure = Geometric::new(config.p);
+        let max_order = match outer.max_order() {
+            Some(m) => m.min(config.max_order),
+            None => config.max_order,
+        };
+        let scale = 1.0 / (n_features as f64).sqrt();
+        let mut weights = Vec::with_capacity(n_features);
+        let mut offsets = vec![0u32];
+        let mut maps = Vec::new();
+        for _ in 0..n_features {
+            let n = measure.sample_capped(max_order, rng);
+            let inv_pmf = 1.0 / measure.pmf_capped(n, max_order);
+            let w = (outer.coeff(n) * inv_pmf).sqrt() * scale;
+            weights.push(w as f32);
+            for _ in 0..n {
+                maps.push(factory.sample_scalar(rng));
+            }
+            offsets.push(maps.len() as u32);
+        }
+        let kernel_name = format!("compositional({})", outer.name());
+        CompositionalMaclaurin { factory, n_features, weights, offsets, maps, kernel_name }
+    }
+
+    /// Order (number of inner-map factors) of feature `i`.
+    pub fn order(&self, i: usize) -> u32 {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    /// The factory the map was sampled from.
+    pub fn factory(&self) -> &F {
+        &self.factory
+    }
+
+    pub fn kernel_name(&self) -> &str {
+        &self.kernel_name
+    }
+
+    /// Lemma 13 bound: `|Z(x)Z(y)| ≤ p·f(p·C_W)` per coordinate (at the
+    /// normalized measure, `p/(p−1)·f(p·C_W)`).
+    pub fn estimator_bound(&self, outer: &dyn DotProductKernel, p: f64) -> f64 {
+        let c_w = self.factory.bound() * self.factory.bound();
+        outer.f(p * c_w) * p / (p - 1.0)
+    }
+}
+
+impl<F: ScalarMapFactory> FeatureMap for CompositionalMaclaurin<F> {
+    fn input_dim(&self) -> usize {
+        self.factory.input_dim()
+    }
+
+    fn output_dim(&self) -> usize {
+        self.n_features
+    }
+
+    fn transform_into(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.input_dim(), "input dim mismatch");
+        assert_eq!(out.len(), self.n_features, "output dim mismatch");
+        for i in 0..self.n_features {
+            let (lo, hi) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
+            let mut prod = self.weights[i];
+            for m in &self.maps[lo..hi] {
+                prod *= m.eval(x);
+            }
+            out[i] = prod;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Exponential, Polynomial};
+    use crate::linalg::dot;
+    use crate::rff::RffScalarFactory;
+    use crate::rng::Rng;
+
+    fn unit_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        crate::linalg::normalize(&mut v);
+        v
+    }
+
+    /// K_co(x, y) = f(K_rbf(x, y)) computed exactly.
+    fn exact_compositional(
+        outer: &dyn crate::kernels::DotProductKernel,
+        gamma: f64,
+        x: &[f32],
+        y: &[f32],
+    ) -> f64 {
+        outer.f(crate::rff::rbf(gamma, x, y))
+    }
+
+    #[test]
+    fn unbiased_for_poly_of_rbf() {
+        // K_co = (1 + K_rbf)^3: average <Z(x), Z(y)> over many maps.
+        let mut rng = Rng::seed_from(1);
+        let outer = Polynomial::new(3, 1.0);
+        let gamma = 0.8;
+        let d = 5;
+        let x = unit_vec(d, 2);
+        let y = unit_vec(d, 3);
+        let exact = exact_compositional(&outer, gamma, &x, &y);
+        let maps = 300;
+        let mut acc = 0.0;
+        for _ in 0..maps {
+            let map = CompositionalMaclaurin::sample(
+                &outer,
+                RffScalarFactory::new(gamma, d),
+                64,
+                RmConfig::default(),
+                &mut rng,
+            );
+            acc += dot(&map.transform(&x), &map.transform(&y)) as f64;
+        }
+        let mean = acc / maps as f64;
+        assert!((mean - exact).abs() < 0.2, "mean {mean} vs exact {exact}");
+    }
+
+    #[test]
+    fn unbiased_for_exp_of_rbf() {
+        let mut rng = Rng::seed_from(4);
+        let outer = Exponential::new(2.0);
+        let gamma = 1.0;
+        let d = 4;
+        let x = unit_vec(d, 5);
+        let y = unit_vec(d, 6);
+        let exact = exact_compositional(&outer, gamma, &x, &y);
+        let maps = 300;
+        let mut acc = 0.0;
+        for _ in 0..maps {
+            let map = CompositionalMaclaurin::sample(
+                &outer,
+                RffScalarFactory::new(gamma, d),
+                64,
+                RmConfig::default(),
+                &mut rng,
+            );
+            acc += dot(&map.transform(&x), &map.transform(&y)) as f64;
+        }
+        let mean = acc / maps as f64;
+        assert!((mean - exact).abs() < 0.15, "mean {mean} vs exact {exact}");
+    }
+
+    #[test]
+    fn estimator_bounded_lemma13() {
+        let mut rng = Rng::seed_from(7);
+        let outer = Exponential::new(2.0);
+        let d = 6;
+        let n = 128;
+        let map = CompositionalMaclaurin::sample(
+            &outer,
+            RffScalarFactory::new(1.0, d),
+            n,
+            RmConfig::default(),
+            &mut rng,
+        );
+        let bound = map.estimator_bound(&outer, 2.0);
+        for s in 0..30 {
+            let x = unit_vec(d, 100 + s);
+            let y = unit_vec(d, 200 + s);
+            let zx = map.transform(&x);
+            let zy = map.transform(&y);
+            for i in 0..n {
+                let v = (zx[i] * zy[i]).abs() as f64 * n as f64;
+                assert!(v <= bound * (1.0 + 1e-5), "feature {i}: {v} > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn orders_match_offsets() {
+        let mut rng = Rng::seed_from(9);
+        let outer = Polynomial::new(4, 1.0);
+        let map = CompositionalMaclaurin::sample(
+            &outer,
+            RffScalarFactory::new(1.0, 3),
+            32,
+            RmConfig::default(),
+            &mut rng,
+        );
+        let total: u32 = (0..32).map(|i| map.order(i)).sum();
+        assert_eq!(total, map.maps.len() as u32);
+        for i in 0..32 {
+            assert!(map.order(i) <= 4, "order capped by outer degree");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn h01_is_rejected() {
+        let mut rng = Rng::seed_from(1);
+        let outer = Polynomial::new(2, 1.0);
+        CompositionalMaclaurin::sample(
+            &outer,
+            RffScalarFactory::new(1.0, 3),
+            8,
+            RmConfig::default().with_h01(true),
+            &mut rng,
+        );
+    }
+}

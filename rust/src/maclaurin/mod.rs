@@ -1,0 +1,115 @@
+//! Random Maclaurin feature maps — the paper's contribution.
+//!
+//! * [`RandomMaclaurin`] — Algorithm 1: randomized embeddings
+//!   `Z: R^d → R^D` with `⟨Z(x), Z(y)⟩ ≈ f(⟨x, y⟩)` for any positive
+//!   definite dot product kernel, including the **H0/1** heuristic
+//!   (§6.1) and the **truncated** variant (§4.2).
+//! * [`compositional`] — Algorithm 2: feature maps for
+//!   `K_co(x, y) = f(K(x, y))` given black-box scalar feature maps for
+//!   the inner kernel `K`.
+//! * [`FeatureMap`] — the embedding interface shared by all maps (and by
+//!   [`crate::rff`]), consumed by the SVM pipelines, the coordinator and
+//!   the bench harness.
+//! * [`serialize`] — a canonical binary wire format for sampled maps, so
+//!   the Rust native engine, the PJRT artifact path and the Python
+//!   oracle all evaluate the *same* map (same seed ⇒ same bytes ⇒ same
+//!   features to float tolerance).
+
+pub mod compositional;
+pub mod rm;
+pub mod serialize;
+
+pub use compositional::{CompositionalMaclaurin, ScalarMap, ScalarMapFactory};
+pub use rm::{RandomMaclaurin, RmConfig};
+
+use crate::linalg::Matrix;
+
+/// A (possibly randomized, already-sampled) feature embedding
+/// `R^input_dim → R^output_dim`.
+pub trait FeatureMap: Send + Sync {
+    /// Input dimensionality `d`.
+    fn input_dim(&self) -> usize;
+
+    /// Output dimensionality (`D`, or `1 + d + D` with H0/1).
+    fn output_dim(&self) -> usize;
+
+    /// Apply the map to one vector, writing into `out`
+    /// (`out.len() == output_dim()`).
+    fn transform_into(&self, x: &[f32], out: &mut [f32]);
+
+    /// Apply the map to one vector.
+    fn transform(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.output_dim()];
+        self.transform_into(x, &mut out);
+        out
+    }
+
+    /// Apply the map to every row of `x`.
+    fn transform_batch(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.input_dim(), "input dim mismatch");
+        let mut out = Matrix::zeros(x.rows(), self.output_dim());
+        for i in 0..x.rows() {
+            let row = x.row(i);
+            // Split borrow: rows of `out` are disjoint.
+            self.transform_into(row, out.row_mut(i));
+        }
+        out
+    }
+}
+
+/// Approximate Gram matrix `⟨Z(x_i), Z(x_j)⟩` of a feature map over the
+/// rows of `x` — compared against [`crate::kernels::gram`] in the
+/// Figure 1 experiments.
+pub fn feature_gram(map: &dyn FeatureMap, x: &Matrix) -> Matrix {
+    let z = map.transform_batch(x);
+    let n = z.rows();
+    let mut g = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let v = crate::linalg::dot(z.row(i), z.row(j));
+            g.set(i, j, v);
+            g.set(j, i, v);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Polynomial;
+    use crate::rng::Rng;
+
+    #[test]
+    fn transform_batch_matches_single() {
+        let mut rng = Rng::seed_from(1);
+        let k = Polynomial::new(3, 1.0);
+        let map = RandomMaclaurin::sample(&k, 6, 64, RmConfig::default(), &mut rng);
+        let x = Matrix::from_rows(&[vec![0.1, 0.2, -0.1, 0.0, 0.3, -0.2], vec![0.0; 6]]).unwrap();
+        let zb = map.transform_batch(&x);
+        for i in 0..2 {
+            let zi = map.transform(x.row(i));
+            assert_eq!(zb.row(i), &zi[..]);
+        }
+    }
+
+    #[test]
+    fn feature_gram_is_symmetric() {
+        let mut rng = Rng::seed_from(2);
+        let k = Polynomial::new(2, 1.0);
+        let map = RandomMaclaurin::sample(&k, 4, 32, RmConfig::default(), &mut rng);
+        let x = Matrix::from_rows(&[
+            vec![0.5, 0.0, 0.0, 0.1],
+            vec![0.0, 0.5, 0.1, 0.0],
+            vec![0.2, 0.2, 0.2, 0.2],
+        ])
+        .unwrap();
+        let g = feature_gram(&map, &x);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(g.get(i, j), g.get(j, i));
+            }
+            assert!(g.get(i, i) >= 0.0); // ⟨Z, Z⟩ ≥ 0
+        }
+    }
+}

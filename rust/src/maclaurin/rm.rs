@@ -1,0 +1,768 @@
+//! Algorithm 1: the Random Maclaurin feature map.
+//!
+//! For each of `D` output coordinates:
+//! 1. draw an order `N` from the external measure `P[N=n] ∝ p^{-(n+1)}`
+//!    (normalized geometric; exactly the paper's measure at `p = 2`);
+//! 2. draw `N` Rademacher vectors `ω_1..ω_N ∈ {±1}^d`;
+//! 3. emit `Z_i(x) = w_N · Π_{j≤N} ω_j^T x` with
+//!    `w_N = sqrt(a_N / P[N=N])` (`= sqrt(a_N p^{N+1})` at `p = 2`).
+//!
+//! The concatenation `Z = (Z_1..Z_D)/√D` satisfies
+//! `E⟨Z(x), Z(y)⟩ = f(⟨x, y⟩)` (Lemma 7), `|Z_i(x)Z_i(y)| ≤ C_Ω` with
+//! `C_Ω = p·f(pR²)` at `p = 2` (Lemma 8), and the uniform convergence
+//! bound of Theorem 12.
+//!
+//! With **H0/1** (§6.1) the `n = 0` and `n = 1` terms are computed
+//! exactly instead of estimated: the output is
+//! `[√a_0, √a_1·x, random features for N ≥ 2]`, drawing the random
+//! orders from the conditional law `P[N | N ≥ 2]` (memorylessness makes
+//! that `2 + Geometric`). The constant coordinate carries the `a_0` term
+//! so a bias-free linear model can absorb it, as the paper absorbs it
+//! into the SVM offset.
+
+use super::FeatureMap;
+use crate::kernels::DotProductKernel;
+use crate::rng::{Geometric, RademacherMatrix, Rng};
+
+/// Sampling configuration for [`RandomMaclaurin`].
+#[derive(Clone, Copy, Debug)]
+pub struct RmConfig {
+    /// External measure parameter `p > 1` (paper recommends 2).
+    pub p: f64,
+    /// Use the H0/1 heuristic (§6.1): exact constant + linear terms,
+    /// random features only for orders ≥ 2.
+    pub h01: bool,
+    /// Hard cap on sampled orders. At `p = 2` the probability of ever
+    /// seeing `N > 30` across a million features is < 1e-3, and the
+    /// clamped estimator's bias is bounded by the tail mass
+    /// `Σ_{n>cap} a_n R^{2n} ≤ f(R²)/2^{cap+1}`-ish — far below float
+    /// noise for the defaults. A finite cap is also what makes the
+    /// fixed-shape AOT artifact possible (orders become a padded axis).
+    pub max_order: u32,
+    /// Restrict the external measure to orders with `a_n > 0`,
+    /// renormalizing (importance sampling over the kernel's support).
+    /// Still exactly unbiased, never increases any per-feature weight,
+    /// and avoids spending features on identically-zero terms — without
+    /// this, a homogeneous `⟨x,y⟩^10` kernel gets a useful (order-10)
+    /// feature only once per `2^11` draws and the Figure-1a error curve
+    /// cannot decay. `bench fig1 --ablation` compares both. Default on.
+    pub restrict_support: bool,
+}
+
+impl Default for RmConfig {
+    fn default() -> Self {
+        RmConfig { p: 2.0, h01: false, max_order: 30, restrict_support: true }
+    }
+}
+
+impl RmConfig {
+    pub fn with_h01(mut self, on: bool) -> Self {
+        self.h01 = on;
+        self
+    }
+
+    pub fn with_p(mut self, p: f64) -> Self {
+        self.p = p;
+        self
+    }
+
+    pub fn with_max_order(mut self, cap: u32) -> Self {
+        self.max_order = cap;
+        self
+    }
+
+    pub fn with_restrict_support(mut self, on: bool) -> Self {
+        self.restrict_support = on;
+        self
+    }
+}
+
+/// The discrete order distribution actually sampled from: the capped
+/// geometric measure, optionally restricted to the kernel's support and
+/// renormalized. `weight(n) = a_n / P[N = n]` stays an exact importance
+/// weight in every variant.
+struct OrderTable {
+    /// (order, emission probability) — probabilities sum to 1.
+    entries: Vec<(u32, f64)>,
+    /// CDF for inverse-transform sampling.
+    cdf: Vec<f64>,
+}
+
+impl OrderTable {
+    fn build(
+        kernel: &dyn DotProductKernel,
+        measure: &Geometric,
+        min_order: u32,
+        max_order: u32,
+        restrict_support: bool,
+    ) -> Option<OrderTable> {
+        // Raw emission mass of order n under the (possibly H0/1-shifted)
+        // capped geometric measure.
+        let mass = |n: u32| measure.pmf_capped(n - min_order, max_order - min_order);
+        let mut entries: Vec<(u32, f64)> = (min_order..=max_order)
+            .filter(|&n| !restrict_support || kernel.coeff(n) > 0.0)
+            .map(|n| (n, mass(n)))
+            .collect();
+        let z: f64 = entries.iter().map(|(_, m)| m).sum();
+        if entries.is_empty() || z <= 0.0 {
+            return None;
+        }
+        for (_, m) in entries.iter_mut() {
+            *m /= z;
+        }
+        let mut cdf = Vec::with_capacity(entries.len());
+        let mut acc = 0.0;
+        for (_, m) in &entries {
+            acc += m;
+            cdf.push(acc);
+        }
+        Some(OrderTable { entries, cdf })
+    }
+
+    /// Draw (order, emission probability).
+    fn sample(&self, rng: &mut Rng) -> (u32, f64) {
+        let u = rng.f64();
+        let idx = self.cdf.partition_point(|&c| c < u).min(self.entries.len() - 1);
+        self.entries[idx]
+    }
+}
+
+/// A sampled Random Maclaurin feature map (Algorithm 1).
+///
+/// Immutable after sampling; `transform*` is the hot path. All the
+/// Rademacher vectors of all features live in one bit-packed
+/// [`RademacherMatrix`]; feature `i` owns the row range
+/// `offsets[i]..offsets[i+1]` (its order is the range length).
+#[derive(Clone, Debug)]
+pub struct RandomMaclaurin {
+    d: usize,
+    /// Number of random coordinates `D` (excludes H0/1 exact terms).
+    n_random: usize,
+    config: RmConfig,
+    /// Sampled order `N_i` per random feature.
+    orders: Vec<u32>,
+    /// `sqrt(a_N / P[N]) / sqrt(D)` per random feature (the `1/√D`
+    /// concatenation scale is folded in).
+    weights: Vec<f32>,
+    /// Row offsets into `omegas`: feature `i` uses rows
+    /// `offsets[i]..offsets[i+1]`.
+    offsets: Vec<u32>,
+    /// All Rademacher vectors, bit-packed (canonical/serialized form).
+    omegas: RademacherMatrix,
+    /// Lazily expanded `d × rows` dense ±1 matrix (column per omega
+    /// row): the hot path computes all projections as one GEMM
+    /// `X · Ω^T`, which vectorizes ~7× better than per-bit sign flips
+    /// (see EXPERIMENTS.md §Perf) and mirrors the MXU formulation the
+    /// Pallas kernel uses on TPU.
+    dense_t: std::sync::OnceLock<crate::linalg::Matrix>,
+    /// `√a_0` — the H0/1 constant coordinate (0 when h01 is off).
+    w_const: f32,
+    /// `√a_1` — the H0/1 linear block scale (0 when h01 is off).
+    w_linear: f32,
+    /// Kernel name (for artifacts manifests / debugging).
+    kernel_name: String,
+}
+
+impl RandomMaclaurin {
+    /// Sample a map for `kernel` on `R^d` with `n_random` random
+    /// features. With `config.h01` the output dimension is
+    /// `1 + d + n_random`, otherwise `n_random`.
+    pub fn sample(
+        kernel: &dyn DotProductKernel,
+        d: usize,
+        n_random: usize,
+        config: RmConfig,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(d > 0 && n_random > 0, "d and D must be positive");
+        let measure = Geometric::new(config.p);
+        let max_order = match kernel.max_order() {
+            // Never sample orders whose coefficient is identically zero
+            // past the polynomial's degree — they would waste features on
+            // exact zeros.
+            Some(m) => m.min(config.max_order),
+            None => config.max_order,
+        };
+
+        let mut orders = Vec::with_capacity(n_random);
+        let mut weights = Vec::with_capacity(n_random);
+        let mut offsets = Vec::with_capacity(n_random + 1);
+        offsets.push(0u32);
+        let scale = 1.0 / (n_random as f64).sqrt();
+
+        // Emission law: capped geometric (tail mass on the cap, keeping
+        // the estimator exactly unbiased for the order-cap truncation of
+        // the kernel), shifted to N >= 2 under H0/1 (memorylessness:
+        // P[N = n | N >= 2] = pmf(n − 2)), optionally restricted to the
+        // kernel's support orders. The importance weight always divides
+        // by the *actual* emission probability, so every variant stays
+        // unbiased.
+        let min_order = if config.h01 { 2 } else { 0 };
+        let table = if max_order >= min_order {
+            OrderTable::build(kernel, &measure, min_order, max_order, config.restrict_support)
+        } else {
+            None
+        };
+
+        let mut total_rows = 0u32;
+        for _ in 0..n_random {
+            let (n, a_n, emit_p) = match &table {
+                Some(t) => {
+                    let (n, p) = t.sample(rng);
+                    (n, kernel.coeff(n), p)
+                }
+                // Degenerate kernel (no support above min_order): emit
+                // identically-zero features — correct, since the exact
+                // prefix terms carry the whole kernel.
+                None => (0, 0.0, 1.0),
+            };
+            let w = (a_n / emit_p).sqrt() * scale;
+            orders.push(n);
+            weights.push(w as f32);
+            total_rows += n;
+            offsets.push(total_rows);
+        }
+
+        let omegas = RademacherMatrix::sample(total_rows as usize, d, rng);
+
+        let (w_const, w_linear) = if config.h01 {
+            (kernel.coeff(0).sqrt() as f32, kernel.coeff(1).sqrt() as f32)
+        } else {
+            (0.0, 0.0)
+        };
+
+        RandomMaclaurin {
+            d,
+            n_random,
+            config,
+            orders,
+            weights,
+            offsets,
+            omegas,
+            dense_t: std::sync::OnceLock::new(),
+            w_const,
+            w_linear,
+            kernel_name: kernel.name(),
+        }
+    }
+
+    /// The `d × rows` dense ±1 projection matrix (lazy, cached).
+    fn dense_t(&self) -> &crate::linalg::Matrix {
+        self.dense_t.get_or_init(|| {
+            let rows = self.omegas.rows();
+            let mut m = crate::linalg::Matrix::zeros(self.d, rows);
+            for r in 0..rows {
+                for k in 0..self.d {
+                    m.set(k, r, self.omegas.sign(r, k));
+                }
+            }
+            m
+        })
+    }
+
+    /// Convenience: the §4.2 variant — truncate `kernel`'s series at the
+    /// smallest order whose tail mass (at radius `r`) is ≤ `eps`, then
+    /// sample a map for the truncated kernel.
+    pub fn truncated(
+        kernel: &dyn DotProductKernel,
+        r: f64,
+        eps: f64,
+        d: usize,
+        n_random: usize,
+        config: RmConfig,
+        rng: &mut Rng,
+    ) -> (Self, u32) {
+        let series = crate::kernels::MaclaurinSeries::materialize(kernel, config.max_order, r);
+        let k = series.truncation_order(eps);
+        struct Shim<'a> {
+            inner: &'a dyn DotProductKernel,
+            order: u32,
+        }
+        impl DotProductKernel for Shim<'_> {
+            fn name(&self) -> String {
+                format!("truncated(k={}, {})", self.order, self.inner.name())
+            }
+            fn coeff(&self, n: u32) -> f64 {
+                if n <= self.order {
+                    self.inner.coeff(n)
+                } else {
+                    0.0
+                }
+            }
+            fn f(&self, t: f64) -> f64 {
+                let mut acc = 0.0;
+                for n in (0..=self.order).rev() {
+                    acc = acc * t + self.inner.coeff(n);
+                }
+                acc
+            }
+            fn f_prime(&self, t: f64) -> f64 {
+                let mut acc = 0.0;
+                for n in (1..=self.order).rev() {
+                    acc = acc * t + n as f64 * self.inner.coeff(n);
+                }
+                acc
+            }
+            fn max_order(&self) -> Option<u32> {
+                Some(self.order)
+            }
+        }
+        let shim = Shim { inner: kernel, order: k };
+        let map = RandomMaclaurin::sample(&shim, d, n_random, config.with_max_order(k), rng);
+        (map, k)
+    }
+
+    pub fn config(&self) -> &RmConfig {
+        self.config_ref()
+    }
+
+    fn config_ref(&self) -> &RmConfig {
+        &self.config
+    }
+
+    /// Number of random coordinates `D`.
+    pub fn n_random(&self) -> usize {
+        self.n_random
+    }
+
+    /// Sampled order of random feature `i`.
+    pub fn order(&self, i: usize) -> u32 {
+        self.orders[i]
+    }
+
+    /// All sampled orders.
+    pub fn orders(&self) -> &[u32] {
+        &self.orders
+    }
+
+    /// Largest sampled order (0 for an empty map).
+    pub fn max_sampled_order(&self) -> u32 {
+        self.orders.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Per-feature estimator weights (with `1/√D` folded in).
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+
+    /// Feature-to-row offsets into the Rademacher stack.
+    pub fn offsets(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// The packed Rademacher stack.
+    pub fn omegas(&self) -> &RademacherMatrix {
+        &self.omegas
+    }
+
+    /// H0/1 constant-coordinate value `√a_0`.
+    pub fn w_const(&self) -> f32 {
+        self.w_const
+    }
+
+    /// H0/1 linear block scale `√a_1`.
+    pub fn w_linear(&self) -> f32 {
+        self.w_linear
+    }
+
+    /// Kernel this map was sampled for.
+    pub fn kernel_name(&self) -> &str {
+        &self.kernel_name
+    }
+
+    /// Rebuild from serialized parts (see [`super::serialize`]).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        d: usize,
+        n_random: usize,
+        config: RmConfig,
+        orders: Vec<u32>,
+        weights: Vec<f32>,
+        offsets: Vec<u32>,
+        omegas: RademacherMatrix,
+        w_const: f32,
+        w_linear: f32,
+        kernel_name: String,
+    ) -> Self {
+        RandomMaclaurin {
+            d,
+            n_random,
+            config,
+            orders,
+            weights,
+            offsets,
+            omegas,
+            dense_t: std::sync::OnceLock::new(),
+            w_const,
+            w_linear,
+            kernel_name,
+        }
+    }
+
+    /// Expand the map into the dense tensors the AOT artifact consumes:
+    /// `Ω ∈ R^{n_max × d × D}` (order-padded Rademacher stacks, zeros in
+    /// padded slots), `mask ∈ {0,1}^{n_max × D}` and `coeff ∈ R^D` (the
+    /// per-feature weights, `1/√D` included). The artifact computes
+    /// `Z[b,i] = coeff[i] · Π_j (mask[j,i]·(X Ω_j)[b,i] + (1 − mask[j,i]))`,
+    /// which equals the native [`FeatureMap::transform`] random block.
+    ///
+    /// Panics if any sampled order exceeds `n_max`.
+    pub fn to_padded_dense(&self, n_max: u32) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        assert!(
+            self.max_sampled_order() <= n_max,
+            "sampled order {} exceeds padding {n_max}",
+            self.max_sampled_order()
+        );
+        let (d, dd) = (self.d, self.n_random);
+        let mut omega = vec![0.0f32; n_max as usize * d * dd];
+        let mut mask = vec![0.0f32; n_max as usize * dd];
+        for i in 0..dd {
+            let base = self.offsets[i];
+            for j in 0..self.orders[i] {
+                let row = (base + j) as usize;
+                mask[j as usize * dd + i] = 1.0;
+                for k in 0..d {
+                    omega[(j as usize * d + k) * dd + i] = self.omegas.sign(row, k);
+                }
+            }
+        }
+        (omega, mask, self.weights.clone())
+    }
+
+    /// Segmented product: turn the projection vector `proj[rows]` into
+    /// features `out[i] = w_i · Π proj[offsets[i]..offsets[i+1]]`
+    /// (order-0 features are the empty product, i.e. just `w_i`).
+    #[inline]
+    fn products_from_projections(&self, proj: &[f32], out: &mut [f32]) {
+        for i in 0..self.n_random {
+            let (lo, hi) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
+            let mut prod = self.weights[i];
+            for &p in &proj[lo..hi] {
+                prod *= p;
+            }
+            out[i] = prod;
+        }
+    }
+
+    /// Write the random block (products only, no H0/1 prefix) into `out`.
+    ///
+    /// All projections are computed at once as a dense matvec over the
+    /// cached ±1 matrix (the §Perf pass measured the bit-by-bit packed
+    /// walk at ~7× slower than vectorized f32 math), then reduced by the
+    /// segmented product.
+    fn random_block_into(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n_random);
+        let dense_t = self.dense_t();
+        let rows = dense_t.cols();
+        let mut proj = vec![0.0f32; rows];
+        // proj[r] = Σ_k x[k] · Ω[r, k]; dense_t is d × rows row-major, so
+        // accumulating row k into proj is the streaming direction.
+        for (k, &xk) in x.iter().enumerate() {
+            if xk != 0.0 {
+                crate::linalg::axpy(xk, dense_t.row(k), &mut proj);
+            }
+        }
+        self.products_from_projections(&proj, out);
+    }
+}
+
+impl FeatureMap for RandomMaclaurin {
+    fn input_dim(&self) -> usize {
+        self.d
+    }
+
+    fn output_dim(&self) -> usize {
+        if self.config.h01 {
+            1 + self.d + self.n_random
+        } else {
+            self.n_random
+        }
+    }
+
+    fn transform_into(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.d, "input dim mismatch");
+        assert_eq!(out.len(), self.output_dim(), "output dim mismatch");
+        if self.config.h01 {
+            out[0] = self.w_const;
+            for (o, &xi) in out[1..1 + self.d].iter_mut().zip(x) {
+                *o = self.w_linear * xi;
+            }
+            self.random_block_into(x, &mut out[1 + self.d..]);
+        } else {
+            self.random_block_into(x, out);
+        }
+    }
+
+    /// Batch override: one blocked GEMM `P = X · Ω^T` computes every
+    /// projection of every example, then the segmented products — the
+    /// CPU mirror of the Pallas kernel's per-order MXU matmuls.
+    fn transform_batch(&self, x: &crate::linalg::Matrix) -> crate::linalg::Matrix {
+        assert_eq!(x.cols(), self.d, "input dim mismatch");
+        let b = x.rows();
+        let mut out = crate::linalg::Matrix::zeros(b, self.output_dim());
+        let dense_t = self.dense_t();
+        let proj = if dense_t.cols() > 0 {
+            x.matmul(dense_t).expect("inner dims agree")
+        } else {
+            crate::linalg::Matrix::zeros(b, 0)
+        };
+        let prefix = if self.config.h01 { 1 + self.d } else { 0 };
+        for i in 0..b {
+            let row_out = out.row_mut(i);
+            if self.config.h01 {
+                row_out[0] = self.w_const;
+                for (o, &xi) in row_out[1..1 + self.d].iter_mut().zip(x.row(i)) {
+                    *o = self.w_linear * xi;
+                }
+            }
+            self.products_from_projections(proj.row(i), &mut row_out[prefix..]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Exponential, Homogeneous, Polynomial};
+    use crate::linalg::dot;
+
+    fn unit_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        crate::linalg::normalize(&mut v);
+        v
+    }
+
+    #[test]
+    fn output_dims() {
+        let mut rng = Rng::seed_from(1);
+        let k = Polynomial::new(3, 1.0);
+        let plain = RandomMaclaurin::sample(&k, 5, 100, RmConfig::default(), &mut rng);
+        assert_eq!(plain.output_dim(), 100);
+        let h01 = RandomMaclaurin::sample(&k, 5, 100, RmConfig::default().with_h01(true), &mut rng);
+        assert_eq!(h01.output_dim(), 1 + 5 + 100);
+    }
+
+    #[test]
+    fn unbiasedness_lemma7() {
+        // E[<Z(x), Z(y)>] = K(x, y): average over many independent maps.
+        let mut rng = Rng::seed_from(42);
+        let k = Polynomial::new(4, 1.0);
+        let d = 6;
+        let x = unit_vec(d, 1);
+        let y = unit_vec(d, 2);
+        let exact = k.eval(&x, &y);
+        let mut acc = 0.0f64;
+        let maps = 400;
+        for _ in 0..maps {
+            let map = RandomMaclaurin::sample(&k, d, 64, RmConfig::default(), &mut rng);
+            acc += dot(&map.transform(&x), &map.transform(&y)) as f64;
+        }
+        let mean = acc / maps as f64;
+        // K(x,y) <= 2^4 = 16 on the unit ball; CLT tolerance.
+        assert!((mean - exact).abs() < 0.35, "mean {mean} vs exact {exact}");
+    }
+
+    #[test]
+    fn unbiasedness_h01() {
+        let mut rng = Rng::seed_from(43);
+        let k = Exponential::new(1.0);
+        let d = 5;
+        let x = unit_vec(d, 3);
+        let y = unit_vec(d, 4);
+        let exact = k.eval(&x, &y);
+        let mut acc = 0.0f64;
+        let maps = 400;
+        for _ in 0..maps {
+            let map =
+                RandomMaclaurin::sample(&k, d, 64, RmConfig::default().with_h01(true), &mut rng);
+            acc += dot(&map.transform(&x), &map.transform(&y)) as f64;
+        }
+        let mean = acc / maps as f64;
+        assert!((mean - exact).abs() < 0.1, "mean {mean} vs exact {exact}");
+    }
+
+    #[test]
+    fn estimator_bound_lemma8() {
+        // |Z_i(x) Z_i(y)| * D <= C_Omega = p f(p R^2) for every feature,
+        // for x, y in B_1(0, 1).
+        let mut rng = Rng::seed_from(7);
+        let k = Exponential::new(1.0);
+        let d = 8;
+        let bound = k.estimator_bound(2.0, 1.0);
+        let n_random = 256;
+        let map = RandomMaclaurin::sample(&k, d, n_random, RmConfig::default(), &mut rng);
+        for trial in 0..50 {
+            // Points in the L1 ball of radius 1 (the paper's domain).
+            let mut x = unit_vec(d, 100 + trial);
+            let mut y = unit_vec(d, 200 + trial);
+            let sx = crate::linalg::norm1(&x);
+            let sy = crate::linalg::norm1(&y);
+            crate::linalg::scale(1.0 / sx, &mut x);
+            crate::linalg::scale(1.0 / sy, &mut y);
+            let zx = map.transform(&x);
+            let zy = map.transform(&y);
+            for i in 0..n_random {
+                let prod = (zx[i] * zy[i]).abs() as f64 * n_random as f64;
+                assert!(
+                    prod <= bound * (1.0 + 1e-5),
+                    "feature {i}: |Z Z| = {prod} > C = {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn error_decays_with_d() {
+        // Concentration: mean abs gram error should drop roughly like
+        // 1/sqrt(D). Compare D and 16*D (expect ~4x, assert >= 2x).
+        let mut rng = Rng::seed_from(9);
+        let k = Polynomial::new(3, 1.0);
+        let d = 8;
+        let n_pts = 30;
+        let rows: Vec<Vec<f32>> = (0..n_pts).map(|i| unit_vec(d, 300 + i as u64)).collect();
+        let x = crate::linalg::Matrix::from_rows(&rows).unwrap();
+        let exact = crate::kernels::gram(&k, &x);
+        let err_at = |dd: usize, rng: &mut Rng| {
+            let trials = 3;
+            (0..trials)
+                .map(|_| {
+                    let map = RandomMaclaurin::sample(&k, d, dd, RmConfig::default(), rng);
+                    let approx = super::super::feature_gram(&map, &x);
+                    crate::kernels::mean_abs_gram_error(&exact, &approx)
+                })
+                .sum::<f64>()
+                / trials as f64
+        };
+        let e_small = err_at(32, &mut rng);
+        let e_big = err_at(512, &mut rng);
+        assert!(
+            e_big < e_small / 2.0,
+            "no concentration: err(32) = {e_small}, err(512) = {e_big}"
+        );
+    }
+
+    #[test]
+    fn homogeneous_orders_are_exactly_degree() {
+        // For <x,y>^p only a_p != 0; sampled orders beyond the degree are
+        // clipped by max_order=degree, and features with N != p would have
+        // zero weight. The cap makes all orders equal p.
+        let mut rng = Rng::seed_from(11);
+        let k = Homogeneous::new(4);
+        let map = RandomMaclaurin::sample(&k, 5, 64, RmConfig::default(), &mut rng);
+        for i in 0..64 {
+            // weight is zero unless order == 4
+            if map.order(i) != 4 {
+                assert_eq!(map.weights()[i], 0.0);
+            }
+        }
+        // The only informative features are order-4 ones; at p=2 the
+        // capped sampler maps everything >= 4 to 4, so most features hit it.
+        let informative = (0..64).filter(|&i| map.order(i) == 4).count();
+        assert!(informative > 0);
+    }
+
+    #[test]
+    fn h01_prefix_is_exact_terms() {
+        let mut rng = Rng::seed_from(13);
+        let k = Polynomial::new(10, 1.0);
+        let d = 4;
+        let map = RandomMaclaurin::sample(&k, d, 32, RmConfig::default().with_h01(true), &mut rng);
+        let x = unit_vec(d, 5);
+        let z = map.transform(&x);
+        // a_0 = 1, a_1 = 10 for (1 + t)^10.
+        assert!((z[0] - 1.0).abs() < 1e-6);
+        for j in 0..d {
+            assert!((z[1 + j] - (10.0f32).sqrt() * x[j]).abs() < 1e-5);
+        }
+        // All random features have order >= 2.
+        for i in 0..32 {
+            assert!(map.order(i) >= 2, "order {} < 2 under H0/1", map.order(i));
+        }
+    }
+
+    #[test]
+    fn order_zero_features_are_constant() {
+        // With p=2 roughly half the features have N=0; their value must
+        // be w = sqrt(a_0 * 2) / sqrt(D) regardless of x.
+        let mut rng = Rng::seed_from(17);
+        let k = Exponential::new(1.0);
+        let d = 3;
+        let n = 64;
+        let map = RandomMaclaurin::sample(&k, d, n, RmConfig::default(), &mut rng);
+        let z1 = map.transform(&unit_vec(d, 6));
+        let z2 = map.transform(&unit_vec(d, 7));
+        let mut seen_zero = false;
+        for i in 0..n {
+            if map.order(i) == 0 {
+                seen_zero = true;
+                assert_eq!(z1[i], z2[i], "order-0 feature must not depend on x");
+                let expected = (2.0f64).sqrt() / (n as f64).sqrt();
+                assert!((z1[i] as f64 - expected).abs() < 1e-6);
+            }
+        }
+        assert!(seen_zero, "no order-0 features sampled (p=2 should give ~half)");
+    }
+
+    #[test]
+    fn truncated_variant_reports_order() {
+        let mut rng = Rng::seed_from(19);
+        let k = Exponential::new(1.0);
+        let (map, order) =
+            RandomMaclaurin::truncated(&k, 1.0, 1e-4, 6, 64, RmConfig::default(), &mut rng);
+        assert!(order >= 3 && order <= 12, "order {order}");
+        assert!(map.max_sampled_order() <= order);
+        assert!(map.kernel_name().contains("truncated"));
+    }
+
+    #[test]
+    fn padded_dense_matches_native_transform() {
+        // Evaluate the padded-tensor formulation (what the PJRT artifact
+        // computes) in plain rust and compare with transform().
+        let mut rng = Rng::seed_from(23);
+        let k = Exponential::new(1.0);
+        let (d, dd) = (5usize, 24usize);
+        let map = RandomMaclaurin::sample(&k, d, dd, RmConfig::default().with_max_order(8), &mut rng);
+        let n_max = 8u32;
+        let (omega, mask, coeff) = map.to_padded_dense(n_max);
+        let x = unit_vec(d, 31);
+        let native = map.transform(&x);
+        for i in 0..dd {
+            let mut prod = 1.0f32;
+            for j in 0..n_max as usize {
+                let mut p = 0.0f32;
+                for kk in 0..d {
+                    p += x[kk] * omega[(j * d + kk) * dd + i];
+                }
+                let m = mask[j * dd + i];
+                prod *= m * p + (1.0 - m);
+            }
+            let z = coeff[i] * prod;
+            assert!(
+                (z - native[i]).abs() < 1e-4 * (1.0 + native[i].abs()),
+                "feature {i}: padded {z} vs native {}",
+                native[i]
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let k = Polynomial::new(3, 1.0);
+        let m1 = RandomMaclaurin::sample(&k, 4, 16, RmConfig::default(), &mut Rng::seed_from(5));
+        let m2 = RandomMaclaurin::sample(&k, 4, 16, RmConfig::default(), &mut Rng::seed_from(5));
+        assert_eq!(m1.orders(), m2.orders());
+        assert_eq!(m1.weights(), m2.weights());
+        assert_eq!(m1.omegas(), m2.omegas());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_wrong_input_dim() {
+        let mut rng = Rng::seed_from(1);
+        let k = Polynomial::new(2, 1.0);
+        let map = RandomMaclaurin::sample(&k, 4, 8, RmConfig::default(), &mut rng);
+        map.transform(&[0.0; 3]);
+    }
+}

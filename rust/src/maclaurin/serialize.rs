@@ -1,0 +1,243 @@
+//! Canonical binary serialization of sampled Random Maclaurin maps.
+//!
+//! The same bytes are read by the Python build path
+//! (`python/compile/rm_map.py`) to expand the map into the dense
+//! `Ω / mask / coeff` tensors the AOT artifact consumes, which is how the
+//! native Rust engine, the PJRT engine and the pure-jnp oracle are held
+//! to *identical* sampled maps in the cross-engine tests.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   8  b"RFDM0001"
+//! d       u32     input dim
+//! D       u32     number of random features
+//! p       f64     external measure parameter
+//! h01     u8      0/1
+//! maxord  u32     order cap
+//! wconst  f32     H0/1 constant coordinate
+//! wlin    f32     H0/1 linear scale
+//! klen    u32     kernel name byte length, then that many bytes (utf-8)
+//! orders  u32×D
+//! weights f32×D
+//! rows    u32     total Rademacher rows
+//! words   u64×(rows * ceil(d/64))   packed sign bits
+//! ```
+
+use super::rm::{RandomMaclaurin, RmConfig};
+use super::FeatureMap;
+use crate::rng::RademacherMatrix;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"RFDM0001";
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Data("truncated RFDM blob".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+}
+
+/// Serialize a map to bytes.
+pub fn to_bytes(map: &RandomMaclaurin) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, map.input_dim() as u32);
+    put_u32(&mut out, map.n_random() as u32);
+    out.extend_from_slice(&map.config().p.to_le_bytes());
+    out.push(map.config().h01 as u8);
+    put_u32(&mut out, map.config().max_order);
+    put_f32(&mut out, map.w_const());
+    put_f32(&mut out, map.w_linear());
+    let kname = map.kernel_name().as_bytes();
+    put_u32(&mut out, kname.len() as u32);
+    out.extend_from_slice(kname);
+    for &o in map.orders() {
+        put_u32(&mut out, o);
+    }
+    for &w in map.weights() {
+        put_f32(&mut out, w);
+    }
+    put_u32(&mut out, map.omegas().rows() as u32);
+    for &w in map.omegas().words() {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+/// Deserialize a map from bytes.
+pub fn from_bytes(buf: &[u8]) -> Result<RandomMaclaurin> {
+    let mut r = Reader { buf, pos: 0 };
+    if r.take(8)? != MAGIC {
+        return Err(Error::Data("bad RFDM magic".into()));
+    }
+    let d = r.u32()? as usize;
+    let n_random = r.u32()? as usize;
+    let p = r.f64()?;
+    let h01 = r.take(1)?[0] != 0;
+    let max_order = r.u32()?;
+    let w_const = r.f32()?;
+    let w_linear = r.f32()?;
+    let klen = r.u32()? as usize;
+    let kernel_name = String::from_utf8(r.take(klen)?.to_vec())
+        .map_err(|_| Error::Data("kernel name not utf-8".into()))?;
+    if d == 0 || n_random == 0 || !(p > 1.0) {
+        return Err(Error::Data("invalid RFDM header".into()));
+    }
+    let mut orders = Vec::with_capacity(n_random);
+    for _ in 0..n_random {
+        orders.push(r.u32()?);
+    }
+    let mut weights = Vec::with_capacity(n_random);
+    for _ in 0..n_random {
+        weights.push(r.f32()?);
+    }
+    let rows = r.u32()? as usize;
+    let expected_rows: u64 = orders.iter().map(|&o| o as u64).sum();
+    if rows as u64 != expected_rows {
+        return Err(Error::Data(format!(
+            "row count {rows} does not match order sum {expected_rows}"
+        )));
+    }
+    let words_per_row = d.div_ceil(64);
+    let mut words = Vec::with_capacity(rows * words_per_row);
+    for _ in 0..rows * words_per_row {
+        words.push(r.u64()?);
+    }
+    if r.pos != buf.len() {
+        return Err(Error::Data("trailing bytes in RFDM blob".into()));
+    }
+    let mut offsets = Vec::with_capacity(n_random + 1);
+    offsets.push(0u32);
+    let mut acc = 0u32;
+    for &o in &orders {
+        acc += o;
+        offsets.push(acc);
+    }
+    let omegas = RademacherMatrix::from_words(rows, d, words);
+    // `restrict_support` only affects sampling, not evaluation of an
+    // already-sampled map, so it is not part of the wire format.
+    let config = RmConfig { p, h01, max_order, restrict_support: true };
+    Ok(RandomMaclaurin::from_parts(
+        d, n_random, config, orders, weights, offsets, omegas, w_const, w_linear, kernel_name,
+    ))
+}
+
+/// Save to a file.
+pub fn save(map: &RandomMaclaurin, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&to_bytes(map))?;
+    Ok(())
+}
+
+/// Load from a file.
+pub fn load(path: impl AsRef<Path>) -> Result<RandomMaclaurin> {
+    let mut f = std::fs::File::open(path)?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    from_bytes(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Exponential, Polynomial};
+    use crate::maclaurin::{FeatureMap, RmConfig};
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_preserves_transform() {
+        let mut rng = Rng::seed_from(1);
+        let k = Polynomial::new(5, 1.0);
+        let map = RandomMaclaurin::sample(&k, 7, 48, RmConfig::default(), &mut rng);
+        let bytes = to_bytes(&map);
+        let map2 = from_bytes(&bytes).unwrap();
+        let x: Vec<f32> = (0..7).map(|i| (i as f32 * 0.13).sin() * 0.3).collect();
+        assert_eq!(map.transform(&x), map2.transform(&x));
+        assert_eq!(map.orders(), map2.orders());
+        assert_eq!(map.kernel_name(), map2.kernel_name());
+    }
+
+    #[test]
+    fn roundtrip_h01() {
+        let mut rng = Rng::seed_from(2);
+        let k = Exponential::new(1.0);
+        let map =
+            RandomMaclaurin::sample(&k, 5, 16, RmConfig::default().with_h01(true), &mut rng);
+        let map2 = from_bytes(&to_bytes(&map)).unwrap();
+        assert_eq!(map.output_dim(), map2.output_dim());
+        assert_eq!(map.w_const(), map2.w_const());
+        assert_eq!(map.w_linear(), map2.w_linear());
+        let x = vec![0.1f32, -0.2, 0.05, 0.3, 0.0];
+        assert_eq!(map.transform(&x), map2.transform(&x));
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let mut rng = Rng::seed_from(3);
+        let k = Polynomial::new(2, 1.0);
+        let map = RandomMaclaurin::sample(&k, 4, 8, RmConfig::default(), &mut rng);
+        let bytes = to_bytes(&map);
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(from_bytes(&bad).is_err());
+        // Truncated.
+        assert!(from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        // Trailing garbage.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(from_bytes(&long).is_err());
+        // Empty.
+        assert!(from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut rng = Rng::seed_from(4);
+        let k = Polynomial::new(3, 0.5);
+        let map = RandomMaclaurin::sample(&k, 6, 12, RmConfig::default(), &mut rng);
+        let dir = std::env::temp_dir().join("rfdot_serialize_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("map.rfdm");
+        save(&map, &path).unwrap();
+        let map2 = load(&path).unwrap();
+        let x = vec![0.2f32; 6];
+        assert_eq!(map.transform(&x), map2.transform(&x));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! rfdot binary entrypoint — see `cli` for commands.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = rfdot::cli::run(argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

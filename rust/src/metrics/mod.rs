@@ -1,0 +1,163 @@
+//! Lightweight runtime metrics (atomic counters + latency histogram).
+//!
+//! The coordinator's hot path records into these with relaxed atomics —
+//! no locks, no allocation. `snapshot()` gives a consistent-enough view
+//! for logs, the `serve` example and the bench harness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-scale latency histogram: bucket `i` counts samples in
+/// `[2^i, 2^(i+1)) µs`, 0..=24 (1 µs .. ~16 s).
+const BUCKETS: usize = 25;
+
+/// Metrics for one coordinator instance.
+#[derive(Debug, Default)]
+pub struct Stats {
+    /// Requests accepted into the queue.
+    pub submitted: AtomicU64,
+    /// Requests answered (ok or error).
+    pub completed: AtomicU64,
+    /// Requests rejected by backpressure.
+    pub rejected: AtomicU64,
+    /// Batches dispatched to the backend.
+    pub batches: AtomicU64,
+    /// Sum of real (unpadded) batch sizes.
+    pub batched_items: AtomicU64,
+    /// Pad slots wasted on fixed-shape backends.
+    pub pad_slots: AtomicU64,
+    /// Backend failures.
+    pub backend_errors: AtomicU64,
+    latency: [AtomicU64; BUCKETS],
+    latency_sum_us: AtomicU64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request latency.
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.latency[bucket].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Approximate latency quantile in microseconds (upper bucket edge).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.latency.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    /// Mean latency in microseconds.
+    pub fn mean_latency_us(&self) -> f64 {
+        let done = self.completed.load(Ordering::Relaxed);
+        if done == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / done as f64
+    }
+
+    /// Mean real batch size.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} rejected={} batches={} mean_batch={:.1} pad={} errs={} lat_mean={:.0}us p50<={}us p99<={}us",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.pad_slots.load(Ordering::Relaxed),
+            self.backend_errors.load(Ordering::Relaxed),
+            self.mean_latency_us(),
+            self.latency_quantile_us(0.5),
+            self.latency_quantile_us(0.99),
+        )
+    }
+}
+
+/// A simple wall-clock stopwatch (used by benches and the CLI).
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: std::time::Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let s = Stats::new();
+        s.submitted.fetch_add(3, Ordering::Relaxed);
+        s.completed.fetch_add(2, Ordering::Relaxed);
+        assert!(s.summary().contains("submitted=3"));
+    }
+
+    #[test]
+    fn latency_quantiles_monotone() {
+        let s = Stats::new();
+        for us in [10u64, 100, 1000, 10_000] {
+            s.record_latency(Duration::from_micros(us));
+        }
+        s.completed.store(4, Ordering::Relaxed);
+        let p50 = s.latency_quantile_us(0.5);
+        let p99 = s.latency_quantile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 64 && p50 <= 256, "p50 {p50}");
+        assert!(s.mean_latency_us() > 0.0);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = Stats::new();
+        assert_eq!(s.latency_quantile_us(0.99), 0);
+        assert_eq!(s.mean_latency_us(), 0.0);
+        assert_eq!(s.mean_batch_size(), 0.0);
+    }
+
+    #[test]
+    fn mean_batch_size() {
+        let s = Stats::new();
+        s.batches.store(2, Ordering::Relaxed);
+        s.batched_items.store(7, Ordering::Relaxed);
+        assert!((s.mean_batch_size() - 3.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,140 @@
+//! Nyström low-rank kernel approximation — the "directly approximate
+//! the Gram matrix" family the paper's related work (§2, Bach & Jordan)
+//! contrasts with random feature maps.
+//!
+//! Given `m` landmark points `S`, the feature map is
+//! `Z(x) = K_mm^{-1/2} · [K(x, s_1) .. K(x, s_m)]ᵀ`, so
+//! `⟨Z(x), Z(y)⟩ = K_xS K_mm^{-1} K_Sy` — the best rank-`m`
+//! approximation within the landmarks' span. Unlike Random Maclaurin
+//! maps it is *data-dependent* (needs a training sample) and its
+//! features cost `O(m·d)` kernel evaluations each; the benches use it
+//! as the accuracy-per-dimension baseline.
+
+use crate::kernels::DotProductKernel;
+use crate::linalg::{inv_sqrt_psd, Matrix};
+use crate::maclaurin::FeatureMap;
+use crate::rng::Rng;
+use crate::{Error, Result};
+
+/// A fitted Nyström feature map.
+pub struct Nystrom {
+    landmarks: Matrix,
+    /// `m × m` normalizer `K_mm^{-1/2}`.
+    normalizer: Matrix,
+    kernel: Box<dyn DotProductKernel>,
+}
+
+impl Nystrom {
+    /// Fit on `m` landmarks sampled uniformly from `data` rows.
+    pub fn fit(
+        kernel: Box<dyn DotProductKernel>,
+        data: &Matrix,
+        m: usize,
+        rng: &mut Rng,
+    ) -> Result<Nystrom> {
+        if m == 0 || data.rows() == 0 {
+            return Err(Error::Config("nystrom needs m > 0 landmarks and data".into()));
+        }
+        let m = m.min(data.rows());
+        let idx = rng.sample_indices(data.rows(), m);
+        let rows: Vec<Vec<f32>> = idx.iter().map(|&i| data.row(i).to_vec()).collect();
+        let landmarks = Matrix::from_rows(&rows)?;
+        // K_mm + jitter for numerical stability.
+        let mut kmm = crate::kernels::gram(kernel.as_ref(), &landmarks);
+        for i in 0..m {
+            kmm.set(i, i, kmm.get(i, i) + 1e-6);
+        }
+        let normalizer = inv_sqrt_psd(&kmm, 1e-10);
+        Ok(Nystrom { landmarks, normalizer, kernel })
+    }
+
+    /// Number of landmarks (= output dimension).
+    pub fn n_landmarks(&self) -> usize {
+        self.landmarks.rows()
+    }
+}
+
+impl FeatureMap for Nystrom {
+    fn input_dim(&self) -> usize {
+        self.landmarks.cols()
+    }
+
+    fn output_dim(&self) -> usize {
+        self.landmarks.rows()
+    }
+
+    fn transform_into(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.input_dim());
+        assert_eq!(out.len(), self.output_dim());
+        let m = self.landmarks.rows();
+        let kx: Vec<f32> =
+            (0..m).map(|i| self.kernel.eval(self.landmarks.row(i), x) as f32).collect();
+        for i in 0..m {
+            out[i] = crate::linalg::dot(self.normalizer.row(i), &kx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{gram, mean_abs_gram_error, Exponential, Polynomial};
+    use crate::maclaurin::feature_gram;
+
+    fn sphere_points(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed_from(seed);
+        let rows: Vec<Vec<f32>> =
+            (0..n).map(|_| crate::prop::gens::unit_vec(&mut rng, d)).collect();
+        Matrix::from_rows(&rows).unwrap()
+    }
+
+    #[test]
+    fn approximates_gram_with_enough_landmarks() {
+        let x = sphere_points(60, 6, 1);
+        let kernel = Exponential::new(1.0);
+        let mut rng = Rng::seed_from(2);
+        let ny = Nystrom::fit(Box::new(kernel), &x, 40, &mut rng).unwrap();
+        let exact = gram(&Exponential::new(1.0), &x);
+        let approx = feature_gram(&ny, &x);
+        let err = mean_abs_gram_error(&exact, &approx);
+        assert!(err < 0.05, "nystrom gram err {err}");
+    }
+
+    #[test]
+    fn more_landmarks_is_better() {
+        let x = sphere_points(80, 8, 3);
+        let exact = gram(&Polynomial::new(4, 1.0), &x);
+        let err_at = |m: usize| {
+            let mut rng = Rng::seed_from(4);
+            let ny = Nystrom::fit(Box::new(Polynomial::new(4, 1.0)), &x, m, &mut rng).unwrap();
+            mean_abs_gram_error(&exact, &feature_gram(&ny, &x))
+        };
+        let e_small = err_at(5);
+        let e_big = err_at(60);
+        assert!(e_big < e_small, "m=5: {e_small}, m=60: {e_big}");
+    }
+
+    #[test]
+    fn output_dim_is_landmark_count() {
+        let x = sphere_points(30, 4, 5);
+        let mut rng = Rng::seed_from(6);
+        let ny = Nystrom::fit(Box::new(Exponential::new(1.0)), &x, 12, &mut rng).unwrap();
+        assert_eq!(ny.output_dim(), 12);
+        assert_eq!(ny.transform(x.row(0)).len(), 12);
+        // m capped at data size
+        let ny2 = Nystrom::fit(Box::new(Exponential::new(1.0)), &x, 1000, &mut rng).unwrap();
+        assert_eq!(ny2.n_landmarks(), 30);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let mut rng = Rng::seed_from(7);
+        assert!(Nystrom::fit(
+            Box::new(Exponential::new(1.0)),
+            &Matrix::zeros(0, 3),
+            4,
+            &mut rng
+        )
+        .is_err());
+    }
+}

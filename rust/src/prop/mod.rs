@@ -1,0 +1,156 @@
+//! Minimal property-based testing support.
+//!
+//! `proptest`/`quickcheck` are not reachable offline, so this module
+//! provides the 10% of them the test suite needs: seeded generators and
+//! a `forall` runner with simple halving/shrink-to-smaller reruns for
+//! sized inputs. Failures report the seed and the shrunk case.
+
+use crate::rng::Rng;
+
+/// A reproducible generator of test cases.
+pub trait Gen {
+    type Value;
+    /// Generate a case at the given size bound.
+    fn generate(&self, rng: &mut Rng, size: usize) -> Self::Value;
+}
+
+impl<T, F: Fn(&mut Rng, usize) -> T> Gen for F {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng, size: usize) -> T {
+        self(rng, size)
+    }
+}
+
+/// Configuration for [`forall`].
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum size bound passed to the generator (ramped from 1).
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 100, seed: 0xC0FFEE, max_size: 64 }
+    }
+}
+
+/// Run `check` on `config.cases` generated inputs; on the first failure,
+/// retry at smaller sizes (a crude shrink) and panic with the seed, the
+/// failing size and the case's `Debug` form.
+pub fn forall<G>(config: PropConfig, gen: G, check: impl Fn(&G::Value) -> Result<(), String>)
+where
+    G: Gen,
+    G::Value: std::fmt::Debug,
+{
+    let mut rng = Rng::seed_from(config.seed);
+    for case_idx in 0..config.cases {
+        // Ramp the size bound like proptest does.
+        let size = 1 + (config.max_size - 1) * case_idx / config.cases.max(1);
+        let mut case_rng = rng.split();
+        let value = gen.generate(&mut case_rng, size);
+        if let Err(msg) = check(&value) {
+            // Shrink: replay smaller sizes from the same stream.
+            let mut shrunk: Option<(usize, G::Value, String)> = None;
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut shrink_rng = Rng::seed_from(config.seed ^ (s as u64) << 32 | case_idx as u64);
+                let v = gen.generate(&mut shrink_rng, s);
+                if let Err(m) = check(&v) {
+                    shrunk = Some((s, v, m));
+                }
+                if s == 1 {
+                    break;
+                }
+                s /= 2;
+            }
+            match shrunk {
+                Some((s, v, m)) => panic!(
+                    "property failed (seed={:#x}, case {case_idx}, shrunk to size {s}):\n  {m}\n  case: {v:?}",
+                    config.seed
+                ),
+                None => panic!(
+                    "property failed (seed={:#x}, case {case_idx}, size {size}):\n  {msg}\n  case: {value:?}",
+                    config.seed
+                ),
+            }
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gens {
+    use crate::rng::Rng;
+
+    /// A vector of `len` f32s in [-1, 1].
+    pub fn f32_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    /// A unit-norm vector of dimension `d` (d >= 1).
+    pub fn unit_vec(rng: &mut Rng, d: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..d.max(1)).map(|_| rng.normal() as f32).collect();
+        crate::linalg::normalize(&mut v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            PropConfig { cases: 50, ..Default::default() },
+            |rng: &mut Rng, size: usize| gens::f32_vec(rng, size),
+            |v| {
+                if v.iter().all(|x| x.abs() <= 1.0) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(
+            PropConfig { cases: 50, ..Default::default() },
+            |_rng: &mut Rng, size: usize| size,
+            |&s| if s < 10 { Ok(()) } else { Err(format!("size {s} too big")) },
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        // Two runs with the same seed generate the same cases.
+        let collect = |seed: u64| {
+            let mut out = Vec::new();
+            let out_ref = std::cell::RefCell::new(&mut out);
+            forall(
+                PropConfig { cases: 10, seed, ..Default::default() },
+                |rng: &mut Rng, size: usize| gens::f32_vec(rng, size),
+                |v| {
+                    out_ref.borrow_mut().push(v.clone());
+                    Ok(())
+                },
+            );
+            out
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+
+    #[test]
+    fn unit_vec_is_unit() {
+        let mut rng = Rng::seed_from(1);
+        for d in [1, 5, 64] {
+            let v = gens::unit_vec(&mut rng, d);
+            assert!((crate::linalg::norm2(&v) - 1.0).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Random Fourier Features (Rahimi & Recht, NIPS 2007).
+//!
+//! The construction the paper builds on and compares against: for a
+//! translation invariant kernel `K(x, y) = k(x − y)` with spectral
+//! density `μ` (Bochner's theorem), draw `w ~ μ`, `b ~ U[0, 2π)` and use
+//! `W(x) = √2 · cos(w^T x + b)`; then `E[W(x)W(y)] = k(x − y)`.
+//!
+//! Two roles here:
+//! * a `D`-dimensional [`FeatureMap`] ([`RandomFourier`]) for the
+//!   Gaussian RBF kernel — a baseline in the benches;
+//! * the black-box *scalar* feature map factory
+//!   ([`RffScalarFactory`]) that Algorithm 2 (compositional kernels)
+//!   consumes: each draw is one `(w, b)` pair, bounded by `√2`
+//!   (`C_W = 2`) and Lipschitz on expectation — exactly the assumptions
+//!   of the paper's §5.
+
+use crate::maclaurin::compositional::{ScalarMap, ScalarMapFactory};
+use crate::maclaurin::FeatureMap;
+use crate::rng::Rng;
+
+/// Gaussian RBF kernel `K(x, y) = exp(−γ ‖x − y‖²)` (helper for tests
+/// and benches; the spectral density is `N(0, 2γ I)`).
+pub fn rbf(gamma: f64, x: &[f32], y: &[f32]) -> f64 {
+    let d2: f32 = x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum();
+    (-gamma * d2 as f64).exp()
+}
+
+/// One scalar Fourier feature `W(x) = √2 cos(w^T x + b)`.
+#[derive(Clone, Debug)]
+pub struct FourierScalar {
+    w: Vec<f32>,
+    b: f32,
+}
+
+impl ScalarMap for FourierScalar {
+    fn eval(&self, x: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), self.w.len());
+        let t = crate::linalg::dot(&self.w, x) + self.b;
+        std::f32::consts::SQRT_2 * t.cos()
+    }
+
+    fn bound(&self) -> f64 {
+        std::f64::consts::SQRT_2
+    }
+}
+
+/// Factory drawing scalar RBF Fourier features: `w ~ N(0, 2γ I)`,
+/// `b ~ U[0, 2π)`.
+#[derive(Clone, Copy, Debug)]
+pub struct RffScalarFactory {
+    pub gamma: f64,
+    pub dim: usize,
+}
+
+impl RffScalarFactory {
+    pub fn new(gamma: f64, dim: usize) -> Self {
+        assert!(gamma > 0.0 && dim > 0);
+        RffScalarFactory { gamma, dim }
+    }
+}
+
+impl ScalarMapFactory for RffScalarFactory {
+    type Map = FourierScalar;
+
+    fn input_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn sample_scalar(&self, rng: &mut Rng) -> FourierScalar {
+        let std = (2.0 * self.gamma).sqrt();
+        let w = (0..self.dim).map(|_| (std * rng.normal()) as f32).collect();
+        let b = (rng.f64() * 2.0 * std::f64::consts::PI) as f32;
+        FourierScalar { w, b }
+    }
+
+    /// `E[W(x)W(y)]` — the inner kernel the factory realizes.
+    fn kernel(&self, x: &[f32], y: &[f32]) -> f64 {
+        rbf(self.gamma, x, y)
+    }
+
+    /// `sup |W| = √2`, so `C_W = 2`.
+    fn bound(&self) -> f64 {
+        std::f64::consts::SQRT_2
+    }
+}
+
+/// A `D`-dimensional Random Fourier feature map for the Gaussian RBF
+/// kernel: `Z(x) = √(2/D) · cos(W x + b)` with rows `w_i ~ N(0, 2γI)`.
+#[derive(Clone, Debug)]
+pub struct RandomFourier {
+    /// `D × d` frequency matrix, row-major.
+    w: crate::linalg::Matrix,
+    b: Vec<f32>,
+    gamma: f64,
+}
+
+impl RandomFourier {
+    pub fn sample(gamma: f64, d: usize, n_features: usize, rng: &mut Rng) -> Self {
+        assert!(gamma > 0.0 && d > 0 && n_features > 0);
+        let std = (2.0 * gamma).sqrt();
+        let mut w = crate::linalg::Matrix::zeros(n_features, d);
+        for i in 0..n_features {
+            for j in 0..d {
+                w.set(i, j, (std * rng.normal()) as f32);
+            }
+        }
+        let b = (0..n_features)
+            .map(|_| (rng.f64() * 2.0 * std::f64::consts::PI) as f32)
+            .collect();
+        RandomFourier { w, b, gamma }
+    }
+
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+}
+
+impl FeatureMap for RandomFourier {
+    fn input_dim(&self) -> usize {
+        self.w.cols()
+    }
+
+    fn output_dim(&self) -> usize {
+        self.w.rows()
+    }
+
+    fn transform_into(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.input_dim());
+        assert_eq!(out.len(), self.output_dim());
+        let scale = (2.0 / self.w.rows() as f64).sqrt() as f32;
+        for i in 0..self.w.rows() {
+            let t = crate::linalg::dot(self.w.row(i), x) + self.b[i];
+            out[i] = scale * t.cos();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        crate::linalg::normalize(&mut v);
+        v
+    }
+
+    #[test]
+    fn rff_approximates_rbf() {
+        let mut rng = Rng::seed_from(1);
+        let gamma = 0.7;
+        let d = 6;
+        let map = RandomFourier::sample(gamma, d, 4096, &mut rng);
+        for s in 0..5 {
+            let x = unit_vec(d, 10 + s);
+            let y = unit_vec(d, 20 + s);
+            let exact = rbf(gamma, &x, &y);
+            let approx = crate::linalg::dot(&map.transform(&x), &map.transform(&y)) as f64;
+            assert!((exact - approx).abs() < 0.06, "exact {exact} approx {approx}");
+        }
+    }
+
+    #[test]
+    fn rff_self_similarity_is_one() {
+        // K(x, x) = 1 for RBF; Z(x)·Z(x) concentrates around 1.
+        let mut rng = Rng::seed_from(2);
+        let map = RandomFourier::sample(1.0, 4, 4096, &mut rng);
+        let x = unit_vec(4, 3);
+        let z = map.transform(&x);
+        let v = crate::linalg::dot(&z, &z) as f64;
+        assert!((v - 1.0).abs() < 0.05, "self-sim {v}");
+    }
+
+    #[test]
+    fn scalar_factory_unbiased() {
+        let mut rng = Rng::seed_from(3);
+        let gamma = 1.1;
+        let d = 5;
+        let factory = RffScalarFactory::new(gamma, d);
+        let x = unit_vec(d, 4);
+        let y = unit_vec(d, 5);
+        let exact = factory.kernel(&x, &y);
+        let trials = 200_000;
+        let mean: f64 = (0..trials)
+            .map(|_| {
+                let w = factory.sample_scalar(&mut rng);
+                (w.eval(&x) * w.eval(&y)) as f64
+            })
+            .sum::<f64>()
+            / trials as f64;
+        assert!((mean - exact).abs() < 0.01, "mean {mean} exact {exact}");
+    }
+
+    #[test]
+    fn scalar_is_bounded() {
+        let mut rng = Rng::seed_from(4);
+        let factory = RffScalarFactory::new(2.0, 3);
+        let x = unit_vec(3, 6);
+        for _ in 0..1000 {
+            let w = factory.sample_scalar(&mut rng);
+            assert!(w.eval(&x).abs() as f64 <= w.bound() + 1e-6);
+        }
+    }
+}

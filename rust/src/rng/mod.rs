@@ -1,0 +1,417 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The build environment has no access to crates.io, so the library ships
+//! its own small, well-tested RNG stack instead of `rand`:
+//!
+//! * [`Rng`] — xoshiro256++ core seeded through SplitMix64. Fast,
+//!   high-quality, and — critically for this reproduction — *stable
+//!   across platforms and processes*, which is what lets the Rust native
+//!   engine, the PJRT artifact path and the Python oracle all derive the
+//!   same Rademacher vectors from the same seed (see
+//!   `maclaurin::serialize`).
+//! * [`Geometric`] — the external measure `P[N = n] ∝ p^{-(n+1)}` the
+//!   paper imposes on Maclaurin orders (§4).
+//! * [`rademacher`] — bit-packed `{±1}^d` vector sampling and sign-flip
+//!   dot products.
+
+pub mod rademacher;
+
+pub use rademacher::RademacherMatrix;
+
+/// SplitMix64 step; used for seeding and as a simple stream splitter.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ generator (Blackman & Vigna).
+///
+/// Deterministic, seedable, `Clone`-able; cloning forks the exact stream,
+/// [`Rng::split`] forks a decorrelated stream.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second output of the Box-Muller transform.
+    gauss_cache: Option<f64>,
+}
+
+impl Rng {
+    /// Seed from a single `u64` via SplitMix64 (never yields the all-zero
+    /// state xoshiro must avoid).
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_cache: None }
+    }
+
+    /// Fork an independent generator: the child is seeded from the
+    /// parent's next output mixed through SplitMix64, so parent and child
+    /// streams are decorrelated.
+    pub fn split(&mut self) -> Rng {
+        let mut sm = self.next_u64() ^ 0xA076_1D64_78BD_642F;
+        Rng::seed_from(splitmix64(&mut sm))
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Next 32 random bits (upper half of a 64-bit draw).
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as `f32`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's multiply-shift rejection
+    /// (unbiased).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0) is undefined");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= lo.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo < hi, "empty range");
+        lo + self.below((hi - lo) as u64) as i64
+    }
+
+    /// Uniform in `[lo, hi)` as `f64`.
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box-Muller (second value cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_cache.take() {
+            return z;
+        }
+        // Avoid log(0): draw u from (0, 1].
+        let u = 1.0 - self.f64();
+        let v = self.f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * v).sin_cos();
+        self.gauss_cache = Some(r * s);
+        r * c
+    }
+
+    /// A fair ±1 draw.
+    #[inline]
+    pub fn sign(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// `true` with probability `prob`.
+    pub fn bernoulli(&mut self, prob: f64) -> bool {
+        self.f64() < prob
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (partial Fisher-Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// The external measure on Maclaurin orders, `P[N = n] = (1 - q) q^n`
+/// with `q = 1/p` — i.e. `P[N = n] = (p - 1) / p^(n+1)`.
+///
+/// For the paper's recommended `p = 2` this is *exactly* the measure of
+/// §4 (`P[N = n] = 2^-(n+1)`), which is normalized as written. For
+/// `p ≠ 2` the paper's raw `p^-(n+1)` does not sum to one, so we use the
+/// normalized geometric law and carry the exact inverse probability in
+/// the estimator weight (`maclaurin` divides by `P[N]` rather than
+/// hard-coding `p^(N+1)`), keeping the estimator unbiased for every
+/// `p > 1`.
+#[derive(Clone, Copy, Debug)]
+pub struct Geometric {
+    /// The paper's `p > 1`.
+    pub p: f64,
+}
+
+impl Geometric {
+    /// Create the order distribution; panics unless `p > 1`.
+    pub fn new(p: f64) -> Self {
+        assert!(p > 1.0, "external measure requires p > 1, got {p}");
+        Geometric { p }
+    }
+
+    /// Probability mass at order `n`.
+    #[inline]
+    pub fn pmf(&self, n: u32) -> f64 {
+        (self.p - 1.0) / self.p.powi(n as i32 + 1)
+    }
+
+    /// Inverse mass `1 / P[N = n]` — the importance weight in the
+    /// Random Maclaurin estimator.
+    #[inline]
+    pub fn inv_pmf(&self, n: u32) -> f64 {
+        self.p.powi(n as i32 + 1) / (self.p - 1.0)
+    }
+
+    /// Draw an order by CDF inversion: `N = floor(log_q(1 - U))` where
+    /// `q = 1/p`.
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let u = rng.f64(); // in [0, 1)
+        if u == 0.0 {
+            return 0;
+        }
+        let q = 1.0 / self.p;
+        // P[N >= n] = q^n; invert the survival function.
+        let n = ((1.0 - u).ln() / q.ln()).floor();
+        if n < 0.0 {
+            0
+        } else {
+            n as u32
+        }
+    }
+
+    /// Survival function `P[N ≥ n] = p^{-n}`.
+    #[inline]
+    pub fn survival(&self, n: u32) -> f64 {
+        (1.0 / self.p).powi(n as i32)
+    }
+
+    /// Draw an order but clamped at `max_order` (all tail mass lands on
+    /// `max_order`).
+    pub fn sample_capped(&self, max_order: u32, rng: &mut Rng) -> u32 {
+        self.sample(rng).min(max_order)
+    }
+
+    /// Probability that [`Self::sample_capped`] emits `n`: the plain pmf
+    /// below the cap, the whole survival mass at it. Using *this* (not
+    /// the raw pmf) as the importance weight makes the capped Random
+    /// Maclaurin estimator exactly unbiased for the order-`cap`
+    /// truncation of the kernel (§4.2), instead of carrying an
+    /// uncontrolled bias at the cap.
+    #[inline]
+    pub fn pmf_capped(&self, n: u32, cap: u32) -> f64 {
+        if n < cap {
+            self.pmf(n)
+        } else {
+            self.survival(cap)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::seed_from(7);
+        let mut b = Rng::seed_from(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn split_decorrelates() {
+        let mut a = Rng::seed_from(7);
+        let mut c = a.split();
+        let x: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let y: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_ne!(x, y);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Rng::seed_from(1);
+        for _ in 0..10_000 {
+            let u = rng.f64();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut rng = Rng::seed_from(3);
+        let mut counts = [0usize; 5];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[rng.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.2).abs() < 0.01, "frac={frac}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::seed_from(11);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s += z;
+            s2 += z * z;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn geometric_p2_matches_paper_measure() {
+        let g = Geometric::new(2.0);
+        // P[N=n] = 2^-(n+1): normalized exactly as in the paper.
+        assert!((g.pmf(0) - 0.5).abs() < 1e-15);
+        assert!((g.pmf(3) - 1.0 / 16.0).abs() < 1e-15);
+        let total: f64 = (0..64).map(|n| g.pmf(n)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geometric_sampler_matches_pmf() {
+        let g = Geometric::new(2.0);
+        let mut rng = Rng::seed_from(5);
+        let n = 200_000;
+        let mut counts = [0usize; 8];
+        for _ in 0..n {
+            let k = g.sample(&mut rng) as usize;
+            if k < counts.len() {
+                counts[k] += 1;
+            }
+        }
+        for (k, &c) in counts.iter().enumerate() {
+            let expected = g.pmf(k as u32);
+            let got = c as f64 / n as f64;
+            assert!(
+                (got - expected).abs() < 0.005,
+                "order {k}: got {got}, expected {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn geometric_general_p_normalized() {
+        for &p in &[1.5, 3.0, 10.0] {
+            let g = Geometric::new(p);
+            let total: f64 = (0..500).map(|n| g.pmf(n)).sum();
+            assert!((total - 1.0).abs() < 1e-9, "p={p} total={total}");
+            assert!((g.pmf(2) * g.inv_pmf(2) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pmf_capped_sums_to_one() {
+        for &p in &[1.5, 2.0, 4.0] {
+            let g = Geometric::new(p);
+            for cap in [0u32, 1, 5, 12] {
+                let total: f64 = (0..=cap).map(|n| g.pmf_capped(n, cap)).sum();
+                assert!((total - 1.0).abs() < 1e-12, "p={p} cap={cap} total={total}");
+            }
+        }
+    }
+
+    #[test]
+    fn pmf_capped_matches_capped_sampler() {
+        let g = Geometric::new(2.0);
+        let mut rng = Rng::seed_from(21);
+        let cap = 3u32;
+        let n = 200_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[g.sample_capped(cap, &mut rng) as usize] += 1;
+        }
+        for (k, &c) in counts.iter().enumerate() {
+            let expected = g.pmf_capped(k as u32, cap);
+            let got = c as f64 / n as f64;
+            assert!((got - expected).abs() < 0.005, "order {k}: {got} vs {expected}");
+        }
+    }
+
+    #[test]
+    fn geometric_capped_never_exceeds() {
+        let g = Geometric::new(1.2); // heavy tail
+        let mut rng = Rng::seed_from(9);
+        for _ in 0..10_000 {
+            assert!(g.sample_capped(6, &mut rng) <= 6);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::seed_from(2);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Rng::seed_from(4);
+        let idx = rng.sample_indices(50, 20);
+        assert_eq!(idx.len(), 20);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+    }
+}

@@ -1,0 +1,226 @@
+//! Bit-packed Rademacher (`{±1}^d`) vectors.
+//!
+//! The Random Maclaurin map multiplies together `N` projections
+//! `ω_j^T x` per output feature. Storing each ω as one bit per coordinate
+//! (0 ↦ +1, 1 ↦ −1) cuts the map's memory footprint 32× relative to an
+//! f32 matrix — the dominant cost at large `D` — and the projection
+//! becomes a sign-flipped sum which the hot path unrolls word-by-word.
+//!
+//! The packed form is also the *canonical serialization*: the Python
+//! oracle and the PJRT artifact path expand the very same words to ±1
+//! floats, so all three engines agree bit-for-bit on the sampled map.
+
+use crate::rng::Rng;
+
+/// A stack of `rows` bit-packed Rademacher vectors of dimension `dim`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RademacherMatrix {
+    dim: usize,
+    rows: usize,
+    words_per_row: usize,
+    /// Row-major packed bits; bit `k` of word `w` in a row encodes
+    /// coordinate `w * 64 + k`: 0 ↦ +1.0, 1 ↦ −1.0.
+    words: Vec<u64>,
+}
+
+impl RademacherMatrix {
+    /// Sample `rows` independent Rademacher vectors in `{±1}^dim` using
+    /// fair coin tosses (one `u64` draw per 64 coordinates).
+    pub fn sample(rows: usize, dim: usize, rng: &mut Rng) -> Self {
+        let words_per_row = dim.div_ceil(64);
+        let mut words = Vec::with_capacity(rows * words_per_row);
+        for _ in 0..rows {
+            for w in 0..words_per_row {
+                let mut bits = rng.next_u64();
+                // Mask tail bits beyond `dim` so equality/serialization is
+                // canonical.
+                let used = (dim - w * 64).min(64);
+                if used < 64 {
+                    bits &= (1u64 << used) - 1;
+                }
+                words.push(bits);
+            }
+        }
+        RademacherMatrix { dim, rows, words_per_row, words }
+    }
+
+    /// Number of vectors.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Vector dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Raw packed words (row-major), for serialization.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from packed words (inverse of [`Self::words`]).
+    pub fn from_words(rows: usize, dim: usize, words: Vec<u64>) -> Self {
+        let words_per_row = dim.div_ceil(64);
+        assert_eq!(words.len(), rows * words_per_row, "packed length mismatch");
+        RademacherMatrix { dim, rows, words_per_row, words }
+    }
+
+    /// Sign of coordinate `j` of row `i` as ±1.0.
+    #[inline]
+    pub fn sign(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.dim);
+        let w = self.words[i * self.words_per_row + j / 64];
+        if (w >> (j % 64)) & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// `ω_i^T x`: sign-flipped sum of `x` under row `i`.
+    ///
+    /// Word-unrolled: each 64-coordinate chunk tests bits of a local copy
+    /// of the word, which the compiler turns into branch-free selects.
+    pub fn project(&self, i: usize, x: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), self.dim);
+        let row = &self.words[i * self.words_per_row..(i + 1) * self.words_per_row];
+        let mut acc = 0.0f32;
+        for (w, chunk) in row.iter().zip(x.chunks(64)) {
+            let mut bits = *w;
+            for &v in chunk {
+                // bit set ⇒ −v, clear ⇒ +v.
+                acc += if bits & 1 == 0 { v } else { -v };
+                bits >>= 1;
+            }
+        }
+        acc
+    }
+
+    /// Project every row at once: `out[i] = ω_i^T x`.
+    pub fn project_all(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.project(i, x);
+        }
+    }
+
+    /// Expand row `i` into a dense ±1.0 f32 vector (PJRT/oracle path).
+    pub fn dense_row(&self, i: usize) -> Vec<f32> {
+        (0..self.dim).map(|j| self.sign(i, j)).collect()
+    }
+
+    /// Expand the whole matrix row-major into ±1.0 f32s.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rows * self.dim);
+        for i in 0..self.rows {
+            for j in 0..self.dim {
+                out.push(self.sign(i, j));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_project(m: &RademacherMatrix, i: usize, x: &[f32]) -> f32 {
+        (0..x.len()).map(|j| m.sign(i, j) * x[j]).sum()
+    }
+
+    #[test]
+    fn signs_are_pm_one() {
+        let mut rng = Rng::seed_from(1);
+        let m = RademacherMatrix::sample(4, 37, &mut rng);
+        for i in 0..4 {
+            for j in 0..37 {
+                let s = m.sign(i, j);
+                assert!(s == 1.0 || s == -1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn project_matches_naive_all_widths() {
+        let mut rng = Rng::seed_from(2);
+        for dim in [1, 3, 63, 64, 65, 100, 128, 200] {
+            let m = RademacherMatrix::sample(3, dim, &mut rng);
+            let x: Vec<f32> = (0..dim).map(|k| (k as f32 * 0.37).sin()).collect();
+            for i in 0..3 {
+                let fast = m.project(i, &x);
+                let slow = naive_project(&m, i, &x);
+                assert!(
+                    (fast - slow).abs() < 1e-4,
+                    "dim={dim} row={i}: {fast} vs {slow}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Rng::seed_from(3);
+        let m = RademacherMatrix::sample(5, 70, &mut rng);
+        let d = m.to_dense();
+        assert_eq!(d.len(), 5 * 70);
+        for i in 0..5 {
+            for j in 0..70 {
+                assert_eq!(d[i * 70 + j], m.sign(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let mut rng = Rng::seed_from(4);
+        let m = RademacherMatrix::sample(7, 90, &mut rng);
+        let m2 = RademacherMatrix::from_words(7, 90, m.words().to_vec());
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn balanced_signs() {
+        let mut rng = Rng::seed_from(5);
+        let m = RademacherMatrix::sample(1000, 64, &mut rng);
+        let total: f64 = (0..1000)
+            .flat_map(|i| (0..64).map(move |j| (i, j)))
+            .map(|(i, j)| m.sign(i, j) as f64)
+            .sum();
+        let frac = total / (1000.0 * 64.0);
+        assert!(frac.abs() < 0.01, "sign bias {frac}");
+    }
+
+    #[test]
+    fn expectation_preserves_dot_product() {
+        // Lemma 6 of the paper: E[ω^T x · ω^T y] = <x, y>.
+        let mut rng = Rng::seed_from(6);
+        let d = 16;
+        let x: Vec<f32> = (0..d).map(|k| (k as f32 * 0.3).cos()).collect();
+        let y: Vec<f32> = (0..d).map(|k| (k as f32 * 0.7).sin()).collect();
+        let exact: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let trials = 200_000;
+        let m = RademacherMatrix::sample(trials, d, &mut rng);
+        let mean: f64 = (0..trials)
+            .map(|i| (m.project(i, &x) * m.project(i, &y)) as f64)
+            .sum::<f64>()
+            / trials as f64;
+        assert!(
+            (mean - exact as f64).abs() < 0.05,
+            "mean {mean} vs exact {exact}"
+        );
+    }
+
+    #[test]
+    fn project_all_matches_project() {
+        let mut rng = Rng::seed_from(7);
+        let m = RademacherMatrix::sample(9, 33, &mut rng);
+        let x: Vec<f32> = (0..33).map(|k| k as f32 * 0.01 - 0.2).collect();
+        let mut out = vec![0.0; 9];
+        m.project_all(&x, &mut out);
+        for i in 0..9 {
+            assert_eq!(out[i], m.project(i, &x));
+        }
+    }
+}

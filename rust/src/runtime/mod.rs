@@ -1,0 +1,277 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once, producing
+//! `artifacts/<name>.hlo.txt` (HLO **text** — the only interchange format
+//! xla_extension 0.5.1 accepts from jax ≥ 0.5 lowering, see DESIGN.md)
+//! plus `<name>.json` manifests. This module wraps the `xla` crate:
+//!
+//! ```text
+//! PjRtClient::cpu() → HloModuleProto::from_text_file → XlaComputation
+//!   → client.compile → PjRtLoadedExecutable.execute(literals)
+//! ```
+//!
+//! Python is never touched at runtime — a compiled [`LoadedArtifact`] is
+//! a self-contained executable behind a `Send + Sync` handle, shared by
+//! the coordinator's worker threads.
+
+pub mod tensor;
+
+pub use tensor::Tensor;
+
+use crate::config::json::Json;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Shape + dtype of one artifact argument or result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let name = v.req("name")?.as_str().unwrap_or_default().to_string();
+        let shape = v
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("shape must be an array".into()))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| Error::Config("bad dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v.req("dtype")?.as_str().unwrap_or("f32").to_string();
+        if dtype != "f32" {
+            return Err(Error::Runtime(format!("unsupported dtype {dtype}")));
+        }
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// Parsed `<name>.json` manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactMeta {
+    /// Parse a manifest JSON document.
+    pub fn parse(text: &str) -> Result<ArtifactMeta> {
+        let v = Json::parse(text)?;
+        let name = v.req("name")?.as_str().unwrap_or_default().to_string();
+        let kind = v
+            .req("config")?
+            .req("kind")?
+            .as_str()
+            .unwrap_or_default()
+            .to_string();
+        let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.req(key)?
+                .as_arr()
+                .ok_or_else(|| Error::Config(format!("{key} must be an array")))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(ArtifactMeta {
+            name,
+            kind,
+            inputs: parse_specs("inputs")?,
+            outputs: parse_specs("outputs")?,
+        })
+    }
+
+    /// Batch dimension of the first input (transform/score artifacts).
+    pub fn batch(&self) -> usize {
+        self.inputs.first().and_then(|s| s.shape.first().copied()).unwrap_or(0)
+    }
+}
+
+/// A PJRT client bound to an artifact directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+}
+
+impl Engine {
+    /// Connect to the CPU PJRT plugin.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("pjrt client: {e}")))?;
+        Ok(Engine { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    /// Platform string (e.g. "cpu") — for logs and `rfdot info`.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Directory artifacts are loaded from.
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Load `<name>.hlo.txt` + `<name>.json` and compile the module.
+    pub fn load(&self, name: &str) -> Result<LoadedArtifact> {
+        let hlo_path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let meta_path = self.artifact_dir.join(format!("{name}.json"));
+        if !hlo_path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {} not found — run `make artifacts`",
+                hlo_path.display()
+            )));
+        }
+        let meta = ArtifactMeta::parse(&std::fs::read_to_string(&meta_path)?)?;
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", hlo_path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+        Ok(LoadedArtifact { meta, exe: Arc::new(exe) })
+    }
+}
+
+/// A compiled artifact ready to execute. Clone-able and `Send + Sync`;
+/// clones share the underlying executable.
+#[derive(Clone)]
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+}
+
+impl LoadedArtifact {
+    /// Pre-marshal a host tensor into an `xla::Literal` once (for
+    /// loop-invariant arguments like the feature map's Omega/mask/coeff:
+    /// rebuilding those literals per call dominated the serving hot
+    /// path — see EXPERIMENTS.md section Perf). Note: `execute_b` with
+    /// device-resident buffers would also skip the host->device copy,
+    /// but this xla_extension build aborts on buffer-literal size
+    /// bookkeeping in that path, so cached literals are the safe fast
+    /// route.
+    pub fn marshal(&self, t: &Tensor) -> Result<xla::Literal> {
+        t.to_literal()
+    }
+
+    /// Execute with pre-marshalled literals (borrowed; no per-call
+    /// literal construction). Shape validation against the manifest is
+    /// the caller's duty; PJRT still validates internally.
+    pub fn execute_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.meta.name)))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
+        if parts.len() != self.meta.outputs.len() {
+            return Err(Error::shape(
+                format!("{} outputs", self.meta.outputs.len()),
+                format!("{}", parts.len()),
+            ));
+        }
+        parts
+            .into_iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, spec)| Tensor::from_literal(&lit, &spec.shape))
+            .collect()
+    }
+
+    /// Execute with host tensors; validates shapes against the manifest
+    /// and unpacks the return tuple into host tensors.
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(Error::shape(
+                format!("{} inputs", self.meta.inputs.len()),
+                format!("{}", inputs.len()),
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.meta.inputs) {
+            if t.shape() != spec.shape {
+                return Err(Error::shape(
+                    format!("{} {:?}", spec.name, spec.shape),
+                    format!("{:?}", t.shape()),
+                ));
+            }
+            literals.push(t.to_literal()?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.meta.name)))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
+        // aot.py lowers with return_tuple=True: unpack n outputs.
+        let parts = out
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
+        if parts.len() != self.meta.outputs.len() {
+            return Err(Error::shape(
+                format!("{} outputs", self.meta.outputs.len()),
+                format!("{}", parts.len()),
+            ));
+        }
+        parts
+            .into_iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, spec)| Tensor::from_literal(&lit, &spec.shape))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{
+          "name": "t", "config": {"kind": "transform", "batch": 4},
+          "inputs": [{"name": "x", "shape": [4, 2], "dtype": "f32"}],
+          "outputs": [{"name": "z", "shape": [4, 8], "dtype": "f32"}],
+          "format": "hlo-text/return-tuple"
+        }"#;
+        let m = ArtifactMeta::parse(text).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.kind, "transform");
+        assert_eq!(m.batch(), 4);
+        assert_eq!(m.inputs[0].element_count(), 8);
+    }
+
+    #[test]
+    fn manifest_rejects_bad_dtype() {
+        let text = r#"{
+          "name": "t", "config": {"kind": "transform"},
+          "inputs": [{"name": "x", "shape": [4], "dtype": "f64"}],
+          "outputs": []
+        }"#;
+        assert!(ArtifactMeta::parse(text).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let eng = match Engine::cpu(std::env::temp_dir()) {
+            Ok(e) => e,
+            Err(_) => return, // PJRT unavailable: skip
+        };
+        let err = match eng.load("definitely_missing") {
+            Err(e) => e,
+            Ok(_) => panic!("load of a missing artifact must fail"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,128 @@
+//! Host-side f32 tensors marshalled to/from PJRT literals.
+
+use crate::{Error, Result};
+
+/// A dense row-major f32 tensor of arbitrary rank (rank 0 = scalar).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Wrap a buffer with a shape.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::shape(
+                format!("{shape:?} ({n} elems)"),
+                format!("{} elems", data.len()),
+            ));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    /// Zero-filled tensor.
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// From a 2-D matrix.
+    pub fn from_matrix(m: &crate::linalg::Matrix) -> Tensor {
+        Tensor { shape: vec![m.rows(), m.cols()], data: m.as_slice().to_vec() }
+    }
+
+    /// Into a 2-D matrix (errors unless rank 2).
+    pub fn into_matrix(self) -> Result<crate::linalg::Matrix> {
+        if self.shape.len() != 2 {
+            return Err(Error::shape("rank 2", format!("rank {}", self.shape.len())));
+        }
+        crate::linalg::Matrix::from_vec(self.shape[0], self.shape[1], self.data)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Convert to an `xla::Literal` (flat vec + reshape).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // PJRT scalars: reshape to rank 0.
+            return lit
+                .reshape(&[])
+                .map_err(|e| Error::Runtime(format!("reshape scalar: {e}")));
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims)
+            .map_err(|e| Error::Runtime(format!("reshape {:?}: {e}", self.shape)))
+    }
+
+    /// Read back from an `xla::Literal`, validating the element count
+    /// against `shape`.
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+        let data = lit
+            .to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("literal to_vec: {e}")))?;
+        Tensor::new(shape.to_vec(), data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_validates() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(Tensor::scalar(4.0).shape(), &[] as &[usize]);
+        assert_eq!(Tensor::zeros(vec![2, 2]).data(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn matrix_roundtrip() {
+        let m = crate::linalg::Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let t = Tensor::from_matrix(&m);
+        assert_eq!(t.shape(), &[2, 2]);
+        let m2 = t.into_matrix().unwrap();
+        assert_eq!(m, m2);
+        assert!(Tensor::scalar(1.0).into_matrix().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        // Requires the xla extension to be loadable; the literal API is
+        // host-only (no PJRT client needed).
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let t2 = Tensor::from_literal(&lit, &[2, 3]).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let t = Tensor::scalar(2.5);
+        let lit = t.to_literal().unwrap();
+        let t2 = Tensor::from_literal(&lit, &[]).unwrap();
+        assert_eq!(t2.data(), &[2.5]);
+    }
+}

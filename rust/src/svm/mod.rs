@@ -1,0 +1,91 @@
+//! Support vector machine substrates.
+//!
+//! The paper benchmarks random feature maps by replacing
+//! `kernel + LIBSVM` with `features + LIBLINEAR`. Neither library is
+//! reachable in this environment, so both solvers are implemented here:
+//!
+//! * [`smo`] — a working-set SMO dual solver with an LRU kernel-row
+//!   cache, the LIBSVM algorithm family. Its prediction cost is
+//!   `O(n_sv · d)` per example — the paper's *curse of support* that the
+//!   random features eliminate.
+//! * [`linear`] — dual coordinate descent for linear SVMs
+//!   (Hsieh et al., ICML 2008), the LIBLINEAR algorithm. Training is
+//!   `O(nnz)` per epoch and prediction is a single dot product.
+//!
+//! Both expose [`Classifier`] so the bench harness can time
+//! `train`/`predict` uniformly.
+
+pub mod linear;
+pub mod smo;
+
+pub use linear::{LinearLoss, LinearSvm, LinearSvmParams};
+pub use smo::{KernelSvm, SmoParams};
+
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+
+/// A trained binary classifier.
+pub trait Classifier: Send + Sync {
+    /// Decision value for one example (sign = predicted label).
+    fn decision(&self, x: &[f32]) -> f32;
+
+    /// Predicted label in {−1, +1}.
+    fn predict(&self, x: &[f32]) -> f32 {
+        if self.decision(x) >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Fraction of correct predictions on a labeled set.
+    fn accuracy(&self, x: &Matrix, y: &[f32]) -> f64 {
+        assert_eq!(x.rows(), y.len());
+        if y.is_empty() {
+            return 0.0;
+        }
+        let correct = (0..x.rows()).filter(|&i| self.predict(x.row(i)) == y[i]).count();
+        correct as f64 / y.len() as f64
+    }
+
+    /// Accuracy on a [`Dataset`].
+    fn accuracy_on(&self, ds: &Dataset) -> f64 {
+        self.accuracy(&ds.x, &ds.y)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testdata {
+    use crate::data::Dataset;
+    use crate::linalg::Matrix;
+    use crate::rng::Rng;
+
+    /// Linearly separable 2-D blobs with margin.
+    pub fn blobs(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::seed_from(seed);
+        let mut rows = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let label = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+            let cx = if label > 0.0 { 1.5 } else { -1.5 };
+            rows.push(vec![cx + 0.5 * rng.normal() as f32, 0.5 * rng.normal() as f32]);
+            y.push(label);
+        }
+        Dataset::new("blobs", Matrix::from_rows(&rows).unwrap(), y).unwrap()
+    }
+
+    /// XOR-like dataset: not linearly separable, easy for a quadratic
+    /// kernel.
+    pub fn xor(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::seed_from(seed);
+        let mut rows = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let a = rng.f32() * 2.0 - 1.0;
+            let b = rng.f32() * 2.0 - 1.0;
+            rows.push(vec![a, b]);
+            y.push(if a * b >= 0.0 { 1.0 } else { -1.0 });
+        }
+        Dataset::new("xor", Matrix::from_rows(&rows).unwrap(), y).unwrap()
+    }
+}

@@ -1,0 +1,394 @@
+//! Kernel SVM via SMO with working-set selection — the LIBSVM stand-in.
+//!
+//! Solves the C-SVM dual
+//! `min ½ αᵀQα − eᵀα  s.t. 0 ≤ α_i ≤ C, yᵀα = 0` with
+//! `Q_ij = y_i y_j K(x_i, x_j)` using LIBSVM's WSS-1 (maximal violating
+//! pair) selection, an LRU kernel-row cache and shrinking-free plain
+//! iteration (our problem sizes after the paper's 20k training cap make
+//! the cache the part that matters).
+//!
+//! The trained model predicts with
+//! `sign(Σ_{i ∈ SV} α_i y_i K(x_i, x))` — `O(n_sv · d)` per test point,
+//! which is exactly the *curse of support* (§1) the Random Maclaurin
+//! features are designed to remove.
+
+use super::Classifier;
+use crate::data::Dataset;
+use crate::kernels::DotProductKernel;
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+
+/// SMO hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SmoParams {
+    /// Soft-margin parameter `C`.
+    pub c: f64,
+    /// KKT violation tolerance (LIBSVM default 1e-3).
+    pub tol: f64,
+    /// Hard cap on optimization iterations.
+    pub max_iter: usize,
+    /// Kernel cache budget in rows (LRU).
+    pub cache_rows: usize,
+}
+
+impl Default for SmoParams {
+    fn default() -> Self {
+        SmoParams { c: 1.0, tol: 1e-3, max_iter: 200_000, cache_rows: 512 }
+    }
+}
+
+/// LRU cache of kernel matrix rows.
+struct RowCache {
+    /// slot -> (owner index, row values)
+    slots: Vec<(usize, Vec<f32>)>,
+    /// example index -> slot + recency stamp
+    lookup: Vec<Option<(usize, u64)>>,
+    clock: u64,
+    capacity: usize,
+}
+
+impl RowCache {
+    fn new(n: usize, capacity: usize) -> Self {
+        RowCache {
+            slots: Vec::new(),
+            lookup: vec![None; n],
+            clock: 0,
+            capacity: capacity.max(2),
+        }
+    }
+
+    /// Fetch row `i`, computing it with `compute` on a miss.
+    fn get(&mut self, i: usize, compute: impl FnOnce() -> Vec<f32>) -> &[f32] {
+        self.clock += 1;
+        if let Some((slot, _)) = self.lookup[i] {
+            self.lookup[i] = Some((slot, self.clock));
+            return &self.slots[slot].1;
+        }
+        let row = compute();
+        let slot = if self.slots.len() < self.capacity {
+            self.slots.push((i, row));
+            self.slots.len() - 1
+        } else {
+            // Evict the least recently used slot.
+            let victim = self
+                .slots
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (owner, _))| {
+                    self.lookup[*owner].map(|(_, t)| t).unwrap_or(0)
+                })
+                .map(|(s, _)| s)
+                .expect("cache is non-empty");
+            let old_owner = self.slots[victim].0;
+            self.lookup[old_owner] = None;
+            self.slots[victim] = (i, row);
+            victim
+        };
+        self.lookup[i] = Some((slot, self.clock));
+        &self.slots[slot].1
+    }
+}
+
+/// A trained kernel SVM model.
+pub struct KernelSvm {
+    /// Support vectors (rows).
+    sv: Matrix,
+    /// `α_i y_i` per support vector.
+    sv_coef: Vec<f32>,
+    /// Decision bias `b` (decision = Σ coef·K(sv, x) + b). For a free
+    /// SV the KKT conditions give `b = −y_i·grad_i`.
+    bias: f64,
+    kernel: Box<dyn DotProductKernel>,
+    /// Iterations the solver used.
+    pub iterations: usize,
+}
+
+impl KernelSvm {
+    /// Train on a dataset with SMO.
+    pub fn train(
+        ds: &Dataset,
+        kernel: Box<dyn DotProductKernel>,
+        params: SmoParams,
+    ) -> Result<Self> {
+        let n = ds.len();
+        if n < 2 {
+            return Err(Error::Solver("need at least 2 training examples".into()));
+        }
+        if !(params.c > 0.0) {
+            return Err(Error::Config(format!("C must be positive, got {}", params.c)));
+        }
+        let y = &ds.y;
+        let x = &ds.x;
+
+        // Gradient of the dual objective: g_i = (Qα)_i − 1; starts at −1.
+        let mut alpha = vec![0.0f64; n];
+        let mut grad = vec![-1.0f64; n];
+        let mut cache = RowCache::new(n, params.cache_rows);
+
+        let kernel_row = |i: usize| -> Vec<f32> {
+            (0..n).map(|j| kernel.eval(x.row(i), x.row(j)) as f32).collect()
+        };
+
+        let mut iterations = 0usize;
+        loop {
+            // WSS-1: i = argmax over "up" set of −y_i g_i,
+            //        j = argmin over "down" set of −y_j g_j.
+            let mut g_max = f64::NEG_INFINITY;
+            let mut g_min = f64::INFINITY;
+            let mut i_sel = usize::MAX;
+            let mut j_sel = usize::MAX;
+            for t in 0..n {
+                let yg = -y[t] as f64 * grad[t];
+                let up = (y[t] > 0.0 && alpha[t] < params.c) || (y[t] < 0.0 && alpha[t] > 0.0);
+                let down = (y[t] > 0.0 && alpha[t] > 0.0) || (y[t] < 0.0 && alpha[t] < params.c);
+                if up && yg > g_max {
+                    g_max = yg;
+                    i_sel = t;
+                }
+                if down && yg < g_min {
+                    g_min = yg;
+                    j_sel = t;
+                }
+            }
+            if i_sel == usize::MAX || j_sel == usize::MAX || g_max - g_min < params.tol {
+                break;
+            }
+            if iterations >= params.max_iter {
+                break;
+            }
+            iterations += 1;
+
+            let (i, j) = (i_sel, j_sel);
+            let k_ii = kernel.eval(x.row(i), x.row(i));
+            let k_jj = kernel.eval(x.row(j), x.row(j));
+            let k_ij = kernel.eval(x.row(i), x.row(j));
+            let eta = (k_ii + k_jj - 2.0 * k_ij).max(1e-12);
+
+            // Working-set sub-problem (classic two-variable update).
+            let yi = y[i] as f64;
+            let yj = y[j] as f64;
+            let delta = (-yi * grad[i] + yj * grad[j]) / eta;
+            let (old_ai, old_aj) = (alpha[i], alpha[j]);
+            let mut ai = old_ai + yi * delta;
+            // Clip to the box along the equality constraint.
+            let sum = yi * old_ai + yj * old_aj;
+            ai = ai.clamp(0.0, params.c);
+            let mut aj = yj * (sum - yi * ai);
+            aj = aj.clamp(0.0, params.c);
+            ai = yi * (sum - yj * aj);
+            ai = ai.clamp(0.0, params.c);
+            alpha[i] = ai;
+            alpha[j] = aj;
+
+            // Gradient update with the two touched rows.
+            let (d_i, d_j) = (alpha[i] - old_ai, alpha[j] - old_aj);
+            if d_i != 0.0 {
+                let row_i = cache.get(i, || kernel_row(i));
+                for t in 0..n {
+                    grad[t] += d_i * yi * y[t] as f64 * row_i[t] as f64;
+                }
+            }
+            if d_j != 0.0 {
+                let row_j = cache.get(j, || kernel_row(j));
+                for t in 0..n {
+                    grad[t] += d_j * yj * y[t] as f64 * row_j[t] as f64;
+                }
+            }
+        }
+
+        // Bias: average of −y_i g_i over free vectors, else midpoint of
+        // the feasible interval.
+        let mut bias_sum = 0.0;
+        let mut bias_cnt = 0usize;
+        let (mut ub, mut lb) = (f64::INFINITY, f64::NEG_INFINITY);
+        for t in 0..n {
+            let yg = -(y[t] as f64) * grad[t];
+            if alpha[t] > 1e-12 && alpha[t] < params.c - 1e-12 {
+                bias_sum += yg;
+                bias_cnt += 1;
+            }
+            let up = (y[t] > 0.0 && alpha[t] < params.c) || (y[t] < 0.0 && alpha[t] > 0.0);
+            let down = (y[t] > 0.0 && alpha[t] > 0.0) || (y[t] < 0.0 && alpha[t] < params.c);
+            if up {
+                ub = ub.min(yg);
+            }
+            if down {
+                lb = lb.max(yg);
+            }
+        }
+        let bias = if bias_cnt > 0 { bias_sum / bias_cnt as f64 } else { (ub + lb) / 2.0 };
+
+        // Collect support vectors.
+        let mut sv_rows = Vec::new();
+        let mut sv_coef = Vec::new();
+        for t in 0..n {
+            if alpha[t] > 1e-12 {
+                sv_rows.push(x.row(t).to_vec());
+                sv_coef.push((alpha[t] * y[t] as f64) as f32);
+            }
+        }
+        if sv_rows.is_empty() {
+            return Err(Error::Solver("no support vectors found".into()));
+        }
+        Ok(KernelSvm {
+            sv: Matrix::from_rows(&sv_rows).expect("uniform rows"),
+            sv_coef,
+            bias,
+            kernel,
+            iterations,
+        })
+    }
+
+    /// Number of support vectors — the prediction cost driver.
+    pub fn n_support(&self) -> usize {
+        self.sv_coef.len()
+    }
+
+    /// Maximal KKT violation of a (re-)evaluated model on its training
+    /// set — exposed for convergence tests.
+    pub fn kkt_violation(&self, ds: &Dataset, c: f64) -> f64 {
+        // Recompute functional margins; violation per point:
+        //   alpha = 0   requires y f(x) >= 1
+        //   0 < a < C   requires y f(x) == 1
+        //   alpha = C   requires y f(x) <= 1
+        // We do not retain alphas per training point here, so measure the
+        // weaker (but sufficient for our tests) hinge-KKT residual on
+        // margin violations of non-SVs:
+        let mut worst = 0.0f64;
+        for i in 0..ds.len() {
+            let m = ds.y[i] as f64 * self.decision(ds.x.row(i)) as f64;
+            // Any point with margin < 1 must be "paying" at most C; the
+            // residual we can check without alphas is margin deficit
+            // beyond the soft-margin allowance:
+            if m < -1.0 - c {
+                worst = worst.max(-1.0 - c - m);
+            }
+        }
+        worst
+    }
+}
+
+impl Classifier for KernelSvm {
+    fn decision(&self, x: &[f32]) -> f32 {
+        let mut acc = 0.0f64;
+        for (i, &coef) in self.sv_coef.iter().enumerate() {
+            acc += coef as f64 * self.kernel.eval(self.sv.row(i), x);
+        }
+        (acc + self.bias) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Homogeneous, Polynomial};
+    use crate::svm::testdata::{blobs, xor};
+
+    /// A linear dot-product kernel for baseline checks.
+    #[derive(Clone, Copy, Debug)]
+    struct LinearK;
+    impl DotProductKernel for LinearK {
+        fn name(&self) -> String {
+            "linear".into()
+        }
+        fn coeff(&self, n: u32) -> f64 {
+            if n == 1 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        fn f(&self, t: f64) -> f64 {
+            t
+        }
+        fn f_prime(&self, _t: f64) -> f64 {
+            1.0
+        }
+        fn max_order(&self) -> Option<u32> {
+            Some(1)
+        }
+    }
+
+    #[test]
+    fn separable_blobs_linear_kernel() {
+        let ds = blobs(200, 1);
+        let model = KernelSvm::train(&ds, Box::new(LinearK), SmoParams::default()).unwrap();
+        assert!(model.accuracy_on(&ds) > 0.97, "acc {}", model.accuracy_on(&ds));
+        assert!(model.n_support() < ds.len(), "not all points should be SVs");
+    }
+
+    #[test]
+    fn xor_needs_nonlinear_kernel() {
+        let ds = xor(300, 2);
+        let lin = KernelSvm::train(&ds, Box::new(LinearK), SmoParams::default()).unwrap();
+        // XOR has points arbitrarily close to the decision boundary, so a
+        // weakly-regularized margin (larger C) is needed to pin them.
+        let quad = KernelSvm::train(
+            &ds,
+            Box::new(Homogeneous::new(2)),
+            SmoParams { c: 100.0, ..Default::default() },
+        )
+        .unwrap();
+        let (acc_lin, acc_quad) = (lin.accuracy_on(&ds), quad.accuracy_on(&ds));
+        assert!(acc_lin < 0.75, "linear should fail on xor, got {acc_lin}");
+        assert!(acc_quad > 0.95, "quadratic should solve xor, got {acc_quad}");
+    }
+
+    #[test]
+    fn poly_kernel_generalizes() {
+        let mut ds = xor(600, 3);
+        ds.normalize_rows();
+        let (tr, te) = ds.split(0.5, 10_000, &mut crate::rng::Rng::seed_from(4));
+        let model = KernelSvm::train(
+            &tr,
+            Box::new(Polynomial::new(3, 1.0)),
+            SmoParams { c: 100.0, ..Default::default() },
+        )
+        .unwrap();
+        let acc = model.accuracy_on(&te);
+        assert!(acc > 0.88, "test acc {acc}");
+    }
+
+    #[test]
+    fn respects_max_iter() {
+        let ds = xor(200, 5);
+        let params = SmoParams { max_iter: 3, ..Default::default() };
+        let model = KernelSvm::train(&ds, Box::new(Homogeneous::new(2)), params).unwrap();
+        assert!(model.iterations <= 3);
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        let ds = blobs(200, 1);
+        assert!(KernelSvm::train(
+            &ds,
+            Box::new(LinearK),
+            SmoParams { c: 0.0, ..Default::default() }
+        )
+        .is_err());
+        let tiny = blobs(2, 1);
+        assert!(KernelSvm::train(&tiny, Box::new(LinearK), SmoParams::default()).is_ok());
+    }
+
+    #[test]
+    fn decision_sign_flips_with_labels() {
+        let ds = blobs(100, 7);
+        let model = KernelSvm::train(&ds, Box::new(LinearK), SmoParams::default()).unwrap();
+        let d_pos = model.decision(&[2.0, 0.0]);
+        let d_neg = model.decision(&[-2.0, 0.0]);
+        assert!(d_pos > 0.0 && d_neg < 0.0);
+    }
+
+    #[test]
+    fn cache_eviction_is_correct() {
+        // Tiny cache forces eviction; results must not change.
+        let ds = xor(150, 9);
+        let small = SmoParams { cache_rows: 2, ..Default::default() };
+        let big = SmoParams { cache_rows: 1024, ..Default::default() };
+        let m1 = KernelSvm::train(&ds, Box::new(Homogeneous::new(2)), small).unwrap();
+        let m2 = KernelSvm::train(&ds, Box::new(Homogeneous::new(2)), big).unwrap();
+        // Same optimization path -> same support count and accuracy.
+        assert_eq!(m1.n_support(), m2.n_support());
+        assert_eq!(m1.accuracy_on(&ds), m2.accuracy_on(&ds));
+    }
+}

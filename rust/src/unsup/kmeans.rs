@@ -1,0 +1,208 @@
+//! Lloyd's k-means (k-means++ seeding) in feature space.
+//!
+//! Run on Random Maclaurin features this *is* approximate kernel
+//! k-means, with O(k·D) assignment per point instead of the exact
+//! method's O(n) kernel evaluations — the curse-of-support fix for
+//! clustering the paper's intro promises.
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::{Error, Result};
+
+/// k-means hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct KMeansParams {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Relative inertia improvement below which iteration stops.
+    pub tol: f64,
+}
+
+impl Default for KMeansParams {
+    fn default() -> Self {
+        KMeansParams { k: 8, max_iters: 100, tol: 1e-4 }
+    }
+}
+
+/// A fitted clustering.
+pub struct KMeansModel {
+    /// `k × D` centroid matrix.
+    pub centroids: Matrix,
+    /// Final within-cluster sum of squares.
+    pub inertia: f64,
+    /// Lloyd iterations used.
+    pub iterations: usize,
+}
+
+impl KMeansModel {
+    /// Index of the nearest centroid.
+    pub fn assign(&self, z: &[f32]) -> usize {
+        let mut best = 0;
+        let mut best_d = f32::INFINITY;
+        for c in 0..self.centroids.rows() {
+            let row = self.centroids.row(c);
+            let d: f32 = row.iter().zip(z).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Assign every row.
+    pub fn assign_batch(&self, z: &Matrix) -> Vec<usize> {
+        (0..z.rows()).map(|i| self.assign(z.row(i))).collect()
+    }
+}
+
+/// Lloyd's algorithm with k-means++ seeding on the rows of `z`.
+pub fn kmeans(z: &Matrix, params: KMeansParams, rng: &mut Rng) -> Result<KMeansModel> {
+    let n = z.rows();
+    let d = z.cols();
+    if params.k == 0 || n < params.k {
+        return Err(Error::Config(format!("kmeans needs n >= k > 0 (n={n}, k={})", params.k)));
+    }
+
+    // k-means++ seeding.
+    let mut centroids = Matrix::zeros(params.k, d);
+    let first = rng.below(n as u64) as usize;
+    centroids.row_mut(0).copy_from_slice(z.row(first));
+    let mut dist2 = vec![f32::INFINITY; n];
+    for c in 1..params.k {
+        for i in 0..n {
+            let prev = centroids.row(c - 1);
+            let di: f32 = prev.iter().zip(z.row(i)).map(|(a, b)| (a - b) * (a - b)).sum();
+            dist2[i] = dist2[i].min(di);
+        }
+        let total: f64 = dist2.iter().map(|&v| v as f64).sum();
+        let mut target = rng.f64() * total;
+        let mut chosen = n - 1;
+        for i in 0..n {
+            target -= dist2[i] as f64;
+            if target <= 0.0 {
+                chosen = i;
+                break;
+            }
+        }
+        centroids.row_mut(c).copy_from_slice(z.row(chosen));
+    }
+
+    // Lloyd iterations.
+    let mut assign = vec![0usize; n];
+    let mut inertia = f64::INFINITY;
+    let mut iterations = 0;
+    for it in 0..params.max_iters {
+        iterations = it + 1;
+        // Assignment step.
+        let mut new_inertia = 0.0f64;
+        for i in 0..n {
+            let zi = z.row(i);
+            let mut best = 0;
+            let mut best_d = f32::INFINITY;
+            for c in 0..params.k {
+                let row = centroids.row(c);
+                let di: f32 = row.iter().zip(zi).map(|(a, b)| (a - b) * (a - b)).sum();
+                if di < best_d {
+                    best_d = di;
+                    best = c;
+                }
+            }
+            assign[i] = best;
+            new_inertia += best_d as f64;
+        }
+        // Update step.
+        let mut counts = vec![0usize; params.k];
+        let mut sums = Matrix::zeros(params.k, d);
+        for i in 0..n {
+            counts[assign[i]] += 1;
+            crate::linalg::axpy(1.0, z.row(i), sums.row_mut(assign[i]));
+        }
+        for c in 0..params.k {
+            if counts[c] > 0 {
+                let inv = 1.0 / counts[c] as f32;
+                let src: Vec<f32> = sums.row(c).iter().map(|v| v * inv).collect();
+                centroids.row_mut(c).copy_from_slice(&src);
+            } else {
+                // Re-seed empty clusters at a random point.
+                let j = rng.below(n as u64) as usize;
+                centroids.row_mut(c).copy_from_slice(z.row(j));
+            }
+        }
+        let improved = (inertia - new_inertia) / inertia.max(1e-12);
+        inertia = new_inertia;
+        if improved.abs() < params.tol && it > 0 {
+            break;
+        }
+    }
+
+    Ok(KMeansModel { centroids, inertia, iterations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three_blobs(n_per: usize, seed: u64) -> (Matrix, Vec<usize>) {
+        let mut rng = Rng::seed_from(seed);
+        let centers = [[0.0f32, 0.0], [5.0, 5.0], [-5.0, 5.0]];
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        for (ci, c) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                rows.push(vec![
+                    c[0] + 0.4 * rng.normal() as f32,
+                    c[1] + 0.4 * rng.normal() as f32,
+                ]);
+                labels.push(ci);
+            }
+        }
+        (Matrix::from_rows(&rows).unwrap(), labels)
+    }
+
+    /// Clustering accuracy up to label permutation (k=3 brute force).
+    fn permuted_accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+        let perms: [[usize; 3]; 6] =
+            [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]];
+        perms
+            .iter()
+            .map(|perm| {
+                pred.iter()
+                    .zip(truth)
+                    .filter(|&(&p, &t)| perm[p] == t)
+                    .count() as f64
+                    / pred.len() as f64
+            })
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let (x, truth) = three_blobs(60, 1);
+        let mut rng = Rng::seed_from(2);
+        let model = kmeans(&x, KMeansParams { k: 3, ..Default::default() }, &mut rng).unwrap();
+        let pred = model.assign_batch(&x);
+        let acc = permuted_accuracy(&pred, &truth);
+        assert!(acc > 0.95, "blob clustering acc {acc}");
+        assert!(model.inertia < 100.0);
+    }
+
+    #[test]
+    fn inertia_never_increases_with_more_clusters() {
+        let (x, _) = three_blobs(40, 3);
+        let at = |k: usize| {
+            let mut rng = Rng::seed_from(4);
+            kmeans(&x, KMeansParams { k, ..Default::default() }, &mut rng).unwrap().inertia
+        };
+        assert!(at(6) <= at(3) * 1.05);
+        assert!(at(3) <= at(1) * 1.05);
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        let (x, _) = three_blobs(2, 5);
+        let mut rng = Rng::seed_from(6);
+        assert!(kmeans(&x, KMeansParams { k: 0, ..Default::default() }, &mut rng).is_err());
+        assert!(kmeans(&x, KMeansParams { k: 1000, ..Default::default() }, &mut rng).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Unsupervised kernel algorithms over explicit feature maps.
+//!
+//! The paper's introduction argues the curse of support afflicts *all*
+//! representer-theorem algorithms — kernel k-means cluster centers and
+//! kernel PCA principal components live in the span of the training
+//! maps, so evaluating them on new points costs `O(n·d)` kernel
+//! evaluations. Random Maclaurin features fix this identically to the
+//! SVM case: run the *linear* algorithm in `R^D`. This module provides
+//! those linear algorithms plus exact-kernel counterparts for the
+//! comparison benches.
+
+pub mod kmeans;
+pub mod pca;
+
+pub use kmeans::{kmeans, KMeansModel, KMeansParams};
+pub use pca::{pca, PcaModel};

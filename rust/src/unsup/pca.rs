@@ -1,0 +1,162 @@
+//! PCA in feature space (= approximate kernel PCA over random features).
+//!
+//! Components are extracted by orthogonal (deflated) power iteration on
+//! the centered covariance, so only `O(n·D)` memory is needed — no
+//! `n × n` Gram matrix, no support set at projection time.
+
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+
+/// A fitted PCA basis.
+pub struct PcaModel {
+    /// Feature-space mean (length D).
+    pub mean: Vec<f32>,
+    /// `k × D` principal directions (rows, orthonormal).
+    pub components: Matrix,
+    /// Explained variance per component (descending).
+    pub variances: Vec<f64>,
+}
+
+impl PcaModel {
+    /// Project one feature vector onto the basis.
+    pub fn project(&self, z: &[f32]) -> Vec<f32> {
+        assert_eq!(z.len(), self.mean.len());
+        let centered: Vec<f32> = z.iter().zip(&self.mean).map(|(a, m)| a - m).collect();
+        (0..self.components.rows())
+            .map(|c| crate::linalg::dot(self.components.row(c), &centered))
+            .collect()
+    }
+
+    /// Project every row.
+    pub fn project_batch(&self, z: &Matrix) -> Matrix {
+        let rows: Vec<Vec<f32>> = (0..z.rows()).map(|i| self.project(z.row(i))).collect();
+        Matrix::from_rows(&rows).expect("uniform projection width")
+    }
+}
+
+/// Fit `k` principal components of the rows of `z` by deflated power
+/// iteration (`iters` steps per component).
+pub fn pca(z: &Matrix, k: usize, iters: usize) -> Result<PcaModel> {
+    let n = z.rows();
+    let d = z.cols();
+    if n < 2 || k == 0 || k > d {
+        return Err(Error::Config(format!("pca needs n >= 2, 0 < k <= D (n={n}, k={k}, D={d})")));
+    }
+
+    // Center.
+    let mut mean = vec![0.0f32; d];
+    for i in 0..n {
+        crate::linalg::axpy(1.0, z.row(i), &mut mean);
+    }
+    crate::linalg::scale(1.0 / n as f32, &mut mean);
+    let mut centered = Matrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            centered.set(i, j, z.get(i, j) - mean[j]);
+        }
+    }
+
+    // Deflated power iteration on C = X^T X / (n-1) without forming C:
+    // v <- X^T (X v), renormalized, orthogonalized against found comps.
+    let mut components = Matrix::zeros(k, d);
+    let mut variances = Vec::with_capacity(k);
+    let mut seed_rng = crate::rng::Rng::seed_from(0x9CA ^ 0x9E37);
+    for c in 0..k {
+        let mut v: Vec<f32> = (0..d).map(|_| seed_rng.normal() as f32).collect();
+        crate::linalg::normalize(&mut v);
+        for _ in 0..iters {
+            // w = X^T (X v)
+            let xv = centered.matvec(&v)?;
+            let mut w = vec![0.0f32; d];
+            for i in 0..n {
+                crate::linalg::axpy(xv[i], centered.row(i), &mut w);
+            }
+            // Deflate against earlier components.
+            for p in 0..c {
+                let proj = crate::linalg::dot(components.row(p), &w);
+                let comp = components.row(p).to_vec();
+                crate::linalg::axpy(-proj, &comp, &mut w);
+            }
+            if crate::linalg::normalize(&mut w) == 0.0 {
+                break; // rank exhausted
+            }
+            v = w;
+        }
+        // Rayleigh quotient = explained variance.
+        let xv = centered.matvec(&v)?;
+        let var = xv.iter().map(|&t| (t as f64) * (t as f64)).sum::<f64>() / (n as f64 - 1.0);
+        components.row_mut(c).copy_from_slice(&v);
+        variances.push(var);
+    }
+
+    Ok(PcaModel { mean, components, variances })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Data stretched along a known direction.
+    fn stretched(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed_from(seed);
+        let dir = [3.0f32, 1.0, 0.0];
+        let mut rows = Vec::new();
+        for _ in 0..n {
+            let t = rng.normal() as f32 * 4.0;
+            let noise: Vec<f32> = (0..3).map(|_| 0.2 * rng.normal() as f32).collect();
+            rows.push(vec![
+                t * dir[0] + noise[0] + 1.0,
+                t * dir[1] + noise[1] - 2.0,
+                noise[2],
+            ]);
+        }
+        Matrix::from_rows(&rows).unwrap()
+    }
+
+    #[test]
+    fn finds_dominant_direction() {
+        let x = stretched(300, 1);
+        let model = pca(&x, 2, 50).unwrap();
+        let c0 = model.components.row(0);
+        // Dominant direction ∝ (3, 1, 0)/sqrt(10).
+        let expected = [3.0f32, 1.0, 0.0].map(|v| v / 10f32.sqrt());
+        let cosine: f32 = c0.iter().zip(&expected).map(|(a, b)| a * b).sum();
+        assert!(cosine.abs() > 0.99, "cos {cosine}");
+        assert!(model.variances[0] > 10.0 * model.variances[1]);
+    }
+
+    #[test]
+    fn components_are_orthonormal() {
+        let x = stretched(200, 2);
+        let model = pca(&x, 3, 60).unwrap();
+        for p in 0..3 {
+            for q in 0..3 {
+                let dot = crate::linalg::dot(model.components.row(p), model.components.row(q));
+                let expect = if p == q { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-3, "({p},{q}): {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn projection_centers_data() {
+        let x = stretched(150, 3);
+        let model = pca(&x, 2, 40).unwrap();
+        let proj = model.project_batch(&x);
+        // Projected data has ~zero mean per component.
+        for c in 0..2 {
+            let mean: f64 =
+                (0..proj.rows()).map(|i| proj.get(i, c) as f64).sum::<f64>() / proj.rows() as f64;
+            assert!(mean.abs() < 0.5, "component {c} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let x = stretched(10, 4);
+        assert!(pca(&x, 0, 10).is_err());
+        assert!(pca(&x, 4, 10).is_err()); // k > D = 3
+        assert!(pca(&Matrix::zeros(1, 3), 1, 10).is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! End-to-end integration tests over the public API: every layer that
+//! does not require PJRT artifacts (those live in pjrt_roundtrip.rs).
+
+use rfdot::config::{ExperimentConfig, KernelSpec};
+use rfdot::data::{libsvm, Dataset, UciSurrogate};
+use rfdot::kernels::{DotProductKernel, Exponential, Polynomial, VovkReal};
+use rfdot::linalg::Matrix;
+use rfdot::maclaurin::{
+    serialize, CompositionalMaclaurin, FeatureMap, RandomMaclaurin, RmConfig,
+};
+use rfdot::rff::RffScalarFactory;
+use rfdot::rng::Rng;
+use rfdot::svm::{Classifier, LinearSvm, LinearSvmParams};
+
+/// The headline pipeline on every kernel family: surrogate data →
+/// random features → linear SVM → sane accuracy.
+#[test]
+fn pipeline_works_for_every_kernel_family() {
+    let kernels: Vec<KernelSpec> = vec![
+        KernelSpec::Polynomial { degree: 10, offset: 1.0 },
+        KernelSpec::Homogeneous { degree: 3 },
+        KernelSpec::Exponential { sigma2: 0.0 },
+        KernelSpec::VovkReal { degree: 5 },
+        KernelSpec::VovkInfinite { scale: 4.0 },
+    ];
+    for kernel in kernels {
+        let config = ExperimentConfig {
+            dataset: "nursery".into(),
+            scale: 0.03,
+            kernel: kernel.clone(),
+            n_features: 200,
+            seed: 9,
+            ..Default::default()
+        };
+        let prep = rfdot::bench::experiment::prepare(&config).unwrap();
+        let cell = rfdot::bench::experiment::run_random_features(&prep, 200, false, 0);
+        assert!(
+            cell.accuracy > 0.7,
+            "{kernel:?}: accuracy {} too low",
+            cell.accuracy
+        );
+    }
+}
+
+/// §4.2 truncated maps: truncation + sampling behaves like the exact
+/// kernel up to the tail bound + sampling noise.
+#[test]
+fn truncated_map_pipeline() {
+    let kernel = Exponential::new(1.0);
+    let mut rng = Rng::seed_from(21);
+    let (map, order) =
+        RandomMaclaurin::truncated(&kernel, 1.0, 1e-3, 6, 2048, RmConfig::default(), &mut rng);
+    assert!(order >= 2);
+    // Approximation check at a few points.
+    for s in 0..5 {
+        let x = rfdot::prop::gens::unit_vec(&mut Rng::seed_from(100 + s), 6);
+        let y = rfdot::prop::gens::unit_vec(&mut Rng::seed_from(200 + s), 6);
+        let exact = kernel.eval(&x, &y);
+        let approx =
+            rfdot::linalg::dot(&map.transform(&x), &map.transform(&y)) as f64;
+        assert!(
+            (exact - approx).abs() < 0.25,
+            "truncated map too far: {exact} vs {approx}"
+        );
+    }
+}
+
+/// Map serialization round-trips through disk inside a full experiment.
+#[test]
+fn serialized_map_is_identical_engine() {
+    let kernel = Polynomial::new(5, 0.5);
+    let mut rng = Rng::seed_from(33);
+    let map = RandomMaclaurin::sample(&kernel, 12, 128, RmConfig::default(), &mut rng);
+    let dir = std::env::temp_dir().join("rfdot_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("map.rfdm");
+    serialize::save(&map, &path).unwrap();
+    let map2 = serialize::load(&path).unwrap();
+    let x = rfdot::prop::gens::unit_vec(&mut rng, 12);
+    assert_eq!(map.transform(&x), map2.transform(&x));
+    std::fs::remove_file(path).ok();
+}
+
+/// LIBSVM-format data flows through the whole feature + learn pipeline.
+#[test]
+fn libsvm_roundtrip_pipeline() {
+    // Build a small xor-ish dataset, export, re-import, learn on
+    // quadratic RM features.
+    let mut rng = Rng::seed_from(4);
+    let mut rows = Vec::new();
+    let mut y = Vec::new();
+    for _ in 0..400 {
+        let a = rng.f32() * 2.0 - 1.0;
+        let b = rng.f32() * 2.0 - 1.0;
+        rows.push(vec![a, b]);
+        y.push(if a * b >= 0.0 { 1.0 } else { -1.0 });
+    }
+    let ds = Dataset::new("xor", Matrix::from_rows(&rows).unwrap(), y).unwrap();
+    let text = libsvm::to_string(&ds);
+    let ds2 = libsvm::parse_str("xor", &text, Some(2)).unwrap();
+    assert_eq!(ds.len(), ds2.len());
+
+    let kernel = rfdot::kernels::Homogeneous::new(2);
+    let map = RandomMaclaurin::sample(&kernel, 2, 128, RmConfig::default(), &mut rng);
+    let z = map.transform_batch(&ds2.x);
+    let zds = Dataset::new("z", z, ds2.y.clone()).unwrap();
+    let model = LinearSvm::train(&zds, LinearSvmParams::default()).unwrap();
+    assert!(model.accuracy_on(&zds) > 0.9);
+}
+
+/// Compositional maps compose with the SVM pipeline (Algorithm 2 end to
+/// end).
+#[test]
+fn compositional_pipeline() {
+    let mut rng = Rng::seed_from(5);
+    let d = 4;
+    // Radial labels.
+    let mut rows = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..600 {
+        let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let target = if i % 2 == 0 { 0.4f32 } else { 0.9 };
+        let n = rfdot::linalg::norm2(&v).max(1e-6);
+        for vi in v.iter_mut() {
+            *vi *= target / n;
+        }
+        rows.push(v);
+        y.push(if target < 0.6 { 1.0 } else { -1.0 });
+    }
+    let ds = Dataset::new("rings", Matrix::from_rows(&rows).unwrap(), y).unwrap();
+    let outer = Exponential::new(2.0);
+    let map = CompositionalMaclaurin::sample(
+        &outer,
+        RffScalarFactory::new(1.0, d),
+        256,
+        RmConfig::default(),
+        &mut rng,
+    );
+    let z = map.transform_batch(&ds.x);
+    let zds = Dataset::new("z", z, ds.y.clone()).unwrap();
+    let model = LinearSvm::train(&zds, LinearSvmParams::default()).unwrap();
+    assert!(model.accuracy_on(&zds) > 0.9, "acc {}", model.accuracy_on(&zds));
+}
+
+/// All six surrogates generate, split and train without panics at tiny
+/// scale (smoke over the whole data substrate).
+#[test]
+fn all_surrogates_smoke() {
+    for u in UciSurrogate::ALL {
+        let ds = u.load(0.01, 1);
+        assert!(ds.len() >= 200, "{:?} too small", u);
+        let mut rng = Rng::seed_from(2);
+        let (tr, te) = ds.split(0.6, 20_000, &mut rng);
+        assert!(!tr.is_empty() && !te.is_empty());
+        let model = LinearSvm::train(&tr, LinearSvmParams::default()).unwrap();
+        // Labels are balanced; any trained model should beat 40%.
+        assert!(model.accuracy_on(&te) > 0.4, "{:?}", u);
+    }
+}
+
+/// VovkReal pipeline exercises a kernel with unit coefficients.
+#[test]
+fn vovk_real_gram_approximation() {
+    let kernel = VovkReal::new(6);
+    let mut rng = Rng::seed_from(8);
+    let rows: Vec<Vec<f32>> =
+        (0..30).map(|i| rfdot::prop::gens::unit_vec(&mut Rng::seed_from(i), 10)).collect();
+    let x = Matrix::from_rows(&rows).unwrap();
+    let exact = rfdot::kernels::gram(&kernel, &x);
+    let map = RandomMaclaurin::sample(&kernel, 10, 4096, RmConfig::default(), &mut rng);
+    let approx = rfdot::maclaurin::feature_gram(&map, &x);
+    let err = rfdot::kernels::mean_abs_gram_error(&exact, &approx);
+    assert!(err < 0.25, "gram err {err}");
+}

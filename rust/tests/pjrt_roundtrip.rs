@@ -1,0 +1,228 @@
+//! Cross-engine integration tests: the PJRT artifact path must agree
+//! with the native Rust engine on identical sampled maps.
+//!
+//! Requires `make artifacts` to have populated `artifacts/` — tests
+//! skip (with a loud message) if the artifacts are missing so plain
+//! `cargo test` stays runnable before the python step.
+
+use rfdot::coordinator::{
+    Backend, Coordinator, CoordinatorConfig, PjrtScoreFactory, PjrtTransformBackend,
+    PjrtTransformFactory,
+};
+use rfdot::kernels::Exponential;
+use rfdot::linalg::Matrix;
+use rfdot::maclaurin::{FeatureMap, RandomMaclaurin, RmConfig};
+use rfdot::rng::Rng;
+use rfdot::runtime::{ArtifactMeta, Engine};
+use rfdot::svm::{Classifier, LinearSvm, LinearSvmParams};
+use std::sync::Arc;
+
+fn artifact_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+}
+
+fn have_artifact(name: &str) -> bool {
+    let ok = artifact_dir().join(format!("{name}.hlo.txt")).exists();
+    if !ok {
+        eprintln!("SKIP: artifact {name} missing — run `make artifacts`");
+    }
+    ok
+}
+
+/// Sample the map that matches an artifact's static shapes.
+fn map_for(meta_name: &str, seed: u64) -> (RandomMaclaurin, usize, usize) {
+    let meta = ArtifactMeta::parse(
+        &std::fs::read_to_string(artifact_dir().join(format!("{meta_name}.json"))).unwrap(),
+    )
+    .unwrap();
+    let d = meta.inputs[0].shape[1];
+    let batch = meta.batch();
+    let n_max = meta.inputs[1].shape[0] as u32;
+    let features = meta.inputs[1].shape[2];
+    let mut rng = Rng::seed_from(seed);
+    let map = RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        d,
+        features,
+        RmConfig::default().with_max_order(n_max),
+        &mut rng,
+    );
+    (map, batch, d)
+}
+
+fn random_batch(batch: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seed_from(seed);
+    let mut x = Matrix::zeros(batch, d);
+    for i in 0..batch {
+        for j in 0..d {
+            x.set(i, j, rng.f32() - 0.5);
+        }
+        rfdot::linalg::normalize(x.row_mut(i));
+    }
+    x
+}
+
+#[test]
+fn transform_artifact_matches_native_engine() {
+    if !have_artifact("transform_quickstart") {
+        return;
+    }
+    let (map, batch, d) = map_for("transform_quickstart", 11);
+    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let loaded = engine.load("transform_quickstart").unwrap();
+    let backend = PjrtTransformBackend::new(loaded, &map).unwrap();
+
+    let x = random_batch(batch, d, 5);
+    let z_pjrt = backend.run_batch(&x).unwrap();
+    let z_native = map.transform_batch(&x);
+
+    assert_eq!(z_pjrt.rows(), z_native.rows());
+    let max_diff = z_pjrt.max_abs_diff(&z_native);
+    assert!(max_diff < 1e-4, "engines disagree: max |Δ| = {max_diff}");
+}
+
+#[test]
+fn coordinator_over_pjrt_serves_correct_features() {
+    if !have_artifact("transform_quickstart") {
+        return;
+    }
+    let (map, _batch, d) = map_for("transform_quickstart", 13);
+    let map = Arc::new(map);
+    let factory = Arc::new(
+        PjrtTransformFactory::new(artifact_dir(), "transform_quickstart", map.clone()).unwrap(),
+    );
+    let coord = Coordinator::start(
+        factory,
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    );
+    let mut rng = Rng::seed_from(3);
+    for _ in 0..5 {
+        let mut x: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+        rfdot::linalg::normalize(&mut x);
+        let z = coord.transform(x.clone()).unwrap();
+        let expected = map.transform(&x);
+        for (a, b) in z.iter().zip(&expected) {
+            assert!((a - b).abs() < 1e-4, "coordinator/native mismatch: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn score_artifact_matches_native_linear_model() {
+    if !have_artifact("score_serve") {
+        return;
+    }
+    let (map, batch, d) = map_for("score_serve", 17);
+    // Train a small linear model on native features so w is realistic.
+    let x_train = random_batch(200, d, 7);
+    let mut rng = Rng::seed_from(9);
+    let y: Vec<f32> =
+        (0..200).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+    let z_train = map.transform_batch(&x_train);
+    let zds = rfdot::data::Dataset::new("t", z_train, y).unwrap();
+    let model = LinearSvm::train(
+        &zds,
+        LinearSvmParams { bias_scale: 0.0, max_epochs: 5, ..Default::default() },
+    )
+    .unwrap();
+
+    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let loaded = engine.load("score_serve").unwrap();
+    let backend = rfdot::coordinator::PjrtScoreBackend::new(
+        loaded,
+        &map,
+        model.weights().to_vec(),
+        model.bias(),
+    )
+    .unwrap();
+
+    let x = random_batch(batch, d, 21);
+    let scores = backend.run_batch(&x).unwrap();
+    for i in 0..batch {
+        let native = model.decision(&map.transform(x.row(i)));
+        let pjrt = scores.get(i, 0);
+        assert!(
+            (native - pjrt).abs() < 1e-3 * (1.0 + native.abs()),
+            "row {i}: native {native} vs pjrt {pjrt}"
+        );
+    }
+}
+
+#[test]
+fn score_factory_spec_comes_from_manifest() {
+    if !have_artifact("score_serve") {
+        return;
+    }
+    let (map, batch, d) = map_for("score_serve", 23);
+    let features = map.n_random();
+    let factory = PjrtScoreFactory::new(
+        artifact_dir(),
+        "score_serve",
+        Arc::new(map),
+        vec![0.0; features],
+        0.0,
+    )
+    .unwrap();
+    use rfdot::coordinator::BackendFactory;
+    let spec = factory.spec();
+    assert_eq!(spec.input_dim, d);
+    assert_eq!(spec.output_dim, 1);
+    assert_eq!(spec.max_batch, batch);
+    assert!(spec.fixed_batch);
+}
+
+#[test]
+fn train_step_artifact_descends() {
+    if !have_artifact("train_step") {
+        return;
+    }
+    use rfdot::runtime::Tensor;
+    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let loaded = engine.load("train_step").unwrap();
+    let meta = &loaded.meta;
+    let features = meta.inputs[0].shape[0];
+    let batch = meta.inputs[2].shape[0];
+
+    // Separable synthetic features.
+    let mut rng = Rng::seed_from(31);
+    let mut z = vec![0.0f32; batch * features];
+    for v in z.iter_mut() {
+        *v = rng.f32() - 0.5;
+    }
+    let true_w: Vec<f32> = (0..features).map(|_| rng.f32() - 0.5).collect();
+    let y: Vec<f32> = (0..batch)
+        .map(|i| {
+            let s: f32 =
+                (0..features).map(|j| z[i * features + j] * true_w[j]).sum();
+            if s >= 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        })
+        .collect();
+
+    let mut w = Tensor::new(vec![features], vec![0.0; features]).unwrap();
+    let mut b = Tensor::scalar(0.0);
+    let z_t = Tensor::new(vec![batch, features], z).unwrap();
+    let y_t = Tensor::new(vec![batch], y).unwrap();
+    let lr = Tensor::scalar(0.5);
+    let reg = Tensor::scalar(1e-4);
+
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        let out = loaded
+            .execute(&[w.clone(), b.clone(), z_t.clone(), y_t.clone(), lr.clone(), reg.clone()])
+            .unwrap();
+        let mut it = out.into_iter();
+        w = it.next().unwrap();
+        b = it.next().unwrap();
+        losses.push(it.next().unwrap().data()[0]);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.5),
+        "train_step did not descend: {} -> {}",
+        losses[0],
+        losses.last().unwrap()
+    );
+}

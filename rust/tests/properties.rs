@@ -1,0 +1,292 @@
+//! Property-based tests over the library's core invariants, driven by
+//! the in-tree `prop` harness (random generation + shrink-lite).
+
+use rfdot::config::json::Json;
+use rfdot::data::libsvm;
+use rfdot::kernels::{DotProductKernel, Exponential, Homogeneous, Polynomial, VovkReal};
+use rfdot::linalg::{norm1, scale, Matrix};
+use rfdot::maclaurin::{serialize, FeatureMap, RandomMaclaurin, RmConfig};
+use rfdot::prop::{forall, gens, PropConfig};
+use rfdot::rng::Rng;
+
+/// A random built-in kernel.
+fn random_kernel(rng: &mut Rng) -> Box<dyn DotProductKernel> {
+    match rng.below(4) {
+        0 => Box::new(Polynomial::new(1 + rng.below(10) as u32, 0.25 + rng.f64())),
+        1 => Box::new(Homogeneous::new(1 + rng.below(6) as u32)),
+        2 => Box::new(Exponential::new(0.5 + 2.0 * rng.f64())),
+        _ => Box::new(VovkReal::new(2 + rng.below(5) as u32)),
+    }
+}
+
+#[derive(Debug)]
+struct MapCase {
+    kernel_name: String,
+    d: usize,
+    n_feat: usize,
+    h01: bool,
+    seed: u64,
+}
+
+fn gen_map_case(rng: &mut Rng, size: usize) -> MapCase {
+    let k = random_kernel(rng);
+    MapCase {
+        kernel_name: k.name(),
+        d: 1 + rng.below(1 + size as u64 / 2) as usize,
+        n_feat: 1 + rng.below(1 + size as u64 * 2) as usize,
+        h01: rng.bernoulli(0.5),
+        seed: rng.next_u64(),
+    }
+}
+
+fn rebuild_kernel(name: &str) -> Box<dyn DotProductKernel> {
+    // Parse back from the canonical name (tests keep kernels simple).
+    if let Some(rest) = name.strip_prefix("polynomial(p=") {
+        let parts: Vec<&str> = rest.trim_end_matches(')').split(", r=").collect();
+        return Box::new(Polynomial::new(parts[0].parse().unwrap(), parts[1].parse().unwrap()));
+    }
+    if let Some(rest) = name.strip_prefix("homogeneous(p=") {
+        return Box::new(Homogeneous::new(rest.trim_end_matches(')').parse().unwrap()));
+    }
+    if let Some(rest) = name.strip_prefix("exponential(sigma2=") {
+        return Box::new(Exponential::new(rest.trim_end_matches(')').parse().unwrap()));
+    }
+    if let Some(rest) = name.strip_prefix("vovk-real(p=") {
+        return Box::new(VovkReal::new(rest.trim_end_matches(')').parse().unwrap()));
+    }
+    panic!("unknown kernel name {name}");
+}
+
+/// Lemma 8 as a property: for every sampled map and points in the L1
+/// unit ball, `D·|Z_i(x)Z_i(y)| ≤ p/(p−1)·f(pR²)`.
+#[test]
+fn prop_estimator_bound_holds() {
+    forall(
+        PropConfig { cases: 60, seed: 0xB0B, max_size: 24 },
+        gen_map_case,
+        |case| {
+            let kernel = rebuild_kernel(&case.kernel_name);
+            let mut rng = Rng::seed_from(case.seed);
+            let map = RandomMaclaurin::sample(
+                kernel.as_ref(),
+                case.d,
+                case.n_feat,
+                RmConfig::default().with_h01(case.h01 && kernel.coeff(0) + kernel.coeff(1) > 0.0),
+                &mut rng,
+            );
+            let bound = kernel.estimator_bound(2.0, 1.0) + 1e-6;
+            for trial in 0..4 {
+                let mut x = gens::unit_vec(&mut Rng::seed_from(case.seed ^ trial), case.d);
+                let mut y =
+                    gens::unit_vec(&mut Rng::seed_from(case.seed ^ (trial + 100)), case.d);
+                scale(1.0 / norm1(&x).max(1e-9), &mut x);
+                scale(1.0 / norm1(&y).max(1e-9), &mut y);
+                let zx = map.transform(&x);
+                let zy = map.transform(&y);
+                // Random block only (H0/1 prefix is exact, not estimated).
+                let off = map.output_dim() - map.n_random();
+                for i in 0..map.n_random() {
+                    let v = (zx[off + i] * zy[off + i]).abs() as f64 * map.n_random() as f64;
+                    if v > bound * (1.0 + 1e-4) {
+                        return Err(format!(
+                            "feature {i}: {v} > bound {bound} for {}",
+                            case.kernel_name
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Serialization is lossless for arbitrary maps.
+#[test]
+fn prop_serialization_roundtrip() {
+    forall(
+        PropConfig { cases: 40, seed: 0x5E41, max_size: 32 },
+        gen_map_case,
+        |case| {
+            let kernel = rebuild_kernel(&case.kernel_name);
+            let mut rng = Rng::seed_from(case.seed);
+            let map = RandomMaclaurin::sample(
+                kernel.as_ref(),
+                case.d,
+                case.n_feat,
+                RmConfig::default().with_h01(case.h01),
+                &mut rng,
+            );
+            let map2 = serialize::from_bytes(&serialize::to_bytes(&map))
+                .map_err(|e| e.to_string())?;
+            let x = gens::unit_vec(&mut rng, case.d);
+            if map.transform(&x) != map2.transform(&x) {
+                return Err("transform mismatch after roundtrip".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Batch and single-vector transforms agree for arbitrary maps/batches.
+#[test]
+fn prop_batch_equals_single() {
+    forall(
+        PropConfig { cases: 40, seed: 0xBA7C, max_size: 24 },
+        gen_map_case,
+        |case| {
+            let kernel = rebuild_kernel(&case.kernel_name);
+            let mut rng = Rng::seed_from(case.seed);
+            let map = RandomMaclaurin::sample(
+                kernel.as_ref(),
+                case.d,
+                case.n_feat,
+                RmConfig::default().with_h01(case.h01),
+                &mut rng,
+            );
+            let b = 1 + rng.below(6) as usize;
+            let rows: Vec<Vec<f32>> =
+                (0..b).map(|_| gens::f32_vec(&mut rng, case.d)).collect();
+            let x = Matrix::from_rows(&rows).map_err(|e| e.to_string())?;
+            let zb = map.transform_batch(&x);
+            for i in 0..b {
+                let zi = map.transform(x.row(i));
+                for (a, bb) in zb.row(i).iter().zip(&zi) {
+                    if (a - bb).abs() > 1e-4 * (1.0 + bb.abs()) {
+                        return Err(format!("row {i} mismatch: {a} vs {bb}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// JSON display/parse round-trips arbitrary JSON trees.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => Json::Num((rng.f64() * 2000.0 - 1000.0 * rng.f64()).round() / 8.0),
+            3 => {
+                let len = rng.below(8) as usize;
+                Json::Str(
+                    (0..len)
+                        .map(|_| {
+                            let c = rng.below(96) as u8 + 32;
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => {
+                let len = rng.below(4) as usize;
+                Json::Arr((0..len).map(|_| gen_json(rng, depth - 1)).collect())
+            }
+            _ => {
+                let len = rng.below(4) as usize;
+                Json::Obj(
+                    (0..len)
+                        .map(|i| (format!("k{i}"), gen_json(rng, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    forall(
+        PropConfig { cases: 120, seed: 0x7507, max_size: 4 },
+        |rng: &mut Rng, size: usize| gen_json(rng, size.min(3)),
+        |v| {
+            let text = v.to_string();
+            let back = Json::parse(&text).map_err(|e| format!("{e} on {text:?}"))?;
+            if &back != v {
+                return Err(format!("roundtrip mismatch: {v} vs {back}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// LIBSVM serialization round-trips arbitrary sparse-ish datasets.
+#[test]
+fn prop_libsvm_roundtrip() {
+    #[derive(Debug)]
+    struct Case {
+        n: usize,
+        d: usize,
+        seed: u64,
+    }
+    forall(
+        PropConfig { cases: 50, seed: 0x11B5, max_size: 24 },
+        |rng: &mut Rng, size: usize| Case {
+            n: 1 + rng.below(size as u64 + 1) as usize,
+            d: 1 + rng.below(size as u64 + 1) as usize,
+            seed: rng.next_u64(),
+        },
+        |case| {
+            let mut rng = Rng::seed_from(case.seed);
+            let mut x = Matrix::zeros(case.n, case.d);
+            for i in 0..case.n {
+                for j in 0..case.d {
+                    if rng.bernoulli(0.4) {
+                        // Quantized values survive the decimal round trip.
+                        x.set(i, j, (rng.range(-8, 8) as f32) * 0.25);
+                    }
+                }
+            }
+            let y: Vec<f32> =
+                (0..case.n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+            let ds = rfdot::data::Dataset::new("p", x, y).map_err(|e| e.to_string())?;
+            let text = libsvm::to_string(&ds);
+            let ds2 =
+                libsvm::parse_str("p", &text, Some(case.d)).map_err(|e| e.to_string())?;
+            if ds.x != ds2.x || ds.y != ds2.y {
+                return Err("libsvm roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The linear SVM never diverges: for arbitrary (tiny) datasets the
+/// trained weights are finite and the dual violation is finite.
+#[test]
+fn prop_linear_svm_stable() {
+    #[derive(Debug)]
+    struct Case {
+        n: usize,
+        d: usize,
+        seed: u64,
+    }
+    forall(
+        PropConfig { cases: 40, seed: 0x57AB, max_size: 20 },
+        |rng: &mut Rng, size: usize| Case {
+            n: 2 + rng.below(size as u64 * 4 + 1) as usize,
+            d: 1 + rng.below(size as u64 + 1) as usize,
+            seed: rng.next_u64(),
+        },
+        |case| {
+            let mut rng = Rng::seed_from(case.seed);
+            let rows: Vec<Vec<f32>> =
+                (0..case.n).map(|_| gens::f32_vec(&mut rng, case.d)).collect();
+            let y: Vec<f32> =
+                (0..case.n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+            let ds = rfdot::data::Dataset::new(
+                "p",
+                Matrix::from_rows(&rows).map_err(|e| e.to_string())?,
+                y,
+            )
+            .map_err(|e| e.to_string())?;
+            let model = rfdot::svm::LinearSvm::train(
+                &ds,
+                rfdot::svm::LinearSvmParams { max_epochs: 50, ..Default::default() },
+            )
+            .map_err(|e| e.to_string())?;
+            if !model.weights().iter().all(|w| w.is_finite()) || !model.bias().is_finite() {
+                return Err("non-finite weights".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,115 @@
+//! Failure-injection tests for the runtime layer: corrupted artifacts,
+//! manifest/shape mismatches, and the coordinator's behaviour when the
+//! backend misbehaves. PJRT-dependent cases skip when artifacts are
+//! missing.
+
+use rfdot::runtime::{ArtifactMeta, Engine, Tensor};
+
+fn artifact_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+}
+
+fn have_quickstart() -> bool {
+    artifact_dir().join("transform_quickstart.hlo.txt").exists()
+}
+
+#[test]
+fn corrupted_hlo_text_is_a_clean_error() {
+    let dir = std::env::temp_dir().join("rfdot_fail_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "HloModule bad\n\nENTRY %oops {").unwrap();
+    std::fs::write(
+        dir.join("bad.json"),
+        r#"{"name":"bad","config":{"kind":"transform"},"inputs":[],"outputs":[]}"#,
+    )
+    .unwrap();
+    let engine = match Engine::cpu(&dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    match engine.load("bad") {
+        Err(e) => assert!(e.to_string().contains("bad"), "unexpected error text: {e}"),
+        Ok(_) => panic!("corrupted HLO must not load"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_manifest_is_a_clean_error() {
+    let dir = std::env::temp_dir().join("rfdot_fail_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("m.hlo.txt"), "HloModule m\n").unwrap();
+    std::fs::write(dir.join("m.json"), "{not json").unwrap();
+    let engine = match Engine::cpu(&dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    assert!(engine.load("m").is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn execute_rejects_wrong_shapes_and_arity() {
+    if !have_quickstart() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let loaded = engine.load("transform_quickstart").unwrap();
+    // Wrong arity.
+    assert!(loaded.execute(&[]).is_err());
+    // Right arity, wrong shape on x.
+    let specs = &loaded.meta.inputs;
+    let mut inputs: Vec<Tensor> =
+        specs.iter().map(|s| Tensor::zeros(s.shape.clone())).collect();
+    inputs[0] = Tensor::zeros(vec![1, 1]);
+    let err = loaded.execute(&inputs).unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+}
+
+#[test]
+fn manifest_batch_and_element_counts() {
+    let text = r#"{
+      "name": "t", "config": {"kind": "transform"},
+      "inputs": [
+        {"name": "x", "shape": [32, 7], "dtype": "f32"},
+        {"name": "omega", "shape": [4, 7, 64], "dtype": "f32"}
+      ],
+      "outputs": [{"name": "z", "shape": [32, 64], "dtype": "f32"}]
+    }"#;
+    let meta = ArtifactMeta::parse(text).unwrap();
+    assert_eq!(meta.batch(), 32);
+    assert_eq!(meta.inputs[1].element_count(), 4 * 7 * 64);
+}
+
+#[test]
+fn pjrt_backend_construction_rejects_mismatched_map() {
+    if !have_quickstart() {
+        return;
+    }
+    use rfdot::kernels::Exponential;
+    use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
+    use rfdot::rng::Rng;
+    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let loaded = engine.load("transform_quickstart").unwrap();
+    // Wrong d: quickstart artifact is d=16; build a d=5 map.
+    let mut rng = Rng::seed_from(1);
+    let map = RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        5,
+        256,
+        RmConfig::default().with_max_order(8),
+        &mut rng,
+    );
+    assert!(rfdot::coordinator::PjrtTransformBackend::new(loaded.clone(), &map).is_err());
+    // H0/1 maps are rejected for transform artifacts.
+    let mut rng = Rng::seed_from(2);
+    let map_h01 = RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        16,
+        256,
+        RmConfig::default().with_max_order(8).with_h01(true),
+        &mut rng,
+    );
+    assert!(rfdot::coordinator::PjrtTransformBackend::new(loaded, &map_h01).is_err());
+}
