@@ -9,7 +9,8 @@
 use rfdot::data::Dataset;
 use rfdot::kernels::{DotProductKernel, Exponential, Polynomial};
 use rfdot::linalg::{dot, Matrix};
-use rfdot::maclaurin::{CompositionalMaclaurin, FeatureMap, RmConfig};
+use rfdot::features::FeatureMap;
+use rfdot::maclaurin::{CompositionalMaclaurin, RmConfig};
 use rfdot::rff::{rbf, RffScalarFactory};
 use rfdot::rng::Rng;
 use rfdot::svm::{Classifier, LinearSvm, LinearSvmParams};

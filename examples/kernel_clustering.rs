@@ -14,7 +14,8 @@
 
 use rfdot::kernels::Homogeneous;
 use rfdot::linalg::Matrix;
-use rfdot::maclaurin::{FeatureMap, RandomMaclaurin, RmConfig};
+use rfdot::features::FeatureMap;
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
 use rfdot::rng::Rng;
 use rfdot::unsup::{kmeans, pca, KMeansParams};
 

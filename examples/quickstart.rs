@@ -8,7 +8,8 @@
 use rfdot::data::Dataset;
 use rfdot::kernels::{gram, mean_abs_gram_error, DotProductKernel, Polynomial};
 use rfdot::linalg::Matrix;
-use rfdot::maclaurin::{feature_gram, FeatureMap, RandomMaclaurin, RmConfig};
+use rfdot::features::{feature_gram, FeatureMap};
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
 use rfdot::rng::Rng;
 use rfdot::svm::{Classifier, LinearSvm, LinearSvmParams};
 

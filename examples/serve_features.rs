@@ -64,6 +64,8 @@ fn main() -> rfdot::Result<()> {
             max_wait: Duration::from_millis(2),
             queue_depth: 8192,
             workers: 2,
+            // Native-engine batches may fan out over 2 extra threads.
+            intra_op_threads: 2,
         },
     ));
 

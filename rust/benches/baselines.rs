@@ -14,7 +14,8 @@ use rfdot::bench::{fmt_duration, time_once, Table};
 use rfdot::data::UciSurrogate;
 use rfdot::kernels::{gram, mean_abs_gram_error, Polynomial};
 use rfdot::linalg::Matrix;
-use rfdot::maclaurin::{feature_gram, FeatureMap, RandomMaclaurin, RmConfig};
+use rfdot::features::{feature_gram, FeatureMap};
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
 use rfdot::nystrom::Nystrom;
 use rfdot::rng::Rng;
 use rfdot::svm::{Classifier, KernelSvm, LinearSvm, LinearSvmParams, SmoParams};

@@ -17,7 +17,8 @@ use rfdot::kernels::{
     gram, mean_abs_gram_error, DotProductKernel, Exponential, Homogeneous, Polynomial,
 };
 use rfdot::linalg::{mean, Matrix};
-use rfdot::maclaurin::{feature_gram, RandomMaclaurin, RmConfig};
+use rfdot::features::feature_gram;
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
 use rfdot::rng::Rng;
 
 fn env_usize(key: &str, default: usize) -> usize {

@@ -1,6 +1,8 @@
 //! Hot-path microbenchmarks (the §Perf instrumentation):
 //!
 //! * native feature-map application throughput across (d, D) shapes,
+//! * the threads = {1, 2, 4, 8} scaling sweep over `transform_batch`
+//!   and `matmul` (recorded to `BENCH_parallel.json` at the repo root),
 //! * bit-packed vs dense-f32 Rademacher projection,
 //! * PJRT artifact execution latency/throughput per batch,
 //! * coordinator end-to-end round trip under load,
@@ -11,9 +13,10 @@
 
 use rfdot::bench::{bench, fmt_duration, Table};
 use rfdot::coordinator::{Coordinator, CoordinatorConfig, NativeFactory, PjrtTransformFactory};
+use rfdot::features::FeatureMap;
 use rfdot::kernels::Exponential;
 use rfdot::linalg::Matrix;
-use rfdot::maclaurin::{FeatureMap, RandomMaclaurin, RmConfig};
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
 use rfdot::rng::{RademacherMatrix, Rng};
 use rfdot::runtime::{ArtifactMeta, Engine};
 use std::sync::Arc;
@@ -59,6 +62,76 @@ fn bench_native_transform() {
         ]);
     }
     table.print();
+}
+
+/// The threads = {1, 2, 4, 8} scaling sweep over the two parallelized
+/// hot paths, recorded as the machine-readable baseline in
+/// `BENCH_parallel.json` at the repo root.
+fn bench_parallel_sweep() {
+    println!("\n== parallel sweep: transform_batch / matmul vs threads ==");
+    let threads_axis = [1usize, 2, 4, 8];
+    let iters = if fast() { 3 } else { 10 };
+
+    // transform_batch: d=22 → D=512 on a 1024-row batch (≥ 512 rows, the
+    // regime the tentpole's 2x-at-4-threads target is stated for).
+    let (d, n_feat, rows) = (22usize, 512usize, 1024usize);
+    let mut rng = Rng::seed_from(21);
+    let map =
+        RandomMaclaurin::sample(&Exponential::new(1.0), d, n_feat, RmConfig::default(), &mut rng);
+    let x = batch(rows, d, 22);
+
+    // matmul: 512 x 512 by 512 x 512.
+    let (m, k, n) = (512usize, 512usize, 512usize);
+    let mut rng = Rng::seed_from(23);
+    let a = Matrix::from_vec(m, k, (0..m * k).map(|_| rng.f32() - 0.5).collect()).unwrap();
+    let b = Matrix::from_vec(k, n, (0..k * n).map(|_| rng.f32() - 0.5).collect()).unwrap();
+
+    let mut table = Table::new(&["threads", "transform_batch", "speedup", "matmul", "speedup"]);
+    let mut tb_secs = Vec::new();
+    let mut mm_secs = Vec::new();
+    for &t in &threads_axis {
+        let tb = bench("transform", 2, iters, || map.transform_batch_threads(&x, t)).mean_s();
+        let mm = bench("matmul", 2, iters, || a.matmul_threads(&b, t).unwrap()).mean_s();
+        table.row(&[
+            format!("{t}"),
+            fmt_duration(tb),
+            format!("{:.2}x", tb_secs.first().copied().unwrap_or(tb) / tb),
+            fmt_duration(mm),
+            format!("{:.2}x", mm_secs.first().copied().unwrap_or(mm) / mm),
+        ]);
+        tb_secs.push(tb);
+        mm_secs.push(mm);
+    }
+    table.print();
+
+    // Machine-readable baseline (schema shared with BENCH_parallel.json).
+    let series = |secs: &[f64]| -> String {
+        threads_axis
+            .iter()
+            .zip(secs)
+            .map(|(t, s)| {
+                format!(
+                    r#"{{"threads": {t}, "secs": {s:.6}, "speedup": {:.3}}}"#,
+                    secs[0] / s
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"parallel_sweep\",\n  \"status\": \"measured\",\n  \
+         \"generated_by\": \"cargo bench --bench micro\",\n  \
+         \"transform_batch\": {{\"d\": {d}, \"features\": {n_feat}, \"batch\": {rows}, \
+         \"samples\": [{}]}},\n  \
+         \"matmul\": {{\"m\": {m}, \"k\": {k}, \"n\": {n}, \"samples\": [{}]}}\n}}\n",
+        series(&tb_secs),
+        series(&mm_secs),
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_parallel.json");
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("   baseline recorded to {}", path.display()),
+        Err(e) => println!("   (could not write {}: {e})", path.display()),
+    }
 }
 
 fn bench_rademacher_projection() {
@@ -154,6 +227,7 @@ fn bench_coordinator_roundtrip() {
             max_wait: Duration::from_micros(200),
             queue_depth: 8192,
             workers: 2,
+            intra_op_threads: 1,
         },
     ));
     let requests = if fast() { 500 } else { 5000 };
@@ -209,6 +283,7 @@ fn bench_pjrt_coordinator() {
             max_wait: Duration::from_millis(4),
             queue_depth: 8192,
             workers: 2,
+            intra_op_threads: 1,
         },
     ));
     let requests = if fast() { 400 } else { 4000 };
@@ -270,6 +345,7 @@ fn bench_pjrt_bucketed_coordinator() {
             max_wait: Duration::from_millis(4),
             queue_depth: 8192,
             workers: 2,
+            intra_op_threads: 1,
         },
     ));
     let requests = if fast() { 400 } else { 4000 };
@@ -332,6 +408,7 @@ fn bench_solvers() {
 
 fn main() {
     bench_native_transform();
+    bench_parallel_sweep();
     bench_rademacher_projection();
     bench_pjrt_execute();
     bench_coordinator_roundtrip();

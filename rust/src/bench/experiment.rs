@@ -11,7 +11,8 @@
 use crate::config::{ExperimentConfig, KernelSpec};
 use crate::data::{Dataset, UciSurrogate};
 use crate::kernels::DotProductKernel;
-use crate::maclaurin::{FeatureMap, RandomMaclaurin, RmConfig};
+use crate::features::FeatureMap;
+use crate::maclaurin::{RandomMaclaurin, RmConfig};
 use crate::metrics::Stopwatch;
 use crate::rng::Rng;
 use crate::svm::{Classifier, KernelSvm, LinearSvm, LinearSvmParams, SmoParams};
@@ -143,6 +144,11 @@ pub fn run_random_features(
 /// (homogeneous), the H0/1 cell reuses plain RF at `d_h01` (the paper
 /// notes H0/1 does not apply there).
 pub fn run_row(config: &ExperimentConfig, d_rf: usize, d_h01: usize) -> Result<RowResult> {
+    // The experiment's parallelism knob: 0 leaves the global budget
+    // (auto-detected or RFDOT_THREADS) untouched.
+    if config.threads > 0 {
+        crate::parallel::set_max_threads(config.threads);
+    }
     let prep = prepare(config)?;
     let exact = run_exact(&prep, prep.config.kernel.build(kernel_sigma2(&prep)));
     let rf = run_random_features(&prep, d_rf, false, 1);

@@ -9,7 +9,8 @@ use crate::coordinator::{
 use crate::data::libsvm;
 use crate::kernels::{gram, mean_abs_gram_error, DotProductKernel};
 use crate::linalg::Matrix;
-use crate::maclaurin::{feature_gram, FeatureMap, RandomMaclaurin, RmConfig};
+use crate::features::{feature_gram, FeatureMap};
+use crate::maclaurin::{RandomMaclaurin, RmConfig};
 use crate::metrics::Stopwatch;
 use crate::rng::Rng;
 use crate::runtime::Engine;
@@ -22,6 +23,16 @@ fn warn_unknown(args: &Args) {
     for f in args.unknown_flags() {
         eprintln!("warning: unknown flag --{f} ignored");
     }
+}
+
+/// Consume `--threads N` and, when given, pin the global data-parallel
+/// worker budget (0 / absent keeps auto-detect or `RFDOT_THREADS`).
+fn apply_threads(args: &mut Args) -> Result<()> {
+    let threads = args.usize_flag("threads", 0)?;
+    if threads > 0 {
+        crate::parallel::set_max_threads(threads);
+    }
+    Ok(())
 }
 
 /// `rfdot info` — engine and artifact inventory.
@@ -52,6 +63,7 @@ pub fn info(args: &mut Args) -> Result<()> {
 
 /// `rfdot quickstart` — map a toy dataset, check gram error, fit LIN.
 pub fn quickstart(args: &mut Args) -> Result<()> {
+    apply_threads(args)?;
     warn_unknown(args);
     println!("== Random Maclaurin quickstart ==");
     let kernel = crate::kernels::Polynomial::new(10, 1.0);
@@ -81,6 +93,7 @@ pub fn gram_error(args: &mut Args) -> Result<()> {
     let runs = args.usize_flag("runs", 5)?;
     let h01 = args.switch("h01");
     let seed = args.num_flag("seed", 7.0)? as u64;
+    apply_threads(args)?;
     warn_unknown(args);
 
     let kernel = kernel_spec.build(1.0);
@@ -120,6 +133,7 @@ pub fn table1_row(args: &mut Args) -> Result<()> {
         scale: args.num_flag("scale", 0.1)?,
         c: args.num_flag("c", 1.0)?,
         seed: args.num_flag("seed", 42.0)? as u64,
+        threads: args.usize_flag("threads", 0)?,
         ..Default::default()
     };
     let d_rf = args.usize_flag("features", 500)?;
@@ -170,6 +184,7 @@ pub fn transform(args: &mut Args) -> Result<()> {
     let n_feat = args.usize_flag("features", 256)?;
     let h01 = args.switch("h01");
     let seed = args.num_flag("seed", 7.0)? as u64;
+    apply_threads(args)?;
     warn_unknown(args);
 
     let mut ds = libsvm::parse_file(&input, None)?;
@@ -216,6 +231,9 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let max_batch = args.usize_flag("max-batch", 256)?;
     let max_wait_ms = args.num_flag("max-wait-ms", 2.0)?;
     let seed = args.num_flag("seed", 7.0)? as u64;
+    // For serving, --threads means intra-op threads per worker batch
+    // (the native backend's data-parallel fan-out).
+    let intra_op_threads = args.usize_flag("threads", 1)?;
     warn_unknown(args);
 
     // Kernel + map for the serving workload (d is fixed by the artifact).
@@ -259,6 +277,7 @@ pub fn serve(args: &mut Args) -> Result<()> {
             max_wait: Duration::from_micros((max_wait_ms * 1000.0) as u64),
             queue_depth: 8192,
             workers,
+            intra_op_threads,
         },
     ));
 
@@ -323,6 +342,18 @@ mod tests {
         gram_error(&mut argv(&[
             "gram-error", "--kernel", "poly:3:1", "--d", "6", "--features", "64", "--points",
             "20", "--runs", "2",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn threads_flag_accepted() {
+        // `--threads 0` exercises parsing/consumption without mutating
+        // the process-global knob (tests share it; see
+        // parallel::tests::knob_round_trips).
+        gram_error(&mut argv(&[
+            "gram-error", "--kernel", "poly:2:1", "--d", "4", "--features", "16", "--points",
+            "10", "--runs", "1", "--threads", "0",
         ]))
         .unwrap();
     }

@@ -58,4 +58,9 @@ COMMANDS:
                   --artifact transform_serve --artifact-dir artifacts
                   --requests 2000 --clients 4 --native
   help          this message
+
+  --threads N   data-parallel CPU workers for the hot paths (default:
+                auto-detect, or the RFDOT_THREADS env var). For `serve`
+                this is the intra-op thread count per worker batch and
+                defaults to 1 (batches already fan out across workers).
 ";

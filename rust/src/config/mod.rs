@@ -112,6 +112,10 @@ pub struct ExperimentConfig {
     /// Train fraction and cap (paper: 0.6 / 20000).
     pub train_frac: f64,
     pub max_train: usize,
+    /// Data-parallel worker threads for the hot paths (feature
+    /// transforms, GEMM, Gram matrices); `0` = leave the global
+    /// [`crate::parallel`] knob untouched (auto / `RFDOT_THREADS`).
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -127,6 +131,7 @@ impl Default for ExperimentConfig {
             seed: 42,
             train_frac: 0.6,
             max_train: 20_000,
+            threads: 0,
         }
     }
 }
@@ -165,6 +170,9 @@ impl ExperimentConfig {
         }
         if let Some(n) = v.get("max_train").and_then(Json::as_usize) {
             cfg.max_train = n;
+        }
+        if let Some(n) = v.get("threads").and_then(Json::as_usize) {
+            cfg.threads = n;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -263,6 +271,10 @@ mod tests {
         assert_eq!(cfg.kernel, KernelSpec::Exponential { sigma2: 0.0 });
         // Defaults survive.
         assert_eq!(cfg.max_train, 20_000);
+        assert_eq!(cfg.threads, 0);
+        let with_threads =
+            ExperimentConfig::from_json(r#"{"threads": 4}"#).unwrap();
+        assert_eq!(with_threads.threads, 4);
     }
 
     #[test]

@@ -20,7 +20,8 @@
 //! hold both engines to identical outputs for identical sampled maps.
 
 use crate::linalg::Matrix;
-use crate::maclaurin::{FeatureMap, RandomMaclaurin};
+use crate::features::FeatureMap;
+use crate::maclaurin::RandomMaclaurin;
 use crate::runtime::{ArtifactMeta, Engine, LoadedArtifact, Tensor};
 use crate::{Error, Result};
 use std::path::PathBuf;
@@ -45,6 +46,13 @@ pub trait Backend {
 
     /// Transform all rows of `x`.
     fn run_batch(&self, x: &Matrix) -> Result<Matrix>;
+
+    /// Intra-op parallelism hint from
+    /// [`crate::coordinator::CoordinatorConfig::intra_op_threads`]
+    /// (`0` = the global [`crate::parallel`] knob). Default: ignored —
+    /// PJRT executables manage their own threading; only the native
+    /// engine honors it.
+    fn set_intra_op_threads(&mut self, _threads: usize) {}
 }
 
 /// Builds per-worker backends; shared across threads.
@@ -80,11 +88,19 @@ where
 /// Pure-Rust feature map backend.
 pub struct NativeBackend {
     map: Arc<dyn FeatureMap>,
+    /// Worker threads per `run_batch` (`0` = the global knob; default 1
+    /// because batches already fan out across coordinator workers).
+    threads: usize,
 }
 
 impl NativeBackend {
     pub fn new(map: Arc<dyn FeatureMap>) -> Self {
-        NativeBackend { map }
+        Self::with_threads(map, 1)
+    }
+
+    /// Native backend with an explicit intra-op worker count.
+    pub fn with_threads(map: Arc<dyn FeatureMap>, threads: usize) -> Self {
+        NativeBackend { map, threads }
     }
 }
 
@@ -99,7 +115,11 @@ impl Backend for NativeBackend {
     }
 
     fn run_batch(&self, x: &Matrix) -> Result<Matrix> {
-        Ok(self.map.transform_batch(x))
+        Ok(self.map.transform_batch_threads(x, self.threads))
+    }
+
+    fn set_intra_op_threads(&mut self, threads: usize) {
+        self.threads = threads;
     }
 }
 

@@ -56,6 +56,12 @@ pub struct CoordinatorConfig {
     pub queue_depth: usize,
     /// Worker threads executing batches.
     pub workers: usize,
+    /// Data-parallel threads each worker's backend may use *within* a
+    /// batch ([`Backend::set_intra_op_threads`]; honored by the native
+    /// engine, ignored by PJRT). `0` = the global [`crate::parallel`]
+    /// knob; the default of 1 keeps per-batch work serial because
+    /// batches already fan out across `workers`.
+    pub intra_op_threads: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -65,6 +71,7 @@ impl Default for CoordinatorConfig {
             max_wait: Duration::from_millis(2),
             queue_depth: 1024,
             workers: 2,
+            intra_op_threads: 1,
         }
     }
 }
@@ -145,10 +152,11 @@ impl Coordinator {
             let rx = batch_rx.clone();
             let factory = factory.clone();
             let stats = stats.clone();
+            let intra_op_threads = config.intra_op_threads;
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("rfdot-worker-{w}"))
-                    .spawn(move || worker_loop(rx, factory, stats))
+                    .spawn(move || worker_loop(rx, factory, stats, intra_op_threads))
                     .expect("spawn worker"),
             );
         }
@@ -254,10 +262,14 @@ fn worker_loop(
     batch_rx: Arc<Mutex<Receiver<Vec<Job>>>>,
     factory: Arc<dyn BackendFactory>,
     stats: Arc<Stats>,
+    intra_op_threads: usize,
 ) {
     // Build the thread-local backend; on failure, keep serving errors so
     // accepted requests are still answered exactly once.
-    let backend = factory.build();
+    let mut backend = factory.build();
+    if let Ok(b) = backend.as_mut() {
+        b.set_intra_op_threads(intra_op_threads);
+    }
     let spec = factory.spec();
     loop {
         let batch = {
@@ -313,7 +325,8 @@ fn answer_all_err(batch: Vec<Job>, msg: &str, stats: &Stats) {
 mod tests {
     use super::*;
     use crate::kernels::Polynomial;
-    use crate::maclaurin::{FeatureMap, RandomMaclaurin, RmConfig};
+    use crate::features::FeatureMap;
+    use crate::maclaurin::{RandomMaclaurin, RmConfig};
     use crate::rng::Rng;
 
     fn native_factory(d: usize, n_feat: usize) -> (Arc<dyn BackendFactory>, Arc<RandomMaclaurin>) {
@@ -336,6 +349,37 @@ mod tests {
         let z = coord.transform(x.clone()).unwrap();
         assert_eq!(z.len(), 16);
         assert_eq!(z, map.transform(&x));
+    }
+
+    #[test]
+    fn intra_op_parallel_replies_match_serial_map() {
+        // With intra-op threads > 1 the native backend fans each batch
+        // out across the worker pool; replies must still be bit-identical
+        // to the single-threaded transform. Submit a burst *before*
+        // waiting so the batcher coalesces multi-row batches — a single
+        // blocking transform() would only ever produce 1-row batches,
+        // which the thread clamp runs inline.
+        let (factory, map) = native_factory(5, 24);
+        let coord = Coordinator::start(
+            factory,
+            CoordinatorConfig {
+                intra_op_threads: 4,
+                workers: 1,
+                max_wait: Duration::from_millis(20),
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::seed_from(77);
+        let inputs: Vec<Vec<f32>> =
+            (0..40).map(|_| (0..5).map(|_| rng.f32() - 0.5).collect()).collect();
+        let tickets: Vec<_> =
+            inputs.iter().map(|x| coord.submit(x.clone()).unwrap()).collect();
+        for (x, t) in inputs.iter().zip(tickets) {
+            assert_eq!(t.wait().unwrap(), map.transform(x));
+        }
+        // The burst must have produced at least one multi-row batch.
+        let batches = coord.stats().batches.load(Ordering::Relaxed);
+        assert!(batches < 40, "every batch was single-row ({batches} batches for 40 requests)");
     }
 
     #[test]
@@ -436,6 +480,7 @@ mod tests {
                 queue_depth: 2,
                 workers: 1,
                 max_wait: Duration::from_millis(1),
+                ..Default::default()
             },
         );
         let mut rejected = 0;

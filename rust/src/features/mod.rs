@@ -1,0 +1,178 @@
+//! Crate-level feature-embedding layer.
+//!
+//! The cross-cutting abstraction of the whole reproduction: a
+//! [`FeatureMap`] is any (possibly randomized, already-sampled)
+//! embedding `Z: R^d → R^D` with `⟨Z(x), Z(y)⟩ ≈ K(x, y)`. Four peer
+//! families implement it:
+//!
+//! * [`crate::maclaurin`] — Random Maclaurin maps (the paper's
+//!   Algorithm 1/2, H0/1, truncated variant);
+//! * [`crate::rff`] — Random Fourier Features (Rahimi & Recht);
+//! * [`crate::tensorsketch`] — TensorSketch (Pham & Pagh);
+//! * [`crate::nystrom`] — data-dependent Nyström features.
+//!
+//! Consumers (`svm`, `bench`, `cli`, `coordinator`, the examples) import
+//! the trait from here; `maclaurin` re-exports it for source
+//! compatibility with the original layout, where the trait lived inside
+//! the Random Maclaurin module even though its siblings implemented it.
+//!
+//! Batch plumbing is data-parallel: [`FeatureMap::transform_batch`] and
+//! [`feature_gram`] fan row blocks out over the scoped worker pool in
+//! [`crate::parallel`]. Each output row is produced by the same serial
+//! routine regardless of the thread count, so parallel results are
+//! bit-identical to serial ones (enforced by
+//! `rust/tests/parallel_identity.rs`).
+
+use crate::linalg::Matrix;
+
+/// A (possibly randomized, already-sampled) feature embedding
+/// `R^input_dim → R^output_dim`.
+pub trait FeatureMap: Send + Sync {
+    /// Input dimensionality `d`.
+    fn input_dim(&self) -> usize;
+
+    /// Output dimensionality (`D`, or `1 + d + D` with H0/1).
+    fn output_dim(&self) -> usize;
+
+    /// Apply the map to one vector, writing into `out`
+    /// (`out.len() == output_dim()`).
+    fn transform_into(&self, x: &[f32], out: &mut [f32]);
+
+    /// Apply the map to one vector.
+    fn transform(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.output_dim()];
+        self.transform_into(x, &mut out);
+        out
+    }
+
+    /// Apply the map to every row of `x`, using the global
+    /// [`crate::parallel`] worker budget.
+    fn transform_batch(&self, x: &Matrix) -> Matrix {
+        self.transform_batch_threads(x, 0)
+    }
+
+    /// Apply the map to every row of `x` with an explicit worker count
+    /// (`0` = the global knob). Rows are independent, so any thread
+    /// count yields bit-identical output.
+    fn transform_batch_threads(&self, x: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(x.cols(), self.input_dim(), "input dim mismatch");
+        let (rows, dd) = (x.rows(), self.output_dim());
+        let mut out = Matrix::zeros(rows, dd);
+        if rows == 0 || dd == 0 {
+            return out;
+        }
+        // Per-row cost is at least D·d mul-adds for every map family.
+        let work = rows.saturating_mul(dd).saturating_mul(self.input_dim().max(1));
+        let threads = crate::parallel::resolve_threads_for_work(threads, rows, work);
+        crate::parallel::par_chunks(threads, dd, out.as_mut_slice(), |row0, block| {
+            for (i, out_row) in block.chunks_mut(dd).enumerate() {
+                // Row blocks are disjoint; each row is one serial call.
+                self.transform_into(x.row(row0 + i), out_row);
+            }
+        });
+        out
+    }
+}
+
+/// Approximate Gram matrix `⟨Z(x_i), Z(x_j)⟩` of a feature map over the
+/// rows of `x` — compared against [`crate::kernels::gram`] in the
+/// Figure 1 experiments. Uses the global worker budget.
+pub fn feature_gram(map: &dyn FeatureMap, x: &Matrix) -> Matrix {
+    feature_gram_threads(map, x, 0)
+}
+
+/// [`feature_gram`] with an explicit worker count (`0` = the global
+/// knob). Each entry is one independent `O(D)` dot product of feature
+/// rows, so the triangular fill parallelizes bit-identically (see
+/// [`crate::linalg::symmetric_from_lower`]).
+pub fn feature_gram_threads(map: &dyn FeatureMap, x: &Matrix, threads: usize) -> Matrix {
+    let z = map.transform_batch_threads(x, threads);
+    crate::linalg::symmetric_from_lower(z.rows(), threads, map.output_dim(), |i, j| {
+        crate::linalg::dot(z.row(i), z.row(j))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal deterministic map: `Z(x) = [x, 2x]` (output_dim = 2d).
+    struct DoubleMap {
+        d: usize,
+    }
+
+    impl FeatureMap for DoubleMap {
+        fn input_dim(&self) -> usize {
+            self.d
+        }
+
+        fn output_dim(&self) -> usize {
+            2 * self.d
+        }
+
+        fn transform_into(&self, x: &[f32], out: &mut [f32]) {
+            for (i, &xi) in x.iter().enumerate() {
+                out[i] = xi;
+                out[self.d + i] = 2.0 * xi;
+            }
+        }
+    }
+
+    fn sample_batch(rows: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = crate::rng::Rng::seed_from(seed);
+        let data: Vec<f32> = (0..rows * d).map(|_| rng.f32() - 0.5).collect();
+        Matrix::from_vec(rows, d, data).unwrap()
+    }
+
+    #[test]
+    fn default_batch_matches_single() {
+        let map = DoubleMap { d: 3 };
+        let x = sample_batch(5, 3, 1);
+        let zb = map.transform_batch(&x);
+        for i in 0..5 {
+            assert_eq!(zb.row(i), &map.transform(x.row(i))[..]);
+        }
+    }
+
+    #[test]
+    fn batch_is_bit_identical_across_thread_counts() {
+        let map = DoubleMap { d: 4 };
+        for rows in [0usize, 1, 2, 7, 33] {
+            let x = sample_batch(rows, 4, 2);
+            let serial = map.transform_batch_threads(&x, 1);
+            for threads in [2usize, 3, 8, 64] {
+                // Includes threads > rows.
+                assert_eq!(map.transform_batch_threads(&x, threads), serial);
+            }
+        }
+    }
+
+    #[test]
+    fn feature_gram_symmetric_and_thread_invariant() {
+        let map = DoubleMap { d: 3 };
+        let x = sample_batch(9, 3, 3);
+        let serial = feature_gram_threads(&map, &x, 1);
+        for i in 0..9 {
+            assert!(serial.get(i, i) >= 0.0);
+            for j in 0..9 {
+                assert_eq!(serial.get(i, j), serial.get(j, i));
+            }
+        }
+        for threads in [2usize, 4, 16] {
+            assert_eq!(feature_gram_threads(&map, &x, threads), serial);
+        }
+    }
+
+    #[test]
+    fn maclaurin_reexport_is_the_same_trait() {
+        // The deprecation re-export must stay usable as the same item.
+        fn takes_new(m: &dyn FeatureMap) -> usize {
+            m.output_dim()
+        }
+        fn takes_old(m: &dyn crate::maclaurin::FeatureMap) -> usize {
+            m.output_dim()
+        }
+        let map = DoubleMap { d: 2 };
+        assert_eq!(takes_new(&map), takes_old(&map));
+    }
+}

@@ -73,18 +73,24 @@ pub trait DotProductKernel: Send + Sync {
     }
 }
 
-/// Gram matrix of a kernel over a point set (rows of `x`).
+/// Gram matrix of a kernel over a point set (rows of `x`), using the
+/// global [`crate::parallel`] worker budget.
 pub fn gram(kernel: &dyn DotProductKernel, x: &crate::linalg::Matrix) -> crate::linalg::Matrix {
-    let n = x.rows();
-    let mut g = crate::linalg::Matrix::zeros(n, n);
-    for i in 0..n {
-        for j in 0..=i {
-            let v = kernel.eval(x.row(i), x.row(j)) as f32;
-            g.set(i, j, v);
-            g.set(j, i, v);
-        }
-    }
-    g
+    gram_threads(kernel, x, 0)
+}
+
+/// [`gram`] with an explicit worker count (`0` = the global knob).
+/// Each entry is one independent kernel evaluation of cost `O(d)`, so
+/// the triangular fill parallelizes bit-identically (see
+/// [`crate::linalg::symmetric_from_lower`]).
+pub fn gram_threads(
+    kernel: &dyn DotProductKernel,
+    x: &crate::linalg::Matrix,
+    threads: usize,
+) -> crate::linalg::Matrix {
+    crate::linalg::symmetric_from_lower(x.rows(), threads, x.cols(), |i, j| {
+        kernel.eval(x.row(i), x.row(j)) as f32
+    })
 }
 
 /// Mean absolute elementwise difference between two Gram matrices — the

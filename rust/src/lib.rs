@@ -8,6 +8,13 @@
 //!
 //! * [`kernels`] — dot product kernel definitions and Maclaurin-series
 //!   machinery (Schoenberg characterization, Theorem 1).
+//! * [`features`] — the crate-level embedding layer: the [`features::FeatureMap`]
+//!   trait every map family implements, plus data-parallel batch
+//!   transforms and [`features::feature_gram`].
+//! * [`parallel`] — the in-tree data-parallel execution subsystem
+//!   (scoped worker pool, row-chunked `par_chunks`, the process-wide
+//!   `--threads` knob) that the linalg/feature/SVM hot paths run on;
+//!   parallel results are bit-identical to serial ones.
 //! * [`maclaurin`] — the Random Maclaurin feature maps (Algorithm 1), the
 //!   H0/1 heuristic (§6.1), the truncated deterministic variant (§4.2)
 //!   and compositional kernels (Algorithm 2).
@@ -30,8 +37,9 @@
 //! ## Quickstart
 //!
 //! ```no_run
+//! use rfdot::features::FeatureMap;
 //! use rfdot::kernels::Polynomial;
-//! use rfdot::maclaurin::{FeatureMap, RandomMaclaurin, RmConfig};
+//! use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
 //! use rfdot::rng::Rng;
 //!
 //! // K(x, y) = (1 + <x, y>)^10 approximated with 512 random features.
@@ -48,11 +56,13 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod features;
 pub mod kernels;
 pub mod linalg;
 pub mod maclaurin;
 pub mod metrics;
 pub mod nystrom;
+pub mod parallel;
 pub mod prop;
 pub mod rff;
 pub mod rng;

@@ -181,7 +181,7 @@ mod tests {
     fn inv_sqrt_of_psd() {
         // Build PSD A = B B^T, check (A^-1/2)^2 · A ≈ I on the range.
         let b = random_sym(6, 3);
-        let a = b.matmul(&b.transpose()).unwrap();
+        let a = b.matmul_transposed(&b).unwrap();
         let s = inv_sqrt_psd(&a, 1e-12);
         let s2 = s.matmul(&s).unwrap();
         let prod = s2.matmul(&a).unwrap();

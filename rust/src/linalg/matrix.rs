@@ -100,22 +100,48 @@ impl Matrix {
     }
 
     /// Cache-blocked GEMM: `C = A · B` (ikj loop order with a 64-wide
-    /// column block, which keeps the `B` panel in L1/L2).
+    /// column block, which keeps the `B` panel in L1/L2), row-blocked
+    /// across the global [`crate::parallel`] worker budget.
     pub fn matmul(&self, b: &Matrix) -> Result<Matrix> {
+        self.matmul_threads(b, 0)
+    }
+
+    /// [`Matrix::matmul`] with an explicit worker count (`0` = the
+    /// global knob). Each worker runs the identical serial kernel on a
+    /// disjoint block of output rows and the per-element accumulation
+    /// order never changes, so any thread count is bit-identical to the
+    /// serial product.
+    pub fn matmul_threads(&self, b: &Matrix, threads: usize) -> Result<Matrix> {
         if self.cols != b.rows {
             return Err(Error::shape(
                 format!("inner dim {} == {}", self.cols, b.rows),
                 "mismatch".to_string(),
             ));
         }
-        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let (m, n) = (self.rows, b.cols);
         let mut c = Matrix::zeros(m, n);
+        if m == 0 || n == 0 {
+            return Ok(c);
+        }
+        let work = m.saturating_mul(self.cols).saturating_mul(n);
+        let threads = crate::parallel::resolve_threads_for_work(threads, m, work);
+        crate::parallel::par_chunks(threads, n, &mut c.data, |row0, block| {
+            self.matmul_rows_into(b, row0, block);
+        });
+        Ok(c)
+    }
+
+    /// The serial GEMM kernel over output rows `row0 ..` of `C = A · B`,
+    /// writing into `c_block` (`block_rows × n`, row-major).
+    fn matmul_rows_into(&self, b: &Matrix, row0: usize, c_block: &mut [f32]) {
+        let (k, n) = (self.cols, b.cols);
+        let rows = c_block.len() / n;
         const JB: usize = 64;
         for j0 in (0..n).step_by(JB) {
             let j1 = (j0 + JB).min(n);
-            for i in 0..m {
-                let a_row = self.row(i);
-                let c_row = &mut c.data[i * n..(i + 1) * n];
+            for i in 0..rows {
+                let a_row = self.row(row0 + i);
+                let c_row = &mut c_block[i * n..(i + 1) * n];
                 for (kk, &a_ik) in a_row.iter().enumerate().take(k) {
                     if a_ik == 0.0 {
                         continue;
@@ -127,15 +153,64 @@ impl Matrix {
                 }
             }
         }
+    }
+
+    /// `C = A · Bᵀ` without materializing `b.transpose()`: both operands
+    /// stream row-major (`C[i][j] = ⟨A[i], B[j]⟩`), row-blocked across
+    /// the worker budget like [`Matrix::matmul`].
+    pub fn matmul_transposed(&self, b: &Matrix) -> Result<Matrix> {
+        self.matmul_transposed_threads(b, 0)
+    }
+
+    /// [`Matrix::matmul_transposed`] with an explicit worker count
+    /// (`0` = the global knob); bit-identical for any thread count.
+    pub fn matmul_transposed_threads(&self, b: &Matrix, threads: usize) -> Result<Matrix> {
+        if self.cols != b.cols {
+            return Err(Error::shape(
+                format!("shared dim {} == {}", self.cols, b.cols),
+                "mismatch".to_string(),
+            ));
+        }
+        let (m, n) = (self.rows, b.rows);
+        let mut c = Matrix::zeros(m, n);
+        if m == 0 || n == 0 {
+            return Ok(c);
+        }
+        let work = m.saturating_mul(self.cols).saturating_mul(n);
+        let threads = crate::parallel::resolve_threads_for_work(threads, m, work);
+        crate::parallel::par_chunks(threads, n, &mut c.data, |row0, block| {
+            for (i, c_row) in block.chunks_mut(n).enumerate() {
+                let a_row = self.row(row0 + i);
+                for (j, cj) in c_row.iter_mut().enumerate() {
+                    *cj = super::dot(a_row, b.row(j));
+                }
+            }
+        });
         Ok(c)
     }
 
-    /// `out = self · v` (matrix-vector).
+    /// `out = self · v` (matrix-vector), row-blocked across the global
+    /// [`crate::parallel`] worker budget.
     pub fn matvec(&self, v: &[f32]) -> Result<Vec<f32>> {
+        self.matvec_threads(v, 0)
+    }
+
+    /// [`Matrix::matvec`] with an explicit worker count (`0` = the
+    /// global knob); each `out[i]` is one independent dot product, so
+    /// any thread count is bit-identical to the serial path.
+    pub fn matvec_threads(&self, v: &[f32], threads: usize) -> Result<Vec<f32>> {
         if v.len() != self.cols {
             return Err(Error::shape(format!("vec len {}", self.cols), format!("{}", v.len())));
         }
-        Ok((0..self.rows).map(|i| super::dot(self.row(i), v)).collect())
+        let work = self.rows.saturating_mul(self.cols);
+        let threads = crate::parallel::resolve_threads_for_work(threads, self.rows, work);
+        let mut out = vec![0.0f32; self.rows];
+        crate::parallel::par_chunks(threads, 1, &mut out, |i0, block| {
+            for (k, o) in block.iter_mut().enumerate() {
+                *o = super::dot(self.row(i0 + k), v);
+            }
+        });
+        Ok(out)
     }
 
     /// Vertical concatenation.
@@ -223,6 +298,50 @@ mod tests {
                 let naive: f32 = (0..k).map(|kk| a.get(i, kk) * b.get(kk, j)).sum();
                 assert!((c.get(i, j) - naive).abs() < 1e-4);
             }
+        }
+    }
+
+    #[test]
+    fn matmul_threads_bit_identical() {
+        let mut rng = crate::rng::Rng::seed_from(3);
+        for (m, k, n) in [(1usize, 1usize, 1usize), (5, 9, 70), (17, 4, 130), (0, 3, 4)] {
+            let a = Matrix::from_vec(m, k, (0..m * k).map(|_| rng.f32() - 0.5).collect()).unwrap();
+            let b = Matrix::from_vec(k, n, (0..k * n).map(|_| rng.f32() - 0.5).collect()).unwrap();
+            let serial = a.matmul_threads(&b, 1).unwrap();
+            for threads in [2usize, 3, 8, 64] {
+                // 64 > m exercises the threads-exceed-rows clamp.
+                assert_eq!(a.matmul_threads(&b, threads).unwrap(), serial);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_transposed_matches_materialized_transpose() {
+        let mut rng = crate::rng::Rng::seed_from(4);
+        let (m, k, n) = (9usize, 13usize, 11usize);
+        let a = Matrix::from_vec(m, k, (0..m * k).map(|_| rng.f32() - 0.5).collect()).unwrap();
+        let b = Matrix::from_vec(n, k, (0..n * k).map(|_| rng.f32() - 0.5).collect()).unwrap();
+        let direct = a.matmul_transposed(&b).unwrap();
+        let via_transpose = a.matmul(&b.transpose()).unwrap();
+        assert_eq!((direct.rows(), direct.cols()), (m, n));
+        // Different accumulation orders ⇒ float tolerance, not equality.
+        assert!(direct.max_abs_diff(&via_transpose) < 1e-4);
+        let serial = a.matmul_transposed_threads(&b, 1).unwrap();
+        for threads in [2usize, 5, 32] {
+            assert_eq!(a.matmul_transposed_threads(&b, threads).unwrap(), serial);
+        }
+        assert!(a.matmul_transposed(&Matrix::zeros(2, k + 1)).is_err());
+    }
+
+    #[test]
+    fn matvec_threads_bit_identical() {
+        let mut rng = crate::rng::Rng::seed_from(5);
+        let (m, k) = (23usize, 17usize);
+        let a = Matrix::from_vec(m, k, (0..m * k).map(|_| rng.f32() - 0.5).collect()).unwrap();
+        let v: Vec<f32> = (0..k).map(|_| rng.f32() - 0.5).collect();
+        let serial = a.matvec_threads(&v, 1).unwrap();
+        for threads in [2usize, 4, 64] {
+            assert_eq!(a.matvec_threads(&v, threads).unwrap(), serial);
         }
     }
 

@@ -91,6 +91,42 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
+/// Build a symmetric `n × n` matrix from its lower triangle: entry
+/// `(i, j)` for `j ≤ i` comes from `entry(i, j)`, computed in row
+/// blocks balanced for the triangular cost across the worker budget
+/// (`threads == 0` = the global [`crate::parallel`] knob, with the
+/// small-work cutoff scaled by `unit_work`, the approximate mul-adds
+/// per entry). The upper triangle is mirrored with pure copies, so any
+/// thread count is bit-identical to the serial fill. Shared scaffold of
+/// [`crate::kernels::gram`] and [`crate::features::feature_gram`].
+pub fn symmetric_from_lower<F>(n: usize, threads: usize, unit_work: usize, entry: F) -> Matrix
+where
+    F: Fn(usize, usize) -> f32 + Sync,
+{
+    let mut g = Matrix::zeros(n, n);
+    if n == 0 {
+        return g;
+    }
+    let work = (n.saturating_mul(n) / 2).saturating_mul(unit_work.max(1));
+    let t = crate::parallel::resolve_threads_for_work(threads, n, work);
+    let ranges = crate::parallel::partition_triangular(n, t);
+    crate::parallel::par_chunks_ranges(n, g.as_mut_slice(), &ranges, |row0, block| {
+        for (i, g_row) in block.chunks_mut(n).enumerate() {
+            let gi = row0 + i;
+            for (j, slot) in g_row[..=gi].iter_mut().enumerate() {
+                *slot = entry(gi, j);
+            }
+        }
+    });
+    for i in 0..n {
+        for j in 0..i {
+            let v = g.get(i, j);
+            g.set(j, i, v);
+        }
+    }
+    g
+}
+
 /// Smallest eigenvalue estimate of a symmetric matrix by shifted power
 /// iteration: run power iteration on `c·I − A` (with `c` = a Gershgorin
 /// upper bound on `λ_max`), whose top eigenvalue is `c − λ_min(A)`.
@@ -175,6 +211,23 @@ mod tests {
         assert!((mean(&xs) - 2.5).abs() < 1e-12);
         assert!((stddev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
         assert_eq!(stddev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn symmetric_from_lower_builds_symmetric() {
+        // Lower-triangle entries land as given, upper mirrors them,
+        // and thread counts (including > n) never change the result.
+        let want = symmetric_from_lower(5, 1, 1, |i, j| (i * 10 + j) as f32);
+        for i in 0..5 {
+            for j in 0..=i {
+                assert_eq!(want.get(i, j), (i * 10 + j) as f32);
+                assert_eq!(want.get(j, i), want.get(i, j));
+            }
+        }
+        for threads in [2usize, 3, 64] {
+            assert_eq!(symmetric_from_lower(5, threads, 1, |i, j| (i * 10 + j) as f32), want);
+        }
+        assert_eq!(symmetric_from_lower(0, 4, 1, |_, _| 1.0).rows(), 0);
     }
 
     #[test]

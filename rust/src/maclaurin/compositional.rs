@@ -15,7 +15,7 @@
 //! where the inner map is a Rademacher projection (`W(x) = ω^T x`).
 
 use super::rm::RmConfig;
-use super::FeatureMap;
+use crate::features::FeatureMap;
 use crate::kernels::DotProductKernel;
 use crate::rng::{Geometric, Rng};
 

@@ -7,13 +7,16 @@
 //! * [`compositional`] — Algorithm 2: feature maps for
 //!   `K_co(x, y) = f(K(x, y))` given black-box scalar feature maps for
 //!   the inner kernel `K`.
-//! * [`FeatureMap`] — the embedding interface shared by all maps (and by
-//!   [`crate::rff`]), consumed by the SVM pipelines, the coordinator and
-//!   the bench harness.
 //! * [`serialize`] — a canonical binary wire format for sampled maps, so
 //!   the Rust native engine, the PJRT artifact path and the Python
 //!   oracle all evaluate the *same* map (same seed ⇒ same bytes ⇒ same
 //!   features to float tolerance).
+//!
+//! The [`FeatureMap`] trait and [`feature_gram`] used to live here;
+//! they are now owned by the crate-level [`crate::features`] layer
+//! (which `rff`, `tensorsketch` and `nystrom` implement as peers) and
+//! re-exported below so existing `maclaurin::FeatureMap` imports keep
+//! compiling during the migration.
 
 pub mod compositional;
 pub mod rm;
@@ -22,62 +25,17 @@ pub mod serialize;
 pub use compositional::{CompositionalMaclaurin, ScalarMap, ScalarMapFactory};
 pub use rm::{RandomMaclaurin, RmConfig};
 
-use crate::linalg::Matrix;
-
-/// A (possibly randomized, already-sampled) feature embedding
-/// `R^input_dim → R^output_dim`.
-pub trait FeatureMap: Send + Sync {
-    /// Input dimensionality `d`.
-    fn input_dim(&self) -> usize;
-
-    /// Output dimensionality (`D`, or `1 + d + D` with H0/1).
-    fn output_dim(&self) -> usize;
-
-    /// Apply the map to one vector, writing into `out`
-    /// (`out.len() == output_dim()`).
-    fn transform_into(&self, x: &[f32], out: &mut [f32]);
-
-    /// Apply the map to one vector.
-    fn transform(&self, x: &[f32]) -> Vec<f32> {
-        let mut out = vec![0.0; self.output_dim()];
-        self.transform_into(x, &mut out);
-        out
-    }
-
-    /// Apply the map to every row of `x`.
-    fn transform_batch(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols(), self.input_dim(), "input dim mismatch");
-        let mut out = Matrix::zeros(x.rows(), self.output_dim());
-        for i in 0..x.rows() {
-            let row = x.row(i);
-            // Split borrow: rows of `out` are disjoint.
-            self.transform_into(row, out.row_mut(i));
-        }
-        out
-    }
-}
-
-/// Approximate Gram matrix `⟨Z(x_i), Z(x_j)⟩` of a feature map over the
-/// rows of `x` — compared against [`crate::kernels::gram`] in the
-/// Figure 1 experiments.
-pub fn feature_gram(map: &dyn FeatureMap, x: &Matrix) -> Matrix {
-    let z = map.transform_batch(x);
-    let n = z.rows();
-    let mut g = Matrix::zeros(n, n);
-    for i in 0..n {
-        for j in 0..=i {
-            let v = crate::linalg::dot(z.row(i), z.row(j));
-            g.set(i, j, v);
-            g.set(j, i, v);
-        }
-    }
-    g
-}
+/// Deprecated location — import from [`crate::features`] instead. Kept
+/// as a re-export so downstream code migrates incrementally.
+pub use crate::features::{feature_gram, FeatureMap};
 
 #[cfg(test)]
 mod tests {
+    // Deliberately imports the trait through the `maclaurin` re-export:
+    // these tests pin the deprecated path alongside the behavior.
     use super::*;
     use crate::kernels::Polynomial;
+    use crate::linalg::Matrix;
     use crate::rng::Rng;
 
     #[test]

@@ -20,7 +20,7 @@
 //! so a bias-free linear model can absorb it, as the paper absorbs it
 //! into the SVM offset.
 
-use super::FeatureMap;
+use crate::features::FeatureMap;
 use crate::kernels::DotProductKernel;
 use crate::rng::{Geometric, RademacherMatrix, Rng};
 
@@ -313,10 +313,6 @@ impl RandomMaclaurin {
     }
 
     pub fn config(&self) -> &RmConfig {
-        self.config_ref()
-    }
-
-    fn config_ref(&self) -> &RmConfig {
         &self.config
     }
 
@@ -495,28 +491,46 @@ impl FeatureMap for RandomMaclaurin {
 
     /// Batch override: one blocked GEMM `P = X · Ω^T` computes every
     /// projection of every example, then the segmented products — the
-    /// CPU mirror of the Pallas kernel's per-order MXU matmuls.
-    fn transform_batch(&self, x: &crate::linalg::Matrix) -> crate::linalg::Matrix {
+    /// CPU mirror of the Pallas kernel's per-order MXU matmuls. Both
+    /// passes fan row blocks out over `threads` scoped workers (`0` =
+    /// the global [`crate::parallel`] knob); every output row runs the
+    /// identical serial routine, so results are bit-identical for any
+    /// thread count.
+    fn transform_batch_threads(
+        &self,
+        x: &crate::linalg::Matrix,
+        threads: usize,
+    ) -> crate::linalg::Matrix {
         assert_eq!(x.cols(), self.d, "input dim mismatch");
         let b = x.rows();
         let mut out = crate::linalg::Matrix::zeros(b, self.output_dim());
+        if b == 0 {
+            return out;
+        }
         let dense_t = self.dense_t();
         let proj = if dense_t.cols() > 0 {
-            x.matmul(dense_t).expect("inner dims agree")
+            x.matmul_threads(dense_t, threads).expect("inner dims agree")
         } else {
             crate::linalg::Matrix::zeros(b, 0)
         };
         let prefix = if self.config.h01 { 1 + self.d } else { 0 };
-        for i in 0..b {
-            let row_out = out.row_mut(i);
-            if self.config.h01 {
-                row_out[0] = self.w_const;
-                for (o, &xi) in row_out[1..1 + self.d].iter_mut().zip(x.row(i)) {
-                    *o = self.w_linear * xi;
+        let dd = self.output_dim();
+        // Segmented products cost ~(projections + outputs) per row; the
+        // GEMM above applies its own small-work cutoff internally.
+        let work = b.saturating_mul(proj.cols() + dd);
+        let threads = crate::parallel::resolve_threads_for_work(threads, b, work);
+        crate::parallel::par_chunks(threads, dd, out.as_mut_slice(), |row0, block| {
+            for (i, row_out) in block.chunks_mut(dd).enumerate() {
+                let r = row0 + i;
+                if self.config.h01 {
+                    row_out[0] = self.w_const;
+                    for (o, &xi) in row_out[1..1 + self.d].iter_mut().zip(x.row(r)) {
+                        *o = self.w_linear * xi;
+                    }
                 }
+                self.products_from_projections(proj.row(r), &mut row_out[prefix..]);
             }
-            self.products_from_projections(proj.row(i), &mut row_out[prefix..]);
-        }
+        });
         out
     }
 }

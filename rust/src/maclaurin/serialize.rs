@@ -176,7 +176,8 @@ pub fn load(path: impl AsRef<Path>) -> Result<RandomMaclaurin> {
 mod tests {
     use super::*;
     use crate::kernels::{Exponential, Polynomial};
-    use crate::maclaurin::{FeatureMap, RmConfig};
+    use crate::features::FeatureMap;
+    use crate::maclaurin::RmConfig;
     use crate::rng::Rng;
 
     #[test]

@@ -10,9 +10,9 @@
 //! features cost `O(m·d)` kernel evaluations each; the benches use it
 //! as the accuracy-per-dimension baseline.
 
+use crate::features::FeatureMap;
 use crate::kernels::DotProductKernel;
 use crate::linalg::{inv_sqrt_psd, Matrix};
-use crate::maclaurin::FeatureMap;
 use crate::rng::Rng;
 use crate::{Error, Result};
 
@@ -78,8 +78,8 @@ impl FeatureMap for Nystrom {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::features::feature_gram;
     use crate::kernels::{gram, mean_abs_gram_error, Exponential, Polynomial};
-    use crate::maclaurin::feature_gram;
 
     fn sphere_points(n: usize, d: usize, seed: u64) -> Matrix {
         let mut rng = Rng::seed_from(seed);

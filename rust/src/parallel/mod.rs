@@ -1,0 +1,403 @@
+//! In-tree data-parallel execution subsystem (no external crates are
+//! reachable in this environment, so this is `std::thread` only).
+//!
+//! The paper's whole pitch is speed — explicit feature maps make
+//! training and serving *linear* in the data — and the CPU hot paths
+//! that realize that promise ([`crate::linalg::Matrix::matmul`],
+//! [`crate::features::FeatureMap::transform_batch`],
+//! [`crate::kernels::gram`] / [`crate::features::feature_gram`], the SVM
+//! scoring loops) are embarrassingly row-parallel. This module provides
+//! the one primitive they all share:
+//!
+//! * [`par_chunks`] — partition a row-major buffer into contiguous
+//!   row blocks and run the same per-block routine on a scoped worker
+//!   pool ([`std::thread::scope`]: workers borrow the caller's data,
+//!   are joined before the call returns, and propagate panics).
+//! * [`par_map`] / [`par_sum_usize`] — fill-a-vector and
+//!   integer-reduction conveniences built on the same partitioning.
+//! * [`max_threads`] / [`set_max_threads`] — the process-wide
+//!   parallelism knob, surfaced through `config` (`threads`), the CLI
+//!   (`--threads`), the bench harness and
+//!   [`crate::coordinator::CoordinatorConfig::intra_op_threads`]. The
+//!   `RFDOT_THREADS` environment variable seeds the default.
+//!
+//! **Determinism contract:** every helper here partitions work into
+//! *whole rows* (or whole indices) and each row is computed by the same
+//! serial routine regardless of the thread count — there is no
+//! cross-row floating-point reduction whose order could change. Running
+//! with 1 thread, 8 threads, or more threads than rows therefore
+//! produces **bit-identical** results; `rust/tests/parallel_identity.rs`
+//! holds every hot path to that by exact equality.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide thread budget; 0 = not yet resolved.
+static MAX_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Threads the hardware advertises (1 if unknown).
+pub fn hardware_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The process-wide worker budget used when a call site passes
+/// `threads = 0`. Resolved on first use from `RFDOT_THREADS` (if set to
+/// a positive integer) or the hardware parallelism; overridable at any
+/// time with [`set_max_threads`].
+pub fn max_threads() -> usize {
+    match MAX_THREADS.load(Ordering::Relaxed) {
+        0 => {
+            let n = std::env::var("RFDOT_THREADS")
+                .ok()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or_else(hardware_threads);
+            // Benign race: every initializer computes the same value.
+            MAX_THREADS.store(n, Ordering::Relaxed);
+            n
+        }
+        n => n,
+    }
+}
+
+/// Set the process-wide worker budget (clamped to ≥ 1). This is the
+/// single knob behind `--threads`, the `threads` config field and the
+/// coordinator's `intra_op_threads = 0` ("inherit") setting.
+pub fn set_max_threads(threads: usize) {
+    MAX_THREADS.store(threads.max(1), Ordering::Relaxed);
+}
+
+/// Resolve a per-call thread request against the global knob and the
+/// number of work units: `0` means "use [`max_threads`]", and no more
+/// workers than units are ever spawned.
+pub fn resolve_threads(threads: usize, units: usize) -> usize {
+    let t = if threads == 0 { max_threads() } else { threads };
+    t.max(1).min(units.max(1))
+}
+
+/// Work (in primitive mul-add/eval units) below which the *auto* paths
+/// (`threads == 0`) run inline: scoped spawn/join costs tens of
+/// microseconds, which dwarfs the compute for small operands (a 16×16
+/// Gram, PCA's per-iteration matvec). Scheduling only — results are
+/// bit-identical either way; an explicit thread count always fans out
+/// as requested so the identity tests exercise real parallel code.
+pub const MIN_PAR_WORK: usize = 1 << 17;
+
+/// [`resolve_threads`] with the [`MIN_PAR_WORK`] heuristic: an auto
+/// request (`threads == 0`) whose estimated `work` is below the cutoff
+/// resolves to 1 thread.
+pub fn resolve_threads_for_work(threads: usize, units: usize, work: usize) -> usize {
+    if threads == 0 && work < MIN_PAR_WORK {
+        1
+    } else {
+        resolve_threads(threads, units)
+    }
+}
+
+/// Balanced contiguous partition of `0..n` into at most `parts` ranges
+/// (the first `n % parts` ranges get one extra unit; no empty ranges).
+pub fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Balanced contiguous partition of `0..n` for *triangular* workloads
+/// where unit `i` costs `i + 1` (lower-triangle Gram rows): boundaries
+/// sit at `n·√(p/parts)` so every range carries roughly equal total
+/// work. Scheduling only — results never depend on the partition.
+pub fn partition_triangular(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut bounds = Vec::with_capacity(parts + 1);
+    bounds.push(0usize);
+    for p in 1..parts {
+        let b = ((n as f64) * ((p as f64) / (parts as f64)).sqrt()).round() as usize;
+        let prev = *bounds.last().expect("non-empty");
+        // Strictly increasing, leaving ≥ 1 unit for each later range.
+        bounds.push(b.max(prev + 1).min(n - (parts - p)));
+    }
+    bounds.push(n);
+    bounds.windows(2).map(|w| w[0]..w[1]).collect()
+}
+
+/// [`par_chunks`] with caller-supplied contiguous row ranges (e.g.
+/// from [`partition_triangular`]) instead of equal-row blocks. The
+/// ranges must cover `0..data.len()/stride` in order without gaps.
+pub fn par_chunks_ranges<T, F>(stride: usize, data: &mut [T], ranges: &[Range<usize>], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if ranges.len() <= 1 {
+        f(0, data);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut inline: Option<(usize, &mut [T])> = None;
+        for (idx, r) in ranges.iter().enumerate() {
+            let (block, tail) = rest.split_at_mut(r.len() * stride);
+            rest = tail;
+            if idx == 0 {
+                // The calling thread takes the first block itself
+                // instead of idling at the scope barrier.
+                inline = Some((r.start, block));
+            } else {
+                let f = &f;
+                let start = r.start;
+                s.spawn(move || f(start, block));
+            }
+        }
+        if let Some((start, block)) = inline {
+            f(start, block);
+        }
+    });
+}
+
+/// Row-chunked parallel-for over a mutable row-major buffer.
+///
+/// `data` is treated as `data.len() / stride` logical rows of `stride`
+/// elements each. The buffer is split into contiguous row blocks, one
+/// per scoped worker, and `f(first_row, block)` runs once per block
+/// (`block` covers rows `first_row .. first_row + block.len() / stride`).
+/// With `threads <= 1` (after resolving `0` via [`max_threads`]) the
+/// closure runs inline on the whole buffer — the serial path and the
+/// parallel path execute the same per-row code, which is what makes the
+/// results bit-identical.
+///
+/// `stride` must evenly divide `data.len()`; a `stride` of 0 is only
+/// meaningful for an empty buffer (the closure then runs once on it).
+pub fn par_chunks<T, F>(threads: usize, stride: usize, data: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    debug_assert!(stride == 0 || data.len() % stride == 0, "stride must divide data.len()");
+    let units = if stride == 0 { 0 } else { data.len() / stride };
+    let t = resolve_threads(threads, units);
+    if t <= 1 || units <= 1 {
+        f(0, data);
+        return;
+    }
+    // Ceil division keeps every block whole-row and the count ≤ t.
+    let chunk_units = (units + t - 1) / t;
+    std::thread::scope(|s| {
+        let mut blocks = data.chunks_mut(chunk_units * stride).enumerate();
+        // The calling thread takes the first block itself instead of
+        // idling at the scope barrier (t-way parallelism, t-1 spawns).
+        let inline = blocks.next();
+        for (ci, block) in blocks {
+            let f = &f;
+            s.spawn(move || f(ci * chunk_units, block));
+        }
+        if let Some((ci, block)) = inline {
+            f(ci * chunk_units, block);
+        }
+    });
+}
+
+/// Parallel `(0..n).map(f).collect()` over the scoped worker pool.
+/// Index `i` always lands in slot `i`, so the output is identical to the
+/// serial collect for any thread count.
+pub fn par_map<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send + Clone + Default,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    par_chunks(threads, 1, &mut out, |i0, block| {
+        for (k, slot) in block.iter_mut().enumerate() {
+            *slot = f(i0 + k);
+        }
+    });
+    out
+}
+
+/// Parallel integer reduction: partition `0..n`, run `f` per range on
+/// the scoped pool, and sum the counts. Integer addition is associative,
+/// so this is exactly the serial count for any thread count.
+pub fn par_sum_usize<F>(threads: usize, n: usize, f: F) -> usize
+where
+    F: Fn(Range<usize>) -> usize + Sync,
+{
+    let t = resolve_threads(threads, n);
+    if t <= 1 || n <= 1 {
+        return f(0..n);
+    }
+    std::thread::scope(|s| {
+        let mut ranges = partition(n, t).into_iter();
+        let inline = ranges.next();
+        let handles: Vec<_> = ranges
+            .map(|r| {
+                let f = &f;
+                s.spawn(move || f(r))
+            })
+            .collect();
+        let mut total = inline.map(|r| f(r)).unwrap_or(0);
+        for h in handles {
+            total += h.join().expect("parallel worker panicked");
+        }
+        total
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_balanced_and_covers() {
+        for n in [0usize, 1, 2, 7, 64, 65] {
+            for parts in [1usize, 2, 3, 8, 100] {
+                let ranges = partition(n, parts);
+                // Coverage in order, no gaps.
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next);
+                    assert!(!r.is_empty());
+                    next = r.end;
+                }
+                assert_eq!(next, n);
+                if n > 0 {
+                    assert!(ranges.len() <= parts.min(n));
+                    let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                    let (min, max) =
+                        (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                    assert!(max - min <= 1, "unbalanced: {lens:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_visits_every_row_once() {
+        for threads in [1usize, 2, 3, 9, 64] {
+            let rows = 17;
+            let cols = 5;
+            let mut data = vec![0u32; rows * cols];
+            par_chunks(threads, cols, &mut data, |row0, block| {
+                for (i, row) in block.chunks_mut(cols).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += 1 + (row0 + i) as u32;
+                    }
+                }
+            });
+            for (idx, v) in data.iter().enumerate() {
+                assert_eq!(*v, 1 + (idx / cols) as u32, "row {} touched wrong", idx / cols);
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_handles_empty_and_single() {
+        let mut empty: Vec<f32> = Vec::new();
+        par_chunks(4, 0, &mut empty, |_, block| assert!(block.is_empty()));
+        par_chunks(4, 3, &mut empty, |_, block| assert!(block.is_empty()));
+        let mut one = vec![0.0f32; 3];
+        par_chunks(8, 3, &mut one, |row0, block| {
+            assert_eq!(row0, 0);
+            block.fill(2.0);
+        });
+        assert_eq!(one, vec![2.0; 3]);
+    }
+
+    #[test]
+    fn partition_triangular_covers_and_balances() {
+        for n in [0usize, 1, 4, 7, 100] {
+            for parts in [1usize, 2, 4, 9, 200] {
+                let ranges = partition_triangular(n, parts);
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next);
+                    assert!(!r.is_empty());
+                    next = r.end;
+                }
+                assert_eq!(next, n);
+            }
+        }
+        // Triangular work (row i costs i+1) is near-equal across ranges.
+        let n = 1000;
+        let ranges = partition_triangular(n, 4);
+        let total = n * (n + 1) / 2;
+        for r in &ranges {
+            let work: usize = r.clone().map(|i| i + 1).sum();
+            assert!(
+                work * 4 < total * 3 / 2 && work * 4 > total / 2,
+                "unbalanced triangular range {r:?}: {work} of {total}"
+            );
+        }
+    }
+
+    #[test]
+    fn par_chunks_ranges_visits_every_row_once() {
+        let rows = 23;
+        let cols = 3;
+        let mut data = vec![0u32; rows * cols];
+        let ranges = partition_triangular(rows, 5);
+        par_chunks_ranges(cols, &mut data, &ranges, |row0, block| {
+            for (i, row) in block.chunks_mut(cols).enumerate() {
+                for v in row.iter_mut() {
+                    *v += 1 + (row0 + i) as u32;
+                }
+            }
+        });
+        for (idx, v) in data.iter().enumerate() {
+            assert_eq!(*v, 1 + (idx / cols) as u32);
+        }
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        for threads in [1usize, 2, 5, 33] {
+            let got = par_map(threads, 100, |i| (i * i) as u64);
+            let want: Vec<u64> = (0..100).map(|i| (i * i) as u64).collect();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn par_sum_matches_serial() {
+        for threads in [1usize, 2, 7, 100] {
+            let got = par_sum_usize(threads, 1000, |r| r.filter(|i| i % 3 == 0).count());
+            assert_eq!(got, (0..1000).filter(|i| i % 3 == 0).count());
+        }
+        assert_eq!(par_sum_usize(4, 0, |r| r.count()), 0);
+    }
+
+    #[test]
+    fn knob_round_trips() {
+        // The knob is process-global and tests run concurrently, so
+        // this must stay the only test in the binary that *mutates* it
+        // (set-path CLI coverage passes `--threads 0`, a no-op).
+        set_max_threads(3);
+        assert_eq!(max_threads(), 3);
+        set_max_threads(0); // clamped to 1
+        assert_eq!(max_threads(), 1);
+        set_max_threads(hardware_threads());
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panics_propagate() {
+        let mut data = vec![0u8; 64];
+        par_chunks(8, 1, &mut data, |row0, _| {
+            if row0 > 0 {
+                panic!("injected");
+            }
+        });
+    }
+}

@@ -14,8 +14,8 @@
 //!   (`C_W = 2`) and Lipschitz on expectation — exactly the assumptions
 //!   of the paper's §5.
 
+use crate::features::FeatureMap;
 use crate::maclaurin::compositional::{ScalarMap, ScalarMapFactory};
-use crate::maclaurin::FeatureMap;
 use crate::rng::Rng;
 
 /// Gaussian RBF kernel `K(x, y) = exp(−γ ‖x − y‖²)` (helper for tests

@@ -88,15 +88,20 @@ impl LinearSvm {
         let mut w = vec![0.0f32; d];
         let mut b = 0.0f32;
         let mut alpha = vec![0.0f64; n];
-        // ||x_i||^2 (+ bias^2) + diag, precomputed.
-        let qii: Vec<f64> = (0..n)
-            .map(|i| {
-                let r = x.row(i);
-                dot(r, r) as f64
-                    + if use_bias { (params.bias_scale * params.bias_scale) as f64 } else { 0.0 }
-                    + diag
-            })
-            .collect();
+        // ||x_i||^2 (+ bias^2) + diag, precomputed. Rows are independent
+        // so this fans out over the parallel worker budget. The epochs
+        // below stay sequential on purpose: each coordinate update reads
+        // the `w` left by the previous one, so any parallel reordering
+        // would change the trajectory and break the solver's bit-exact
+        // reproducibility for a fixed seed.
+        let bias2 =
+            if use_bias { (params.bias_scale * params.bias_scale) as f64 } else { 0.0 };
+        let qii_threads =
+            crate::parallel::resolve_threads_for_work(0, n, n.saturating_mul(d.max(1)));
+        let qii: Vec<f64> = crate::parallel::par_map(qii_threads, n, |i| {
+            let r = x.row(i);
+            dot(r, r) as f64 + bias2 + diag
+        });
 
         let mut order: Vec<usize> = (0..n).collect();
         let mut rng = Rng::seed_from(params.seed);
@@ -274,7 +279,8 @@ mod tests {
         // The paper's whole point: xor + quadratic-kernel RM features
         // become linearly separable.
         use crate::kernels::Homogeneous;
-        use crate::maclaurin::{FeatureMap, RandomMaclaurin, RmConfig};
+        use crate::features::FeatureMap;
+        use crate::maclaurin::{RandomMaclaurin, RmConfig};
         let mut ds = xor(600, 8);
         ds.normalize_rows();
         let mut rng = crate::rng::Rng::seed_from(9);

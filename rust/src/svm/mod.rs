@@ -29,6 +29,14 @@ pub trait Classifier: Send + Sync {
     /// Decision value for one example (sign = predicted label).
     fn decision(&self, x: &[f32]) -> f32;
 
+    /// Approximate mul-adds per [`Classifier::decision`] call on a
+    /// `input_dim`-dimensional example — sizes the parallel fan-out in
+    /// [`Classifier::accuracy`]. Defaults to one dot product (linear
+    /// models); kernel machines override with their `O(n_sv · d)` cost.
+    fn decision_cost(&self, input_dim: usize) -> usize {
+        input_dim
+    }
+
     /// Predicted label in {−1, +1}.
     fn predict(&self, x: &[f32]) -> f32 {
         if self.decision(x) >= 0.0 {
@@ -38,13 +46,20 @@ pub trait Classifier: Send + Sync {
         }
     }
 
-    /// Fraction of correct predictions on a labeled set.
+    /// Fraction of correct predictions on a labeled set. Predictions
+    /// are independent and the reduction is an integer count, so the
+    /// rows fan out over the [`crate::parallel`] worker budget with
+    /// exactly the serial result.
     fn accuracy(&self, x: &Matrix, y: &[f32]) -> f64 {
         assert_eq!(x.rows(), y.len());
         if y.is_empty() {
             return 0.0;
         }
-        let correct = (0..x.rows()).filter(|&i| self.predict(x.row(i)) == y[i]).count();
+        let work = x.rows().saturating_mul(self.decision_cost(x.cols()).max(1));
+        let threads = crate::parallel::resolve_threads_for_work(0, x.rows(), work);
+        let correct = crate::parallel::par_sum_usize(threads, x.rows(), |range| {
+            range.filter(|&i| self.predict(x.row(i)) == y[i]).count()
+        });
         correct as f64 / y.len() as f64
     }
 

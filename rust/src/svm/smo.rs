@@ -276,6 +276,11 @@ impl Classifier for KernelSvm {
         }
         (acc + self.bias) as f32
     }
+
+    /// The curse of support: every decision walks all support vectors.
+    fn decision_cost(&self, input_dim: usize) -> usize {
+        self.n_support().saturating_mul(input_dim.max(1))
+    }
 }
 
 #[cfg(test)]

@@ -10,8 +10,8 @@
 //! pure polynomial kernels — but, unlike Random Maclaurin, it does not
 //! extend to arbitrary dot product kernels.
 
+use crate::features::FeatureMap;
 use crate::linalg::fft::{complex_mul_inplace, fft};
-use crate::maclaurin::FeatureMap;
 use crate::rng::Rng;
 
 /// A sampled TensorSketch map for `(⟨x, y⟩ + r)^p`.
@@ -97,9 +97,9 @@ impl FeatureMap for TensorSketch {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::features::feature_gram;
     use crate::kernels::{gram, mean_abs_gram_error, Polynomial};
     use crate::linalg::{dot, Matrix};
-    use crate::maclaurin::feature_gram;
 
     fn sphere_points(n: usize, d: usize, seed: u64) -> Matrix {
         let mut rng = Rng::seed_from(seed);

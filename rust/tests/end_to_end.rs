@@ -5,9 +5,8 @@ use rfdot::config::{ExperimentConfig, KernelSpec};
 use rfdot::data::{libsvm, Dataset, UciSurrogate};
 use rfdot::kernels::{DotProductKernel, Exponential, Polynomial, VovkReal};
 use rfdot::linalg::Matrix;
-use rfdot::maclaurin::{
-    serialize, CompositionalMaclaurin, FeatureMap, RandomMaclaurin, RmConfig,
-};
+use rfdot::features::FeatureMap;
+use rfdot::maclaurin::{serialize, CompositionalMaclaurin, RandomMaclaurin, RmConfig};
 use rfdot::rff::RffScalarFactory;
 use rfdot::rng::Rng;
 use rfdot::svm::{Classifier, LinearSvm, LinearSvmParams};
@@ -168,7 +167,7 @@ fn vovk_real_gram_approximation() {
     let x = Matrix::from_rows(&rows).unwrap();
     let exact = rfdot::kernels::gram(&kernel, &x);
     let map = RandomMaclaurin::sample(&kernel, 10, 4096, RmConfig::default(), &mut rng);
-    let approx = rfdot::maclaurin::feature_gram(&map, &x);
+    let approx = rfdot::features::feature_gram(&map, &x);
     let err = rfdot::kernels::mean_abs_gram_error(&exact, &approx);
     assert!(err < 0.25, "gram err {err}");
 }

@@ -1,0 +1,215 @@
+//! Exact-equality properties of the data-parallel execution subsystem.
+//!
+//! The contract of `rfdot::parallel` is that row-chunked partitioning
+//! never reorders any floating-point reduction: every hot path must
+//! produce **bit-identical** output for every thread count — 1 thread,
+//! a handful, or far more threads than rows. These properties hold
+//! `matmul`, `matvec`, `matmul_transposed`, `transform_batch` (all four
+//! map families), `gram` and `feature_gram` to that with `==`, across
+//! randomized shapes from the in-tree property harness.
+
+use rfdot::features::{feature_gram_threads, FeatureMap};
+use rfdot::kernels::{Exponential, Polynomial};
+use rfdot::linalg::Matrix;
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
+use rfdot::nystrom::Nystrom;
+use rfdot::prop::{forall, PropConfig};
+use rfdot::rff::RandomFourier;
+use rfdot::rng::Rng;
+use rfdot::tensorsketch::TensorSketch;
+
+/// Thread counts to compare against the serial (1-thread) path;
+/// includes counts far larger than any generated row count.
+const THREADS: [usize; 4] = [2, 3, 8, 64];
+
+fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    let data: Vec<f32> = (0..rows * cols).map(|_| rng.f32() - 0.5).collect();
+    Matrix::from_vec(rows, cols, data).unwrap()
+}
+
+#[derive(Debug)]
+struct ShapeCase {
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+}
+
+fn gen_shape(rng: &mut Rng, size: usize) -> ShapeCase {
+    // Sides in 0..=size: exercises empty, single-row and multi-chunk.
+    let side = |rng: &mut Rng| rng.below(size as u64 + 1) as usize;
+    ShapeCase { m: side(rng), k: side(rng), n: side(rng), seed: rng.next_u64() }
+}
+
+#[test]
+fn prop_matmul_bit_identical_across_threads() {
+    forall(
+        PropConfig { cases: 60, seed: 0x9A11, max_size: 40 },
+        gen_shape,
+        |case| {
+            let mut rng = Rng::seed_from(case.seed);
+            let a = random_matrix(&mut rng, case.m, case.k);
+            let b = random_matrix(&mut rng, case.k, case.n);
+            let serial = a.matmul_threads(&b, 1).map_err(|e| e.to_string())?;
+            for t in THREADS {
+                let par = a.matmul_threads(&b, t).map_err(|e| e.to_string())?;
+                if par != serial {
+                    return Err(format!(
+                        "matmul {}x{}x{} differs at {t} threads",
+                        case.m, case.k, case.n
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_matvec_and_matmul_transposed_bit_identical() {
+    forall(
+        PropConfig { cases: 50, seed: 0x9A12, max_size: 40 },
+        gen_shape,
+        |case| {
+            let mut rng = Rng::seed_from(case.seed);
+            let a = random_matrix(&mut rng, case.m, case.k);
+            let b = random_matrix(&mut rng, case.n, case.k);
+            let v: Vec<f32> = (0..case.k).map(|_| rng.f32() - 0.5).collect();
+            let mv = a.matvec_threads(&v, 1).map_err(|e| e.to_string())?;
+            let mt = a.matmul_transposed_threads(&b, 1).map_err(|e| e.to_string())?;
+            for t in THREADS {
+                if a.matvec_threads(&v, t).map_err(|e| e.to_string())? != mv {
+                    return Err(format!("matvec differs at {t} threads"));
+                }
+                if a.matmul_transposed_threads(&b, t).map_err(|e| e.to_string())? != mt {
+                    return Err(format!("matmul_transposed differs at {t} threads"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Debug)]
+struct BatchCase {
+    d: usize,
+    n_feat: usize,
+    rows: usize,
+    h01: bool,
+    seed: u64,
+}
+
+fn gen_batch(rng: &mut Rng, size: usize) -> BatchCase {
+    BatchCase {
+        d: 1 + rng.below(1 + size as u64 / 2) as usize,
+        n_feat: 1 + rng.below(1 + 2 * size as u64) as usize,
+        rows: rng.below(size as u64 + 2) as usize,
+        h01: rng.bernoulli(0.5),
+        seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn prop_transform_batch_bit_identical_all_families() {
+    forall(
+        PropConfig { cases: 40, seed: 0x9A13, max_size: 24 },
+        gen_batch,
+        |case| {
+            let mut rng = Rng::seed_from(case.seed);
+            let x = random_matrix(&mut rng, case.rows, case.d);
+            let maps: Vec<(&str, Box<dyn FeatureMap>)> = vec![
+                (
+                    "maclaurin",
+                    Box::new(RandomMaclaurin::sample(
+                        &Polynomial::new(3, 1.0),
+                        case.d,
+                        case.n_feat,
+                        RmConfig::default().with_h01(case.h01),
+                        &mut rng,
+                    )),
+                ),
+                (
+                    "rff",
+                    Box::new(RandomFourier::sample(0.9, case.d, case.n_feat, &mut rng)),
+                ),
+                (
+                    "tensorsketch",
+                    Box::new(TensorSketch::sample(3, 1.0, case.d, case.n_feat, &mut rng)),
+                ),
+            ];
+            for (name, map) in &maps {
+                let serial = map.transform_batch_threads(&x, 1);
+                for t in THREADS {
+                    if map.transform_batch_threads(&x, t) != serial {
+                        return Err(format!(
+                            "{name} transform_batch ({} rows) differs at {t} threads",
+                            case.rows
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_feature_gram_and_gram_bit_identical() {
+    forall(
+        PropConfig { cases: 30, seed: 0x9A14, max_size: 20 },
+        gen_batch,
+        |case| {
+            let mut rng = Rng::seed_from(case.seed);
+            let x = random_matrix(&mut rng, case.rows, case.d);
+            let map = RandomMaclaurin::sample(
+                &Exponential::new(1.0),
+                case.d,
+                case.n_feat,
+                RmConfig::default(),
+                &mut rng,
+            );
+            let fg = feature_gram_threads(&map, &x, 1);
+            let kernel = Exponential::new(1.0);
+            let kg = rfdot::kernels::gram_threads(&kernel, &x, 1);
+            for t in THREADS {
+                if feature_gram_threads(&map, &x, t) != fg {
+                    return Err(format!("feature_gram differs at {t} threads"));
+                }
+                if rfdot::kernels::gram_threads(&kernel, &x, t) != kg {
+                    return Err(format!("kernel gram differs at {t} threads"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Nyström is data-dependent, so it gets a deterministic one-off rather
+/// than a property: fit once, then compare thread counts exactly.
+#[test]
+fn nystrom_batch_bit_identical() {
+    let mut rng = Rng::seed_from(5);
+    let x = random_matrix(&mut rng, 40, 6);
+    let ny = Nystrom::fit(Box::new(Exponential::new(1.0)), &x, 16, &mut rng).unwrap();
+    let serial = ny.transform_batch_threads(&x, 1);
+    for t in THREADS {
+        assert_eq!(ny.transform_batch_threads(&x, t), serial, "nystrom differs at {t} threads");
+    }
+}
+
+/// The public entry points (no explicit thread count) must agree with
+/// the serial path whatever the global knob happens to be.
+#[test]
+fn global_knob_entry_points_match_serial() {
+    let mut rng = Rng::seed_from(11);
+    let a = random_matrix(&mut rng, 33, 17);
+    let b = random_matrix(&mut rng, 17, 29);
+    assert_eq!(a.matmul(&b).unwrap(), a.matmul_threads(&b, 1).unwrap());
+    let map =
+        RandomMaclaurin::sample(&Polynomial::new(4, 1.0), 17, 64, RmConfig::default(), &mut rng);
+    assert_eq!(map.transform_batch(&a), map.transform_batch_threads(&a, 1));
+    assert_eq!(
+        rfdot::features::feature_gram(&map, &a),
+        feature_gram_threads(&map, &a, 1)
+    );
+}

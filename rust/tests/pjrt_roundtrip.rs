@@ -11,7 +11,8 @@ use rfdot::coordinator::{
 };
 use rfdot::kernels::Exponential;
 use rfdot::linalg::Matrix;
-use rfdot::maclaurin::{FeatureMap, RandomMaclaurin, RmConfig};
+use rfdot::features::FeatureMap;
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
 use rfdot::rng::Rng;
 use rfdot::runtime::{ArtifactMeta, Engine};
 use rfdot::svm::{Classifier, LinearSvm, LinearSvmParams};

@@ -5,7 +5,8 @@ use rfdot::config::json::Json;
 use rfdot::data::libsvm;
 use rfdot::kernels::{DotProductKernel, Exponential, Homogeneous, Polynomial, VovkReal};
 use rfdot::linalg::{norm1, scale, Matrix};
-use rfdot::maclaurin::{serialize, FeatureMap, RandomMaclaurin, RmConfig};
+use rfdot::features::FeatureMap;
+use rfdot::maclaurin::{serialize, RandomMaclaurin, RmConfig};
 use rfdot::prop::{forall, gens, PropConfig};
 use rfdot::rng::Rng;
 

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 gate: build, tests, formatting. Run from anywhere.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+cargo test -q
+cargo fmt --check
