@@ -3,13 +3,17 @@
 //! * native feature-map application throughput across (d, D) shapes,
 //! * the threads = {1, 2, 4, 8} scaling sweep over `transform_batch`
 //!   and `matmul` (recorded to `BENCH_parallel.json` at the repo root),
+//! * the dense-vs-structured (FWHT) projection sweep over
+//!   `transform_batch` (recorded to `BENCH_structured.json`),
 //! * bit-packed vs dense-f32 Rademacher projection,
 //! * PJRT artifact execution latency/throughput per batch,
 //! * coordinator end-to-end round trip under load,
 //! * SVM solver throughput on surrogate data.
 //!
-//! Run: `cargo bench --bench micro`
-//! Env: RFDOT_MICRO_FAST=1 trims iteration counts for smoke runs.
+//! Run:  `cargo bench --bench micro`
+//! Args: `-- --quick` trims iteration counts (same as RFDOT_MICRO_FAST=1);
+//!       `-- --only <substr>` runs only the sections whose name matches
+//!       (e.g. `-- --quick --only structured`, the CI smoke invocation).
 
 use rfdot::bench::{bench, fmt_duration, Table};
 use rfdot::coordinator::{Coordinator, CoordinatorConfig, NativeFactory, PjrtTransformFactory};
@@ -17,8 +21,10 @@ use rfdot::features::FeatureMap;
 use rfdot::kernels::Exponential;
 use rfdot::linalg::Matrix;
 use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
+use rfdot::rff::RandomFourier;
 use rfdot::rng::{RademacherMatrix, Rng};
 use rfdot::runtime::{ArtifactMeta, Engine};
+use rfdot::structured::ProjectionKind;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -128,6 +134,111 @@ fn bench_parallel_sweep() {
         series(&mm_secs),
     );
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_parallel.json");
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("   baseline recorded to {}", path.display()),
+        Err(e) => println!("   (could not write {}: {e})", path.display()),
+    }
+}
+
+/// Dense vs structured (FWHT/HD) projections through `transform_batch`
+/// for both map families, at the acceptance shape d = 512 → D = 4096,
+/// single-threaded and composed with threads = 4. Recorded as the
+/// machine-readable baseline in `BENCH_structured.json` at the repo
+/// root (target: structured ≥ 3× dense on `transform_batch` at one
+/// thread, with the ratio surviving the 4-thread fan-out).
+fn bench_structured_sweep() {
+    println!("\n== structured (FWHT) vs dense projections: transform_batch ==");
+    let (d, n_feat, rows) = (512usize, 4096usize, 256usize);
+    let iters = if fast() { 2 } else { 8 };
+    let kernel = Exponential::new(1.0);
+    let rm_dense =
+        RandomMaclaurin::sample(&kernel, d, n_feat, RmConfig::default(), &mut Rng::seed_from(41));
+    let rm_structured = RandomMaclaurin::sample(
+        &kernel,
+        d,
+        n_feat,
+        RmConfig::default().with_projection(ProjectionKind::Structured),
+        &mut Rng::seed_from(41),
+    );
+    let rff_dense = RandomFourier::sample(0.5, d, n_feat, &mut Rng::seed_from(43));
+    let rff_structured = RandomFourier::sample_with(
+        0.5,
+        d,
+        n_feat,
+        ProjectionKind::Structured,
+        &mut Rng::seed_from(43),
+    );
+    let x = batch(rows, d, 42);
+
+    let mut table =
+        Table::new(&["map", "threads", "dense", "structured", "structured speedup"]);
+    // (family, threads, dense secs, structured secs)
+    let mut samples: Vec<(&str, usize, f64, f64)> = Vec::new();
+    for &t in &[1usize, 4] {
+        let rm_d =
+            bench("rm-dense", 2, iters, || rm_dense.transform_batch_threads(&x, t)).mean_s();
+        let rm_s = bench("rm-structured", 2, iters, || {
+            rm_structured.transform_batch_threads(&x, t)
+        })
+        .mean_s();
+        table.row(&[
+            "maclaurin".into(),
+            format!("{t}"),
+            fmt_duration(rm_d),
+            fmt_duration(rm_s),
+            format!("{:.2}x", rm_d / rm_s),
+        ]);
+        samples.push(("maclaurin", t, rm_d, rm_s));
+    }
+    let rff_d =
+        bench("rff-dense", 2, iters, || rff_dense.transform_batch_threads(&x, 1)).mean_s();
+    let rff_s = bench("rff-structured", 2, iters, || {
+        rff_structured.transform_batch_threads(&x, 1)
+    })
+    .mean_s();
+    table.row(&[
+        "fourier".into(),
+        "1".into(),
+        fmt_duration(rff_d),
+        fmt_duration(rff_s),
+        format!("{:.2}x", rff_d / rff_s),
+    ]);
+    samples.push(("fourier", 1, rff_d, rff_s));
+    table.print();
+
+    let json_samples = samples
+        .iter()
+        .map(|(family, t, dense, structured)| {
+            format!(
+                r#"{{"map": "{family}", "threads": {t}, "dense_secs": {dense:.6}, "structured_secs": {structured:.6}, "speedup": {:.3}}}"#,
+                dense / structured
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n    ");
+    // A --quick run exercises the regeneration path end to end, but its
+    // 2-iteration timings are noise: label them "smoke" AND divert them
+    // to the temp dir, so the checked-in acceptance baseline at the
+    // repo root is only ever overwritten by a full measured run.
+    let (status, invocation, path) = if fast() {
+        (
+            "smoke",
+            "cargo bench --bench micro -- --quick --only structured",
+            std::env::temp_dir().join("BENCH_structured.smoke.json"),
+        )
+    } else {
+        (
+            "measured",
+            "cargo bench --bench micro -- --only structured",
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_structured.json"),
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"structured_sweep\",\n  \"status\": \"{status}\",\n  \
+         \"generated_by\": \"{invocation}\",\n  \
+         \"transform_batch\": {{\"d\": {d}, \"features\": {n_feat}, \"batch\": {rows}, \
+         \"samples\": [\n    {json_samples}\n  ]}}\n}}\n"
+    );
     match std::fs::write(&path, json) {
         Ok(()) => println!("   baseline recorded to {}", path.display()),
         Err(e) => println!("   (could not write {}: {e})", path.display()),
@@ -407,12 +518,45 @@ fn bench_solvers() {
 }
 
 fn main() {
-    bench_native_transform();
-    bench_parallel_sweep();
-    bench_rademacher_projection();
-    bench_pjrt_execute();
-    bench_coordinator_roundtrip();
-    bench_pjrt_coordinator();
-    bench_pjrt_bucketed_coordinator();
-    bench_solvers();
+    // `cargo bench --bench micro -- [--quick] [--only <substr>]`.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut only: Option<String> = None;
+    let mut it = argv.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--quick" => std::env::set_var("RFDOT_MICRO_FAST", "1"),
+            "--only" => match it.next() {
+                Some(pat) => only = Some(pat.clone()),
+                None => {
+                    eprintln!("--only requires a section-name pattern");
+                    std::process::exit(2);
+                }
+            },
+            "--bench" | "--nocapture" => {} // libtest-style passthrough noise
+            other => eprintln!("warning: unknown bench arg {other:?} ignored"),
+        }
+    }
+
+    let sections: [(&str, fn()); 9] = [
+        ("native-transform", bench_native_transform),
+        ("parallel-sweep", bench_parallel_sweep),
+        ("structured-sweep", bench_structured_sweep),
+        ("rademacher-projection", bench_rademacher_projection),
+        ("pjrt-execute", bench_pjrt_execute),
+        ("coordinator-roundtrip", bench_coordinator_roundtrip),
+        ("pjrt-coordinator", bench_pjrt_coordinator),
+        ("pjrt-bucketed-coordinator", bench_pjrt_bucketed_coordinator),
+        ("solvers", bench_solvers),
+    ];
+    let mut ran = 0;
+    for (name, f) in sections {
+        if only.as_deref().map_or(true, |pat| name.contains(pat)) {
+            f();
+            ran += 1;
+        }
+    }
+    if ran == 0 {
+        eprintln!("no bench section matches --only {:?}", only.as_deref().unwrap_or(""));
+        std::process::exit(2);
+    }
 }

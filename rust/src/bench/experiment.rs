@@ -103,7 +103,10 @@ pub fn run_random_features(
     seed_offset: u64,
 ) -> CellResult {
     let mut rng = Rng::seed_from(prep.config.seed ^ 0xF00D ^ seed_offset);
-    let rm_config = RmConfig::default().with_p(prep.config.p).with_h01(h01);
+    let rm_config = RmConfig::default()
+        .with_p(prep.config.p)
+        .with_h01(h01)
+        .with_projection(prep.config.projection);
 
     let sw = Stopwatch::start();
     let map = RandomMaclaurin::sample(
@@ -240,5 +243,18 @@ mod tests {
     fn unknown_dataset_is_an_error() {
         let cfg = ExperimentConfig { dataset: "mystery".into(), ..tiny_config() };
         assert!(prepare(&cfg).is_err());
+    }
+
+    #[test]
+    fn structured_row_stays_in_the_dense_accuracy_envelope() {
+        // The Table-1 claim must survive the projection swap: random
+        // features through FWHT blocks learn as well as dense ones.
+        let cfg = ExperimentConfig {
+            projection: crate::structured::ProjectionKind::Structured,
+            ..tiny_config()
+        };
+        let row = run_row(&cfg, 256, 64).unwrap();
+        assert!(row.rf.accuracy > 0.75, "structured rf acc {}", row.rf.accuracy);
+        assert!(row.h01.accuracy > 0.75, "structured h01 acc {}", row.h01.accuracy);
     }
 }

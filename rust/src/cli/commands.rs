@@ -35,6 +35,11 @@ fn apply_threads(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Consume `--projection dense|structured` (default dense).
+fn parse_projection(args: &mut Args) -> Result<crate::structured::ProjectionKind> {
+    crate::structured::ProjectionKind::parse(&args.str_flag("projection", "dense"))
+}
+
 /// `rfdot info` — engine and artifact inventory.
 pub fn info(args: &mut Args) -> Result<()> {
     let dir = args.str_flag("artifact-dir", "artifacts");
@@ -61,7 +66,8 @@ pub fn info(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// `rfdot quickstart` — map a toy dataset, check gram error, fit LIN.
+/// `rfdot quickstart` — map a toy dataset, check gram error (dense and
+/// structured projections side by side), fit LIN.
 pub fn quickstart(args: &mut Args) -> Result<()> {
     apply_threads(args)?;
     warn_unknown(args);
@@ -74,12 +80,26 @@ pub fn quickstart(args: &mut Args) -> Result<()> {
         rows.push(crate::prop::gens::unit_vec(&mut rng, d));
     }
     let x = Matrix::from_rows(&rows)?;
-    let map = RandomMaclaurin::sample(&kernel, d, n_feat, RmConfig::default(), &mut rng);
     let exact = gram(&kernel, &x);
-    let approx = feature_gram(&map, &x);
-    let err = mean_abs_gram_error(&exact, &approx);
     println!("kernel {} on {n_pts} unit vectors, D = {n_feat}", kernel.name());
-    println!("mean |<Z(x),Z(y)> - K(x,y)| = {err:.4}  (K up to {:.0})", kernel.f(1.0));
+    for kind in
+        [crate::structured::ProjectionKind::Dense, crate::structured::ProjectionKind::Structured]
+    {
+        let map = RandomMaclaurin::sample(
+            &kernel,
+            d,
+            n_feat,
+            RmConfig::default().with_projection(kind),
+            &mut rng,
+        );
+        let approx = feature_gram(&map, &x);
+        let err = mean_abs_gram_error(&exact, &approx);
+        println!(
+            "{:>10} projection: mean |<Z(x),Z(y)> - K(x,y)| = {err:.4}  (K up to {:.0})",
+            kind.as_str(),
+            kernel.f(1.0)
+        );
+    }
     println!("(paper Fig 1b: error decays ~ 1/sqrt(D); try --features via gram-error)");
     Ok(())
 }
@@ -93,6 +113,7 @@ pub fn gram_error(args: &mut Args) -> Result<()> {
     let runs = args.usize_flag("runs", 5)?;
     let h01 = args.switch("h01");
     let seed = args.num_flag("seed", 7.0)? as u64;
+    let projection = parse_projection(args)?;
     apply_threads(args)?;
     warn_unknown(args);
 
@@ -110,15 +131,16 @@ pub fn gram_error(args: &mut Args) -> Result<()> {
             kernel.as_ref(),
             d,
             n_feat,
-            RmConfig::default().with_h01(h01),
+            RmConfig::default().with_h01(h01).with_projection(projection),
             &mut rng,
         );
         let approx = feature_gram(&map, &x);
         errs.push(mean_abs_gram_error(&exact, &approx));
     }
     println!(
-        "kernel={} d={d} D={n_feat} h01={h01} runs={runs}: err = {:.5} ± {:.5}",
+        "kernel={} d={d} D={n_feat} h01={h01} projection={} runs={runs}: err = {:.5} ± {:.5}",
         kernel.name(),
+        projection.as_str(),
         crate::linalg::mean(&errs),
         crate::linalg::stddev(&errs),
     );
@@ -134,6 +156,7 @@ pub fn table1_row(args: &mut Args) -> Result<()> {
         c: args.num_flag("c", 1.0)?,
         seed: args.num_flag("seed", 42.0)? as u64,
         threads: args.usize_flag("threads", 0)?,
+        projection: parse_projection(args)?,
         ..Default::default()
     };
     let d_rf = args.usize_flag("features", 500)?;
@@ -184,6 +207,7 @@ pub fn transform(args: &mut Args) -> Result<()> {
     let n_feat = args.usize_flag("features", 256)?;
     let h01 = args.switch("h01");
     let seed = args.num_flag("seed", 7.0)? as u64;
+    let projection = parse_projection(args)?;
     apply_threads(args)?;
     warn_unknown(args);
 
@@ -195,7 +219,7 @@ pub fn transform(args: &mut Args) -> Result<()> {
         kernel.as_ref(),
         ds.dim(),
         n_feat,
-        RmConfig::default().with_h01(h01),
+        RmConfig::default().with_h01(h01).with_projection(projection),
         &mut rng,
     );
     let sw = Stopwatch::start();
@@ -231,10 +255,19 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let max_batch = args.usize_flag("max-batch", 256)?;
     let max_wait_ms = args.num_flag("max-wait-ms", 2.0)?;
     let seed = args.num_flag("seed", 7.0)? as u64;
+    let projection = parse_projection(args)?;
     // For serving, --threads means intra-op threads per worker batch
     // (the native backend's data-parallel fan-out).
     let intra_op_threads = args.usize_flag("threads", 1)?;
     warn_unknown(args);
+
+    if projection == crate::structured::ProjectionKind::Structured && !native {
+        return Err(crate::Error::Config(
+            "--projection structured is served natively (PJRT transform artifacts consume \
+             dense Ω tensors); add --native"
+                .into(),
+        ));
+    }
 
     // Kernel + map for the serving workload (d is fixed by the artifact).
     let kernel = crate::kernels::Exponential::new(1.0);
@@ -246,7 +279,7 @@ pub fn serve(args: &mut Args) -> Result<()> {
             &kernel,
             d,
             512,
-            RmConfig::default().with_max_order(8),
+            RmConfig::default().with_max_order(8).with_projection(projection),
             &mut rng,
         );
         (Arc::new(NativeFactory::new(Arc::new(map))), d)
@@ -354,6 +387,35 @@ mod tests {
         gram_error(&mut argv(&[
             "gram-error", "--kernel", "poly:2:1", "--d", "4", "--features", "16", "--points",
             "10", "--runs", "1", "--threads", "0",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn gram_error_structured_runs_small() {
+        gram_error(&mut argv(&[
+            "gram-error", "--kernel", "poly:3:1", "--d", "6", "--features", "64", "--points",
+            "20", "--runs", "2", "--projection", "structured",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_projection() {
+        assert!(gram_error(&mut argv(&["gram-error", "--projection", "sparse"])).is_err());
+    }
+
+    #[test]
+    fn serve_structured_requires_native() {
+        let err = serve(&mut argv(&["serve", "--projection", "structured"])).unwrap_err();
+        assert!(err.to_string().contains("--native"), "{err}");
+    }
+
+    #[test]
+    fn serve_native_structured_smoke() {
+        serve(&mut argv(&[
+            "serve", "--native", "--projection", "structured", "--requests", "40", "--clients",
+            "2", "--workers", "1",
         ]))
         .unwrap();
     }

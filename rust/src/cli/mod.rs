@@ -59,6 +59,11 @@ COMMANDS:
                   --requests 2000 --clients 4 --native
   help          this message
 
+  --projection dense|structured
+                how sampled maps realize their random projections:
+                an explicit matrix (dense, the default) or FWHT-backed
+                HD blocks (structured, O(D log d) per input; served
+                natively — combine with --native for `serve`).
   --threads N   data-parallel CPU workers for the hot paths (default:
                 auto-detect, or the RFDOT_THREADS env var). For `serve`
                 this is the intra-op thread count per worker batch and

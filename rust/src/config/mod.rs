@@ -7,6 +7,7 @@
 
 pub mod json;
 
+use crate::structured::ProjectionKind;
 use crate::{Error, Result};
 use json::Json;
 use std::path::Path;
@@ -116,6 +117,10 @@ pub struct ExperimentConfig {
     /// transforms, GEMM, Gram matrices); `0` = leave the global
     /// [`crate::parallel`] knob untouched (auto / `RFDOT_THREADS`).
     pub threads: usize,
+    /// Projection realization for the sampled feature maps: dense
+    /// stacks or the FWHT-backed [`crate::structured`] HD blocks
+    /// (JSON: `"projection": "dense" | "structured"`).
+    pub projection: ProjectionKind,
 }
 
 impl Default for ExperimentConfig {
@@ -132,6 +137,7 @@ impl Default for ExperimentConfig {
             train_frac: 0.6,
             max_train: 20_000,
             threads: 0,
+            projection: ProjectionKind::Dense,
         }
     }
 }
@@ -173,6 +179,9 @@ impl ExperimentConfig {
         }
         if let Some(n) = v.get("threads").and_then(Json::as_usize) {
             cfg.threads = n;
+        }
+        if let Some(s) = v.get("projection").and_then(Json::as_str) {
+            cfg.projection = ProjectionKind::parse(s)?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -272,9 +281,14 @@ mod tests {
         // Defaults survive.
         assert_eq!(cfg.max_train, 20_000);
         assert_eq!(cfg.threads, 0);
+        assert_eq!(cfg.projection, ProjectionKind::Dense);
         let with_threads =
             ExperimentConfig::from_json(r#"{"threads": 4}"#).unwrap();
         assert_eq!(with_threads.threads, 4);
+        let structured =
+            ExperimentConfig::from_json(r#"{"projection": "structured"}"#).unwrap();
+        assert_eq!(structured.projection, ProjectionKind::Structured);
+        assert!(ExperimentConfig::from_json(r#"{"projection": "sparse"}"#).is_err());
     }
 
     #[test]

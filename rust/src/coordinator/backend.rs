@@ -179,6 +179,13 @@ fn check_transform_meta(meta: &ArtifactMeta, map: &RandomMaclaurin, kind: &str) 
                 .into(),
         ));
     }
+    if map.is_structured() {
+        return Err(Error::Runtime(
+            "transform artifacts consume dense Ω tensors; structured (FWHT) maps are served \
+             natively"
+                .into(),
+        ));
+    }
     Ok(())
 }
 
@@ -580,6 +587,46 @@ mod tests {
         let factory = NativeFactory::new(map);
         let b = factory.build().unwrap();
         assert_eq!(factory.spec(), b.spec());
+    }
+
+    #[test]
+    fn native_backend_serves_structured_maps() {
+        // The structured path must ride the coordinator's native
+        // backend unchanged (that's where its speedup lands).
+        let mut rng = Rng::seed_from(5);
+        let config = RmConfig::default()
+            .with_projection(crate::structured::ProjectionKind::Structured);
+        let map = Arc::new(RandomMaclaurin::sample(&Exponential::new(1.0), 6, 32, config, &mut rng));
+        let backend = NativeBackend::new(map.clone());
+        let x = Matrix::from_rows(&[vec![0.1, -0.2, 0.3, 0.0, 0.05, 0.2]]).unwrap();
+        let out = backend.run_batch(&x).unwrap();
+        assert_eq!(out.row(0), &map.transform(x.row(0))[..]);
+    }
+
+    #[test]
+    fn transform_meta_rejects_structured_maps() {
+        let meta = crate::runtime::ArtifactMeta::parse(
+            r#"{
+              "name": "t", "config": {"kind": "transform"},
+              "inputs": [
+                {"name": "x", "shape": [4, 6], "dtype": "f32"},
+                {"name": "omega", "shape": [8, 6, 32], "dtype": "f32"},
+                {"name": "mask", "shape": [8, 32], "dtype": "f32"},
+                {"name": "coeff", "shape": [32], "dtype": "f32"}
+              ],
+              "outputs": [{"name": "z", "shape": [4, 32], "dtype": "f32"}]
+            }"#,
+        )
+        .unwrap();
+        let mut rng = Rng::seed_from(6);
+        let config = RmConfig::default()
+            .with_projection(crate::structured::ProjectionKind::Structured);
+        let map = RandomMaclaurin::sample(&Exponential::new(1.0), 6, 32, config, &mut rng);
+        let err = match check_transform_meta(&meta, &map, "transform") {
+            Err(e) => e,
+            Ok(()) => panic!("structured map must be rejected by the artifact path"),
+        };
+        assert!(err.to_string().contains("natively"), "{err}");
     }
 
     #[test]

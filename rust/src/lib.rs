@@ -15,6 +15,11 @@
 //!   (scoped worker pool, row-chunked `par_chunks`, the process-wide
 //!   `--threads` knob) that the linalg/feature/SVM hot paths run on;
 //!   parallel results are bit-identical to serial ones.
+//! * [`structured`] — the structured random projection subsystem:
+//!   a [`structured::Projection`] trait with dense and FWHT-backed
+//!   HD-block/SRHT implementations (`O(D log d)` instead of `O(D d)`
+//!   per input), selected by the `--projection dense|structured` knob
+//!   and sampled through by both the Maclaurin and Fourier families.
 //! * [`maclaurin`] — the Random Maclaurin feature maps (Algorithm 1), the
 //!   H0/1 heuristic (§6.1), the truncated deterministic variant (§4.2)
 //!   and compositional kernels (Algorithm 2).
@@ -67,6 +72,7 @@ pub mod prop;
 pub mod rff;
 pub mod rng;
 pub mod runtime;
+pub mod structured;
 pub mod svm;
 pub mod tensorsketch;
 pub mod unsup;

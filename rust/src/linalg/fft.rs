@@ -1,16 +1,32 @@
 //! Iterative radix-2 complex FFT — substrate for the TensorSketch
 //! baseline (circular convolution of count sketches).
 
+use crate::{Error, Result};
+
+/// [`fft`] with a recoverable shape error instead of a panic — the
+/// entry point for caller-controlled lengths (internal callers that
+/// already round up with [`super::next_pow2`] use [`fft`] directly).
+pub fn fft_checked(re: &mut [f32], im: &mut [f32], inverse: bool) -> Result<()> {
+    if re.len() != im.len() {
+        return Err(Error::shape(format!("im length {}", re.len()), format!("{}", im.len())));
+    }
+    if re.len() > 1 && !re.len().is_power_of_two() {
+        return Err(Error::shape("power-of-two length", format!("{}", re.len())));
+    }
+    fft(re, im, inverse);
+    Ok(())
+}
+
 /// In-place iterative Cooley-Tukey FFT over interleaved complex buffers
 /// (`re`, `im`); `inverse` applies the conjugate transform *and* the 1/n
 /// scale. Lengths must be powers of two.
 pub fn fft(re: &mut [f32], im: &mut [f32], inverse: bool) {
     let n = re.len();
     assert_eq!(n, im.len());
-    assert!(n.is_power_of_two(), "fft length must be a power of two, got {n}");
     if n <= 1 {
         return;
     }
+    assert!(n.is_power_of_two(), "fft length must be a power of two, got {n}");
 
     // Bit-reversal permutation.
     let bits = n.trailing_zeros();
@@ -140,5 +156,22 @@ mod tests {
         let mut re = vec![0.0f32; 6];
         let mut im = vec![0.0f32; 6];
         fft(&mut re, &mut im, false);
+    }
+
+    #[test]
+    fn checked_entry_point_errors_instead_of_panicking() {
+        let mut re = vec![0.0f32; 6];
+        let mut im = vec![0.0f32; 6];
+        let e = fft_checked(&mut re, &mut im, false).unwrap_err();
+        assert!(e.to_string().contains("power-of-two"), "{e}");
+        let mut re = vec![0.0f32; 8];
+        let mut im = vec![0.0f32; 7];
+        assert!(fft_checked(&mut re, &mut im, false).is_err());
+        // Zero-padding to the shared next_pow2 length makes any input
+        // length valid.
+        let mut re = crate::linalg::zero_pad_pow2(&[1.0, 2.0, 3.0]);
+        let mut im = vec![0.0f32; re.len()];
+        assert!(fft_checked(&mut re, &mut im, false).is_ok());
+        assert_eq!(re.len(), 4);
     }
 }

@@ -1,0 +1,141 @@
+//! In-place fast Walsh–Hadamard transform — the O(n log n) butterfly at
+//! the heart of the [`crate::structured`] projection subsystem (HD
+//! blocks, SRHT), sited next to its radix-2 sibling [`super::fft`].
+//!
+//! Convention: the **unnormalized** transform, `y = H_n x` with
+//! `H_n[i, k] = (−1)^{popcount(i & k)} ∈ {±1}` (Sylvester ordering).
+//! Consequences the structured subsystem relies on:
+//!
+//! * every entry of `H_n` is ±1, so a row of `H_n · D` (D a Rademacher
+//!   diagonal) is *exactly* a Rademacher vector in distribution — the
+//!   structured projections inherit the dense maps' marginal law and
+//!   deterministic bounds (`|⟨h, x⟩| ≤ ‖x‖₁`);
+//! * `H_n H_n = n·I` (involution up to `1/n`), and
+//!   `‖H_n x‖² = n‖x‖²` (Parseval) — both pinned by property tests.
+//!
+//! The butterfly is the standard iterative doubling scheme: pass `h`
+//! combines elements `h` apart, so the innermost loops stream two
+//! contiguous runs — cache-friendly without an explicit bit-reversal
+//! permutation (the Walsh–Hadamard transform is permutation-symmetric
+//! enough that none is needed for Sylvester ordering).
+
+use crate::{Error, Result};
+
+/// In-place unnormalized Walsh–Hadamard transform. Panics unless the
+/// length is a power of two (or ≤ 1); library entry points that accept
+/// caller-sized buffers should use [`fwht_checked`].
+pub fn fwht(x: &mut [f32]) {
+    let n = x.len();
+    if n <= 1 {
+        return;
+    }
+    assert!(n.is_power_of_two(), "fwht length must be a power of two, got {n}");
+    let mut h = 1;
+    while h < n {
+        let mut start = 0;
+        while start < n {
+            for k in start..start + h {
+                let a = x[k];
+                let b = x[k + h];
+                x[k] = a + b;
+                x[k + h] = a - b;
+            }
+            start += h * 2;
+        }
+        h *= 2;
+    }
+}
+
+/// [`fwht`] with a recoverable shape error instead of a panic — the
+/// entry point for caller-controlled lengths.
+pub fn fwht_checked(x: &mut [f32]) -> Result<()> {
+    if x.len() > 1 && !x.len().is_power_of_two() {
+        return Err(Error::shape("power-of-two length", format!("{}", x.len())));
+    }
+    fwht(x);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// `H_n[i, k] = (−1)^{popcount(i & k)}` — the O(n²) reference.
+    fn naive_hadamard(x: &[f32]) -> Vec<f32> {
+        let n = x.len();
+        (0..n)
+            .map(|i| {
+                (0..n)
+                    .map(|k| {
+                        let sign = if (i & k).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+                        sign * x[k]
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_hadamard() {
+        let mut rng = Rng::seed_from(1);
+        for n in [1usize, 2, 4, 8, 32, 64] {
+            let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            let want = naive_hadamard(&x);
+            let mut got = x.clone();
+            fwht(&mut got);
+            for k in 0..n {
+                assert!((got[k] - want[k]).abs() < 1e-4, "n={n} k={k}: {} vs {}", got[k], want[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn involution_up_to_n() {
+        let mut rng = Rng::seed_from(2);
+        for n in [2usize, 8, 128, 512] {
+            let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            let mut y = x.clone();
+            fwht(&mut y);
+            fwht(&mut y);
+            for k in 0..n {
+                assert!((y[k] / n as f32 - x[k]).abs() < 1e-4, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn parseval_norm_scaling() {
+        let mut rng = Rng::seed_from(3);
+        let n = 256usize;
+        let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+        let before: f64 = x.iter().map(|&v| (v as f64) * v as f64).sum();
+        let mut y = x;
+        fwht(&mut y);
+        let after: f64 = y.iter().map(|&v| (v as f64) * v as f64).sum();
+        assert!((after - n as f64 * before).abs() < 1e-2 * after.max(1.0), "{after} vs {before}");
+    }
+
+    #[test]
+    fn empty_and_singleton_are_noops() {
+        fwht(&mut []);
+        let mut one = [3.5f32];
+        fwht(&mut one);
+        assert_eq!(one, [3.5]);
+    }
+
+    #[test]
+    fn checked_rejects_bad_lengths() {
+        let mut bad = vec![0.0f32; 6];
+        let e = fwht_checked(&mut bad).unwrap_err();
+        assert!(e.to_string().contains("power-of-two"), "{e}");
+        let mut good = vec![1.0f32; 8];
+        assert!(fwht_checked(&mut good).is_ok());
+    }
+
+    #[test]
+    #[should_panic]
+    fn unchecked_panics_on_bad_length() {
+        fwht(&mut [0.0; 3]);
+    }
+}

@@ -8,10 +8,29 @@
 
 pub mod eigen;
 pub mod fft;
+pub mod fwht;
 pub mod matrix;
 
 pub use eigen::{eigh, inv_sqrt_psd};
+pub use fwht::{fwht, fwht_checked};
 pub use matrix::Matrix;
+
+/// Smallest power of two ≥ `n` (and ≥ 1): the padded length shared by
+/// the radix-2 transforms — [`fft`](crate::linalg::fft::fft) widths
+/// (tensorsketch) and the [`fwht`] buffers of [`crate::structured`].
+#[inline]
+pub fn next_pow2(n: usize) -> usize {
+    n.max(1).next_power_of_two()
+}
+
+/// Copy `x` into a fresh zero-padded buffer of length [`next_pow2`]
+/// `(x.len())` — the canonical way arbitrary input dims enter the
+/// power-of-two transforms.
+pub fn zero_pad_pow2(x: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; next_pow2(x.len())];
+    out[..x.len()].copy_from_slice(x);
+    out
+}
 
 /// Dot product with f32 accumulation in 4 independent lanes (helps the
 /// auto-vectorizer; exact association differences are irrelevant at the

@@ -19,10 +19,39 @@
 //! that `2 + Geometric`). The constant coordinate carries the `a_0` term
 //! so a bias-free linear model can absorb it, as the paper absorbs it
 //! into the SVM offset.
+//!
+//! # Dense vs structured projections
+//!
+//! The per-feature projections `ω_j^T x` are computed through the
+//! [`crate::structured::Projection`] abstraction, selected by
+//! [`RmConfig::projection`]:
+//!
+//! * **Dense** (default): an explicit Rademacher stack — `O(D·d)` per
+//!   input, bit-identical to the original Algorithm 1 implementation.
+//! * **Structured**: FWHT-backed HD blocks
+//!   ([`crate::structured::StructuredProjection`]) — `O(D·log d)` per
+//!   input, with the paper's statistics preserved as follows. Each HD
+//!   row is *marginally* an exact Rademacher vector, and the sampler
+//!   uses the layered `rademacher_for_segments` layout: the `N` factors
+//!   of one feature always come from `N` distinct, independently seeded
+//!   blocks, so `E[Z_i(x)Z_i(y)]` factorizes exactly and the estimator
+//!   is **unbiased at every order**, exactly like the dense map. It is
+//!   *not* a drop-in for the dense map's joint law: features whose
+//!   same-position factors share a layer block are correlated, so
+//!   per-map variance (the constant in the `1/√D` Figure-1 decay, and
+//!   the Theorem-12 concentration constants) can differ by a modest
+//!   factor even though the decay *rate* is identical — the
+//!   Gram-envelope tests pin structured and dense errors to the same
+//!   tolerance band. Lemma 8's deterministic bound survives untouched
+//!   because HD rows are genuine ±1 sign patterns. Structured maps
+//!   serialize as a seed + layout (see [`super::serialize`]), and are
+//!   served natively (the PJRT `transform` artifacts consume dense Ω
+//!   tensors only).
 
 use crate::features::FeatureMap;
 use crate::kernels::DotProductKernel;
 use crate::rng::{Geometric, RademacherMatrix, Rng};
+use crate::structured::{DenseProjection, Projection, ProjectionKind, StructuredProjection};
 
 /// Sampling configuration for [`RandomMaclaurin`].
 #[derive(Clone, Copy, Debug)]
@@ -47,11 +76,21 @@ pub struct RmConfig {
     /// feature only once per `2^11` draws and the Figure-1a error curve
     /// cannot decay. `bench fig1 --ablation` compares both. Default on.
     pub restrict_support: bool,
+    /// How the per-feature projections are realized: a dense Rademacher
+    /// stack or the subquadratic FWHT-backed HD blocks (see the module
+    /// docs for the statistical trade-off). Default dense.
+    pub projection: ProjectionKind,
 }
 
 impl Default for RmConfig {
     fn default() -> Self {
-        RmConfig { p: 2.0, h01: false, max_order: 30, restrict_support: true }
+        RmConfig {
+            p: 2.0,
+            h01: false,
+            max_order: 30,
+            restrict_support: true,
+            projection: ProjectionKind::Dense,
+        }
     }
 }
 
@@ -73,6 +112,11 @@ impl RmConfig {
 
     pub fn with_restrict_support(mut self, on: bool) -> Self {
         self.restrict_support = on;
+        self
+    }
+
+    pub fn with_projection(mut self, kind: ProjectionKind) -> Self {
+        self.projection = kind;
         self
     }
 }
@@ -147,14 +191,20 @@ pub struct RandomMaclaurin {
     /// Row offsets into `omegas`: feature `i` uses rows
     /// `offsets[i]..offsets[i+1]`.
     offsets: Vec<u32>,
-    /// All Rademacher vectors, bit-packed (canonical/serialized form).
+    /// All Rademacher vectors, bit-packed (canonical/serialized form of
+    /// the *dense* projection; empty for structured maps).
     omegas: RademacherMatrix,
-    /// Lazily expanded `d × rows` dense ±1 matrix (column per omega
-    /// row): the hot path computes all projections as one GEMM
+    /// Lazily expanded dense `d × rows` ±1 projection (column per omega
+    /// row): the dense hot path computes all projections as one GEMM
     /// `X · Ω^T`, which vectorizes ~7× better than per-bit sign flips
     /// (see EXPERIMENTS.md §Perf) and mirrors the MXU formulation the
     /// Pallas kernel uses on TPU.
-    dense_t: std::sync::OnceLock<crate::linalg::Matrix>,
+    dense: std::sync::OnceLock<DenseProjection>,
+    /// FWHT-backed projection stack (`None` for dense maps), plus the
+    /// seed that reconstructs it (the serialized form: seed + layout).
+    structured: Option<StructuredProjection>,
+    /// Seed behind `structured` (0 for dense maps).
+    proj_seed: u64,
     /// `√a_0` — the H0/1 constant coordinate (0 when h01 is off).
     w_const: f32,
     /// `√a_1` — the H0/1 linear block scale (0 when h01 is off).
@@ -223,7 +273,22 @@ impl RandomMaclaurin {
             offsets.push(total_rows);
         }
 
-        let omegas = RademacherMatrix::sample(total_rows as usize, d, rng);
+        let (omegas, structured, proj_seed) = match config.projection {
+            ProjectionKind::Dense => {
+                (RademacherMatrix::sample(total_rows as usize, d, rng), None, 0)
+            }
+            ProjectionKind::Structured => {
+                // The stack is a pure function of (d, offsets, seed), so
+                // the seed alone serializes it (see `super::serialize`).
+                let seed = rng.next_u64();
+                let proj = StructuredProjection::rademacher_for_segments(
+                    d,
+                    &offsets,
+                    &mut Rng::seed_from(seed),
+                );
+                (RademacherMatrix::from_words(0, d, Vec::new()), Some(proj), seed)
+            }
+        };
 
         let (w_const, w_linear) = if config.h01 {
             (kernel.coeff(0).sqrt() as f32, kernel.coeff(1).sqrt() as f32)
@@ -239,25 +304,22 @@ impl RandomMaclaurin {
             weights,
             offsets,
             omegas,
-            dense_t: std::sync::OnceLock::new(),
+            dense: std::sync::OnceLock::new(),
+            structured,
+            proj_seed,
             w_const,
             w_linear,
             kernel_name: kernel.name(),
         }
     }
 
-    /// The `d × rows` dense ±1 projection matrix (lazy, cached).
-    fn dense_t(&self) -> &crate::linalg::Matrix {
-        self.dense_t.get_or_init(|| {
-            let rows = self.omegas.rows();
-            let mut m = crate::linalg::Matrix::zeros(self.d, rows);
-            for r in 0..rows {
-                for k in 0..self.d {
-                    m.set(k, r, self.omegas.sign(r, k));
-                }
-            }
-            m
-        })
+    /// The projection stack this map samples through: structured when
+    /// configured, otherwise the lazily expanded dense ±1 matrix.
+    pub fn projection(&self) -> &dyn Projection {
+        match &self.structured {
+            Some(p) => p,
+            None => self.dense.get_or_init(|| DenseProjection::from_rademacher(&self.omegas)),
+        }
     }
 
     /// Convenience: the §4.2 variant — truncate `kernel`'s series at the
@@ -346,9 +408,20 @@ impl RandomMaclaurin {
         &self.offsets
     }
 
-    /// The packed Rademacher stack.
+    /// The packed Rademacher stack (empty for structured maps, whose
+    /// projections live behind [`RandomMaclaurin::projection`]).
     pub fn omegas(&self) -> &RademacherMatrix {
         &self.omegas
+    }
+
+    /// True when the projections are the FWHT-backed structured stack.
+    pub fn is_structured(&self) -> bool {
+        self.structured.is_some()
+    }
+
+    /// Seed that reconstructs the structured stack (0 for dense maps).
+    pub fn proj_seed(&self) -> u64 {
+        self.proj_seed
     }
 
     /// H0/1 constant-coordinate value `√a_0`.
@@ -366,7 +439,9 @@ impl RandomMaclaurin {
         &self.kernel_name
     }
 
-    /// Rebuild from serialized parts (see [`super::serialize`]).
+    /// Rebuild from serialized parts (see [`super::serialize`]). For
+    /// structured records the stack is reconstructed from `proj_seed`
+    /// and the offsets, which is bit-exact by construction.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn from_parts(
         d: usize,
@@ -376,10 +451,19 @@ impl RandomMaclaurin {
         weights: Vec<f32>,
         offsets: Vec<u32>,
         omegas: RademacherMatrix,
+        proj_seed: u64,
         w_const: f32,
         w_linear: f32,
         kernel_name: String,
     ) -> Self {
+        let structured = match config.projection {
+            ProjectionKind::Dense => None,
+            ProjectionKind::Structured => Some(StructuredProjection::rademacher_for_segments(
+                d,
+                &offsets,
+                &mut Rng::seed_from(proj_seed),
+            )),
+        };
         RandomMaclaurin {
             d,
             n_random,
@@ -388,7 +472,9 @@ impl RandomMaclaurin {
             weights,
             offsets,
             omegas,
-            dense_t: std::sync::OnceLock::new(),
+            dense: std::sync::OnceLock::new(),
+            structured,
+            proj_seed,
             w_const,
             w_linear,
             kernel_name,
@@ -402,8 +488,14 @@ impl RandomMaclaurin {
     /// `Z[b,i] = coeff[i] · Π_j (mask[j,i]·(X Ω_j)[b,i] + (1 − mask[j,i]))`,
     /// which equals the native [`FeatureMap::transform`] random block.
     ///
-    /// Panics if any sampled order exceeds `n_max`.
+    /// Panics if any sampled order exceeds `n_max`, or if the map is
+    /// structured (the artifact formulation consumes dense Ω tensors;
+    /// structured maps are served natively).
     pub fn to_padded_dense(&self, n_max: u32) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        assert!(
+            !self.is_structured(),
+            "structured maps have no dense Ω expansion; serve them natively"
+        );
         assert!(
             self.max_sampled_order() <= n_max,
             "sampled order {} exceeds padding {n_max}",
@@ -442,22 +534,16 @@ impl RandomMaclaurin {
 
     /// Write the random block (products only, no H0/1 prefix) into `out`.
     ///
-    /// All projections are computed at once as a dense matvec over the
-    /// cached ±1 matrix (the §Perf pass measured the bit-by-bit packed
-    /// walk at ~7× slower than vectorized f32 math), then reduced by the
+    /// All projections are computed at once through the sampled
+    /// [`Projection`] stack — a streaming dense matvec (the §Perf pass
+    /// measured the bit-by-bit packed walk at ~7× slower than
+    /// vectorized f32 math) or the FWHT chain — then reduced by the
     /// segmented product.
     fn random_block_into(&self, x: &[f32], out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.n_random);
-        let dense_t = self.dense_t();
-        let rows = dense_t.cols();
-        let mut proj = vec![0.0f32; rows];
-        // proj[r] = Σ_k x[k] · Ω[r, k]; dense_t is d × rows row-major, so
-        // accumulating row k into proj is the streaming direction.
-        for (k, &xk) in x.iter().enumerate() {
-            if xk != 0.0 {
-                crate::linalg::axpy(xk, dense_t.row(k), &mut proj);
-            }
-        }
+        let projection = self.projection();
+        let mut proj = vec![0.0f32; projection.rows()];
+        projection.project_into(x, &mut proj);
         self.products_from_projections(&proj, out);
     }
 }
@@ -489,13 +575,15 @@ impl FeatureMap for RandomMaclaurin {
         }
     }
 
-    /// Batch override: one blocked GEMM `P = X · Ω^T` computes every
-    /// projection of every example, then the segmented products — the
-    /// CPU mirror of the Pallas kernel's per-order MXU matmuls. Both
-    /// passes fan row blocks out over `threads` scoped workers (`0` =
-    /// the global [`crate::parallel`] knob); every output row runs the
-    /// identical serial routine, so results are bit-identical for any
-    /// thread count.
+    /// Batch override: the sampled [`Projection`] stack computes every
+    /// projection of every example in one pass — a blocked GEMM
+    /// `P = X · Ω^T` for dense maps (the CPU mirror of the Pallas
+    /// kernel's per-order MXU matmuls), row-chunked FWHT chains for
+    /// structured ones — then the segmented products. Both passes fan
+    /// row blocks out over `threads` scoped workers (`0` = the global
+    /// [`crate::parallel`] knob); every output row runs the identical
+    /// serial routine, so results are bit-identical for any thread
+    /// count.
     fn transform_batch_threads(
         &self,
         x: &crate::linalg::Matrix,
@@ -507,12 +595,7 @@ impl FeatureMap for RandomMaclaurin {
         if b == 0 {
             return out;
         }
-        let dense_t = self.dense_t();
-        let proj = if dense_t.cols() > 0 {
-            x.matmul_threads(dense_t, threads).expect("inner dims agree")
-        } else {
-            crate::linalg::Matrix::zeros(b, 0)
-        };
+        let proj = self.projection().project_batch(x, threads);
         let prefix = if self.config.h01 { 1 + self.d } else { 0 };
         let dd = self.output_dim();
         // Segmented products cost ~(projections + outputs) per row; the
@@ -778,5 +861,119 @@ mod tests {
         let k = Polynomial::new(2, 1.0);
         let map = RandomMaclaurin::sample(&k, 4, 8, RmConfig::default(), &mut rng);
         map.transform(&[0.0; 3]);
+    }
+
+    fn structured_config() -> RmConfig {
+        RmConfig::default().with_projection(crate::structured::ProjectionKind::Structured)
+    }
+
+    #[test]
+    fn structured_unbiasedness_lemma7() {
+        // The layered HD layout keeps E[<Z(x), Z(y)>] = K(x, y) exactly
+        // (each feature's factors sit in independent blocks). Same CLT
+        // check as the dense test, with a wider tolerance for the
+        // cross-feature correlations' variance inflation.
+        let mut rng = Rng::seed_from(52);
+        let k = Polynomial::new(4, 1.0);
+        let d = 6;
+        let x = unit_vec(d, 1);
+        let y = unit_vec(d, 2);
+        let exact = k.eval(&x, &y);
+        let mut acc = 0.0f64;
+        let maps = 400;
+        for _ in 0..maps {
+            let map = RandomMaclaurin::sample(&k, d, 64, structured_config(), &mut rng);
+            acc += dot(&map.transform(&x), &map.transform(&y)) as f64;
+        }
+        let mean = acc / maps as f64;
+        assert!((mean - exact).abs() < 0.5, "mean {mean} vs exact {exact}");
+    }
+
+    #[test]
+    fn structured_estimator_bound_lemma8() {
+        // HD rows are genuine ±1 patterns, so Lemma 8's deterministic
+        // bound holds verbatim for structured maps.
+        let mut rng = Rng::seed_from(53);
+        let k = Exponential::new(1.0);
+        let d = 8;
+        let bound = k.estimator_bound(2.0, 1.0);
+        let n_random = 128;
+        let map = RandomMaclaurin::sample(&k, d, n_random, structured_config(), &mut rng);
+        assert!(map.is_structured());
+        for trial in 0..20 {
+            let mut x = unit_vec(d, 500 + trial);
+            let mut y = unit_vec(d, 600 + trial);
+            crate::linalg::scale(1.0 / crate::linalg::norm1(&x), &mut x);
+            crate::linalg::scale(1.0 / crate::linalg::norm1(&y), &mut y);
+            let zx = map.transform(&x);
+            let zy = map.transform(&y);
+            for i in 0..n_random {
+                let prod = (zx[i] * zy[i]).abs() as f64 * n_random as f64;
+                assert!(prod <= bound * (1.0 + 1e-5), "feature {i}: {prod} > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn structured_batch_matches_single_bitwise() {
+        let mut rng = Rng::seed_from(54);
+        let k = Exponential::new(1.0);
+        let d = 11;
+        let map = RandomMaclaurin::sample(&k, d, 48, structured_config().with_h01(true), &mut rng);
+        let rows: Vec<Vec<f32>> = (0..6).map(|i| unit_vec(d, 700 + i)).collect();
+        let x = crate::linalg::Matrix::from_rows(&rows).unwrap();
+        let zb = map.transform_batch(&x);
+        for i in 0..6 {
+            assert_eq!(zb.row(i), &map.transform(x.row(i))[..], "row {i}");
+        }
+        for threads in [2usize, 3, 16] {
+            assert_eq!(map.transform_batch_threads(&x, threads), zb);
+        }
+    }
+
+    #[test]
+    fn structured_deterministic_given_seed() {
+        let k = Polynomial::new(3, 1.0);
+        let m1 = RandomMaclaurin::sample(&k, 4, 16, structured_config(), &mut Rng::seed_from(5));
+        let m2 = RandomMaclaurin::sample(&k, 4, 16, structured_config(), &mut Rng::seed_from(5));
+        assert_eq!(m1.orders(), m2.orders());
+        assert_eq!(m1.weights(), m2.weights());
+        assert_eq!(m1.proj_seed(), m2.proj_seed());
+        let x = unit_vec(4, 8);
+        assert_eq!(m1.transform(&x), m2.transform(&x));
+    }
+
+    #[test]
+    fn structured_error_decays_with_d() {
+        // Same 1/sqrt(D) decay *rate* as dense (the Figure-1 claim),
+        // correlations only perturb the constant.
+        let mut rng = Rng::seed_from(55);
+        let k = Polynomial::new(3, 1.0);
+        let d = 8;
+        let rows: Vec<Vec<f32>> = (0..30).map(|i| unit_vec(d, 900 + i as u64)).collect();
+        let x = crate::linalg::Matrix::from_rows(&rows).unwrap();
+        let exact = crate::kernels::gram(&k, &x);
+        let err_at = |dd: usize, rng: &mut Rng| {
+            (0..3)
+                .map(|_| {
+                    let map = RandomMaclaurin::sample(&k, d, dd, structured_config(), rng);
+                    let approx = super::super::feature_gram(&map, &x);
+                    crate::kernels::mean_abs_gram_error(&exact, &approx)
+                })
+                .sum::<f64>()
+                / 3.0
+        };
+        let e_small = err_at(32, &mut rng);
+        let e_big = err_at(512, &mut rng);
+        assert!(e_big < e_small / 2.0, "no concentration: {e_small} -> {e_big}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn structured_maps_have_no_padded_dense_expansion() {
+        let mut rng = Rng::seed_from(56);
+        let k = Exponential::new(1.0);
+        let map = RandomMaclaurin::sample(&k, 5, 16, structured_config(), &mut rng);
+        let _ = map.to_padded_dense(8);
     }
 }

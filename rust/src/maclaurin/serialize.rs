@@ -6,7 +6,9 @@
 //! native Rust engine, the PJRT engine and the pure-jnp oracle are held
 //! to *identical* sampled maps in the cross-engine tests.
 //!
-//! Layout (little-endian):
+//! Two record kinds share the header layout (little-endian):
+//!
+//! **Dense** (`RFDM0001`) — the packed Rademacher stack is the payload:
 //! ```text
 //! magic   8  b"RFDM0001"
 //! d       u32     input dim
@@ -22,15 +24,28 @@
 //! rows    u32     total Rademacher rows
 //! words   u64×(rows * ceil(d/64))   packed sign bits
 //! ```
+//!
+//! **Structured** (`RFDM0002`) — the FWHT/HD projection stack is a pure
+//! function of `(d, orders, seed)` over the crate's cross-platform RNG,
+//! so *seeded reconstruction* replaces the sign payload: the record is
+//! the same header + `orders` + `weights` followed by a single
+//! ```text
+//! pseed   u64     StructuredProjection seed
+//! ```
+//! and deserialization rebuilds the identical stack
+//! (`deserialize(serialize(m)).transform(x) == m.transform(x)`
+//! bit-for-bit, pinned by tests).
 
 use super::rm::{RandomMaclaurin, RmConfig};
 use super::FeatureMap;
 use crate::rng::RademacherMatrix;
+use crate::structured::ProjectionKind;
 use crate::{Error, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"RFDM0001";
+const MAGIC_STRUCTURED: &[u8; 8] = b"RFDM0002";
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -72,10 +87,11 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Serialize a map to bytes.
+/// Serialize a map to bytes (the record kind follows the map's
+/// projection: dense stacks get `RFDM0001`, structured `RFDM0002`).
 pub fn to_bytes(map: &RandomMaclaurin) -> Vec<u8> {
     let mut out = Vec::new();
-    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(if map.is_structured() { MAGIC_STRUCTURED } else { MAGIC });
     put_u32(&mut out, map.input_dim() as u32);
     put_u32(&mut out, map.n_random() as u32);
     out.extend_from_slice(&map.config().p.to_le_bytes());
@@ -92,19 +108,25 @@ pub fn to_bytes(map: &RandomMaclaurin) -> Vec<u8> {
     for &w in map.weights() {
         put_f32(&mut out, w);
     }
-    put_u32(&mut out, map.omegas().rows() as u32);
-    for &w in map.omegas().words() {
-        out.extend_from_slice(&w.to_le_bytes());
+    if map.is_structured() {
+        out.extend_from_slice(&map.proj_seed().to_le_bytes());
+    } else {
+        put_u32(&mut out, map.omegas().rows() as u32);
+        for &w in map.omegas().words() {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
     }
     out
 }
 
-/// Deserialize a map from bytes.
+/// Deserialize a map from bytes (either record kind).
 pub fn from_bytes(buf: &[u8]) -> Result<RandomMaclaurin> {
     let mut r = Reader { buf, pos: 0 };
-    if r.take(8)? != MAGIC {
-        return Err(Error::Data("bad RFDM magic".into()));
-    }
+    let structured = match r.take(8)? {
+        m if m == MAGIC => false,
+        m if m == MAGIC_STRUCTURED => true,
+        _ => return Err(Error::Data("bad RFDM magic".into())),
+    };
     let d = r.u32()? as usize;
     let n_random = r.u32()? as usize;
     let p = r.f64()?;
@@ -126,18 +148,51 @@ pub fn from_bytes(buf: &[u8]) -> Result<RandomMaclaurin> {
     for _ in 0..n_random {
         weights.push(r.f32()?);
     }
-    let rows = r.u32()? as usize;
     let expected_rows: u64 = orders.iter().map(|&o| o as u64).sum();
-    if rows as u64 != expected_rows {
-        return Err(Error::Data(format!(
-            "row count {rows} does not match order sum {expected_rows}"
-        )));
-    }
-    let words_per_row = d.div_ceil(64);
-    let mut words = Vec::with_capacity(rows * words_per_row);
-    for _ in 0..rows * words_per_row {
-        words.push(r.u64()?);
-    }
+    let (omegas, proj_seed) = if structured {
+        // The dense branch is implicitly bounded by its sign payload
+        // (rows × words must be present in the buffer); the structured
+        // branch reconstructs from a seed, so a crafted header could
+        // otherwise demand unbounded work. Enforce the sampler's own
+        // invariants instead of trusting the blob.
+        let max_ord = orders.iter().copied().max().unwrap_or(0);
+        if max_ord > max_order {
+            return Err(Error::Data(format!(
+                "structured record order {max_ord} exceeds its max_order {max_order}"
+            )));
+        }
+        // Reconstruction allocates one next_pow2(d)-length sign vector
+        // per HD block, and the layered layout creates at most
+        // rows + max_ord·next_pow2(d) sign slots in total — cap that
+        // budget (in f32 units) so a ~60-byte blob can never demand
+        // gigabytes. Legitimate maps (d ≤ ~1M, orders ≤ 30) sit far
+        // below it; records with no rows allocate nothing and need no
+        // cap.
+        const MAX_STRUCTURED_WORK: u64 = 1 << 26;
+        let n = (d as u64).next_power_of_two();
+        let work = expected_rows.saturating_add((max_ord as u64).saturating_mul(n));
+        if work > MAX_STRUCTURED_WORK {
+            return Err(Error::Data(format!(
+                "structured record reconstruction budget exceeded: rows {expected_rows} + \
+                 max order {max_ord} × padded dim {n} > {MAX_STRUCTURED_WORK}"
+            )));
+        }
+        let seed = r.u64()?;
+        (RademacherMatrix::from_words(0, d, Vec::new()), seed)
+    } else {
+        let rows = r.u32()? as usize;
+        if rows as u64 != expected_rows {
+            return Err(Error::Data(format!(
+                "row count {rows} does not match order sum {expected_rows}"
+            )));
+        }
+        let words_per_row = d.div_ceil(64);
+        let mut words = Vec::with_capacity(rows * words_per_row);
+        for _ in 0..rows * words_per_row {
+            words.push(r.u64()?);
+        }
+        (RademacherMatrix::from_words(rows, d, words), 0)
+    };
     if r.pos != buf.len() {
         return Err(Error::Data("trailing bytes in RFDM blob".into()));
     }
@@ -148,12 +203,27 @@ pub fn from_bytes(buf: &[u8]) -> Result<RandomMaclaurin> {
         acc += o;
         offsets.push(acc);
     }
-    let omegas = RademacherMatrix::from_words(rows, d, words);
     // `restrict_support` only affects sampling, not evaluation of an
     // already-sampled map, so it is not part of the wire format.
-    let config = RmConfig { p, h01, max_order, restrict_support: true };
+    let config = RmConfig {
+        p,
+        h01,
+        max_order,
+        restrict_support: true,
+        projection: if structured { ProjectionKind::Structured } else { ProjectionKind::Dense },
+    };
     Ok(RandomMaclaurin::from_parts(
-        d, n_random, config, orders, weights, offsets, omegas, w_const, w_linear, kernel_name,
+        d,
+        n_random,
+        config,
+        orders,
+        weights,
+        offsets,
+        omegas,
+        proj_seed,
+        w_const,
+        w_linear,
+        kernel_name,
     ))
 }
 
@@ -225,6 +295,87 @@ mod tests {
         assert!(from_bytes(&long).is_err());
         // Empty.
         assert!(from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn structured_roundtrip_is_bit_identical() {
+        let mut rng = Rng::seed_from(5);
+        let k = Exponential::new(1.0);
+        let config = RmConfig::default()
+            .with_projection(crate::structured::ProjectionKind::Structured);
+        let map = RandomMaclaurin::sample(&k, 9, 32, config, &mut rng);
+        assert!(map.is_structured());
+        let bytes = to_bytes(&map);
+        assert_eq!(&bytes[..8], b"RFDM0002");
+        let map2 = from_bytes(&bytes).unwrap();
+        assert!(map2.is_structured());
+        assert_eq!(map.proj_seed(), map2.proj_seed());
+        assert_eq!(map.orders(), map2.orders());
+        // Seeded reconstruction is exact: transforms agree bit-for-bit,
+        // and re-serialization reproduces the identical blob.
+        let x: Vec<f32> = (0..9).map(|i| (i as f32 * 0.21).sin() * 0.4).collect();
+        assert_eq!(map.transform(&x), map2.transform(&x));
+        assert_eq!(to_bytes(&map2), bytes);
+    }
+
+    #[test]
+    fn structured_roundtrip_h01() {
+        let mut rng = Rng::seed_from(6);
+        let k = Exponential::new(1.0);
+        let config = RmConfig::default()
+            .with_h01(true)
+            .with_projection(crate::structured::ProjectionKind::Structured);
+        let map = RandomMaclaurin::sample(&k, 5, 16, config, &mut rng);
+        let map2 = from_bytes(&to_bytes(&map)).unwrap();
+        assert_eq!(map.output_dim(), map2.output_dim());
+        let x = vec![0.1f32, -0.2, 0.05, 0.3, 0.0];
+        assert_eq!(map.transform(&x), map2.transform(&x));
+    }
+
+    #[test]
+    fn structured_rejects_corruption() {
+        let mut rng = Rng::seed_from(7);
+        let k = Polynomial::new(2, 1.0);
+        let config = RmConfig::default()
+            .with_projection(crate::structured::ProjectionKind::Structured);
+        let map = RandomMaclaurin::sample(&k, 4, 8, config, &mut rng);
+        let bytes = to_bytes(&map);
+        // Truncated (missing seed bytes).
+        assert!(from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        // Trailing garbage.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(from_bytes(&long).is_err());
+        // Unknown magic version.
+        let mut bad = bytes.clone();
+        bad[7] = b'9';
+        assert!(from_bytes(&bad).is_err());
+        // A crafted order larger than the record's own max_order must
+        // be rejected, not handed to seeded reconstruction (the orders
+        // array starts right after the kernel-name bytes).
+        let name_len = map.kernel_name().len();
+        let orders_at = 8 + 4 + 4 + 8 + 1 + 4 + 4 + 4 + 4 + name_len;
+        let mut huge = bytes.clone();
+        huge[orders_at..orders_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = from_bytes(&huge).unwrap_err();
+        assert!(err.to_string().contains("max_order"), "{err}");
+    }
+
+    #[test]
+    fn structured_rejects_reconstruction_bombs() {
+        // A crafted input dim (with at least one nonzero order) must be
+        // rejected before reconstruction allocates next_pow2(d)-length
+        // sign buffers — Homogeneous(2) guarantees every order is 2.
+        let mut rng = Rng::seed_from(8);
+        let k = crate::kernels::Homogeneous::new(2);
+        let config = RmConfig::default()
+            .with_projection(crate::structured::ProjectionKind::Structured);
+        let map = RandomMaclaurin::sample(&k, 4, 8, config, &mut rng);
+        assert!(map.orders().iter().all(|&o| o == 2));
+        let mut wide = to_bytes(&map);
+        wide[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = from_bytes(&wide).unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
     }
 
     #[test]

@@ -17,6 +17,7 @@
 use crate::features::FeatureMap;
 use crate::maclaurin::compositional::{ScalarMap, ScalarMapFactory};
 use crate::rng::Rng;
+use crate::structured::{DenseProjection, Projection, ProjectionKind, StructuredProjection};
 
 /// Gaussian RBF kernel `K(x, y) = exp(−γ ‖x − y‖²)` (helper for tests
 /// and benches; the spectral density is `N(0, 2γ I)`).
@@ -84,54 +85,137 @@ impl ScalarMapFactory for RffScalarFactory {
     }
 }
 
+/// The frequency stack behind a [`RandomFourier`] map: a dense Gaussian
+/// matrix or the Fastfood-style FWHT chain
+/// ([`StructuredProjection::gaussian_stack`], marginally exactly
+/// `N(0, 2γI)` rows).
+#[derive(Clone, Debug)]
+enum FreqStack {
+    Dense(DenseProjection),
+    Structured(StructuredProjection),
+}
+
+impl FreqStack {
+    fn as_projection(&self) -> &dyn Projection {
+        match self {
+            FreqStack::Dense(p) => p,
+            FreqStack::Structured(p) => p,
+        }
+    }
+}
+
 /// A `D`-dimensional Random Fourier feature map for the Gaussian RBF
-/// kernel: `Z(x) = √(2/D) · cos(W x + b)` with rows `w_i ~ N(0, 2γI)`.
+/// kernel: `Z(x) = √(2/D) · cos(W x + b)` with rows `w_i ~ N(0, 2γI)`,
+/// realized through the [`crate::structured::Projection`] subsystem
+/// (dense `O(D·d)` or structured `O(D·log d)` per input; every row's
+/// marginal law is exactly `N(0, 2γI)` in both modes, so the Bochner
+/// unbiasedness argument is untouched — structured rows within one HD
+/// block are merely correlated).
 #[derive(Clone, Debug)]
 pub struct RandomFourier {
-    /// `D × d` frequency matrix, row-major.
-    w: crate::linalg::Matrix,
+    freqs: FreqStack,
     b: Vec<f32>,
     gamma: f64,
 }
 
 impl RandomFourier {
+    /// Sample a dense map (the classic construction).
     pub fn sample(gamma: f64, d: usize, n_features: usize, rng: &mut Rng) -> Self {
+        Self::sample_with(gamma, d, n_features, ProjectionKind::Dense, rng)
+    }
+
+    /// Sample with an explicit projection kind (`--projection` knob).
+    pub fn sample_with(
+        gamma: f64,
+        d: usize,
+        n_features: usize,
+        projection: ProjectionKind,
+        rng: &mut Rng,
+    ) -> Self {
         assert!(gamma > 0.0 && d > 0 && n_features > 0);
         let std = (2.0 * gamma).sqrt();
-        let mut w = crate::linalg::Matrix::zeros(n_features, d);
-        for i in 0..n_features {
-            for j in 0..d {
-                w.set(i, j, (std * rng.normal()) as f32);
+        let freqs = match projection {
+            ProjectionKind::Dense => {
+                let mut w = crate::linalg::Matrix::zeros(n_features, d);
+                for i in 0..n_features {
+                    for j in 0..d {
+                        w.set(i, j, (std * rng.normal()) as f32);
+                    }
+                }
+                FreqStack::Dense(DenseProjection::from_rows_matrix(&w))
             }
-        }
+            ProjectionKind::Structured => FreqStack::Structured(
+                StructuredProjection::gaussian_stack(d, n_features, std, rng),
+            ),
+        };
         let b = (0..n_features)
             .map(|_| (rng.f64() * 2.0 * std::f64::consts::PI) as f32)
             .collect();
-        RandomFourier { w, b, gamma }
+        RandomFourier { freqs, b, gamma }
     }
 
     pub fn gamma(&self) -> f64 {
         self.gamma
     }
+
+    /// True when the frequencies are the FWHT-backed structured stack.
+    pub fn is_structured(&self) -> bool {
+        matches!(self.freqs, FreqStack::Structured(_))
+    }
+
+    #[inline]
+    fn scale(&self) -> f32 {
+        (2.0 / self.output_dim() as f64).sqrt() as f32
+    }
 }
 
 impl FeatureMap for RandomFourier {
     fn input_dim(&self) -> usize {
-        self.w.cols()
+        self.freqs.as_projection().input_dim()
     }
 
     fn output_dim(&self) -> usize {
-        self.w.rows()
+        self.freqs.as_projection().rows()
     }
 
     fn transform_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.input_dim());
         assert_eq!(out.len(), self.output_dim());
-        let scale = (2.0 / self.w.rows() as f64).sqrt() as f32;
-        for i in 0..self.w.rows() {
-            let t = crate::linalg::dot(self.w.row(i), x) + self.b[i];
-            out[i] = scale * t.cos();
+        // The projection buffer doubles as the output buffer.
+        self.freqs.as_projection().project_into(x, out);
+        let scale = self.scale();
+        for (o, &bi) in out.iter_mut().zip(&self.b) {
+            *o = scale * (*o + bi).cos();
         }
+    }
+
+    /// Batch override: one pass through the projection stack (blocked
+    /// GEMM / row-chunked FWHT chains), then the cosine activation —
+    /// both fanned over `threads` scoped workers with the crate's
+    /// bit-identical-per-row contract.
+    fn transform_batch_threads(
+        &self,
+        x: &crate::linalg::Matrix,
+        threads: usize,
+    ) -> crate::linalg::Matrix {
+        assert_eq!(x.cols(), self.input_dim(), "input dim mismatch");
+        let mut out = self.freqs.as_projection().project_batch(x, threads);
+        let (b, dd) = (out.rows(), out.cols());
+        if b == 0 || dd == 0 {
+            return out;
+        }
+        let scale = self.scale();
+        // ~4 flops per cosine coordinate.
+        let work = b.saturating_mul(dd).saturating_mul(4);
+        let threads = crate::parallel::resolve_threads_for_work(threads, b, work);
+        crate::parallel::par_chunks(threads, dd, out.as_mut_slice(), |_, block| {
+            for row in block.chunks_mut(dd) {
+                for (o, &bi) in row.iter_mut().zip(&self.b) {
+                    *o = scale * (*o + bi).cos();
+                }
+            }
+        });
+        out
     }
 }
 
@@ -170,6 +254,44 @@ mod tests {
         let z = map.transform(&x);
         let v = crate::linalg::dot(&z, &z) as f64;
         assert!((v - 1.0).abs() < 0.05, "self-sim {v}");
+    }
+
+    #[test]
+    fn structured_rff_approximates_rbf() {
+        // Fastfood-chain frequencies have exactly the right marginal
+        // law, so the Bochner estimate concentrates like the dense one
+        // (correlations within HD blocks only perturb the constant).
+        let mut rng = Rng::seed_from(11);
+        let gamma = 0.7;
+        let d = 6;
+        let map =
+            RandomFourier::sample_with(gamma, d, 4096, ProjectionKind::Structured, &mut rng);
+        assert!(map.is_structured());
+        assert_eq!(map.output_dim(), 4096);
+        for s in 0..5 {
+            let x = unit_vec(d, 30 + s);
+            let y = unit_vec(d, 40 + s);
+            let exact = rbf(gamma, &x, &y);
+            let approx = crate::linalg::dot(&map.transform(&x), &map.transform(&y)) as f64;
+            assert!((exact - approx).abs() < 0.12, "exact {exact} approx {approx}");
+        }
+    }
+
+    #[test]
+    fn rff_batch_matches_single_bitwise() {
+        for kind in [ProjectionKind::Dense, ProjectionKind::Structured] {
+            let mut rng = Rng::seed_from(12);
+            let map = RandomFourier::sample_with(1.0, 5, 64, kind, &mut rng);
+            let rows: Vec<Vec<f32>> = (0..7).map(|i| unit_vec(5, 50 + i)).collect();
+            let x = crate::linalg::Matrix::from_rows(&rows).unwrap();
+            let zb = map.transform_batch(&x);
+            for i in 0..7 {
+                assert_eq!(zb.row(i), &map.transform(x.row(i))[..], "{kind:?} row {i}");
+            }
+            for threads in [2usize, 3, 16] {
+                assert_eq!(map.transform_batch_threads(&x, threads), zb, "{kind:?}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,493 @@
+//! HD-block chains: the FWHT-backed [`StructuredProjection`].
+//!
+//! One **HD block** realizes `n` projection directions (`n` = the input
+//! dim zero-padded to the next power of two) from `n` random bits:
+//!
+//! ```text
+//! y = H · (D x)                        (Rademacher mode)
+//! y = (1/√n) · H · G · Π · H · (D x)   (Gaussian / Fastfood mode)
+//! ```
+//!
+//! with `D` a seeded Rademacher diagonal, `H` the *unnormalized*
+//! Walsh–Hadamard transform ([`crate::linalg::fwht`], `O(n log n)`),
+//! `Π` a random permutation and `G` a Gaussian diagonal (the `1/√n`
+//! normalization and the target standard deviation are folded into
+//! `G`). A projection needing `rows` directions chains
+//! `⌈rows / n⌉`-ish independently seeded blocks and taps the slots it
+//! needs, so the per-input cost is `O(blocks · n log n)` instead of the
+//! dense `O(rows · n)`.
+//!
+//! Marginals are exact in both modes:
+//! * Rademacher: row `i` of `H D` has entries `H[i,k] d_k ∈ {±1}` with
+//!   iid fair signs — exactly a Rademacher vector, so
+//!   `E[⟨h, x⟩⟨h, y⟩] = ⟨x, y⟩` and `|⟨h, x⟩| ≤ ‖x‖₁` hold exactly as
+//!   for dense stacks.
+//! * Gaussian: conditioned on `D` and `Π`, row `i` of
+//!   `(1/√n) H G Π H D` is `w` with `Cov(w_k, w_l) = σ² δ_{kl}` (the
+//!   inner `H D` has orthogonal ±1 columns of norm `√n`), i.e. exactly
+//!   `N(0, σ² I_n)` — the Fastfood argument of Le, Sarlós & Smola made
+//!   exact by conditioning.
+//!
+//! Rows *within* a block share randomness and are correlated; rows in
+//! different blocks are independent. Callers that multiply projections
+//! together (Random Maclaurin's order-`N` products) must therefore
+//! place the factors of one product in distinct blocks —
+//! [`StructuredProjection::rademacher_for_segments`] encodes exactly
+//! that layout; see its docs.
+
+use super::Projection;
+use crate::linalg::{fwht, next_pow2, Matrix};
+use crate::rng::Rng;
+
+/// One seeded HD block plus the output taps it serves.
+#[derive(Clone, Debug)]
+struct HdBlock {
+    /// Rademacher diagonal `D` (±1), length `n`.
+    signs: Vec<f32>,
+    /// Gaussian mode: permutation `Π` and gain diagonal `G` applied
+    /// between two FWHTs (`1/√n` and the target std folded into the
+    /// gains). `None` = single-HD Rademacher mode.
+    perm_gain: Option<(Vec<u32>, Vec<f32>)>,
+    /// `(slot in the transformed buffer, global output row)`.
+    taps: Vec<(u32, u32)>,
+    /// Uniform output scale (1 for HD blocks, `1/√k` for SRHT).
+    scale: f32,
+}
+
+impl HdBlock {
+    /// Run the chain on (implicitly zero-padded) `x` and scatter the
+    /// tapped slots into `out`. `buf`/`tmp` are caller-owned `n`-length
+    /// scratch.
+    fn project(&self, x: &[f32], buf: &mut [f32], tmp: &mut [f32], out: &mut [f32]) {
+        for (k, &xk) in x.iter().enumerate() {
+            buf[k] = xk * self.signs[k];
+        }
+        buf[x.len()..].fill(0.0);
+        fwht(buf);
+        let src: &[f32] = match &self.perm_gain {
+            Some((perm, gain)) => {
+                for (l, (&p, &g)) in perm.iter().zip(gain).enumerate() {
+                    tmp[l] = g * buf[p as usize];
+                }
+                fwht(tmp);
+                tmp
+            }
+            None => buf,
+        };
+        for &(slot, row) in &self.taps {
+            out[row as usize] = self.scale * src[slot as usize];
+        }
+    }
+
+    /// FWHT mul-adds this block costs per input.
+    fn work(&self) -> usize {
+        let n = self.signs.len();
+        let log_n = n.trailing_zeros() as usize + 1;
+        let passes = if self.perm_gain.is_some() { 2 } else { 1 };
+        passes * n * log_n + n
+    }
+}
+
+fn sample_signs(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.sign() as f32).collect()
+}
+
+/// A structured (FWHT-based) projection: input dim `d`, padded length
+/// `n = next_pow2(d)`, `rows` output directions served by a list of
+/// independently seeded [`HdBlock`]s. Construction is a pure function
+/// of the constructor arguments and the RNG stream, which is what makes
+/// seed-only serialization ([`crate::maclaurin::serialize`]) exact.
+#[derive(Clone, Debug)]
+pub struct StructuredProjection {
+    d: usize,
+    n: usize,
+    rows: usize,
+    blocks: Vec<HdBlock>,
+}
+
+impl StructuredProjection {
+    /// Rademacher rows for segmented *products* (the Random Maclaurin
+    /// layout). `offsets` are the feature→row offsets of
+    /// [`crate::maclaurin::RandomMaclaurin`]: feature `i` owns rows
+    /// `offsets[i]..offsets[i+1]` and multiplies them together.
+    ///
+    /// Layout: factor position `j` of every feature lands in **layer**
+    /// `j`, and each layer is served by its own freshly seeded HD
+    /// block(s) (chunked by `n` when a layer needs more than `n` rows).
+    /// The rows of one feature therefore all sit in *distinct, mutually
+    /// independent* blocks, so the expectation of the feature's product
+    /// factorizes and the Random Maclaurin estimator stays **exactly
+    /// unbiased at every order** — the only statistical change vs dense
+    /// stacks is cross-feature correlation within a layer block, which
+    /// affects variance (see the Gram-envelope tests), not means.
+    pub fn rademacher_for_segments(d: usize, offsets: &[u32], rng: &mut Rng) -> Self {
+        assert!(d > 0, "input dim must be positive");
+        assert!(!offsets.is_empty(), "offsets must contain at least the leading 0");
+        let n = next_pow2(d);
+        let rows = *offsets.last().expect("non-empty") as usize;
+        let mut blocks = Vec::new();
+        let mut layer = 0u32;
+        loop {
+            // Rows at factor position `layer`, in feature order. Counts
+            // are non-increasing in `layer`, so the first empty layer
+            // ends the loop.
+            let outs: Vec<u32> = (0..offsets.len() - 1)
+                .filter(|&i| offsets[i + 1] - offsets[i] > layer)
+                .map(|i| offsets[i] + layer)
+                .collect();
+            if outs.is_empty() {
+                break;
+            }
+            for chunk in outs.chunks(n) {
+                blocks.push(HdBlock {
+                    signs: sample_signs(n, rng),
+                    perm_gain: None,
+                    taps: chunk.iter().enumerate().map(|(s, &r)| (s as u32, r)).collect(),
+                    scale: 1.0,
+                });
+            }
+            layer += 1;
+        }
+        StructuredProjection { d, n, rows, blocks }
+    }
+
+    /// Plain stacked Rademacher rows: row `r` = slot `r % n` of block
+    /// `r / n`. The right layout when every row is consumed on its own
+    /// (no products), e.g. SRHT-style sketching experiments.
+    pub fn rademacher_stack(d: usize, rows: usize, rng: &mut Rng) -> Self {
+        assert!(d > 0, "input dim must be positive");
+        let n = next_pow2(d);
+        let mut blocks = Vec::new();
+        let mut start = 0usize;
+        while start < rows {
+            let take = (rows - start).min(n);
+            blocks.push(HdBlock {
+                signs: sample_signs(n, rng),
+                perm_gain: None,
+                taps: (0..take).map(|s| (s as u32, (start + s) as u32)).collect(),
+                scale: 1.0,
+            });
+            start += take;
+        }
+        StructuredProjection { d, n, rows, blocks }
+    }
+
+    /// Fastfood-style Gaussian rows, marginally exactly `N(0, std² I)`:
+    /// the frequency stack of structured Random Fourier Features
+    /// ([`crate::rff::RandomFourier::sample_with`]).
+    pub fn gaussian_stack(d: usize, rows: usize, std: f64, rng: &mut Rng) -> Self {
+        assert!(d > 0, "input dim must be positive");
+        let n = next_pow2(d);
+        let inv_sqrt_n = 1.0 / (n as f64).sqrt();
+        let mut blocks = Vec::new();
+        let mut start = 0usize;
+        while start < rows {
+            let take = (rows - start).min(n);
+            let signs = sample_signs(n, rng);
+            let mut perm: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut perm);
+            let gain: Vec<f32> =
+                (0..n).map(|_| (std * rng.normal() * inv_sqrt_n) as f32).collect();
+            blocks.push(HdBlock {
+                signs,
+                perm_gain: Some((perm, gain)),
+                taps: (0..take).map(|s| (s as u32, (start + s) as u32)).collect(),
+                scale: 1.0,
+            });
+            start += take;
+        }
+        StructuredProjection { d, n, rows, blocks }
+    }
+
+    /// The subsampled randomized Hadamard transform: `k` *distinct*
+    /// rows per block, scaled by `1/√k` so `E[‖Φx‖²] = ‖x‖²` (the JL
+    /// isometry normalization).
+    pub fn srht(d: usize, k: usize, rng: &mut Rng) -> Self {
+        assert!(d > 0 && k > 0, "dims must be positive");
+        let n = next_pow2(d);
+        let scale = (1.0 / (k as f64).sqrt()) as f32;
+        let mut blocks = Vec::new();
+        let mut start = 0usize;
+        while start < k {
+            let take = (k - start).min(n);
+            let slots = rng.sample_indices(n, take);
+            blocks.push(HdBlock {
+                signs: sample_signs(n, rng),
+                perm_gain: None,
+                taps: slots
+                    .iter()
+                    .enumerate()
+                    .map(|(s, &slot)| (slot as u32, (start + s) as u32))
+                    .collect(),
+                scale,
+            });
+            start += take;
+        }
+        StructuredProjection { d, n, rows: k, blocks }
+    }
+
+    /// Padded (power-of-two) working length.
+    pub fn padded_dim(&self) -> usize {
+        self.n
+    }
+
+    /// Number of HD blocks backing the stack.
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Second-scratch length: `n` only when some block runs the
+    /// two-FWHT Gaussian chain; Rademacher-only stacks (the whole
+    /// Random Maclaurin path) never touch `tmp`.
+    fn tmp_len(&self) -> usize {
+        if self.blocks.iter().any(|b| b.perm_gain.is_some()) {
+            self.n
+        } else {
+            0
+        }
+    }
+}
+
+impl Projection for StructuredProjection {
+    fn input_dim(&self) -> usize {
+        self.d
+    }
+
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn unit_work(&self) -> usize {
+        self.blocks.iter().map(HdBlock::work).sum::<usize>().max(1)
+    }
+
+    fn project_into(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.d, "input dim mismatch");
+        assert_eq!(out.len(), self.rows, "output len mismatch");
+        let mut buf = vec![0.0f32; self.n];
+        let mut tmp = vec![0.0f32; self.tmp_len()];
+        for block in &self.blocks {
+            block.project(x, &mut buf, &mut tmp, out);
+        }
+    }
+
+    fn project_batch(&self, x: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(x.cols(), self.d, "input dim mismatch");
+        let (b, r) = (x.rows(), self.rows);
+        let mut out = Matrix::zeros(b, r);
+        if b == 0 || r == 0 {
+            return out;
+        }
+        let work = b.saturating_mul(self.unit_work());
+        let threads = crate::parallel::resolve_threads_for_work(threads, b, work);
+        crate::parallel::par_chunks(threads, r, out.as_mut_slice(), |row0, block| {
+            // Scratch is per-worker; every row still runs the identical
+            // serial chain, so any thread count is bit-identical.
+            let mut buf = vec![0.0f32; self.n];
+            let mut tmp = vec![0.0f32; self.tmp_len()];
+            for (i, out_row) in block.chunks_mut(r).enumerate() {
+                for blk in &self.blocks {
+                    blk.project(x.row(row0 + i), &mut buf, &mut tmp, out_row);
+                }
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dot;
+
+    fn unit_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        crate::linalg::normalize(&mut v);
+        v
+    }
+
+    /// Recover direction `r` by projecting the basis vectors.
+    fn direction(p: &StructuredProjection, r: usize) -> Vec<f32> {
+        let d = p.input_dim();
+        let mut w = vec![0.0f32; d];
+        let mut out = vec![0.0f32; p.rows()];
+        for k in 0..d {
+            let mut e = vec![0.0f32; d];
+            e[k] = 1.0;
+            p.project_into(&e, &mut out);
+            w[k] = out[r];
+        }
+        w
+    }
+
+    #[test]
+    fn rademacher_rows_have_pm_one_entries() {
+        // Each HD row must be a genuine ±1 sign pattern — the property
+        // the Lemma 8 bound and the marginal-law argument rest on.
+        let mut rng = Rng::seed_from(1);
+        for d in [1usize, 3, 8, 13, 64] {
+            let p = StructuredProjection::rademacher_stack(d, 2 * d + 3, &mut rng);
+            for r in 0..p.rows() {
+                for (k, &w) in direction(&p, r).iter().enumerate() {
+                    assert!(w == 1.0 || w == -1.0, "d={d} row={r} k={k}: {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rademacher_rows_preserve_dot_products_in_expectation() {
+        // E[⟨h, x⟩⟨h, y⟩] = ⟨x, y⟩ averaged over seeds (Lemma 6 analog).
+        let d = 24;
+        let x = unit_vec(d, 10);
+        let y = unit_vec(d, 11);
+        let exact = dot(&x, &y) as f64;
+        let trials = 3000;
+        let mut acc = 0.0f64;
+        let mut count = 0usize;
+        for s in 0..trials {
+            let mut rng = Rng::seed_from(1000 + s);
+            let p = StructuredProjection::rademacher_stack(d, 4, &mut rng);
+            let mut px = vec![0.0f32; 4];
+            let mut py = vec![0.0f32; 4];
+            p.project_into(&x, &mut px);
+            p.project_into(&y, &mut py);
+            for r in 0..4 {
+                acc += (px[r] * py[r]) as f64;
+                count += 1;
+            }
+        }
+        let mean = acc / count as f64;
+        assert!((mean - exact).abs() < 0.07, "mean {mean} vs exact {exact}");
+    }
+
+    #[test]
+    fn segments_layout_separates_each_features_rows() {
+        // offsets for orders [2, 0, 3, 1]: features' factor rows must
+        // land in per-layer blocks, all rows covered exactly once.
+        let offsets = [0u32, 2, 2, 5, 6];
+        let mut rng = Rng::seed_from(3);
+        let p = StructuredProjection::rademacher_for_segments(11, &offsets, &mut rng);
+        assert_eq!(p.rows(), 6);
+        // Layers: 0 → rows {0, 2, 5}, 1 → {1, 3}, 2 → {4}; n = 16 so one
+        // block per layer.
+        assert_eq!(p.n_blocks(), 3);
+        // Every output row is written (projections of a dense input are
+        // nonzero with prob. 1; check they're all ±-sums, i.e. touched).
+        let x = unit_vec(11, 4);
+        let mut out = vec![f32::NAN; 6];
+        p.project_into(&x, &mut out);
+        assert!(out.iter().all(|v| v.is_finite()), "{out:?}");
+    }
+
+    #[test]
+    fn segments_rows_match_fresh_rademacher_marginals() {
+        // Rows recovered from the segments layout are ±1 patterns too.
+        let offsets = [0u32, 1, 3, 6, 10];
+        let mut rng = Rng::seed_from(5);
+        let p = StructuredProjection::rademacher_for_segments(7, &offsets, &mut rng);
+        for r in 0..p.rows() {
+            for &w in &direction(&p, r) {
+                assert!(w == 1.0 || w == -1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn gaussian_rows_have_standard_normal_marginals() {
+        // Entries of the Fastfood rows are N(0, std²) marginally:
+        // check mean/variance over many seeded blocks.
+        let d = 16;
+        let std = 1.5f64;
+        let mut acc = 0.0f64;
+        let mut acc2 = 0.0f64;
+        let mut count = 0usize;
+        for s in 0..400 {
+            let mut rng = Rng::seed_from(50 + s);
+            let p = StructuredProjection::gaussian_stack(d, 8, std, &mut rng);
+            for r in 0..8 {
+                for &w in &direction(&p, r) {
+                    acc += w as f64;
+                    acc2 += (w as f64) * w as f64;
+                    count += 1;
+                }
+            }
+        }
+        let mean = acc / count as f64;
+        let var = acc2 / count as f64 - mean * mean;
+        assert!(mean.abs() < 0.06, "mean {mean}");
+        assert!((var - std * std).abs() < 0.25, "var {var} vs {}", std * std);
+    }
+
+    #[test]
+    fn srht_is_an_expected_isometry() {
+        // E[‖Φx‖²] = ‖x‖² over seeds.
+        let d = 20;
+        let k = 12;
+        let x = unit_vec(d, 21);
+        let mut acc = 0.0f64;
+        let trials = 2000;
+        for s in 0..trials {
+            let mut rng = Rng::seed_from(300 + s);
+            let p = StructuredProjection::srht(d, k, &mut rng);
+            let mut out = vec![0.0f32; k];
+            p.project_into(&x, &mut out);
+            acc += out.iter().map(|&v| (v as f64) * v as f64).sum::<f64>();
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - 1.0).abs() < 0.05, "E‖Φx‖² = {mean}");
+    }
+
+    #[test]
+    fn srht_taps_distinct_rows_per_block() {
+        let mut rng = Rng::seed_from(7);
+        let p = StructuredProjection::srht(8, 5, &mut rng);
+        assert_eq!(p.n_blocks(), 1);
+        let mut slots: Vec<u32> = p.blocks[0].taps.iter().map(|&(s, _)| s).collect();
+        slots.sort_unstable();
+        slots.dedup();
+        assert_eq!(slots.len(), 5, "SRHT slots must be distinct");
+    }
+
+    #[test]
+    fn batch_is_bit_identical_to_single_and_across_threads() {
+        let mut rng = Rng::seed_from(9);
+        let d = 13;
+        let p = StructuredProjection::rademacher_stack(d, 40, &mut rng);
+        let rows: Vec<Vec<f32>> = (0..9).map(|i| unit_vec(d, 40 + i)).collect();
+        let x = Matrix::from_rows(&rows).unwrap();
+        let z = p.project_batch(&x, 1);
+        for i in 0..9 {
+            let mut single = vec![0.0f32; 40];
+            p.project_into(x.row(i), &mut single);
+            assert_eq!(z.row(i), &single[..], "row {i}");
+        }
+        for threads in [2usize, 3, 64] {
+            assert_eq!(p.project_batch(&x, threads), z);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let build = || {
+            StructuredProjection::gaussian_stack(10, 24, 0.7, &mut Rng::seed_from(77))
+        };
+        let (a, b) = (build(), build());
+        let x = unit_vec(10, 78);
+        let (mut oa, mut ob) = (vec![0.0f32; 24], vec![0.0f32; 24]);
+        a.project_into(&x, &mut oa);
+        b.project_into(&x, &mut ob);
+        assert_eq!(oa, ob);
+    }
+
+    #[test]
+    fn zero_rows_is_a_valid_empty_stack() {
+        let mut rng = Rng::seed_from(11);
+        let p = StructuredProjection::rademacher_for_segments(5, &[0, 0, 0], &mut rng);
+        assert_eq!(p.rows(), 0);
+        assert_eq!(p.n_blocks(), 0);
+        let z = p.project_batch(&Matrix::zeros(3, 5), 2);
+        assert_eq!((z.rows(), z.cols()), (3, 0));
+    }
+}

@@ -1,0 +1,276 @@
+//! Structured random projection subsystem.
+//!
+//! Every feature map in this crate spends its serving time on the same
+//! primitive: projecting an input `x ∈ R^d` onto a stack of random
+//! directions (`rows` Rademacher vectors for Random Maclaurin, `rows`
+//! Gaussian frequencies for Random Fourier). Dense stacks cost
+//! `O(rows · d)` per input; this module makes the primitive pluggable
+//! and adds an `O(rows · log d)` alternative built from **HD blocks**
+//! (seeded Rademacher diagonal `D` followed by an unnormalized fast
+//! Walsh–Hadamard transform `H`, computed in place by
+//! [`crate::linalg::fwht`]), the construction of Choromanski &
+//! Sindhwani's *Recycling Randomness with Structure* and the structured
+//! variants in Wacker et al.'s *Improved Random Features for Dot
+//! Product Kernels*.
+//!
+//! Layers:
+//!
+//! * [`Projection`] — the trait: `project_into` (one input) and
+//!   `project_batch` (row-chunked over the [`crate::parallel`] worker
+//!   pool; bit-identical to the serial per-row routine for any thread
+//!   count, like every other batch path in the crate).
+//! * [`DenseProjection`] — the classic explicit matrix (streaming axpy
+//!   for one vector, blocked GEMM for batches). The Random Maclaurin
+//!   dense path is bit-identical to its pre-subsystem implementation
+//!   (same layouts, same ascending-k accumulation); dense Random
+//!   Fourier now accumulates in the same ascending-k order instead of
+//!   its old per-row 4-lane dot, so seeded RFF outputs shift within
+//!   float tolerance across versions (same seed still yields the same
+//!   frequencies).
+//! * [`StructuredProjection`] ([`hd`]) — chains of HD blocks with
+//!   zero-padding to the next power of two, in three flavors:
+//!   Rademacher recycling (`rademacher_*`, exact ±1 marginals), the
+//!   Fastfood-style Gaussian chain (`gaussian_stack`, exact `N(0, σ²I)`
+//!   marginals), and the SRHT row-subsampler (`srht`).
+//! * [`ProjectionKind`] — the `dense | structured` knob surfaced by
+//!   `config` (`"projection"`) and the CLI (`--projection`), consumed
+//!   by [`crate::maclaurin::RmConfig`] and
+//!   [`crate::rff::RandomFourier::sample_with`].
+//!
+//! **Statistics.** A row of `H·D` has entries `H[i, k]·d_k ∈ {±1}` with
+//! `d` a fair sign vector, so each row is *exactly* a Rademacher vector
+//! in distribution — structured projections inherit the dense maps'
+//! marginal law, per-row unbiasedness (`E[⟨h, x⟩⟨h, y⟩] = ⟨x, y⟩`) and
+//! the deterministic bound `|⟨h, x⟩| ≤ ‖x‖₁` that Lemma 8 of the paper
+//! rests on. What changes is *joint* law: rows inside one block share
+//! `d` and are correlated, which perturbs variance (concentration), not
+//! means. See [`crate::maclaurin`] for how the Random Maclaurin sampler
+//! assigns rows to blocks so its product-estimator stays exactly
+//! unbiased at every order.
+
+pub mod hd;
+
+pub use hd::StructuredProjection;
+
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+
+/// The `dense | structured` projection knob, threaded from the CLI /
+/// config surface down to the samplers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ProjectionKind {
+    /// Explicit random matrix: `O(rows · d)` per input.
+    #[default]
+    Dense,
+    /// HD-block chain (FWHT-based): `O(rows · log d)` per input.
+    Structured,
+}
+
+impl ProjectionKind {
+    /// Parse the CLI/config spelling.
+    pub fn parse(s: &str) -> Result<ProjectionKind> {
+        match s {
+            "dense" => Ok(ProjectionKind::Dense),
+            "structured" => Ok(ProjectionKind::Structured),
+            other => Err(Error::Config(format!(
+                "unknown projection {other:?} (expected dense|structured)"
+            ))),
+        }
+    }
+
+    /// Canonical spelling (inverse of [`ProjectionKind::parse`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ProjectionKind::Dense => "dense",
+            ProjectionKind::Structured => "structured",
+        }
+    }
+}
+
+/// A fixed stack of random projection directions `w_1..w_rows ∈ R^d`:
+/// `project_into` computes all `⟨w_r, x⟩` for one input.
+///
+/// Implementations must make `project_batch` row `i` bit-identical to
+/// `project_into` on row `i` (the crate-wide determinism contract:
+/// batching and threading are scheduling, never semantics).
+pub trait Projection: Send + Sync + std::fmt::Debug {
+    /// Input dimensionality `d`.
+    fn input_dim(&self) -> usize;
+
+    /// Number of projection directions.
+    fn rows(&self) -> usize;
+
+    /// `out[r] = ⟨w_r, x⟩` (`out.len() == rows()`).
+    fn project_into(&self, x: &[f32], out: &mut [f32]);
+
+    /// Approximate mul-add cost of one `project_into` call — the
+    /// scheduling hint fed to
+    /// [`crate::parallel::resolve_threads_for_work`].
+    fn unit_work(&self) -> usize {
+        self.rows().saturating_mul(self.input_dim()).max(1)
+    }
+
+    /// Project every row of `x`: returns `x.rows() × rows()`. Fans row
+    /// blocks out over `threads` scoped workers (`0` = the global
+    /// [`crate::parallel`] knob); every output row runs the identical
+    /// serial routine, so results are bit-identical for any thread
+    /// count.
+    fn project_batch(&self, x: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(x.cols(), self.input_dim(), "input dim mismatch");
+        let (b, r) = (x.rows(), self.rows());
+        let mut out = Matrix::zeros(b, r);
+        if b == 0 || r == 0 {
+            return out;
+        }
+        let work = b.saturating_mul(self.unit_work());
+        let threads = crate::parallel::resolve_threads_for_work(threads, b, work);
+        crate::parallel::par_chunks(threads, r, out.as_mut_slice(), |row0, block| {
+            for (i, out_row) in block.chunks_mut(r).enumerate() {
+                self.project_into(x.row(row0 + i), out_row);
+            }
+        });
+        out
+    }
+}
+
+/// Explicit dense projection matrix, stored transposed (`d × rows`,
+/// row-major) so one input streams it row by row and a batch multiplies
+/// it as a single GEMM — exactly the layouts (and, for the Random
+/// Maclaurin path, exactly the float results) of the pre-subsystem hot
+/// paths.
+#[derive(Clone, Debug)]
+pub struct DenseProjection {
+    /// `d × rows` (column `r` is direction `w_r`).
+    t: Matrix,
+}
+
+impl DenseProjection {
+    /// Wrap a `d × rows` transposed direction matrix.
+    pub fn from_transposed(t: Matrix) -> Self {
+        DenseProjection { t }
+    }
+
+    /// Wrap a `rows × d` direction matrix (transposing it).
+    pub fn from_rows_matrix(w: &Matrix) -> Self {
+        DenseProjection { t: w.transpose() }
+    }
+
+    /// Expand a bit-packed Rademacher stack into the dense ±1 layout.
+    pub fn from_rademacher(omegas: &crate::rng::RademacherMatrix) -> Self {
+        let (rows, d) = (omegas.rows(), omegas.dim());
+        let mut t = Matrix::zeros(d, rows);
+        for r in 0..rows {
+            for k in 0..d {
+                t.set(k, r, omegas.sign(r, k));
+            }
+        }
+        DenseProjection { t }
+    }
+
+    /// The underlying `d × rows` matrix.
+    pub fn transposed(&self) -> &Matrix {
+        &self.t
+    }
+}
+
+impl Projection for DenseProjection {
+    fn input_dim(&self) -> usize {
+        self.t.rows()
+    }
+
+    fn rows(&self) -> usize {
+        self.t.cols()
+    }
+
+    fn project_into(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.input_dim(), "input dim mismatch");
+        assert_eq!(out.len(), self.rows(), "output len mismatch");
+        out.fill(0.0);
+        // out[r] = Σ_k x[k] · t[k, r]; accumulating row k of the
+        // transposed matrix is the streaming direction, and the
+        // ascending-k order matches the GEMM accumulation order, so
+        // single-vector and batch projections agree bit-for-bit.
+        for (k, &xk) in x.iter().enumerate() {
+            if xk != 0.0 {
+                crate::linalg::axpy(xk, self.t.row(k), out);
+            }
+        }
+    }
+
+    fn project_batch(&self, x: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(x.cols(), self.input_dim(), "input dim mismatch");
+        if self.rows() == 0 {
+            return Matrix::zeros(x.rows(), 0);
+        }
+        x.matmul_threads(&self.t, threads).expect("inner dims agree")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{RademacherMatrix, Rng};
+
+    fn random_batch(rows: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed_from(seed);
+        Matrix::from_vec(rows, d, (0..rows * d).map(|_| rng.f32() - 0.5).collect()).unwrap()
+    }
+
+    #[test]
+    fn kind_parses_and_round_trips() {
+        assert_eq!(ProjectionKind::parse("dense").unwrap(), ProjectionKind::Dense);
+        assert_eq!(ProjectionKind::parse("structured").unwrap(), ProjectionKind::Structured);
+        // No undocumented aliases: only the two documented spellings
+        // (which round-trip through as_str) parse.
+        assert!(ProjectionKind::parse("fwht").is_err());
+        assert!(ProjectionKind::parse("srht").is_err());
+        assert!(ProjectionKind::parse("fancy").is_err());
+        for kind in [ProjectionKind::Dense, ProjectionKind::Structured] {
+            assert_eq!(ProjectionKind::parse(kind.as_str()).unwrap(), kind);
+        }
+        assert_eq!(ProjectionKind::default(), ProjectionKind::Dense);
+    }
+
+    #[test]
+    fn dense_matches_rademacher_project_all() {
+        let mut rng = Rng::seed_from(1);
+        let (rows, d) = (9, 37);
+        let omegas = RademacherMatrix::sample(rows, d, &mut rng);
+        let p = DenseProjection::from_rademacher(&omegas);
+        assert_eq!(p.input_dim(), d);
+        assert_eq!(p.rows(), rows);
+        let x: Vec<f32> = (0..d).map(|k| (k as f32 * 0.13).sin()).collect();
+        let mut got = vec![0.0f32; rows];
+        p.project_into(&x, &mut got);
+        let mut want = vec![0.0f32; rows];
+        omegas.project_all(&x, &mut want);
+        for r in 0..rows {
+            assert!((got[r] - want[r]).abs() < 1e-4, "row {r}: {} vs {}", got[r], want[r]);
+        }
+    }
+
+    #[test]
+    fn dense_batch_rows_equal_single_bitwise() {
+        let mut rng = Rng::seed_from(2);
+        let (rows, d, b) = (17, 12, 7);
+        let omegas = RademacherMatrix::sample(rows, d, &mut rng);
+        let p = DenseProjection::from_rademacher(&omegas);
+        let x = random_batch(b, d, 3);
+        let z = p.project_batch(&x, 1);
+        for i in 0..b {
+            let mut single = vec![0.0f32; rows];
+            p.project_into(x.row(i), &mut single);
+            assert_eq!(z.row(i), &single[..], "row {i}");
+        }
+        for threads in [2usize, 5, 64] {
+            assert_eq!(p.project_batch(&x, threads), z);
+        }
+    }
+
+    #[test]
+    fn empty_projection_yields_zero_columns() {
+        let p = DenseProjection::from_transposed(Matrix::zeros(4, 0));
+        let z = p.project_batch(&random_batch(3, 4, 4), 2);
+        assert_eq!((z.rows(), z.cols()), (3, 0));
+    }
+}

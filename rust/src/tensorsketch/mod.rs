@@ -28,10 +28,12 @@ pub struct TensorSketch {
 }
 
 impl TensorSketch {
-    /// Sample a sketch. `width` is rounded up to a power of two.
+    /// Sample a sketch. `width` is rounded up to a power of two (the
+    /// shared [`crate::linalg::next_pow2`] padding rule of the radix-2
+    /// transform family).
     pub fn sample(degree: u32, offset: f64, d: usize, width: usize, rng: &mut Rng) -> Self {
         assert!(degree >= 1 && d > 0 && width > 0);
-        let width = width.next_power_of_two();
+        let width = crate::linalg::next_pow2(width);
         // The appended sqrt(r) coordinate implements the offset.
         let d_ext = d + usize::from(offset > 0.0);
         let mut hashes = Vec::with_capacity(degree as usize);

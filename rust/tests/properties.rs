@@ -4,11 +4,12 @@
 use rfdot::config::json::Json;
 use rfdot::data::libsvm;
 use rfdot::kernels::{DotProductKernel, Exponential, Homogeneous, Polynomial, VovkReal};
-use rfdot::linalg::{norm1, scale, Matrix};
+use rfdot::linalg::{fwht, norm1, scale, Matrix};
 use rfdot::features::FeatureMap;
 use rfdot::maclaurin::{serialize, RandomMaclaurin, RmConfig};
 use rfdot::prop::{forall, gens, PropConfig};
 use rfdot::rng::Rng;
+use rfdot::structured::ProjectionKind;
 
 /// A random built-in kernel.
 fn random_kernel(rng: &mut Rng) -> Box<dyn DotProductKernel> {
@@ -26,6 +27,7 @@ struct MapCase {
     d: usize,
     n_feat: usize,
     h01: bool,
+    projection: ProjectionKind,
     seed: u64,
 }
 
@@ -36,6 +38,11 @@ fn gen_map_case(rng: &mut Rng, size: usize) -> MapCase {
         d: 1 + rng.below(1 + size as u64 / 2) as usize,
         n_feat: 1 + rng.below(1 + size as u64 * 2) as usize,
         h01: rng.bernoulli(0.5),
+        projection: if rng.bernoulli(0.5) {
+            ProjectionKind::Structured
+        } else {
+            ProjectionKind::Dense
+        },
         seed: rng.next_u64(),
     }
 }
@@ -72,7 +79,9 @@ fn prop_estimator_bound_holds() {
                 kernel.as_ref(),
                 case.d,
                 case.n_feat,
-                RmConfig::default().with_h01(case.h01 && kernel.coeff(0) + kernel.coeff(1) > 0.0),
+                RmConfig::default()
+                    .with_h01(case.h01 && kernel.coeff(0) + kernel.coeff(1) > 0.0)
+                    .with_projection(case.projection),
                 &mut rng,
             );
             let bound = kernel.estimator_bound(2.0, 1.0) + 1e-6;
@@ -114,14 +123,19 @@ fn prop_serialization_roundtrip() {
                 kernel.as_ref(),
                 case.d,
                 case.n_feat,
-                RmConfig::default().with_h01(case.h01),
+                RmConfig::default().with_h01(case.h01).with_projection(case.projection),
                 &mut rng,
             );
-            let map2 = serialize::from_bytes(&serialize::to_bytes(&map))
-                .map_err(|e| e.to_string())?;
+            let bytes = serialize::to_bytes(&map);
+            let map2 = serialize::from_bytes(&bytes).map_err(|e| e.to_string())?;
             let x = gens::unit_vec(&mut rng, case.d);
             if map.transform(&x) != map2.transform(&x) {
                 return Err("transform mismatch after roundtrip".into());
+            }
+            // Reserialization is canonical for both record kinds (the
+            // structured kind stores only seed + layout).
+            if serialize::to_bytes(&map2) != bytes {
+                return Err("reserialized bytes differ".into());
             }
             Ok(())
         },
@@ -141,7 +155,7 @@ fn prop_batch_equals_single() {
                 kernel.as_ref(),
                 case.d,
                 case.n_feat,
-                RmConfig::default().with_h01(case.h01),
+                RmConfig::default().with_h01(case.h01).with_projection(case.projection),
                 &mut rng,
             );
             let b = 1 + rng.below(6) as usize;
@@ -155,6 +169,64 @@ fn prop_batch_equals_single() {
                     if (a - bb).abs() > 1e-4 * (1.0 + bb.abs()) {
                         return Err(format!("row {i} mismatch: {a} vs {bb}"));
                     }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// FWHT invariants on random inputs at every power-of-two length up to
+/// 128: involution up to the `1/n` scale, Parseval's `‖Hx‖² = n‖x‖²`,
+/// and exact agreement with the naive O(n²) Hadamard multiply
+/// (`H[i, k] = (−1)^{popcount(i & k)}`).
+#[test]
+fn prop_fwht_invariants() {
+    #[derive(Debug)]
+    struct Case {
+        log_n: u32,
+        seed: u64,
+    }
+    forall(
+        PropConfig { cases: 80, seed: 0xFA57, max_size: 7 },
+        |rng: &mut Rng, size: usize| Case {
+            log_n: rng.below(size.min(7) as u64 + 1) as u32,
+            seed: rng.next_u64(),
+        },
+        |case| {
+            let n = 1usize << case.log_n;
+            let mut rng = Rng::seed_from(case.seed);
+            let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            let naive: Vec<f64> = (0..n)
+                .map(|i| {
+                    (0..n)
+                        .map(|k| {
+                            let v = x[k] as f64;
+                            if (i & k).count_ones() % 2 == 0 {
+                                v
+                            } else {
+                                -v
+                            }
+                        })
+                        .sum()
+                })
+                .collect();
+            let mut y = x.clone();
+            fwht(&mut y);
+            for k in 0..n {
+                if (y[k] as f64 - naive[k]).abs() > 1e-3 {
+                    return Err(format!("n={n} k={k}: fwht {} vs naive {}", y[k], naive[k]));
+                }
+            }
+            let sq = |v: &[f32]| v.iter().map(|&a| (a as f64) * a as f64).sum::<f64>();
+            let (ex, ey) = (sq(&x), sq(&y));
+            if (ey - n as f64 * ex).abs() > 1e-3 * (1.0 + ey) {
+                return Err(format!("Parseval violated at n={n}: {ey} vs {}", n as f64 * ex));
+            }
+            fwht(&mut y);
+            for k in 0..n {
+                if (y[k] / n as f32 - x[k]).abs() > 1e-3 {
+                    return Err(format!("involution violated at n={n} k={k}"));
                 }
             }
             Ok(())

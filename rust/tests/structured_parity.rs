@@ -1,0 +1,166 @@
+//! Structured-vs-dense parity: statistical correctness of the FWHT
+//! projection subsystem against the exact kernel Gram (the Figure-1
+//! error machinery), and the end-to-end `--projection structured`
+//! chain: config → sampling → serving via the coordinator's native
+//! backend → serialize/deserialize bit-identity.
+
+use rfdot::config::ExperimentConfig;
+use rfdot::coordinator::{Coordinator, CoordinatorConfig, NativeFactory};
+use rfdot::features::{feature_gram, FeatureMap};
+use rfdot::kernels::{gram, mean_abs_gram_error, Polynomial};
+use rfdot::linalg::Matrix;
+use rfdot::maclaurin::{serialize, RandomMaclaurin, RmConfig};
+use rfdot::rng::Rng;
+use rfdot::structured::ProjectionKind;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn unit_points(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seed_from(seed);
+    let rows: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            rfdot::linalg::normalize(&mut v);
+            v
+        })
+        .collect();
+    Matrix::from_rows(&rows).unwrap()
+}
+
+/// Mean Gram error at feature count `dd`, averaged over 3 maps.
+fn err_at(kind: ProjectionKind, dd: usize, x: &Matrix, exact: &Matrix, rng: &mut Rng) -> f64 {
+    let kernel = Polynomial::new(3, 1.0);
+    (0..3)
+        .map(|_| {
+            let map = RandomMaclaurin::sample(
+                &kernel,
+                x.cols(),
+                dd,
+                RmConfig::default().with_projection(kind),
+                rng,
+            );
+            mean_abs_gram_error(exact, &feature_gram(&map, x))
+        })
+        .sum::<f64>()
+        / 3.0
+}
+
+/// Both projection kinds concentrate toward the exact Gram at the same
+/// 1/sqrt(D) rate (the Figure-1 assertion, applied per kind), and at
+/// matched D their errors sit in the same envelope: structured pays at
+/// most a small constant factor for its intra-block correlations.
+#[test]
+fn gram_errors_share_the_figure1_envelope() {
+    let d = 16;
+    let x = unit_points(30, d, 1);
+    let exact = gram(&Polynomial::new(3, 1.0), &x);
+    let mut rng = Rng::seed_from(2);
+
+    let dense_small = err_at(ProjectionKind::Dense, 32, &x, &exact, &mut rng);
+    let dense_big = err_at(ProjectionKind::Dense, 512, &x, &exact, &mut rng);
+    let structured_small = err_at(ProjectionKind::Structured, 32, &x, &exact, &mut rng);
+    let structured_big = err_at(ProjectionKind::Structured, 512, &x, &exact, &mut rng);
+
+    // Same decay assertion the dense Figure-1 test makes (16x features
+    // should cut the error well past 2x), for each kind.
+    assert!(dense_big < dense_small / 2.0, "dense: {dense_small} -> {dense_big}");
+    assert!(
+        structured_big < structured_small / 2.0,
+        "structured: {structured_small} -> {structured_big}"
+    );
+    // Matched-D envelope: within a small constant factor of each other,
+    // both ways (the small absolute slack covers the ~0.1-scale errors
+    // these shapes produce).
+    assert!(
+        structured_big < 3.0 * dense_big + 0.02,
+        "structured err {structured_big} far above dense {dense_big}"
+    );
+    assert!(
+        dense_big < 3.0 * structured_big + 0.02,
+        "dense err {dense_big} far above structured {structured_big}"
+    );
+}
+
+/// The full `--projection structured` chain: a config-parsed projection
+/// kind drives sampling; the sampled map serves through the
+/// coordinator's `NativeBackend` bit-identically to direct transforms;
+/// and the serialized record reconstructs the identical map.
+#[test]
+fn structured_end_to_end_config_serve_serialize() {
+    // config → sampling
+    let cfg = ExperimentConfig::from_json(
+        r#"{"projection": "structured", "n_features": 64, "kernel": {"kind": "exponential", "sigma2": 1.0}}"#,
+    )
+    .unwrap();
+    assert_eq!(cfg.projection, ProjectionKind::Structured);
+    let d = 10usize;
+    let kernel = cfg.kernel.build(1.0);
+    let mut rng = Rng::seed_from(cfg.seed);
+    let map = Arc::new(RandomMaclaurin::sample(
+        kernel.as_ref(),
+        d,
+        cfg.n_features,
+        RmConfig::default().with_projection(cfg.projection),
+        &mut rng,
+    ));
+    assert!(map.is_structured());
+
+    // serve via Coordinator/NativeBackend
+    let coord = Coordinator::start(
+        Arc::new(NativeFactory::new(map.clone())),
+        CoordinatorConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 1024,
+            workers: 2,
+            intra_op_threads: 1,
+        },
+    );
+    let mut client_rng = Rng::seed_from(99);
+    for _ in 0..32 {
+        let x: Vec<f32> = (0..d).map(|_| client_rng.f32() - 0.5).collect();
+        let served = coord.submit(x.clone()).unwrap().wait().unwrap();
+        assert_eq!(served, map.transform(&x), "served features must be bit-identical");
+    }
+
+    // serialize → deserialize → transform, bit-identical (file path)
+    let dir = std::env::temp_dir().join("rfdot_structured_parity");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("map.rfdm");
+    serialize::save(&map, &path).unwrap();
+    let map2 = serialize::load(&path).unwrap();
+    assert!(map2.is_structured());
+    let batch = unit_points(7, d, 3);
+    let z1 = map.transform_batch(&batch);
+    let z2 = map2.transform_batch(&batch);
+    assert_eq!(z1, z2, "roundtripped structured map must transform bit-identically");
+    // ... and thread counts never change the result.
+    for threads in [2usize, 4, 16] {
+        assert_eq!(map2.transform_batch_threads(&batch, threads), z1);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Structured H0/1 maps keep their exact prefix and their random block
+/// riding the FWHT path end to end.
+#[test]
+fn structured_h01_prefix_stays_exact() {
+    let kernel = Polynomial::new(10, 1.0);
+    let d = 6;
+    let mut rng = Rng::seed_from(7);
+    let map = RandomMaclaurin::sample(
+        &kernel,
+        d,
+        32,
+        RmConfig::default().with_h01(true).with_projection(ProjectionKind::Structured),
+        &mut rng,
+    );
+    let x = unit_points(1, d, 8);
+    let z = map.transform(x.row(0));
+    assert_eq!(z.len(), 1 + d + 32);
+    // a_0 = 1, a_1 = 10 for (1 + t)^10.
+    assert!((z[0] - 1.0).abs() < 1e-6);
+    for j in 0..d {
+        assert!((z[1 + j] - (10.0f32).sqrt() * x.row(0)[j]).abs() < 1e-5);
+    }
+}

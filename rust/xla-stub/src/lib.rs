@@ -1,0 +1,175 @@
+//! Stub of the `xla` crate API surface rfdot uses.
+//!
+//! Host-side [`Literal`] is fully functional (the tensor marshalling
+//! tests exercise it); everything that would need the PJRT runtime
+//! ([`PjRtClient::cpu`] and the compile/execute chain behind it) returns
+//! [`Error`] so callers degrade to their "PJRT unavailable" paths.
+
+use std::fmt;
+
+/// Stub error: a message, `Display`-compatible with the real crate's
+/// error formatting at the call sites rfdot uses.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT unavailable: rfdot was built against the in-tree xla stub; \
+         point the `xla` dependency at an xla_extension build to serve artifacts"
+            .into(),
+    )
+}
+
+/// Element types a [`Literal`] can read back. Only `f32` exists in this
+/// stub (matching the manifests' `dtype: f32` contract).
+pub trait Element: Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl Element for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+/// Host-side literal: a flat `f32` buffer plus dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape (element count must be preserved).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Read the buffer back as a typed vector.
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Unpack a tuple literal. Stub literals are never tuples (they can
+    /// only come from [`Literal::vec1`]), so this always errors.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error("stub literal is not a tuple".into()))
+    }
+}
+
+/// Stub HLO module handle. Parsing requires the runtime, so
+/// construction always fails.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<std::path::Path>) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// Stub computation handle.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub device buffer (never constructed: no executable can exist).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Stub compiled executable (never constructed).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// Stub PJRT client: construction always fails, which is the single
+/// gate every rfdot PJRT path funnels through (`Engine::cpu`).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_tuple().is_err());
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let l = Literal::vec1(&[2.5]);
+        let s = l.reshape(&[]).unwrap();
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![2.5]);
+    }
+
+    #[test]
+    fn pjrt_is_unavailable() {
+        let e = match PjRtClient::cpu() {
+            Err(e) => e,
+            Ok(_) => panic!("stub client must not construct"),
+        };
+        assert!(e.to_string().contains("PJRT unavailable"));
+        assert!(HloModuleProto::from_text_file("/nope.hlo.txt").is_err());
+    }
+}

@@ -1,9 +1,15 @@
 #!/usr/bin/env bash
-# Tier-1 gate: build, tests, formatting. Run from anywhere.
+# Tier-1 gate: build, tests, lints, formatting, plus a smoke run of the
+# structured-projection bench sweep (exercises the BENCH_structured.json
+# regeneration path; --quick diverts its noisy timings to the temp dir
+# so the checked-in baseline is only overwritten by full measured
+# runs). Run from anywhere.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
 cargo build --release
 cargo test -q
+cargo clippy --all-targets -- -D warnings
 cargo fmt --check
+cargo bench --bench micro -- --quick --only structured
