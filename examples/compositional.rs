@@ -77,7 +77,7 @@ fn main() -> rfdot::Result<()> {
         RmConfig::default(),
         &mut rng,
     );
-    let z = map.transform_batch(&ds.x);
+    let z = map.transform_batch(ds.x());
     let zds = Dataset::new("rings-co", z, ds.y.clone())?;
     let composed = LinearSvm::train(&zds, LinearSvmParams::default())?;
 

@@ -60,7 +60,7 @@ fn main() -> rfdot::Result<()> {
     // ...until Random Maclaurin features linearize it.
     let k2 = rfdot::kernels::Homogeneous::new(2);
     let map = RandomMaclaurin::sample(&k2, 2, 256, RmConfig::default(), &mut rng);
-    let z = map.transform_batch(&ds.x);
+    let z = map.transform_batch(ds.x());
     let zds = Dataset::new("xor-rf", z, ds.y.clone())?;
     let lin_rf = LinearSvm::train(&zds, LinearSvmParams::default())?;
 

@@ -72,7 +72,7 @@ fn curse_of_support() {
             let n = test.len().min(1000);
             rfdot::data::Dataset::new(
                 "t",
-                test.x.slice_rows(0, n),
+                test.x().slice_rows(0, n),
                 test.y[..n].to_vec(),
             )
             .unwrap()
@@ -82,11 +82,11 @@ fn curse_of_support() {
         let (_, k_tst) = time_once(|| model.accuracy_on(&test_1k));
 
         let map = RandomMaclaurin::sample(&kernel, train.dim(), 500, RmConfig::default(), &mut rng);
-        let z_train = map.transform_batch(&train.x);
+        let z_train = map.transform_batch(train.x());
         let zds = rfdot::data::Dataset::new("z", z_train, train.y.clone()).unwrap();
         let lin = LinearSvm::train(&zds, LinearSvmParams::default()).unwrap();
         let (_, rf_tst) = time_once(|| {
-            let z = map.transform_batch(&test_1k.x);
+            let z = map.transform_batch(test_1k.x());
             lin.accuracy(&z, &test_1k.y)
         });
 

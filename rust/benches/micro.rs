@@ -245,6 +245,112 @@ fn bench_structured_sweep() {
     }
 }
 
+/// Sparse (CSR) vs dense per-input transform across sparsity levels,
+/// for the three map families with sparse fast paths. Recorded as the
+/// machine-readable baseline in `BENCH_sparse.json` at the repo root
+/// (target: ≥ 5× per-input transform speedup at ≥ 95% sparsity — the
+/// dense path burns `O(d)` on scanning zeros per factor while the CSR
+/// path touches only the `nnz` stored entries).
+fn bench_sparse_transform() {
+    println!("\n== sparse (CSR) vs dense per-input transform ==");
+    let (d, n_feat, rows) = (8192usize, 64usize, 32usize);
+    let iters = if fast() { 2 } else { 10 };
+    let kernel = Exponential::new(1.0);
+    let rm =
+        RandomMaclaurin::sample(&kernel, d, n_feat, RmConfig::default(), &mut Rng::seed_from(71));
+    let rff = RandomFourier::sample(0.5, d, n_feat, &mut Rng::seed_from(72));
+    let ts = rfdot::tensorsketch::TensorSketch::sample(2, 1.0, d, n_feat, &mut Rng::seed_from(73));
+    let maps: [(&str, &dyn FeatureMap); 3] =
+        [("maclaurin", &rm), ("fourier", &rff), ("tensorsketch", &ts)];
+
+    let sparsity_axis = [0.5f64, 0.9, 0.95, 0.99];
+    let mut table =
+        Table::new(&["map", "sparsity", "nnz/row", "dense/vec", "sparse/vec", "speedup"]);
+    // (family, sparsity, dense secs/vec, sparse secs/vec)
+    let mut samples: Vec<(&str, f64, f64, f64)> = Vec::new();
+    for &sparsity in &sparsity_axis {
+        // Synthetic batch at the target sparsity: shuffled index sets so
+        // the stored entries are spread across the row.
+        let nnz = ((d as f64) * (1.0 - sparsity)).round().max(1.0) as usize;
+        let mut rng = Rng::seed_from(74);
+        let mut x = Matrix::zeros(rows, d);
+        let mut cols: Vec<usize> = (0..d).collect();
+        for i in 0..rows {
+            rng.shuffle(&mut cols);
+            for &j in &cols[..nnz] {
+                x.set(i, j, rng.f32() - 0.5);
+            }
+        }
+        let sx = rfdot::linalg::SparseMatrix::from_dense(&x);
+        for (name, map) in maps {
+            let mut out = vec![0.0f32; map.output_dim()];
+            let dense = bench("dense", 2, iters, || {
+                for i in 0..rows {
+                    map.transform_into(x.row(i), &mut out);
+                }
+            })
+            .mean_s()
+                / rows as f64;
+            let mut out2 = vec![0.0f32; map.output_dim()];
+            let sparse = bench("sparse", 2, iters, || {
+                for i in 0..rows {
+                    map.transform_sparse_into(sx.row(i), &mut out2);
+                }
+            })
+            .mean_s()
+                / rows as f64;
+            assert_eq!(out, out2, "sparse parity violated in the bench itself");
+            table.row(&[
+                name.into(),
+                format!("{sparsity:.2}"),
+                format!("{nnz}"),
+                fmt_duration(dense),
+                fmt_duration(sparse),
+                format!("{:.2}x", dense / sparse),
+            ]);
+            samples.push((name, sparsity, dense, sparse));
+        }
+    }
+    table.print();
+
+    let json_samples = samples
+        .iter()
+        .map(|(family, sparsity, dense, sparse)| {
+            format!(
+                r#"{{"map": "{family}", "sparsity": {sparsity}, "dense_secs_per_vec": {dense:.9}, "sparse_secs_per_vec": {sparse:.9}, "speedup": {:.3}}}"#,
+                dense / sparse
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n    ");
+    // Same policy as the structured sweep: --quick runs exercise the
+    // regeneration path but divert their noisy timings to the temp dir;
+    // only full measured runs overwrite the checked-in baseline.
+    let (status, invocation, path) = if fast() {
+        (
+            "smoke",
+            "cargo bench --bench micro -- --quick --only sparse",
+            std::env::temp_dir().join("BENCH_sparse.smoke.json"),
+        )
+    } else {
+        (
+            "measured",
+            "cargo bench --bench micro -- --only sparse",
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sparse.json"),
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"sparse_sweep\",\n  \"status\": \"{status}\",\n  \
+         \"generated_by\": \"{invocation}\",\n  \
+         \"per_input_transform\": {{\"d\": {d}, \"features\": {n_feat}, \"batch\": {rows}, \
+         \"samples\": [\n    {json_samples}\n  ]}}\n}}\n"
+    );
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("   baseline recorded to {}", path.display()),
+        Err(e) => println!("   (could not write {}: {e})", path.display()),
+    }
+}
+
 fn bench_rademacher_projection() {
     println!("\n== rademacher projection: packed bits vs dense f32 ==");
     let mut table = Table::new(&["d", "rows", "packed", "dense-f32", "packed/dense"]);
@@ -504,7 +610,7 @@ fn bench_solvers() {
     );
 
     let map = RandomMaclaurin::sample(&kernel, train.dim(), 500, RmConfig::default(), &mut rng);
-    let z = map.transform_batch(&train.x);
+    let z = map.transform_batch(train.x());
     let zds = rfdot::data::Dataset::new("z", z, train.y.clone()).unwrap();
     let (lin, t) = rfdot::bench::time_once(|| {
         LinearSvm::train(&zds, LinearSvmParams::default()).unwrap()
@@ -537,10 +643,11 @@ fn main() {
         }
     }
 
-    let sections: [(&str, fn()); 9] = [
+    let sections: [(&str, fn()); 10] = [
         ("native-transform", bench_native_transform),
         ("parallel-sweep", bench_parallel_sweep),
         ("structured-sweep", bench_structured_sweep),
+        ("sparse-transform", bench_sparse_transform),
         ("rademacher-projection", bench_rademacher_projection),
         ("pjrt-execute", bench_pjrt_execute),
         ("coordinator-roundtrip", bench_coordinator_roundtrip),

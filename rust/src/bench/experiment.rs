@@ -63,7 +63,14 @@ pub fn prepare(config: &ExperimentConfig) -> Result<Prepared> {
         .ok_or_else(|| Error::Config(format!("unknown dataset {:?}", config.dataset)))?;
     let ds = surrogate.load(config.scale, config.seed);
     let mut rng = Rng::seed_from(config.seed ^ 0x5917);
-    let (train, test) = ds.split(config.train_frac, config.max_train, &mut rng);
+    let (mut train, mut test) = ds.split(config.train_frac, config.max_train, &mut rng);
+    if config.sparse {
+        // Carry the splits in CSR so every transform below runs the
+        // O(D·nnz) fast paths. Accuracies are unchanged by the sparse
+        // parity contract; only the cost model moves.
+        train = train.into_sparse();
+        test = test.into_sparse();
+    }
     // The paper's sigma heuristic: mean pairwise distance on train data.
     let sigma2_hint = if matches!(config.kernel, KernelSpec::Exponential { .. }) {
         let d = train.mean_pairwise_distance(2000.min(train.len() * 2), &mut rng);
@@ -116,7 +123,7 @@ pub fn run_random_features(
         rm_config,
         &mut rng,
     );
-    let z_train = map.transform_batch(&prep.train.x);
+    let z_train = crate::features::transform_dataset(&map, &prep.train);
     let z_ds = Dataset::new("z", z_train, prep.train.y.clone()).expect("uniform shapes");
     // LIBLINEAR's default iteration budget is larger than ours; give the
     // DCD solver enough epochs that the RF column is not convergence-
@@ -129,7 +136,7 @@ pub fn run_random_features(
     let train_s = sw.elapsed_secs();
 
     let sw = Stopwatch::start();
-    let z_test = map.transform_batch(&prep.test.x);
+    let z_test = crate::features::transform_dataset(&map, &prep.test);
     let accuracy = model.accuracy(&z_test, &prep.test.y);
     let test_s = sw.elapsed_secs();
 
@@ -243,6 +250,20 @@ mod tests {
     fn unknown_dataset_is_an_error() {
         let cfg = ExperimentConfig { dataset: "mystery".into(), ..tiny_config() };
         assert!(prepare(&cfg).is_err());
+    }
+
+    #[test]
+    fn sparse_row_equals_dense_row_exactly() {
+        // The sparse parity contract, end to end through Table 1: CSR
+        // splits feed the O(D·nnz) paths, yet every accuracy must equal
+        // the dense pipeline's bit for bit (same transforms, same SVMs).
+        let dense_cfg = tiny_config();
+        let sparse_cfg = ExperimentConfig { sparse: true, ..tiny_config() };
+        let dense_row = run_row(&dense_cfg, 128, 32).unwrap();
+        let sparse_row = run_row(&sparse_cfg, 128, 32).unwrap();
+        assert_eq!(dense_row.exact.accuracy, sparse_row.exact.accuracy);
+        assert_eq!(dense_row.rf.accuracy, sparse_row.rf.accuracy);
+        assert_eq!(dense_row.h01.accuracy, sparse_row.h01.accuracy);
     }
 
     #[test]

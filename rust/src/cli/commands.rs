@@ -104,7 +104,10 @@ pub fn quickstart(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// `rfdot gram-error` — one Figure-1 measurement.
+/// `rfdot gram-error` — one Figure-1 measurement. `--sparse` routes the
+/// feature transforms through the CSR fast paths (identical numbers by
+/// the sparse parity contract; the knob exercises the pipeline and lets
+/// `--sparse`/dense timings be compared on one command).
 pub fn gram_error(args: &mut Args) -> Result<()> {
     let kernel_spec = KernelSpec::parse(&args.str_flag("kernel", "poly:10:1"))?;
     let d = args.usize_flag("d", 16)?;
@@ -114,6 +117,7 @@ pub fn gram_error(args: &mut Args) -> Result<()> {
     let h01 = args.switch("h01");
     let seed = args.num_flag("seed", 7.0)? as u64;
     let projection = parse_projection(args)?;
+    let sparse = args.switch("sparse");
     apply_threads(args)?;
     warn_unknown(args);
 
@@ -124,6 +128,7 @@ pub fn gram_error(args: &mut Args) -> Result<()> {
         rows.push(crate::prop::gens::unit_vec(&mut rng, d));
     }
     let x = Matrix::from_rows(&rows)?;
+    let sx = sparse.then(|| crate::linalg::SparseMatrix::from_dense(&x));
     let exact = gram(kernel.as_ref(), &x);
     let mut errs = Vec::new();
     for _ in 0..runs {
@@ -134,13 +139,17 @@ pub fn gram_error(args: &mut Args) -> Result<()> {
             RmConfig::default().with_h01(h01).with_projection(projection),
             &mut rng,
         );
-        let approx = feature_gram(&map, &x);
+        let approx = match &sx {
+            Some(sx) => crate::features::feature_gram_sparse(&map, sx),
+            None => feature_gram(&map, &x),
+        };
         errs.push(mean_abs_gram_error(&exact, &approx));
     }
     println!(
-        "kernel={} d={d} D={n_feat} h01={h01} projection={} runs={runs}: err = {:.5} ± {:.5}",
+        "kernel={} d={d} D={n_feat} h01={h01} projection={} storage={} runs={runs}: err = {:.5} ± {:.5}",
         kernel.name(),
         projection.as_str(),
+        if sparse { "sparse" } else { "dense" },
         crate::linalg::mean(&errs),
         crate::linalg::stddev(&errs),
     );
@@ -157,6 +166,7 @@ pub fn table1_row(args: &mut Args) -> Result<()> {
         seed: args.num_flag("seed", 42.0)? as u64,
         threads: args.usize_flag("threads", 0)?,
         projection: parse_projection(args)?,
+        sparse: args.switch("sparse"),
         ..Default::default()
     };
     let d_rf = args.usize_flag("features", 500)?;
@@ -211,6 +221,8 @@ pub fn transform(args: &mut Args) -> Result<()> {
     apply_threads(args)?;
     warn_unknown(args);
 
+    // parse_file yields CSR storage, so the batch transform below runs
+    // the O(D·nnz) sparse fast path automatically.
     let mut ds = libsvm::parse_file(&input, None)?;
     ds.normalize_rows();
     let kernel = kernel_spec.build(1.0);
@@ -223,7 +235,7 @@ pub fn transform(args: &mut Args) -> Result<()> {
         &mut rng,
     );
     let sw = Stopwatch::start();
-    let z = map.transform_batch(&ds.x);
+    let z = crate::features::transform_dataset(&map, &ds);
     let dt = sw.elapsed_secs();
     let out_ds = crate::data::Dataset::new(ds.name.clone(), z, ds.y.clone())?;
     let text = libsvm::to_string(&out_ds);
@@ -256,6 +268,9 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let max_wait_ms = args.num_flag("max-wait-ms", 2.0)?;
     let seed = args.num_flag("seed", 7.0)? as u64;
     let projection = parse_projection(args)?;
+    // Clients send CSR (index, value) pairs via `submit_sparse` — the
+    // LIBSVM-shaped wire format — instead of dense vectors.
+    let sparse = args.switch("sparse");
     // For serving, --threads means intra-op threads per worker batch
     // (the native backend's data-parallel fan-out).
     let intra_op_threads = args.usize_flag("threads", 1)?;
@@ -315,8 +330,9 @@ pub fn serve(args: &mut Args) -> Result<()> {
     ));
 
     println!(
-        "serving {requests} requests from {clients} clients (backend: {})",
-        if native { "native" } else { "pjrt" }
+        "serving {requests} requests from {clients} clients (backend: {}, payload: {})",
+        if native { "native" } else { "pjrt" },
+        if sparse { "sparse" } else { "dense" }
     );
     let sw = Stopwatch::start();
     let per_client = requests / clients;
@@ -328,8 +344,17 @@ pub fn serve(args: &mut Args) -> Result<()> {
             let mut ok = 0usize;
             let mut rejected = 0usize;
             for _ in 0..per_client {
-                let x: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
-                match coord.submit(x) {
+                let submitted = if sparse {
+                    // ~1/8 density synthetic payload: ascending indices,
+                    // the LIBSVM-shaped wire format.
+                    let indices: Vec<u32> = (0..d as u32).step_by(8).collect();
+                    let values: Vec<f32> =
+                        indices.iter().map(|_| rng.f32() - 0.5).collect();
+                    coord.submit_sparse(indices, values)
+                } else {
+                    coord.submit((0..d).map(|_| rng.f32() - 0.5).collect())
+                };
+                match submitted {
                     Ok(t) => {
                         if t.wait().is_ok() {
                             ok += 1;
@@ -403,6 +428,43 @@ mod tests {
     #[test]
     fn rejects_unknown_projection() {
         assert!(gram_error(&mut argv(&["gram-error", "--projection", "sparse"])).is_err());
+    }
+
+    #[test]
+    fn gram_error_sparse_runs_small() {
+        gram_error(&mut argv(&[
+            "gram-error", "--kernel", "poly:3:1", "--d", "6", "--features", "64", "--points",
+            "20", "--runs", "2", "--sparse",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn serve_native_sparse_smoke() {
+        serve(&mut argv(&[
+            "serve", "--native", "--sparse", "--requests", "40", "--clients", "2", "--workers",
+            "1",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn table1_row_sparse_smoke() {
+        table1_row(&mut argv(&[
+            "table1-row",
+            "--dataset",
+            "nursery",
+            "--kernel",
+            "poly:3:1",
+            "--scale",
+            "0.02",
+            "--features",
+            "64",
+            "--h01-features",
+            "32",
+            "--sparse",
+        ]))
+        .unwrap();
     }
 
     #[test]

@@ -121,6 +121,11 @@ pub struct ExperimentConfig {
     /// stacks or the FWHT-backed [`crate::structured`] HD blocks
     /// (JSON: `"projection": "dense" | "structured"`).
     pub projection: ProjectionKind,
+    /// Carry the train/test splits in CSR storage and route transforms
+    /// through the `O(D·nnz)` sparse fast paths (JSON: `"sparse"`).
+    /// Results are unchanged by the crate's sparse parity contract;
+    /// only the cost model moves.
+    pub sparse: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -138,6 +143,7 @@ impl Default for ExperimentConfig {
             max_train: 20_000,
             threads: 0,
             projection: ProjectionKind::Dense,
+            sparse: false,
         }
     }
 }
@@ -182,6 +188,9 @@ impl ExperimentConfig {
         }
         if let Some(s) = v.get("projection").and_then(Json::as_str) {
             cfg.projection = ProjectionKind::parse(s)?;
+        }
+        if let Some(b) = v.get("sparse").and_then(Json::as_bool) {
+            cfg.sparse = b;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -289,6 +298,9 @@ mod tests {
             ExperimentConfig::from_json(r#"{"projection": "structured"}"#).unwrap();
         assert_eq!(structured.projection, ProjectionKind::Structured);
         assert!(ExperimentConfig::from_json(r#"{"projection": "sparse"}"#).is_err());
+        assert!(!cfg.sparse);
+        let sparse = ExperimentConfig::from_json(r#"{"sparse": true}"#).unwrap();
+        assert!(sparse.sparse);
     }
 
     #[test]

@@ -27,6 +27,11 @@
 //!   one reply, including on worker build failure, backend failure or
 //!   shutdown drain; the tests in this module drive random schedules
 //!   against that invariant.
+//! * **Sparse submissions** — [`Coordinator::submit_sparse`] accepts
+//!   CSR (index, value) pairs; they scatter into the same zeroed batch
+//!   rows dense submissions copy into, so batching, padding and the
+//!   exactly-once contract are shared and the reply equals the dense
+//!   submission of the densified vector.
 
 pub mod backend;
 
@@ -76,8 +81,31 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// One request's feature payload: a dense vector or CSR index/value
+/// pairs. Both scatter into the same batch matrix row, so the backend
+/// (and the reply) cannot tell them apart — sparse submission is a
+/// wire-format optimization, not a semantic fork.
+enum Payload {
+    Dense(Vec<f32>),
+    Sparse { indices: Vec<u32>, values: Vec<f32> },
+}
+
+impl Payload {
+    /// Write the payload into a zeroed batch row.
+    fn scatter_into(&self, row: &mut [f32]) {
+        match self {
+            Payload::Dense(x) => row.copy_from_slice(x),
+            Payload::Sparse { indices, values } => {
+                for (&k, &v) in indices.iter().zip(values) {
+                    row[k as usize] = v;
+                }
+            }
+        }
+    }
+}
+
 struct Job {
-    x: Vec<f32>,
+    x: Payload,
     submitted: Instant,
     reply: SyncSender<Result<Vec<f32>>>,
 }
@@ -173,12 +201,45 @@ impl Coordinator {
                 format!("{}", x.len()),
             ));
         }
+        self.submit_payload(Payload::Dense(x))
+    }
+
+    /// Submit one CSR vector as (index, value) pairs — indices strictly
+    /// ascending and `< input_dim` (validated, like LIBSVM rows). The
+    /// request rides the same queue, batching, padding and exactly-once
+    /// reply machinery as [`Coordinator::submit`]; the reply equals the
+    /// dense submission of the densified vector.
+    pub fn submit_sparse(&self, indices: Vec<u32>, values: Vec<f32>) -> Result<Ticket> {
+        if indices.len() != values.len() {
+            return Err(Error::shape(
+                format!("{} indices", indices.len()),
+                format!("{} values", values.len()),
+            ));
+        }
+        for (p, &k) in indices.iter().enumerate() {
+            if k as usize >= self.spec.input_dim {
+                return Err(Error::Data(format!(
+                    "sparse index {k} out of range (dim = {})",
+                    self.spec.input_dim
+                )));
+            }
+            if p > 0 && indices[p - 1] >= k {
+                return Err(Error::Data(format!(
+                    "sparse indices must be strictly ascending ({} then {k})",
+                    indices[p - 1]
+                )));
+            }
+        }
+        self.submit_payload(Payload::Sparse { indices, values })
+    }
+
+    fn submit_payload(&self, payload: Payload) -> Result<Ticket> {
         let tx = self
             .submit_tx
             .as_ref()
             .ok_or_else(|| Error::Coordinator("coordinator is shut down".into()))?;
         let (reply_tx, reply_rx) = sync_channel(1);
-        let job = Job { x, submitted: Instant::now(), reply: reply_tx };
+        let job = Job { x: payload, submitted: Instant::now(), reply: reply_tx };
         match tx.try_send(job) {
             Ok(()) => {
                 self.stats.submitted.fetch_add(1, Ordering::Relaxed);
@@ -294,7 +355,8 @@ fn worker_loop(
         stats.pad_slots.fetch_add((padded - n) as u64, Ordering::Relaxed);
         let mut x = crate::linalg::Matrix::zeros(padded, spec.input_dim);
         for (i, job) in batch.iter().enumerate() {
-            x.row_mut(i).copy_from_slice(&job.x);
+            // Rows start zeroed, so sparse payloads only scatter.
+            job.x.scatter_into(x.row_mut(i));
         }
         match backend.run_batch(&x) {
             Ok(out) => {
@@ -387,6 +449,97 @@ mod tests {
         let (factory, _) = native_factory(4, 8);
         let coord = Coordinator::start(factory, CoordinatorConfig::default());
         assert!(coord.submit(vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn sparse_submit_matches_dense_submit() {
+        // submit_sparse rides the same machinery: the reply must equal
+        // the dense submission of the densified vector, exactly.
+        let (factory, map) = native_factory(6, 24);
+        let coord = Coordinator::start(factory, CoordinatorConfig::default());
+        let indices = vec![0u32, 2, 5];
+        let values = vec![0.4f32, -0.7, 0.25];
+        let mut dense = vec![0.0f32; 6];
+        for (&k, &v) in indices.iter().zip(&values) {
+            dense[k as usize] = v;
+        }
+        let zs = coord.submit_sparse(indices, values).unwrap().wait().unwrap();
+        let zd = coord.transform(dense.clone()).unwrap();
+        assert_eq!(zs, zd);
+        assert_eq!(zs, map.transform(&dense));
+        // The empty sparse vector is the zero vector.
+        let z0 = coord.submit_sparse(vec![], vec![]).unwrap().wait().unwrap();
+        assert_eq!(z0, map.transform(&[0.0f32; 6]));
+    }
+
+    #[test]
+    fn sparse_submit_validates_indices() {
+        let (factory, _) = native_factory(4, 8);
+        let coord = Coordinator::start(factory, CoordinatorConfig::default());
+        // Length mismatch.
+        assert!(coord.submit_sparse(vec![0], vec![]).is_err());
+        // Out of range.
+        assert!(coord.submit_sparse(vec![4], vec![1.0]).is_err());
+        // Duplicate / descending.
+        assert!(coord.submit_sparse(vec![1, 1], vec![1.0, 2.0]).is_err());
+        assert!(coord.submit_sparse(vec![2, 0], vec![1.0, 2.0]).is_err());
+        // None of the rejects consumed a queue slot.
+        assert_eq!(coord.stats().submitted.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn pad_accounting_balances_for_every_ragged_tail() {
+        // Property-style satellite: against a fixed-shape backend, drive
+        // bursts of every size 1..=max_batch and check that (a) each
+        // reply is the echo of its own input (reply slicing is correct
+        // whatever the padding), and (b) the metered pad slots balance
+        // exactly: pad_slots == batches·B − batched_items, whatever
+        // batch boundaries the scheduler happened to pick.
+        struct Echo;
+        impl Backend for Echo {
+            fn spec(&self) -> BackendSpec {
+                BackendSpec { input_dim: 3, output_dim: 3, max_batch: 4, fixed_batch: true }
+            }
+            fn run_batch(&self, x: &crate::linalg::Matrix) -> Result<crate::linalg::Matrix> {
+                assert_eq!(x.rows(), 4, "fixed batch must always be padded to full size");
+                Ok(x.clone())
+            }
+        }
+        let b = 4usize;
+        for tail in 1..=b {
+            let factory = Arc::new(ClosureFactory {
+                spec: BackendSpec { input_dim: 3, output_dim: 3, max_batch: b, fixed_batch: true },
+                f: || Ok(Box::new(Echo) as Box<dyn Backend>),
+            });
+            let mut coord = Coordinator::start(
+                factory,
+                CoordinatorConfig {
+                    max_batch: b,
+                    max_wait: Duration::from_millis(5),
+                    workers: 1,
+                    ..Default::default()
+                },
+            );
+            let inputs: Vec<Vec<f32>> =
+                (0..tail).map(|i| vec![i as f32, 10.0 + i as f32, -(i as f32)]).collect();
+            let tickets: Vec<_> =
+                inputs.iter().map(|x| coord.submit(x.clone()).unwrap()).collect();
+            for (x, t) in inputs.iter().zip(tickets) {
+                assert_eq!(&t.wait().unwrap(), x, "tail {tail}: reply must echo its own input");
+            }
+            coord.shutdown();
+            let stats = coord.stats();
+            let batches = stats.batches.load(Ordering::Relaxed);
+            let items = stats.batched_items.load(Ordering::Relaxed);
+            let pads = stats.pad_slots.load(Ordering::Relaxed);
+            assert_eq!(items, tail as u64, "tail {tail}");
+            assert!(batches >= 1, "tail {tail}");
+            assert_eq!(
+                pads,
+                batches * b as u64 - items,
+                "tail {tail}: pad accounting must balance ({batches} batches, {items} items)"
+            );
+        }
     }
 
     #[test]

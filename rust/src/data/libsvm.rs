@@ -3,9 +3,20 @@
 //! Lines look like `+1 3:0.5 7:1.25 # comment`. Indices are 1-based.
 //! This lets the benchmark harness run on the *real* UCI datasets when a
 //! copy is available, instead of the synthetic surrogates.
+//!
+//! The format is sparse and so is the result: parsing goes **straight
+//! into CSR** ([`crate::linalg::SparseMatrix`], via
+//! [`crate::data::Dataset::new_sparse`]) with no densify step, so the
+//! downstream feature maps and the linear SVM run their `O(nnz)` fast
+//! paths. Duplicate feature indices on a line (`3:1 3:2`) are a parse
+//! error — LIBSVM requires unique ascending indices, and silently
+//! keeping the last occurrence (what the old dense `Matrix::set` path
+//! did) corrupts data without a trace. Out-of-order indices are
+//! accepted and sorted (several published dumps are unsorted), but
+//! duplicates never are.
 
 use super::Dataset;
-use crate::linalg::Matrix;
+use crate::linalg::SparseMatrix;
 use crate::{Error, Result};
 use std::path::Path;
 
@@ -14,11 +25,8 @@ use std::path::Path;
 /// deterministic threshold keeps runs reproducible). If `dim` is `None`
 /// the dimensionality is the largest index seen.
 pub fn parse_str(name: &str, text: &str, dim: Option<usize>) -> Result<Dataset> {
-    struct Row {
-        label: f32,
-        feats: Vec<(usize, f32)>,
-    }
-    let mut rows: Vec<Row> = Vec::new();
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut y: Vec<f32> = Vec::new();
     let mut max_idx = 0usize;
 
     for (lineno, raw) in text.lines().enumerate() {
@@ -36,7 +44,7 @@ pub fn parse_str(name: &str, text: &str, dim: Option<usize>) -> Result<Dataset> 
             .parse()
             .map_err(|_| Error::Data(format!("line {}: bad label {label_tok:?}", lineno + 1)))?;
         let label = if label_val > 0.0 { 1.0 } else { -1.0 };
-        let mut feats = Vec::new();
+        let mut feats: Vec<(u32, f32)> = Vec::new();
         for tok in it {
             let (idx_s, val_s) = tok
                 .split_once(':')
@@ -50,10 +58,24 @@ pub fn parse_str(name: &str, text: &str, dim: Option<usize>) -> Result<Dataset> 
             let val: f32 = val_s
                 .parse()
                 .map_err(|_| Error::Data(format!("line {}: bad value {val_s:?}", lineno + 1)))?;
+            let col = u32::try_from(idx - 1).map_err(|_| {
+                Error::Data(format!("line {}: feature index {idx} too large", lineno + 1))
+            })?;
             max_idx = max_idx.max(idx);
-            feats.push((idx - 1, val));
+            feats.push((col, val));
         }
-        rows.push(Row { label, feats });
+        feats.sort_by_key(|&(j, _)| j);
+        for w in feats.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(Error::Data(format!(
+                    "line {}: duplicate feature index {} (LIBSVM requires unique indices)",
+                    lineno + 1,
+                    w[0].0 + 1
+                )));
+            }
+        }
+        rows.push(feats);
+        y.push(label);
     }
 
     let d = match dim {
@@ -66,15 +88,8 @@ pub fn parse_str(name: &str, text: &str, dim: Option<usize>) -> Result<Dataset> 
         None => max_idx,
     };
 
-    let mut x = Matrix::zeros(rows.len(), d);
-    let mut y = Vec::with_capacity(rows.len());
-    for (i, row) in rows.iter().enumerate() {
-        for &(j, v) in &row.feats {
-            x.set(i, j, v);
-        }
-        y.push(row.label);
-    }
-    Dataset::new(name, x, y)
+    let x = SparseMatrix::from_rows(d, &rows)?;
+    Dataset::new_sparse(name, x, y)
 }
 
 /// Parse a LIBSVM-format file from disk.
@@ -89,14 +104,27 @@ pub fn parse_file(path: impl AsRef<Path>, dim: Option<usize>) -> Result<Dataset>
 }
 
 /// Serialize a dataset back to LIBSVM format (round-trip support for
-/// exporting the synthetic surrogates).
+/// exporting the synthetic surrogates). Sparse storage streams its
+/// stored entries directly; dense storage scans for nonzeros.
 pub fn to_string(ds: &Dataset) -> String {
     let mut out = String::new();
     for i in 0..ds.len() {
         out.push_str(if ds.y[i] > 0.0 { "+1" } else { "-1" });
-        for (j, &v) in ds.x.row(i).iter().enumerate() {
-            if v != 0.0 {
-                out.push_str(&format!(" {}:{}", j + 1, v));
+        match ds.storage() {
+            crate::data::Storage::Sparse(s) => {
+                let row = s.row(i);
+                for (&j, &v) in row.indices.iter().zip(row.values) {
+                    if v != 0.0 {
+                        out.push_str(&format!(" {}:{}", j + 1, v));
+                    }
+                }
+            }
+            crate::data::Storage::Dense(m) => {
+                for (j, &v) in m.row(i).iter().enumerate() {
+                    if v != 0.0 {
+                        out.push_str(&format!(" {}:{}", j + 1, v));
+                    }
+                }
             }
         }
         out.push('\n');
@@ -113,9 +141,20 @@ mod tests {
         let ds = parse_str("t", "+1 1:0.5 3:2\n-1 2:1 # tail comment\n\n", None).unwrap();
         assert_eq!(ds.len(), 2);
         assert_eq!(ds.dim(), 3);
-        assert_eq!(ds.x.row(0), &[0.5, 0.0, 2.0]);
-        assert_eq!(ds.x.row(1), &[0.0, 1.0, 0.0]);
+        assert_eq!(ds.x().row(0), &[0.5, 0.0, 2.0]);
+        assert_eq!(ds.x().row(1), &[0.0, 1.0, 0.0]);
         assert_eq!(ds.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn parses_straight_into_csr() {
+        // The tentpole contract: no densify step, nnz is the stored count.
+        let ds = parse_str("t", "+1 2:1 9:0.5\n-1 1:-3\n", None).unwrap();
+        assert!(ds.is_sparse());
+        let s = ds.sparse().unwrap();
+        assert_eq!(s.nnz(), 3);
+        assert_eq!(s.cols(), 9);
+        assert_eq!(s.row(0).indices, &[1, 8]);
     }
 
     #[test]
@@ -138,6 +177,24 @@ mod tests {
         assert!(parse_str("t", "+1 1=5\n", None).is_err());
         assert!(parse_str("t", "+1 x:5\n", None).is_err());
         assert!(parse_str("t", "+1 1:zz\n", None).is_err());
+        // Indices beyond the u32 column space must error, not wrap
+        // (4294967297 - 1 would silently truncate to column 0).
+        let err = parse_str("t", "+1 4294967297:1\n", None).unwrap_err();
+        assert!(err.to_string().contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicate_indices() {
+        // Regression: `3:1 3:2` used to silently keep the last value via
+        // Matrix::set; LIBSVM requires unique indices, so it is a parse
+        // error now.
+        let err = parse_str("t", "+1 3:1 3:2\n", None).unwrap_err();
+        assert!(err.to_string().contains("duplicate feature index 3"), "{err}");
+        // Even duplicates that agree on the value are rejected.
+        assert!(parse_str("t", "+1 1:1 2:5 2:5\n", None).is_err());
+        // Out-of-order (but unique) indices are sorted, not rejected.
+        let ds = parse_str("t", "+1 3:3 1:1\n", None).unwrap();
+        assert_eq!(ds.x().row(0), &[1.0, 0.0, 3.0]);
     }
 
     #[test]
@@ -146,7 +203,9 @@ mod tests {
         let ds = parse_str("t", src, None).unwrap();
         let back = to_string(&ds);
         let ds2 = parse_str("t", &back, None).unwrap();
-        assert_eq!(ds.x, ds2.x);
+        assert_eq!(ds.x(), ds2.x());
         assert_eq!(ds.y, ds2.y);
+        // Dense storage serializes identically.
+        assert_eq!(to_string(&ds.clone().into_dense()), back);
     }
 }

@@ -11,36 +11,162 @@
 //! Matching the paper's protocol (§6.3): vectors are L2-normalized with
 //! constants learnt on the training split, 60% of the data (capped at
 //! 20 000) is used for training, and non-binary problems are binarized.
+//!
+//! # Dense and sparse storage
+//!
+//! A [`Dataset`] owns its features through the [`Storage`] enum: either
+//! a dense row-major [`Matrix`] (the synthetic surrogates) or a CSR
+//! [`SparseMatrix`] (what [`libsvm`] now parses *directly*, with no
+//! densify step — the real UCI encodings are mostly zeros). Consumers
+//! that understand sparsity dispatch on [`Dataset::storage`] (the
+//! feature maps' `transform_batch_sparse`, the sparse dual coordinate
+//! descent in [`crate::svm::linear`]); everything else calls
+//! [`Dataset::x`], which returns the dense matrix directly or lazily
+//! materializes (and caches) a dense view of the CSR storage. The two
+//! storages are interchangeable by contract: every sparse fast path in
+//! the crate produces outputs equal to the dense path on the densified
+//! data (`rust/tests/sparse_parity.rs`), so [`Dataset::into_sparse`] /
+//! [`Dataset::into_dense`] change cost, never results.
 
 pub mod libsvm;
 pub mod synthetic;
 
 pub use synthetic::{SyntheticSpec, Teacher, UciSurrogate};
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SparseMatrix};
 use crate::rng::Rng;
 use crate::{Error, Result};
+use std::sync::OnceLock;
+
+/// Feature storage: dense row-major or CSR.
+#[derive(Clone, Debug)]
+pub enum Storage {
+    /// `n × d` dense matrix (row per example).
+    Dense(Matrix),
+    /// CSR matrix with the same logical shape.
+    Sparse(SparseMatrix),
+}
+
+impl Storage {
+    /// Number of examples.
+    pub fn rows(&self) -> usize {
+        match self {
+            Storage::Dense(m) => m.rows(),
+            Storage::Sparse(s) => s.rows(),
+        }
+    }
+
+    /// Feature dimensionality.
+    pub fn cols(&self) -> usize {
+        match self {
+            Storage::Dense(m) => m.cols(),
+            Storage::Sparse(s) => s.cols(),
+        }
+    }
+}
 
 /// A labeled binary classification dataset (labels ±1).
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct Dataset {
     pub name: String,
-    /// `n × d` feature matrix (row per example).
-    pub x: Matrix,
+    storage: Storage,
+    /// Lazily materialized dense view of sparse storage (never used for
+    /// dense storage). Reset by every mutating method.
+    dense_view: OnceLock<Matrix>,
     /// Labels in `{-1.0, +1.0}`.
     pub y: Vec<f32>,
 }
 
+impl Clone for Dataset {
+    fn clone(&self) -> Self {
+        // The dense-view cache is cheap to rebuild; don't copy it.
+        Dataset {
+            name: self.name.clone(),
+            storage: self.storage.clone(),
+            dense_view: OnceLock::new(),
+            y: self.y.clone(),
+        }
+    }
+}
+
 impl Dataset {
-    /// Construct with validation.
+    /// Construct with validation (dense storage).
     pub fn new(name: impl Into<String>, x: Matrix, y: Vec<f32>) -> Result<Self> {
-        if x.rows() != y.len() {
-            return Err(Error::shape(format!("{} labels", x.rows()), format!("{}", y.len())));
+        Self::with_storage(name, Storage::Dense(x), y)
+    }
+
+    /// Construct with validation (CSR storage).
+    pub fn new_sparse(name: impl Into<String>, x: SparseMatrix, y: Vec<f32>) -> Result<Self> {
+        Self::with_storage(name, Storage::Sparse(x), y)
+    }
+
+    /// Construct from any [`Storage`], validating labels.
+    pub fn with_storage(name: impl Into<String>, storage: Storage, y: Vec<f32>) -> Result<Self> {
+        if storage.rows() != y.len() {
+            return Err(Error::shape(
+                format!("{} labels", storage.rows()),
+                format!("{}", y.len()),
+            ));
         }
         if let Some(bad) = y.iter().find(|&&v| v != 1.0 && v != -1.0) {
             return Err(Error::Data(format!("label {bad} not in {{-1, +1}}")));
         }
-        Ok(Dataset { name: name.into(), x, y })
+        Ok(Dataset { name: name.into(), storage, dense_view: OnceLock::new(), y })
+    }
+
+    /// The feature storage (dispatch point for sparse-aware consumers).
+    pub fn storage(&self) -> &Storage {
+        &self.storage
+    }
+
+    /// The CSR storage, if this dataset is sparse.
+    pub fn sparse(&self) -> Option<&SparseMatrix> {
+        match &self.storage {
+            Storage::Sparse(s) => Some(s),
+            Storage::Dense(_) => None,
+        }
+    }
+
+    /// True when the storage is CSR.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.storage, Storage::Sparse(_))
+    }
+
+    /// Dense feature matrix: the storage itself for dense datasets, a
+    /// lazily materialized (cached) view for sparse ones. Sparse-aware
+    /// hot paths should dispatch on [`Dataset::storage`] instead.
+    pub fn x(&self) -> &Matrix {
+        match &self.storage {
+            Storage::Dense(m) => m,
+            Storage::Sparse(s) => self.dense_view.get_or_init(|| s.to_dense()),
+        }
+    }
+
+    /// Stored nonzero entries (counted for dense storage).
+    pub fn nnz(&self) -> usize {
+        match &self.storage {
+            Storage::Dense(m) => m.as_slice().iter().filter(|&&v| v != 0.0).count(),
+            Storage::Sparse(s) => s.nnz(),
+        }
+    }
+
+    /// Convert to CSR storage (no-op if already sparse). Results are
+    /// unchanged by contract; only the cost model moves to `O(nnz)`.
+    pub fn into_sparse(self) -> Dataset {
+        let storage = match self.storage {
+            Storage::Dense(m) => Storage::Sparse(SparseMatrix::from_dense(&m)),
+            s @ Storage::Sparse(_) => s,
+        };
+        Dataset { name: self.name, storage, dense_view: OnceLock::new(), y: self.y }
+    }
+
+    /// Convert to dense storage (no-op if already dense).
+    pub fn into_dense(self) -> Dataset {
+        let storage = match self.storage {
+            Storage::Sparse(s) => Storage::Dense(s.to_dense()),
+            d @ Storage::Dense(_) => d,
+        };
+        Dataset { name: self.name, storage, dense_view: OnceLock::new(), y: self.y }
     }
 
     pub fn len(&self) -> usize {
@@ -52,7 +178,7 @@ impl Dataset {
     }
 
     pub fn dim(&self) -> usize {
-        self.x.cols()
+        self.storage.cols()
     }
 
     /// Fraction of positive labels.
@@ -65,28 +191,48 @@ impl Dataset {
 
     /// L2-normalize every row in place (the paper's protocol for
     /// unbounded kernels; puts the data on the unit sphere so `R = 1`).
+    /// Sparse rows scale their stored values by the same `1/‖row‖`
+    /// factor the dense path uses (the norm is computed with the dense
+    /// path's lane structure via [`crate::linalg::SparseRow::norm2`]),
+    /// so both storages normalize to equal values.
     pub fn normalize_rows(&mut self) {
-        for i in 0..self.x.rows() {
-            crate::linalg::normalize(self.x.row_mut(i));
+        match &mut self.storage {
+            Storage::Dense(m) => {
+                for i in 0..m.rows() {
+                    crate::linalg::normalize(m.row_mut(i));
+                }
+            }
+            Storage::Sparse(s) => {
+                for i in 0..s.rows() {
+                    let n = s.row(i).norm2();
+                    if n > 0.0 {
+                        crate::linalg::scale(1.0 / n, s.row_values_mut(i));
+                    }
+                }
+            }
         }
+        self.dense_view = OnceLock::new();
     }
 
     /// Random shuffled train/test split: `train_frac` of the data, with
     /// the train side capped at `max_train` examples (paper: 60%, cap
-    /// 20 000).
+    /// 20 000). The shuffle consumes the RNG identically for both
+    /// storages, and the split preserves the storage kind.
     pub fn split(&self, train_frac: f64, max_train: usize, rng: &mut Rng) -> (Dataset, Dataset) {
         let n = self.len();
         let mut idx: Vec<usize> = (0..n).collect();
         rng.shuffle(&mut idx);
         let n_train = ((n as f64 * train_frac) as usize).min(max_train).min(n);
         let take = |ids: &[usize]| {
-            let rows: Vec<Vec<f32>> = ids.iter().map(|&i| self.x.row(i).to_vec()).collect();
+            let storage = match &self.storage {
+                Storage::Dense(m) => {
+                    let rows: Vec<Vec<f32>> = ids.iter().map(|&i| m.row(i).to_vec()).collect();
+                    Storage::Dense(Matrix::from_rows(&rows).expect("rows are uniform"))
+                }
+                Storage::Sparse(s) => Storage::Sparse(s.select_rows(ids)),
+            };
             let y: Vec<f32> = ids.iter().map(|&i| self.y[i]).collect();
-            Dataset {
-                name: self.name.clone(),
-                x: Matrix::from_rows(&rows).expect("rows are uniform"),
-                y,
-            }
+            Dataset { name: self.name.clone(), storage, dense_view: OnceLock::new(), y }
         };
         (take(&idx[..n_train]), take(&idx[n_train..]))
     }
@@ -97,16 +243,22 @@ impl Dataset {
         if n >= self.len() {
             return;
         }
-        self.x = self.x.slice_rows(0, n);
+        self.storage = match &self.storage {
+            Storage::Dense(m) => Storage::Dense(m.slice_rows(0, n)),
+            Storage::Sparse(s) => Storage::Sparse(s.slice_rows(0, n)),
+        };
+        self.dense_view = OnceLock::new();
         self.y.truncate(n);
     }
 
     /// The paper's σ heuristic: mean pairwise Euclidean distance over the
-    /// (training) data, estimated from `pairs` random pairs.
+    /// (training) data, estimated from `pairs` random pairs. Uses the
+    /// dense view (an estimation helper, not a hot path).
     pub fn mean_pairwise_distance(&self, pairs: usize, rng: &mut Rng) -> f64 {
         if self.len() < 2 {
             return 1.0;
         }
+        let x = self.x();
         let mut acc = 0.0;
         for _ in 0..pairs {
             let i = rng.below(self.len() as u64) as usize;
@@ -114,7 +266,7 @@ impl Dataset {
             while j == i {
                 j = rng.below(self.len() as u64) as usize;
             }
-            let (a, b) = (self.x.row(i), self.x.row(j));
+            let (a, b) = (x.row(i), x.row(j));
             let d2: f32 = a.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum();
             acc += (d2 as f64).sqrt();
         }
@@ -143,6 +295,10 @@ mod tests {
         assert!(Dataset::new("a", x.clone(), vec![1.0]).is_err());
         assert!(Dataset::new("b", x.clone(), vec![1.0, 0.5]).is_err());
         assert!(Dataset::new("c", x, vec![1.0, -1.0]).is_ok());
+        // Sparse constructor validates the same invariants.
+        let s = SparseMatrix::from_rows(2, &[vec![(0, 1.0)], vec![(1, -2.0)]]).unwrap();
+        assert!(Dataset::new_sparse("d", s.clone(), vec![1.0]).is_err());
+        assert!(Dataset::new_sparse("e", s, vec![1.0, -1.0]).is_ok());
     }
 
     #[test]
@@ -150,9 +306,32 @@ mod tests {
         let mut d = toy();
         d.normalize_rows();
         for i in 0..d.len() {
-            let n = crate::linalg::norm2(d.x.row(i));
+            let n = crate::linalg::norm2(d.x().row(i));
             assert!((n - 1.0).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn sparse_normalize_matches_dense() {
+        let mut dense = toy();
+        let mut sparse = toy().into_sparse();
+        assert!(sparse.is_sparse());
+        dense.normalize_rows();
+        sparse.normalize_rows();
+        assert_eq!(dense.x(), sparse.x());
+    }
+
+    #[test]
+    fn storage_round_trip_preserves_values() {
+        let d = toy();
+        let s = d.clone().into_sparse();
+        assert_eq!(s.nnz(), 6);
+        assert_eq!(s.dim(), 2);
+        assert_eq!(d.x(), s.x());
+        let back = s.clone().into_dense();
+        assert!(!back.is_sparse());
+        assert_eq!(back.x(), d.x());
+        assert_eq!(s.sparse().unwrap().to_dense(), *d.x());
     }
 
     #[test]
@@ -169,13 +348,32 @@ mod tests {
     }
 
     #[test]
+    fn sparse_split_matches_dense_split() {
+        // Same RNG seed ⇒ same shuffle ⇒ same rows, whatever the storage.
+        let d = toy();
+        let s = d.clone().into_sparse();
+        let mut rng_d = Rng::seed_from(9);
+        let mut rng_s = Rng::seed_from(9);
+        let (tr_d, te_d) = d.split(0.5, 100, &mut rng_d);
+        let (tr_s, te_s) = s.split(0.5, 100, &mut rng_s);
+        assert!(tr_s.is_sparse() && te_s.is_sparse());
+        assert_eq!(tr_d.x(), tr_s.x());
+        assert_eq!(te_d.x(), te_s.x());
+        assert_eq!(tr_d.y, tr_s.y);
+    }
+
+    #[test]
     fn truncate_keeps_prefix() {
         let mut d = toy();
         d.truncate(2);
         assert_eq!(d.len(), 2);
-        assert_eq!(d.x.rows(), 2);
+        assert_eq!(d.x().rows(), 2);
         d.truncate(100); // no-op
         assert_eq!(d.len(), 2);
+        let mut s = toy().into_sparse();
+        s.truncate(2);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.x(), d.x());
     }
 
     #[test]

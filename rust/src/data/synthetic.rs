@@ -178,7 +178,7 @@ impl SyntheticSpec {
             })
             .collect();
 
-        Dataset { name: self.name.clone(), x, y }
+        Dataset::new(self.name.clone(), x, y).expect("synthetic labels are valid")
     }
 }
 
@@ -311,7 +311,7 @@ mod tests {
         assert_eq!(ds.dim(), 57);
         assert!(ds.len() >= 200);
         for i in 0..ds.len() {
-            let n = crate::linalg::norm2(ds.x.row(i));
+            let n = crate::linalg::norm2(ds.x().row(i));
             assert!((n - 1.0).abs() < 1e-5, "row {i} norm {n}");
         }
     }
@@ -329,7 +329,7 @@ mod tests {
     fn deterministic_given_seed() {
         let a = UciSurrogate::Nursery.load(0.02, 11);
         let b = UciSurrogate::Nursery.load(0.02, 11);
-        assert_eq!(a.x, b.x);
+        assert_eq!(a.x(), b.x());
         assert_eq!(a.y, b.y);
         let c = UciSurrogate::Nursery.load(0.02, 12);
         assert_ne!(a.y, c.y);
@@ -354,7 +354,7 @@ mod tests {
             for sign in [1.0f32, -1.0] {
                 let acc = (0..ds.len())
                     .filter(|&i| {
-                        let pred = if sign * ds.x.get(i, j) > 0.0 { 1.0 } else { -1.0 };
+                        let pred = if sign * ds.x().get(i, j) > 0.0 { 1.0 } else { -1.0 };
                         pred == ds.y[i]
                     })
                     .count() as f64

@@ -22,8 +22,21 @@
 //! routine regardless of the thread count, so parallel results are
 //! bit-identical to serial ones (enforced by
 //! `rust/tests/parallel_identity.rs`).
+//!
+//! Sparse inputs get the same treatment:
+//! [`FeatureMap::transform_sparse_into`] /
+//! [`FeatureMap::transform_batch_sparse`] accept CSR rows
+//! ([`crate::linalg::SparseRow`] / [`crate::linalg::SparseMatrix`]).
+//! The defaults densify each row and delegate (always correct); the
+//! projection-backed families (`DenseProjection` behind Random
+//! Maclaurin and Random Fourier, TensorSketch's count sketch) override
+//! them with genuine `O(D·nnz)` kernels. Either way the outputs equal
+//! the dense path's — the sparse kernels accumulate the stored entries
+//! in the exact order the dense kernels visit the nonzeros, the crate's
+//! sparse parity contract (`rust/tests/sparse_parity.rs`).
 
-use crate::linalg::Matrix;
+use crate::data::{Dataset, Storage};
+use crate::linalg::{Matrix, SparseMatrix, SparseRow};
 
 /// A (possibly randomized, already-sampled) feature embedding
 /// `R^input_dim → R^output_dim`.
@@ -72,6 +85,56 @@ pub trait FeatureMap: Send + Sync {
         });
         out
     }
+
+    /// Apply the map to one CSR row, writing into `out`. The default
+    /// densifies the row and delegates to
+    /// [`FeatureMap::transform_into`] — always equal to the dense path
+    /// by construction. Maps with an `O(D·nnz)` kernel override this.
+    fn transform_sparse_into(&self, x: SparseRow<'_>, out: &mut [f32]) {
+        assert_eq!(x.dim, self.input_dim(), "input dim mismatch");
+        let dense = x.to_dense();
+        self.transform_into(&dense, out);
+    }
+
+    /// Apply the map to every row of a CSR matrix, using the global
+    /// [`crate::parallel`] worker budget.
+    fn transform_batch_sparse(&self, x: &SparseMatrix) -> Matrix {
+        self.transform_batch_sparse_threads(x, 0)
+    }
+
+    /// [`FeatureMap::transform_batch_sparse`] with an explicit worker
+    /// count (`0` = the global knob). Rows are independent, so any
+    /// thread count yields bit-identical output; each output row also
+    /// equals the dense [`FeatureMap::transform_batch`] row on the
+    /// densified input (the sparse parity contract).
+    fn transform_batch_sparse_threads(&self, x: &SparseMatrix, threads: usize) -> Matrix {
+        assert_eq!(x.cols(), self.input_dim(), "input dim mismatch");
+        let (rows, dd) = (x.rows(), self.output_dim());
+        let mut out = Matrix::zeros(rows, dd);
+        if rows == 0 || dd == 0 {
+            return out;
+        }
+        // Per-row cost is ~D·nnz mul-adds for the sparse fast paths.
+        let work = x.nnz().max(rows).saturating_mul(dd);
+        let threads = crate::parallel::resolve_threads_for_work(threads, rows, work);
+        crate::parallel::par_chunks(threads, dd, out.as_mut_slice(), |row0, block| {
+            for (i, out_row) in block.chunks_mut(dd).enumerate() {
+                self.transform_sparse_into(x.row(row0 + i), out_row);
+            }
+        });
+        out
+    }
+}
+
+/// Apply `map` to every example of `ds`, dispatching on the dataset's
+/// [`Storage`]: CSR storage routes through the `O(D·nnz)` sparse batch
+/// path, dense storage through the GEMM-backed dense one. Equal results
+/// either way (the sparse parity contract); only the cost changes.
+pub fn transform_dataset(map: &dyn FeatureMap, ds: &Dataset) -> Matrix {
+    match ds.storage() {
+        Storage::Dense(x) => map.transform_batch(x),
+        Storage::Sparse(x) => map.transform_batch_sparse(x),
+    }
 }
 
 /// Approximate Gram matrix `⟨Z(x_i), Z(x_j)⟩` of a feature map over the
@@ -87,6 +150,27 @@ pub fn feature_gram(map: &dyn FeatureMap, x: &Matrix) -> Matrix {
 /// [`crate::linalg::symmetric_from_lower`]).
 pub fn feature_gram_threads(map: &dyn FeatureMap, x: &Matrix, threads: usize) -> Matrix {
     let z = map.transform_batch_threads(x, threads);
+    crate::linalg::symmetric_from_lower(z.rows(), threads, map.output_dim(), |i, j| {
+        crate::linalg::dot(z.row(i), z.row(j))
+    })
+}
+
+/// [`feature_gram`] over CSR inputs: the feature rows come from the
+/// `O(D·nnz)` sparse batch path, the triangular dot-product fill is
+/// unchanged (feature rows are dense whatever the input storage). Equal
+/// to [`feature_gram`] on the densified input.
+pub fn feature_gram_sparse(map: &dyn FeatureMap, x: &SparseMatrix) -> Matrix {
+    feature_gram_sparse_threads(map, x, 0)
+}
+
+/// [`feature_gram_sparse`] with an explicit worker count (`0` = the
+/// global knob).
+pub fn feature_gram_sparse_threads(
+    map: &dyn FeatureMap,
+    x: &SparseMatrix,
+    threads: usize,
+) -> Matrix {
+    let z = map.transform_batch_sparse_threads(x, threads);
     crate::linalg::symmetric_from_lower(z.rows(), threads, map.output_dim(), |i, j| {
         crate::linalg::dot(z.row(i), z.row(j))
     })
@@ -161,6 +245,49 @@ mod tests {
         for threads in [2usize, 4, 16] {
             assert_eq!(feature_gram_threads(&map, &x, threads), serial);
         }
+    }
+
+    #[test]
+    fn default_sparse_paths_match_dense() {
+        // The trait defaults densify per row, so sparse output must be
+        // exactly the dense output — for any thread count.
+        let map = DoubleMap { d: 6 };
+        let mut x = sample_batch(9, 6, 4);
+        // Punch holes so the CSR form is genuinely sparse.
+        for i in 0..9 {
+            for j in 0..6 {
+                if (i + j) % 3 != 0 {
+                    x.set(i, j, 0.0);
+                }
+            }
+        }
+        let sx = crate::linalg::SparseMatrix::from_dense(&x);
+        let dense = map.transform_batch(&x);
+        assert_eq!(map.transform_batch_sparse(&sx), dense);
+        for threads in [1usize, 2, 8] {
+            assert_eq!(map.transform_batch_sparse_threads(&sx, threads), dense);
+        }
+        let mut row_out = vec![0.0f32; map.output_dim()];
+        map.transform_sparse_into(sx.row(3), &mut row_out);
+        assert_eq!(&row_out[..], dense.row(3));
+        assert_eq!(
+            feature_gram_sparse(&map, &sx),
+            feature_gram(&map, &x),
+            "gram must be storage-invariant"
+        );
+    }
+
+    #[test]
+    fn transform_dataset_dispatches_on_storage() {
+        let map = DoubleMap { d: 3 };
+        let x = sample_batch(5, 3, 6);
+        let dense =
+            crate::data::Dataset::new("d", x.clone(), vec![1.0, -1.0, 1.0, -1.0, 1.0]).unwrap();
+        let sparse = dense.clone().into_sparse();
+        let zd = transform_dataset(&map, &dense);
+        let zs = transform_dataset(&map, &sparse);
+        assert_eq!(zd, zs);
+        assert_eq!(zd, map.transform_batch(&x));
     }
 
     #[test]

@@ -18,7 +18,7 @@
 pub mod series;
 pub mod standard;
 
-pub use series::{binomial, MaclaurinSeries};
+pub use series::{binomial, MaclaurinSeries, Truncation};
 pub use standard::{Exponential, Homogeneous, Polynomial, Scaled, Truncated, VovkInfinite, VovkReal};
 
 use crate::linalg::dot;

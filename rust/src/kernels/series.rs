@@ -16,6 +16,19 @@ pub fn binomial(n: u32, k: u32) -> f64 {
     acc
 }
 
+/// Outcome of a §4.2 truncation query (see
+/// [`MaclaurinSeries::truncation`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Truncation {
+    /// Chosen truncation order (capped at the materialized length).
+    pub order: u32,
+    /// Tail mass `Σ_{n>order} a_n R^{2n}` actually achieved.
+    pub tail_mass: f64,
+    /// True when no materialized prefix met `eps` and the order merely
+    /// saturated at the materialized length.
+    pub saturated: bool,
+}
+
 /// A materialized prefix of a kernel's Maclaurin expansion plus the
 /// derived quantities the Random Maclaurin construction needs.
 #[derive(Clone, Debug)]
@@ -57,16 +70,30 @@ impl MaclaurinSeries {
         (self.total_mass - self.prefix_mass(k)).max(0.0)
     }
 
-    /// Smallest truncation order `k` such that the §4.2 residual bound
-    /// `Σ_{n>k} a_n R^{2n} ≤ eps`, capped at the materialized length.
-    pub fn truncation_order(&self, eps: f64) -> u32 {
+    /// The §4.2 truncation decision: the smallest order whose residual
+    /// bound `Σ_{n>k} a_n R^{2n}` meets `eps`, together with the tail
+    /// mass actually achieved and whether the bound was met at all.
+    /// When no materialized prefix reaches `eps` the result saturates at
+    /// the materialized length with `saturated = true` — the caller can
+    /// see the bound was missed instead of silently trusting `n_max`.
+    pub fn truncation(&self, eps: f64) -> Truncation {
         let n_max = (self.coeffs.len() - 1) as u32;
         for k in 0..=n_max {
-            if self.tail_mass(k) <= eps {
-                return k;
+            let tail = self.tail_mass(k);
+            if tail <= eps {
+                return Truncation { order: k, tail_mass: tail, saturated: false };
             }
         }
-        n_max
+        Truncation { order: n_max, tail_mass: self.tail_mass(n_max), saturated: true }
+    }
+
+    /// Smallest truncation order `k` such that the §4.2 residual bound
+    /// `Σ_{n>k} a_n R^{2n} ≤ eps`, capped at the materialized length.
+    /// **Note:** when the bound is unreachable this returns `n_max`
+    /// *without* meeting `eps`; use [`MaclaurinSeries::truncation`] to
+    /// observe the achieved tail mass and the saturation flag.
+    pub fn truncation_order(&self, eps: f64) -> u32 {
+        self.truncation(eps).order
     }
 
     /// True if every materialized coefficient is non-negative —
@@ -117,6 +144,28 @@ mod tests {
         assert!(order > 1 && order < 30, "order={order}");
         // Stricter eps needs a larger order.
         assert!(s.truncation_order(1e-12) >= order);
+    }
+
+    #[test]
+    fn unreachable_eps_is_reported_as_saturated() {
+        // Regression: truncation_order used to return n_max as if the
+        // bound were met whenever eps was unreachable. The structured
+        // result must expose the miss.
+        let k = Exponential::new(1.0);
+        // Only 5 coefficients materialized: the e^t tail at R=1 cannot
+        // get anywhere near 1e-30.
+        let s = MaclaurinSeries::materialize(&k, 5, 1.0);
+        let t = s.truncation(1e-30);
+        assert!(t.saturated, "bound is unreachable, must be flagged");
+        assert_eq!(t.order, 5);
+        assert!(t.tail_mass > 1e-30, "achieved tail {}", t.tail_mass);
+        assert!((t.tail_mass - s.tail_mass(5)).abs() < 1e-15);
+        // Compat shim still saturates at n_max.
+        assert_eq!(s.truncation_order(1e-30), 5);
+        // A reachable eps is not flagged and meets the bound.
+        let ok = s.truncation(1.0);
+        assert!(!ok.saturated);
+        assert!(ok.tail_mass <= 1.0);
     }
 
     #[test]

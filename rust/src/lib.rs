@@ -30,7 +30,9 @@
 //!   kernel SMO dual solver (LIBSVM stand-in) and a dual coordinate
 //!   descent linear SVM (LIBLINEAR stand-in).
 //! * [`data`] — dataset substrate: synthetic surrogates for the paper's
-//!   six UCI datasets plus a LIBSVM-format parser for real data.
+//!   six UCI datasets plus a LIBSVM-format parser that reads straight
+//!   into CSR ([`linalg::SparseMatrix`]); datasets carry dense or
+//!   sparse storage interchangeably (equal results, different cost).
 //! * [`coordinator`] + [`runtime`] — the serving layer: a dynamic
 //!   batcher/router in front of AOT-compiled JAX/Pallas artifacts
 //!   executed through PJRT (the `xla` crate). Python is build-time only.

@@ -10,10 +10,12 @@ pub mod eigen;
 pub mod fft;
 pub mod fwht;
 pub mod matrix;
+pub mod sparse;
 
 pub use eigen::{eigh, inv_sqrt_psd};
 pub use fwht::{fwht, fwht_checked};
 pub use matrix::Matrix;
+pub use sparse::{SparseMatrix, SparseRow};
 
 /// Smallest power of two ≥ `n` (and ≥ 1): the padded length shared by
 /// the radix-2 transforms — [`fft`](crate::linalg::fft::fft) widths

@@ -1,0 +1,417 @@
+//! Compressed sparse row (CSR) matrices — the storage format of the
+//! paper's actual workloads.
+//!
+//! Table 1's datasets arrive as LIBSVM text, which is sparse by
+//! construction (Nursery/Adult one-hot encodings are > 85% zeros), and
+//! TensorSketch is explicitly an `O(nnz)` algorithm — yet the original
+//! data path densified every row at parse time and every feature map
+//! paid `O(D·d)` per input regardless of nnz. [`SparseMatrix`] is the
+//! fix: three flat buffers (`indptr`/`indices`/`values`), cheap
+//! [`SparseRow`] views, and a layout that row-chunks exactly like
+//! [`Matrix`] does, so the [`crate::parallel`] batch paths fan sparse
+//! inputs out over the same worker pool.
+//!
+//! **Bit-identical parity contract.** Every sparse kernel in this crate
+//! accumulates over the stored entries in ascending column order — the
+//! *same* order the dense hot paths use after their explicit
+//! `x[k] != 0` skips ([`crate::structured::DenseProjection`], the GEMM
+//! in [`Matrix::matmul`], TensorSketch's count sketch). Terms the dense
+//! paths do *not* skip are exact zeros, and `t + 0.0` never changes a
+//! nonzero `t`, so sparse and dense outputs are equal (enforced by
+//! `rust/tests/sparse_parity.rs`; the only representable difference is
+//! the sign of a zero, which `==` ignores). For the handful of dense
+//! routines that do **not** skip zeros — the 4-lane [`super::dot`]
+//! behind row norms and the SVM solver — [`SparseRow::dot_dense`] and
+//! [`SparseRow::self_dot`] replicate the lane structure by column
+//! position (`lane = k mod 4`), so even those reductions match the
+//! dense path exactly.
+
+use super::Matrix;
+use crate::{Error, Result};
+
+/// A CSR matrix: row `i` stores its nonzero entries as parallel slices
+/// `indices[indptr[i]..indptr[i+1]]` (strictly ascending columns) and
+/// `values[..]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseMatrix {
+    rows: usize,
+    cols: usize,
+    /// `rows + 1` monotone offsets into `indices`/`values`.
+    indptr: Vec<usize>,
+    /// Column indices, strictly ascending within each row.
+    indices: Vec<u32>,
+    /// Stored values (explicit zeros are permitted but never produced
+    /// by [`SparseMatrix::from_dense`]).
+    values: Vec<f32>,
+}
+
+/// A borrowed view of one CSR row.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseRow<'a> {
+    /// Logical (dense) dimensionality of the row.
+    pub dim: usize,
+    /// Stored column indices, strictly ascending.
+    pub indices: &'a [u32],
+    /// Stored values, parallel to `indices`.
+    pub values: &'a [f32],
+}
+
+impl<'a> SparseRow<'a> {
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Expand into a fresh dense vector.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        self.write_dense_into(&mut out);
+        out
+    }
+
+    /// Zero `out` and scatter the stored entries into it.
+    pub fn write_dense_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim, "dense buffer len mismatch");
+        out.fill(0.0);
+        for (&k, &v) in self.indices.iter().zip(self.values) {
+            out[k as usize] = v;
+        }
+    }
+
+    /// `⟨row, w⟩` replicating [`super::dot`]'s 4-lane accumulation over
+    /// the virtual dense row: entry at column `k` lands in lane
+    /// `k mod 4` (ascending within each lane), the four lanes are
+    /// summed, and the `k ≥ 4⌊d/4⌋` tail is folded in last. The skipped
+    /// zero entries contribute exact `+0.0` adds in the dense path, so
+    /// the result equals `dot(dense_row, w)` bitwise (up to zero sign).
+    pub fn dot_dense(&self, w: &[f32]) -> f32 {
+        debug_assert_eq!(self.dim, w.len(), "dim mismatch");
+        let cut = 4 * (w.len() / 4);
+        let split = self.indices.partition_point(|&k| (k as usize) < cut);
+        let mut acc = [0.0f32; 4];
+        for (&k, &v) in self.indices[..split].iter().zip(&self.values[..split]) {
+            acc[(k as usize) & 3] += v * w[k as usize];
+        }
+        let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+        for (&k, &v) in self.indices[split..].iter().zip(&self.values[split..]) {
+            s += v * w[k as usize];
+        }
+        s
+    }
+
+    /// `⟨row, row⟩` with the same lane replication as
+    /// [`SparseRow::dot_dense`] — equals `dot(dense_row, dense_row)`.
+    pub fn self_dot(&self) -> f32 {
+        let cut = 4 * (self.dim / 4);
+        let split = self.indices.partition_point(|&k| (k as usize) < cut);
+        let mut acc = [0.0f32; 4];
+        for (&k, &v) in self.indices[..split].iter().zip(&self.values[..split]) {
+            acc[(k as usize) & 3] += v * v;
+        }
+        let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+        for &v in &self.values[split..] {
+            s += v * v;
+        }
+        s
+    }
+
+    /// Euclidean norm of the virtual dense row (matches
+    /// [`super::norm2`] on the densified row).
+    pub fn norm2(&self) -> f32 {
+        self.self_dot().sqrt()
+    }
+
+    /// `w[k] += alpha · v` over the stored entries — the sparse
+    /// counterpart of [`super::axpy`] (the skipped terms are
+    /// `alpha · 0.0`, exact no-ops).
+    pub fn axpy_into(&self, alpha: f32, w: &mut [f32]) {
+        debug_assert_eq!(self.dim, w.len(), "dim mismatch");
+        for (&k, &v) in self.indices.iter().zip(self.values) {
+            w[k as usize] += alpha * v;
+        }
+    }
+}
+
+impl SparseMatrix {
+    /// Construct from raw CSR buffers, validating the invariants:
+    /// `indptr` has `rows + 1` monotone offsets ending at the buffer
+    /// length, and each row's indices are strictly ascending and
+    /// `< cols` (strictness also rejects duplicates).
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<Self> {
+        if indptr.len() != rows + 1 || indptr.first() != Some(&0) {
+            return Err(Error::Data(format!(
+                "indptr must hold {} offsets starting at 0, got {}",
+                rows + 1,
+                indptr.len()
+            )));
+        }
+        if indices.len() != values.len() || *indptr.last().expect("non-empty") != indices.len() {
+            return Err(Error::Data(format!(
+                "indptr end {} must match {} indices / {} values",
+                indptr.last().expect("non-empty"),
+                indices.len(),
+                values.len()
+            )));
+        }
+        for i in 0..rows {
+            let (lo, hi) = (indptr[i], indptr[i + 1]);
+            if lo > hi {
+                return Err(Error::Data(format!("indptr decreases at row {i}")));
+            }
+            let row = &indices[lo..hi];
+            for (p, &k) in row.iter().enumerate() {
+                if k as usize >= cols {
+                    return Err(Error::Data(format!(
+                        "row {i}: column {k} out of range (cols = {cols})"
+                    )));
+                }
+                if p > 0 && row[p - 1] >= k {
+                    return Err(Error::Data(format!(
+                        "row {i}: column indices must be strictly ascending ({} then {k})",
+                        row[p - 1]
+                    )));
+                }
+            }
+        }
+        Ok(SparseMatrix { rows, cols, indptr, indices, values })
+    }
+
+    /// Build from per-row entry lists (each strictly ascending by
+    /// column, validated).
+    pub fn from_rows(cols: usize, rows: &[Vec<(u32, f32)>]) -> Result<Self> {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        indptr.push(0usize);
+        let nnz: usize = rows.iter().map(Vec::len).sum();
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for row in rows {
+            for &(k, v) in row {
+                indices.push(k);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        SparseMatrix::new(rows.len(), cols, indptr, indices, values)
+    }
+
+    /// Compress a dense matrix (drops exact zeros).
+    pub fn from_dense(m: &Matrix) -> Self {
+        let mut indptr = Vec::with_capacity(m.rows() + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        SparseMatrix { rows: m.rows(), cols: m.cols(), indptr, indices, values }
+    }
+
+    /// Expand to a dense matrix.
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let out = m.row_mut(i);
+            for (&k, &v) in row.indices.iter().zip(row.values) {
+                out[k as usize] = v;
+            }
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total stored entries.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Stored entries in row `i`.
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// Fraction of stored entries (`nnz / (rows · cols)`; 0 for empty).
+    pub fn density(&self) -> f64 {
+        let cells = self.rows * self.cols;
+        if cells == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / cells as f64
+    }
+
+    /// Borrow row `i` as a [`SparseRow`] view (cheap: two slice reborrows).
+    #[inline]
+    pub fn row(&self, i: usize) -> SparseRow<'_> {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        SparseRow { dim: self.cols, indices: &self.indices[lo..hi], values: &self.values[lo..hi] }
+    }
+
+    /// Mutably borrow row `i`'s stored values (indices stay fixed —
+    /// this is the in-place scaling hook `Dataset::normalize_rows`
+    /// uses).
+    pub fn row_values_mut(&mut self, i: usize) -> &mut [f32] {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        &mut self.values[lo..hi]
+    }
+
+    /// Copy of the sub-block of rows `[r0, r1)` (CSR analogue of
+    /// [`Matrix::slice_rows`]).
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> SparseMatrix {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        let (lo, hi) = (self.indptr[r0], self.indptr[r1]);
+        let indptr = self.indptr[r0..=r1].iter().map(|&p| p - lo).collect();
+        SparseMatrix {
+            rows: r1 - r0,
+            cols: self.cols,
+            indptr,
+            indices: self.indices[lo..hi].to_vec(),
+            values: self.values[lo..hi].to_vec(),
+        }
+    }
+
+    /// Gather a new matrix from the given row ids (the sparse analogue
+    /// of the dense split's row copy).
+    pub fn select_rows(&self, ids: &[usize]) -> SparseMatrix {
+        let nnz: usize = ids.iter().map(|&i| self.row_nnz(i)).sum();
+        let mut indptr = Vec::with_capacity(ids.len() + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for &i in ids {
+            let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+            indices.extend_from_slice(&self.indices[lo..hi]);
+            values.extend_from_slice(&self.values[lo..hi]);
+            indptr.push(indices.len());
+        }
+        SparseMatrix { rows: ids.len(), cols: self.cols, indptr, indices, values }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Random batch at a given density, returned dense + compressed.
+    fn sparse_pair(rows: usize, d: usize, keep: f64, seed: u64) -> (Matrix, SparseMatrix) {
+        let mut rng = Rng::seed_from(seed);
+        let mut m = Matrix::zeros(rows, d);
+        for i in 0..rows {
+            for j in 0..d {
+                if rng.f64() < keep {
+                    m.set(i, j, rng.f32() - 0.5);
+                }
+            }
+        }
+        let s = SparseMatrix::from_dense(&m);
+        (m, s)
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let (m, s) = sparse_pair(7, 23, 0.2, 1);
+        assert_eq!(s.rows(), 7);
+        assert_eq!(s.cols(), 23);
+        assert_eq!(s.to_dense(), m);
+        assert!(s.nnz() < 7 * 23);
+        assert!((s.density() - s.nnz() as f64 / (7.0 * 23.0)).abs() < 1e-12);
+        // Row views see the same entries.
+        for i in 0..7 {
+            assert_eq!(s.row(i).to_dense(), m.row(i));
+            assert_eq!(s.row(i).nnz(), s.row_nnz(i));
+        }
+    }
+
+    #[test]
+    fn validation_rejects_malformed() {
+        // Duplicate column (non-strict ascent).
+        assert!(SparseMatrix::from_rows(4, &[vec![(1, 1.0), (1, 2.0)]]).is_err());
+        // Out-of-order columns.
+        assert!(SparseMatrix::from_rows(4, &[vec![(2, 1.0), (0, 2.0)]]).is_err());
+        // Column out of range.
+        assert!(SparseMatrix::from_rows(4, &[vec![(4, 1.0)]]).is_err());
+        // indptr wrong length / not ending at nnz.
+        assert!(SparseMatrix::new(2, 3, vec![0, 1], vec![0], vec![1.0]).is_err());
+        assert!(SparseMatrix::new(1, 3, vec![0, 2], vec![0], vec![1.0]).is_err());
+        // Valid empty rows are fine.
+        let ok = SparseMatrix::from_rows(3, &[vec![], vec![(0, 1.0), (2, -1.0)], vec![]]).unwrap();
+        assert_eq!(ok.nnz(), 2);
+        assert_eq!(ok.row(0).nnz(), 0);
+    }
+
+    #[test]
+    fn dot_dense_matches_dense_dot_bitwise() {
+        let mut rng = Rng::seed_from(2);
+        // Odd dims exercise the 4-lane tail.
+        for d in [1usize, 3, 4, 17, 64, 131] {
+            let (m, s) = sparse_pair(5, d, 0.3, 10 + d as u64);
+            let w: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+            for i in 0..5 {
+                assert_eq!(s.row(i).dot_dense(&w), crate::linalg::dot(m.row(i), &w), "d={d} i={i}");
+                assert_eq!(
+                    s.row(i).self_dot(),
+                    crate::linalg::dot(m.row(i), m.row(i)),
+                    "self d={d} i={i}"
+                );
+                assert_eq!(s.row(i).norm2(), crate::linalg::norm2(m.row(i)));
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_into_matches_dense_axpy() {
+        let (m, s) = sparse_pair(4, 29, 0.25, 3);
+        let mut rng = Rng::seed_from(4);
+        for i in 0..4 {
+            let base: Vec<f32> = (0..29).map(|_| rng.f32() - 0.5).collect();
+            let mut dense = base.clone();
+            let mut sparse = base.clone();
+            crate::linalg::axpy(0.7, m.row(i), &mut dense);
+            s.row(i).axpy_into(0.7, &mut sparse);
+            assert_eq!(dense, sparse, "row {i}");
+        }
+    }
+
+    #[test]
+    fn slice_and_select_rows() {
+        let (m, s) = sparse_pair(9, 13, 0.3, 5);
+        let sl = s.slice_rows(2, 6);
+        assert_eq!(sl.to_dense(), m.slice_rows(2, 6));
+        let ids = [8usize, 0, 3, 3];
+        let sel = s.select_rows(&ids);
+        assert_eq!(sel.rows(), 4);
+        for (p, &i) in ids.iter().enumerate() {
+            assert_eq!(sel.row(p).to_dense(), m.row(i));
+        }
+        // Empty selections stay well-formed.
+        assert_eq!(s.select_rows(&[]).rows(), 0);
+        assert_eq!(s.slice_rows(4, 4).nnz(), 0);
+    }
+
+    #[test]
+    fn write_dense_into_clears_stale_entries() {
+        let s = SparseMatrix::from_rows(4, &[vec![(1, 2.0)]]).unwrap();
+        let mut buf = vec![9.0f32; 4];
+        s.row(0).write_dense_into(&mut buf);
+        assert_eq!(buf, vec![0.0, 2.0, 0.0, 0.0]);
+    }
+}

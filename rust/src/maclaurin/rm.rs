@@ -324,7 +324,12 @@ impl RandomMaclaurin {
 
     /// Convenience: the §4.2 variant — truncate `kernel`'s series at the
     /// smallest order whose tail mass (at radius `r`) is ≤ `eps`, then
-    /// sample a map for the truncated kernel.
+    /// sample a map for the truncated kernel. The returned
+    /// [`crate::kernels::Truncation`] carries the chosen order plus the
+    /// tail mass actually achieved and a `saturated` flag, so callers
+    /// can tell "the bound was met at order k" apart from "no
+    /// materialized prefix met `eps` and the order merely capped at
+    /// `config.max_order`".
     pub fn truncated(
         kernel: &dyn DotProductKernel,
         r: f64,
@@ -333,9 +338,10 @@ impl RandomMaclaurin {
         n_random: usize,
         config: RmConfig,
         rng: &mut Rng,
-    ) -> (Self, u32) {
+    ) -> (Self, crate::kernels::Truncation) {
         let series = crate::kernels::MaclaurinSeries::materialize(kernel, config.max_order, r);
-        let k = series.truncation_order(eps);
+        let truncation = series.truncation(eps);
+        let k = truncation.order;
         struct Shim<'a> {
             inner: &'a dyn DotProductKernel,
             order: u32,
@@ -371,7 +377,7 @@ impl RandomMaclaurin {
         }
         let shim = Shim { inner: kernel, order: k };
         let map = RandomMaclaurin::sample(&shim, d, n_random, config.with_max_order(k), rng);
-        (map, k)
+        (map, truncation)
     }
 
     pub fn config(&self) -> &RmConfig {
@@ -546,6 +552,31 @@ impl RandomMaclaurin {
         projection.project_into(x, &mut proj);
         self.products_from_projections(&proj, out);
     }
+
+    /// CSR counterpart of [`RandomMaclaurin::random_block_into`]: the
+    /// projections run through [`Projection::project_sparse_into`]
+    /// (`O(rows · nnz)` for dense stacks), then the same segmented
+    /// product — bit-identical to the dense path on the densified row.
+    fn random_block_sparse_into(&self, x: crate::linalg::SparseRow<'_>, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n_random);
+        let projection = self.projection();
+        let mut proj = vec![0.0f32; projection.rows()];
+        projection.project_sparse_into(x, &mut proj);
+        self.products_from_projections(&proj, out);
+    }
+
+    /// Write the H0/1 exact prefix `[√a_0, √a_1·x]` for a CSR row: the
+    /// constant slot, then the scaled stored entries scattered into a
+    /// zeroed linear block (the dense path's `√a_1 · 0` terms are exact
+    /// zeros, so the block is equal either way).
+    fn h01_prefix_sparse_into(&self, x: crate::linalg::SparseRow<'_>, out: &mut [f32]) {
+        out[0] = self.w_const;
+        let linear = &mut out[1..1 + self.d];
+        linear.fill(0.0);
+        for (&k, &v) in x.indices.iter().zip(x.values) {
+            linear[k as usize] = self.w_linear * v;
+        }
+    }
 }
 
 impl FeatureMap for RandomMaclaurin {
@@ -610,6 +641,53 @@ impl FeatureMap for RandomMaclaurin {
                     for (o, &xi) in row_out[1..1 + self.d].iter_mut().zip(x.row(r)) {
                         *o = self.w_linear * xi;
                     }
+                }
+                self.products_from_projections(proj.row(r), &mut row_out[prefix..]);
+            }
+        });
+        out
+    }
+
+    /// Sparse single-vector fast path: `O(rows · nnz)` projections
+    /// through the sampled stack, then the segmented products. Equal to
+    /// [`FeatureMap::transform_into`] on the densified row (the sparse
+    /// parity contract).
+    fn transform_sparse_into(&self, x: crate::linalg::SparseRow<'_>, out: &mut [f32]) {
+        assert_eq!(x.dim, self.d, "input dim mismatch");
+        assert_eq!(out.len(), self.output_dim(), "output dim mismatch");
+        if self.config.h01 {
+            self.h01_prefix_sparse_into(x, out);
+            self.random_block_sparse_into(x, &mut out[1 + self.d..]);
+        } else {
+            self.random_block_sparse_into(x, out);
+        }
+    }
+
+    /// Sparse batch override: one [`Projection::project_batch_sparse`]
+    /// pass, then the same segmented-product fan-out as the dense batch
+    /// path — bit-identical per row to both the dense batch and the
+    /// sparse single-vector path, for any thread count.
+    fn transform_batch_sparse_threads(
+        &self,
+        x: &crate::linalg::SparseMatrix,
+        threads: usize,
+    ) -> crate::linalg::Matrix {
+        assert_eq!(x.cols(), self.d, "input dim mismatch");
+        let b = x.rows();
+        let mut out = crate::linalg::Matrix::zeros(b, self.output_dim());
+        if b == 0 {
+            return out;
+        }
+        let proj = self.projection().project_batch_sparse(x, threads);
+        let prefix = if self.config.h01 { 1 + self.d } else { 0 };
+        let dd = self.output_dim();
+        let work = b.saturating_mul(proj.cols() + dd);
+        let threads = crate::parallel::resolve_threads_for_work(threads, b, work);
+        crate::parallel::par_chunks(threads, dd, out.as_mut_slice(), |row0, block| {
+            for (i, row_out) in block.chunks_mut(dd).enumerate() {
+                let r = row0 + i;
+                if self.config.h01 {
+                    self.h01_prefix_sparse_into(x.row(r), row_out);
                 }
                 self.products_from_projections(proj.row(r), &mut row_out[prefix..]);
             }
@@ -806,11 +884,34 @@ mod tests {
     fn truncated_variant_reports_order() {
         let mut rng = Rng::seed_from(19);
         let k = Exponential::new(1.0);
-        let (map, order) =
+        let (map, t) =
             RandomMaclaurin::truncated(&k, 1.0, 1e-4, 6, 64, RmConfig::default(), &mut rng);
-        assert!(order >= 3 && order <= 12, "order {order}");
-        assert!(map.max_sampled_order() <= order);
+        assert!(t.order >= 3 && t.order <= 12, "order {}", t.order);
+        assert!(!t.saturated, "1e-4 is reachable within the default order cap");
+        assert!(t.tail_mass <= 1e-4, "tail {}", t.tail_mass);
+        assert!(map.max_sampled_order() <= t.order);
         assert!(map.kernel_name().contains("truncated"));
+    }
+
+    #[test]
+    fn truncated_variant_flags_unreachable_eps() {
+        // The saturation signal must reach the sampler's caller, not
+        // stop at the series layer.
+        let mut rng = Rng::seed_from(20);
+        let k = Exponential::new(1.0);
+        let (map, t) = RandomMaclaurin::truncated(
+            &k,
+            1.0,
+            1e-30,
+            6,
+            32,
+            RmConfig::default().with_max_order(5),
+            &mut rng,
+        );
+        assert!(t.saturated, "1e-30 is unreachable with 5 materialized orders");
+        assert_eq!(t.order, 5);
+        assert!(t.tail_mass > 1e-30);
+        assert!(map.max_sampled_order() <= 5);
     }
 
     #[test]
@@ -852,6 +953,46 @@ mod tests {
         assert_eq!(m1.orders(), m2.orders());
         assert_eq!(m1.weights(), m2.weights());
         assert_eq!(m1.omegas(), m2.omegas());
+    }
+
+    #[test]
+    fn sparse_transform_matches_dense_bitwise() {
+        // CSR inputs through the O(D·nnz) path must equal the dense
+        // path exactly — single vector and batch, h01 on and off.
+        let k = Exponential::new(1.0);
+        let d = 19;
+        let mut data_rng = Rng::seed_from(61);
+        let mut x = crate::linalg::Matrix::zeros(7, d);
+        for i in 0..7 {
+            for j in 0..d {
+                if data_rng.f64() < 0.25 {
+                    x.set(i, j, data_rng.f32() - 0.5);
+                }
+            }
+        }
+        let sx = crate::linalg::SparseMatrix::from_dense(&x);
+        for h01 in [false, true] {
+            let map = RandomMaclaurin::sample(
+                &k,
+                d,
+                48,
+                RmConfig::default().with_h01(h01),
+                &mut Rng::seed_from(62),
+            );
+            let dense = map.transform_batch_threads(&x, 1);
+            for i in 0..7 {
+                let mut got = vec![0.0f32; map.output_dim()];
+                map.transform_sparse_into(sx.row(i), &mut got);
+                assert_eq!(&got[..], dense.row(i), "h01={h01} row {i}");
+            }
+            for threads in [1usize, 3, 8] {
+                assert_eq!(
+                    map.transform_batch_sparse_threads(&sx, threads),
+                    dense,
+                    "h01={h01} threads={threads}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -30,6 +30,11 @@ pub struct Stats {
     pub backend_errors: AtomicU64,
     latency: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
+    /// Samples recorded into `latency_sum_us` — the mean's denominator.
+    /// Deliberately distinct from `completed`: latencies may be recorded
+    /// on a different path (or not at all) than completion counting, and
+    /// dividing the sum by `completed` silently skews the mean.
+    latency_samples: AtomicU64,
 }
 
 impl Stats {
@@ -43,6 +48,7 @@ impl Stats {
         let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
         self.latency[bucket].fetch_add(1, Ordering::Relaxed);
         self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.latency_samples.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Approximate latency quantile in microseconds (upper bucket edge).
@@ -63,13 +69,15 @@ impl Stats {
         1u64 << BUCKETS
     }
 
-    /// Mean latency in microseconds.
+    /// Mean latency in microseconds over the *recorded samples* (not
+    /// the `completed` counter, which may advance on paths that never
+    /// record a latency).
     pub fn mean_latency_us(&self) -> f64 {
-        let done = self.completed.load(Ordering::Relaxed);
-        if done == 0 {
+        let samples = self.latency_samples.load(Ordering::Relaxed);
+        if samples == 0 {
             return 0.0;
         }
-        self.latency_sum_us.load(Ordering::Relaxed) as f64 / done as f64
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / samples as f64
     }
 
     /// Mean real batch size.
@@ -151,6 +159,25 @@ mod tests {
         assert_eq!(s.latency_quantile_us(0.99), 0);
         assert_eq!(s.mean_latency_us(), 0.0);
         assert_eq!(s.mean_batch_size(), 0.0);
+    }
+
+    #[test]
+    fn mean_latency_divides_by_samples_not_completed() {
+        // Regression: the mean used to divide latency_sum by the
+        // `completed` counter, skewing it whenever completions are
+        // counted on a path that records no latency. Pin the two apart.
+        let s = Stats::new();
+        s.record_latency(Duration::from_micros(100));
+        s.record_latency(Duration::from_micros(300));
+        // Five completions, only two recorded latencies (e.g. a backend
+        // that answers some requests without timing them).
+        s.completed.store(5, Ordering::Relaxed);
+        assert!((s.mean_latency_us() - 200.0).abs() < 1e-9, "got {}", s.mean_latency_us());
+        // And with zero completions but recorded samples, the mean must
+        // still be the sample mean (the old code returned 0).
+        let t = Stats::new();
+        t.record_latency(Duration::from_micros(50));
+        assert!((t.mean_latency_us() - 50.0).abs() < 1e-9);
     }
 
     #[test]

@@ -217,6 +217,46 @@ impl FeatureMap for RandomFourier {
         });
         out
     }
+
+    /// Sparse single-vector fast path: `O(D·nnz)` through the frequency
+    /// stack's sparse projection, then the identical cosine activation —
+    /// equal to the dense path on the densified row.
+    fn transform_sparse_into(&self, x: crate::linalg::SparseRow<'_>, out: &mut [f32]) {
+        assert_eq!(x.dim, self.input_dim(), "input dim mismatch");
+        assert_eq!(out.len(), self.output_dim(), "output dim mismatch");
+        self.freqs.as_projection().project_sparse_into(x, out);
+        let scale = self.scale();
+        for (o, &bi) in out.iter_mut().zip(&self.b) {
+            *o = scale * (*o + bi).cos();
+        }
+    }
+
+    /// Sparse batch override: one sparse projection pass, then the same
+    /// batched cosine activation as the dense override; bit-identical
+    /// per row to the dense batch for any thread count.
+    fn transform_batch_sparse_threads(
+        &self,
+        x: &crate::linalg::SparseMatrix,
+        threads: usize,
+    ) -> crate::linalg::Matrix {
+        assert_eq!(x.cols(), self.input_dim(), "input dim mismatch");
+        let mut out = self.freqs.as_projection().project_batch_sparse(x, threads);
+        let (b, dd) = (out.rows(), out.cols());
+        if b == 0 || dd == 0 {
+            return out;
+        }
+        let scale = self.scale();
+        let work = b.saturating_mul(dd).saturating_mul(4);
+        let threads = crate::parallel::resolve_threads_for_work(threads, b, work);
+        crate::parallel::par_chunks(threads, dd, out.as_mut_slice(), |_, block| {
+            for row in block.chunks_mut(dd) {
+                for (o, &bi) in row.iter_mut().zip(&self.b) {
+                    *o = scale * (*o + bi).cos();
+                }
+            }
+        });
+        out
+    }
 }
 
 #[cfg(test)]
@@ -290,6 +330,34 @@ mod tests {
             }
             for threads in [2usize, 3, 16] {
                 assert_eq!(map.transform_batch_threads(&x, threads), zb, "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_rff_matches_dense_bitwise() {
+        for kind in [ProjectionKind::Dense, ProjectionKind::Structured] {
+            let mut rng = Rng::seed_from(21);
+            let d = 13;
+            let map = RandomFourier::sample_with(0.8, d, 48, kind, &mut rng);
+            let mut data_rng = Rng::seed_from(22);
+            let mut x = crate::linalg::Matrix::zeros(6, d);
+            for i in 0..6 {
+                for j in 0..d {
+                    if data_rng.f64() < 0.3 {
+                        x.set(i, j, data_rng.f32() - 0.5);
+                    }
+                }
+            }
+            let sx = crate::linalg::SparseMatrix::from_dense(&x);
+            let dense = map.transform_batch_threads(&x, 1);
+            for i in 0..6 {
+                let mut got = vec![0.0f32; map.output_dim()];
+                map.transform_sparse_into(sx.row(i), &mut got);
+                assert_eq!(&got[..], dense.row(i), "{kind:?} row {i}");
+            }
+            for threads in [1usize, 2, 8] {
+                assert_eq!(map.transform_batch_sparse_threads(&sx, threads), dense, "{kind:?}");
             }
         }
     }

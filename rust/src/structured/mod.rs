@@ -52,7 +52,7 @@ pub mod hd;
 
 pub use hd::StructuredProjection;
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SparseMatrix, SparseRow};
 use crate::{Error, Result};
 
 /// The `dense | structured` projection knob, threaded from the CLI /
@@ -131,6 +131,40 @@ pub trait Projection: Send + Sync + std::fmt::Debug {
         });
         out
     }
+
+    /// `out[r] = ⟨w_r, x⟩` for one CSR row. The default densifies and
+    /// delegates (always equal to the dense path); [`DenseProjection`]
+    /// overrides with an `O(rows · nnz)` kernel that is bit-identical
+    /// to its zero-skipping dense loop.
+    fn project_sparse_into(&self, x: SparseRow<'_>, out: &mut [f32]) {
+        assert_eq!(x.dim, self.input_dim(), "input dim mismatch");
+        let dense = x.to_dense();
+        self.project_into(&dense, out);
+    }
+
+    /// Project every row of a CSR matrix (same contract as
+    /// [`Projection::project_batch`]: any thread count is bit-identical
+    /// to the serial per-row routine, and every row equals the dense
+    /// path on the densified input).
+    fn project_batch_sparse(&self, x: &SparseMatrix, threads: usize) -> Matrix {
+        assert_eq!(x.cols(), self.input_dim(), "input dim mismatch");
+        let (b, r) = (x.rows(), self.rows());
+        let mut out = Matrix::zeros(b, r);
+        if b == 0 || r == 0 {
+            return out;
+        }
+        // ~nnz · rows mul-adds across the whole batch for sparse-aware
+        // implementations (the densifying default costs more; the hint
+        // only steers scheduling).
+        let work = x.nnz().max(b).saturating_mul(r);
+        let threads = crate::parallel::resolve_threads_for_work(threads, b, work);
+        crate::parallel::par_chunks(threads, r, out.as_mut_slice(), |row0, block| {
+            for (i, out_row) in block.chunks_mut(r).enumerate() {
+                self.project_sparse_into(x.row(row0 + i), out_row);
+            }
+        });
+        out
+    }
 }
 
 /// Explicit dense projection matrix, stored transposed (`d × rows`,
@@ -204,6 +238,22 @@ impl Projection for DenseProjection {
         }
         x.matmul_threads(&self.t, threads).expect("inner dims agree")
     }
+
+    /// The `O(rows · nnz)` fast path: accumulate `v_k · t[k, ·]` over
+    /// the stored entries in ascending-`k` order — exactly the terms
+    /// (and the order) the dense loop and the GEMM keep after their
+    /// `x[k] != 0` skips, so the output is bit-identical to the dense
+    /// path on the densified row.
+    fn project_sparse_into(&self, x: SparseRow<'_>, out: &mut [f32]) {
+        assert_eq!(x.dim, self.input_dim(), "input dim mismatch");
+        assert_eq!(out.len(), self.rows(), "output len mismatch");
+        out.fill(0.0);
+        for (&k, &xk) in x.indices.iter().zip(x.values) {
+            if xk != 0.0 {
+                crate::linalg::axpy(xk, self.t.row(k as usize), out);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -265,6 +315,53 @@ mod tests {
         for threads in [2usize, 5, 64] {
             assert_eq!(p.project_batch(&x, threads), z);
         }
+    }
+
+    fn sparse_batch(rows: usize, d: usize, keep: f64, seed: u64) -> Matrix {
+        let mut rng = Rng::seed_from(seed);
+        let mut m = Matrix::zeros(rows, d);
+        for i in 0..rows {
+            for j in 0..d {
+                if rng.f64() < keep {
+                    m.set(i, j, rng.f32() - 0.5);
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn dense_projection_sparse_rows_equal_dense_bitwise() {
+        // The tentpole parity contract at the projection layer: CSR rows
+        // through the O(rows·nnz) kernel equal the dense zero-skipping
+        // loop and the GEMM batch, bit for bit, at any thread count.
+        let mut rng = Rng::seed_from(7);
+        let (rows, d, b) = (23, 37, 9);
+        let omegas = RademacherMatrix::sample(rows, d, &mut rng);
+        let p = DenseProjection::from_rademacher(&omegas);
+        let x = sparse_batch(b, d, 0.15, 8);
+        let sx = SparseMatrix::from_dense(&x);
+        let dense = p.project_batch(&x, 1);
+        for i in 0..b {
+            let mut got = vec![0.0f32; rows];
+            p.project_sparse_into(sx.row(i), &mut got);
+            assert_eq!(&got[..], dense.row(i), "row {i}");
+        }
+        for threads in [1usize, 2, 5, 64] {
+            assert_eq!(p.project_batch_sparse(&sx, threads), dense, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn structured_projection_sparse_default_matches_dense() {
+        // StructuredProjection keeps the densifying default — still
+        // exactly the dense result (FWHT needs the full buffer anyway).
+        let mut rng = Rng::seed_from(9);
+        let (d, b) = (24usize, 5usize);
+        let p = StructuredProjection::gaussian_stack(d, 32, 1.0, &mut rng);
+        let x = sparse_batch(b, d, 0.2, 10);
+        let sx = SparseMatrix::from_dense(&x);
+        assert_eq!(p.project_batch_sparse(&sx, 2), p.project_batch(&x, 1));
     }
 
     #[test]

@@ -13,8 +13,8 @@
 //! constant feature with value `bias_scale` (0 disables it).
 
 use super::Classifier;
-use crate::data::Dataset;
-use crate::linalg::dot;
+use crate::data::{Dataset, Storage};
+use crate::linalg::{dot, Matrix, SparseMatrix};
 use crate::rng::Rng;
 use crate::{Error, Result};
 
@@ -64,8 +64,61 @@ pub struct LinearSvm {
     pub final_violation: f64,
 }
 
+/// The solver's view of the training rows: dense rows use the 4-lane
+/// [`dot`] / [`crate::linalg::axpy`] pair, CSR rows the LIBLINEAR-style
+/// `O(nnz)` walk over stored entries. The sparse reductions replicate
+/// the dense lane structure by column position
+/// ([`crate::linalg::SparseRow::dot_dense`]), so the two storages run
+/// the *same* optimization trajectory — equal weights, bias and epoch
+/// count for equal data (pinned by `rust/tests/sparse_parity.rs`).
+enum RowsView<'a> {
+    Dense(&'a Matrix),
+    Sparse(&'a SparseMatrix),
+}
+
+impl RowsView<'_> {
+    /// `‖x_i‖²` with the dense path's accumulation structure.
+    fn self_dot(&self, i: usize) -> f64 {
+        match self {
+            RowsView::Dense(x) => {
+                let r = x.row(i);
+                dot(r, r) as f64
+            }
+            RowsView::Sparse(s) => s.row(i).self_dot() as f64,
+        }
+    }
+
+    /// `⟨w, x_i⟩` with the dense path's accumulation structure.
+    fn dot_w(&self, i: usize, w: &[f32]) -> f32 {
+        match self {
+            RowsView::Dense(x) => dot(w, x.row(i)),
+            RowsView::Sparse(s) => s.row(i).dot_dense(w),
+        }
+    }
+
+    /// `w += delta · x_i` (`O(d)` dense, `O(nnz)` sparse).
+    fn axpy(&self, i: usize, delta: f32, w: &mut [f32]) {
+        match self {
+            RowsView::Dense(x) => crate::linalg::axpy(delta, x.row(i), w),
+            RowsView::Sparse(s) => s.row(i).axpy_into(delta, w),
+        }
+    }
+
+    /// Approximate mul-adds per row touch (scheduling hint).
+    fn unit_work(&self, n: usize, d: usize) -> usize {
+        match self {
+            RowsView::Dense(_) => d.max(1),
+            RowsView::Sparse(s) => (s.nnz() / n.max(1)).max(1),
+        }
+    }
+}
+
 impl LinearSvm {
-    /// Train with dual coordinate descent.
+    /// Train with dual coordinate descent. Dispatches on the dataset's
+    /// [`Storage`]: CSR training touches only the stored entries of
+    /// each row (LIBLINEAR's sparse formulation) yet follows the exact
+    /// trajectory of the dense solver, so the fitted model is equal for
+    /// equal data whichever storage carries it.
     pub fn train(ds: &Dataset, params: LinearSvmParams) -> Result<Self> {
         let n = ds.len();
         if n == 0 {
@@ -77,7 +130,10 @@ impl LinearSvm {
         let d = ds.dim();
         let use_bias = params.bias_scale != 0.0;
         let y = &ds.y;
-        let x = &ds.x;
+        let x = match ds.storage() {
+            Storage::Dense(m) => RowsView::Dense(m),
+            Storage::Sparse(s) => RowsView::Sparse(s),
+        };
 
         // Diagonal shift and upper bound per loss (Hsieh et al. Table 1).
         let (diag, upper) = match params.loss {
@@ -96,12 +152,13 @@ impl LinearSvm {
         // reproducibility for a fixed seed.
         let bias2 =
             if use_bias { (params.bias_scale * params.bias_scale) as f64 } else { 0.0 };
-        let qii_threads =
-            crate::parallel::resolve_threads_for_work(0, n, n.saturating_mul(d.max(1)));
-        let qii: Vec<f64> = crate::parallel::par_map(qii_threads, n, |i| {
-            let r = x.row(i);
-            dot(r, r) as f64 + bias2 + diag
-        });
+        let qii_threads = crate::parallel::resolve_threads_for_work(
+            0,
+            n,
+            n.saturating_mul(x.unit_work(n, d)),
+        );
+        let qii: Vec<f64> =
+            crate::parallel::par_map(qii_threads, n, |i| x.self_dot(i) + bias2 + diag);
 
         let mut order: Vec<usize> = (0..n).collect();
         let mut rng = Rng::seed_from(params.seed);
@@ -114,12 +171,10 @@ impl LinearSvm {
             let mut pg_max = f64::NEG_INFINITY;
             let mut pg_min = f64::INFINITY;
             for &i in &order {
-                let xi = x.row(i);
                 let yi = y[i] as f64;
                 // G = y_i (w·x_i + b·s) − 1 + diag·α_i
-                let mut g =
-                    yi * (dot(&w, xi) as f64 + (b * params.bias_scale) as f64) - 1.0
-                        + diag * alpha[i];
+                let g = yi * (x.dot_w(i, &w) as f64 + (b * params.bias_scale) as f64) - 1.0
+                    + diag * alpha[i];
                 // Projected gradient.
                 let pg = if alpha[i] <= 0.0 {
                     g.min(0.0)
@@ -128,24 +183,22 @@ impl LinearSvm {
                 } else {
                     g
                 };
+                // A zero projected gradient means the coordinate is at
+                // its box and stays put — it only contributes its zero
+                // to the spread.
+                pg_max = pg_max.max(pg);
+                pg_min = pg_min.min(pg);
                 if pg != 0.0 {
-                    pg_max = pg_max.max(pg);
-                    pg_min = pg_min.min(pg);
                     // Newton step on the coordinate, clipped to the box.
                     let old = alpha[i];
                     alpha[i] = (old - g / qii[i]).clamp(0.0, upper);
                     let delta = ((alpha[i] - old) * yi) as f32;
                     if delta != 0.0 {
-                        crate::linalg::axpy(delta, xi, &mut w);
+                        x.axpy(i, delta, &mut w);
                         if use_bias {
                             b += delta * params.bias_scale;
                         }
                     }
-                } else {
-                    pg_max = pg_max.max(0.0);
-                    pg_min = pg_min.min(0.0);
-                    g = g.max(g); // no-op; keeps g "used" on this branch
-                    let _ = g;
                 }
             }
             final_violation = pg_max - pg_min;
@@ -247,7 +300,7 @@ mod tests {
         let ds = blobs(100, 5);
         let model = LinearSvm::train(&ds, LinearSvmParams::default()).unwrap();
         let bound: f32 = (0..ds.len())
-            .map(|i| crate::linalg::norm2(ds.x.row(i)))
+            .map(|i| crate::linalg::norm2(ds.x().row(i)))
             .sum::<f32>();
         assert!(crate::linalg::norm2(model.weights()) <= bound);
     }
@@ -275,6 +328,48 @@ mod tests {
     }
 
     #[test]
+    fn zero_pg_arm_bookkeeping_is_honest() {
+        // Regression for the dead `g = g.max(g); let _ = g;` no-op
+        // branch: the simplified bookkeeping must still count a zero
+        // projected gradient into the spread only as a zero, and the
+        // boxed arm must actually be exercised. Hinge loss with a tiny C
+        // saturates alphas at the box, so later epochs hit pg == 0 on
+        // both clamps; the solver must still converge deterministically.
+        let ds = blobs(150, 9);
+        let params = LinearSvmParams {
+            loss: LinearLoss::Hinge,
+            c: 0.01,
+            ..Default::default()
+        };
+        let m1 = LinearSvm::train(&ds, params).unwrap();
+        let m2 = LinearSvm::train(&ds, params).unwrap();
+        assert_eq!(m1.weights(), m2.weights(), "zero-pg arm must not perturb the trajectory");
+        assert_eq!(m1.bias(), m2.bias());
+        assert_eq!(m1.epochs, m2.epochs);
+        assert!(m1.final_violation < params.tol, "violation {}", m1.final_violation);
+        assert!(m1.accuracy_on(&ds) > 0.9);
+    }
+
+    #[test]
+    fn sparse_training_matches_dense_exactly() {
+        // CSR rows follow the dense trajectory step for step: equal
+        // weights, bias, epoch count and decisions.
+        let dense = blobs(180, 13);
+        let sparse = dense.clone().into_sparse();
+        for loss in [LinearLoss::Hinge, LinearLoss::SquaredHinge] {
+            let params = LinearSvmParams { loss, ..Default::default() };
+            let md = LinearSvm::train(&dense, params).unwrap();
+            let ms = LinearSvm::train(&sparse, params).unwrap();
+            assert_eq!(md.weights(), ms.weights(), "{loss:?}");
+            assert_eq!(md.bias(), ms.bias(), "{loss:?}");
+            assert_eq!(md.epochs, ms.epochs, "{loss:?}");
+            for i in 0..dense.len() {
+                assert_eq!(md.decision(dense.x().row(i)), ms.decision(dense.x().row(i)));
+            }
+        }
+    }
+
+    #[test]
     fn rf_features_make_xor_linear() {
         // The paper's whole point: xor + quadratic-kernel RM features
         // become linearly separable.
@@ -285,7 +380,7 @@ mod tests {
         ds.normalize_rows();
         let mut rng = crate::rng::Rng::seed_from(9);
         let map = RandomMaclaurin::sample(&Homogeneous::new(2), 2, 128, RmConfig::default(), &mut rng);
-        let z = map.transform_batch(&ds.x);
+        let z = map.transform_batch(ds.x());
         let zds = crate::data::Dataset::new("xor-rf", z, ds.y.clone()).unwrap();
         let model = LinearSvm::train(&zds, LinearSvmParams::default()).unwrap();
         let acc = model.accuracy_on(&zds);

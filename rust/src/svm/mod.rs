@@ -63,9 +63,10 @@ pub trait Classifier: Send + Sync {
         correct as f64 / y.len() as f64
     }
 
-    /// Accuracy on a [`Dataset`].
+    /// Accuracy on a [`Dataset`] (sparse datasets score through their
+    /// cached dense view; training is where the sparse fast paths live).
     fn accuracy_on(&self, ds: &Dataset) -> f64 {
-        self.accuracy(&ds.x, &ds.y)
+        self.accuracy(ds.x(), &ds.y)
     }
 }
 

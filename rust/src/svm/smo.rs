@@ -118,7 +118,7 @@ impl KernelSvm {
             return Err(Error::Config(format!("C must be positive, got {}", params.c)));
         }
         let y = &ds.y;
-        let x = &ds.x;
+        let x = ds.x();
 
         // Gradient of the dual objective: g_i = (Qα)_i − 1; starts at −1.
         let mut alpha = vec![0.0f64; n];
@@ -256,7 +256,7 @@ impl KernelSvm {
         // margin violations of non-SVs:
         let mut worst = 0.0f64;
         for i in 0..ds.len() {
-            let m = ds.y[i] as f64 * self.decision(ds.x.row(i)) as f64;
+            let m = ds.y[i] as f64 * self.decision(ds.x().row(i)) as f64;
             // Any point with margin < 1 must be "paying" at most C; the
             // residual we can check without alphas is margin deficit
             // beyond the soft-margin allowance:

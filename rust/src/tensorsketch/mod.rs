@@ -55,10 +55,56 @@ impl TensorSketch {
                 out_re[h[i] as usize] += s[i] * xi;
             }
         }
-        if self.offset > 0.0 {
-            let i = x.len();
-            out_re[h[i] as usize] += s[i] * (self.offset as f32).sqrt();
+        self.sketch_offset(j, x.len(), out_re);
+    }
+
+    /// Count-sketch one CSR row under factor `j` — the `O(nnz)` loop
+    /// the algorithm is famous for: only the stored entries scatter,
+    /// visited in the same ascending-index order the dense loop keeps
+    /// after its `x[i] != 0` skip, so the sketch is bit-identical.
+    fn count_sketch_sparse(&self, j: usize, x: crate::linalg::SparseRow<'_>, out_re: &mut [f32]) {
+        out_re.fill(0.0);
+        let h = &self.hashes[j];
+        let s = &self.signs[j];
+        for (&i, &xi) in x.indices.iter().zip(x.values) {
+            if xi != 0.0 {
+                out_re[h[i as usize] as usize] += s[i as usize] * xi;
+            }
         }
+        self.sketch_offset(j, x.dim, out_re);
+    }
+
+    /// Fold the appended `√r` offset coordinate into a sketch.
+    fn sketch_offset(&self, j: usize, d: usize, out_re: &mut [f32]) {
+        if self.offset > 0.0 {
+            let h = &self.hashes[j];
+            let s = &self.signs[j];
+            out_re[h[d] as usize] += s[d] * (self.offset as f32).sqrt();
+        }
+    }
+
+    /// FFT-domain product of the `degree` per-factor sketches, written
+    /// into `out`. `sketch(j, buf)` fills `buf` with factor `j`'s count
+    /// sketch — the only step that differs between dense and CSR inputs.
+    fn combine_sketches<F: FnMut(usize, &mut [f32])>(&self, out: &mut [f32], mut sketch: F) {
+        let n = self.width;
+        let mut acc_re = vec![0.0f32; n];
+        let mut acc_im = vec![0.0f32; n];
+        let mut cur_re = vec![0.0f32; n];
+        let mut cur_im = vec![0.0f32; n];
+        for j in 0..self.degree as usize {
+            sketch(j, &mut cur_re);
+            cur_im.fill(0.0);
+            fft(&mut cur_re, &mut cur_im, false);
+            if j == 0 {
+                acc_re.copy_from_slice(&cur_re);
+                acc_im.copy_from_slice(&cur_im);
+            } else {
+                complex_mul_inplace(&mut acc_re, &mut acc_im, &cur_re, &cur_im);
+            }
+        }
+        fft(&mut acc_re, &mut acc_im, true);
+        out.copy_from_slice(&acc_re);
     }
 }
 
@@ -74,25 +120,16 @@ impl FeatureMap for TensorSketch {
     fn transform_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.d_in);
         assert_eq!(out.len(), self.width);
-        let n = self.width;
-        // FFT-domain product of the per-factor count sketches.
-        let mut acc_re = vec![0.0f32; n];
-        let mut acc_im = vec![0.0f32; n];
-        let mut cur_re = vec![0.0f32; n];
-        let mut cur_im = vec![0.0f32; n];
-        for j in 0..self.degree as usize {
-            self.count_sketch(j, x, &mut cur_re);
-            cur_im.fill(0.0);
-            fft(&mut cur_re, &mut cur_im, false);
-            if j == 0 {
-                acc_re.copy_from_slice(&cur_re);
-                acc_im.copy_from_slice(&cur_im);
-            } else {
-                complex_mul_inplace(&mut acc_re, &mut acc_im, &cur_re, &cur_im);
-            }
-        }
-        fft(&mut acc_re, &mut acc_im, true);
-        out.copy_from_slice(&acc_re);
+        self.combine_sketches(out, |j, buf| self.count_sketch(j, x, buf));
+    }
+
+    /// Sparse fast path: the count sketches scatter only the `nnz`
+    /// stored entries (the dense loop's `O(d)` zero scan disappears),
+    /// then the identical FFT combine — bit-equal to the dense path.
+    fn transform_sparse_into(&self, x: crate::linalg::SparseRow<'_>, out: &mut [f32]) {
+        assert_eq!(x.dim, self.d_in, "input dim mismatch");
+        assert_eq!(out.len(), self.width, "output dim mismatch");
+        self.combine_sketches(out, |j, buf| self.count_sketch_sparse(j, x, buf));
     }
 }
 
@@ -145,6 +182,32 @@ mod tests {
         let mut rng = Rng::seed_from(6);
         let ts = TensorSketch::sample(2, 0.0, 4, 100, &mut rng);
         assert_eq!(ts.output_dim(), 128);
+    }
+
+    #[test]
+    fn sparse_sketch_matches_dense_bitwise() {
+        let mut rng = Rng::seed_from(11);
+        let d = 17;
+        let ts = TensorSketch::sample(3, 1.0, d, 64, &mut rng);
+        let mut data_rng = Rng::seed_from(12);
+        let mut x = Matrix::zeros(5, d);
+        for i in 0..5 {
+            for j in 0..d {
+                if data_rng.f64() < 0.3 {
+                    x.set(i, j, data_rng.f32() - 0.5);
+                }
+            }
+        }
+        let sx = crate::linalg::SparseMatrix::from_dense(&x);
+        let dense = ts.transform_batch(&x);
+        for i in 0..5 {
+            let mut got = vec![0.0f32; ts.output_dim()];
+            ts.transform_sparse_into(sx.row(i), &mut got);
+            assert_eq!(&got[..], dense.row(i), "row {i}");
+        }
+        for threads in [1usize, 2, 8] {
+            assert_eq!(ts.transform_batch_sparse_threads(&sx, threads), dense);
+        }
     }
 
     #[test]

@@ -47,9 +47,10 @@ fn pipeline_works_for_every_kernel_family() {
 fn truncated_map_pipeline() {
     let kernel = Exponential::new(1.0);
     let mut rng = Rng::seed_from(21);
-    let (map, order) =
+    let (map, truncation) =
         RandomMaclaurin::truncated(&kernel, 1.0, 1e-3, 6, 2048, RmConfig::default(), &mut rng);
-    assert!(order >= 2);
+    assert!(truncation.order >= 2);
+    assert!(!truncation.saturated);
     // Approximation check at a few points.
     for s in 0..5 {
         let x = rfdot::prop::gens::unit_vec(&mut Rng::seed_from(100 + s), 6);
@@ -101,7 +102,7 @@ fn libsvm_roundtrip_pipeline() {
 
     let kernel = rfdot::kernels::Homogeneous::new(2);
     let map = RandomMaclaurin::sample(&kernel, 2, 128, RmConfig::default(), &mut rng);
-    let z = map.transform_batch(&ds2.x);
+    let z = map.transform_batch(ds2.x());
     let zds = Dataset::new("z", z, ds2.y.clone()).unwrap();
     let model = LinearSvm::train(&zds, LinearSvmParams::default()).unwrap();
     assert!(model.accuracy_on(&zds) > 0.9);
@@ -135,7 +136,7 @@ fn compositional_pipeline() {
         RmConfig::default(),
         &mut rng,
     );
-    let z = map.transform_batch(&ds.x);
+    let z = map.transform_batch(ds.x());
     let zds = Dataset::new("z", z, ds.y.clone()).unwrap();
     let model = LinearSvm::train(&zds, LinearSvmParams::default()).unwrap();
     assert!(model.accuracy_on(&zds) > 0.9, "acc {}", model.accuracy_on(&zds));

@@ -314,7 +314,7 @@ fn prop_libsvm_roundtrip() {
             let text = libsvm::to_string(&ds);
             let ds2 =
                 libsvm::parse_str("p", &text, Some(case.d)).map_err(|e| e.to_string())?;
-            if ds.x != ds2.x || ds.y != ds2.y {
+            if ds.x() != ds2.x() || ds.y != ds2.y {
                 return Err("libsvm roundtrip mismatch".into());
             }
             Ok(())

@@ -1,0 +1,234 @@
+//! The sparse parity contract, end to end (the CSR sibling of
+//! `parallel_identity.rs`): every sparse fast path must produce output
+//! **equal** to the dense path on the densified data. Sparsity, like
+//! threading, is scheduling — never semantics.
+//!
+//! The pipeline under test is the paper's actual workload shape:
+//! LIBSVM text → CSR parse (no densify) → row normalization → feature
+//! transform (Random Maclaurin / Random Fourier / TensorSketch) → Gram
+//! / linear SVM → decisions. At every stage the sparse route is
+//! compared against a densified twin with exact equality (`==` on
+//! `f32`, which ignores only the sign of zeros — the one difference the
+//! two routes can legally produce).
+
+use rfdot::data::{libsvm, Dataset};
+use rfdot::features::{feature_gram, feature_gram_sparse, transform_dataset, FeatureMap};
+use rfdot::kernels::{Exponential, Polynomial};
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
+use rfdot::rff::RandomFourier;
+use rfdot::rng::Rng;
+use rfdot::structured::ProjectionKind;
+use rfdot::svm::{Classifier, LinearSvm, LinearSvmParams};
+use rfdot::tensorsketch::TensorSketch;
+
+/// Deterministic synthetic LIBSVM text: `n` rows over `d` features at
+/// roughly `keep` density, unique ascending 1-based indices.
+fn libsvm_text(n: usize, d: usize, keep: f64, seed: u64) -> String {
+    let mut rng = Rng::seed_from(seed);
+    let mut out = String::new();
+    for i in 0..n {
+        out.push_str(if i % 2 == 0 { "+1" } else { "-1" });
+        let mut any = false;
+        for j in 1..=d {
+            if rng.f64() < keep {
+                out.push_str(&format!(" {}:{:.4}", j, rng.f32() - 0.5));
+                any = true;
+            }
+        }
+        if !any {
+            // Keep every row non-empty so normalization is non-trivial.
+            out.push_str(" 1:0.5");
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse into the CSR pipeline and build its densified twin.
+fn parsed_pair(n: usize, d: usize, keep: f64, seed: u64) -> (Dataset, Dataset) {
+    let text = libsvm_text(n, d, keep, seed);
+    let mut sparse = libsvm::parse_str("parity", &text, Some(d)).unwrap();
+    assert!(sparse.is_sparse(), "parse_str must yield CSR storage");
+    let mut dense = sparse.clone().into_dense();
+    sparse.normalize_rows();
+    dense.normalize_rows();
+    (sparse, dense)
+}
+
+#[test]
+fn parse_then_normalize_is_storage_invariant() {
+    let (sparse, dense) = parsed_pair(40, 31, 0.12, 1);
+    assert_eq!(sparse.x(), dense.x(), "normalized dense views must match");
+    assert_eq!(sparse.y, dense.y);
+    assert!(sparse.nnz() < 40 * 31 / 2, "test data must actually be sparse");
+}
+
+/// Every map family with a sparse fast path (plus the densifying
+/// structured fallback): batch, per-row and threaded outputs all equal
+/// the dense route.
+#[test]
+fn transforms_are_bit_identical_across_storage() {
+    let (sparse, dense) = parsed_pair(30, 47, 0.15, 2);
+    let d = dense.dim();
+    let maps: Vec<(String, Box<dyn FeatureMap>)> = vec![
+        (
+            "maclaurin".into(),
+            Box::new(RandomMaclaurin::sample(
+                &Exponential::new(1.0),
+                d,
+                96,
+                RmConfig::default(),
+                &mut Rng::seed_from(10),
+            )),
+        ),
+        (
+            "maclaurin-h01".into(),
+            Box::new(RandomMaclaurin::sample(
+                &Polynomial::new(7, 1.0),
+                d,
+                64,
+                RmConfig::default().with_h01(true),
+                &mut Rng::seed_from(11),
+            )),
+        ),
+        (
+            "maclaurin-structured".into(),
+            Box::new(RandomMaclaurin::sample(
+                &Exponential::new(1.0),
+                d,
+                64,
+                RmConfig::default().with_projection(ProjectionKind::Structured),
+                &mut Rng::seed_from(12),
+            )),
+        ),
+        (
+            "fourier".into(),
+            Box::new(RandomFourier::sample(0.7, d, 80, &mut Rng::seed_from(13))),
+        ),
+        (
+            "fourier-structured".into(),
+            Box::new(RandomFourier::sample_with(
+                0.7,
+                d,
+                80,
+                ProjectionKind::Structured,
+                &mut Rng::seed_from(14),
+            )),
+        ),
+        (
+            "tensorsketch".into(),
+            Box::new(TensorSketch::sample(3, 1.0, d, 128, &mut Rng::seed_from(15))),
+        ),
+    ];
+
+    let sx = sparse.sparse().expect("sparse storage");
+    for (name, map) in &maps {
+        let z_dense = map.transform_batch(dense.x());
+        // Batch CSR path, across thread counts.
+        for threads in [1usize, 2, 8] {
+            assert_eq!(
+                map.transform_batch_sparse_threads(sx, threads),
+                z_dense,
+                "{name}: batch sparse != dense at {threads} threads"
+            );
+        }
+        // Per-row CSR path.
+        let mut row_out = vec![0.0f32; map.output_dim()];
+        for i in 0..sparse.len() {
+            map.transform_sparse_into(sx.row(i), &mut row_out);
+            assert_eq!(&row_out[..], z_dense.row(i), "{name}: row {i} sparse != dense");
+        }
+        // The storage-dispatching helper agrees with both.
+        assert_eq!(transform_dataset(map.as_ref(), &sparse), z_dense, "{name}: dispatch");
+    }
+}
+
+#[test]
+fn feature_gram_is_storage_invariant() {
+    let (sparse, dense) = parsed_pair(25, 29, 0.2, 3);
+    let map = RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        dense.dim(),
+        72,
+        RmConfig::default(),
+        &mut Rng::seed_from(20),
+    );
+    let g_dense = feature_gram(&map, dense.x());
+    let g_sparse = feature_gram_sparse(&map, sparse.sparse().unwrap());
+    assert_eq!(g_dense, g_sparse);
+}
+
+/// The LIBLINEAR-style sparse dual coordinate descent follows the dense
+/// trajectory exactly: equal weights, bias, epochs and decisions on
+/// LIBSVM-parsed data.
+#[test]
+fn sparse_svm_training_matches_dense() {
+    let (sparse, dense) = parsed_pair(120, 23, 0.25, 4);
+    let params = LinearSvmParams::default();
+    let m_sparse = LinearSvm::train(&sparse, params).unwrap();
+    let m_dense = LinearSvm::train(&dense, params).unwrap();
+    assert_eq!(m_sparse.weights(), m_dense.weights());
+    assert_eq!(m_sparse.bias(), m_dense.bias());
+    assert_eq!(m_sparse.epochs, m_dense.epochs);
+    for i in 0..dense.len() {
+        assert_eq!(
+            m_sparse.decision(dense.x().row(i)),
+            m_dense.decision(dense.x().row(i)),
+            "decision {i}"
+        );
+    }
+}
+
+/// The full Table-1 shape: CSR data → sparse transform → linear SVM →
+/// decisions, against the dense twin of every stage.
+#[test]
+fn end_to_end_decisions_match() {
+    let (sparse, dense) = parsed_pair(80, 37, 0.15, 5);
+    let map = RandomMaclaurin::sample(
+        &Polynomial::new(5, 1.0),
+        dense.dim(),
+        128,
+        RmConfig::default(),
+        &mut Rng::seed_from(30),
+    );
+    let z_sparse = transform_dataset(&map, &sparse);
+    let z_dense = map.transform_batch(dense.x());
+    assert_eq!(z_sparse, z_dense);
+    let zd_sparse = Dataset::new("zs", z_sparse, sparse.y.clone()).unwrap();
+    let zd_dense = Dataset::new("zd", z_dense, dense.y.clone()).unwrap();
+    let m_sparse = LinearSvm::train(&zd_sparse, LinearSvmParams::default()).unwrap();
+    let m_dense = LinearSvm::train(&zd_dense, LinearSvmParams::default()).unwrap();
+    assert_eq!(m_sparse.weights(), m_dense.weights());
+    assert_eq!(m_sparse.bias(), m_dense.bias());
+    assert_eq!(m_sparse.accuracy_on(&zd_sparse), m_dense.accuracy_on(&zd_dense));
+}
+
+/// Serving parity: a LIBSVM-parsed row submitted as CSR pairs gets the
+/// exact reply of the dense submission (same exactly-once machinery).
+#[test]
+fn coordinator_sparse_submission_matches_dense() {
+    use rfdot::coordinator::{Coordinator, CoordinatorConfig, NativeFactory};
+    use std::sync::Arc;
+
+    let (sparse, dense) = parsed_pair(8, 19, 0.3, 6);
+    let map = Arc::new(RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        dense.dim(),
+        32,
+        RmConfig::default(),
+        &mut Rng::seed_from(40),
+    ));
+    let coord =
+        Coordinator::start(Arc::new(NativeFactory::new(map)), CoordinatorConfig::default());
+    let sx = sparse.sparse().unwrap();
+    for i in 0..sparse.len() {
+        let row = sx.row(i);
+        let zs = coord
+            .submit_sparse(row.indices.to_vec(), row.values.to_vec())
+            .unwrap()
+            .wait()
+            .unwrap();
+        let zd = coord.transform(dense.x().row(i).to_vec()).unwrap();
+        assert_eq!(zs, zd, "row {i}");
+    }
+}

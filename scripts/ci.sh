@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 gate: build, tests, lints, formatting, plus a smoke run of the
-# structured-projection bench sweep (exercises the BENCH_structured.json
-# regeneration path; --quick diverts its noisy timings to the temp dir
-# so the checked-in baseline is only overwritten by full measured
-# runs). Run from anywhere.
+# Tier-1 gate: build, tests, lints, formatting, plus smoke runs of the
+# structured-projection and sparse-transform bench sweeps (exercising
+# the BENCH_structured.json / BENCH_sparse.json regeneration paths;
+# --quick diverts their noisy timings to the temp dir so the checked-in
+# baselines are only overwritten by full measured runs — the sparse
+# smoke also asserts CSR/dense parity inside the bench). Run from
+# anywhere.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -13,3 +15,4 @@ cargo test -q
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
 cargo bench --bench micro -- --quick --only structured
+cargo bench --bench micro -- --quick --only sparse
