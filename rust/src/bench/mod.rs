@@ -6,7 +6,9 @@
 
 pub mod experiment;
 
-pub use experiment::{run_exact, run_random_features, run_row, CellResult, RowResult};
+pub use experiment::{
+    run_exact, run_random_features, run_row, run_variant, CellResult, MapVariant, RowResult,
+};
 
 use crate::linalg::{mean, stddev};
 use std::time::Instant;

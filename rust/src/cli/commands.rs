@@ -209,6 +209,62 @@ pub fn print_rows(rows: &[bench::RowResult]) {
     t.print();
 }
 
+/// `rfdot report` — run the reproduction grid and regenerate
+/// `REPORT.md` / `REPORT.json` / `report/*.svg` (see [`crate::report`]).
+/// `--quick` runs the CI-sized slice; interrupted runs resume from the
+/// JSON run-log unless `--fresh`; `--config FILE` loads a `"report"`
+/// section with grid overrides.
+pub fn report(args: &mut Args) -> Result<()> {
+    let config_path = args.str_flag("config", "");
+    let quick = args.switch("quick");
+    let mut config = if !config_path.is_empty() {
+        // The file's "quick" field picks the baseline its overrides sit
+        // on; a --quick flag on top cannot be honored faithfully (we
+        // cannot tell which axes the file meant to pin), so reject the
+        // combination instead of silently running the wrong grid.
+        if quick {
+            return Err(crate::Error::Config(
+                "--quick conflicts with --config; set \"quick\": true inside the config file"
+                    .into(),
+            ));
+        }
+        crate::config::ReportConfig::load(&config_path)?
+    } else if quick {
+        crate::config::ReportConfig::quick()
+    } else {
+        crate::config::ReportConfig::full()
+    };
+    config.seed = args.num_flag("seed", config.seed as f64)? as u64;
+    config.out_dir = args.str_flag("out-dir", &config.out_dir);
+    if args.switch("fresh") {
+        config.resume = false;
+    }
+    apply_threads(args)?;
+    warn_unknown(args);
+
+    let sw = Stopwatch::start();
+    let report = crate::report::run(&config)?;
+    let ok = report
+        .cells
+        .iter()
+        .filter(|c| matches!(c.status, crate::report::CellStatus::Ok(_)))
+        .count();
+    println!(
+        "report: {} cells ({} ok, {} skipped), {} accuracy rows, {} thread points in {}",
+        report.cells.len(),
+        ok,
+        report.cells.len() - ok,
+        report.accuracy.len(),
+        report.threads.len(),
+        bench::fmt_duration(sw.elapsed_secs()),
+    );
+    println!(
+        "wrote {dir}/REPORT.md, {dir}/REPORT.json and {dir}/report/*.svg",
+        dir = config.out_dir
+    );
+    Ok(())
+}
+
 /// `rfdot transform` — featurize a LIBSVM file.
 pub fn transform(args: &mut Args) -> Result<()> {
     let input = args.require("input")?;
@@ -485,6 +541,48 @@ mod tests {
     #[test]
     fn transform_requires_input() {
         assert!(transform(&mut argv(&["transform"])).is_err());
+    }
+
+    #[test]
+    fn report_requires_readable_config() {
+        assert!(report(&mut argv(&["report", "--config", "/nonexistent/report.json"])).is_err());
+    }
+
+    #[test]
+    fn report_rejects_quick_alongside_config() {
+        let err = report(&mut argv(&["report", "--config", "x.json", "--quick"])).unwrap_err();
+        assert!(err.to_string().contains("conflicts with --config"), "{err}");
+    }
+
+    #[test]
+    fn report_runs_a_minimal_config_grid() {
+        // End-to-end through the CLI with a deliberately tiny custom
+        // grid (one kernel, one D, one map per cell) so the smoke stays
+        // cheap; the full quick grid is covered by tests/report_schema.rs.
+        let dir = std::env::temp_dir().join("rfdot_cli_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = dir.join("cfg.json");
+        std::fs::write(
+            &cfg,
+            r#"{"report": {"quick": true, "points": 8, "runs": 1, "d_sweep": [8],
+                "kernels": ["poly:2:1"], "threads_sweep": [1],
+                "accuracy_features": 32}}"#,
+        )
+        .unwrap();
+        report(&mut argv(&[
+            "report",
+            "--config",
+            cfg.to_str().unwrap(),
+            "--out-dir",
+            dir.to_str().unwrap(),
+            "--seed",
+            "11",
+        ]))
+        .unwrap();
+        assert!(dir.join("REPORT.md").exists());
+        assert!(dir.join("REPORT.json").exists());
+        assert!(dir.join("report_runlog.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

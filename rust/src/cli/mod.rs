@@ -5,6 +5,7 @@
 //! rfdot quickstart               # tiny end-to-end demo
 //! rfdot gram-error [flags]       # Figure-1 style approximation error
 //! rfdot table1-row [flags]       # one Table-1 row (exact vs RF vs H0/1)
+//! rfdot report [flags]           # full grid -> REPORT.md + REPORT.json
 //! rfdot transform [flags]        # featurize a LIBSVM file
 //! rfdot serve [flags]            # serving demo over the coordinator
 //! ```
@@ -24,6 +25,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "quickstart" => commands::quickstart(&mut args),
         "gram-error" => commands::gram_error(&mut args),
         "table1-row" => commands::table1_row(&mut args),
+        "report" => commands::report(&mut args),
         "transform" => commands::transform(&mut args),
         "serve" => commands::serve(&mut args),
         "help" | "" => {
@@ -52,6 +54,12 @@ COMMANDS:
   table1-row    exact kernel SVM vs RF vs H0/1   (Table 1 row)
                   --dataset nursery --kernel poly:10:1 --scale 0.1
                   --features 500 --h01-features 100 --c 1.0 --seed 42
+  report        run the full reproduction grid (every feature-map
+                family x kernel x projection x storage x D) and
+                regenerate REPORT.md + REPORT.json + report/*.svg
+                  --quick (CI-sized slice)  --out-dir .  --seed 42
+                  --fresh (ignore the resumable run-log)
+                  --config FILE ("report" section overrides the grid)
   transform     featurize a LIBSVM file with a sampled map
                   --input FILE --output FILE --kernel ... --features N
   serve         coordinator serving demo

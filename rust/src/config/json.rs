@@ -80,6 +80,47 @@ impl Json {
         self.get(key)
             .ok_or_else(|| Error::Config(format!("missing field {key:?}")))
     }
+
+    /// Render with two-space indentation and a trailing newline. Object
+    /// fields come out in `BTreeMap` order and numbers use the same
+    /// shortest-roundtrip formatting as [`Json::to_string`], so equal
+    /// values always produce byte-identical documents — the property
+    /// the report subsystem's regeneration contract rests on.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.pretty_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn pretty_into(&self, out: &mut String, indent: usize) {
+        let pad = "  ".repeat(indent + 1);
+        match self {
+            Json::Arr(items) if !items.is_empty() => {
+                out.push_str("[\n");
+                for (i, v) in items.iter().enumerate() {
+                    out.push_str(&pad);
+                    v.pretty_into(out, indent + 1);
+                    out.push_str(if i + 1 < items.len() { ",\n" } else { "\n" });
+                }
+                out.push_str(&"  ".repeat(indent));
+                out.push(']');
+            }
+            Json::Obj(map) if !map.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in map.iter().enumerate() {
+                    out.push_str(&pad);
+                    out.push_str(&Json::Str(k.clone()).to_string());
+                    out.push_str(": ");
+                    v.pretty_into(out, indent + 1);
+                    out.push_str(if i + 1 < map.len() { ",\n" } else { "\n" });
+                }
+                out.push_str(&"  ".repeat(indent));
+                out.push('}');
+            }
+            scalar_or_empty => out.push_str(&scalar_or_empty.to_string()),
+        }
+    }
 }
 
 impl fmt::Display for Json {
@@ -364,6 +405,23 @@ mod tests {
     fn unicode_roundtrip() {
         let v = Json::parse(r#""café ☕""#).unwrap();
         assert_eq!(v.as_str(), Some("café ☕"));
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_is_deterministic() {
+        let src = r#"{"b": [1, 2.5, {"x": true}], "a": "s", "empty": [], "o": {}}"#;
+        let v = Json::parse(src).unwrap();
+        let p = v.pretty();
+        // Parses back to the same value...
+        assert_eq!(Json::parse(&p).unwrap(), v);
+        // ...is stable under re-rendering (byte-identical regeneration)...
+        assert_eq!(Json::parse(&p).unwrap().pretty(), p);
+        // ...and is actually indented, with sorted keys and compact
+        // empty containers.
+        assert!(p.starts_with("{\n  \"a\": \"s\",\n  \"b\": [\n"), "{p}");
+        assert!(p.contains("\"empty\": []"));
+        assert!(p.contains("\"o\": {}"));
+        assert!(p.ends_with("}\n"));
     }
 
     #[test]

@@ -222,6 +222,218 @@ impl ExperimentConfig {
     }
 }
 
+/// Configuration of the `rfdot report` reproduction grid — the
+/// `"report"` section of a JSON config file (see
+/// [`crate::report`]). Two baselines exist: [`ReportConfig::quick`]
+/// (the CI-sized slice `report --quick` runs) and
+/// [`ReportConfig::full`] (the paper-scale grid); a config file starts
+/// from one of them (`"quick": true|false`) and overrides fields.
+#[derive(Clone, Debug)]
+pub struct ReportConfig {
+    /// CI-sized slice (small grid, few runs) instead of the full grid.
+    pub quick: bool,
+    /// Master seed; every grid cell derives its own RNG stream from it
+    /// (order-independent, so resumed and fresh runs agree bit for bit
+    /// on every seed-deterministic quantity).
+    pub seed: u64,
+    /// Directory receiving `REPORT.md`, `REPORT.json`, the `report/`
+    /// SVG assets and the resumable run-log.
+    pub out_dir: String,
+    /// Reuse completed cells from an existing run-log (resume); `false`
+    /// (`--fresh`) re-measures everything.
+    pub resume: bool,
+    /// Input dimensionality of the synthetic gram-error point set.
+    pub dim: usize,
+    /// Number of points in the gram-error set.
+    pub points: usize,
+    /// Independent map resamples per cell (the error envelope width).
+    pub runs: usize,
+    /// The D sweep (target output dimensions), ascending.
+    pub d_sweep: Vec<usize>,
+    /// Kernels in CLI spelling (`poly:10:1`, `hom:4`, `exp:1`, ...).
+    pub kernels: Vec<String>,
+    /// Thread counts for the transform scaling sweep.
+    pub threads_sweep: Vec<usize>,
+    /// Datasets for the Table-1-style accuracy rows.
+    pub datasets: Vec<String>,
+    /// Dataset size scale for the accuracy rows.
+    pub scale: f64,
+    /// Random-feature count D for the accuracy rows.
+    pub accuracy_features: usize,
+}
+
+impl ReportConfig {
+    /// The CI-sized slice: seconds, not minutes, but still touching
+    /// every family × kernel × projection × storage combination.
+    pub fn quick() -> ReportConfig {
+        ReportConfig {
+            quick: true,
+            seed: 42,
+            out_dir: ".".into(),
+            resume: true,
+            dim: 8,
+            points: 20,
+            runs: 2,
+            d_sweep: vec![16, 32],
+            kernels: vec!["poly:3:1".into(), "exp:1".into()],
+            threads_sweep: vec![1, 2],
+            datasets: vec!["nursery".into()],
+            scale: 0.02,
+            accuracy_features: 64,
+        }
+    }
+
+    /// The paper-scale grid (minutes; interruptible and resumable via
+    /// the run-log).
+    pub fn full() -> ReportConfig {
+        ReportConfig {
+            quick: false,
+            seed: 42,
+            out_dir: ".".into(),
+            resume: true,
+            dim: 16,
+            points: 100,
+            runs: 5,
+            d_sweep: vec![64, 128, 256, 512, 1024],
+            kernels: vec!["poly:10:1".into(), "hom:4".into(), "exp:1".into()],
+            threads_sweep: vec![1, 2, 4, 8],
+            datasets: vec!["nursery".into(), "spambase".into()],
+            scale: 0.1,
+            accuracy_features: 500,
+        }
+    }
+
+    /// Parse the `"report"` section of a JSON document (or a document
+    /// that *is* the section), starting from the [`ReportConfig::quick`]
+    /// or [`ReportConfig::full`] baseline chosen by its `"quick"` field
+    /// (default full).
+    pub fn from_json(text: &str) -> Result<ReportConfig> {
+        let doc = Json::parse(text)?;
+        let v = doc.get("report").unwrap_or(&doc);
+        let quick = v.get("quick").and_then(Json::as_bool).unwrap_or(false);
+        let mut cfg = if quick { ReportConfig::quick() } else { ReportConfig::full() };
+        if let Some(n) = v.get("seed").and_then(Json::as_f64) {
+            cfg.seed = n as u64;
+        }
+        if let Some(s) = v.get("out_dir").and_then(Json::as_str) {
+            cfg.out_dir = s.to_string();
+        }
+        if let Some(b) = v.get("resume").and_then(Json::as_bool) {
+            cfg.resume = b;
+        }
+        if let Some(n) = v.get("dim").and_then(Json::as_usize) {
+            cfg.dim = n;
+        }
+        if let Some(n) = v.get("points").and_then(Json::as_usize) {
+            cfg.points = n;
+        }
+        if let Some(n) = v.get("runs").and_then(Json::as_usize) {
+            cfg.runs = n;
+        }
+        if let Some(a) = v.get("d_sweep").and_then(Json::as_arr) {
+            cfg.d_sweep = usize_list(a, "d_sweep")?;
+        }
+        if let Some(a) = v.get("kernels").and_then(Json::as_arr) {
+            cfg.kernels = str_list(a, "kernels")?;
+        }
+        if let Some(a) = v.get("threads_sweep").and_then(Json::as_arr) {
+            cfg.threads_sweep = usize_list(a, "threads_sweep")?;
+        }
+        if let Some(a) = v.get("datasets").and_then(Json::as_arr) {
+            cfg.datasets = str_list(a, "datasets")?;
+        }
+        if let Some(n) = v.get("scale").and_then(Json::as_f64) {
+            cfg.scale = n;
+        }
+        if let Some(n) = v.get("accuracy_features").and_then(Json::as_usize) {
+            cfg.accuracy_features = n;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<ReportConfig> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    /// Sanity-check field ranges (every kernel spelling must parse).
+    pub fn validate(&self) -> Result<()> {
+        if self.dim == 0 || self.points < 2 {
+            return Err(Error::Config("report needs dim > 0 and points >= 2".into()));
+        }
+        if self.runs == 0 {
+            return Err(Error::Config("report runs must be positive".into()));
+        }
+        if self.d_sweep.is_empty() || self.d_sweep.contains(&0) {
+            return Err(Error::Config("d_sweep must be non-empty and positive".into()));
+        }
+        if self.kernels.is_empty() || self.threads_sweep.is_empty() || self.datasets.is_empty() {
+            return Err(Error::Config(
+                "kernels, threads_sweep and datasets must be non-empty".into(),
+            ));
+        }
+        if self.threads_sweep.contains(&0) {
+            return Err(Error::Config("threads_sweep entries must be positive".into()));
+        }
+        for k in &self.kernels {
+            KernelSpec::parse(k)?;
+        }
+        if !(self.scale > 0.0) {
+            return Err(Error::Config("report scale must be positive".into()));
+        }
+        if self.accuracy_features == 0 {
+            return Err(Error::Config("accuracy_features must be positive".into()));
+        }
+        Ok(())
+    }
+
+    /// Stable fingerprint of everything that changes cell *results*
+    /// (mode, seed and grid axes — not `out_dir`/`resume`). The run-log
+    /// stores it and refuses to resume across a mismatch, so a stale
+    /// log can never leak cells into a differently-shaped report.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "report-v1:quick={}:seed={}:dim={}:points={}:runs={}:d={:?}:kernels={:?}:\
+             threads={:?}:datasets={:?}:scale={}:accuracy_features={}",
+            self.quick,
+            self.seed,
+            self.dim,
+            self.points,
+            self.runs,
+            self.d_sweep,
+            self.kernels,
+            self.threads_sweep,
+            self.datasets,
+            self.scale,
+            self.accuracy_features,
+        )
+    }
+}
+
+/// Decode a JSON array of non-negative integers (shared with the
+/// report schema decoder in [`crate::report`]).
+pub(crate) fn usize_list(a: &[Json], field: &str) -> Result<Vec<usize>> {
+    a.iter()
+        .map(|v| {
+            v.as_usize()
+                .ok_or_else(|| Error::Config(format!("{field} entries must be non-negative ints")))
+        })
+        .collect()
+}
+
+/// Decode a JSON array of strings (shared with the report schema
+/// decoder in [`crate::report`]).
+pub(crate) fn str_list(a: &[Json], field: &str) -> Result<Vec<String>> {
+    a.iter()
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| Error::Config(format!("{field} entries must be strings")))
+        })
+        .collect()
+}
+
 /// Serving configuration (`rfdot serve` / examples/serve_features.rs).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -301,6 +513,50 @@ mod tests {
         assert!(!cfg.sparse);
         let sparse = ExperimentConfig::from_json(r#"{"sparse": true}"#).unwrap();
         assert!(sparse.sparse);
+    }
+
+    #[test]
+    fn report_config_from_json_overrides_baseline() {
+        let cfg = ReportConfig::from_json(
+            r#"{"report": {"quick": true, "seed": 7, "d_sweep": [8, 16],
+                "kernels": ["poly:2:1"], "datasets": ["spambase"]}}"#,
+        )
+        .unwrap();
+        assert!(cfg.quick);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.d_sweep, vec![8, 16]);
+        assert_eq!(cfg.kernels, vec!["poly:2:1".to_string()]);
+        assert_eq!(cfg.datasets, vec!["spambase".to_string()]);
+        // Unset fields keep the quick baseline.
+        assert_eq!(cfg.runs, ReportConfig::quick().runs);
+        // A bare section (no "report" wrapper) parses too.
+        let flat = ReportConfig::from_json(r#"{"points": 50}"#).unwrap();
+        assert!(!flat.quick);
+        assert_eq!(flat.points, 50);
+    }
+
+    #[test]
+    fn report_config_validates() {
+        assert!(ReportConfig::from_json(r#"{"d_sweep": []}"#).is_err());
+        assert!(ReportConfig::from_json(r#"{"d_sweep": [0]}"#).is_err());
+        assert!(ReportConfig::from_json(r#"{"kernels": ["bogus"]}"#).is_err());
+        assert!(ReportConfig::from_json(r#"{"threads_sweep": [0]}"#).is_err());
+        assert!(ReportConfig::from_json(r#"{"runs": 0}"#).is_err());
+        assert!(ReportConfig::quick().validate().is_ok());
+        assert!(ReportConfig::full().validate().is_ok());
+    }
+
+    #[test]
+    fn report_fingerprint_tracks_grid_axes_only() {
+        let a = ReportConfig::quick();
+        let mut b = ReportConfig::quick();
+        b.out_dir = "/elsewhere".into();
+        b.resume = false;
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut c = ReportConfig::quick();
+        c.seed = 43;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_ne!(a.fingerprint(), ReportConfig::full().fingerprint());
     }
 
     #[test]

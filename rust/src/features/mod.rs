@@ -40,15 +40,31 @@ use crate::linalg::{Matrix, SparseMatrix, SparseRow};
 
 /// A (possibly randomized, already-sampled) feature embedding
 /// `R^input_dim → R^output_dim`.
+///
+/// The contract is the paper's estimator property (Kar & Karnick,
+/// Lemma 7): over the sampling randomness,
+/// `E[⟨Z(x), Z(y)⟩] = K(x, y)` for the kernel the map was built for —
+/// which by Schoenberg's characterization (paper Theorem 1 via
+/// [`crate::kernels::DotProductKernel`]) covers *every* positive
+/// definite dot product kernel. Concentration in the output dimension
+/// (paper Lemma 9 / Theorem 12: deviations shrink like `1/√D` given the
+/// Lemma 8 bound `|Z_i(x)Z_i(y)| ≤ C_Ω/D`) is what the Figure-1
+/// experiments and `rfdot report`'s error-vs-D curves measure.
 pub trait FeatureMap: Send + Sync {
     /// Input dimensionality `d`.
     fn input_dim(&self) -> usize;
 
-    /// Output dimensionality (`D`, or `1 + d + D` with H0/1).
+    /// Output dimensionality — the paper's `D`, the knob the
+    /// `1/√D`-concentration (Theorem 12) is stated in. H0/1 maps
+    /// (§6.1) report `1 + d + D`: the exact constant/linear prefix
+    /// plus the random block.
     fn output_dim(&self) -> usize;
 
     /// Apply the map to one vector, writing into `out`
-    /// (`out.len() == output_dim()`).
+    /// (`out.len() == output_dim()`). This is one draw of the paper's
+    /// Algorithm 1 output (or a sibling family's equivalent), *not* a
+    /// fresh sample: maps are immutable after sampling, so repeated
+    /// calls are deterministic.
     fn transform_into(&self, x: &[f32], out: &mut [f32]);
 
     /// Apply the map to one vector.
@@ -138,8 +154,11 @@ pub fn transform_dataset(map: &dyn FeatureMap, ds: &Dataset) -> Matrix {
 }
 
 /// Approximate Gram matrix `⟨Z(x_i), Z(x_j)⟩` of a feature map over the
-/// rows of `x` — compared against [`crate::kernels::gram`] in the
-/// Figure 1 experiments. Uses the global worker budget.
+/// rows of `x` — compared entrywise against [`crate::kernels::gram`]
+/// (via [`crate::kernels::mean_abs_gram_error`]) in the Figure 1
+/// experiments: by Lemma 7 each entry is an unbiased estimate of
+/// `K(x_i, x_j)`, and by Theorem 12 the uniform error decays like
+/// `1/√D`. Uses the global worker budget.
 pub fn feature_gram(map: &dyn FeatureMap, x: &Matrix) -> Matrix {
     feature_gram_threads(map, x, 0)
 }

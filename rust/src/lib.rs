@@ -36,6 +36,11 @@
 //! * [`coordinator`] + [`runtime`] — the serving layer: a dynamic
 //!   batcher/router in front of AOT-compiled JAX/Pallas artifacts
 //!   executed through PJRT (the `xla` crate). Python is build-time only.
+//! * [`report`] — the self-documenting reproduction-report subsystem:
+//!   `rfdot report` runs the declared grid (feature-map family × kernel
+//!   × projection × storage × D), resumable via a JSON run-log, and
+//!   regenerates `REPORT.md` / `REPORT.json` with in-tree SVG plots so
+//!   the repo's evidence is generated, never hand-written.
 //! * [`bench`], [`prop`], [`metrics`], [`config`], [`rng`], [`linalg`] —
 //!   infrastructure substrates (no external crates are reachable in the
 //!   build environment, so benchmarking, property testing, config
@@ -43,7 +48,7 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! ```
 //! use rfdot::features::FeatureMap;
 //! use rfdot::kernels::Polynomial;
 //! use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
@@ -71,6 +76,7 @@ pub mod metrics;
 pub mod nystrom;
 pub mod parallel;
 pub mod prop;
+pub mod report;
 pub mod rff;
 pub mod rng;
 pub mod runtime;
@@ -81,6 +87,13 @@ pub mod unsup;
 
 mod error;
 pub use error::{Error, Result};
+
+/// Compile the README's quickstart snippet as a doctest, so the
+/// documented API can never drift from the real one (`cargo test`
+/// builds and runs it; the shell/text blocks are ignored by rustdoc).
+#[cfg(doctest)]
+#[doc = include_str!("../../README.md")]
+pub struct ReadmeDoctests;
 
 /// Library version (mirrors the crate version).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -32,6 +32,13 @@ use crate::{Error, Result};
 /// A CSR matrix: row `i` stores its nonzero entries as parallel slices
 /// `indices[indptr[i]..indptr[i+1]]` (strictly ascending columns) and
 /// `values[..]`.
+///
+/// This is the storage the paper's cost claims are stated against: the
+/// per-input feature cost of Algorithm 1 is really `O(D · nnz)` once
+/// the `ω_j^T x` projections skip stored zeros, and Pham & Pagh's count
+/// sketch (the TensorSketch inner loop) is `O(nnz)` by construction.
+/// The crate-wide parity contract (module docs) guarantees the
+/// subquadratic paths change cost only, never results.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SparseMatrix {
     rows: usize,
@@ -45,7 +52,12 @@ pub struct SparseMatrix {
     values: Vec<f32>,
 }
 
-/// A borrowed view of one CSR row.
+/// A borrowed view of one CSR row — what every sparse fast path
+/// ([`crate::features::FeatureMap::transform_sparse_into`], the
+/// projection kernels, the LIBLINEAR-style solver rows) consumes.
+/// Iterating `indices`/`values` in order visits the nonzeros exactly
+/// as the dense loops do after their zero skips, which is the whole
+/// parity argument.
 #[derive(Clone, Copy, Debug)]
 pub struct SparseRow<'a> {
     /// Logical (dense) dimensionality of the row.

@@ -215,7 +215,12 @@ pub struct RandomMaclaurin {
 
 impl RandomMaclaurin {
     /// Sample a map for `kernel` on `R^d` with `n_random` random
-    /// features. With `config.h01` the output dimension is
+    /// features — the paper's Algorithm 1 sampling scheme: per feature,
+    /// draw an order `N` from the external measure `P[N=n] ∝ p^{-(n+1)}`
+    /// (step 1), draw `N` Rademacher vectors through the configured
+    /// [`Projection`] stack (step 2), and store the importance weight
+    /// `√(a_N / P[N])/√D` that makes the estimator exactly unbiased
+    /// (Lemma 7). With `config.h01` the output dimension is
     /// `1 + d + n_random`, otherwise `n_random`.
     pub fn sample(
         kernel: &dyn DotProductKernel,
@@ -389,7 +394,8 @@ impl RandomMaclaurin {
         self.n_random
     }
 
-    /// Sampled order of random feature `i`.
+    /// Sampled order of random feature `i` (Algorithm 1 step 1: the
+    /// draw from the external measure).
     pub fn order(&self, i: usize) -> u32 {
         self.orders[i]
     }
@@ -404,7 +410,10 @@ impl RandomMaclaurin {
         self.orders.iter().copied().max().unwrap_or(0)
     }
 
-    /// Per-feature estimator weights (with `1/√D` folded in).
+    /// Per-feature estimator weights `√(a_N / P[N])` with `1/√D` folded
+    /// in — the importance weights Lemma 7's unbiasedness and Lemma 8's
+    /// bound `|Z_i(x)Z_i(y)| ≤ C_Ω/D` (at `C_Ω = p·f(pR²)`) are proved
+    /// for.
     pub fn weights(&self) -> &[f32] {
         &self.weights
     }

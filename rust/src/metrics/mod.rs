@@ -107,6 +107,47 @@ impl Stats {
     }
 }
 
+/// Percentile summary of a batch of `f64` samples — the shared per-cell
+/// statistic of the report grid (`rfdot report` renders one of these
+/// for every error envelope) and of any bench that wants more than
+/// mean ± stddev. Percentiles use the nearest-rank rule, so every
+/// reported value is an actual sample (no interpolation, deterministic
+/// for a deterministic sample set).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    /// Number of samples summarized.
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Summarize `xs` (NaN-free by contract; an empty slice yields the
+    /// all-zero summary).
+    pub fn from_samples(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary { n: 0, mean: 0.0, min: 0.0, p50: 0.0, p90: 0.0, max: 0.0 };
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN-free samples"));
+        let pick = |q: f64| -> f64 {
+            let rank = ((q * sorted.len() as f64).ceil() as usize).max(1) - 1;
+            sorted[rank.min(sorted.len() - 1)]
+        };
+        Summary {
+            n: sorted.len(),
+            mean: crate::linalg::mean(&sorted),
+            min: sorted[0],
+            p50: pick(0.5),
+            p90: pick(0.9),
+            max: sorted[sorted.len() - 1],
+        }
+    }
+}
+
 /// A simple wall-clock stopwatch (used by benches and the CLI).
 #[derive(Clone, Copy, Debug)]
 pub struct Stopwatch {
@@ -178,6 +219,29 @@ mod tests {
         let t = Stats::new();
         t.record_latency(Duration::from_micros(50));
         assert!((t.mean_latency_us() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_percentiles_nearest_rank() {
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0];
+        let s = Summary::from_samples(&xs);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p90, 5.0);
+        assert_eq!(s.max, 5.0);
+        // Nearest rank: every percentile is an actual sample.
+        assert!(xs.contains(&s.p50) && xs.contains(&s.p90));
+    }
+
+    #[test]
+    fn summary_degenerate_inputs() {
+        let empty = Summary::from_samples(&[]);
+        assert_eq!(empty.n, 0);
+        assert_eq!(empty.mean, 0.0);
+        let one = Summary::from_samples(&[7.5]);
+        assert_eq!((one.min, one.p50, one.p90, one.max), (7.5, 7.5, 7.5, 7.5));
     }
 
     #[test]

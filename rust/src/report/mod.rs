@@ -1,0 +1,803 @@
+//! The self-documenting reproduction-report subsystem (`rfdot report`).
+//!
+//! Everything PRs 1–3 built — the [`crate::features`] map families, the
+//! [`crate::structured`] projections, the sparse CSR pipeline and the
+//! [`crate::parallel`] thread fan-out — unified under one driver that
+//! *generates* the repo's evidence instead of hand-writing it:
+//!
+//! 1. **The grid is data.** [`grid`] declares the full cross product
+//!    feature-map family × kernel × projection × storage × D
+//!    ([`CellSpec`]); [`skip_reason`] marks inapplicable combinations.
+//!    Nothing is silently dropped: every requested cell appears in the
+//!    output as `ok` or `skipped` with a reason.
+//! 2. **Execution is resumable.** Results stream into a JSON run-log
+//!    ([`RunLog`], written after every finished cell) keyed by the
+//!    config fingerprint, so an interrupted full-grid run resumes where
+//!    it stopped and `report --quick` stays CI-sized.
+//! 3. **Rendering is reproducible.** [`run`] assembles a typed
+//!    [`Report`] and [`render`] writes `REPORT.json`, `REPORT.md` and
+//!    the `report/*.svg` assets ([`svg`]) as pure functions of the
+//!    result set — regenerating from the same run-log is byte-identical
+//!    (`rust/tests/report_schema.rs`), and the seed-deterministic
+//!    fields (gram errors, accuracies) agree across fresh runs because
+//!    every cell derives its RNG stream from
+//!    `seed ^ fnv1a(cell seed_key)`, independent of execution order
+//!    (and of the storage axis — dense/sparse twin cells sample the
+//!    same maps, so their error envelopes are equal by the sparse
+//!    parity contract).
+//!
+//! The measured quantities are the paper's: per-cell mean absolute Gram
+//! error `|⟨Z(x), Z(y)⟩ − K(x, y)|` (Kar & Karnick Figure 1, summarized
+//! by [`crate::metrics::Summary`] percentiles over resampled maps),
+//! Table-1-style accuracy rows through
+//! [`crate::bench::experiment::run_variant`], and per-input transform
+//! latency with the dense-vs-structured-vs-sparse speedups the later
+//! PRs target.
+
+pub mod render;
+pub mod svg;
+
+use crate::bench::experiment::{self, MapVariant};
+use crate::config::json::Json;
+use crate::config::{ExperimentConfig, KernelSpec, ReportConfig};
+use crate::features::FeatureMap;
+use crate::kernels::DotProductKernel;
+use crate::linalg::{Matrix, SparseMatrix};
+use crate::maclaurin::{RandomMaclaurin, RmConfig};
+use crate::metrics::Summary;
+use crate::nystrom::Nystrom;
+use crate::rff::{rbf, RandomFourier};
+use crate::rng::Rng;
+use crate::structured::ProjectionKind;
+use crate::tensorsketch::TensorSketch;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Schema version stamped into `REPORT.json` (bump on layout changes;
+/// [`parse_report`] rejects documents from another version, which is
+/// what the CI smoke's "schema drift" gate trips on).
+pub const REPORT_VERSION: u64 = 1;
+
+/// The feature-map families of the grid, in declaration order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Random Maclaurin (the paper's Algorithm 1).
+    Maclaurin,
+    /// Random Maclaurin with the H0/1 heuristic (§6.1).
+    MaclaurinH01,
+    /// Random Fourier features (Rahimi & Recht) — the paper's main
+    /// comparison, applicable to exponential kernels on the sphere.
+    Fourier,
+    /// TensorSketch (Pham & Pagh) — polynomial kernels only.
+    TensorSketch,
+    /// Nyström landmarks — the data-dependent baseline.
+    Nystrom,
+}
+
+/// Every family, in the order cells are declared and rendered.
+pub const FAMILIES: [Family; 5] = [
+    Family::Maclaurin,
+    Family::MaclaurinH01,
+    Family::Fourier,
+    Family::TensorSketch,
+    Family::Nystrom,
+];
+
+impl Family {
+    /// Stable id used in cell ids, JSON and asset file names.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Family::Maclaurin => "rm",
+            Family::MaclaurinH01 => "rm-h01",
+            Family::Fourier => "rff",
+            Family::TensorSketch => "tensorsketch",
+            Family::Nystrom => "nystrom",
+        }
+    }
+
+    /// Human name for the rendered report.
+    pub fn display(&self) -> &'static str {
+        match self {
+            Family::Maclaurin => "Random Maclaurin",
+            Family::MaclaurinH01 => "Random Maclaurin + H0/1",
+            Family::Fourier => "Random Fourier",
+            Family::TensorSketch => "TensorSketch",
+            Family::Nystrom => "Nystrom",
+        }
+    }
+
+    /// Inverse of [`Family::id`] (schema decoding).
+    pub fn parse(s: &str) -> Result<Family> {
+        FAMILIES
+            .into_iter()
+            .find(|f| f.id() == s)
+            .ok_or_else(|| Error::Config(format!("unknown feature-map family {s:?}")))
+    }
+}
+
+/// Which storage a cell routes its inputs through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StorageKind {
+    Dense,
+    Sparse,
+}
+
+impl StorageKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StorageKind::Dense => "dense",
+            StorageKind::Sparse => "sparse",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<StorageKind> {
+        match s {
+            "dense" => Ok(StorageKind::Dense),
+            "sparse" => Ok(StorageKind::Sparse),
+            other => Err(Error::Config(format!("unknown storage {other:?}"))),
+        }
+    }
+}
+
+/// One requested grid cell (an element of the declared cross product).
+#[derive(Clone, Debug)]
+pub struct CellSpec {
+    pub family: Family,
+    /// Kernel in CLI spelling (`poly:10:1`, ...).
+    pub kernel: String,
+    pub projection: ProjectionKind,
+    pub storage: StorageKind,
+    /// Target output dimension D (families may round: TensorSketch
+    /// pads to a power of two, H0/1 prepends `1 + d` exact terms — the
+    /// realized width is recorded per cell as `output_dim`).
+    pub d: usize,
+}
+
+impl CellSpec {
+    /// Stable id: the run-log key and the JSON `id` field.
+    pub fn id(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|D{}",
+            self.family.id(),
+            self.kernel,
+            self.projection.as_str(),
+            self.storage.as_str(),
+            self.d
+        )
+    }
+
+    /// Label of the cell's RNG stream — [`CellSpec::id`] *without* the
+    /// storage axis, so a sparse cell samples exactly the maps of its
+    /// dense twin. That makes the sparse parity contract visible in
+    /// the report itself: dense/sparse twin cells carry equal error
+    /// envelopes and differ only in the cost column (pinned by
+    /// `rust/tests/report_schema.rs`).
+    pub fn seed_key(&self) -> String {
+        format!(
+            "{}|{}|{}|D{}",
+            self.family.id(),
+            self.kernel,
+            self.projection.as_str(),
+            self.d
+        )
+    }
+}
+
+/// Declare the full experimental grid for a config — as data, before
+/// anything runs. [`run`] executes exactly this list and the schema
+/// test pins that the output contains exactly these ids.
+pub fn grid(config: &ReportConfig) -> Vec<CellSpec> {
+    let mut cells = Vec::new();
+    for family in FAMILIES {
+        for kernel in &config.kernels {
+            for projection in [ProjectionKind::Dense, ProjectionKind::Structured] {
+                for storage in [StorageKind::Dense, StorageKind::Sparse] {
+                    for &d in &config.d_sweep {
+                        cells.push(CellSpec {
+                            family,
+                            kernel: kernel.clone(),
+                            projection,
+                            storage,
+                            d,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    cells
+}
+
+/// Why a declared cell cannot run, if it cannot. The grid is an honest
+/// cross product: combinations a family does not support are rendered
+/// as explicit `skipped` entries carrying this reason, never dropped.
+pub fn skip_reason(spec: &CellSpec, kernel: &KernelSpec) -> Option<String> {
+    match spec.family {
+        Family::Maclaurin => None,
+        Family::MaclaurinH01 => {
+            let k = kernel.build(1.0);
+            if k.coeff(0) > 0.0 || k.coeff(1) > 0.0 {
+                None
+            } else {
+                Some(
+                    "H0/1 needs a_0 > 0 or a_1 > 0 (homogeneous kernels have neither)"
+                        .into(),
+                )
+            }
+        }
+        Family::Fourier => {
+            if matches!(kernel, KernelSpec::Exponential { .. }) {
+                None
+            } else {
+                Some(
+                    "random Fourier features target shift-invariant kernels; only the \
+                     exponential kernel coincides with an RBF on the unit sphere"
+                        .into(),
+                )
+            }
+        }
+        Family::TensorSketch => {
+            if !matches!(
+                kernel,
+                KernelSpec::Polynomial { .. } | KernelSpec::Homogeneous { .. }
+            ) {
+                Some("tensorsketch sketches fixed-degree polynomial kernels only".into())
+            } else if spec.projection == ProjectionKind::Structured {
+                Some("tensorsketch has no projection stack; --projection does not apply".into())
+            } else {
+                None
+            }
+        }
+        Family::Nystrom => {
+            if spec.projection == ProjectionKind::Structured {
+                Some(
+                    "nystrom features are kernel evaluations against landmarks; \
+                     no projection stack"
+                        .into(),
+                )
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Measured statistics of one live cell.
+#[derive(Clone, Debug)]
+pub struct CellStats {
+    /// Realized output dimension (D after family-specific rounding).
+    pub output_dim: usize,
+    /// Mean |⟨Z(x), Z(y)⟩ − K(x, y)| per resampled map (the Figure 1
+    /// metric), summarized over `runs` independent maps.
+    pub err: Summary,
+    /// Seconds per input vector through the batch transform on this
+    /// cell's storage.
+    pub secs_per_vec: f64,
+}
+
+/// A cell's outcome: measured, or explicitly skipped with a reason.
+#[derive(Clone, Debug)]
+pub enum CellStatus {
+    Ok(CellStats),
+    Skipped { reason: String },
+}
+
+/// One rendered grid cell (spec echo + outcome).
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub id: String,
+    pub family: String,
+    pub kernel: String,
+    pub projection: String,
+    pub storage: String,
+    pub d: usize,
+    pub status: CellStatus,
+}
+
+/// One Table-1-style accuracy entry (dataset × kernel × variant).
+#[derive(Clone, Debug)]
+pub struct AccuracyRow {
+    pub dataset: String,
+    pub kernel: String,
+    /// Column label (`K+SMO`, `RF+LIN`, `H0/1+LIN`, `RFF+LIN`, ...).
+    pub variant: String,
+    pub outcome: RowOutcome,
+}
+
+/// Outcome of one accuracy row.
+#[derive(Clone, Debug)]
+pub enum RowOutcome {
+    Ok { accuracy: f64, train_s: f64, test_s: f64, size: usize },
+    Skipped { reason: String },
+}
+
+/// One point of the thread-scaling sweep.
+#[derive(Clone, Debug)]
+pub struct ThreadPoint {
+    pub threads: usize,
+    pub secs: f64,
+    /// Relative to the sweep's first entry.
+    pub speedup: f64,
+}
+
+/// The fully assembled report — the in-memory mirror of `REPORT.json`.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub version: u64,
+    /// `"quick"` or `"full"`.
+    pub mode: String,
+    pub seed: u64,
+    pub fingerprint: String,
+    /// The grid axes this report was generated from.
+    pub config: ReportConfig,
+    /// Every declared cell, in [`grid`] order.
+    pub cells: Vec<Cell>,
+    pub accuracy: Vec<AccuracyRow>,
+    pub threads: Vec<ThreadPoint>,
+}
+
+/// FNV-1a over a cell id: an order-independent, dependency-free stream
+/// label so every cell's RNG is a pure function of (master seed, id).
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The gram-error point set: `points` vectors at ~25% density,
+/// L2-normalized (the paper's protocol — unit sphere, so `R = 1` and
+/// every kernel value is bounded), returned dense + CSR. Sparse cells
+/// see the *same* values; storage changes cost, never results (the
+/// crate's sparse parity contract).
+fn point_set(config: &ReportConfig) -> (Matrix, SparseMatrix) {
+    let mut rng = Rng::seed_from(config.seed ^ 0xDA7A);
+    let mut x = Matrix::zeros(config.points, config.dim);
+    for i in 0..config.points {
+        loop {
+            for j in 0..config.dim {
+                let v = if rng.f64() < 0.25 { rng.f32() - 0.5 } else { 0.0 };
+                x.set(i, j, v);
+            }
+            // Re-roll the (rare) all-zero row: the unit sphere has no
+            // zero vector.
+            if crate::linalg::normalize(x.row_mut(i)) > 0.0 {
+                break;
+            }
+        }
+    }
+    let sx = SparseMatrix::from_dense(&x);
+    (x, sx)
+}
+
+/// Exponential width σ² for a grid kernel (σ² = 0 means "fit from
+/// data", which the synthetic unit-sphere set resolves to 1).
+fn exp_sigma2(kspec: &KernelSpec) -> f64 {
+    match kspec {
+        KernelSpec::Exponential { sigma2 } if *sigma2 > 0.0 => *sigma2,
+        _ => 1.0,
+    }
+}
+
+/// The exact Gram matrix a family's estimator targets. Every family
+/// targets `f(⟨x, y⟩)` except Random Fourier, whose own target is the
+/// RBF kernel at `γ = 1/(2σ²)` — on the unit sphere that equals
+/// `e^{−2γ} · exp(⟨x, y⟩/σ²)`, the exponential dot-product kernel up
+/// to a constant factor.
+fn exact_gram(family: Family, kspec: &KernelSpec, x: &Matrix) -> Matrix {
+    match family {
+        Family::Fourier => {
+            let gamma = 0.5 / exp_sigma2(kspec);
+            crate::linalg::symmetric_from_lower(x.rows(), 0, x.cols(), |i, j| {
+                rbf(gamma, x.row(i), x.row(j)) as f32
+            })
+        }
+        _ => crate::kernels::gram(kspec.build(1.0).as_ref(), x),
+    }
+}
+
+/// Key of the exact-gram cache: Fourier targets differ from the shared
+/// kernel-gram target.
+fn exact_key(family: Family, kernel: &str) -> String {
+    match family {
+        Family::Fourier => format!("rbf|{kernel}"),
+        _ => format!("kernel|{kernel}"),
+    }
+}
+
+/// Sample/fit one map of the cell's family (the cell's RNG stream is
+/// advanced once per map, so `runs` maps are independent).
+fn sample_map(
+    spec: &CellSpec,
+    kspec: &KernelSpec,
+    kernel: &dyn DotProductKernel,
+    x: &Matrix,
+    rng: &mut Rng,
+) -> Result<Box<dyn FeatureMap>> {
+    match spec.family {
+        Family::Maclaurin => Ok(Box::new(RandomMaclaurin::sample(
+            kernel,
+            x.cols(),
+            spec.d,
+            RmConfig::default().with_projection(spec.projection),
+            rng,
+        ))),
+        Family::MaclaurinH01 => Ok(Box::new(RandomMaclaurin::sample(
+            kernel,
+            x.cols(),
+            spec.d,
+            RmConfig::default().with_h01(true).with_projection(spec.projection),
+            rng,
+        ))),
+        Family::Fourier => Ok(Box::new(RandomFourier::sample_with(
+            0.5 / exp_sigma2(kspec),
+            x.cols(),
+            spec.d,
+            spec.projection,
+            rng,
+        ))),
+        Family::TensorSketch => {
+            let (degree, offset) = match kspec {
+                KernelSpec::Polynomial { degree, offset } => (*degree, *offset),
+                KernelSpec::Homogeneous { degree } => (*degree, 0.0),
+                other => {
+                    return Err(Error::Config(format!(
+                        "tensorsketch cannot sketch {other:?}"
+                    )))
+                }
+            };
+            Ok(Box::new(TensorSketch::sample(degree, offset, x.cols(), spec.d, rng)))
+        }
+        Family::Nystrom => Ok(Box::new(Nystrom::fit(kspec.build(1.0), x, spec.d, rng)?)),
+    }
+}
+
+/// Measure one live cell: `runs` independent maps feed the gram-error
+/// envelope (seed-deterministic), then one batch-transform timing on
+/// the cell's storage sizes the cost column (wall-clock, cached by the
+/// run-log rather than re-measured on resume).
+fn run_cell(
+    spec: &CellSpec,
+    config: &ReportConfig,
+    x: &Matrix,
+    sx: &SparseMatrix,
+    exact: &Matrix,
+) -> Result<CellStats> {
+    let kspec = KernelSpec::parse(&spec.kernel)?;
+    let kernel = kspec.build(1.0);
+    let mut rng = Rng::seed_from(config.seed ^ fnv1a(&spec.seed_key()));
+    let mut errs = Vec::with_capacity(config.runs);
+    let mut last: Option<Box<dyn FeatureMap>> = None;
+    for _ in 0..config.runs {
+        let map = sample_map(spec, &kspec, kernel.as_ref(), x, &mut rng)?;
+        let approx = match spec.storage {
+            StorageKind::Dense => crate::features::feature_gram(map.as_ref(), x),
+            StorageKind::Sparse => crate::features::feature_gram_sparse(map.as_ref(), sx),
+        };
+        errs.push(crate::kernels::mean_abs_gram_error(exact, &approx));
+        last = Some(map);
+    }
+    let map = last.expect("runs >= 1 by validation");
+    let iters = if config.quick { 2 } else { 5 };
+    let m = crate::bench::bench("cell-transform", 1, iters, || match spec.storage {
+        StorageKind::Dense => map.transform_batch(x),
+        StorageKind::Sparse => map.transform_batch_sparse(sx),
+    });
+    Ok(CellStats {
+        output_dim: map.output_dim(),
+        err: Summary::from_samples(&errs),
+        secs_per_vec: m.mean_s() / x.rows() as f64,
+    })
+}
+
+/// The Table-1-style accuracy section: for each dataset × kernel, the
+/// exact kernel SVM plus every feature-map family at the configured D,
+/// through [`experiment::run_variant`]. Inapplicable variants become
+/// explicit skips, mirroring the grid's no-silent-drops rule.
+fn accuracy_rows(config: &ReportConfig) -> Result<Vec<AccuracyRow>> {
+    let mut rows = Vec::new();
+    for dataset in &config.datasets {
+        for kernel in &config.kernels {
+            let exp_cfg = ExperimentConfig {
+                dataset: dataset.clone(),
+                kernel: KernelSpec::parse(kernel)?,
+                scale: config.scale,
+                n_features: config.accuracy_features,
+                seed: config.seed,
+                ..Default::default()
+            };
+            let prep = experiment::prepare(&exp_cfg)?;
+            let d = config.accuracy_features;
+            let variants = [
+                MapVariant::Exact,
+                MapVariant::Maclaurin { d, h01: false },
+                MapVariant::Maclaurin { d, h01: true },
+                MapVariant::Fourier { d },
+                MapVariant::TensorSketch { d },
+                MapVariant::Nystrom { m: d },
+            ];
+            for (i, variant) in variants.iter().enumerate() {
+                let outcome = match experiment::run_variant(&prep, variant, 1 + i as u64) {
+                    Ok(cell) => RowOutcome::Ok {
+                        accuracy: cell.accuracy,
+                        train_s: cell.train_s,
+                        test_s: cell.test_s,
+                        size: cell.size,
+                    },
+                    Err(e) => RowOutcome::Skipped { reason: e.to_string() },
+                };
+                rows.push(AccuracyRow {
+                    dataset: dataset.clone(),
+                    kernel: kernel.clone(),
+                    variant: variant.label(),
+                    outcome,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// The `transform_batch` thread-scaling sweep on a Random Maclaurin map
+/// (the crate's headline hot path), with explicit per-call thread
+/// counts — the process-global [`crate::parallel`] knob is never
+/// touched.
+fn thread_sweep(config: &ReportConfig, x: &Matrix) -> Result<Vec<ThreadPoint>> {
+    let kspec = KernelSpec::parse(&config.kernels[0])?;
+    let kernel = kspec.build(1.0);
+    let d = *config.d_sweep.last().expect("validated non-empty");
+    let mut rng = Rng::seed_from(config.seed ^ 0x7423);
+    let map = RandomMaclaurin::sample(kernel.as_ref(), x.cols(), d, RmConfig::default(), &mut rng);
+    let iters = if config.quick { 2 } else { 5 };
+    let mut points = Vec::new();
+    let mut base = 0.0;
+    for &t in &config.threads_sweep {
+        let secs =
+            crate::bench::bench("thread-sweep", 1, iters, || map.transform_batch_threads(x, t))
+                .mean_s();
+        if points.is_empty() {
+            base = secs;
+        }
+        points.push(ThreadPoint { threads: t, secs, speedup: base / secs.max(1e-12) });
+    }
+    Ok(points)
+}
+
+/// The resumable run-log: everything completed so far, keyed by the
+/// config [`ReportConfig::fingerprint`]. Saved after every finished
+/// cell, so interrupting a full-grid run loses at most one cell, and
+/// re-rendering from a complete log reproduces the report byte for
+/// byte (wall-clock timings are cached alongside the deterministic
+/// statistics).
+pub struct RunLog {
+    pub fingerprint: String,
+    pub cells: BTreeMap<String, Cell>,
+    pub accuracy: Option<Vec<AccuracyRow>>,
+    pub threads: Option<Vec<ThreadPoint>>,
+    path: PathBuf,
+}
+
+impl RunLog {
+    /// Load the log at `path` if it exists, resuming is enabled and its
+    /// fingerprint matches; otherwise start empty.
+    pub fn load_or_new(path: PathBuf, fingerprint: &str, resume: bool) -> RunLog {
+        let empty = RunLog {
+            fingerprint: fingerprint.to_string(),
+            cells: BTreeMap::new(),
+            accuracy: None,
+            threads: None,
+            path,
+        };
+        if !resume {
+            return empty;
+        }
+        let Ok(text) = std::fs::read_to_string(&empty.path) else {
+            return empty;
+        };
+        match render::parse_runlog(&text, empty.path.clone()) {
+            Ok(log) if log.fingerprint == fingerprint => log,
+            _ => empty,
+        }
+    }
+
+    fn save(&self) -> Result<()> {
+        std::fs::write(&self.path, render::runlog_json(self).pretty())?;
+        Ok(())
+    }
+}
+
+/// Run the whole declared grid and regenerate `REPORT.md`,
+/// `REPORT.json` and the `report/*.svg` assets under
+/// `config.out_dir`, resuming from the run-log when possible. The
+/// written `REPORT.json` is re-parsed through [`parse_report`] before
+/// returning — the self-check CI's `report --quick` smoke relies on to
+/// fail on schema drift.
+pub fn run(config: &ReportConfig) -> Result<Report> {
+    config.validate()?;
+    let out_dir = Path::new(&config.out_dir);
+    std::fs::create_dir_all(out_dir.join("report"))?;
+    let fingerprint = config.fingerprint();
+    let mut log = RunLog::load_or_new(
+        out_dir.join("report_runlog.json"),
+        &fingerprint,
+        config.resume,
+    );
+    let specs = grid(config);
+    let (x, sx) = point_set(config);
+    let mut exact_cache: BTreeMap<String, Matrix> = BTreeMap::new();
+    for spec in &specs {
+        let id = spec.id();
+        if log.cells.contains_key(&id) {
+            continue;
+        }
+        let kspec = KernelSpec::parse(&spec.kernel)?;
+        let status = match skip_reason(spec, &kspec) {
+            Some(reason) => CellStatus::Skipped { reason },
+            None => {
+                let key = exact_key(spec.family, &spec.kernel);
+                let exact = exact_cache
+                    .entry(key)
+                    .or_insert_with(|| exact_gram(spec.family, &kspec, &x));
+                CellStatus::Ok(run_cell(spec, config, &x, &sx, exact)?)
+            }
+        };
+        let cell = Cell {
+            id: id.clone(),
+            family: spec.family.id().to_string(),
+            kernel: spec.kernel.clone(),
+            projection: spec.projection.as_str().to_string(),
+            storage: spec.storage.as_str().to_string(),
+            d: spec.d,
+            status,
+        };
+        log.cells.insert(id, cell);
+        log.save()?;
+    }
+    if log.accuracy.is_none() {
+        log.accuracy = Some(accuracy_rows(config)?);
+        log.save()?;
+    }
+    if log.threads.is_none() {
+        log.threads = Some(thread_sweep(config, &x)?);
+        log.save()?;
+    }
+
+    let report = Report {
+        version: REPORT_VERSION,
+        mode: if config.quick { "quick".into() } else { "full".into() },
+        seed: config.seed,
+        fingerprint,
+        config: config.clone(),
+        cells: specs
+            .iter()
+            .map(|s| log.cells.get(&s.id()).expect("every spec was filled in").clone())
+            .collect(),
+        accuracy: log.accuracy.clone().expect("filled above"),
+        threads: log.threads.clone().expect("filled above"),
+    };
+    render::write_all(&report, out_dir)?;
+    let written = std::fs::read_to_string(out_dir.join("REPORT.json"))?;
+    parse_report(&written)?;
+    Ok(report)
+}
+
+/// Deserialize a `REPORT.json` document back into the typed schema,
+/// validating version, statuses and per-status required fields. This is
+/// the drift gate: anything [`render::report_json`] starts emitting
+/// that this function does not understand fails the round-trip in
+/// [`run`], the schema test and the CI smoke.
+pub fn parse_report(text: &str) -> Result<Report> {
+    let doc = Json::parse(text)?;
+    render::decode_report(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_the_declared_cross_product() {
+        let config = ReportConfig::quick();
+        let specs = grid(&config);
+        let expected = FAMILIES.len() * config.kernels.len() * 2 * 2 * config.d_sweep.len();
+        assert_eq!(specs.len(), expected);
+        // Ids are unique (the run-log key space).
+        let ids: std::collections::BTreeSet<String> = specs.iter().map(|s| s.id()).collect();
+        assert_eq!(ids.len(), specs.len());
+    }
+
+    #[test]
+    fn skip_reasons_encode_applicability() {
+        let poly = KernelSpec::parse("poly:3:1").unwrap();
+        let hom = KernelSpec::parse("hom:4").unwrap();
+        let exp = KernelSpec::parse("exp:1").unwrap();
+        let spec = |family, projection| CellSpec {
+            family,
+            kernel: "k".into(),
+            projection,
+            storage: StorageKind::Dense,
+            d: 16,
+        };
+        let d = ProjectionKind::Dense;
+        let s = ProjectionKind::Structured;
+        assert!(skip_reason(&spec(Family::Maclaurin, s), &hom).is_none());
+        assert!(skip_reason(&spec(Family::MaclaurinH01, d), &poly).is_none());
+        assert!(skip_reason(&spec(Family::MaclaurinH01, d), &hom).is_some());
+        assert!(skip_reason(&spec(Family::Fourier, s), &exp).is_none());
+        assert!(skip_reason(&spec(Family::Fourier, d), &poly).is_some());
+        assert!(skip_reason(&spec(Family::TensorSketch, d), &poly).is_none());
+        assert!(skip_reason(&spec(Family::TensorSketch, s), &poly).is_some());
+        assert!(skip_reason(&spec(Family::TensorSketch, d), &exp).is_some());
+        assert!(skip_reason(&spec(Family::Nystrom, d), &exp).is_none());
+        assert!(skip_reason(&spec(Family::Nystrom, s), &exp).is_some());
+    }
+
+    #[test]
+    fn family_ids_round_trip() {
+        for f in FAMILIES {
+            assert_eq!(Family::parse(f.id()).unwrap(), f);
+        }
+        assert!(Family::parse("nope").is_err());
+        assert_eq!(StorageKind::parse("sparse").unwrap(), StorageKind::Sparse);
+        assert!(StorageKind::parse("csr").is_err());
+    }
+
+    #[test]
+    fn cell_seeds_are_order_independent_and_storage_blind() {
+        // The per-cell stream depends only on (seed, seed_key) — the
+        // property resume determinism rests on.
+        assert_eq!(fnv1a("a|b"), fnv1a("a|b"));
+        assert_ne!(fnv1a("rm|poly:3:1|dense|D16"), fnv1a("rm|poly:3:1|dense|D32"));
+        // Twin cells across the storage axis share a stream (the report
+        // surfaces the sparse parity contract through equal envelopes),
+        // while their run-log ids stay distinct.
+        let mut dense = CellSpec {
+            family: Family::Maclaurin,
+            kernel: "poly:3:1".into(),
+            projection: ProjectionKind::Dense,
+            storage: StorageKind::Dense,
+            d: 16,
+        };
+        let sparse = CellSpec { storage: StorageKind::Sparse, ..dense.clone() };
+        assert_eq!(dense.seed_key(), sparse.seed_key());
+        assert_ne!(dense.id(), sparse.id());
+        dense.d = 32;
+        assert_ne!(dense.seed_key(), sparse.seed_key());
+    }
+
+    #[test]
+    fn point_set_is_unit_norm_sparse_and_seeded() {
+        let config = ReportConfig::quick();
+        let (x, sx) = point_set(&config);
+        assert_eq!(x.rows(), config.points);
+        for i in 0..x.rows() {
+            let n = crate::linalg::norm2(x.row(i));
+            assert!((n - 1.0).abs() < 1e-5, "row {i} norm {n}");
+        }
+        assert!(sx.density() < 0.7, "density {}", sx.density());
+        assert_eq!(sx.to_dense(), x);
+        let (x2, _) = point_set(&config);
+        assert_eq!(x, x2, "point set must be a pure function of the seed");
+    }
+
+    #[test]
+    fn exact_gram_fourier_targets_scaled_exponential() {
+        // On the unit sphere: rbf(γ=1/2σ², x, y) = e^{−2γ}·exp(t/σ²).
+        let config = ReportConfig::quick();
+        let (x, _) = point_set(&config);
+        let exp = KernelSpec::parse("exp:1").unwrap();
+        let g_rbf = exact_gram(Family::Fourier, &exp, &x);
+        let g_exp = exact_gram(Family::Maclaurin, &exp, &x);
+        let c = (-1.0f64).exp();
+        for i in 0..x.rows() {
+            for j in 0..x.rows() {
+                let want = c * g_exp.get(i, j) as f64;
+                let got = g_rbf.get(i, j) as f64;
+                assert!((got - want).abs() < 1e-4, "({i},{j}): {got} vs {want}");
+            }
+        }
+    }
+}

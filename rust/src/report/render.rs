@@ -1,0 +1,863 @@
+//! Rendering and (de)serialization of the assembled [`Report`].
+//!
+//! Three outputs, all pure functions of the result set so regeneration
+//! from a cached run-log is byte-identical:
+//!
+//! * [`report_json`] / [`decode_report`] — the machine-readable
+//!   `REPORT.json` and its schema decoder (the drift gate);
+//! * [`report_markdown`] — the human `REPORT.md`, with the SVG assets
+//!   of [`build_assets`] embedded as images;
+//! * [`runlog_json`] / [`parse_runlog`] — the resumable run-log.
+
+use super::svg::{self, Series};
+use super::{
+    AccuracyRow, Cell, CellStats, CellStatus, Family, Report, RowOutcome, RunLog, ThreadPoint,
+    FAMILIES, REPORT_VERSION,
+};
+use crate::bench::{fmt_duration, Table};
+use crate::config::json::Json;
+use crate::config::ReportConfig;
+use crate::metrics::Summary;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------- encode
+
+/// Build a JSON object from (key, value) pairs.
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn int(v: usize) -> Json {
+    Json::Num(v as f64)
+}
+
+fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn str_arr(xs: &[String]) -> Json {
+    Json::Arr(xs.iter().map(|x| Json::Str(x.clone())).collect())
+}
+
+fn usize_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| int(x)).collect())
+}
+
+fn summary_json(x: &Summary) -> Json {
+    obj(vec![
+        ("n", int(x.n)),
+        ("mean", num(x.mean)),
+        ("min", num(x.min)),
+        ("p50", num(x.p50)),
+        ("p90", num(x.p90)),
+        ("max", num(x.max)),
+    ])
+}
+
+fn cell_json(c: &Cell) -> Json {
+    let mut fields = vec![
+        ("id", s(&c.id)),
+        ("family", s(&c.family)),
+        ("kernel", s(&c.kernel)),
+        ("projection", s(&c.projection)),
+        ("storage", s(&c.storage)),
+        ("d", int(c.d)),
+    ];
+    match &c.status {
+        CellStatus::Ok(stats) => {
+            fields.push(("status", s("ok")));
+            fields.push(("output_dim", int(stats.output_dim)));
+            fields.push(("err", summary_json(&stats.err)));
+            fields.push(("secs_per_vec", num(stats.secs_per_vec)));
+        }
+        CellStatus::Skipped { reason } => {
+            fields.push(("status", s("skipped")));
+            fields.push(("reason", s(reason)));
+        }
+    }
+    obj(fields)
+}
+
+fn accuracy_json(r: &AccuracyRow) -> Json {
+    let mut fields = vec![
+        ("dataset", s(&r.dataset)),
+        ("kernel", s(&r.kernel)),
+        ("variant", s(&r.variant)),
+    ];
+    match &r.outcome {
+        RowOutcome::Ok { accuracy, train_s, test_s, size } => {
+            fields.push(("status", s("ok")));
+            fields.push(("accuracy", num(*accuracy)));
+            fields.push(("train_s", num(*train_s)));
+            fields.push(("test_s", num(*test_s)));
+            fields.push(("size", int(*size)));
+        }
+        RowOutcome::Skipped { reason } => {
+            fields.push(("status", s("skipped")));
+            fields.push(("reason", s(reason)));
+        }
+    }
+    obj(fields)
+}
+
+fn thread_json(t: &ThreadPoint) -> Json {
+    obj(vec![
+        ("threads", int(t.threads)),
+        ("secs", num(t.secs)),
+        ("speedup", num(t.speedup)),
+    ])
+}
+
+fn grid_json(c: &ReportConfig) -> Json {
+    obj(vec![
+        ("quick", Json::Bool(c.quick)),
+        ("dim", int(c.dim)),
+        ("points", int(c.points)),
+        ("runs", int(c.runs)),
+        ("d_sweep", usize_arr(&c.d_sweep)),
+        ("kernels", str_arr(&c.kernels)),
+        ("threads_sweep", usize_arr(&c.threads_sweep)),
+        ("datasets", str_arr(&c.datasets)),
+        ("scale", num(c.scale)),
+        ("accuracy_features", int(c.accuracy_features)),
+    ])
+}
+
+/// The full `REPORT.json` document (wrapped in a top-level `"report"`
+/// object so the format is self-identifying).
+pub fn report_json(report: &Report, assets: &[String]) -> Json {
+    obj(vec![(
+        "report",
+        obj(vec![
+            ("version", int(report.version as usize)),
+            ("mode", s(&report.mode)),
+            // A string, not a JSON number: u64 seeds above 2^53 would
+            // silently round through f64 and disagree with the exact
+            // seed recorded inside the fingerprint.
+            ("seed", s(&report.seed.to_string())),
+            ("fingerprint", s(&report.fingerprint)),
+            ("generated_by", s("rfdot report")),
+            ("grid", grid_json(&report.config)),
+            ("cells", Json::Arr(report.cells.iter().map(cell_json).collect())),
+            ("accuracy", Json::Arr(report.accuracy.iter().map(accuracy_json).collect())),
+            ("threads", Json::Arr(report.threads.iter().map(thread_json).collect())),
+            ("assets", str_arr(assets)),
+        ]),
+    )])
+}
+
+/// The resumable run-log document.
+pub fn runlog_json(log: &RunLog) -> Json {
+    let cells: BTreeMap<String, Json> =
+        log.cells.iter().map(|(k, v)| (k.clone(), cell_json(v))).collect();
+    let mut fields = vec![("fingerprint", s(&log.fingerprint)), ("cells", Json::Obj(cells))];
+    if let Some(rows) = &log.accuracy {
+        fields.push(("accuracy", Json::Arr(rows.iter().map(accuracy_json).collect())));
+    }
+    if let Some(points) = &log.threads {
+        fields.push(("threads", Json::Arr(points.iter().map(thread_json).collect())));
+    }
+    obj(fields)
+}
+
+// ---------------------------------------------------------------- decode
+
+fn req_str(v: &Json, k: &str) -> Result<String> {
+    v.req(k)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| Error::Config(format!("report field {k:?} must be a string")))
+}
+
+fn req_f64(v: &Json, k: &str) -> Result<f64> {
+    v.req(k)?
+        .as_f64()
+        .ok_or_else(|| Error::Config(format!("report field {k:?} must be a number")))
+}
+
+fn req_usize(v: &Json, k: &str) -> Result<usize> {
+    v.req(k)?
+        .as_usize()
+        .ok_or_else(|| Error::Config(format!("report field {k:?} must be a non-negative int")))
+}
+
+fn req_arr<'a>(v: &'a Json, k: &str) -> Result<&'a [Json]> {
+    v.req(k)?
+        .as_arr()
+        .ok_or_else(|| Error::Config(format!("report field {k:?} must be an array")))
+}
+
+fn decode_summary(v: &Json) -> Result<Summary> {
+    Ok(Summary {
+        n: req_usize(v, "n")?,
+        mean: req_f64(v, "mean")?,
+        min: req_f64(v, "min")?,
+        p50: req_f64(v, "p50")?,
+        p90: req_f64(v, "p90")?,
+        max: req_f64(v, "max")?,
+    })
+}
+
+fn decode_cell(v: &Json) -> Result<Cell> {
+    let family = req_str(v, "family")?;
+    Family::parse(&family)?;
+    let status = match req_str(v, "status")?.as_str() {
+        "ok" => CellStatus::Ok(CellStats {
+            output_dim: req_usize(v, "output_dim")?,
+            err: decode_summary(v.req("err")?)?,
+            secs_per_vec: req_f64(v, "secs_per_vec")?,
+        }),
+        "skipped" => {
+            let reason = req_str(v, "reason")?;
+            if reason.is_empty() {
+                return Err(Error::Config("skipped cells must carry a reason".into()));
+            }
+            CellStatus::Skipped { reason }
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "cell status must be \"ok\" or \"skipped\", got {other:?}"
+            )))
+        }
+    };
+    Ok(Cell {
+        id: req_str(v, "id")?,
+        family,
+        kernel: req_str(v, "kernel")?,
+        projection: req_str(v, "projection")?,
+        storage: req_str(v, "storage")?,
+        d: req_usize(v, "d")?,
+        status,
+    })
+}
+
+fn decode_accuracy(v: &Json) -> Result<AccuracyRow> {
+    let outcome = match req_str(v, "status")?.as_str() {
+        "ok" => RowOutcome::Ok {
+            accuracy: req_f64(v, "accuracy")?,
+            train_s: req_f64(v, "train_s")?,
+            test_s: req_f64(v, "test_s")?,
+            size: req_usize(v, "size")?,
+        },
+        "skipped" => RowOutcome::Skipped { reason: req_str(v, "reason")? },
+        other => {
+            return Err(Error::Config(format!(
+                "accuracy status must be \"ok\" or \"skipped\", got {other:?}"
+            )))
+        }
+    };
+    Ok(AccuracyRow {
+        dataset: req_str(v, "dataset")?,
+        kernel: req_str(v, "kernel")?,
+        variant: req_str(v, "variant")?,
+        outcome,
+    })
+}
+
+fn decode_thread(v: &Json) -> Result<ThreadPoint> {
+    Ok(ThreadPoint {
+        threads: req_usize(v, "threads")?,
+        secs: req_f64(v, "secs")?,
+        speedup: req_f64(v, "speedup")?,
+    })
+}
+
+fn decode_grid(v: &Json, mode: &str, seed: u64) -> Result<ReportConfig> {
+    let quick = v
+        .req("quick")?
+        .as_bool()
+        .ok_or_else(|| Error::Config("grid quick must be a bool".into()))?;
+    if quick != (mode == "quick") {
+        return Err(Error::Config("grid quick flag disagrees with report mode".into()));
+    }
+    Ok(ReportConfig {
+        quick,
+        seed,
+        // Output placement is not part of the recorded grid.
+        out_dir: ".".into(),
+        resume: true,
+        dim: req_usize(v, "dim")?,
+        points: req_usize(v, "points")?,
+        runs: req_usize(v, "runs")?,
+        d_sweep: crate::config::usize_list(req_arr(v, "d_sweep")?, "d_sweep")?,
+        kernels: crate::config::str_list(req_arr(v, "kernels")?, "kernels")?,
+        threads_sweep: crate::config::usize_list(req_arr(v, "threads_sweep")?, "threads_sweep")?,
+        datasets: crate::config::str_list(req_arr(v, "datasets")?, "datasets")?,
+        scale: req_f64(v, "scale")?,
+        accuracy_features: req_usize(v, "accuracy_features")?,
+    })
+}
+
+/// Decode a parsed `REPORT.json` document into the typed [`Report`],
+/// validating the schema version, every status tag and the per-status
+/// required fields — the drift gate behind [`super::parse_report`].
+pub fn decode_report(doc: &Json) -> Result<Report> {
+    let v = doc.req("report")?;
+    let version = req_usize(v, "version")? as u64;
+    if version != REPORT_VERSION {
+        return Err(Error::Config(format!(
+            "report schema version {version} != supported {REPORT_VERSION}"
+        )));
+    }
+    let mode = req_str(v, "mode")?;
+    if mode != "quick" && mode != "full" {
+        return Err(Error::Config(format!("report mode must be quick|full, got {mode:?}")));
+    }
+    let seed = req_str(v, "seed")?
+        .parse::<u64>()
+        .map_err(|_| Error::Config("report seed must be a u64 string".into()))?;
+    let config = decode_grid(v.req("grid")?, &mode, seed)?;
+    let cells = req_arr(v, "cells")?.iter().map(decode_cell).collect::<Result<Vec<_>>>()?;
+    let accuracy =
+        req_arr(v, "accuracy")?.iter().map(decode_accuracy).collect::<Result<Vec<_>>>()?;
+    let threads =
+        req_arr(v, "threads")?.iter().map(decode_thread).collect::<Result<Vec<_>>>()?;
+    // Assets must be declared (the markdown references them).
+    crate::config::str_list(req_arr(v, "assets")?, "assets")?;
+    Ok(Report {
+        version,
+        mode,
+        seed,
+        fingerprint: req_str(v, "fingerprint")?,
+        config,
+        cells,
+        accuracy,
+        threads,
+    })
+}
+
+/// Decode a run-log document (tolerant counterpart of [`runlog_json`]:
+/// `accuracy`/`threads` may be absent while a run is in flight).
+pub fn parse_runlog(text: &str, path: PathBuf) -> Result<RunLog> {
+    let doc = Json::parse(text)?;
+    let fingerprint = req_str(&doc, "fingerprint")?;
+    let mut cells = BTreeMap::new();
+    match doc.req("cells")? {
+        Json::Obj(map) => {
+            for (k, v) in map {
+                cells.insert(k.clone(), decode_cell(v)?);
+            }
+        }
+        _ => return Err(Error::Config("run-log cells must be an object".into())),
+    }
+    let accuracy = match doc.get("accuracy") {
+        Some(v) => Some(
+            v.as_arr()
+                .ok_or_else(|| Error::Config("run-log accuracy must be an array".into()))?
+                .iter()
+                .map(decode_accuracy)
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        None => None,
+    };
+    let threads = match doc.get("threads") {
+        Some(v) => Some(
+            v.as_arr()
+                .ok_or_else(|| Error::Config("run-log threads must be an array".into()))?
+                .iter()
+                .map(decode_thread)
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        None => None,
+    };
+    Ok(RunLog { fingerprint, cells, accuracy, threads, path })
+}
+
+// ---------------------------------------------------------------- assets
+
+/// Find a live cell's stats by grid coordinates.
+fn find_stats<'a>(
+    report: &'a Report,
+    family: Family,
+    kernel: &str,
+    projection: &str,
+    storage: &str,
+    d: usize,
+) -> Option<&'a CellStats> {
+    report
+        .cells
+        .iter()
+        .find(|c| {
+            c.family == family.id()
+                && c.kernel == kernel
+                && c.projection == projection
+                && c.storage == storage
+                && c.d == d
+        })
+        .and_then(|c| match &c.status {
+            CellStatus::Ok(stats) => Some(stats),
+            CellStatus::Skipped { .. } => None,
+        })
+}
+
+/// Error-vs-D series for one family: one line per (kernel, projection)
+/// with live cells, on dense storage (storage changes cost, never
+/// error, by the sparse parity contract).
+fn error_series(report: &Report, family: Family) -> Vec<Series> {
+    let mut series = Vec::new();
+    for kernel in &report.config.kernels {
+        for projection in ["dense", "structured"] {
+            let points: Vec<(f64, f64)> = report
+                .config
+                .d_sweep
+                .iter()
+                .filter_map(|&d| {
+                    find_stats(report, family, kernel, projection, "dense", d)
+                        .map(|stats| (d as f64, stats.err.mean))
+                })
+                .collect();
+            if !points.is_empty() {
+                series.push(Series { label: format!("{kernel} ({projection})"), points });
+            }
+        }
+    }
+    series
+}
+
+/// Speedup bars for one family, at every D of the sweep: sparse storage
+/// vs dense storage, and structured vs dense projection, both measured
+/// against the same dense/dense baseline cell (first kernel with a
+/// live baseline wins; all kernels share shapes so the cost story is
+/// the same).
+fn speedup_bars(report: &Report, family: Family) -> Vec<(String, f64)> {
+    let mut bars = Vec::new();
+    for &d in &report.config.d_sweep {
+        for kernel in &report.config.kernels {
+            let Some(base) = find_stats(report, family, kernel, "dense", "dense", d) else {
+                continue;
+            };
+            let base_secs = base.secs_per_vec.max(1e-12);
+            if let Some(sp) = find_stats(report, family, kernel, "dense", "sparse", d) {
+                bars.push((format!("sparse D{d}"), base_secs / sp.secs_per_vec.max(1e-12)));
+            }
+            if let Some(st) = find_stats(report, family, kernel, "structured", "dense", d) {
+                bars.push((format!("structured D{d}"), base_secs / st.secs_per_vec.max(1e-12)));
+            }
+            break;
+        }
+    }
+    bars
+}
+
+/// All SVG assets as `(relative path, content)` pairs: per-family
+/// error-vs-D curves and speedup bars, plus the thread-scaling chart.
+pub fn build_assets(report: &Report) -> Vec<(String, String)> {
+    let mut assets = Vec::new();
+    for family in FAMILIES {
+        assets.push((
+            format!("report/error_{}.svg", family.id()),
+            svg::line_chart(
+                &format!("{}: gram error vs D (log-log)", family.display()),
+                "D (output features)",
+                "mean |<Z(x),Z(y)> - K(x,y)|",
+                &error_series(report, family),
+            ),
+        ));
+        assets.push((
+            format!("report/speedup_{}.svg", family.id()),
+            svg::bar_chart(
+                &format!("{}: per-input transform speedup vs dense/dense", family.display()),
+                "x faster than dense/dense",
+                &speedup_bars(report, family),
+            ),
+        ));
+    }
+    let thread_bars: Vec<(String, f64)> = report
+        .threads
+        .iter()
+        .map(|t| (format!("{} threads", t.threads), t.speedup))
+        .collect();
+    assets.push((
+        "report/threads.svg".to_string(),
+        svg::bar_chart(
+            "transform_batch thread scaling (Random Maclaurin)",
+            "speedup vs 1 thread",
+            &thread_bars,
+        ),
+    ));
+    assets
+}
+
+// -------------------------------------------------------------- markdown
+
+/// Render `REPORT.md` — the human-facing reproduction evidence, with
+/// every table derived from the same result set as `REPORT.json` and
+/// the assets embedded as images.
+pub fn report_markdown(report: &Report, assets: &[String]) -> String {
+    let c = &report.config;
+    let mut md = String::new();
+    md.push_str("# rfdot reproduction report\n\n");
+    md.push_str(&format!(
+        "> Generated by `rfdot report` (mode: **{}**, seed: {}, schema v{}).\n\
+         > Do not edit by hand — rerun `rfdot report{}` to regenerate; the\n\
+         > paired `REPORT.json` carries the same data machine-readably.\n\n",
+        report.mode,
+        report.seed,
+        report.version,
+        if report.mode == "quick" { " --quick" } else { "" },
+    ));
+    md.push_str(
+        "The grid below is the paper's evidence regenerated from the current\n\
+         code: Kar & Karnick's Figure-1 claim that `<Z(x), Z(y)>` approaches\n\
+         `f(<x, y>)` as D grows, the Table-1 claim that random features match\n\
+         exact kernel SVMs at a fraction of the cost, and this repo's own\n\
+         claims about structured (FWHT) projections, the sparse CSR pipeline\n\
+         and the data-parallel thread fan-out.\n\n",
+    );
+
+    md.push_str("## Grid\n\n");
+    let mut t = Table::new(&["axis", "values"]);
+    t.row(&["families".into(), FAMILIES.map(|f| f.id()).join(", ")]);
+    t.row(&["kernels".into(), c.kernels.join(", ")]);
+    t.row(&["projections".into(), "dense, structured".into()]);
+    t.row(&["storage".into(), "dense, sparse (CSR)".into()]);
+    t.row(&["D sweep".into(), join_usizes(&c.d_sweep)]);
+    t.row(&[
+        "gram points".into(),
+        format!("{} unit vectors in R^{} (~25% density)", c.points, c.dim),
+    ]);
+    t.row(&["maps per cell".into(), format!("{}", c.runs)]);
+    t.row(&["threads sweep".into(), join_usizes(&c.threads_sweep)]);
+    t.row(&["datasets".into(), format!("{} (scale {})", c.datasets.join(", "), c.scale)]);
+    md.push_str(&t.render());
+    md.push('\n');
+
+    md.push_str("## Kernel approximation error (Figure 1)\n\n");
+    md.push_str(
+        "Mean absolute Gram error per cell, over independently resampled\n\
+         maps (nearest-rank percentiles). Sparse-storage cells are omitted\n\
+         here: by the sparse parity contract their errors equal the dense\n\
+         ones bit for bit — storage only moves the cost column below.\n\n",
+    );
+    for family in FAMILIES {
+        md.push_str(&format!("### {}\n\n", family.display()));
+        md.push_str(&format!("![error vs D](report/error_{}.svg)\n\n", family.id()));
+        let mut t = Table::new(&[
+            "kernel", "projection", "D", "output dim", "err mean", "err p90", "secs/vec",
+        ]);
+        let mut live = 0;
+        for cell in &report.cells {
+            if cell.family != family.id() || cell.storage != "dense" {
+                continue;
+            }
+            if let CellStatus::Ok(stats) = &cell.status {
+                t.row(&[
+                    cell.kernel.clone(),
+                    cell.projection.clone(),
+                    format!("{}", cell.d),
+                    format!("{}", stats.output_dim),
+                    svg::fmt_num(stats.err.mean),
+                    svg::fmt_num(stats.err.p90),
+                    fmt_duration(stats.secs_per_vec),
+                ]);
+                live += 1;
+            }
+        }
+        if live > 0 {
+            md.push_str(&t.render());
+        } else {
+            md.push_str("(no applicable cells for this family — see Skipped cells)\n");
+        }
+        md.push('\n');
+    }
+
+    md.push_str("## Transform cost: dense vs structured vs sparse\n\n");
+    md.push_str(
+        "Per-input batch-transform speedups against each family's\n\
+         dense-projection / dense-storage baseline cell (same data, same\n\
+         D): the structured bars realize the `O(D log d)` FWHT projections,\n\
+         the sparse bars the `O(D nnz)` CSR kernels.\n\n",
+    );
+    for family in FAMILIES {
+        md.push_str(&format!(
+            "![{} speedups](report/speedup_{}.svg)\n\n",
+            family.display(),
+            family.id(),
+        ));
+    }
+
+    md.push_str("## Accuracy (Table 1)\n\n");
+    md.push_str(
+        "Exact kernel SVM vs every feature-map family + linear SVM, per\n\
+         dataset and kernel (timings include map construction and\n\
+         application, the paper's protocol).\n\n",
+    );
+    let mut t = Table::new(&["dataset", "kernel", "variant", "acc", "trn", "tst", "size", "note"]);
+    for row in &report.accuracy {
+        match &row.outcome {
+            RowOutcome::Ok { accuracy, train_s, test_s, size } => t.row(&[
+                row.dataset.clone(),
+                row.kernel.clone(),
+                row.variant.clone(),
+                format!("{:.2}%", accuracy * 100.0),
+                fmt_duration(*train_s),
+                fmt_duration(*test_s),
+                format!("{size}"),
+                String::new(),
+            ]),
+            RowOutcome::Skipped { reason } => t.row(&[
+                row.dataset.clone(),
+                row.kernel.clone(),
+                row.variant.clone(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("skipped: {reason}"),
+            ]),
+        }
+    }
+    md.push_str(&t.render());
+    md.push('\n');
+
+    md.push_str("## Thread scaling\n\n");
+    md.push_str("![thread scaling](report/threads.svg)\n\n");
+    let mut t = Table::new(&["threads", "secs/batch", "speedup"]);
+    for p in &report.threads {
+        t.row(&[
+            format!("{}", p.threads),
+            fmt_duration(p.secs),
+            format!("{:.2}x", p.speedup),
+        ]);
+    }
+    md.push_str(&t.render());
+    md.push('\n');
+
+    md.push_str("## Skipped cells\n\n");
+    md.push_str(
+        "Every declared cell the grid could not run, with its reason —\n\
+         nothing is silently dropped.\n\n",
+    );
+    let mut t = Table::new(&["cell", "reason"]);
+    let mut skipped = 0;
+    for cell in &report.cells {
+        if let CellStatus::Skipped { reason } = &cell.status {
+            t.row(&[cell.id.clone(), reason.clone()]);
+            skipped += 1;
+        }
+    }
+    if skipped > 0 {
+        md.push_str(&t.render());
+    } else {
+        md.push_str("(none)\n");
+    }
+    md.push('\n');
+
+    md.push_str("## Assets\n\n");
+    for a in assets {
+        md.push_str(&format!("- `{a}`\n"));
+    }
+    md.push_str(&format!(
+        "\n<!-- fingerprint: {} -->\n",
+        report.fingerprint.replace("--", "- -"),
+    ));
+    md
+}
+
+fn join_usizes(xs: &[usize]) -> String {
+    xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")
+}
+
+// --------------------------------------------------------------- write
+
+/// Write `REPORT.json`, `REPORT.md` and every SVG asset under
+/// `out_dir` (assets under `out_dir/report/`).
+pub fn write_all(report: &Report, out_dir: &Path) -> Result<()> {
+    let assets = build_assets(report);
+    for (rel, content) in &assets {
+        std::fs::write(out_dir.join(rel), content)?;
+    }
+    let names: Vec<String> = assets.iter().map(|(n, _)| n.clone()).collect();
+    std::fs::write(out_dir.join("REPORT.json"), report_json(report, &names).pretty())?;
+    std::fs::write(out_dir.join("REPORT.md"), report_markdown(report, &names))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_report() -> Report {
+        let mut config = ReportConfig::quick();
+        config.kernels = vec!["poly:3:1".into()];
+        config.d_sweep = vec![16];
+        let ok = Cell {
+            id: "rm|poly:3:1|dense|dense|D16".into(),
+            family: "rm".into(),
+            kernel: "poly:3:1".into(),
+            projection: "dense".into(),
+            storage: "dense".into(),
+            d: 16,
+            status: CellStatus::Ok(CellStats {
+                output_dim: 16,
+                err: Summary::from_samples(&[0.5, 0.3]),
+                secs_per_vec: 1.5e-6,
+            }),
+        };
+        let sparse = Cell {
+            id: "rm|poly:3:1|dense|sparse|D16".into(),
+            storage: "sparse".into(),
+            status: CellStatus::Ok(CellStats {
+                output_dim: 16,
+                err: Summary::from_samples(&[0.5, 0.3]),
+                secs_per_vec: 0.5e-6,
+            }),
+            ..ok.clone()
+        };
+        let skipped = Cell {
+            id: "rff|poly:3:1|dense|dense|D16".into(),
+            family: "rff".into(),
+            status: CellStatus::Skipped { reason: "not shift-invariant".into() },
+            ..ok.clone()
+        };
+        Report {
+            version: REPORT_VERSION,
+            mode: "quick".into(),
+            seed: 42,
+            fingerprint: config.fingerprint(),
+            config,
+            cells: vec![ok, sparse, skipped],
+            accuracy: vec![
+                AccuracyRow {
+                    dataset: "nursery".into(),
+                    kernel: "poly:3:1".into(),
+                    variant: "K+SMO".into(),
+                    outcome: RowOutcome::Ok {
+                        accuracy: 0.9,
+                        train_s: 1.0,
+                        test_s: 0.5,
+                        size: 100,
+                    },
+                },
+                AccuracyRow {
+                    dataset: "nursery".into(),
+                    kernel: "poly:3:1".into(),
+                    variant: "RFF+LIN".into(),
+                    outcome: RowOutcome::Skipped { reason: "exponential kernels only".into() },
+                },
+            ],
+            threads: vec![
+                ThreadPoint { threads: 1, secs: 1.0, speedup: 1.0 },
+                ThreadPoint { threads: 2, secs: 0.6, speedup: 1.667 },
+            ],
+        }
+    }
+
+    #[test]
+    fn report_json_round_trips_through_decode() {
+        let report = tiny_report();
+        let doc = report_json(&report, &["report/error_rm.svg".into()]);
+        let text = doc.pretty();
+        let back = decode_report(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.cells.len(), 3);
+        assert_eq!(back.mode, "quick");
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.fingerprint, report.fingerprint);
+        assert_eq!(back.config.d_sweep, vec![16]);
+        match &back.cells[0].status {
+            CellStatus::Ok(stats) => {
+                assert_eq!(stats.output_dim, 16);
+                assert_eq!(stats.err.n, 2);
+                assert!((stats.err.mean - 0.4).abs() < 1e-12);
+            }
+            CellStatus::Skipped { .. } => panic!("cell 0 must be ok"),
+        }
+        match &back.cells[2].status {
+            CellStatus::Skipped { reason } => assert_eq!(reason, "not shift-invariant"),
+            CellStatus::Ok(_) => panic!("cell 2 must be skipped"),
+        }
+        // Encoding is deterministic.
+        assert_eq!(text, report_json(&report, &["report/error_rm.svg".into()]).pretty());
+
+        // Seeds above 2^53 survive the round-trip exactly (they travel
+        // as strings, not JSON numbers).
+        let mut big = tiny_report();
+        big.seed = (1u64 << 53) + 1;
+        let redecoded =
+            decode_report(&Json::parse(&report_json(&big, &[]).pretty()).unwrap()).unwrap();
+        assert_eq!(redecoded.seed, (1u64 << 53) + 1);
+    }
+
+    #[test]
+    fn decode_rejects_drift() {
+        let report = tiny_report();
+        let good = report_json(&report, &[]).pretty();
+        // Version bump = drift.
+        let bad = good.replace("\"version\": 1", "\"version\": 2");
+        assert!(decode_report(&Json::parse(&bad).unwrap()).is_err());
+        // Unknown status tag = drift.
+        let bad = good.replace("\"status\": \"skipped\"", "\"status\": \"pending\"");
+        assert!(decode_report(&Json::parse(&bad).unwrap()).is_err());
+        // A skipped cell without a reason = drift.
+        let bad = good.replace("\"reason\": \"not shift-invariant\"", "\"reason\": \"\"");
+        assert!(decode_report(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn runlog_round_trips_and_tolerates_partial_logs() {
+        let report = tiny_report();
+        let mut cells = BTreeMap::new();
+        for c in &report.cells {
+            cells.insert(c.id.clone(), c.clone());
+        }
+        let log = RunLog {
+            fingerprint: "fp".into(),
+            cells,
+            accuracy: None,
+            threads: Some(report.threads.clone()),
+            path: PathBuf::from("/tmp/x"),
+        };
+        let text = runlog_json(&log).pretty();
+        let back = parse_runlog(&text, PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(back.fingerprint, "fp");
+        assert_eq!(back.cells.len(), 3);
+        assert!(back.accuracy.is_none());
+        assert_eq!(back.threads.as_ref().map(Vec::len), Some(2));
+    }
+
+    #[test]
+    fn markdown_contains_every_section_and_skip() {
+        let report = tiny_report();
+        let assets: Vec<String> = build_assets(&report).into_iter().map(|(n, _)| n).collect();
+        let md = report_markdown(&report, &assets);
+        for section in [
+            "# rfdot reproduction report",
+            "## Grid",
+            "## Kernel approximation error (Figure 1)",
+            "## Transform cost: dense vs structured vs sparse",
+            "## Accuracy (Table 1)",
+            "## Thread scaling",
+            "## Skipped cells",
+        ] {
+            assert!(md.contains(section), "missing {section:?}");
+        }
+        assert!(md.contains("not shift-invariant"));
+        assert!(md.contains("report/error_rm.svg"));
+        assert!(md.contains("90.00%"));
+        // Deterministic rendering.
+        assert_eq!(md, report_markdown(&report, &assets));
+    }
+
+    #[test]
+    fn assets_cover_every_family() {
+        let report = tiny_report();
+        let assets = build_assets(&report);
+        for family in FAMILIES {
+            assert!(assets.iter().any(|(n, _)| n.contains(&format!("error_{}", family.id()))));
+            assert!(
+                assets.iter().any(|(n, _)| n.contains(&format!("speedup_{}", family.id())))
+            );
+        }
+        assert!(assets.iter().any(|(n, _)| n.ends_with("threads.svg")));
+        // The rm speedup chart sees the 3x sparse win of the tiny report.
+        let (_, rm_speedup) =
+            assets.iter().find(|(n, _)| n.contains("speedup_rm")).unwrap();
+        assert!(rm_speedup.contains("3.00x"), "sparse bar should read 3.00x");
+    }
+}

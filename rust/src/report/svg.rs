@@ -1,0 +1,313 @@
+//! Minimal deterministic SVG plotting (no external crates).
+//!
+//! The report's two chart shapes — error-vs-D line charts and speedup
+//! bar charts — rendered as hand-written SVG text, in the same spirit
+//! as `benches/micro.rs` writing its JSON baselines by hand. Output is
+//! a pure function of the input data with fixed-precision coordinate
+//! formatting, so regenerating a report from cached results reproduces
+//! every asset byte for byte (the regeneration contract of
+//! [`crate::report`]).
+
+/// One polyline of a [`line_chart`].
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    /// `(x, y)` points, plotted in the given order.
+    pub points: Vec<(f64, f64)>,
+}
+
+const WIDTH: f64 = 720.0;
+const HEIGHT: f64 = 400.0;
+/// Plot-area margins: left, right (legend gutter), top, bottom.
+const MARGIN: (f64, f64, f64, f64) = (70.0, 190.0, 40.0, 50.0);
+/// Color cycle (shared by lines and bars).
+const COLORS: [&str; 6] = ["#1f77b4", "#d62728", "#2ca02c", "#9467bd", "#ff7f0e", "#8c564b"];
+
+/// Escape text nodes / attribute values.
+fn xml_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '"' => out.push_str("&quot;"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Tick/legend number formatting: fixed precision per magnitude band so
+/// output is deterministic and compact (shared with the markdown
+/// renderer in [`super::render`]).
+pub(crate) fn fmt_num(v: f64) -> String {
+    let a = v.abs();
+    if v == 0.0 {
+        "0".into()
+    } else if a >= 1000.0 || a < 0.001 {
+        format!("{v:.1e}")
+    } else if a >= 100.0 {
+        format!("{v:.0}")
+    } else if a >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+fn header(title: &str) -> String {
+    format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" viewBox=\"0 0 {WIDTH:.0} {HEIGHT:.0}\" \
+         font-family=\"sans-serif\" font-size=\"12\">\n\
+         <rect width=\"{WIDTH:.0}\" height=\"{HEIGHT:.0}\" fill=\"white\"/>\n\
+         <text x=\"{:.0}\" y=\"22\" font-size=\"15\" text-anchor=\"middle\">{}</text>\n",
+        WIDTH / 2.0,
+        xml_escape(title),
+    )
+}
+
+/// Linear map from a data range onto a pixel range (degenerate ranges
+/// land mid-span so single-point series stay visible).
+fn scale(v: f64, lo: f64, hi: f64, px_lo: f64, px_hi: f64) -> f64 {
+    if hi > lo {
+        px_lo + (v - lo) / (hi - lo) * (px_hi - px_lo)
+    } else {
+        (px_lo + px_hi) / 2.0
+    }
+}
+
+/// A log-log line chart (the Figure-1 shape: error vs D on doubling
+/// axes). Points with non-positive coordinates are dropped (they have
+/// no logarithm); an empty chart renders a "no data" placeholder so
+/// per-family assets always exist.
+pub fn line_chart(title: &str, x_label: &str, y_label: &str, series: &[Series]) -> String {
+    let (ml, mr, mt, mb) = MARGIN;
+    let (px0, px1) = (ml, WIDTH - mr);
+    let (py0, py1) = (HEIGHT - mb, mt);
+    let mut svg = header(title);
+
+    let logs: Vec<(usize, Vec<(f64, f64)>)> = series
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let pts = s
+                .points
+                .iter()
+                .filter(|(x, y)| *x > 0.0 && *y > 0.0)
+                .map(|(x, y)| (x.log10(), y.log10()))
+                .collect();
+            (i, pts)
+        })
+        .collect();
+    let all: Vec<(f64, f64)> = logs.iter().flat_map(|(_, pts)| pts.iter().copied()).collect();
+    if all.is_empty() {
+        svg.push_str(&format!(
+            "<text x=\"{:.0}\" y=\"{:.0}\" text-anchor=\"middle\" fill=\"#888\">\
+             no applicable cells</text>\n</svg>\n",
+            WIDTH / 2.0,
+            HEIGHT / 2.0,
+        ));
+        return svg;
+    }
+    let (mut xlo, mut xhi) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ylo, mut yhi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (x, y) in &all {
+        xlo = xlo.min(*x);
+        xhi = xhi.max(*x);
+        ylo = ylo.min(*y);
+        yhi = yhi.max(*y);
+    }
+
+    // Axes + 4 ticks per axis (even fractions of the log range, labeled
+    // in linear units).
+    svg.push_str(&format!(
+        "<line x1=\"{px0:.1}\" y1=\"{py0:.1}\" x2=\"{px1:.1}\" y2=\"{py0:.1}\" stroke=\"#333\"/>\n\
+         <line x1=\"{px0:.1}\" y1=\"{py0:.1}\" x2=\"{px0:.1}\" y2=\"{py1:.1}\" stroke=\"#333\"/>\n",
+    ));
+    for k in 0..4 {
+        let f = k as f64 / 3.0;
+        let lx = xlo + f * (xhi - xlo);
+        let ly = ylo + f * (yhi - ylo);
+        let px = scale(lx, xlo, xhi, px0, px1);
+        let py = scale(ly, ylo, yhi, py0, py1);
+        svg.push_str(&format!(
+            "<line x1=\"{px:.1}\" y1=\"{py0:.1}\" x2=\"{px:.1}\" y2=\"{:.1}\" stroke=\"#333\"/>\n\
+             <text x=\"{px:.1}\" y=\"{:.1}\" text-anchor=\"middle\">{}</text>\n",
+            py0 + 5.0,
+            py0 + 18.0,
+            xml_escape(&fmt_num(10f64.powf(lx))),
+        ));
+        svg.push_str(&format!(
+            "<line x1=\"{:.1}\" y1=\"{py:.1}\" x2=\"{px0:.1}\" y2=\"{py:.1}\" stroke=\"#333\"/>\n\
+             <text x=\"{:.1}\" y=\"{:.1}\" text-anchor=\"end\">{}</text>\n",
+            px0 - 5.0,
+            px0 - 8.0,
+            py + 4.0,
+            xml_escape(&fmt_num(10f64.powf(ly))),
+        ));
+    }
+    svg.push_str(&format!(
+        "<text x=\"{:.1}\" y=\"{:.1}\" text-anchor=\"middle\">{}</text>\n",
+        (px0 + px1) / 2.0,
+        HEIGHT - 12.0,
+        xml_escape(x_label),
+    ));
+    svg.push_str(&format!(
+        "<text x=\"16\" y=\"{:.1}\" text-anchor=\"middle\" \
+         transform=\"rotate(-90 16 {:.1})\">{}</text>\n",
+        (py0 + py1) / 2.0,
+        (py0 + py1) / 2.0,
+        xml_escape(y_label),
+    ));
+
+    // Series polylines + markers + legend.
+    let mut legend_row = 0usize;
+    for (i, pts) in &logs {
+        if pts.is_empty() {
+            continue;
+        }
+        let color = COLORS[i % COLORS.len()];
+        let coords: Vec<String> = pts
+            .iter()
+            .map(|(x, y)| {
+                format!(
+                    "{:.1},{:.1}",
+                    scale(*x, xlo, xhi, px0, px1),
+                    scale(*y, ylo, yhi, py0, py1)
+                )
+            })
+            .collect();
+        svg.push_str(&format!(
+            "<polyline points=\"{}\" fill=\"none\" stroke=\"{color}\" stroke-width=\"2\"/>\n",
+            coords.join(" "),
+        ));
+        for c in &coords {
+            let (cx, cy) = c.split_once(',').expect("formatted above");
+            svg.push_str(&format!("<circle cx=\"{cx}\" cy=\"{cy}\" r=\"3\" fill=\"{color}\"/>\n"));
+        }
+        let ly = py1 + 10.0 + legend_row as f64 * 18.0;
+        svg.push_str(&format!(
+            "<line x1=\"{:.1}\" y1=\"{ly:.1}\" x2=\"{:.1}\" y2=\"{ly:.1}\" \
+             stroke=\"{color}\" stroke-width=\"2\"/>\n\
+             <text x=\"{:.1}\" y=\"{:.1}\">{}</text>\n",
+            px1 + 10.0,
+            px1 + 34.0,
+            px1 + 40.0,
+            ly + 4.0,
+            xml_escape(&series[*i].label),
+        ));
+        legend_row += 1;
+    }
+    svg.push_str("</svg>\n");
+    svg
+}
+
+/// A labeled vertical bar chart (the speedup shape). Bar values are
+/// printed above each bar; the dashed line marks 1× (parity). An empty
+/// input renders the same "no data" placeholder as [`line_chart`].
+pub fn bar_chart(title: &str, y_label: &str, bars: &[(String, f64)]) -> String {
+    let (ml, _, mt, mb) = MARGIN;
+    let (px0, px1) = (ml, WIDTH - 30.0);
+    let (py0, py1) = (HEIGHT - mb, mt);
+    let mut svg = header(title);
+    if bars.is_empty() {
+        svg.push_str(&format!(
+            "<text x=\"{:.0}\" y=\"{:.0}\" text-anchor=\"middle\" fill=\"#888\">\
+             no applicable cells</text>\n</svg>\n",
+            WIDTH / 2.0,
+            HEIGHT / 2.0,
+        ));
+        return svg;
+    }
+    let vmax = bars.iter().fold(1.0f64, |m, (_, v)| m.max(*v));
+    svg.push_str(&format!(
+        "<line x1=\"{px0:.1}\" y1=\"{py0:.1}\" x2=\"{px1:.1}\" y2=\"{py0:.1}\" stroke=\"#333\"/>\n\
+         <line x1=\"{px0:.1}\" y1=\"{py0:.1}\" x2=\"{px0:.1}\" y2=\"{py1:.1}\" stroke=\"#333\"/>\n",
+    ));
+    // Parity line at 1x.
+    let parity = scale(1.0, 0.0, vmax, py0, py1);
+    svg.push_str(&format!(
+        "<line x1=\"{px0:.1}\" y1=\"{parity:.1}\" x2=\"{px1:.1}\" y2=\"{parity:.1}\" \
+         stroke=\"#999\" stroke-dasharray=\"4 3\"/>\n\
+         <text x=\"{:.1}\" y=\"{:.1}\" text-anchor=\"end\" fill=\"#999\">1x</text>\n",
+        px0 - 5.0,
+        parity + 4.0,
+    ));
+    svg.push_str(&format!(
+        "<text x=\"16\" y=\"{:.1}\" text-anchor=\"middle\" \
+         transform=\"rotate(-90 16 {:.1})\">{}</text>\n",
+        (py0 + py1) / 2.0,
+        (py0 + py1) / 2.0,
+        xml_escape(y_label),
+    ));
+    let slot = (px1 - px0) / bars.len() as f64;
+    let bar_w = (slot * 0.6).min(60.0);
+    for (i, (label, v)) in bars.iter().enumerate() {
+        let color = COLORS[i % COLORS.len()];
+        let cx = px0 + (i as f64 + 0.5) * slot;
+        let top = scale(v.max(0.0), 0.0, vmax, py0, py1);
+        svg.push_str(&format!(
+            "<rect x=\"{:.1}\" y=\"{top:.1}\" width=\"{bar_w:.1}\" height=\"{:.1}\" \
+             fill=\"{color}\"/>\n\
+             <text x=\"{cx:.1}\" y=\"{:.1}\" text-anchor=\"middle\">{}</text>\n\
+             <text x=\"{cx:.1}\" y=\"{:.1}\" text-anchor=\"middle\">{}x</text>\n",
+            cx - bar_w / 2.0,
+            py0 - top,
+            py0 + 18.0,
+            xml_escape(label),
+            top - 6.0,
+            xml_escape(&fmt_num(*v)),
+        ));
+    }
+    svg.push_str("</svg>\n");
+    svg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series() -> Vec<Series> {
+        vec![
+            Series {
+                label: "poly (dense)".into(),
+                points: vec![(16.0, 0.5), (32.0, 0.35), (64.0, 0.25)],
+            },
+            Series { label: "exp <&> structured".into(), points: vec![(16.0, 0.4), (64.0, 0.2)] },
+        ]
+    }
+
+    #[test]
+    fn line_chart_is_wellformed_and_deterministic() {
+        let a = line_chart("error vs D", "D", "mean |err|", &series());
+        let b = line_chart("error vs D", "D", "mean |err|", &series());
+        assert_eq!(a, b, "same data must render identical bytes");
+        assert!(a.starts_with("<svg"));
+        assert!(a.ends_with("</svg>\n"));
+        assert_eq!(a.matches("<polyline").count(), 2);
+        assert!(a.contains("&lt;&amp;&gt;"), "labels must be XML-escaped");
+        // Tag balance (crude well-formedness check).
+        assert_eq!(a.matches("<svg").count(), a.matches("</svg>").count());
+        assert_eq!(a.matches("<text").count(), a.matches("</text>").count());
+    }
+
+    #[test]
+    fn line_chart_drops_nonpositive_points_and_survives_empty() {
+        let s = vec![Series { label: "bad".into(), points: vec![(0.0, 1.0), (4.0, -1.0)] }];
+        let svg = line_chart("t", "x", "y", &s);
+        assert!(svg.contains("no applicable cells"));
+        let empty = line_chart("t", "x", "y", &[]);
+        assert!(empty.contains("no applicable cells"));
+    }
+
+    #[test]
+    fn bar_chart_renders_bars_and_parity_line() {
+        let bars = vec![("sparse D64".to_string(), 5.2), ("structured D64".to_string(), 0.8)];
+        let svg = bar_chart("speedup", "x faster", &bars);
+        assert_eq!(svg.matches("<rect").count(), 3, "background + 2 bars");
+        assert!(svg.contains("stroke-dasharray"));
+        assert!(svg.contains("5.20x"));
+        assert!(bar_chart("t", "y", &[]).contains("no applicable cells"));
+    }
+}

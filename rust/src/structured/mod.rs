@@ -90,6 +90,17 @@ impl ProjectionKind {
 /// A fixed stack of random projection directions `w_1..w_rows ∈ R^d`:
 /// `project_into` computes all `⟨w_r, x⟩` for one input.
 ///
+/// This is step 2–3 of the paper's Algorithm 1 made pluggable: the
+/// Random Maclaurin sampler draws its `ω_j ∈ {±1}^d` rows through an
+/// implementation of this trait, and every statistical guarantee it
+/// needs is stated *per row* — each row must be Rademacher (or, for
+/// Fourier stacks, Gaussian) in marginal law, so per-feature
+/// unbiasedness (Lemma 7) and the deterministic estimator bound
+/// `|ω^T x| ≤ ‖x‖₁` behind Lemma 8's `C_Ω = p·f(pR²)` hold for any
+/// implementation. Joint law across rows is implementation-specific:
+/// correlations (HD blocks) perturb the Theorem 12 concentration
+/// *constants*, never the means — see the module docs.
+///
 /// Implementations must make `project_batch` row `i` bit-identical to
 /// `project_into` on row `i` (the crate-wide determinism contract:
 /// batching and threading are scheduling, never semantics).
@@ -171,7 +182,9 @@ pub trait Projection: Send + Sync + std::fmt::Debug {
 /// row-major) so one input streams it row by row and a batch multiplies
 /// it as a single GEMM — exactly the layouts (and, for the Random
 /// Maclaurin path, exactly the float results) of the pre-subsystem hot
-/// paths.
+/// paths. With i.i.d. Rademacher rows this *is* the paper's Algorithm 1
+/// projection stack verbatim: independent rows, so the Theorem 12
+/// concentration constants apply unchanged.
 #[derive(Clone, Debug)]
 pub struct DenseProjection {
     /// `d × rows` (column `r` is direction `w_r`).

@@ -1,0 +1,196 @@
+//! The report subsystem's contract, end to end (ISSUE 4 satellite):
+//!
+//! 1. `REPORT.json` deserializes into the declared schema
+//!    ([`rfdot::report::parse_report`]).
+//! 2. Every requested grid cell is present — `ok` or *explicitly*
+//!    `skipped` with a reason. Nothing is silently dropped.
+//! 3. Regenerating with the same seed and run-log is byte-identical
+//!    (resume reuses every cached cell, including wall-clock timings),
+//!    and the seed-deterministic statistics agree even across *fresh*
+//!    runs (per-cell RNG streams are order-independent).
+
+use rfdot::config::ReportConfig;
+use rfdot::report::{self, CellStatus, RowOutcome, FAMILIES};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// A fresh temp dir per test invocation (unique per process).
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rfdot_report_schema_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn quick_config(out: &std::path::Path) -> ReportConfig {
+    let mut cfg = ReportConfig::quick();
+    cfg.out_dir = out.to_str().unwrap().to_string();
+    cfg.seed = 7;
+    cfg
+}
+
+#[test]
+fn quick_grid_schema_coverage_and_byte_identical_regeneration() {
+    let dir = temp_dir("main");
+    let cfg = quick_config(&dir);
+    let report = report::run(&cfg).unwrap();
+
+    // --- 1. Full coverage: the output contains exactly the declared
+    // grid, in declaration order, each cell ok or skipped-with-reason.
+    let specs = report::grid(&cfg);
+    assert_eq!(report.cells.len(), specs.len(), "every declared cell must be present");
+    let mut ok = 0;
+    let mut skipped = 0;
+    for (spec, cell) in specs.iter().zip(&report.cells) {
+        assert_eq!(spec.id(), cell.id, "cells must come back in grid order");
+        match &cell.status {
+            CellStatus::Ok(stats) => {
+                ok += 1;
+                assert!(stats.output_dim > 0, "{}: zero output_dim", cell.id);
+                assert_eq!(stats.err.n, cfg.runs, "{}: wrong envelope width", cell.id);
+                assert!(stats.err.mean.is_finite() && stats.err.mean >= 0.0);
+                assert!(stats.secs_per_vec > 0.0);
+            }
+            CellStatus::Skipped { reason } => {
+                skipped += 1;
+                assert!(!reason.is_empty(), "{}: skip must carry a reason", cell.id);
+            }
+        }
+    }
+    assert!(ok > 0, "grid must have live cells");
+    assert!(skipped > 0, "grid must surface inapplicable combinations explicitly");
+
+    // Dense/sparse twin cells sample the same maps (storage-blind RNG
+    // streams), so the sparse parity contract is visible in the report:
+    // equal error envelopes across the storage axis.
+    let mut twin_pairs = 0;
+    for cell in &report.cells {
+        if cell.storage != "sparse" {
+            continue;
+        }
+        let CellStatus::Ok(sparse_stats) = &cell.status else { continue };
+        let twin_id = cell.id.replace("|sparse|", "|dense|");
+        let twin = report.cells.iter().find(|c| c.id == twin_id).expect("dense twin declared");
+        let CellStatus::Ok(dense_stats) = &twin.status else {
+            panic!("{}: dense twin must be live too", twin_id)
+        };
+        assert_eq!(
+            dense_stats.err, sparse_stats.err,
+            "{}: sparse error envelope must equal its dense twin's",
+            cell.id
+        );
+        twin_pairs += 1;
+    }
+    assert!(twin_pairs > 0, "no dense/sparse twin pairs compared");
+
+    // The accuracy section obeys the same no-silent-drop rule.
+    assert!(!report.accuracy.is_empty());
+    assert!(report.accuracy.iter().any(|r| matches!(r.outcome, RowOutcome::Ok { .. })));
+    for row in &report.accuracy {
+        if let RowOutcome::Ok { accuracy, .. } = row.outcome {
+            assert!((0.0..=1.0).contains(&accuracy), "{}: bad accuracy", row.variant);
+        }
+    }
+    assert_eq!(report.threads.len(), cfg.threads_sweep.len());
+
+    // --- 2. REPORT.json round-trips through the declared schema.
+    let json1 = std::fs::read_to_string(dir.join("REPORT.json")).unwrap();
+    let parsed = report::parse_report(&json1).unwrap();
+    assert_eq!(parsed.cells.len(), report.cells.len());
+    assert_eq!(parsed.fingerprint, cfg.fingerprint());
+    assert_eq!(parsed.mode, "quick");
+    assert_eq!(parsed.seed, 7);
+
+    // SVG assets exist for every feature-map family in-tree.
+    for family in FAMILIES {
+        for kind in ["error", "speedup"] {
+            let path = dir.join("report").join(format!("{kind}_{}.svg", family.id()));
+            assert!(path.exists(), "missing asset {path:?}");
+            let svg = std::fs::read_to_string(&path).unwrap();
+            assert!(svg.starts_with("<svg"), "{path:?} is not svg");
+        }
+    }
+    assert!(dir.join("report/threads.svg").exists());
+
+    // --- 3a. Regenerating against the same run-log is byte-identical
+    // (all cells, rows and sweeps are reused, timings included).
+    let md1 = std::fs::read_to_string(dir.join("REPORT.md")).unwrap();
+    report::run(&cfg).unwrap();
+    assert_eq!(std::fs::read_to_string(dir.join("REPORT.json")).unwrap(), json1);
+    assert_eq!(std::fs::read_to_string(dir.join("REPORT.md")).unwrap(), md1);
+
+    // --- 3b. A *fresh* run with the same seed reproduces every
+    // seed-deterministic statistic (errors, accuracies) even though
+    // timings are re-measured: cell RNG streams depend only on
+    // (seed, cell id), never on execution order or cached state.
+    let dir2 = temp_dir("fresh");
+    let report2 = report::run(&quick_config(&dir2)).unwrap();
+    let errs1: BTreeMap<&str, _> = report
+        .cells
+        .iter()
+        .filter_map(|c| match &c.status {
+            CellStatus::Ok(stats) => Some((c.id.as_str(), stats.err)),
+            CellStatus::Skipped { .. } => None,
+        })
+        .collect();
+    for c in &report2.cells {
+        if let CellStatus::Ok(stats) = &c.status {
+            assert_eq!(
+                errs1.get(c.id.as_str()),
+                Some(&stats.err),
+                "{}: error envelope must be seed-deterministic",
+                c.id
+            );
+        }
+    }
+    let acc1: Vec<f64> = report
+        .accuracy
+        .iter()
+        .filter_map(|r| match r.outcome {
+            RowOutcome::Ok { accuracy, .. } => Some(accuracy),
+            RowOutcome::Skipped { .. } => None,
+        })
+        .collect();
+    let acc2: Vec<f64> = report2
+        .accuracy
+        .iter()
+        .filter_map(|r| match r.outcome {
+            RowOutcome::Ok { accuracy, .. } => Some(accuracy),
+            RowOutcome::Skipped { .. } => None,
+        })
+        .collect();
+    assert_eq!(acc1, acc2, "accuracy rows must be seed-deterministic");
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+#[test]
+fn stale_fingerprints_never_leak_into_a_report() {
+    // A run-log from a different grid (here: different seed) must be
+    // ignored, not resumed into wrong results.
+    let dir = temp_dir("stale");
+    let mut cfg = quick_config(&dir);
+    // Shrink far below the default quick grid: this test only exercises
+    // the run-log guard, not the measurements.
+    cfg.kernels = vec!["poly:2:1".into()];
+    cfg.d_sweep = vec![8];
+    cfg.points = 8;
+    cfg.runs = 1;
+    cfg.threads_sweep = vec![1];
+    cfg.accuracy_features = 16;
+    cfg.scale = 0.01;
+    report::run(&cfg).unwrap();
+    let log1 = std::fs::read_to_string(dir.join("report_runlog.json")).unwrap();
+
+    let mut reseeded = cfg.clone();
+    reseeded.seed = 8;
+    let report2 = report::run(&reseeded).unwrap();
+    assert_eq!(report2.seed, 8);
+    let log2 = std::fs::read_to_string(dir.join("report_runlog.json")).unwrap();
+    assert_ne!(log1, log2, "a reseeded run must rebuild the log");
+    let parsed =
+        report::parse_report(&std::fs::read_to_string(dir.join("REPORT.json")).unwrap()).unwrap();
+    assert_eq!(parsed.fingerprint, reseeded.fingerprint());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,11 +1,19 @@
 #!/usr/bin/env bash
-# Tier-1 gate: build, tests, lints, formatting, plus smoke runs of the
-# structured-projection and sparse-transform bench sweeps (exercising
-# the BENCH_structured.json / BENCH_sparse.json regeneration paths;
-# --quick diverts their noisy timings to the temp dir so the checked-in
-# baselines are only overwritten by full measured runs — the sparse
-# smoke also asserts CSR/dense parity inside the bench). Run from
-# anywhere.
+# Tier-1 gate: build, tests, lints, formatting, docs, plus smoke runs of
+# the bench sweeps and the reproduction report:
+#
+#  * `cargo doc` runs with `-D warnings` so broken intra-doc links (the
+#    paper cross-references added in the rustdoc pass) fail the gate;
+#  * the structured/sparse bench smokes exercise the BENCH_*.json
+#    regeneration paths (--quick diverts their noisy timings to the
+#    temp dir so checked-in baselines are only overwritten by full
+#    measured runs; the sparse smoke also asserts CSR/dense parity
+#    inside the bench);
+#  * `report --quick` regenerates REPORT.md/REPORT.json into a temp dir
+#    and re-parses the JSON through the declared schema, failing on
+#    schema drift (the self-check inside `rfdot report`).
+#
+# Run from anywhere.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -14,5 +22,10 @@ cargo build --release
 cargo test -q
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo bench --bench micro -- --quick --only structured
 cargo bench --bench micro -- --quick --only sparse
+report_dir="$(mktemp -d)"
+trap 'rm -rf "$report_dir"' EXIT
+cargo run --release --quiet -- report --quick --fresh --out-dir "$report_dir"
+test -s "$report_dir/REPORT.md" && test -s "$report_dir/REPORT.json"
