@@ -66,6 +66,8 @@ fn main() -> rfdot::Result<()> {
             workers: 2,
             // Native-engine batches may fan out over 2 extra threads.
             intra_op_threads: 2,
+            // One work-stealing shard per worker (the default).
+            shards: 0,
         },
     ));
 
@@ -98,5 +100,11 @@ fn main() -> rfdot::Result<()> {
 
     println!("served {total} requests in {:.2}s = {:.0} req/s", dt, total as f64 / dt);
     println!("coordinator: {}", coord.stats().summary());
+    for s in coord.shard_snapshots() {
+        println!(
+            "  shard {}: batches={} items={} steals={} lat p50={:.0}us p90={:.0}us",
+            s.shard, s.batches, s.items, s.steals, s.latency_us.p50, s.latency_us.p90
+        );
+    }
     Ok(())
 }

@@ -8,6 +8,8 @@
 //! * bit-packed vs dense-f32 Rademacher projection,
 //! * PJRT artifact execution latency/throughput per batch,
 //! * coordinator end-to-end round trip under load,
+//! * the serve-throughput sweep over workers × shard-vs-shared queue
+//!   topology × client batch size (recorded to `BENCH_serve.json`),
 //! * SVM solver throughput on surrogate data.
 //!
 //! Run:  `cargo bench --bench micro`
@@ -445,6 +447,7 @@ fn bench_coordinator_roundtrip() {
             queue_depth: 8192,
             workers: 2,
             intra_op_threads: 1,
+            ..Default::default()
         },
     ));
     let requests = if fast() { 500 } else { 5000 };
@@ -469,6 +472,137 @@ fn bench_coordinator_roundtrip() {
     let dt = sw.elapsed_secs();
     println!("   {requests} requests in {} = {:.0} req/s", fmt_duration(dt), requests as f64 / dt);
     println!("   {}", coord.stats().summary());
+}
+
+/// The serving-path acceptance sweep: coordinator throughput over
+/// workers × queue topology (shared single queue vs per-worker shards
+/// with work stealing) × client submission batch size (per-request
+/// tickets vs `submit_batch`). Recorded as the machine-readable
+/// baseline in `BENCH_serve.json` at the repo root (target: the sharded
+/// topology at 4 workers beats the shared queue, and batch submission
+/// beats per-request submission at equal load).
+fn bench_serve_throughput() {
+    println!("\n== serve throughput: workers x shard-vs-shared x batch ==");
+    let (d, n_feat) = (22usize, 512usize);
+    let requests = if fast() { 400 } else { 4000 };
+    let clients = 4usize;
+    let mut rng = Rng::seed_from(91);
+    let map = Arc::new(RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        d,
+        n_feat,
+        RmConfig::default(),
+        &mut rng,
+    ));
+
+    let mut table =
+        Table::new(&["workers", "shards", "submit batch", "req/s", "secs/req", "steals"]);
+    // (workers, shards, batch, reqs_per_s, secs_per_req, steals)
+    let mut samples: Vec<(usize, usize, usize, f64, f64, u64)> = Vec::new();
+    for &workers in &[1usize, 2, 4] {
+        let mut topologies = vec![1usize];
+        if workers > 1 {
+            topologies.push(workers);
+        }
+        for &shards in &topologies {
+            for &batch in &[1usize, 32] {
+                let coord = Arc::new(Coordinator::start(
+                    Arc::new(NativeFactory::new(map.clone())),
+                    CoordinatorConfig {
+                        max_batch: 128,
+                        max_wait: Duration::from_micros(200),
+                        queue_depth: 8192,
+                        workers,
+                        intra_op_threads: 1,
+                        shards,
+                    },
+                ));
+                let sw = rfdot::metrics::Stopwatch::start();
+                let mut handles = Vec::new();
+                for c in 0..clients {
+                    let coord = coord.clone();
+                    handles.push(std::thread::spawn(move || {
+                        let mut rng = Rng::seed_from(300 + c as u64);
+                        let mut ok = 0usize;
+                        let mut left = requests / clients;
+                        while left > 0 {
+                            let take = left.min(batch);
+                            left -= take;
+                            if take == 1 {
+                                let x: Vec<f32> =
+                                    (0..d).map(|_| rng.f32() - 0.5).collect();
+                                if let Ok(t) = coord.submit(x) {
+                                    ok += usize::from(t.wait().is_ok());
+                                }
+                            } else {
+                                let xs: Vec<Vec<f32>> = (0..take)
+                                    .map(|_| (0..d).map(|_| rng.f32() - 0.5).collect())
+                                    .collect();
+                                if let Ok(t) = coord.submit_batch(xs) {
+                                    ok += t.wait().iter().filter(|r| r.is_ok()).count();
+                                }
+                            }
+                        }
+                        ok
+                    }));
+                }
+                let completed: usize =
+                    handles.into_iter().map(|h| h.join().unwrap()).sum();
+                let dt = sw.elapsed_secs().max(1e-9);
+                let steals: u64 =
+                    coord.shard_snapshots().iter().map(|s| s.steals).sum();
+                let reqs_per_s = completed as f64 / dt;
+                let secs_per_req = dt / completed.max(1) as f64;
+                table.row(&[
+                    format!("{workers}"),
+                    format!("{shards}"),
+                    format!("{batch}"),
+                    format!("{reqs_per_s:.0}"),
+                    fmt_duration(secs_per_req),
+                    format!("{steals}"),
+                ]);
+                samples.push((workers, shards, batch, reqs_per_s, secs_per_req, steals));
+            }
+        }
+    }
+    table.print();
+
+    let json_samples = samples
+        .iter()
+        .map(|(workers, shards, batch, rps, spr, steals)| {
+            format!(
+                r#"{{"workers": {workers}, "shards": {shards}, "batch": {batch}, "reqs_per_s": {rps:.1}, "secs_per_req": {spr:.9}, "steals": {steals}}}"#
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n    ");
+    // Same policy as the structured/sparse sweeps: --quick runs exercise
+    // the regeneration path but divert their noisy timings to the temp
+    // dir; only full measured runs overwrite the checked-in baseline.
+    let (status, invocation, path) = if fast() {
+        (
+            "smoke",
+            "cargo bench --bench micro -- --quick --only serve-throughput",
+            std::env::temp_dir().join("BENCH_serve.smoke.json"),
+        )
+    } else {
+        (
+            "measured",
+            "cargo bench --bench micro -- --only serve-throughput",
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serve.json"),
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"serve_sweep\",\n  \"status\": \"{status}\",\n  \
+         \"generated_by\": \"{invocation}\",\n  \
+         \"serve\": {{\"d\": {d}, \"features\": {n_feat}, \"requests\": {requests}, \
+         \"clients\": {clients}, \
+         \"samples\": [\n    {json_samples}\n  ]}}\n}}\n"
+    );
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("   baseline recorded to {}", path.display()),
+        Err(e) => println!("   (could not write {}: {e})", path.display()),
+    }
 }
 
 fn bench_pjrt_coordinator() {
@@ -501,6 +635,7 @@ fn bench_pjrt_coordinator() {
             queue_depth: 8192,
             workers: 2,
             intra_op_threads: 1,
+            ..Default::default()
         },
     ));
     let requests = if fast() { 400 } else { 4000 };
@@ -563,6 +698,7 @@ fn bench_pjrt_bucketed_coordinator() {
             queue_depth: 8192,
             workers: 2,
             intra_op_threads: 1,
+            ..Default::default()
         },
     ));
     let requests = if fast() { 400 } else { 4000 };
@@ -643,7 +779,7 @@ fn main() {
         }
     }
 
-    let sections: [(&str, fn()); 10] = [
+    let sections: [(&str, fn()); 11] = [
         ("native-transform", bench_native_transform),
         ("parallel-sweep", bench_parallel_sweep),
         ("structured-sweep", bench_structured_sweep),
@@ -651,6 +787,7 @@ fn main() {
         ("rademacher-projection", bench_rademacher_projection),
         ("pjrt-execute", bench_pjrt_execute),
         ("coordinator-roundtrip", bench_coordinator_roundtrip),
+        ("serve-throughput", bench_serve_throughput),
         ("pjrt-coordinator", bench_pjrt_coordinator),
         ("pjrt-bucketed-coordinator", bench_pjrt_bucketed_coordinator),
         ("solvers", bench_solvers),

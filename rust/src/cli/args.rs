@@ -1,5 +1,5 @@
-//! Tiny flag parser: `--key value` pairs plus boolean `--switch`es after
-//! a positional command word.
+//! Tiny flag parser: `--key value` pairs plus boolean `--switch`es and
+//! bare positional operands after a positional command word.
 
 use crate::{Error, Result};
 use std::collections::BTreeMap;
@@ -9,6 +9,9 @@ use std::collections::BTreeMap;
 pub struct Args {
     command: String,
     flags: BTreeMap<String, String>,
+    /// Bare tokens after the command that are not flag values
+    /// (`bench-diff old.json new.json`).
+    positionals: Vec<String>,
     /// Flags that were consumed by a getter (for unknown-flag warnings).
     seen: std::collections::BTreeSet<String>,
 }
@@ -20,6 +23,7 @@ impl Args {
         let command = it.peek().map(|s| !s.starts_with("--")).unwrap_or(false);
         let command = if command { it.next().unwrap_or_default() } else { String::new() };
         let mut flags = BTreeMap::new();
+        let mut positionals = Vec::new();
         while let Some(tok) = it.next() {
             if let Some(key) = tok.strip_prefix("--") {
                 let is_value_next =
@@ -29,10 +33,11 @@ impl Args {
                 } else {
                     flags.insert(key.to_string(), "true".to_string());
                 }
+            } else {
+                positionals.push(tok);
             }
-            // bare positional tokens after the command are ignored
         }
-        Args { command, flags, seen: Default::default() }
+        Args { command, flags, positionals, seen: Default::default() }
     }
 
     pub fn command(&self) -> &str {
@@ -74,6 +79,18 @@ impl Args {
     pub fn switch(&mut self, key: &str) -> bool {
         self.seen.insert(key.to_string());
         matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    /// Bare positional operand `i` (0-based, after the command word).
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(String::as_str)
+    }
+
+    /// Required positional operand with a usage hint in the error.
+    pub fn require_positional(&self, i: usize, usage: &str) -> Result<String> {
+        self.positional(i)
+            .map(str::to_string)
+            .ok_or_else(|| Error::Config(format!("missing operand {} (usage: {usage})", i + 1)))
     }
 
     /// Flags that were provided but never consumed — surfaced as a
@@ -120,5 +137,20 @@ mod tests {
         let mut a = parse(&["cmd", "--used", "1", "--typo", "2"]);
         let _ = a.usize_flag("used", 0);
         assert_eq!(a.unknown_flags(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    fn positionals_collected_in_order() {
+        let mut a = parse(&["bench-diff", "old.json", "new.json", "--max-regress", "5"]);
+        assert_eq!(a.command(), "bench-diff");
+        assert_eq!(a.positional(0), Some("old.json"));
+        assert_eq!(a.positional(1), Some("new.json"));
+        assert_eq!(a.positional(2), None);
+        assert_eq!(a.num_flag("max-regress", 0.0).unwrap(), 5.0);
+        assert!(a.require_positional(2, "x <a> <b>").is_err());
+        // Flag values are not positionals: "5" above was consumed by
+        // --max-regress, and flags may interleave with operands.
+        let b = parse(&["cmd", "--flag", "v", "pos"]);
+        assert_eq!(b.positional(0), Some("pos"));
     }
 }

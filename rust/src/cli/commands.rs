@@ -2,6 +2,7 @@
 
 use super::Args;
 use crate::bench::{self, Table};
+use crate::config::json::Json;
 use crate::config::{ExperimentConfig, KernelSpec};
 use crate::coordinator::{
     BackendFactory, Coordinator, CoordinatorConfig, NativeFactory, PjrtTransformFactory,
@@ -250,12 +251,14 @@ pub fn report(args: &mut Args) -> Result<()> {
         .filter(|c| matches!(c.status, crate::report::CellStatus::Ok(_)))
         .count();
     println!(
-        "report: {} cells ({} ok, {} skipped), {} accuracy rows, {} thread points in {}",
+        "report: {} cells ({} ok, {} skipped), {} accuracy rows, {} thread points, \
+         {} serving points in {}",
         report.cells.len(),
         ok,
         report.cells.len() - ok,
         report.accuracy.len(),
         report.threads.len(),
+        report.serving.len(),
         bench::fmt_duration(sw.elapsed_secs()),
     );
     println!(
@@ -320,6 +323,10 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let clients = args.usize_flag("clients", 4)?.max(1);
     let native = args.switch("native");
     let workers = args.usize_flag("workers", 2)?;
+    // Batch-queue shards (0 = one per worker; 1 = the shared-queue
+    // baseline topology). Workers steal across shards when theirs runs
+    // dry; the per-shard summary below shows the steal counts.
+    let shards = args.usize_flag("shards", 0)?;
     let max_batch = args.usize_flag("max-batch", 256)?;
     let max_wait_ms = args.num_flag("max-wait-ms", 2.0)?;
     let seed = args.num_flag("seed", 7.0)? as u64;
@@ -382,6 +389,7 @@ pub fn serve(args: &mut Args) -> Result<()> {
             queue_depth: 8192,
             workers,
             intra_op_threads,
+            shards,
         },
     ));
 
@@ -434,8 +442,223 @@ pub fn serve(args: &mut Args) -> Result<()> {
     println!("completed {total_ok} ok, {total_rej} rejected in {}", bench::fmt_duration(dt));
     println!("throughput: {:.0} req/s", total_ok as f64 / dt.max(1e-9));
     println!("stats: {}", stats.summary());
+    // Per-shard view: where batches landed, who stole what, and true
+    // nearest-rank latency percentiles per shard.
+    for s in coord.shard_snapshots() {
+        println!(
+            "shard {}: batches={} items={} steals={} lat p50={:.0}us p90={:.0}us max={:.0}us (n={})",
+            s.shard,
+            s.batches,
+            s.items,
+            s.steals,
+            s.latency_us.p50,
+            s.latency_us.p90,
+            s.latency_us.max,
+            s.latency_us.n,
+        );
+    }
     assert_eq!(total_ok as u64, stats.completed.load(Ordering::Relaxed));
     Ok(())
+}
+
+/// A human label for an array element in a bench JSON file, derived
+/// from its identity fields (`{"map": "fourier", "threads": 4, ...}`),
+/// so a regression report reads `samples[map=fourier,threads=4]`
+/// instead of `samples[7]`.
+fn bench_elem_label(v: &Json) -> Option<String> {
+    let mut parts = Vec::new();
+    for k in ["map", "threads", "workers", "shards", "batch", "sparsity"] {
+        match v.get(k) {
+            Some(Json::Str(s)) => parts.push(format!("{k}={s}")),
+            Some(Json::Num(n)) => parts.push(format!("{k}={n}")),
+            _ => {}
+        }
+    }
+    if parts.is_empty() {
+        None
+    } else {
+        Some(parts.join(","))
+    }
+}
+
+/// Count the *measured* timing leaves of one bench document: numeric
+/// `*secs*` keys with a positive value (nulls are pending). The gate
+/// uses this to refuse to pass when the old baseline had measurements
+/// but none survived the structural pairing (a renamed section would
+/// otherwise fail open).
+fn count_measured_secs(v: &Json) -> usize {
+    match v {
+        Json::Obj(m) => m
+            .iter()
+            .map(|(k, v)| {
+                if k.contains("secs") {
+                    usize::from(matches!(v.as_f64(), Some(x) if x > 0.0))
+                } else {
+                    count_measured_secs(v)
+                }
+            })
+            .sum(),
+        Json::Arr(a) => a.iter().map(count_measured_secs).sum(),
+        _ => 0,
+    }
+}
+
+/// Walk two bench JSON documents in parallel and collect every numeric
+/// timing leaf present in both — keys containing `secs` (the
+/// seconds-per-op convention of every `BENCH_*.json` schema), where
+/// larger means slower. Null leaves (pending baselines not yet measured
+/// in this environment) are counted as skipped, never compared.
+fn collect_bench_timings(
+    path: &str,
+    old: &Json,
+    new: &Json,
+    out: &mut Vec<(String, f64, f64)>,
+    skipped: &mut usize,
+) {
+    match (old, new) {
+        (Json::Obj(a), Json::Obj(b)) => {
+            for (k, va) in a {
+                let p = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                let vb = match b.get(k) {
+                    Some(vb) => vb,
+                    None => {
+                        // A timing key that vanished from the new file
+                        // must at least be visible as skipped — silence
+                        // here would let a renamed/dropped metric fail
+                        // the gate open.
+                        if k.contains("secs") {
+                            *skipped += 1;
+                        }
+                        continue;
+                    }
+                };
+                if k.contains("secs") {
+                    match (va.as_f64(), vb.as_f64()) {
+                        (Some(x), Some(y)) if x > 0.0 => out.push((p, x, y)),
+                        _ => *skipped += 1,
+                    }
+                } else {
+                    collect_bench_timings(&p, va, vb, out, skipped);
+                }
+            }
+        }
+        (Json::Arr(a), Json::Arr(b)) => {
+            // Pair elements by their identity fields, not position:
+            // inserting or reordering sweep rows must not cross-wire
+            // the comparison. When labels do not uniquely key the rows
+            // (a collision in either file), identity pairing would
+            // silently collapse rows, so fall back to index pairing for
+            // the whole array. Rows without a counterpart count as
+            // skipped.
+            let labels_unique_within = |xs: &[Json]| {
+                let mut seen = std::collections::BTreeSet::new();
+                xs.iter().filter_map(bench_elem_label).all(|l| seen.insert(l))
+            };
+            let unique = labels_unique_within(a) && labels_unique_within(b);
+            let by_label: std::collections::BTreeMap<String, &Json> =
+                b.iter().filter_map(|v| bench_elem_label(v).map(|l| (l, v))).collect();
+            for (i, va) in a.iter().enumerate() {
+                match bench_elem_label(va).filter(|_| unique) {
+                    Some(label) => match by_label.get(&label) {
+                        Some(vb) => {
+                            collect_bench_timings(&format!("{path}[{label}]"), va, vb, out, skipped)
+                        }
+                        None => *skipped += 1,
+                    },
+                    None => match b.get(i) {
+                        Some(vb) => {
+                            collect_bench_timings(&format!("{path}[{i}]"), va, vb, out, skipped)
+                        }
+                        None => *skipped += 1,
+                    },
+                }
+            }
+        }
+        _ => {}
+    }
+}
+
+/// `rfdot bench-diff <old.json> <new.json> [--max-regress PCT]` — the
+/// CI regression gate over any two bench baseline files
+/// (`BENCH_parallel/structured/sparse/serve.json`): compares every
+/// timing metric the two files share and exits nonzero when any slowed
+/// down by more than `--max-regress` percent (default 5). Unmeasured
+/// (`null`) leaves — committed pending baselines — compare clean, so
+/// the gate can be wired up before the first measured run.
+pub fn bench_diff(args: &mut Args) -> Result<()> {
+    let usage = "rfdot bench-diff <old.json> <new.json> [--max-regress PCT]";
+    let old_path = args.require_positional(0, usage)?;
+    let new_path = args.require_positional(1, usage)?;
+    let max_regress = args.num_flag("max-regress", 5.0)?;
+    warn_unknown(args);
+    if max_regress < 0.0 {
+        return Err(crate::Error::Config("--max-regress must be >= 0".into()));
+    }
+    let old = Json::parse(&std::fs::read_to_string(&old_path)?)?;
+    let new = Json::parse(&std::fs::read_to_string(&new_path)?)?;
+    let mut pairs = Vec::new();
+    let mut skipped = 0usize;
+    collect_bench_timings("", &old, &new, &mut pairs, &mut skipped);
+    // Metrics the old baseline measured but the walk never reached
+    // (renamed/moved containers): surface them instead of comparing a
+    // smaller universe in silence. Best-effort — `skipped` also counts
+    // null leaves, so this only catches net losses.
+    let measured_old = count_measured_secs(&old);
+    let unaccounted = measured_old.saturating_sub(pairs.len() + skipped);
+    if unaccounted > 0 {
+        skipped += unaccounted;
+        println!(
+            "warning: {unaccounted} measured timing metric(s) in {old_path} have no \
+             counterpart in {new_path} (renamed or moved section?)"
+        );
+    }
+
+    let allowed = 1.0 + max_regress / 100.0;
+    let mut regressions = Vec::new();
+    let mut t = Table::new(&["metric", "old", "new", "delta"]);
+    for (path, o, n) in &pairs {
+        let delta = (n / o - 1.0) * 100.0;
+        t.row(&[
+            path.clone(),
+            bench::fmt_duration(*o),
+            bench::fmt_duration(*n),
+            format!("{delta:+.1}%"),
+        ]);
+        if n / o > allowed {
+            regressions.push(format!("{path}: {delta:+.1}% (allowed +{max_regress}%)"));
+        }
+    }
+    t.print();
+    if skipped > 0 {
+        println!("({skipped} metric(s) skipped — unmeasured/pending or without a counterpart)");
+    }
+    if pairs.is_empty() {
+        // A pending baseline (all nulls) legitimately compares clean;
+        // an old file with real measurements that all vanished is
+        // schema drift and must not pass the gate.
+        if measured_old > 0 {
+            return Err(crate::Error::Bench(format!(
+                "{old_path} has {measured_old} measured timing metric(s) but none were \
+                 comparable against {new_path} — schema drift?"
+            )));
+        }
+        println!("no comparable timing metrics found (both baselines pending?)");
+    }
+    if regressions.is_empty() {
+        println!(
+            "bench-diff: ok — no regression beyond {max_regress}% across {} metric(s)",
+            pairs.len()
+        );
+        Ok(())
+    } else {
+        for r in &regressions {
+            eprintln!("REGRESSION {r}");
+        }
+        Err(crate::Error::Bench(format!(
+            "{} metric(s) regressed beyond {max_regress}% ({old_path} -> {new_path})",
+            regressions.len()
+        )))
+    }
 }
 
 #[cfg(test)]
@@ -617,6 +840,171 @@ mod tests {
     fn serve_native_smoke() {
         serve(&mut argv(&[
             "serve", "--native", "--requests", "40", "--clients", "2", "--workers", "1",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn serve_native_sharded_smoke() {
+        // The --shards knob end to end: shared (1) and explicit 2-shard
+        // topologies both serve the same load.
+        for shards in ["1", "2"] {
+            serve(&mut argv(&[
+                "serve", "--native", "--requests", "40", "--clients", "2", "--workers", "2",
+                "--shards", shards,
+            ]))
+            .unwrap();
+        }
+    }
+
+    fn write_bench_json(name: &str, secs: f64, with_null: bool) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("rfdot_bench_diff_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let null_row = if with_null {
+            r#", {"map": "fourier", "sparsity": 0.9, "dense_secs_per_vec": null}"#
+        } else {
+            ""
+        };
+        std::fs::write(
+            &path,
+            format!(
+                r#"{{"bench": "x", "sweep": {{"samples": [
+                     {{"map": "maclaurin", "threads": 2, "dense_secs_per_vec": {secs}}}{null_row}
+                   ]}}}}"#
+            ),
+        )
+        .unwrap();
+        path
+    }
+
+    #[test]
+    fn bench_diff_passes_on_equal_and_fails_on_regression() {
+        let old = write_bench_json("old.json", 1.0e-6, true);
+        let same = write_bench_json("same.json", 1.0e-6, true);
+        let slow = write_bench_json("slow.json", 2.0e-6, true);
+        let fast = write_bench_json("fast.json", 0.5e-6, true);
+        let ok = |a: &std::path::Path, b: &std::path::Path| {
+            bench_diff(&mut argv(&[
+                "bench-diff",
+                a.to_str().unwrap(),
+                b.to_str().unwrap(),
+                "--max-regress",
+                "10",
+            ]))
+        };
+        ok(&old, &same).unwrap();
+        // Speedups never fail the gate.
+        ok(&old, &fast).unwrap();
+        // A 2x slowdown beyond the 10% allowance does, with the Bench
+        // error variant (nonzero exit through main).
+        let err = ok(&old, &slow).unwrap_err();
+        assert!(matches!(err, crate::Error::Bench(_)), "{err}");
+        assert!(err.to_string().contains("regressed"), "{err}");
+    }
+
+    #[test]
+    fn bench_diff_fails_when_measured_metrics_all_vanish() {
+        // A renamed container (schema drift) must not fail open: the
+        // old file has real measurements, the new file shares no
+        // comparable leaves, so the gate errors instead of printing ok.
+        let dir = std::env::temp_dir().join("rfdot_bench_diff_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = dir.join("drift_old.json");
+        let new = dir.join("drift_new.json");
+        std::fs::write(&old, r#"{"serve": {"samples": [{"workers": 1, "secs": 1.0e-6}]}}"#)
+            .unwrap();
+        std::fs::write(&new, r#"{"serving": {"rows": [{"workers": 1, "secs": 1.0e-6}]}}"#)
+            .unwrap();
+        let err = bench_diff(&mut argv(&[
+            "bench-diff",
+            old.to_str().unwrap(),
+            new.to_str().unwrap(),
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("schema drift"), "{err}");
+    }
+
+    #[test]
+    fn bench_diff_requires_two_operands_and_readable_files() {
+        let err = bench_diff(&mut argv(&["bench-diff"])).unwrap_err();
+        assert!(err.to_string().contains("usage"), "{err}");
+        assert!(bench_diff(&mut argv(&["bench-diff", "/nonexistent/a.json", "/nonexistent/b.json"]))
+            .is_err());
+    }
+
+    #[test]
+    fn bench_diff_pairs_samples_by_identity_not_position() {
+        // Reordered / inserted sweep rows must compare against the row
+        // with the same identity fields, not whatever sits at the same
+        // index — otherwise the gate fails open (or falsely fails).
+        let dir = std::env::temp_dir().join("rfdot_bench_diff_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = dir.join("ident_old.json");
+        let new = dir.join("ident_new.json");
+        std::fs::write(
+            &old,
+            r#"{"sweep": {"samples": [
+                 {"map": "a", "secs": 1.0e-6},
+                 {"map": "b", "secs": 9.0e-6}
+               ]}}"#,
+        )
+        .unwrap();
+        // Same numbers, reversed order, plus a brand-new row: no
+        // regression despite index misalignment.
+        std::fs::write(
+            &new,
+            r#"{"sweep": {"samples": [
+                 {"map": "c", "secs": 5.0e-6},
+                 {"map": "b", "secs": 9.0e-6},
+                 {"map": "a", "secs": 1.0e-6}
+               ]}}"#,
+        )
+        .unwrap();
+        bench_diff(&mut argv(&[
+            "bench-diff",
+            old.to_str().unwrap(),
+            new.to_str().unwrap(),
+            "--max-regress",
+            "5",
+        ]))
+        .unwrap();
+        // And a genuine slowdown on one identity is still caught
+        // through the reordering.
+        std::fs::write(
+            &new,
+            r#"{"sweep": {"samples": [
+                 {"map": "b", "secs": 9.0e-6},
+                 {"map": "a", "secs": 3.0e-6}
+               ]}}"#,
+        )
+        .unwrap();
+        assert!(bench_diff(&mut argv(&[
+            "bench-diff",
+            old.to_str().unwrap(),
+            new.to_str().unwrap(),
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn bench_diff_skips_pending_null_baselines() {
+        // A committed pending baseline (all nulls) self-compares clean —
+        // the shape the CI smoke runs before the first measured sweep.
+        let dir = std::env::temp_dir().join("rfdot_bench_diff_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let pending = dir.join("pending.json");
+        std::fs::write(
+            &pending,
+            r#"{"bench": "serve_sweep", "serve": {"samples": [
+                 {"workers": 1, "shards": 1, "secs_per_req": null}
+               ]}}"#,
+        )
+        .unwrap();
+        bench_diff(&mut argv(&[
+            "bench-diff",
+            pending.to_str().unwrap(),
+            pending.to_str().unwrap(),
         ]))
         .unwrap();
     }

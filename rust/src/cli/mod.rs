@@ -8,6 +8,7 @@
 //! rfdot report [flags]           # full grid -> REPORT.md + REPORT.json
 //! rfdot transform [flags]        # featurize a LIBSVM file
 //! rfdot serve [flags]            # serving demo over the coordinator
+//! rfdot bench-diff A B [flags]   # regression gate over bench baselines
 //! ```
 
 pub mod args;
@@ -28,6 +29,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "report" => commands::report(&mut args),
         "transform" => commands::transform(&mut args),
         "serve" => commands::serve(&mut args),
+        "bench-diff" => commands::bench_diff(&mut args),
         "help" | "" => {
             print!("{}", HELP);
             Ok(())
@@ -62,9 +64,14 @@ COMMANDS:
                   --config FILE ("report" section overrides the grid)
   transform     featurize a LIBSVM file with a sampled map
                   --input FILE --output FILE --kernel ... --features N
-  serve         coordinator serving demo
+  serve         coordinator serving demo (per-shard stats printed)
                   --artifact transform_serve --artifact-dir artifacts
                   --requests 2000 --clients 4 --native
+                  --workers 2 --shards 0  (0 = one work-stealing shard
+                  per worker; 1 = the shared-queue baseline)
+  bench-diff    compare two bench baseline JSON files and exit nonzero
+                on regression (the CI perf gate)
+                  rfdot bench-diff old.json new.json --max-regress 5
   help          this message
 
   --projection dense|structured

@@ -260,6 +260,9 @@ pub struct ReportConfig {
     pub scale: f64,
     /// Random-feature count D for the accuracy rows.
     pub accuracy_features: usize,
+    /// Requests per serving-panel point (the coordinator throughput
+    /// sweep over worker count × shared-vs-sharded queue topology).
+    pub serve_requests: usize,
 }
 
 impl ReportConfig {
@@ -280,6 +283,7 @@ impl ReportConfig {
             datasets: vec!["nursery".into()],
             scale: 0.02,
             accuracy_features: 64,
+            serve_requests: 200,
         }
     }
 
@@ -300,6 +304,7 @@ impl ReportConfig {
             datasets: vec!["nursery".into(), "spambase".into()],
             scale: 0.1,
             accuracy_features: 500,
+            serve_requests: 2000,
         }
     }
 
@@ -348,6 +353,9 @@ impl ReportConfig {
         if let Some(n) = v.get("accuracy_features").and_then(Json::as_usize) {
             cfg.accuracy_features = n;
         }
+        if let Some(n) = v.get("serve_requests").and_then(Json::as_usize) {
+            cfg.serve_requests = n;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -385,6 +393,9 @@ impl ReportConfig {
         if self.accuracy_features == 0 {
             return Err(Error::Config("accuracy_features must be positive".into()));
         }
+        if self.serve_requests == 0 {
+            return Err(Error::Config("serve_requests must be positive".into()));
+        }
         Ok(())
     }
 
@@ -394,8 +405,8 @@ impl ReportConfig {
     /// log can never leak cells into a differently-shaped report.
     pub fn fingerprint(&self) -> String {
         format!(
-            "report-v1:quick={}:seed={}:dim={}:points={}:runs={}:d={:?}:kernels={:?}:\
-             threads={:?}:datasets={:?}:scale={}:accuracy_features={}",
+            "report-v2:quick={}:seed={}:dim={}:points={}:runs={}:d={:?}:kernels={:?}:\
+             threads={:?}:datasets={:?}:scale={}:accuracy_features={}:serve_requests={}",
             self.quick,
             self.seed,
             self.dim,
@@ -407,6 +418,7 @@ impl ReportConfig {
             self.datasets,
             self.scale,
             self.accuracy_features,
+            self.serve_requests,
         )
     }
 }
@@ -444,6 +456,9 @@ pub struct ServeConfig {
     pub max_wait_ms: u64,
     pub queue_depth: usize,
     pub workers: usize,
+    /// Batch-queue shards (`0` = one per worker, the work-stealing
+    /// default; `1` = the shared-queue baseline topology).
+    pub shards: usize,
     /// Fall back to the native engine instead of PJRT.
     pub native: bool,
     pub seed: u64,
@@ -458,6 +473,7 @@ impl Default for ServeConfig {
             max_wait_ms: 2,
             queue_depth: 4096,
             workers: 2,
+            shards: 0,
             native: false,
             seed: 7,
         }
@@ -533,6 +549,21 @@ mod tests {
         let flat = ReportConfig::from_json(r#"{"points": 50}"#).unwrap();
         assert!(!flat.quick);
         assert_eq!(flat.points, 50);
+    }
+
+    #[test]
+    fn report_config_serving_panel_knob() {
+        assert_eq!(ReportConfig::quick().serve_requests, 200);
+        assert_eq!(ReportConfig::full().serve_requests, 2000);
+        let cfg =
+            ReportConfig::from_json(r#"{"report": {"quick": true, "serve_requests": 64}}"#)
+                .unwrap();
+        assert_eq!(cfg.serve_requests, 64);
+        assert!(ReportConfig::from_json(r#"{"serve_requests": 0}"#).is_err());
+        // The knob changes results, so it is part of the fingerprint.
+        let mut other = ReportConfig::quick();
+        other.serve_requests += 1;
+        assert_ne!(ReportConfig::quick().fingerprint(), other.fingerprint());
     }
 
     #[test]

@@ -1,37 +1,65 @@
-//! L3 serving coordinator: request router + dynamic batcher + workers.
+//! L3 serving coordinator: request router + dynamic batcher + sharded
+//! work-stealing workers.
 //!
 //! The paper's feature maps turn kernel-machine serving into *linear*
 //! serving: transform a vector, dot it with a weight vector. This module
 //! is the production shell around that hot path:
 //!
 //! ```text
-//! clients ──submit(x)──▶ bounded queue ──▶ batcher thread
-//!                                            │ (coalesce ≤ max_batch
-//!                                            │  within max_wait)
+//! clients ──submit(x)──────────▶ bounded queue ──▶ batcher thread
+//!         ──submit_batch(xs)──▶                       │ (coalesce ≤ max_batch
+//!         ──submit_callback──▶                        │  within max_wait)
+//!                                                     ▼
+//!                               shard 0 ─▶ worker 0  (round-robin push,
+//!                               shard 1 ─▶ worker 1   own shard first,
+//!                               ...        ...        steal when dry)
+//!                                            │ thread-local Backend::run_batch
 //!                                            ▼
-//!                                     batch queue ──▶ N worker threads
-//!                                                       │ thread-local
-//!                                                       │ Backend::run_batch
-//!                                                       ▼
-//!                                            per-request reply channels
+//!                               per-request replies (channel / batch
+//!                               slot / completion callback)
 //! ```
 //!
+//! * **Sharded batch queues** — each worker owns a shard and pops from
+//!   it without touching the others; a worker whose shard runs dry
+//!   *steals* from its neighbours, so stragglers never idle the pool
+//!   and the pre-shard single shared `Mutex<Receiver>` contention point
+//!   is gone. `shards = 1` reproduces the old shared-queue topology
+//!   (kept as the bench baseline). Shard choice is scheduling, never
+//!   semantics: replies are bit-identical for any shard count.
 //! * **Backpressure** — the submit queue is bounded; when full, callers
-//!   get [`Error::Coordinator`] instead of unbounded memory growth.
+//!   get [`Error::Coordinator`] instead of unbounded memory growth. The
+//!   shard queues are bounded too (the batcher blocks, clients do not).
+//! * **Async submission** — [`Ticket::poll`] is the non-blocking
+//!   counterpart of [`Ticket::wait`], and
+//!   [`Coordinator::submit_callback`] invokes a completion callback on
+//!   the worker thread — both without an external async runtime.
+//! * **Batch submission** — [`Coordinator::submit_batch`] /
+//!   [`Coordinator::submit_batch_sparse`] share one reply channel
+//!   across a whole client batch, amortizing the per-request ticket
+//!   and channel overhead.
 //! * **Thread-local backends** — PJRT handles are `!Send`, so each
 //!   worker builds its own executable from a shared [`BackendFactory`].
 //! * **Fixed-shape backends** — the PJRT artifacts take a fixed batch;
 //!   ragged tails are padded and the replies sliced (pad waste is
 //!   metered in [`crate::metrics::Stats::pad_slots`]).
 //! * **Exactly-once replies** — every accepted request receives exactly
-//!   one reply, including on worker build failure, backend failure or
-//!   shutdown drain; the tests in this module drive random schedules
-//!   against that invariant.
+//!   one reply, including on worker build failure, backend failure,
+//!   work stealing or shutdown drain; the tests in this module and
+//!   `rust/tests/serve_shard.rs` drive random schedules against that
+//!   invariant. [`Coordinator::shutdown`] drains everything queued; if
+//!   a worker died (panicking backend) and left jobs unservable, they
+//!   are failed with an explicit shutdown error instead of leaving
+//!   `Ticket::wait` to hang.
 //! * **Sparse submissions** — [`Coordinator::submit_sparse`] accepts
 //!   CSR (index, value) pairs; they scatter into the same zeroed batch
 //!   rows dense submissions copy into, so batching, padding and the
 //!   exactly-once contract are shared and the reply equals the dense
 //!   submission of the densified vector.
+//! * **Per-shard metrics** — every shard records batches, items, steal
+//!   counts and true nearest-rank latency percentiles
+//!   ([`crate::metrics::SampleBuffer`]), surfaced by
+//!   [`Coordinator::shard_snapshots`], `rfdot serve` and the `rfdot
+//!   report` serving panel.
 
 pub mod backend;
 
@@ -41,12 +69,32 @@ pub use backend::{
     PjrtTransformBackend, PjrtTransformFactory,
 };
 
-use crate::metrics::Stats;
+use crate::metrics::{SampleBuffer, Stats, Summary};
 use crate::{Error, Result};
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// Per-shard latency window (samples kept for the percentile summary).
+const SHARD_LATENCY_CAP: usize = 65_536;
+
+/// Tolerate mutex poisoning: the protected state (job deques, sample
+/// vecs) is valid at every instruction boundary, and the shutdown path
+/// must keep working after a worker panic — that is exactly when the
+/// explicit-shutdown-error guarantee matters.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Condvar twin of [`lock`]: one place owns the poison policy for the
+/// waits too.
+fn wait_on<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// Batching/queueing policy.
 #[derive(Clone, Copy, Debug)]
@@ -67,6 +115,13 @@ pub struct CoordinatorConfig {
     /// knob; the default of 1 keeps per-batch work serial because
     /// batches already fan out across `workers`.
     pub intra_op_threads: usize,
+    /// Batch-queue shards. `0` (the default) means one shard per
+    /// worker — the sharded topology; `1` is a single queue every
+    /// worker pops from — the pre-shard topology, kept as the bench
+    /// baseline. Workers own shard `w % shards` and steal from the
+    /// others when their own runs dry; the choice only moves
+    /// contention, never results.
+    pub shards: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -77,6 +132,7 @@ impl Default for CoordinatorConfig {
             queue_depth: 1024,
             workers: 2,
             intra_op_threads: 1,
+            shards: 0,
         }
     }
 }
@@ -104,20 +160,89 @@ impl Payload {
     }
 }
 
+/// Where one request's reply goes. Every accepted job carries exactly
+/// one of these and every route delivers exactly once.
+enum Reply {
+    /// Dedicated one-shot channel ([`Coordinator::submit`] /
+    /// [`Coordinator::submit_sparse`]).
+    Channel(SyncSender<Result<Vec<f32>>>),
+    /// Slot `i` of a batch submission's shared channel
+    /// ([`Coordinator::submit_batch`]).
+    Indexed(SyncSender<(u32, Result<Vec<f32>>)>, u32),
+    /// Completion callback, invoked on the worker thread
+    /// ([`Coordinator::submit_callback`]).
+    Callback(Box<dyn FnOnce(Result<Vec<f32>>) + Send>),
+}
+
+impl Reply {
+    fn send(self, r: Result<Vec<f32>>) {
+        match self {
+            // Receiver gone = caller stopped caring; not an error.
+            Reply::Channel(tx) => {
+                let _ = tx.send(r);
+            }
+            Reply::Indexed(tx, i) => {
+                let _ = tx.send((i, r));
+            }
+            Reply::Callback(f) => f(r),
+        }
+    }
+}
+
+/// One accepted request in flight. The reply route is armed until
+/// `respond` fires; dropping an unanswered job (worker panic unwinding
+/// a batch, queue teardown) answers it with an error from the `Drop`
+/// impl — that is what makes the exactly-once contract hold for
+/// *every* reply route, callbacks included, on every failure path.
 struct Job {
     x: Payload,
     submitted: Instant,
-    reply: SyncSender<Result<Vec<f32>>>,
+    reply: Option<Reply>,
 }
 
-/// A handle to a reply; `wait` blocks until the coordinator answers.
+impl Job {
+    fn new(x: Payload, reply: Reply) -> Job {
+        Job { x, submitted: Instant::now(), reply: Some(reply) }
+    }
+
+    /// Deliver the reply (exactly once; later calls are no-ops and the
+    /// drop guard disarms).
+    fn respond(&mut self, r: Result<Vec<f32>>) {
+        if let Some(reply) = self.reply.take() {
+            reply.send(r);
+        }
+    }
+
+    /// Disarm and drop a job that was never accepted into the queue:
+    /// the caller reports the failure through its own `Result`, so the
+    /// reply route must not also fire from the drop guard (a stray
+    /// duplicate would corrupt [`BatchTicket`] slot accounting).
+    fn disarm(mut self) {
+        let _ = self.reply.take();
+    }
+}
+
+impl Drop for Job {
+    fn drop(&mut self) {
+        if let Some(reply) = self.reply.take() {
+            reply.send(Err(Error::Coordinator("coordinator dropped the request".into())));
+        }
+    }
+}
+
+/// A handle to a reply; `wait` blocks until the coordinator answers,
+/// `poll` checks without blocking.
 pub struct Ticket {
     rx: Receiver<Result<Vec<f32>>>,
+    taken: bool,
 }
 
 impl Ticket {
     /// Block for the result.
     pub fn wait(self) -> Result<Vec<f32>> {
+        if self.taken {
+            return Err(Error::Coordinator("reply was already taken via poll".into()));
+        }
         self.rx
             .recv()
             .map_err(|_| Error::Coordinator("coordinator dropped the request".into()))?
@@ -125,6 +250,9 @@ impl Ticket {
 
     /// Block with a timeout.
     pub fn wait_timeout(self, d: Duration) -> Result<Vec<f32>> {
+        if self.taken {
+            return Err(Error::Coordinator("reply was already taken via poll".into()));
+        }
         match self.rx.recv_timeout(d) {
             Ok(r) => r,
             Err(RecvTimeoutError::Timeout) => {
@@ -135,72 +263,345 @@ impl Ticket {
             }
         }
     }
+
+    /// Non-blocking check — the poll-based async surface (no external
+    /// runtime). Returns `None` while the request is in flight and
+    /// `Some(reply)` exactly once when it completes (or once the
+    /// coordinator dropped it); after that the ticket is spent.
+    pub fn poll(&mut self) -> Option<Result<Vec<f32>>> {
+        if self.taken {
+            return Some(Err(Error::Coordinator("reply was already taken via poll".into())));
+        }
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.taken = true;
+                Some(r)
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                self.taken = true;
+                Some(Err(Error::Coordinator("coordinator dropped the request".into())))
+            }
+        }
+    }
+}
+
+/// A handle to a whole batch submission's replies: one shared channel,
+/// slots keyed by submission order ([`Coordinator::submit_batch`]).
+pub struct BatchTicket {
+    rx: Receiver<(u32, Result<Vec<f32>>)>,
+    /// Slot `i` of the submitted batch; immediate rejections (queue
+    /// full) are filled in at submission time.
+    results: Vec<Option<Result<Vec<f32>>>>,
+    /// Replies still in flight.
+    pending: usize,
+    /// Requests the queue actually accepted.
+    accepted: usize,
+}
+
+impl BatchTicket {
+    /// How many of the batch's requests were accepted into the queue
+    /// (the rest were rejected immediately, e.g. by backpressure, and
+    /// their slots already hold errors).
+    pub fn accepted(&self) -> usize {
+        self.accepted
+    }
+
+    /// Block until every in-flight reply arrives; returns one reply per
+    /// submitted input, in submission order.
+    pub fn wait(mut self) -> Vec<Result<Vec<f32>>> {
+        while self.pending > 0 {
+            match self.rx.recv() {
+                Ok((i, r)) => {
+                    self.results[i as usize] = Some(r);
+                    self.pending -= 1;
+                }
+                // All senders gone with replies outstanding: a worker
+                // died mid-batch. The missing slots become errors below.
+                Err(_) => break,
+            }
+        }
+        self.results
+            .into_iter()
+            .map(|slot| {
+                slot.unwrap_or_else(|| {
+                    Err(Error::Coordinator("coordinator dropped the request".into()))
+                })
+            })
+            .collect()
+    }
+}
+
+/// Per-shard serving metrics: batch/item/steal counters plus a raw
+/// latency window for true percentiles. Batches are attributed to the
+/// shard they were *queued* on; `steals` counts how many of them were
+/// executed by a worker whose home shard is elsewhere.
+struct ShardStats {
+    batches: AtomicU64,
+    items: AtomicU64,
+    steals: AtomicU64,
+    latency_us: SampleBuffer,
+}
+
+impl ShardStats {
+    fn new() -> ShardStats {
+        ShardStats {
+            batches: AtomicU64::new(0),
+            items: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            latency_us: SampleBuffer::new(SHARD_LATENCY_CAP),
+        }
+    }
+}
+
+/// A point-in-time copy of one shard's metrics
+/// ([`Coordinator::shard_snapshots`]).
+#[derive(Clone, Debug)]
+pub struct ShardSnapshot {
+    pub shard: usize,
+    /// Batches queued to this shard.
+    pub batches: u64,
+    /// Requests inside those batches.
+    pub items: u64,
+    /// Batches of this shard executed by another shard's worker.
+    pub steals: u64,
+    /// Nearest-rank percentile summary of this shard's request
+    /// latencies, in microseconds.
+    pub latency_us: Summary,
+}
+
+/// One batch shard: a bounded-by-the-pool deque plus its metrics.
+struct Shard {
+    queue: Mutex<VecDeque<Vec<Job>>>,
+    stats: ShardStats,
+}
+
+/// Book-keeping shared by the batcher and every worker, guarded by one
+/// small mutex (`central`). The shard deques have their own locks — the
+/// hot pop path touches `central` only to claim a batch count, not to
+/// move jobs, which is what kills the old single `Mutex<Receiver>`
+/// convoy.
+struct Central {
+    /// Batches currently queued across all shards.
+    queued: usize,
+    /// False once the batcher is done (submit side closed and drained).
+    open: bool,
+    /// Workers that have not exited (panic included, via a drop guard).
+    workers_alive: usize,
+}
+
+struct ShardQueues {
+    shards: Vec<Shard>,
+    central: Mutex<Central>,
+    /// Signaled on push/close: work may be available.
+    work_cv: Condvar,
+    /// Signaled on pop/worker-exit: queue space may be available.
+    space_cv: Condvar,
+    /// Bound on `queued` (backpressure toward the batcher; client
+    /// backpressure is the submit queue's bound).
+    cap: usize,
+}
+
+impl ShardQueues {
+    fn new(shards: usize, workers: usize, cap: usize) -> ShardQueues {
+        ShardQueues {
+            shards: (0..shards)
+                .map(|_| Shard { queue: Mutex::new(VecDeque::new()), stats: ShardStats::new() })
+                .collect(),
+            central: Mutex::new(Central { queued: 0, open: true, workers_alive: workers }),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Push a batch onto `shard`, blocking while the pool-wide bound is
+    /// hit. Returns the batch back if no live worker remains to serve
+    /// it (so the caller can answer instead of leaving waits to hang).
+    fn push(&self, shard: usize, batch: Vec<Job>) -> std::result::Result<(), Vec<Job>> {
+        let mut g = lock(&self.central);
+        while g.queued >= self.cap {
+            if g.workers_alive == 0 {
+                return Err(batch);
+            }
+            g = wait_on(&self.space_cv, g);
+        }
+        if g.workers_alive == 0 {
+            return Err(batch);
+        }
+        lock(&self.shards[shard].queue).push_back(batch);
+        g.queued += 1;
+        drop(g);
+        self.work_cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop for the worker whose home shard is `home`: claim a
+    /// queued batch under the central lock, then take it from the home
+    /// shard if possible, stealing from neighbours otherwise. Returns
+    /// `(shard the batch was queued on, batch)`, or `None` once the
+    /// queue is closed and fully drained.
+    fn pop(&self, home: usize) -> Option<(usize, Vec<Job>)> {
+        let n = self.shards.len();
+        let mut g = lock(&self.central);
+        loop {
+            if g.queued > 0 {
+                g.queued -= 1;
+                drop(g);
+                self.space_cv.notify_one();
+                // The decrement claimed exactly one batch. A concurrent
+                // claimant may drain a shard we already scanned while a
+                // fresh push lands behind us, so the scan retries until
+                // the claimed batch is found — it exists by the counter
+                // invariant (batches are deque-inserted before they are
+                // counted and claimed before they are removed).
+                loop {
+                    for i in 0..n {
+                        let s = (home + i) % n;
+                        let batch = lock(&self.shards[s].queue).pop_front();
+                        if let Some(b) = batch {
+                            return Some((s, b));
+                        }
+                    }
+                    std::thread::yield_now();
+                }
+            }
+            if !g.open {
+                return None;
+            }
+            g = wait_on(&self.work_cv, g);
+        }
+    }
+
+    /// Close the intake: workers drain what is queued, then exit.
+    fn close(&self) {
+        lock(&self.central).open = false;
+        self.work_cv.notify_all();
+        self.space_cv.notify_all();
+    }
+
+    /// A worker is gone (normal exit or panic). When the *last* one
+    /// goes, every still-queued job is drained and returned so the
+    /// caller can fail it immediately — leaving jobs in the deques with
+    /// no one to serve them would hang their `Ticket::wait`s until
+    /// shutdown.
+    fn worker_exited(&self) -> Vec<Job> {
+        let mut g = lock(&self.central);
+        g.workers_alive = g.workers_alive.saturating_sub(1);
+        let residual =
+            if g.workers_alive == 0 { self.drain_with(&mut g) } else { Vec::new() };
+        drop(g);
+        // A batcher waiting for space must re-check worker liveness.
+        self.space_cv.notify_all();
+        residual
+    }
+
+    /// Drain every queued job; the caller holds the central lock, so
+    /// no push can interleave (pushes insert under the same lock).
+    fn drain_with(&self, g: &mut Central) -> Vec<Job> {
+        let mut left = Vec::new();
+        for shard in &self.shards {
+            let mut q = lock(&shard.queue);
+            while let Some(batch) = q.pop_front() {
+                g.queued = g.queued.saturating_sub(1);
+                left.extend(batch);
+            }
+        }
+        left
+    }
+
+    /// Post-join shutdown sweep: on a clean drain this is empty (live
+    /// workers emptied the queues, and a dying last worker already
+    /// drained via [`ShardQueues::worker_exited`]); anything left is a
+    /// queued-but-unserved job the caller must fail.
+    fn drain_residual(&self) -> Vec<Job> {
+        let mut g = lock(&self.central);
+        self.drain_with(&mut g)
+    }
+}
+
+/// Decrements `workers_alive` however the worker exits — the unwind
+/// path is what keeps a panicking backend from hanging the batcher,
+/// queued tickets, and `shutdown`: when the last worker dies, the
+/// guard fails everything still queued on the spot.
+struct WorkerGuard {
+    queues: Arc<ShardQueues>,
+    stats: Arc<Stats>,
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        let residual = self.queues.worker_exited();
+        if !residual.is_empty() {
+            answer_all_err(residual, "no live workers to serve the request", &self.stats, None);
+        }
+    }
 }
 
 /// The serving coordinator. Create with [`Coordinator::start`], submit
-/// vectors with [`Coordinator::submit`], stop with
-/// [`Coordinator::shutdown`] (also runs on drop).
+/// vectors with [`Coordinator::submit`] (or the batch/callback/sparse
+/// variants), stop with [`Coordinator::shutdown`] (also runs on drop).
 pub struct Coordinator {
     submit_tx: Option<SyncSender<Job>>,
     threads: Vec<std::thread::JoinHandle<()>>,
+    queues: Arc<ShardQueues>,
     stats: Arc<Stats>,
     spec: BackendSpec,
 }
 
 impl Coordinator {
-    /// Spin up the batcher + workers over a backend factory.
+    /// Spin up the batcher + sharded workers over a backend factory.
     pub fn start(factory: Arc<dyn BackendFactory>, config: CoordinatorConfig) -> Coordinator {
         let stats = Arc::new(Stats::new());
         let spec = factory.spec();
         let max_batch = config.max_batch.min(spec.max_batch).max(1);
+        let workers = config.workers.max(1);
+        let shards = if config.shards == 0 { workers } else { config.shards };
         let (submit_tx, submit_rx) = sync_channel::<Job>(config.queue_depth);
-        // Batch queue depth: enough to keep workers busy without
+        // Pool-wide batch bound: enough to keep workers busy without
         // hoarding requests away from latency accounting.
-        let (batch_tx, batch_rx) = sync_channel::<Vec<Job>>(config.workers * 2);
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let queues = Arc::new(ShardQueues::new(shards, workers, (workers * 2).max(shards)));
 
         let mut threads = Vec::new();
 
         // Batcher thread.
         {
             let stats = stats.clone();
+            let queues = queues.clone();
             let max_wait = config.max_wait;
             threads.push(
                 std::thread::Builder::new()
                     .name("rfdot-batcher".into())
                     .spawn(move || {
-                        batcher_loop(submit_rx, batch_tx, max_batch, max_wait, stats);
+                        batcher_loop(submit_rx, queues, max_batch, max_wait, stats);
                     })
                     .expect("spawn batcher"),
             );
         }
 
-        // Worker threads (each builds its own thread-local backend).
-        for w in 0..config.workers.max(1) {
-            let rx = batch_rx.clone();
+        // Worker threads (each builds its own thread-local backend and
+        // owns shard `w % shards`).
+        for w in 0..workers {
+            let queues = queues.clone();
             let factory = factory.clone();
             let stats = stats.clone();
             let intra_op_threads = config.intra_op_threads;
+            let home = w % shards;
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("rfdot-worker-{w}"))
-                    .spawn(move || worker_loop(rx, factory, stats, intra_op_threads))
+                    .spawn(move || worker_loop(home, queues, factory, stats, intra_op_threads))
                     .expect("spawn worker"),
             );
         }
 
-        Coordinator { submit_tx: Some(submit_tx), threads, stats, spec }
+        Coordinator { submit_tx: Some(submit_tx), threads, queues, stats, spec }
     }
 
     /// Submit one vector; returns a [`Ticket`] for the reply, or an
     /// immediate backpressure/shape error.
     pub fn submit(&self, x: Vec<f32>) -> Result<Ticket> {
-        if x.len() != self.spec.input_dim {
-            return Err(Error::shape(
-                format!("dim {}", self.spec.input_dim),
-                format!("{}", x.len()),
-            ));
-        }
+        self.check_dense(&x)?;
         self.submit_payload(Payload::Dense(x))
     }
 
@@ -210,6 +611,85 @@ impl Coordinator {
     /// reply machinery as [`Coordinator::submit`]; the reply equals the
     /// dense submission of the densified vector.
     pub fn submit_sparse(&self, indices: Vec<u32>, values: Vec<f32>) -> Result<Ticket> {
+        self.check_sparse(&indices, &values)?;
+        self.submit_payload(Payload::Sparse { indices, values })
+    }
+
+    /// Submit one vector with a completion callback instead of a
+    /// ticket — the push-based async surface (no external runtime).
+    /// The callback runs exactly once iff this call returns `Ok`:
+    /// normally on the worker thread that answers the request, or with
+    /// an error on whichever coordinator thread tears the job down
+    /// (worker panic unwind, queue drain). Keep it cheap and
+    /// non-panicking (hand the reply to a channel or task queue) — it
+    /// runs inside the serving hot loop and possibly during unwinding.
+    pub fn submit_callback(
+        &self,
+        x: Vec<f32>,
+        callback: impl FnOnce(Result<Vec<f32>>) + Send + 'static,
+    ) -> Result<()> {
+        self.check_dense(&x)?;
+        self.enqueue(Job::new(Payload::Dense(x), Reply::Callback(Box::new(callback))))
+    }
+
+    /// Submit a whole batch of vectors through one shared reply
+    /// channel, amortizing the per-request ticket/channel overhead.
+    /// Shape errors fail the whole call before anything is queued;
+    /// per-request backpressure rejections land in the corresponding
+    /// reply slots ([`BatchTicket::accepted`] tells how many got in).
+    pub fn submit_batch(&self, xs: Vec<Vec<f32>>) -> Result<BatchTicket> {
+        for x in &xs {
+            self.check_dense(x)?;
+        }
+        Ok(self.submit_batch_payloads(xs.into_iter().map(Payload::Dense).collect()))
+    }
+
+    /// CSR twin of [`Coordinator::submit_batch`]: each row is (indices,
+    /// values) pairs validated like [`Coordinator::submit_sparse`];
+    /// replies equal the dense submissions of the densified rows.
+    pub fn submit_batch_sparse(
+        &self,
+        rows: Vec<(Vec<u32>, Vec<f32>)>,
+    ) -> Result<BatchTicket> {
+        for (indices, values) in &rows {
+            self.check_sparse(indices, values)?;
+        }
+        Ok(self.submit_batch_payloads(
+            rows.into_iter()
+                .map(|(indices, values)| Payload::Sparse { indices, values })
+                .collect(),
+        ))
+    }
+
+    fn submit_batch_payloads(&self, payloads: Vec<Payload>) -> BatchTicket {
+        let n = payloads.len();
+        let (tx, rx) = sync_channel::<(u32, Result<Vec<f32>>)>(n.max(1));
+        let mut results: Vec<Option<Result<Vec<f32>>>> = Vec::with_capacity(n);
+        let mut pending = 0usize;
+        for (i, payload) in payloads.into_iter().enumerate() {
+            let job = Job::new(payload, Reply::Indexed(tx.clone(), i as u32));
+            match self.enqueue(job) {
+                Ok(()) => {
+                    results.push(None);
+                    pending += 1;
+                }
+                Err(e) => results.push(Some(Err(e))),
+            }
+        }
+        BatchTicket { rx, results, pending, accepted: pending }
+    }
+
+    fn check_dense(&self, x: &[f32]) -> Result<()> {
+        if x.len() != self.spec.input_dim {
+            return Err(Error::shape(
+                format!("dim {}", self.spec.input_dim),
+                format!("{}", x.len()),
+            ));
+        }
+        Ok(())
+    }
+
+    fn check_sparse(&self, indices: &[u32], values: &[f32]) -> Result<()> {
         if indices.len() != values.len() {
             return Err(Error::shape(
                 format!("{} indices", indices.len()),
@@ -230,26 +710,35 @@ impl Coordinator {
                 )));
             }
         }
-        self.submit_payload(Payload::Sparse { indices, values })
+        Ok(())
     }
 
     fn submit_payload(&self, payload: Payload) -> Result<Ticket> {
-        let tx = self
-            .submit_tx
-            .as_ref()
-            .ok_or_else(|| Error::Coordinator("coordinator is shut down".into()))?;
         let (reply_tx, reply_rx) = sync_channel(1);
-        let job = Job { x: payload, submitted: Instant::now(), reply: reply_tx };
+        self.enqueue(Job::new(payload, Reply::Channel(reply_tx)))?;
+        Ok(Ticket { rx: reply_rx, taken: false })
+    }
+
+    fn enqueue(&self, job: Job) -> Result<()> {
+        let tx = match self.submit_tx.as_ref() {
+            Some(tx) => tx,
+            None => {
+                job.disarm();
+                return Err(Error::Coordinator("coordinator is shut down".into()));
+            }
+        };
         match tx.try_send(job) {
             Ok(()) => {
                 self.stats.submitted.fetch_add(1, Ordering::Relaxed);
-                Ok(Ticket { rx: reply_rx })
+                Ok(())
             }
-            Err(TrySendError::Full(_)) => {
+            Err(TrySendError::Full(job)) => {
+                job.disarm();
                 self.stats.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(Error::Coordinator("queue full (backpressure)".into()))
             }
-            Err(TrySendError::Disconnected(_)) => {
+            Err(TrySendError::Disconnected(job)) => {
+                job.disarm();
                 Err(Error::Coordinator("coordinator is shut down".into()))
             }
         }
@@ -270,11 +759,49 @@ impl Coordinator {
         &self.stats
     }
 
+    /// Number of batch shards.
+    pub fn shards(&self) -> usize {
+        self.queues.shards.len()
+    }
+
+    /// Point-in-time per-shard metrics (batches, items, steal counts,
+    /// nearest-rank latency percentiles), in shard order.
+    pub fn shard_snapshots(&self) -> Vec<ShardSnapshot> {
+        self.queues
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ShardSnapshot {
+                shard: i,
+                batches: s.stats.batches.load(Ordering::Relaxed),
+                items: s.stats.items.load(Ordering::Relaxed),
+                steals: s.stats.steals.load(Ordering::Relaxed),
+                latency_us: s.stats.latency_us.summary(),
+            })
+            .collect()
+    }
+
     /// Stop accepting requests, drain in-flight batches, join threads.
+    /// Every request accepted before the call is still answered exactly
+    /// once: drained batches get real replies; jobs orphaned by worker
+    /// deaths were already failed when the last worker went down (the
+    /// worker guard drains the queues), and the post-join sweep here
+    /// backstops with an explicit shutdown error — never a hang (see
+    /// `shutdown_fails_queued_unserved_tickets_explicitly` in
+    /// `rust/tests/serve_shard.rs`).
     pub fn shutdown(&mut self) {
         self.submit_tx.take(); // closes the submit queue
         for t in self.threads.drain(..) {
             let _ = t.join();
+        }
+        let leftover = self.queues.drain_residual();
+        if !leftover.is_empty() {
+            answer_all_err(
+                leftover,
+                "coordinator shut down before the request was served",
+                &self.stats,
+                None,
+            );
         }
     }
 }
@@ -287,16 +814,22 @@ impl Drop for Coordinator {
 
 fn batcher_loop(
     submit_rx: Receiver<Job>,
-    batch_tx: SyncSender<Vec<Job>>,
+    queues: Arc<ShardQueues>,
     max_batch: usize,
     max_wait: Duration,
     stats: Arc<Stats>,
 ) {
+    let shards = queues.shards.len();
+    let mut next = 0usize;
     loop {
         // Block for the first job of the batch.
         let first = match submit_rx.recv() {
             Ok(j) => j,
-            Err(_) => return, // submit side closed: drain done
+            Err(_) => {
+                // Submit side closed and drained: let workers finish.
+                queues.close();
+                return;
+            }
         };
         let mut batch = vec![first];
         let deadline = Instant::now() + max_wait;
@@ -313,18 +846,28 @@ fn batcher_loop(
         }
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.batched_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        if batch_tx.send(batch).is_err() {
-            return; // workers gone
+        // Round-robin shard assignment; stealing rebalances stragglers.
+        if let Err(batch) = queues.push(next % shards, batch) {
+            // Every worker is gone (they only die by panicking): answer
+            // the accepted jobs instead of hanging their waits.
+            answer_all_err(batch, "no live workers to serve the request", &stats, None);
         }
+        next = next.wrapping_add(1);
     }
 }
 
 fn worker_loop(
-    batch_rx: Arc<Mutex<Receiver<Vec<Job>>>>,
+    home: usize,
+    queues: Arc<ShardQueues>,
     factory: Arc<dyn BackendFactory>,
     stats: Arc<Stats>,
     intra_op_threads: usize,
 ) {
+    // Liveness accounting survives panics (the guard's drop runs on
+    // unwind, after the in-flight batch answered through `Job::drop`),
+    // which is what keeps queued tickets and `shutdown` from hanging
+    // after a worker dies.
+    let _guard = WorkerGuard { queues: queues.clone(), stats: stats.clone() };
     // Build the thread-local backend; on failure, keep serving errors so
     // accepted requests are still answered exactly once.
     let mut backend = factory.build();
@@ -332,20 +875,22 @@ fn worker_loop(
         b.set_intra_op_threads(intra_op_threads);
     }
     let spec = factory.spec();
-    loop {
-        let batch = {
-            let guard = batch_rx.lock().expect("batch queue lock");
-            match guard.recv() {
-                Ok(b) => b,
-                Err(_) => return, // batcher gone and queue drained
-            }
-        };
+    // Worker-local latency accumulator: one shard-buffer lock per
+    // batch, never per reply (and no steady-state allocation).
+    let mut lat_buf: Vec<f64> = Vec::new();
+    while let Some((shard, batch)) = queues.pop(home) {
+        let shard_stats = &queues.shards[shard].stats;
+        shard_stats.batches.fetch_add(1, Ordering::Relaxed);
+        shard_stats.items.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        if shard != home {
+            shard_stats.steals.fetch_add(1, Ordering::Relaxed);
+        }
         let backend = match &backend {
             Ok(b) => b,
             Err(e) => {
                 stats.backend_errors.fetch_add(1, Ordering::Relaxed);
                 let msg = format!("backend build failed: {e}");
-                answer_all_err(batch, &msg, &stats);
+                answer_all_err(batch, &msg, &stats, Some(shard_stats));
                 continue;
             }
         };
@@ -360,34 +905,46 @@ fn worker_loop(
         }
         match backend.run_batch(&x) {
             Ok(out) => {
-                for (i, job) in batch.into_iter().enumerate() {
+                lat_buf.clear();
+                for (i, mut job) in batch.into_iter().enumerate() {
                     let row = out.row(i).to_vec();
                     stats.completed.fetch_add(1, Ordering::Relaxed);
-                    stats.record_latency(job.submitted.elapsed());
-                    let _ = job.reply.send(Ok(row));
+                    let lat = job.submitted.elapsed();
+                    stats.record_latency(lat);
+                    lat_buf.push(lat.as_secs_f64() * 1e6);
+                    job.respond(Ok(row));
                 }
+                shard_stats.latency_us.record_many(&lat_buf);
             }
             Err(e) => {
                 stats.backend_errors.fetch_add(1, Ordering::Relaxed);
-                answer_all_err(batch, &e.to_string(), &stats);
+                answer_all_err(batch, &e.to_string(), &stats, Some(shard_stats));
             }
         }
     }
 }
 
-fn answer_all_err(batch: Vec<Job>, msg: &str, stats: &Stats) {
-    for job in batch {
+fn answer_all_err(batch: Vec<Job>, msg: &str, stats: &Stats, shard: Option<&ShardStats>) {
+    let mut lats = Vec::with_capacity(if shard.is_some() { batch.len() } else { 0 });
+    for mut job in batch {
         stats.completed.fetch_add(1, Ordering::Relaxed);
-        stats.record_latency(job.submitted.elapsed());
-        let _ = job.reply.send(Err(Error::Coordinator(msg.to_string())));
+        let lat = job.submitted.elapsed();
+        stats.record_latency(lat);
+        if shard.is_some() {
+            lats.push(lat.as_secs_f64() * 1e6);
+        }
+        job.respond(Err(Error::Coordinator(msg.to_string())));
+    }
+    if let Some(s) = shard {
+        s.latency_us.record_many(&lats);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::Polynomial;
     use crate::features::FeatureMap;
+    use crate::kernels::Polynomial;
     use crate::maclaurin::{RandomMaclaurin, RmConfig};
     use crate::rng::Rng;
 
@@ -449,6 +1006,8 @@ mod tests {
         let (factory, _) = native_factory(4, 8);
         let coord = Coordinator::start(factory, CoordinatorConfig::default());
         assert!(coord.submit(vec![0.0; 3]).is_err());
+        assert!(coord.submit_batch(vec![vec![0.0; 4], vec![0.0; 3]]).is_err());
+        assert!(coord.submit_callback(vec![0.0; 5], |_| {}).is_err());
     }
 
     #[test]
@@ -483,8 +1042,153 @@ mod tests {
         // Duplicate / descending.
         assert!(coord.submit_sparse(vec![1, 1], vec![1.0, 2.0]).is_err());
         assert!(coord.submit_sparse(vec![2, 0], vec![1.0, 2.0]).is_err());
+        // Batch validation is all-or-nothing, before anything queues.
+        assert!(coord
+            .submit_batch_sparse(vec![(vec![0], vec![1.0]), (vec![9], vec![1.0])])
+            .is_err());
         // None of the rejects consumed a queue slot.
         assert_eq!(coord.stats().submitted.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn batch_submission_replies_in_order() {
+        let (factory, map) = native_factory(3, 12);
+        let coord = Coordinator::start(
+            factory,
+            CoordinatorConfig { max_batch: 4, workers: 2, ..Default::default() },
+        );
+        let mut rng = Rng::seed_from(5);
+        let xs: Vec<Vec<f32>> =
+            (0..11).map(|_| (0..3).map(|_| rng.f32() - 0.5).collect()).collect();
+        let ticket = coord.submit_batch(xs.clone()).unwrap();
+        assert_eq!(ticket.accepted(), 11);
+        let replies = ticket.wait();
+        assert_eq!(replies.len(), 11);
+        for (x, r) in xs.iter().zip(replies) {
+            assert_eq!(r.unwrap(), map.transform(x), "batch reply out of order");
+        }
+        // The empty batch is legal and resolves immediately.
+        assert!(coord.submit_batch(Vec::new()).unwrap().wait().is_empty());
+    }
+
+    #[test]
+    fn batch_backpressure_slots_keep_reply_accounting_exact() {
+        // Rejected slots must carry exactly their backpressure error and
+        // never consume an accepted slot's reply (the Job drop guard is
+        // disarmed for never-enqueued jobs).
+        struct SlowEcho;
+        impl Backend for SlowEcho {
+            fn spec(&self) -> BackendSpec {
+                BackendSpec { input_dim: 2, output_dim: 2, max_batch: 1, fixed_batch: false }
+            }
+            fn run_batch(&self, x: &crate::linalg::Matrix) -> Result<crate::linalg::Matrix> {
+                std::thread::sleep(Duration::from_millis(10));
+                Ok(x.clone())
+            }
+        }
+        let factory = Arc::new(ClosureFactory {
+            spec: BackendSpec { input_dim: 2, output_dim: 2, max_batch: 1, fixed_batch: false },
+            f: || Ok(Box::new(SlowEcho) as Box<dyn Backend>),
+        });
+        let coord = Coordinator::start(
+            factory,
+            CoordinatorConfig {
+                max_batch: 1,
+                queue_depth: 2,
+                workers: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        );
+        let xs: Vec<Vec<f32>> = (0..30).map(|i| vec![i as f32, -(i as f32)]).collect();
+        let ticket = coord.submit_batch(xs.clone()).unwrap();
+        let accepted = ticket.accepted();
+        assert!(accepted < 30, "the tiny queue must reject part of the batch");
+        assert!(accepted > 0, "the queue must accept part of the batch");
+        let replies = ticket.wait();
+        assert_eq!(replies.len(), 30);
+        let mut ok = 0;
+        for (x, r) in xs.iter().zip(&replies) {
+            match r {
+                Ok(z) => {
+                    assert_eq!(z, x, "reply landed in the wrong slot");
+                    ok += 1;
+                }
+                Err(e) => assert!(
+                    e.to_string().contains("backpressure"),
+                    "rejected slot must carry its own error, got {e}"
+                ),
+            }
+        }
+        assert_eq!(ok, accepted, "every accepted request must produce exactly one Ok reply");
+    }
+
+    #[test]
+    fn poll_surface_delivers_exactly_once() {
+        let (factory, map) = native_factory(4, 8);
+        let coord = Coordinator::start(factory, CoordinatorConfig::default());
+        let x = vec![0.3f32, -0.1, 0.0, 0.9];
+        let mut ticket = coord.submit(x.clone()).unwrap();
+        let reply = loop {
+            match ticket.poll() {
+                Some(r) => break r,
+                None => std::thread::sleep(Duration::from_micros(200)),
+            }
+        };
+        assert_eq!(reply.unwrap(), map.transform(&x));
+        // The ticket is spent: further polls surface an error, they
+        // never hang or double-deliver.
+        match ticket.poll() {
+            Some(Err(e)) => assert!(e.to_string().contains("already taken"), "{e}"),
+            other => panic!("spent ticket must answer with an error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn callback_surface_runs_on_completion() {
+        let (factory, map) = native_factory(4, 8);
+        let coord = Coordinator::start(factory, CoordinatorConfig::default());
+        let x = vec![0.5f32, 0.25, -0.5, 0.1];
+        let (tx, rx) = std::sync::mpsc::channel();
+        coord
+            .submit_callback(x.clone(), move |r| {
+                tx.send(r).unwrap();
+            })
+            .unwrap();
+        let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(reply.unwrap(), map.transform(&x));
+    }
+
+    #[test]
+    fn shared_topology_and_sharded_topology_answer_identically() {
+        // shards = 1 is the pre-shard shared queue; any other shard
+        // count must produce bit-identical replies (scheduling, never
+        // semantics).
+        let (factory, map) = native_factory(5, 16);
+        let mut rng = Rng::seed_from(31);
+        let inputs: Vec<Vec<f32>> =
+            (0..24).map(|_| (0..5).map(|_| rng.f32() - 0.5).collect()).collect();
+        for shards in [1usize, 2, 4] {
+            let coord = Coordinator::start(
+                factory.clone(),
+                CoordinatorConfig { workers: 3, shards, ..Default::default() },
+            );
+            assert_eq!(coord.shards(), shards);
+            let tickets: Vec<_> =
+                inputs.iter().map(|x| coord.submit(x.clone()).unwrap()).collect();
+            for (x, t) in inputs.iter().zip(tickets) {
+                assert_eq!(t.wait().unwrap(), map.transform(x), "shards={shards}");
+            }
+            // Per-shard accounting covers every batch exactly once.
+            let snaps = coord.shard_snapshots();
+            assert_eq!(snaps.len(), shards);
+            let batches: u64 = snaps.iter().map(|s| s.batches).sum();
+            assert_eq!(batches, coord.stats().batches.load(Ordering::Relaxed));
+            let items: u64 = snaps.iter().map(|s| s.items).sum();
+            assert_eq!(items, coord.stats().batched_items.load(Ordering::Relaxed));
+            let recorded: usize = snaps.iter().map(|s| s.latency_us.n).sum();
+            assert_eq!(recorded as u64, coord.stats().completed.load(Ordering::Relaxed));
+        }
     }
 
     #[test]

@@ -26,6 +26,8 @@ pub enum Error {
     Runtime(String),
     /// Coordinator failure (queue closed, worker died, overload).
     Coordinator(String),
+    /// Benchmark gate failure (`rfdot bench-diff` found a regression).
+    Bench(String),
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -42,6 +44,7 @@ impl fmt::Display for Error {
             Error::Solver(m) => write!(f, "solver error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Bench(m) => write!(f, "bench error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -34,9 +34,87 @@
 //! the dense path's — the sparse kernels accumulate the stored entries
 //! in the exact order the dense kernels visit the nonzeros, the crate's
 //! sparse parity contract (`rust/tests/sparse_parity.rs`).
+//!
+//! The serving hot path additionally gets allocation-free transforms:
+//! [`FeatureMap::transform_into_scratch`] /
+//! [`FeatureMap::transform_sparse_into_scratch`] take a reusable
+//! per-worker [`Scratch`] arena for the map's internal workspace, and
+//! the batch defaults create one scratch per row block — so the
+//! steady-state per-input loop performs no heap allocation (asserted
+//! with a counting allocator in `rust/tests/alloc_free_transform.rs`).
 
 use crate::data::{Dataset, Storage};
 use crate::linalg::{Matrix, SparseMatrix, SparseRow};
+
+/// A reusable per-worker scratch arena for the transform hot paths.
+///
+/// Every map family needs some workspace per input — the projection
+/// vector and FWHT pads of Random Maclaurin, the Fastfood chains of
+/// structured Random Fourier, TensorSketch's count-sketch accumulators.
+/// Allocating that workspace per call is what made the serving hot loop
+/// allocate per input; a `Scratch` owns one growable backing buffer and
+/// hands out disjoint slices of it, so after the first (warm-up) call
+/// the steady state performs **zero heap allocation per input**
+/// (asserted by `rust/tests/alloc_free_transform.rs` with a counting
+/// allocator).
+///
+/// Ownership rule: a `Scratch` belongs to exactly one worker (thread)
+/// at a time — the batch paths create one per row block, the
+/// coordinator's backends one per worker. Slice contents are
+/// **unspecified** on entry (stale data from the previous input);
+/// callers must fully overwrite what they read.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    buf: Vec<f32>,
+}
+
+impl Scratch {
+    /// An empty arena (no allocation until first use).
+    pub fn new() -> Scratch {
+        Scratch { buf: Vec::new() }
+    }
+
+    /// Grow the backing buffer to at least `n` elements. `resize` only
+    /// ever grows, so steady-state calls never touch the allocator.
+    fn ensure(&mut self, n: usize) {
+        if self.buf.len() < n {
+            self.buf.resize(n, 0.0);
+        }
+    }
+
+    /// One scratch slice of length `n` (contents unspecified).
+    pub fn one(&mut self, n: usize) -> &mut [f32] {
+        self.ensure(n);
+        &mut self.buf[..n]
+    }
+
+    /// Two disjoint scratch slices (contents unspecified).
+    pub fn two(&mut self, a: usize, b: usize) -> (&mut [f32], &mut [f32]) {
+        self.ensure(a + b);
+        let (x, rest) = self.buf.split_at_mut(a);
+        (x, &mut rest[..b])
+    }
+
+    /// Four disjoint scratch slices (contents unspecified).
+    pub fn four(
+        &mut self,
+        a: usize,
+        b: usize,
+        c: usize,
+        d: usize,
+    ) -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
+        self.ensure(a + b + c + d);
+        let (x, rest) = self.buf.split_at_mut(a);
+        let (y, rest) = rest.split_at_mut(b);
+        let (z, rest) = rest.split_at_mut(c);
+        (x, y, z, &mut rest[..d])
+    }
+
+    /// Current backing capacity in elements (diagnostics/tests).
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+}
 
 /// A (possibly randomized, already-sampled) feature embedding
 /// `R^input_dim → R^output_dim`.
@@ -74,6 +152,29 @@ pub trait FeatureMap: Send + Sync {
         out
     }
 
+    /// [`FeatureMap::transform_into`] with a caller-owned [`Scratch`]
+    /// arena for the map's per-input workspace. Bit-identical to
+    /// `transform_into` — the scratch only replaces where the
+    /// intermediate buffers live, never what is computed. Families with
+    /// internal workspace override this so that steady-state calls with
+    /// a reused `Scratch` perform no heap allocation per input; the
+    /// default ignores the scratch and delegates.
+    fn transform_into_scratch(&self, x: &[f32], out: &mut [f32], _scratch: &mut Scratch) {
+        self.transform_into(x, out);
+    }
+
+    /// [`FeatureMap::transform_sparse_into`] with a caller-owned
+    /// [`Scratch`] arena (same contract as
+    /// [`FeatureMap::transform_into_scratch`]).
+    fn transform_sparse_into_scratch(
+        &self,
+        x: SparseRow<'_>,
+        out: &mut [f32],
+        _scratch: &mut Scratch,
+    ) {
+        self.transform_sparse_into(x, out);
+    }
+
     /// Apply the map to every row of `x`, using the global
     /// [`crate::parallel`] worker budget.
     fn transform_batch(&self, x: &Matrix) -> Matrix {
@@ -94,9 +195,12 @@ pub trait FeatureMap: Send + Sync {
         let work = rows.saturating_mul(dd).saturating_mul(self.input_dim().max(1));
         let threads = crate::parallel::resolve_threads_for_work(threads, rows, work);
         crate::parallel::par_chunks(threads, dd, out.as_mut_slice(), |row0, block| {
+            // One scratch per worker block: the per-row loop is
+            // allocation-free in steady state.
+            let mut scratch = Scratch::new();
             for (i, out_row) in block.chunks_mut(dd).enumerate() {
                 // Row blocks are disjoint; each row is one serial call.
-                self.transform_into(x.row(row0 + i), out_row);
+                self.transform_into_scratch(x.row(row0 + i), out_row, &mut scratch);
             }
         });
         out
@@ -134,8 +238,9 @@ pub trait FeatureMap: Send + Sync {
         let work = x.nnz().max(rows).saturating_mul(dd);
         let threads = crate::parallel::resolve_threads_for_work(threads, rows, work);
         crate::parallel::par_chunks(threads, dd, out.as_mut_slice(), |row0, block| {
+            let mut scratch = Scratch::new();
             for (i, out_row) in block.chunks_mut(dd).enumerate() {
-                self.transform_sparse_into(x.row(row0 + i), out_row);
+                self.transform_sparse_into_scratch(x.row(row0 + i), out_row, &mut scratch);
             }
         });
         out
@@ -307,6 +412,44 @@ mod tests {
         let zs = transform_dataset(&map, &sparse);
         assert_eq!(zd, zs);
         assert_eq!(zd, map.transform_batch(&x));
+    }
+
+    #[test]
+    fn scratch_slices_are_disjoint_and_grow_only() {
+        let mut s = Scratch::new();
+        assert_eq!(s.capacity(), 0);
+        {
+            let (a, b) = s.two(3, 5);
+            assert_eq!((a.len(), b.len()), (3, 5));
+            a.fill(1.0);
+            b.fill(2.0);
+            assert!(a.iter().all(|&v| v == 1.0), "slices must not alias");
+        }
+        let grown = s.capacity();
+        assert!(grown >= 8);
+        // Smaller requests reuse the backing buffer.
+        let _ = s.one(4);
+        assert_eq!(s.capacity(), grown);
+        let (w, x, y, z) = s.four(1, 2, 3, 4);
+        assert_eq!((w.len(), x.len(), y.len(), z.len()), (1, 2, 3, 4));
+        assert!(s.capacity() >= 10);
+    }
+
+    #[test]
+    fn scratch_transform_matches_plain_transform() {
+        // The default scratch entry points must be the plain ones.
+        let map = DoubleMap { d: 4 };
+        let x = [0.25f32, -1.0, 0.5, 3.0];
+        let mut scratch = Scratch::new();
+        let mut out = vec![0.0f32; map.output_dim()];
+        map.transform_into_scratch(&x, &mut out, &mut scratch);
+        assert_eq!(out, map.transform(&x));
+        // Sparse default too.
+        let m = Matrix::from_rows(&[x.to_vec()]).unwrap();
+        let sm = crate::linalg::SparseMatrix::from_dense(&m);
+        let mut out2 = vec![0.0f32; map.output_dim()];
+        map.transform_sparse_into_scratch(sm.row(0), &mut out2, &mut scratch);
+        assert_eq!(out2, out);
     }
 
     #[test]

@@ -48,7 +48,7 @@
 //!   served natively (the PJRT `transform` artifacts consume dense Ω
 //!   tensors only).
 
-use crate::features::FeatureMap;
+use crate::features::{FeatureMap, Scratch};
 use crate::kernels::DotProductKernel;
 use crate::rng::{Geometric, RademacherMatrix, Rng};
 use crate::structured::{DenseProjection, Projection, ProjectionKind, StructuredProjection};
@@ -547,33 +547,6 @@ impl RandomMaclaurin {
         }
     }
 
-    /// Write the random block (products only, no H0/1 prefix) into `out`.
-    ///
-    /// All projections are computed at once through the sampled
-    /// [`Projection`] stack — a streaming dense matvec (the §Perf pass
-    /// measured the bit-by-bit packed walk at ~7× slower than
-    /// vectorized f32 math) or the FWHT chain — then reduced by the
-    /// segmented product.
-    fn random_block_into(&self, x: &[f32], out: &mut [f32]) {
-        debug_assert_eq!(out.len(), self.n_random);
-        let projection = self.projection();
-        let mut proj = vec![0.0f32; projection.rows()];
-        projection.project_into(x, &mut proj);
-        self.products_from_projections(&proj, out);
-    }
-
-    /// CSR counterpart of [`RandomMaclaurin::random_block_into`]: the
-    /// projections run through [`Projection::project_sparse_into`]
-    /// (`O(rows · nnz)` for dense stacks), then the same segmented
-    /// product — bit-identical to the dense path on the densified row.
-    fn random_block_sparse_into(&self, x: crate::linalg::SparseRow<'_>, out: &mut [f32]) {
-        debug_assert_eq!(out.len(), self.n_random);
-        let projection = self.projection();
-        let mut proj = vec![0.0f32; projection.rows()];
-        projection.project_sparse_into(x, &mut proj);
-        self.products_from_projections(&proj, out);
-    }
-
     /// Write the H0/1 exact prefix `[√a_0, √a_1·x]` for a CSR row: the
     /// constant slot, then the scaled stored entries scattered into a
     /// zeroed linear block (the dense path's `√a_1 · 0` terms are exact
@@ -602,17 +575,33 @@ impl FeatureMap for RandomMaclaurin {
     }
 
     fn transform_into(&self, x: &[f32], out: &mut [f32]) {
+        self.transform_into_scratch(x, out, &mut Scratch::new());
+    }
+
+    /// The allocation-free hot path: all projections are computed at
+    /// once through the sampled [`Projection`] stack — a streaming
+    /// dense matvec (the §Perf pass measured the bit-by-bit packed walk
+    /// at ~7× slower than vectorized f32 math) or the FWHT chain, with
+    /// the projection vector and the chain's pads living in the
+    /// caller's reusable [`Scratch`] — then reduced by the segmented
+    /// product. Bit-identical to [`FeatureMap::transform_into`] (which
+    /// delegates here with a throwaway scratch).
+    fn transform_into_scratch(&self, x: &[f32], out: &mut [f32], scratch: &mut Scratch) {
         assert_eq!(x.len(), self.d, "input dim mismatch");
         assert_eq!(out.len(), self.output_dim(), "output dim mismatch");
-        if self.config.h01 {
+        let prefix = if self.config.h01 {
             out[0] = self.w_const;
             for (o, &xi) in out[1..1 + self.d].iter_mut().zip(x) {
                 *o = self.w_linear * xi;
             }
-            self.random_block_into(x, &mut out[1 + self.d..]);
+            1 + self.d
         } else {
-            self.random_block_into(x, out);
-        }
+            0
+        };
+        let projection = self.projection();
+        let (proj, work) = scratch.two(projection.rows(), projection.scratch_len());
+        projection.project_into_scratch(x, proj, work);
+        self.products_from_projections(proj, &mut out[prefix..]);
     }
 
     /// Batch override: the sampled [`Projection`] stack computes every
@@ -662,14 +651,33 @@ impl FeatureMap for RandomMaclaurin {
     /// [`FeatureMap::transform_into`] on the densified row (the sparse
     /// parity contract).
     fn transform_sparse_into(&self, x: crate::linalg::SparseRow<'_>, out: &mut [f32]) {
+        self.transform_sparse_into_scratch(x, out, &mut Scratch::new());
+    }
+
+    /// CSR twin of [`FeatureMap::transform_into_scratch`]: the
+    /// projections run through
+    /// [`Projection::project_sparse_into_scratch`] (`O(rows · nnz)` for
+    /// dense stacks), then the same segmented product — bit-identical
+    /// to the dense path on the densified row, allocation-free with a
+    /// reused scratch.
+    fn transform_sparse_into_scratch(
+        &self,
+        x: crate::linalg::SparseRow<'_>,
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
         assert_eq!(x.dim, self.d, "input dim mismatch");
         assert_eq!(out.len(), self.output_dim(), "output dim mismatch");
-        if self.config.h01 {
+        let prefix = if self.config.h01 {
             self.h01_prefix_sparse_into(x, out);
-            self.random_block_sparse_into(x, &mut out[1 + self.d..]);
+            1 + self.d
         } else {
-            self.random_block_sparse_into(x, out);
-        }
+            0
+        };
+        let projection = self.projection();
+        let (proj, work) = scratch.two(projection.rows(), projection.scratch_len());
+        projection.project_sparse_into_scratch(x, proj, work);
+        self.products_from_projections(proj, &mut out[prefix..]);
     }
 
     /// Sparse batch override: one [`Projection::project_batch_sparse`]

@@ -148,6 +148,70 @@ impl Summary {
     }
 }
 
+/// A bounded, shareable raw-sample recorder — the backing store of the
+/// per-shard latency [`Summary`] percentiles in the serving layer
+/// ([`crate::coordinator`]'s `ShardStats`).
+///
+/// Unlike the log-bucketed histogram in [`Stats`] (whose quantiles are
+/// power-of-two upper edges), this keeps the actual samples so
+/// [`SampleBuffer::summary`] reports true nearest-rank percentiles. To
+/// bound memory under open-ended serving, recording stops after `cap`
+/// samples (the warm-up window, which is what serving dashboards want
+/// anyway); `len()` vs `cap` tells an observer whether the window is
+/// saturated.
+#[derive(Debug)]
+pub struct SampleBuffer {
+    cap: usize,
+    samples: std::sync::Mutex<Vec<f64>>,
+}
+
+impl SampleBuffer {
+    /// An empty buffer that keeps at most `cap` samples.
+    pub fn new(cap: usize) -> SampleBuffer {
+        SampleBuffer { cap, samples: std::sync::Mutex::new(Vec::new()) }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<f64>> {
+        // Tolerate poisoning: a panicked recorder leaves a perfectly
+        // usable Vec behind, and metrics must never compound a failure.
+        self.samples.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Record one sample (dropped silently once the buffer is full).
+    pub fn record(&self, v: f64) {
+        self.record_many(std::slice::from_ref(&v));
+    }
+
+    /// Record a batch of samples under one lock acquisition — the
+    /// serving hot loop records per *batch*, so per-item replies never
+    /// contend on this mutex (which would bias the shared-queue
+    /// topology baseline the serve bench compares against). Samples
+    /// beyond the cap are dropped silently.
+    pub fn record_many(&self, vs: &[f64]) {
+        if vs.is_empty() {
+            return;
+        }
+        let mut s = self.lock();
+        let room = self.cap.saturating_sub(s.len());
+        s.extend_from_slice(&vs[..vs.len().min(room)]);
+    }
+
+    /// Samples recorded so far (≤ the construction cap).
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Nearest-rank percentile summary of the recorded samples.
+    pub fn summary(&self) -> Summary {
+        Summary::from_samples(&self.lock())
+    }
+}
+
 /// A simple wall-clock stopwatch (used by benches and the CLI).
 #[derive(Clone, Copy, Debug)]
 pub struct Stopwatch {
@@ -242,6 +306,22 @@ mod tests {
         assert_eq!(empty.mean, 0.0);
         let one = Summary::from_samples(&[7.5]);
         assert_eq!((one.min, one.p50, one.p90, one.max), (7.5, 7.5, 7.5, 7.5));
+    }
+
+    #[test]
+    fn sample_buffer_caps_and_summarizes() {
+        let b = SampleBuffer::new(3);
+        assert!(b.is_empty());
+        assert_eq!(b.summary().n, 0);
+        b.record(30.0);
+        b.record_many(&[10.0, 20.0, 99.0]);
+        // The fourth sample fell off the cap.
+        assert_eq!(b.len(), 3);
+        let s = b.summary();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 10.0);
+        assert_eq!(s.max, 30.0);
+        assert_eq!(s.p50, 20.0);
     }
 
     #[test]

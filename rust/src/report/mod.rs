@@ -56,8 +56,9 @@ use std::path::{Path, PathBuf};
 
 /// Schema version stamped into `REPORT.json` (bump on layout changes;
 /// [`parse_report`] rejects documents from another version, which is
-/// what the CI smoke's "schema drift" gate trips on).
-pub const REPORT_VERSION: u64 = 1;
+/// what the CI smoke's "schema drift" gate trips on). v2 added the
+/// serving-throughput panel (`serving` section).
+pub const REPORT_VERSION: u64 = 2;
 
 /// The feature-map families of the grid, in declaration order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -321,6 +322,27 @@ pub struct ThreadPoint {
     pub speedup: f64,
 }
 
+/// One point of the serving-throughput panel: the coordinator under a
+/// synthetic client load, at one (worker count, queue topology)
+/// configuration. `shards == 1` is the shared-queue baseline;
+/// `shards == workers` the per-worker sharded topology with work
+/// stealing.
+#[derive(Clone, Debug)]
+pub struct ServePoint {
+    pub workers: usize,
+    pub shards: usize,
+    /// Completed requests per second (wall clock, like the transform
+    /// cost columns: cached by the run-log, not seed-deterministic).
+    pub reqs_per_s: f64,
+    /// Request latency percentiles in microseconds (log-bucket upper
+    /// edges from the coordinator's histogram).
+    pub p50_us: f64,
+    pub p90_us: f64,
+    /// Batches executed by a worker whose home shard was elsewhere,
+    /// summed over shards (0 by construction when `shards == 1`).
+    pub steals: u64,
+}
+
 /// The fully assembled report — the in-memory mirror of `REPORT.json`.
 #[derive(Clone, Debug)]
 pub struct Report {
@@ -335,6 +357,9 @@ pub struct Report {
     pub cells: Vec<Cell>,
     pub accuracy: Vec<AccuracyRow>,
     pub threads: Vec<ThreadPoint>,
+    /// The serving panel: coordinator throughput over worker count ×
+    /// queue topology (shared vs sharded with work stealing).
+    pub serving: Vec<ServePoint>,
 }
 
 /// FNV-1a over a cell id: an order-independent, dependency-free stream
@@ -566,6 +591,90 @@ fn thread_sweep(config: &ReportConfig, x: &Matrix) -> Result<Vec<ThreadPoint>> {
     Ok(points)
 }
 
+/// The serving panel measurement: a native-backed coordinator under a
+/// synthetic concurrent client load, swept over worker count (the
+/// config's `threads_sweep` axis) × queue topology (`shards = 1`, the
+/// pre-shard shared queue, vs `shards = workers`, per-worker shards
+/// with work stealing). Replies are bit-identical across topologies
+/// (the serving parity contract, `rust/tests/serve_shard.rs`); this
+/// panel records what changes — throughput, latency percentiles and
+/// steal counts.
+fn serve_sweep(config: &ReportConfig) -> Result<Vec<ServePoint>> {
+    use crate::coordinator::{Coordinator, CoordinatorConfig, NativeFactory};
+    use std::sync::Arc;
+
+    let kspec = KernelSpec::parse(&config.kernels[0])?;
+    let kernel = kspec.build(1.0);
+    let d = config.dim;
+    let dd = *config.d_sweep.last().expect("validated non-empty");
+    let mut rng = Rng::seed_from(config.seed ^ 0x5E87E);
+    let map = Arc::new(RandomMaclaurin::sample(
+        kernel.as_ref(),
+        d,
+        dd,
+        RmConfig::default(),
+        &mut rng,
+    ));
+    let mut points = Vec::new();
+    for &workers in &config.threads_sweep {
+        // workers == 1 has only one topology; dedup it.
+        let mut topologies = vec![1usize];
+        if workers > 1 {
+            topologies.push(workers);
+        }
+        for &shards in &topologies {
+            let coord = Arc::new(Coordinator::start(
+                Arc::new(NativeFactory::new(map.clone())),
+                CoordinatorConfig {
+                    workers,
+                    shards,
+                    max_batch: 64,
+                    max_wait: std::time::Duration::from_micros(200),
+                    queue_depth: 8192,
+                    intra_op_threads: 1,
+                },
+            ));
+            let clients = 4usize;
+            let per_client = (config.serve_requests / clients).max(1);
+            let sw = crate::metrics::Stopwatch::start();
+            let mut handles = Vec::new();
+            for c in 0..clients {
+                let coord = coord.clone();
+                let seed = config.seed ^ (0xC11E47 + c as u64);
+                handles.push(std::thread::spawn(move || {
+                    let mut rng = Rng::seed_from(seed);
+                    let mut ok = 0usize;
+                    for _ in 0..per_client {
+                        let x: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+                        if let Ok(t) = coord.submit(x) {
+                            if t.wait().is_ok() {
+                                ok += 1;
+                            }
+                        }
+                    }
+                    ok
+                }));
+            }
+            let completed: usize = handles
+                .into_iter()
+                .map(|h| h.join().expect("serve-sweep client"))
+                .sum();
+            let dt = sw.elapsed_secs().max(1e-9);
+            let stats = coord.stats();
+            let steals: u64 = coord.shard_snapshots().iter().map(|s| s.steals).sum();
+            points.push(ServePoint {
+                workers,
+                shards,
+                reqs_per_s: completed as f64 / dt,
+                p50_us: stats.latency_quantile_us(0.5) as f64,
+                p90_us: stats.latency_quantile_us(0.9) as f64,
+                steals,
+            });
+        }
+    }
+    Ok(points)
+}
+
 /// The resumable run-log: everything completed so far, keyed by the
 /// config [`ReportConfig::fingerprint`]. Saved after every finished
 /// cell, so interrupting a full-grid run loses at most one cell, and
@@ -577,6 +686,7 @@ pub struct RunLog {
     pub cells: BTreeMap<String, Cell>,
     pub accuracy: Option<Vec<AccuracyRow>>,
     pub threads: Option<Vec<ThreadPoint>>,
+    pub serving: Option<Vec<ServePoint>>,
     path: PathBuf,
 }
 
@@ -589,6 +699,7 @@ impl RunLog {
             cells: BTreeMap::new(),
             accuracy: None,
             threads: None,
+            serving: None,
             path,
         };
         if !resume {
@@ -664,6 +775,10 @@ pub fn run(config: &ReportConfig) -> Result<Report> {
         log.threads = Some(thread_sweep(config, &x)?);
         log.save()?;
     }
+    if log.serving.is_none() {
+        log.serving = Some(serve_sweep(config)?);
+        log.save()?;
+    }
 
     let report = Report {
         version: REPORT_VERSION,
@@ -677,6 +792,7 @@ pub fn run(config: &ReportConfig) -> Result<Report> {
             .collect(),
         accuracy: log.accuracy.clone().expect("filled above"),
         threads: log.threads.clone().expect("filled above"),
+        serving: log.serving.clone().expect("filled above"),
     };
     render::write_all(&report, out_dir)?;
     let written = std::fs::read_to_string(out_dir.join("REPORT.json"))?;

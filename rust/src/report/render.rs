@@ -11,8 +11,8 @@
 
 use super::svg::{self, Series};
 use super::{
-    AccuracyRow, Cell, CellStats, CellStatus, Family, Report, RowOutcome, RunLog, ThreadPoint,
-    FAMILIES, REPORT_VERSION,
+    AccuracyRow, Cell, CellStats, CellStatus, Family, Report, RowOutcome, RunLog, ServePoint,
+    ThreadPoint, FAMILIES, REPORT_VERSION,
 };
 use crate::bench::{fmt_duration, Table};
 use crate::config::json::Json;
@@ -114,6 +114,17 @@ fn thread_json(t: &ThreadPoint) -> Json {
     ])
 }
 
+fn serve_json(p: &ServePoint) -> Json {
+    obj(vec![
+        ("workers", int(p.workers)),
+        ("shards", int(p.shards)),
+        ("reqs_per_s", num(p.reqs_per_s)),
+        ("p50_us", num(p.p50_us)),
+        ("p90_us", num(p.p90_us)),
+        ("steals", int(p.steals as usize)),
+    ])
+}
+
 fn grid_json(c: &ReportConfig) -> Json {
     obj(vec![
         ("quick", Json::Bool(c.quick)),
@@ -126,6 +137,7 @@ fn grid_json(c: &ReportConfig) -> Json {
         ("datasets", str_arr(&c.datasets)),
         ("scale", num(c.scale)),
         ("accuracy_features", int(c.accuracy_features)),
+        ("serve_requests", int(c.serve_requests)),
     ])
 }
 
@@ -147,6 +159,7 @@ pub fn report_json(report: &Report, assets: &[String]) -> Json {
             ("cells", Json::Arr(report.cells.iter().map(cell_json).collect())),
             ("accuracy", Json::Arr(report.accuracy.iter().map(accuracy_json).collect())),
             ("threads", Json::Arr(report.threads.iter().map(thread_json).collect())),
+            ("serving", Json::Arr(report.serving.iter().map(serve_json).collect())),
             ("assets", str_arr(assets)),
         ]),
     )])
@@ -162,6 +175,9 @@ pub fn runlog_json(log: &RunLog) -> Json {
     }
     if let Some(points) = &log.threads {
         fields.push(("threads", Json::Arr(points.iter().map(thread_json).collect())));
+    }
+    if let Some(points) = &log.serving {
+        fields.push(("serving", Json::Arr(points.iter().map(serve_json).collect())));
     }
     obj(fields)
 }
@@ -268,6 +284,17 @@ fn decode_thread(v: &Json) -> Result<ThreadPoint> {
     })
 }
 
+fn decode_serve(v: &Json) -> Result<ServePoint> {
+    Ok(ServePoint {
+        workers: req_usize(v, "workers")?,
+        shards: req_usize(v, "shards")?,
+        reqs_per_s: req_f64(v, "reqs_per_s")?,
+        p50_us: req_f64(v, "p50_us")?,
+        p90_us: req_f64(v, "p90_us")?,
+        steals: req_usize(v, "steals")? as u64,
+    })
+}
+
 fn decode_grid(v: &Json, mode: &str, seed: u64) -> Result<ReportConfig> {
     let quick = v
         .req("quick")?
@@ -291,6 +318,7 @@ fn decode_grid(v: &Json, mode: &str, seed: u64) -> Result<ReportConfig> {
         datasets: crate::config::str_list(req_arr(v, "datasets")?, "datasets")?,
         scale: req_f64(v, "scale")?,
         accuracy_features: req_usize(v, "accuracy_features")?,
+        serve_requests: req_usize(v, "serve_requests")?,
     })
 }
 
@@ -318,6 +346,8 @@ pub fn decode_report(doc: &Json) -> Result<Report> {
         req_arr(v, "accuracy")?.iter().map(decode_accuracy).collect::<Result<Vec<_>>>()?;
     let threads =
         req_arr(v, "threads")?.iter().map(decode_thread).collect::<Result<Vec<_>>>()?;
+    let serving =
+        req_arr(v, "serving")?.iter().map(decode_serve).collect::<Result<Vec<_>>>()?;
     // Assets must be declared (the markdown references them).
     crate::config::str_list(req_arr(v, "assets")?, "assets")?;
     Ok(Report {
@@ -329,6 +359,7 @@ pub fn decode_report(doc: &Json) -> Result<Report> {
         cells,
         accuracy,
         threads,
+        serving,
     })
 }
 
@@ -366,7 +397,17 @@ pub fn parse_runlog(text: &str, path: PathBuf) -> Result<RunLog> {
         ),
         None => None,
     };
-    Ok(RunLog { fingerprint, cells, accuracy, threads, path })
+    let serving = match doc.get("serving") {
+        Some(v) => Some(
+            v.as_arr()
+                .ok_or_else(|| Error::Config("run-log serving must be an array".into()))?
+                .iter()
+                .map(decode_serve)
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        None => None,
+    };
+    Ok(RunLog { fingerprint, cells, accuracy, threads, serving, path })
 }
 
 // ---------------------------------------------------------------- assets
@@ -479,6 +520,22 @@ pub fn build_assets(report: &Report) -> Vec<(String, String)> {
             "transform_batch thread scaling (Random Maclaurin)",
             "speedup vs 1 thread",
             &thread_bars,
+        ),
+    ));
+    let serve_bars: Vec<(String, f64)> = report
+        .serving
+        .iter()
+        .map(|p| {
+            let topology = if p.shards == 1 { "shared" } else { "sharded" };
+            (format!("{}w {topology}", p.workers), p.reqs_per_s)
+        })
+        .collect();
+    assets.push((
+        "report/serving.svg".to_string(),
+        svg::bar_chart(
+            "coordinator throughput: workers x queue topology",
+            "requests / second",
+            &serve_bars,
         ),
     ));
     assets
@@ -629,6 +686,34 @@ pub fn report_markdown(report: &Report, assets: &[String]) -> String {
     md.push_str(&t.render());
     md.push('\n');
 
+    md.push_str("## Serving throughput\n\n");
+    md.push_str(
+        "The coordinator under a concurrent client load (native backend),\n\
+         swept over worker count and batch-queue topology: `shared` is one\n\
+         queue every worker pops from (the pre-shard baseline), `sharded`\n\
+         is one queue per worker with work stealing for stragglers.\n\
+         Replies are bit-identical across topologies (the serving parity\n\
+         contract); only throughput, latency and steal counts move.\n\n",
+    );
+    md.push_str("![serving throughput](report/serving.svg)\n\n");
+    let mut t = Table::new(&["workers", "topology", "req/s", "p50", "p90", "steals"]);
+    for p in &report.serving {
+        t.row(&[
+            format!("{}", p.workers),
+            if p.shards == 1 {
+                "shared".into()
+            } else {
+                format!("sharded x{}", p.shards)
+            },
+            format!("{:.0}", p.reqs_per_s),
+            format!("<={:.0}us", p.p50_us),
+            format!("<={:.0}us", p.p90_us),
+            format!("{}", p.steals),
+        ]);
+    }
+    md.push_str(&t.render());
+    md.push('\n');
+
     md.push_str("## Skipped cells\n\n");
     md.push_str(
         "Every declared cell the grid could not run, with its reason —\n\
@@ -746,6 +831,24 @@ mod tests {
                 ThreadPoint { threads: 1, secs: 1.0, speedup: 1.0 },
                 ThreadPoint { threads: 2, secs: 0.6, speedup: 1.667 },
             ],
+            serving: vec![
+                ServePoint {
+                    workers: 2,
+                    shards: 1,
+                    reqs_per_s: 5000.0,
+                    p50_us: 128.0,
+                    p90_us: 512.0,
+                    steals: 0,
+                },
+                ServePoint {
+                    workers: 2,
+                    shards: 2,
+                    reqs_per_s: 8000.0,
+                    p50_us: 64.0,
+                    p90_us: 256.0,
+                    steals: 3,
+                },
+            ],
         }
     }
 
@@ -789,7 +892,13 @@ mod tests {
         let report = tiny_report();
         let good = report_json(&report, &[]).pretty();
         // Version bump = drift.
-        let bad = good.replace("\"version\": 1", "\"version\": 2");
+        let bad = good.replace(
+            &format!("\"version\": {REPORT_VERSION}"),
+            &format!("\"version\": {}", REPORT_VERSION + 1),
+        );
+        assert!(decode_report(&Json::parse(&bad).unwrap()).is_err());
+        // A missing serving panel = drift (the v2 section is required).
+        let bad = good.replace("\"serving\"", "\"serving_panel\"");
         assert!(decode_report(&Json::parse(&bad).unwrap()).is_err());
         // Unknown status tag = drift.
         let bad = good.replace("\"status\": \"skipped\"", "\"status\": \"pending\"");
@@ -811,6 +920,7 @@ mod tests {
             cells,
             accuracy: None,
             threads: Some(report.threads.clone()),
+            serving: Some(report.serving.clone()),
             path: PathBuf::from("/tmp/x"),
         };
         let text = runlog_json(&log).pretty();
@@ -819,6 +929,10 @@ mod tests {
         assert_eq!(back.cells.len(), 3);
         assert!(back.accuracy.is_none());
         assert_eq!(back.threads.as_ref().map(Vec::len), Some(2));
+        let serving = back.serving.as_ref().expect("serving points survive the round trip");
+        assert_eq!(serving.len(), 2);
+        assert_eq!(serving[1].shards, 2);
+        assert_eq!(serving[1].steals, 3);
     }
 
     #[test]
@@ -833,10 +947,12 @@ mod tests {
             "## Transform cost: dense vs structured vs sparse",
             "## Accuracy (Table 1)",
             "## Thread scaling",
+            "## Serving throughput",
             "## Skipped cells",
         ] {
             assert!(md.contains(section), "missing {section:?}");
         }
+        assert!(md.contains("sharded x2"), "serving table must label the sharded topology");
         assert!(md.contains("not shift-invariant"));
         assert!(md.contains("report/error_rm.svg"));
         assert!(md.contains("90.00%"));
@@ -855,6 +971,7 @@ mod tests {
             );
         }
         assert!(assets.iter().any(|(n, _)| n.ends_with("threads.svg")));
+        assert!(assets.iter().any(|(n, _)| n.ends_with("serving.svg")));
         // The rm speedup chart sees the 3x sparse win of the tiny report.
         let (_, rm_speedup) =
             assets.iter().find(|(n, _)| n.contains("speedup_rm")).unwrap();

@@ -14,7 +14,7 @@
 //!   (`C_W = 2`) and Lipschitz on expectation — exactly the assumptions
 //!   of the paper's §5.
 
-use crate::features::FeatureMap;
+use crate::features::{FeatureMap, Scratch};
 use crate::maclaurin::compositional::{ScalarMap, ScalarMapFactory};
 use crate::rng::Rng;
 use crate::structured::{DenseProjection, Projection, ProjectionKind, StructuredProjection};
@@ -179,10 +179,19 @@ impl FeatureMap for RandomFourier {
     }
 
     fn transform_into(&self, x: &[f32], out: &mut [f32]) {
+        self.transform_into_scratch(x, out, &mut Scratch::new());
+    }
+
+    /// Allocation-free hot path: the projection buffer doubles as the
+    /// output buffer, and the structured (Fastfood) chain's FWHT pads
+    /// live in the caller's reusable [`Scratch`] (dense frequency
+    /// stacks need no workspace at all). Bit-identical to
+    /// [`FeatureMap::transform_into`].
+    fn transform_into_scratch(&self, x: &[f32], out: &mut [f32], scratch: &mut Scratch) {
         assert_eq!(x.len(), self.input_dim());
         assert_eq!(out.len(), self.output_dim());
-        // The projection buffer doubles as the output buffer.
-        self.freqs.as_projection().project_into(x, out);
+        let p = self.freqs.as_projection();
+        p.project_into_scratch(x, out, scratch.one(p.scratch_len()));
         let scale = self.scale();
         for (o, &bi) in out.iter_mut().zip(&self.b) {
             *o = scale * (*o + bi).cos();
@@ -222,9 +231,21 @@ impl FeatureMap for RandomFourier {
     /// stack's sparse projection, then the identical cosine activation —
     /// equal to the dense path on the densified row.
     fn transform_sparse_into(&self, x: crate::linalg::SparseRow<'_>, out: &mut [f32]) {
+        self.transform_sparse_into_scratch(x, out, &mut Scratch::new());
+    }
+
+    /// CSR twin of [`FeatureMap::transform_into_scratch`] (same
+    /// contract: bit-identical, allocation-free with a reused scratch).
+    fn transform_sparse_into_scratch(
+        &self,
+        x: crate::linalg::SparseRow<'_>,
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
         assert_eq!(x.dim, self.input_dim(), "input dim mismatch");
         assert_eq!(out.len(), self.output_dim(), "output dim mismatch");
-        self.freqs.as_projection().project_sparse_into(x, out);
+        let p = self.freqs.as_projection();
+        p.project_sparse_into_scratch(x, out, scratch.one(p.scratch_len()));
         let scale = self.scale();
         for (o, &bi) in out.iter_mut().zip(&self.b) {
             *o = scale * (*o + bi).cos();

@@ -36,7 +36,7 @@
 //! that layout; see its docs.
 
 use super::Projection;
-use crate::linalg::{fwht, next_pow2, Matrix};
+use crate::linalg::{fwht, next_pow2, SparseRow};
 use crate::rng::Rng;
 
 /// One seeded HD block plus the output taps it serves.
@@ -63,6 +63,34 @@ impl HdBlock {
             buf[k] = xk * self.signs[k];
         }
         buf[x.len()..].fill(0.0);
+        self.finish(buf, tmp, out);
+    }
+
+    /// CSR twin of [`HdBlock::project`]: only the stored entries are
+    /// multiplied by the diagonal (zeros scatter nothing), so the
+    /// `D x` pass costs `O(nnz)` instead of `O(d)`. Equal to the dense
+    /// chain on the densified row — the only representational
+    /// difference is the sign of zeros (`0 · −1 = −0` on the dense
+    /// path), which `f32` equality ignores (the sparse parity
+    /// contract's one legal divergence).
+    fn project_sparse(
+        &self,
+        x: crate::linalg::SparseRow<'_>,
+        buf: &mut [f32],
+        tmp: &mut [f32],
+        out: &mut [f32],
+    ) {
+        buf.fill(0.0);
+        for (&k, &v) in x.indices.iter().zip(x.values) {
+            let k = k as usize;
+            buf[k] = v * self.signs[k];
+        }
+        self.finish(buf, tmp, out);
+    }
+
+    /// Shared tail of both entry paths: the FWHT chain over the
+    /// diagonal-multiplied buffer, then the output taps.
+    fn finish(&self, buf: &mut [f32], tmp: &mut [f32], out: &mut [f32]) {
         fwht(buf);
         let src: &[f32] = match &self.perm_gain {
             Some((perm, gain)) => {
@@ -261,44 +289,50 @@ impl Projection for StructuredProjection {
         self.blocks.iter().map(HdBlock::work).sum::<usize>().max(1)
     }
 
+    /// FWHT pad + (Gaussian-chain) permutation buffer.
+    fn scratch_len(&self) -> usize {
+        self.n + self.tmp_len()
+    }
+
     fn project_into(&self, x: &[f32], out: &mut [f32]) {
+        let mut work = vec![0.0f32; self.scratch_len()];
+        self.project_into_scratch(x, out, &mut work);
+    }
+
+    fn project_into_scratch(&self, x: &[f32], out: &mut [f32], work: &mut [f32]) {
         assert_eq!(x.len(), self.d, "input dim mismatch");
         assert_eq!(out.len(), self.rows, "output len mismatch");
-        let mut buf = vec![0.0f32; self.n];
-        let mut tmp = vec![0.0f32; self.tmp_len()];
+        let (buf, rest) = work.split_at_mut(self.n);
+        let tmp = &mut rest[..self.tmp_len()];
         for block in &self.blocks {
-            block.project(x, &mut buf, &mut tmp, out);
+            block.project(x, buf, tmp, out);
         }
     }
 
-    fn project_batch(&self, x: &Matrix, threads: usize) -> Matrix {
-        assert_eq!(x.cols(), self.d, "input dim mismatch");
-        let (b, r) = (x.rows(), self.rows);
-        let mut out = Matrix::zeros(b, r);
-        if b == 0 || r == 0 {
-            return out;
+    /// `O(nnz + n log n)` per block: the diagonal pass scatters only
+    /// the stored entries (see [`HdBlock::project_sparse`]); the FWHT
+    /// chain needs the full padded buffer either way. Equal to the
+    /// dense path on the densified row.
+    fn project_sparse_into(&self, x: SparseRow<'_>, out: &mut [f32]) {
+        let mut work = vec![0.0f32; self.scratch_len()];
+        self.project_sparse_into_scratch(x, out, &mut work);
+    }
+
+    fn project_sparse_into_scratch(&self, x: SparseRow<'_>, out: &mut [f32], work: &mut [f32]) {
+        assert_eq!(x.dim, self.d, "input dim mismatch");
+        assert_eq!(out.len(), self.rows, "output len mismatch");
+        let (buf, rest) = work.split_at_mut(self.n);
+        let tmp = &mut rest[..self.tmp_len()];
+        for block in &self.blocks {
+            block.project_sparse(x, buf, tmp, out);
         }
-        let work = b.saturating_mul(self.unit_work());
-        let threads = crate::parallel::resolve_threads_for_work(threads, b, work);
-        crate::parallel::par_chunks(threads, r, out.as_mut_slice(), |row0, block| {
-            // Scratch is per-worker; every row still runs the identical
-            // serial chain, so any thread count is bit-identical.
-            let mut buf = vec![0.0f32; self.n];
-            let mut tmp = vec![0.0f32; self.tmp_len()];
-            for (i, out_row) in block.chunks_mut(r).enumerate() {
-                for blk in &self.blocks {
-                    blk.project(x.row(row0 + i), &mut buf, &mut tmp, out_row);
-                }
-            }
-        });
-        out
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::dot;
+    use crate::linalg::{dot, Matrix};
 
     fn unit_vec(d: usize, seed: u64) -> Vec<f32> {
         let mut rng = Rng::seed_from(seed);
@@ -479,6 +513,43 @@ mod tests {
         a.project_into(&x, &mut oa);
         b.project_into(&x, &mut ob);
         assert_eq!(oa, ob);
+    }
+
+    #[test]
+    fn scratch_and_sparse_paths_match_dense_projection() {
+        // project_into_scratch is project_into with relocated buffers;
+        // the CSR scatter path equals the densified chain (up to the
+        // sign of zeros, which f32 equality ignores).
+        let mut rng = Rng::seed_from(31);
+        for p in [
+            StructuredProjection::rademacher_stack(13, 20, &mut rng),
+            StructuredProjection::gaussian_stack(13, 20, 0.8, &mut rng),
+        ] {
+            let mut x = vec![0.0f32; 13];
+            for (k, v) in x.iter_mut().enumerate() {
+                if k % 3 == 0 {
+                    *v = (k as f32 * 0.37).sin();
+                }
+            }
+            let mut plain = vec![0.0f32; 20];
+            p.project_into(&x, &mut plain);
+            let mut work = vec![0.0f32; p.scratch_len()];
+            let mut scratched = vec![0.0f32; 20];
+            p.project_into_scratch(&x, &mut scratched, &mut work);
+            assert_eq!(plain, scratched);
+            // Reuse with stale contents must not leak between calls.
+            p.project_into_scratch(&x, &mut scratched, &mut work);
+            assert_eq!(plain, scratched);
+
+            let m = Matrix::from_rows(&[x.clone()]).unwrap();
+            let sm = crate::linalg::SparseMatrix::from_dense(&m);
+            let mut sparse = vec![0.0f32; 20];
+            p.project_sparse_into(sm.row(0), &mut sparse);
+            assert_eq!(plain, sparse);
+            let mut sparse2 = vec![f32::NAN; 20];
+            p.project_sparse_into_scratch(sm.row(0), &mut sparse2, &mut work);
+            assert_eq!(plain, sparse2);
+        }
     }
 
     #[test]

@@ -114,6 +114,28 @@ pub trait Projection: Send + Sync + std::fmt::Debug {
     /// `out[r] = ⟨w_r, x⟩` (`out.len() == rows()`).
     fn project_into(&self, x: &[f32], out: &mut [f32]);
 
+    /// Length of the caller-owned workspace slice the scratch entry
+    /// points need (`0` when the implementation has no internal
+    /// buffers — the dense matrix streams straight into `out`).
+    fn scratch_len(&self) -> usize {
+        0
+    }
+
+    /// [`Projection::project_into`] with caller-owned workspace: `work`
+    /// must hold at least [`Projection::scratch_len`] elements
+    /// (contents unspecified on entry and exit). Bit-identical to
+    /// `project_into`; implementations with internal buffers override
+    /// it so a reused workspace makes the call allocation-free.
+    fn project_into_scratch(&self, x: &[f32], out: &mut [f32], _work: &mut [f32]) {
+        self.project_into(x, out);
+    }
+
+    /// [`Projection::project_sparse_into`] with caller-owned workspace
+    /// (same contract as [`Projection::project_into_scratch`]).
+    fn project_sparse_into_scratch(&self, x: SparseRow<'_>, out: &mut [f32], _work: &mut [f32]) {
+        self.project_sparse_into(x, out);
+    }
+
     /// Approximate mul-add cost of one `project_into` call — the
     /// scheduling hint fed to
     /// [`crate::parallel::resolve_threads_for_work`].
@@ -136,8 +158,12 @@ pub trait Projection: Send + Sync + std::fmt::Debug {
         let work = b.saturating_mul(self.unit_work());
         let threads = crate::parallel::resolve_threads_for_work(threads, b, work);
         crate::parallel::par_chunks(threads, r, out.as_mut_slice(), |row0, block| {
+            // One workspace per worker block: the per-row loop is
+            // allocation-free in steady state (zero-length for dense
+            // stacks, which never allocate to begin with).
+            let mut work = vec![0.0f32; self.scratch_len()];
             for (i, out_row) in block.chunks_mut(r).enumerate() {
-                self.project_into(x.row(row0 + i), out_row);
+                self.project_into_scratch(x.row(row0 + i), out_row, &mut work);
             }
         });
         out
@@ -170,8 +196,9 @@ pub trait Projection: Send + Sync + std::fmt::Debug {
         let work = x.nnz().max(b).saturating_mul(r);
         let threads = crate::parallel::resolve_threads_for_work(threads, b, work);
         crate::parallel::par_chunks(threads, r, out.as_mut_slice(), |row0, block| {
+            let mut work = vec![0.0f32; self.scratch_len()];
             for (i, out_row) in block.chunks_mut(r).enumerate() {
-                self.project_sparse_into(x.row(row0 + i), out_row);
+                self.project_sparse_into_scratch(x.row(row0 + i), out_row, &mut work);
             }
         });
         out

@@ -10,7 +10,7 @@
 //! pure polynomial kernels — but, unlike Random Maclaurin, it does not
 //! extend to arbitrary dot product kernels.
 
-use crate::features::FeatureMap;
+use crate::features::{FeatureMap, Scratch};
 use crate::linalg::fft::{complex_mul_inplace, fft};
 use crate::rng::Rng;
 
@@ -85,26 +85,32 @@ impl TensorSketch {
 
     /// FFT-domain product of the `degree` per-factor sketches, written
     /// into `out`. `sketch(j, buf)` fills `buf` with factor `j`'s count
-    /// sketch — the only step that differs between dense and CSR inputs.
-    fn combine_sketches<F: FnMut(usize, &mut [f32])>(&self, out: &mut [f32], mut sketch: F) {
+    /// sketch — the only step that differs between dense and CSR
+    /// inputs. The four accumulator buffers (the count-sketch
+    /// accumulators and their FFT imaginary halves) live in the
+    /// caller's reusable [`Scratch`], so a warm scratch makes the whole
+    /// combine allocation-free.
+    fn combine_sketches<F: FnMut(usize, &mut [f32])>(
+        &self,
+        out: &mut [f32],
+        scratch: &mut Scratch,
+        mut sketch: F,
+    ) {
         let n = self.width;
-        let mut acc_re = vec![0.0f32; n];
-        let mut acc_im = vec![0.0f32; n];
-        let mut cur_re = vec![0.0f32; n];
-        let mut cur_im = vec![0.0f32; n];
+        let (acc_re, acc_im, cur_re, cur_im) = scratch.four(n, n, n, n);
         for j in 0..self.degree as usize {
-            sketch(j, &mut cur_re);
+            sketch(j, cur_re);
             cur_im.fill(0.0);
-            fft(&mut cur_re, &mut cur_im, false);
+            fft(cur_re, cur_im, false);
             if j == 0 {
-                acc_re.copy_from_slice(&cur_re);
-                acc_im.copy_from_slice(&cur_im);
+                acc_re.copy_from_slice(cur_re);
+                acc_im.copy_from_slice(cur_im);
             } else {
-                complex_mul_inplace(&mut acc_re, &mut acc_im, &cur_re, &cur_im);
+                complex_mul_inplace(acc_re, acc_im, cur_re, cur_im);
             }
         }
-        fft(&mut acc_re, &mut acc_im, true);
-        out.copy_from_slice(&acc_re);
+        fft(acc_re, acc_im, true);
+        out.copy_from_slice(acc_re);
     }
 }
 
@@ -118,18 +124,35 @@ impl FeatureMap for TensorSketch {
     }
 
     fn transform_into(&self, x: &[f32], out: &mut [f32]) {
+        self.transform_into_scratch(x, out, &mut Scratch::new());
+    }
+
+    /// Allocation-free hot path: the count-sketch accumulators come
+    /// from the caller's reusable [`Scratch`]. Bit-identical to
+    /// [`FeatureMap::transform_into`].
+    fn transform_into_scratch(&self, x: &[f32], out: &mut [f32], scratch: &mut Scratch) {
         assert_eq!(x.len(), self.d_in);
         assert_eq!(out.len(), self.width);
-        self.combine_sketches(out, |j, buf| self.count_sketch(j, x, buf));
+        self.combine_sketches(out, scratch, |j, buf| self.count_sketch(j, x, buf));
     }
 
     /// Sparse fast path: the count sketches scatter only the `nnz`
     /// stored entries (the dense loop's `O(d)` zero scan disappears),
     /// then the identical FFT combine — bit-equal to the dense path.
     fn transform_sparse_into(&self, x: crate::linalg::SparseRow<'_>, out: &mut [f32]) {
+        self.transform_sparse_into_scratch(x, out, &mut Scratch::new());
+    }
+
+    /// CSR twin of [`FeatureMap::transform_into_scratch`].
+    fn transform_sparse_into_scratch(
+        &self,
+        x: crate::linalg::SparseRow<'_>,
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
         assert_eq!(x.dim, self.d_in, "input dim mismatch");
         assert_eq!(out.len(), self.width, "output dim mismatch");
-        self.combine_sketches(out, |j, buf| self.count_sketch_sparse(j, x, buf));
+        self.combine_sketches(out, scratch, |j, buf| self.count_sketch_sparse(j, x, buf));
     }
 }
 

@@ -1,0 +1,187 @@
+//! The zero-allocation serving contract (ISSUE 5 tentpole): with a
+//! reused [`rfdot::features::Scratch`] arena, the steady-state
+//! per-input transform hot loop performs **no heap allocation** — for
+//! every map family, dense and CSR inputs alike — and the scratch entry
+//! points are bit-identical to the plain ones.
+//!
+//! Allocation counting uses a wrapping global allocator with a
+//! *per-thread* counter, so the libtest harness running other threads
+//! concurrently cannot perturb the measurement. This file deliberately
+//! contains only these tests: the allocator wrapper is binary-global.
+
+use rfdot::features::{FeatureMap, Scratch};
+use rfdot::kernels::{Exponential, Polynomial};
+use rfdot::linalg::{Matrix, SparseMatrix};
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
+use rfdot::rff::RandomFourier;
+use rfdot::rng::Rng;
+use rfdot::structured::ProjectionKind;
+use rfdot::tensorsketch::TensorSketch;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    /// Allocations performed by *this* thread (const-initialized, no
+    /// destructor, so the allocator may touch it at any point of the
+    /// thread's life without recursing or panicking).
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Allocations performed by the current thread while running `f`.
+fn allocations(f: impl FnOnce()) -> u64 {
+    let before = ALLOCS.with(|c| c.get());
+    f();
+    ALLOCS.with(|c| c.get()) - before
+}
+
+/// Every map family under test, with names for failure messages. The
+/// structured variants cover the FWHT pad / Fastfood chain scratch; the
+/// H0/1 variant covers the exact-prefix path.
+fn family_zoo(d: usize) -> Vec<(&'static str, Box<dyn FeatureMap>)> {
+    vec![
+        (
+            "maclaurin-dense",
+            Box::new(RandomMaclaurin::sample(
+                &Exponential::new(1.0),
+                d,
+                64,
+                RmConfig::default(),
+                &mut Rng::seed_from(11),
+            )),
+        ),
+        (
+            "maclaurin-structured-h01",
+            Box::new(RandomMaclaurin::sample(
+                &Polynomial::new(5, 1.0),
+                d,
+                48,
+                RmConfig::default().with_h01(true).with_projection(ProjectionKind::Structured),
+                &mut Rng::seed_from(12),
+            )),
+        ),
+        (
+            "fourier-dense",
+            Box::new(RandomFourier::sample(0.7, d, 56, &mut Rng::seed_from(13))),
+        ),
+        (
+            "fourier-structured",
+            Box::new(RandomFourier::sample_with(
+                0.7,
+                d,
+                56,
+                ProjectionKind::Structured,
+                &mut Rng::seed_from(14),
+            )),
+        ),
+        (
+            "tensorsketch",
+            Box::new(TensorSketch::sample(3, 1.0, d, 64, &mut Rng::seed_from(15))),
+        ),
+    ]
+}
+
+/// A deterministic input with holes, plus its CSR form.
+fn input_pair(d: usize) -> (Vec<f32>, SparseMatrix) {
+    let mut x = vec![0.0f32; d];
+    for (k, v) in x.iter_mut().enumerate() {
+        if k % 3 != 1 {
+            *v = ((k + 1) as f32 * 0.31).sin();
+        }
+    }
+    let m = Matrix::from_rows(&[x.clone()]).unwrap();
+    (x, SparseMatrix::from_dense(&m))
+}
+
+#[test]
+fn scratch_paths_are_bit_identical_to_plain_paths() {
+    let d = 19;
+    let (x, sm) = input_pair(d);
+    for (name, map) in family_zoo(d) {
+        let plain = map.transform(&x);
+        let mut scratch = Scratch::new();
+        let mut out = vec![0.0f32; map.output_dim()];
+        map.transform_into_scratch(&x, &mut out, &mut scratch);
+        assert_eq!(out, plain, "{name}: scratch dense != plain dense");
+        // A second call with the (now stale) scratch must not leak
+        // state between inputs.
+        map.transform_into_scratch(&x, &mut out, &mut scratch);
+        assert_eq!(out, plain, "{name}: scratch reuse changed the result");
+        let mut sparse_out = vec![f32::NAN; map.output_dim()];
+        map.transform_sparse_into_scratch(sm.row(0), &mut sparse_out, &mut scratch);
+        assert_eq!(sparse_out, plain, "{name}: scratch sparse != plain dense");
+    }
+}
+
+#[test]
+fn steady_state_scratch_transforms_do_not_allocate() {
+    let d = 19;
+    let (x, sm) = input_pair(d);
+    for (name, map) in family_zoo(d) {
+        let mut scratch = Scratch::new();
+        let mut out = vec![0.0f32; map.output_dim()];
+        // Warm up: grows the arena and initializes any lazy map state
+        // (the dense Rademacher expansion behind a OnceLock).
+        map.transform_into_scratch(&x, &mut out, &mut scratch);
+        map.transform_sparse_into_scratch(sm.row(0), &mut out, &mut scratch);
+
+        let n = allocations(|| {
+            for _ in 0..32 {
+                map.transform_into_scratch(&x, &mut out, &mut scratch);
+            }
+        });
+        assert_eq!(n, 0, "{name}: dense steady state allocated {n} times in 32 calls");
+
+        let row = sm.row(0);
+        let n = allocations(|| {
+            for _ in 0..32 {
+                map.transform_sparse_into_scratch(row, &mut out, &mut scratch);
+            }
+        });
+        assert_eq!(n, 0, "{name}: sparse steady state allocated {n} times in 32 calls");
+    }
+}
+
+#[test]
+fn plain_transform_still_allocates_only_transiently() {
+    // Sanity check on the measurement itself: the throwaway-scratch
+    // plain path *does* allocate (so a zero count above is a property
+    // of the reused arena, not a broken counter).
+    let d = 19;
+    let (x, _) = input_pair(d);
+    let map = RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        d,
+        64,
+        RmConfig::default(),
+        &mut Rng::seed_from(11),
+    );
+    let mut out = vec![0.0f32; map.output_dim()];
+    map.transform_into(&x, &mut out); // warm the OnceLock expansion
+    let n = allocations(|| {
+        for _ in 0..4 {
+            map.transform_into(&x, &mut out);
+        }
+    });
+    assert!(n > 0, "plain transform_into should allocate its projection buffer");
+}

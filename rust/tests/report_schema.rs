@@ -93,6 +93,19 @@ fn quick_grid_schema_coverage_and_byte_identical_regeneration() {
     }
     assert_eq!(report.threads.len(), cfg.threads_sweep.len());
 
+    // The serving panel covers every worker count with both topologies
+    // (shared-only at 1 worker, where the topologies coincide).
+    let expected_serving: usize =
+        cfg.threads_sweep.iter().map(|&w| if w > 1 { 2 } else { 1 }).sum();
+    assert_eq!(report.serving.len(), expected_serving);
+    for p in &report.serving {
+        assert!(p.reqs_per_s > 0.0, "serving point must have measured throughput");
+        assert!(p.shards == 1 || p.shards == p.workers);
+        if p.shards == 1 {
+            assert_eq!(p.steals, 0, "one shard has no one to steal from");
+        }
+    }
+
     // --- 2. REPORT.json round-trips through the declared schema.
     let json1 = std::fs::read_to_string(dir.join("REPORT.json")).unwrap();
     let parsed = report::parse_report(&json1).unwrap();
@@ -111,6 +124,7 @@ fn quick_grid_schema_coverage_and_byte_identical_regeneration() {
         }
     }
     assert!(dir.join("report/threads.svg").exists());
+    assert!(dir.join("report/serving.svg").exists());
 
     // --- 3a. Regenerating against the same run-log is byte-identical
     // (all cells, rows and sweeps are reused, timings included).

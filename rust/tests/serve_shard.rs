@@ -1,0 +1,334 @@
+//! The sharded serving contract, end to end (the coordinator sibling of
+//! `parallel_identity.rs` / `sparse_parity.rs`'s serve coverage):
+//!
+//! 1. **Topology parity** — shard count is scheduling, never semantics:
+//!    for the same sampled map, every reply is bit-identical to the
+//!    direct `FeatureMap::transform`, whatever the worker/shard layout
+//!    and however many batches were stolen.
+//! 2. **Exactly-once under stealing** — many concurrent submitters ×
+//!    ragged batches × a deliberately slow straggler worker (forcing
+//!    steals): replies are never duplicated, dropped, or cross-wired.
+//! 3. **Shutdown never hangs** — queued-but-unserved tickets (a worker
+//!    died mid-run) are failed with an explicit shutdown error.
+
+use rfdot::coordinator::{
+    Backend, BackendSpec, ClosureFactory, Coordinator, CoordinatorConfig, NativeFactory,
+};
+use rfdot::features::FeatureMap;
+use rfdot::kernels::Exponential;
+use rfdot::linalg::Matrix;
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
+use rfdot::rng::Rng;
+use rfdot::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sample_map(d: usize, n_feat: usize, seed: u64) -> Arc<RandomMaclaurin> {
+    Arc::new(RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        d,
+        n_feat,
+        RmConfig::default(),
+        &mut Rng::seed_from(seed),
+    ))
+}
+
+#[test]
+fn replies_bit_identical_across_shard_topologies() {
+    // The serving parity pin: the same seeded map served through every
+    // topology — shared queue, one shard per worker, more shards than
+    // workers — answers every input with exactly transform(x).
+    let d = 7;
+    let map = sample_map(d, 40, 5);
+    let mut rng = Rng::seed_from(6);
+    let inputs: Vec<Vec<f32>> =
+        (0..60).map(|_| (0..d).map(|_| rng.f32() - 0.5).collect()).collect();
+    let expected: Vec<Vec<f32>> = inputs.iter().map(|x| map.transform(x)).collect();
+    for (workers, shards) in [(1usize, 1usize), (2, 1), (2, 2), (3, 5), (4, 2)] {
+        let coord = Coordinator::start(
+            Arc::new(NativeFactory::new(map.clone())),
+            CoordinatorConfig {
+                workers,
+                shards,
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+                ..Default::default()
+            },
+        );
+        let tickets: Vec<_> =
+            inputs.iter().map(|x| coord.submit(x.clone()).unwrap()).collect();
+        for ((t, want), i) in tickets.into_iter().zip(&expected).zip(0..) {
+            assert_eq!(
+                &t.wait().unwrap(),
+                want,
+                "workers={workers} shards={shards}: reply {i} diverged"
+            );
+        }
+    }
+}
+
+/// A backend wrapper that makes the first-built worker a straggler
+/// (every batch sleeps), so the remaining fast workers must steal from
+/// its shard to keep the pool busy.
+struct MaybeSlow {
+    map: Arc<RandomMaclaurin>,
+    slow: bool,
+}
+
+impl Backend for MaybeSlow {
+    fn spec(&self) -> BackendSpec {
+        BackendSpec {
+            input_dim: self.map.input_dim(),
+            output_dim: self.map.output_dim(),
+            max_batch: usize::MAX,
+            fixed_batch: false,
+        }
+    }
+
+    fn run_batch(&self, x: &Matrix) -> Result<Matrix> {
+        if self.slow {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        Ok(self.map.transform_batch_threads(x, 1))
+    }
+}
+
+#[test]
+fn stress_exactly_once_replies_under_forced_stealing() {
+    let d = 6;
+    let map = sample_map(d, 32, 7);
+    let built = Arc::new(AtomicUsize::new(0));
+    let spec = BackendSpec {
+        input_dim: d,
+        output_dim: map.output_dim(),
+        max_batch: usize::MAX,
+        fixed_batch: false,
+    };
+    let factory = {
+        let map = map.clone();
+        let built = built.clone();
+        Arc::new(ClosureFactory {
+            spec,
+            f: move || {
+                let slow = built.fetch_add(1, Ordering::SeqCst) == 0;
+                Ok(Box::new(MaybeSlow { map: map.clone(), slow }) as Box<dyn Backend>)
+            },
+        })
+    };
+    let coord = Arc::new(Coordinator::start(
+        factory,
+        CoordinatorConfig {
+            workers: 3,
+            shards: 0, // one shard per worker
+            max_batch: 4,
+            max_wait: Duration::from_micros(300),
+            queue_depth: 4096,
+            ..Default::default()
+        },
+    ));
+
+    // 6 submitters × ragged client batches × all three submission
+    // surfaces; every reply must be the transform of its own input.
+    let clients = 6usize;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        let map = map.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from(100 + c as u64);
+            let mut accepted = 0usize;
+            for round in 0..30 {
+                let k = 1 + (rng.below(5) as usize); // ragged 1..=5
+                let xs: Vec<Vec<f32>> = (0..k)
+                    .map(|_| (0..d).map(|_| rng.f32() - 0.5).collect())
+                    .collect();
+                match round % 3 {
+                    0 => {
+                        // Per-request tickets (backpressure may reject;
+                        // pair each accepted ticket with its own input).
+                        let pairs: Vec<_> = xs
+                            .iter()
+                            .filter_map(|x| coord.submit(x.clone()).ok().map(|t| (x, t)))
+                            .collect();
+                        accepted += pairs.len();
+                        for (x, t) in pairs {
+                            assert_eq!(
+                                t.wait().unwrap(),
+                                map.transform(x),
+                                "client {c}: cross-wired reply"
+                            );
+                        }
+                    }
+                    1 => {
+                        // One shared-channel batch.
+                        let ticket = coord.submit_batch(xs.clone()).unwrap();
+                        accepted += ticket.accepted();
+                        for (x, r) in xs.iter().zip(ticket.wait()) {
+                            if let Ok(z) = r {
+                                assert_eq!(
+                                    z,
+                                    map.transform(x),
+                                    "client {c}: batch reply cross-wired"
+                                );
+                            }
+                        }
+                    }
+                    _ => {
+                        // CSR pairs over the same machinery.
+                        for x in &xs {
+                            let indices: Vec<u32> = (0..d as u32)
+                                .filter(|&k| x[k as usize] != 0.0)
+                                .collect();
+                            let values: Vec<f32> =
+                                indices.iter().map(|&k| x[k as usize]).collect();
+                            if let Ok(t) = coord.submit_sparse(indices, values) {
+                                accepted += 1;
+                                assert_eq!(
+                                    t.wait().unwrap(),
+                                    map.transform(x),
+                                    "client {c}: sparse reply cross-wired"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            accepted
+        }));
+    }
+    let accepted: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+
+    // Exactly once: everything accepted was completed (no duplicates,
+    // no drops), and the pool-wide per-shard accounting agrees.
+    let stats = coord.stats();
+    assert_eq!(accepted as u64, stats.submitted.load(Ordering::Relaxed));
+    assert_eq!(accepted as u64, stats.completed.load(Ordering::Relaxed));
+    let snaps = coord.shard_snapshots();
+    let items: u64 = snaps.iter().map(|s| s.items).sum();
+    assert_eq!(items, stats.batched_items.load(Ordering::Relaxed));
+    // The straggler forced actual work stealing.
+    let steals: u64 = snaps.iter().map(|s| s.steals).sum();
+    assert!(steals > 0, "no batches were stolen from the straggler ({snaps:?})");
+}
+
+/// A backend that blocks inside `run_batch` until told to go, then
+/// panics — the deterministic way to kill a worker while later batches
+/// are provably queued behind it.
+struct PanicWhenTold {
+    go: std::sync::mpsc::Receiver<()>,
+}
+
+impl Backend for PanicWhenTold {
+    fn spec(&self) -> BackendSpec {
+        BackendSpec { input_dim: 2, output_dim: 2, max_batch: 1, fixed_batch: false }
+    }
+
+    fn run_batch(&self, _x: &Matrix) -> Result<Matrix> {
+        let _ = self.go.recv();
+        panic!("injected backend panic (serve_shard shutdown test)");
+    }
+}
+
+fn panic_when_told_coordinator() -> (Coordinator, std::sync::mpsc::Sender<()>) {
+    let (go_tx, go_rx) = std::sync::mpsc::channel::<()>();
+    let go_rx = std::sync::Mutex::new(Some(go_rx));
+    let factory = Arc::new(ClosureFactory {
+        spec: BackendSpec { input_dim: 2, output_dim: 2, max_batch: 1, fixed_batch: false },
+        f: move || {
+            let go = go_rx.lock().unwrap().take().expect("single worker builds once");
+            Ok(Box::new(PanicWhenTold { go }) as Box<dyn Backend>)
+        },
+    });
+    let coord = Coordinator::start(
+        factory,
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 1,
+            max_wait: Duration::from_micros(100),
+            ..Default::default()
+        },
+    );
+    (coord, go_tx)
+}
+
+#[test]
+fn shutdown_fails_queued_unserved_tickets_explicitly() {
+    // Regression (ISSUE 5 satellite): a queued-but-unserved request's
+    // `Ticket::wait` used to hang until shutdown (or forever) when its
+    // worker died. It must now be failed with an explicit error — at
+    // worker death (the guard's drain) or, as the backstop, in
+    // `shutdown` — never left hanging.
+    let (mut coord, go_tx) = panic_when_told_coordinator();
+    // A is picked up by the worker, which then blocks inside run_batch.
+    let t_a = coord.submit(vec![0.1, 0.2]).unwrap();
+    // B queues behind it; wait until the batcher has formed both
+    // batches (B's lands in the shard deque the worker will never
+    // drain), then let the worker die.
+    let t_b = coord.submit(vec![0.3, 0.4]).unwrap();
+    while coord.stats().batches.load(Ordering::Relaxed) < 2 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    std::thread::sleep(Duration::from_millis(10));
+    go_tx.send(()).unwrap();
+    coord.shutdown();
+
+    // B was queued but never served: explicit, prompt error — the
+    // dying worker's drain ("no live workers") or the shutdown sweep
+    // ("shut down before served"), depending on who got there first.
+    let err_b = t_b.wait().unwrap_err();
+    let msg = err_b.to_string();
+    assert!(
+        msg.contains("no live workers") || msg.contains("shut down before the request"),
+        "want an explicit unserved-at-teardown error, got: {err_b}"
+    );
+    // A was in flight when the worker panicked: answered with an error
+    // (the Job drop guard), never a hang and never a success.
+    assert!(t_a.wait().is_err());
+    // Either way, nothing submits anymore.
+    assert!(coord.submit(vec![0.0, 0.0]).is_err());
+}
+
+#[test]
+fn callbacks_fire_even_when_the_worker_panics() {
+    // The exactly-once contract for the callback surface on the
+    // worker-death path: the callback must still be invoked (with an
+    // error), not silently dropped with the unwound batch.
+    let (coord, go_tx) = panic_when_told_coordinator();
+    let (cb_tx, cb_rx) = std::sync::mpsc::channel();
+    coord
+        .submit_callback(vec![0.1, 0.2], move |reply| {
+            let _ = cb_tx.send(reply);
+        })
+        .unwrap();
+    go_tx.send(()).unwrap();
+    let reply = cb_rx.recv_timeout(Duration::from_secs(10)).expect("callback never fired");
+    assert!(reply.is_err(), "a panicked batch cannot produce a success reply");
+}
+
+#[test]
+fn submitting_after_worker_death_still_answers() {
+    // With every worker dead, newly accepted requests must be answered
+    // by the batcher's no-live-workers route instead of queueing
+    // forever.
+    let (coord, go_tx) = panic_when_told_coordinator();
+    // Kill the only worker and wait until its demise is observable
+    // (the in-flight reply drops during the unwind; the liveness
+    // counter decrements moments later).
+    let t_killer = coord.submit(vec![0.5, 0.5]).unwrap();
+    go_tx.send(()).unwrap();
+    assert!(t_killer.wait().is_err());
+    std::thread::sleep(Duration::from_millis(50));
+    // Enough submissions to exceed the batch-queue bound — none may
+    // hang, whether they are failed by the push path or the drain.
+    let tickets: Vec<_> =
+        (0..8).filter_map(|_| coord.submit(vec![1.0, 1.0]).ok()).collect();
+    assert!(!tickets.is_empty());
+    for t in tickets {
+        let err = t.wait_timeout(Duration::from_secs(10)).unwrap_err();
+        assert!(
+            !err.to_string().contains("timed out"),
+            "request hung instead of failing fast: {err}"
+        );
+    }
+}

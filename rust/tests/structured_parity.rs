@@ -114,6 +114,7 @@ fn structured_end_to_end_config_serve_serialize() {
             queue_depth: 1024,
             workers: 2,
             intra_op_threads: 1,
+            ..Default::default()
         },
     );
     let mut client_rng = Rng::seed_from(99);

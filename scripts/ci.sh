@@ -4,7 +4,7 @@
 #
 #  * `cargo doc` runs with `-D warnings` so broken intra-doc links (the
 #    paper cross-references added in the rustdoc pass) fail the gate;
-#  * the structured/sparse bench smokes exercise the BENCH_*.json
+#  * the structured/sparse/serve bench smokes exercise the BENCH_*.json
 #    regeneration paths (--quick diverts their noisy timings to the
 #    temp dir so checked-in baselines are only overwritten by full
 #    measured runs; the sparse smoke also asserts CSR/dense parity
@@ -25,6 +25,11 @@ cargo fmt --check
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo bench --bench micro -- --quick --only structured
 cargo bench --bench micro -- --quick --only sparse
+cargo bench --bench micro -- --quick --only serve-throughput
+# bench-diff self-comparison: the regression gate parses the checked-in
+# baseline and exits 0 (pending/null samples compare clean), so wiring
+# real old-vs-new comparisons later is a one-line change.
+cargo run --release --quiet -- bench-diff ../BENCH_serve.json ../BENCH_serve.json --max-regress 5
 report_dir="$(mktemp -d)"
 trap 'rm -rf "$report_dir"' EXIT
 cargo run --release --quiet -- report --quick --fresh --out-dir "$report_dir"
