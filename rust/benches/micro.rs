@@ -10,6 +10,9 @@
 //! * coordinator end-to-end round trip under load,
 //! * the serve-throughput sweep over workers × shard-vs-shared queue
 //!   topology × client batch size (recorded to `BENCH_serve.json`),
+//! * the simd-kernels sweep — scalar vs runtime-detected path for every
+//!   dispatched kernel across remainder-heavy widths (recorded to
+//!   `BENCH_simd.json`),
 //! * SVM solver throughput on surrogate data.
 //!
 //! Run:  `cargo bench --bench micro`
@@ -605,6 +608,157 @@ fn bench_serve_throughput() {
     }
 }
 
+/// Scalar vs runtime-detected SIMD for every dispatched kernel in
+/// [`rfdot::simd`], across a remainder-heavy width axis (15 and 67
+/// exercise the vector tails; 1024/4096 the steady state). Recorded as
+/// the machine-readable baseline in `BENCH_simd.json` at the repo
+/// root; its top-level `simd` field names the detected path, which
+/// `rfdot bench-diff` uses to refuse to gate across runs recorded on
+/// different paths.
+fn bench_simd_kernels() {
+    use rfdot::simd;
+    use std::hint::black_box;
+    println!("\n== simd kernels: scalar vs detected, per kernel x width ==");
+    let paths = simd::available_paths();
+    let detected = simd::detected();
+    println!("   detected path: {}", detected.as_str());
+    let widths: &[usize] =
+        if fast() { &[15, 67, 1024] } else { &[15, 64, 67, 256, 1024, 4096] };
+    let iters = if fast() { 3 } else { 12 };
+
+    let mut table =
+        Table::new(&["kernel", "n", "scalar/call", "detected/call", "speedup"]);
+    // (kernel, path name, n, secs per call, speedup vs scalar)
+    let mut samples: Vec<(&str, &'static str, usize, f64, f64)> = Vec::new();
+    for kernel in ["dot", "axpy", "scale", "fwht", "cos", "sparse-dot"] {
+        for &n in widths {
+            let mut rng = Rng::seed_from(131 + n as u64);
+            let a: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            let bv: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            // ~40% density CSR mirror of `a` for the sparse gather.
+            let (idx, vals): (Vec<u32>, Vec<f32>) = a
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % 5 < 2)
+                .map(|(i, &v)| (i as u32, v))
+                .unzip();
+            // Equalize work across widths: ~64k elements per timed call.
+            let reps = (65_536 / n.max(1)).max(1);
+            let mut per_path: Vec<f64> = Vec::new();
+            for &path in &paths {
+                let mut x = a.clone();
+                let mut y = bv.clone();
+                let m = bench(kernel, 1, iters, || match kernel {
+                    "dot" => {
+                        let mut s = 0.0f32;
+                        for _ in 0..reps {
+                            s += simd::dot_with(path, black_box(&a), black_box(&bv));
+                        }
+                        black_box(s);
+                    }
+                    "axpy" => {
+                        for _ in 0..reps {
+                            simd::axpy_with(path, 1.0e-6, &a, &mut y);
+                        }
+                        black_box(y[0]);
+                    }
+                    "scale" => {
+                        for _ in 0..reps {
+                            simd::scale_with(path, 0.999_999, &mut x);
+                        }
+                        black_box(x[0]);
+                    }
+                    "fwht" => {
+                        // Butterfly magnitudes double per pass and
+                        // saturate to ±inf; IEEE add/sub carries no
+                        // inf/NaN penalty on the targeted ISAs, so the
+                        // timing stays representative.
+                        for _ in 0..reps {
+                            simd::fwht_butterfly_with(path, &mut x, &mut y);
+                        }
+                        black_box(x[0]);
+                    }
+                    "cos" => {
+                        for _ in 0..reps {
+                            simd::cos_activate_with(path, &mut x, &bv, 0.5);
+                        }
+                        black_box(x[0]);
+                    }
+                    _ => {
+                        let mut s = 0.0f32;
+                        for _ in 0..reps {
+                            s += simd::sparse_dot_dense_with(
+                                path,
+                                black_box(&idx),
+                                black_box(&vals),
+                                black_box(&bv),
+                            );
+                        }
+                        black_box(s);
+                    }
+                });
+                per_path.push(m.mean_s() / reps as f64);
+            }
+            // available_paths() always leads with the scalar oracle.
+            let scalar = per_path[0];
+            for (&path, &secs) in paths.iter().zip(&per_path) {
+                samples.push((kernel, path.as_str(), n, secs, scalar / secs));
+            }
+            let (det_cell, speedup_cell) = if paths.len() > 1 {
+                (fmt_duration(per_path[1]), format!("{:.2}x", scalar / per_path[1]))
+            } else {
+                ("-".into(), "-".into())
+            };
+            table.row(&[
+                kernel.into(),
+                format!("{n}"),
+                fmt_duration(scalar),
+                det_cell,
+                speedup_cell,
+            ]);
+        }
+    }
+    table.print();
+
+    let json_samples = samples
+        .iter()
+        .map(|(kernel, p, n, secs, speedup)| {
+            format!(
+                r#"{{"kernel": "{kernel}", "simd": "{p}", "n": {n}, "secs_per_call": {secs:.12}, "speedup_vs_scalar": {speedup:.3}}}"#
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n    ");
+    // Same policy as the structured/sparse/serve sweeps: --quick runs
+    // exercise the regeneration path but divert their noisy timings to
+    // the temp dir; only full measured runs overwrite the checked-in
+    // baseline.
+    let (status, invocation, out_path) = if fast() {
+        (
+            "smoke",
+            "cargo bench --bench micro -- --quick --only simd-kernels",
+            std::env::temp_dir().join("BENCH_simd.smoke.json"),
+        )
+    } else {
+        (
+            "measured",
+            "cargo bench --bench micro -- --only simd-kernels",
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_simd.json"),
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"simd_kernels\",\n  \"status\": \"{status}\",\n  \
+         \"generated_by\": \"{invocation}\",\n  \
+         \"simd\": \"{}\",\n  \
+         \"kernels\": {{\"samples\": [\n    {json_samples}\n  ]}}\n}}\n",
+        detected.as_str(),
+    );
+    match std::fs::write(&out_path, json) {
+        Ok(()) => println!("   baseline recorded to {}", out_path.display()),
+        Err(e) => println!("   (could not write {}: {e})", out_path.display()),
+    }
+}
+
 fn bench_pjrt_coordinator() {
     println!("\n== coordinator end-to-end (pjrt backend) ==");
     let name = "transform_serve";
@@ -779,12 +933,13 @@ fn main() {
         }
     }
 
-    let sections: [(&str, fn()); 11] = [
+    let sections: [(&str, fn()); 12] = [
         ("native-transform", bench_native_transform),
         ("parallel-sweep", bench_parallel_sweep),
         ("structured-sweep", bench_structured_sweep),
         ("sparse-transform", bench_sparse_transform),
         ("rademacher-projection", bench_rademacher_projection),
+        ("simd-kernels", bench_simd_kernels),
         ("pjrt-execute", bench_pjrt_execute),
         ("coordinator-roundtrip", bench_coordinator_roundtrip),
         ("serve-throughput", bench_serve_throughput),

@@ -273,6 +273,11 @@ pub fn run_row(config: &ExperimentConfig, d_rf: usize, d_h01: usize) -> Result<R
     if config.threads > 0 {
         crate::parallel::set_max_threads(config.threads);
     }
+    // Same contract for the kernel-dispatch knob: None leaves the
+    // process-global mode (auto-detect or RFDOT_SIMD) untouched.
+    if let Some(mode) = config.simd {
+        crate::simd::set_mode(mode);
+    }
     let prep = prepare(config)?;
     let exact = run_exact(&prep, prep.config.kernel.build(kernel_sigma2(&prep)));
     let rf = run_random_features(&prep, d_rf, false, 1);

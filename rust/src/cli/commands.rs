@@ -36,6 +36,16 @@ fn apply_threads(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Consume `--simd scalar|auto` and, when given, pin the global kernel
+/// dispatch mode (absent keeps auto-detect or `RFDOT_SIMD`).
+fn apply_simd(args: &mut Args) -> Result<()> {
+    let simd = args.str_flag("simd", "");
+    if !simd.is_empty() {
+        crate::simd::set_mode(crate::simd::SimdMode::parse(&simd)?);
+    }
+    Ok(())
+}
+
 /// Consume `--projection dense|structured` (default dense).
 fn parse_projection(args: &mut Args) -> Result<crate::structured::ProjectionKind> {
     crate::structured::ProjectionKind::parse(&args.str_flag("projection", "dense"))
@@ -71,6 +81,7 @@ pub fn info(args: &mut Args) -> Result<()> {
 /// structured projections side by side), fit LIN.
 pub fn quickstart(args: &mut Args) -> Result<()> {
     apply_threads(args)?;
+    apply_simd(args)?;
     warn_unknown(args);
     println!("== Random Maclaurin quickstart ==");
     let kernel = crate::kernels::Polynomial::new(10, 1.0);
@@ -120,6 +131,7 @@ pub fn gram_error(args: &mut Args) -> Result<()> {
     let projection = parse_projection(args)?;
     let sparse = args.switch("sparse");
     apply_threads(args)?;
+    apply_simd(args)?;
     warn_unknown(args);
 
     let kernel = kernel_spec.build(1.0);
@@ -174,6 +186,7 @@ pub fn table1_row(args: &mut Args) -> Result<()> {
     let d_h01 = args.usize_flag("h01-features", 100)?;
     config.n_features = d_rf;
     config.validate()?;
+    apply_simd(args)?;
     warn_unknown(args);
 
     let row = bench::run_row(&config, d_rf, d_h01)?;
@@ -241,6 +254,7 @@ pub fn report(args: &mut Args) -> Result<()> {
         config.resume = false;
     }
     apply_threads(args)?;
+    apply_simd(args)?;
     warn_unknown(args);
 
     let sw = Stopwatch::start();
@@ -278,6 +292,7 @@ pub fn transform(args: &mut Args) -> Result<()> {
     let seed = args.num_flag("seed", 7.0)? as u64;
     let projection = parse_projection(args)?;
     apply_threads(args)?;
+    apply_simd(args)?;
     warn_unknown(args);
 
     // parse_file yields CSR storage, so the batch transform below runs
@@ -337,6 +352,7 @@ pub fn serve(args: &mut Args) -> Result<()> {
     // For serving, --threads means intra-op threads per worker batch
     // (the native backend's data-parallel fan-out).
     let intra_op_threads = args.usize_flag("threads", 1)?;
+    apply_simd(args)?;
     warn_unknown(args);
 
     if projection == crate::structured::ProjectionKind::Structured && !native {
@@ -394,9 +410,11 @@ pub fn serve(args: &mut Args) -> Result<()> {
     ));
 
     println!(
-        "serving {requests} requests from {clients} clients (backend: {}, payload: {})",
+        "serving {requests} requests from {clients} clients (backend: {}, payload: {}, \
+         simd: {})",
         if native { "native" } else { "pjrt" },
-        if sparse { "sparse" } else { "dense" }
+        if sparse { "sparse" } else { "dense" },
+        crate::simd::selected().as_str(),
     );
     let sw = Stopwatch::start();
     let per_client = requests / clients;
@@ -467,7 +485,7 @@ pub fn serve(args: &mut Args) -> Result<()> {
 /// instead of `samples[7]`.
 fn bench_elem_label(v: &Json) -> Option<String> {
     let mut parts = Vec::new();
-    for k in ["map", "threads", "workers", "shards", "batch", "sparsity"] {
+    for k in ["map", "kernel", "simd", "n", "threads", "workers", "shards", "batch", "sparsity"] {
         match v.get(k) {
             Some(Json::Str(s)) => parts.push(format!("{k}={s}")),
             Some(Json::Num(n)) => parts.push(format!("{k}={n}")),
@@ -584,7 +602,10 @@ fn collect_bench_timings(
 /// timing metric the two files share and exits nonzero when any slowed
 /// down by more than `--max-regress` percent (default 5). Unmeasured
 /// (`null`) leaves — committed pending baselines — compare clean, so
-/// the gate can be wired up before the first measured run.
+/// the gate can be wired up before the first measured run. When the
+/// two files record different top-level `simd` axes, the diff is
+/// reported but never gates — the delta measures the kernel-path
+/// change, not a regression.
 pub fn bench_diff(args: &mut Args) -> Result<()> {
     let usage = "rfdot bench-diff <old.json> <new.json> [--max-regress PCT]";
     let old_path = args.require_positional(0, usage)?;
@@ -596,6 +617,15 @@ pub fn bench_diff(args: &mut Args) -> Result<()> {
     }
     let old = Json::parse(&std::fs::read_to_string(&old_path)?)?;
     let new = Json::parse(&std::fs::read_to_string(&new_path)?)?;
+    // Two runs recorded on different kernel-dispatch paths (the
+    // top-level "simd" axis) measure the path change, not a code
+    // regression — the diff is still printed for inspection, but the
+    // gate reports instead of failing.
+    let simd_axis = |v: &Json| v.get("simd").and_then(Json::as_str).map(str::to_string);
+    let cross_simd = match (simd_axis(&old), simd_axis(&new)) {
+        (Some(a), Some(b)) if a != b => Some((a, b)),
+        _ => None,
+    };
     let mut pairs = Vec::new();
     let mut skipped = 0usize;
     collect_bench_timings("", &old, &new, &mut pairs, &mut skipped);
@@ -643,6 +673,14 @@ pub fn bench_diff(args: &mut Args) -> Result<()> {
             )));
         }
         println!("no comparable timing metrics found (both baselines pending?)");
+    }
+    if let Some((a, b)) = cross_simd {
+        println!(
+            "bench-diff: simd axis differs (old: {a}, new: {b}) — {} slower metric(s) \
+             reflect the kernel-path change, not gated",
+            regressions.len()
+        );
+        return Ok(());
     }
     if regressions.is_empty() {
         println!(
@@ -707,6 +745,17 @@ mod tests {
     #[test]
     fn rejects_unknown_projection() {
         assert!(gram_error(&mut argv(&["gram-error", "--projection", "sparse"])).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_simd_mode() {
+        // Parse fails before set_mode runs, so the process-global
+        // dispatch knob is never mutated (tests share it; forcing a
+        // mode end to end lives in tests/structured_parity.rs, which
+        // owns a dispatch lock).
+        let err =
+            gram_error(&mut argv(&["gram-error", "--simd", "avx512"])).unwrap_err();
+        assert!(err.to_string().contains("simd"), "{err}");
     }
 
     #[test]
@@ -983,6 +1032,48 @@ mod tests {
             "bench-diff",
             old.to_str().unwrap(),
             new.to_str().unwrap(),
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn bench_diff_reports_but_never_gates_across_simd_axes() {
+        // A scalar-forced run compared against an auto-dispatch run
+        // measures the kernel-path change; the gate must say so and
+        // pass even on a large slowdown. Same axis still gates.
+        let dir = std::env::temp_dir().join("rfdot_bench_diff_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let fast = dir.join("simd_fast.json");
+        let slow = dir.join("simd_slow.json");
+        std::fs::write(
+            &fast,
+            r#"{"simd": "avx2", "sweep": {"samples": [
+                 {"kernel": "dot", "n": 1024, "secs_per_call": 1.0e-7}
+               ]}}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            &slow,
+            r#"{"simd": "scalar", "sweep": {"samples": [
+                 {"kernel": "dot", "n": 1024, "secs_per_call": 8.0e-7}
+               ]}}"#,
+        )
+        .unwrap();
+        bench_diff(&mut argv(&["bench-diff", fast.to_str().unwrap(), slow.to_str().unwrap()]))
+            .unwrap();
+        // Identical axes: the same slowdown fails as usual.
+        let slow_same = dir.join("simd_slow_same_axis.json");
+        std::fs::write(
+            &slow_same,
+            r#"{"simd": "avx2", "sweep": {"samples": [
+                 {"kernel": "dot", "n": 1024, "secs_per_call": 8.0e-7}
+               ]}}"#,
+        )
+        .unwrap();
+        assert!(bench_diff(&mut argv(&[
+            "bench-diff",
+            fast.to_str().unwrap(),
+            slow_same.to_str().unwrap(),
         ]))
         .is_err());
     }

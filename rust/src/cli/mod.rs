@@ -83,4 +83,9 @@ COMMANDS:
                 auto-detect, or the RFDOT_THREADS env var). For `serve`
                 this is the intra-op thread count per worker batch and
                 defaults to 1 (batches already fan out across workers).
+  --simd scalar|auto
+                kernel dispatch for the transform hot paths: auto (the
+                default, or the RFDOT_SIMD env var) picks the best
+                runtime-detected path (AVX2+FMA / NEON); scalar forces
+                the portable oracle kernels everywhere.
 ";

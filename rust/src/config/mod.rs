@@ -126,6 +126,10 @@ pub struct ExperimentConfig {
     /// Results are unchanged by the crate's sparse parity contract;
     /// only the cost model moves.
     pub sparse: bool,
+    /// Kernel-dispatch override for the [`crate::simd`] layer (JSON:
+    /// `"simd": "scalar" | "auto"`); `None` leaves the process-global
+    /// knob untouched (auto-detect or `RFDOT_SIMD`).
+    pub simd: Option<crate::simd::SimdMode>,
 }
 
 impl Default for ExperimentConfig {
@@ -144,6 +148,7 @@ impl Default for ExperimentConfig {
             threads: 0,
             projection: ProjectionKind::Dense,
             sparse: false,
+            simd: None,
         }
     }
 }
@@ -191,6 +196,9 @@ impl ExperimentConfig {
         }
         if let Some(b) = v.get("sparse").and_then(Json::as_bool) {
             cfg.sparse = b;
+        }
+        if let Some(s) = v.get("simd").and_then(Json::as_str) {
+            cfg.simd = Some(crate::simd::SimdMode::parse(s)?);
         }
         cfg.validate()?;
         Ok(cfg)
@@ -529,6 +537,12 @@ mod tests {
         assert!(!cfg.sparse);
         let sparse = ExperimentConfig::from_json(r#"{"sparse": true}"#).unwrap();
         assert!(sparse.sparse);
+        // The simd knob parses but is only *applied* by consumers
+        // (run_row), so decoding here never mutates the global mode.
+        assert_eq!(cfg.simd, None);
+        let forced = ExperimentConfig::from_json(r#"{"simd": "scalar"}"#).unwrap();
+        assert_eq!(forced.simd, Some(crate::simd::SimdMode::Scalar));
+        assert!(ExperimentConfig::from_json(r#"{"simd": "avx512"}"#).is_err());
     }
 
     #[test]

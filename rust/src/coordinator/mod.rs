@@ -7,9 +7,11 @@
 //!
 //! ```text
 //! clients ──submit(x)──────────▶ bounded queue ──▶ batcher thread
-//!         ──submit_batch(xs)──▶                       │ (coalesce ≤ max_batch
-//!         ──submit_callback──▶                        │  within max_wait)
+//!         ──submit_callback──▶                        │ (coalesce ≤ max_batch
+//!         ──submit_batch tail─▶                       │  within max_wait)
 //!                                                     ▼
+//!         ──submit_batch(xs)── full max_batch chunks ─▶
+//!                              (bypass the batcher)   ▼
 //!                               shard 0 ─▶ worker 0  (round-robin push,
 //!                               shard 1 ─▶ worker 1   own shard first,
 //!                               ...        ...        steal when dry)
@@ -36,7 +38,14 @@
 //! * **Batch submission** — [`Coordinator::submit_batch`] /
 //!   [`Coordinator::submit_batch_sparse`] share one reply channel
 //!   across a whole client batch, amortizing the per-request ticket
-//!   and channel overhead.
+//!   and channel overhead. Pre-formed full `max_batch` chunks are
+//!   pushed straight onto the shard queues (non-blocking), bypassing
+//!   the submit channel and batcher thread entirely; only the ragged
+//!   tail — and any chunk the pool had no room for — takes the
+//!   per-job batcher path, which owns backpressure. The bypass is
+//!   metered in [`crate::metrics::Stats::direct_batches`] and changes
+//!   scheduling only: reply order, exactly-once and the stats
+//!   invariants are identical either way.
 //! * **Thread-local backends** — PJRT handles are `!Send`, so each
 //!   worker builds its own executable from a shared [`BackendFactory`].
 //! * **Fixed-shape backends** — the PJRT artifacts take a fixed batch;
@@ -72,7 +81,7 @@ pub use backend::{
 use crate::metrics::{SampleBuffer, Stats, Summary};
 use crate::{Error, Result};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{
     sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
 };
@@ -436,6 +445,24 @@ impl ShardQueues {
         Ok(())
     }
 
+    /// Non-blocking twin of [`ShardQueues::push`] for pre-formed full
+    /// batches submitted by clients (the batcher keeps the blocking
+    /// variant — it owns a thread and may wait; clients must not).
+    /// Returns the batch when the pool-wide bound is hit, the intake is
+    /// closed, or no live worker remains, so the caller can fall back
+    /// to the batcher path and inherit its backpressure semantics.
+    fn try_push(&self, shard: usize, batch: Vec<Job>) -> std::result::Result<(), Vec<Job>> {
+        let mut g = lock(&self.central);
+        if g.queued >= self.cap || !g.open || g.workers_alive == 0 {
+            return Err(batch);
+        }
+        lock(&self.shards[shard].queue).push_back(batch);
+        g.queued += 1;
+        drop(g);
+        self.work_cv.notify_one();
+        Ok(())
+    }
+
     /// Blocking pop for the worker whose home shard is `home`: claim a
     /// queued batch under the central lock, then take it from the home
     /// shard if possible, stealing from neighbours otherwise. Returns
@@ -547,6 +574,13 @@ pub struct Coordinator {
     queues: Arc<ShardQueues>,
     stats: Arc<Stats>,
     spec: BackendSpec,
+    /// Effective batch cap (config clamped to the backend spec) — the
+    /// chunk size for the pre-formed full-batch bypass.
+    max_batch: usize,
+    /// Round-robin shard cursor for directly pushed batches; the
+    /// batcher keeps its own, and shard choice is scheduling, never
+    /// semantics, so the two cursors need no coordination.
+    direct_shard: AtomicUsize,
 }
 
 impl Coordinator {
@@ -595,7 +629,15 @@ impl Coordinator {
             );
         }
 
-        Coordinator { submit_tx: Some(submit_tx), threads, queues, stats, spec }
+        Coordinator {
+            submit_tx: Some(submit_tx),
+            threads,
+            queues,
+            stats,
+            spec,
+            max_batch,
+            direct_shard: AtomicUsize::new(0),
+        }
     }
 
     /// Submit one vector; returns a [`Ticket`] for the reply, or an
@@ -666,7 +708,58 @@ impl Coordinator {
         let (tx, rx) = sync_channel::<(u32, Result<Vec<f32>>)>(n.max(1));
         let mut results: Vec<Option<Result<Vec<f32>>>> = Vec::with_capacity(n);
         let mut pending = 0usize;
-        for (i, payload) in payloads.into_iter().enumerate() {
+        let mut payloads = payloads.into_iter().enumerate();
+
+        // Pre-formed full batches bypass the batcher: a client batch of
+        // `k * max_batch + tail` rows already *is* `k` backend batches,
+        // so funneling the rows one by one through the submit channel
+        // just to have the batcher thread re-coalesce them buys nothing
+        // and serializes on that channel. Carve full chunks off the
+        // front and push each straight onto a shard (non-blocking; the
+        // bypass mirrors the batcher's stats so the accounting
+        // invariants — submitted == completed, Σ shard items ==
+        // batched_items — are topology-blind). The first chunk the pool
+        // has no room for ends the bypass; it and the remaining rows
+        // take the per-job path below, which owns the backpressure
+        // semantics (accept what fits, reject the rest into the reply
+        // slots).
+        if self.submit_tx.is_some() {
+            while payloads.len() >= self.max_batch {
+                let chunk: Vec<Job> = payloads
+                    .by_ref()
+                    .take(self.max_batch)
+                    .map(|(i, p)| Job::new(p, Reply::Indexed(tx.clone(), i as u32)))
+                    .collect();
+                let len = chunk.len();
+                let shard = self.direct_shard.fetch_add(1, Ordering::Relaxed)
+                    % self.queues.shards.len();
+                match self.queues.try_push(shard, chunk) {
+                    Ok(()) => {
+                        self.stats.submitted.fetch_add(len as u64, Ordering::Relaxed);
+                        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+                        self.stats.direct_batches.fetch_add(1, Ordering::Relaxed);
+                        self.stats.batched_items.fetch_add(len as u64, Ordering::Relaxed);
+                        for _ in 0..len {
+                            results.push(None);
+                        }
+                        pending += len;
+                    }
+                    Err(chunk) => {
+                        for job in chunk {
+                            match self.enqueue(job) {
+                                Ok(()) => {
+                                    results.push(None);
+                                    pending += 1;
+                                }
+                                Err(e) => results.push(Some(Err(e))),
+                            }
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        for (i, payload) in payloads {
             let job = Job::new(payload, Reply::Indexed(tx.clone(), i as u32));
             match self.enqueue(job) {
                 Ok(()) => {
@@ -1069,6 +1162,59 @@ mod tests {
         }
         // The empty batch is legal and resolves immediately.
         assert!(coord.submit_batch(Vec::new()).unwrap().wait().is_empty());
+    }
+
+    #[test]
+    fn full_batch_bypass_keeps_order_exactly_once_and_stats() {
+        // 11 rows at max_batch = 4: two full chunks take the direct
+        // shard push, the 3-row tail rides the batcher. The pool bound
+        // is (workers * 2).max(shards) = 4, so both direct pushes fit
+        // deterministically and the bypass is observable in the meter.
+        let (factory, map) = native_factory(3, 12);
+        let coord = Coordinator::start(
+            factory,
+            CoordinatorConfig { max_batch: 4, workers: 2, ..Default::default() },
+        );
+        let mut rng = Rng::seed_from(11);
+        let xs: Vec<Vec<f32>> =
+            (0..11).map(|_| (0..3).map(|_| rng.f32() - 0.5).collect()).collect();
+        let ticket = coord.submit_batch(xs.clone()).unwrap();
+        assert_eq!(ticket.accepted(), 11);
+        let replies = ticket.wait();
+        assert_eq!(replies.len(), 11);
+        for (i, (x, r)) in xs.iter().zip(replies).enumerate() {
+            assert_eq!(r.unwrap(), map.transform(x), "bypass reply {i} out of order");
+        }
+        let stats = coord.stats();
+        assert_eq!(stats.direct_batches.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.submitted.load(Ordering::Relaxed), 11);
+        assert_eq!(stats.completed.load(Ordering::Relaxed), 11);
+        assert_eq!(stats.batched_items.load(Ordering::Relaxed), 11);
+        // Direct chunks count as batches like batcher-built ones; the
+        // tail coalesces into 1..=3 batches depending on timing.
+        let batches = stats.batches.load(Ordering::Relaxed);
+        assert!((3..=5).contains(&batches), "batches = {batches}");
+
+        // An exact multiple of max_batch bypasses the batcher entirely,
+        // sparse rows included (they share submit_batch_payloads).
+        let rows: Vec<(Vec<u32>, Vec<f32>)> = (0..8)
+            .map(|_| (vec![0u32, 2], vec![rng.f32() - 0.5, rng.f32() - 0.5]))
+            .collect();
+        let replies = coord.submit_batch_sparse(rows.clone()).unwrap().wait();
+        for ((indices, values), r) in rows.iter().zip(replies) {
+            let mut dense = vec![0.0f32; 3];
+            for (&k, &v) in indices.iter().zip(values) {
+                dense[k as usize] = v;
+            }
+            assert_eq!(r.unwrap(), map.transform(&dense));
+        }
+        assert_eq!(stats.direct_batches.load(Ordering::Relaxed), 4);
+        assert_eq!(stats.submitted.load(Ordering::Relaxed), 19);
+        assert_eq!(stats.completed.load(Ordering::Relaxed), 19);
+        // Worker-side shard accounting is topology-blind: every item a
+        // worker saw — direct or batcher-built — lands in shard stats.
+        let shard_items: u64 = coord.shard_snapshots().iter().map(|s| s.items).sum();
+        assert_eq!(shard_items, stats.batched_items.load(Ordering::Relaxed));
     }
 
     #[test]

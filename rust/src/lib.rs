@@ -41,6 +41,12 @@
 //!   × projection × storage × D), resumable via a JSON run-log, and
 //!   regenerates `REPORT.md` / `REPORT.json` with in-tree SVG plots so
 //!   the repo's evidence is generated, never hand-written.
+//! * [`simd`] — the feature-detected kernel-dispatch layer under the
+//!   transform hot paths: runtime-selected AVX2+FMA / NEON / scalar
+//!   implementations of `dot`, `axpy`, the GEMM/FWHT inner loops, the
+//!   RFF cosine pass and the CSR reductions, overridable with the
+//!   `--simd scalar|auto` knob; within a fixed path the sparse/dense
+//!   and parallel/serial bit-parity contracts still hold.
 //! * [`bench`], [`prop`], [`metrics`], [`config`], [`rng`], [`linalg`] —
 //!   infrastructure substrates (no external crates are reachable in the
 //!   build environment, so benchmarking, property testing, config
@@ -80,6 +86,7 @@ pub mod report;
 pub mod rff;
 pub mod rng;
 pub mod runtime;
+pub mod simd;
 pub mod structured;
 pub mod svm;
 pub mod tensorsketch;

@@ -17,7 +17,12 @@
 //! combines elements `h` apart, so the innermost loops stream two
 //! contiguous runs — cache-friendly without an explicit bit-reversal
 //! permutation (the Walsh–Hadamard transform is permutation-symmetric
-//! enough that none is needed for Sylvester ordering).
+//! enough that none is needed for Sylvester ordering). The two runs
+//! feed [`crate::simd::fwht_butterfly`]: once `h` reaches the selected
+//! path's lane width the pass is vectorized, and because the butterfly
+//! is pure IEEE add/sub the transform is **bitwise identical on every
+//! kernel path** (`h` is a power of two, so vector passes have no
+//! remainder tail).
 
 use crate::{Error, Result};
 
@@ -30,16 +35,13 @@ pub fn fwht(x: &mut [f32]) {
         return;
     }
     assert!(n.is_power_of_two(), "fwht length must be a power of two, got {n}");
+    let path = crate::simd::selected();
     let mut h = 1;
     while h < n {
         let mut start = 0;
         while start < n {
-            for k in start..start + h {
-                let a = x[k];
-                let b = x[k + h];
-                x[k] = a + b;
-                x[k + h] = a - b;
-            }
+            let (a, b) = x[start..start + 2 * h].split_at_mut(h);
+            crate::simd::fwht_butterfly_with(path, a, b);
             start += h * 2;
         }
         h *= 2;

@@ -132,10 +132,18 @@ impl Matrix {
     }
 
     /// The serial GEMM kernel over output rows `row0 ..` of `C = A · B`,
-    /// writing into `c_block` (`block_rows × n`, row-major).
+    /// writing into `c_block` (`block_rows × n`, row-major). The inner
+    /// column run is exactly an `axpy` of a `B` panel row into the `C`
+    /// row, dispatched through [`crate::simd`] (path hoisted once per
+    /// call). Each output element still accumulates strictly in `k`
+    /// order — `axpy` is elementwise, so the column blocking never
+    /// reorders a single element's sum — which keeps the GEMM
+    /// bit-consistent with every other dense/sparse path that folds
+    /// rank-1 updates through the same dispatched `axpy`.
     fn matmul_rows_into(&self, b: &Matrix, row0: usize, c_block: &mut [f32]) {
         let (k, n) = (self.cols, b.cols);
         let rows = c_block.len() / n;
+        let path = crate::simd::selected();
         const JB: usize = 64;
         for j0 in (0..n).step_by(JB) {
             let j1 = (j0 + JB).min(n);
@@ -147,9 +155,7 @@ impl Matrix {
                         continue;
                     }
                     let b_row = &b.data[kk * n..(kk + 1) * n];
-                    for j in j0..j1 {
-                        c_row[j] += a_ik * b_row[j];
-                    }
+                    crate::simd::axpy_with(path, a_ik, &b_row[j0..j1], &mut c_row[j0..j1]);
                 }
             }
         }

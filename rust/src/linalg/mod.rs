@@ -34,43 +34,29 @@ pub fn zero_pad_pow2(x: &[f32]) -> Vec<f32> {
     out
 }
 
-/// Dot product with f32 accumulation in 4 independent lanes (helps the
-/// auto-vectorizer; exact association differences are irrelevant at the
-/// tolerances this library tests).
+/// Dot product on the dispatched [`crate::simd`] kernel path (the
+/// scalar path is the original 4-lane accumulation; exact association
+/// differences between paths are bounded by
+/// [`crate::simd::dot_ulp_bound`] and irrelevant at the tolerances
+/// this library tests).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let k = i * 4;
-        acc[0] += a[k] * b[k];
-        acc[1] += a[k + 1] * b[k + 1];
-        acc[2] += a[k + 2] * b[k + 2];
-        acc[3] += a[k + 3] * b[k + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for k in chunks * 4..a.len() {
-        s += a[k] * b[k];
-    }
-    s
+    crate::simd::dot(a, b)
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x` on the dispatched [`crate::simd`] kernel path.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    crate::simd::axpy(alpha, x, y);
 }
 
-/// `x *= alpha`.
+/// `x *= alpha` on the dispatched [`crate::simd`] kernel path
+/// (bitwise identical across paths — pure IEEE multiplies).
 #[inline]
 pub fn scale(alpha: f32, x: &mut [f32]) {
-    for xi in x.iter_mut() {
-        *xi *= alpha;
-    }
+    crate::simd::scale(alpha, x);
 }
 
 /// Euclidean norm.
@@ -200,10 +186,15 @@ mod tests {
 
     #[test]
     fn dot_matches_naive() {
+        // The length-scaled bound shared with the SIMD parity tests
+        // (~5e-4 at this length) — tight enough that a kernel
+        // regression can't hide under a loose blanket epsilon.
         let a: Vec<f32> = (0..131).map(|i| (i as f32 * 0.1).sin()).collect();
         let b: Vec<f32> = (0..131).map(|i| (i as f32 * 0.2).cos()).collect();
         let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+        let bound = crate::simd::dot_ulp_bound(&a, &b);
+        assert!(bound < 1e-3, "bound {bound} should be tighter than the old epsilon");
+        assert!((dot(&a, &b) - naive).abs() <= bound);
     }
 
     #[test]

@@ -20,11 +20,13 @@
 //! nonzero `t`, so sparse and dense outputs are equal (enforced by
 //! `rust/tests/sparse_parity.rs`; the only representable difference is
 //! the sign of a zero, which `==` ignores). For the handful of dense
-//! routines that do **not** skip zeros — the 4-lane [`super::dot`]
-//! behind row norms and the SVM solver — [`SparseRow::dot_dense`] and
-//! [`SparseRow::self_dot`] replicate the lane structure by column
-//! position (`lane = k mod 4`), so even those reductions match the
-//! dense path exactly.
+//! routines that do **not** skip zeros — the lane-blocked
+//! [`super::dot`] behind row norms and the SVM solver —
+//! [`SparseRow::dot_dense`] and [`SparseRow::self_dot`] replicate the
+//! *selected kernel path's* lane structure by column position (scalar:
+//! `lane = k mod 4`; AVX2: `k mod 32`; NEON: `k mod 16` — the mirrors
+//! live in [`crate::simd`]), so even those reductions match the dense
+//! path exactly within any fixed dispatch choice.
 
 use super::Matrix;
 use crate::{Error, Result};
@@ -90,41 +92,23 @@ impl<'a> SparseRow<'a> {
         }
     }
 
-    /// `⟨row, w⟩` replicating [`super::dot`]'s 4-lane accumulation over
-    /// the virtual dense row: entry at column `k` lands in lane
-    /// `k mod 4` (ascending within each lane), the four lanes are
-    /// summed, and the `k ≥ 4⌊d/4⌋` tail is folded in last. The skipped
-    /// zero entries contribute exact `+0.0` adds in the dense path, so
-    /// the result equals `dot(dense_row, w)` bitwise (up to zero sign).
+    /// `⟨row, w⟩` replicating [`super::dot`]'s lane accumulation over
+    /// the virtual dense row: an entry at column `k` lands in the lane
+    /// the selected [`crate::simd`] path assigns to position `k`
+    /// (ascending within each lane), the lanes reduce in the dense
+    /// path's order, and the tail beyond the lane-blocked cut is
+    /// folded in last. The skipped zero entries contribute exact
+    /// `+0.0` adds in the dense path, so the result equals
+    /// `dot(dense_row, w)` bitwise (up to zero sign).
     pub fn dot_dense(&self, w: &[f32]) -> f32 {
         debug_assert_eq!(self.dim, w.len(), "dim mismatch");
-        let cut = 4 * (w.len() / 4);
-        let split = self.indices.partition_point(|&k| (k as usize) < cut);
-        let mut acc = [0.0f32; 4];
-        for (&k, &v) in self.indices[..split].iter().zip(&self.values[..split]) {
-            acc[(k as usize) & 3] += v * w[k as usize];
-        }
-        let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-        for (&k, &v) in self.indices[split..].iter().zip(&self.values[split..]) {
-            s += v * w[k as usize];
-        }
-        s
+        crate::simd::sparse_dot_dense(self.indices, self.values, w)
     }
 
     /// `⟨row, row⟩` with the same lane replication as
     /// [`SparseRow::dot_dense`] — equals `dot(dense_row, dense_row)`.
     pub fn self_dot(&self) -> f32 {
-        let cut = 4 * (self.dim / 4);
-        let split = self.indices.partition_point(|&k| (k as usize) < cut);
-        let mut acc = [0.0f32; 4];
-        for (&k, &v) in self.indices[..split].iter().zip(&self.values[..split]) {
-            acc[(k as usize) & 3] += v * v;
-        }
-        let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-        for &v in &self.values[split..] {
-            s += v * v;
-        }
-        s
+        crate::simd::sparse_self_dot(self.indices, self.values, self.dim)
     }
 
     /// Euclidean norm of the virtual dense row (matches
@@ -134,13 +118,12 @@ impl<'a> SparseRow<'a> {
     }
 
     /// `w[k] += alpha · v` over the stored entries — the sparse
-    /// counterpart of [`super::axpy`] (the skipped terms are
-    /// `alpha · 0.0`, exact no-ops).
+    /// counterpart of [`super::axpy`], with the update fused or not
+    /// exactly as the selected [`crate::simd`] path's dense `axpy` is
+    /// (the skipped terms are `alpha · 0.0`, exact no-ops either way).
     pub fn axpy_into(&self, alpha: f32, w: &mut [f32]) {
         debug_assert_eq!(self.dim, w.len(), "dim mismatch");
-        for (&k, &v) in self.indices.iter().zip(self.values) {
-            w[k as usize] += alpha * v;
-        }
+        crate::simd::sparse_axpy(alpha, self.indices, self.values, w);
     }
 }
 

@@ -22,6 +22,9 @@ pub struct Stats {
     pub rejected: AtomicU64,
     /// Batches dispatched to the backend.
     pub batches: AtomicU64,
+    /// Subset of `batches` that were pre-formed full batches pushed
+    /// straight onto a shard, bypassing the batcher thread.
+    pub direct_batches: AtomicU64,
     /// Sum of real (unpadded) batch sizes.
     pub batched_items: AtomicU64,
     /// Pad slots wasted on fixed-shape backends.

@@ -57,8 +57,9 @@ use std::path::{Path, PathBuf};
 /// Schema version stamped into `REPORT.json` (bump on layout changes;
 /// [`parse_report`] rejects documents from another version, which is
 /// what the CI smoke's "schema drift" gate trips on). v2 added the
-/// serving-throughput panel (`serving` section).
-pub const REPORT_VERSION: u64 = 2;
+/// serving-throughput panel (`serving` section); v3 added the `simd`
+/// axis (which kernel-dispatch path the grid ran on).
+pub const REPORT_VERSION: u64 = 3;
 
 /// The feature-map families of the grid, in declaration order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -350,6 +351,11 @@ pub struct Report {
     /// `"quick"` or `"full"`.
     pub mode: String,
     pub seed: u64,
+    /// The kernel-dispatch path ([`crate::simd::selected`]) every
+    /// measurement in this report ran on — timings recorded on
+    /// different paths are not comparable (`rfdot bench-diff` makes the
+    /// same distinction via the bench files' `simd` axis).
+    pub simd: String,
     pub fingerprint: String,
     /// The grid axes this report was generated from.
     pub config: ReportConfig,
@@ -784,6 +790,7 @@ pub fn run(config: &ReportConfig) -> Result<Report> {
         version: REPORT_VERSION,
         mode: if config.quick { "quick".into() } else { "full".into() },
         seed: config.seed,
+        simd: crate::simd::selected().as_str().to_string(),
         fingerprint,
         config: config.clone(),
         cells: specs

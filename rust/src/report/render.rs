@@ -153,6 +153,7 @@ pub fn report_json(report: &Report, assets: &[String]) -> Json {
             // silently round through f64 and disagree with the exact
             // seed recorded inside the fingerprint.
             ("seed", s(&report.seed.to_string())),
+            ("simd", s(&report.simd)),
             ("fingerprint", s(&report.fingerprint)),
             ("generated_by", s("rfdot report")),
             ("grid", grid_json(&report.config)),
@@ -354,6 +355,7 @@ pub fn decode_report(doc: &Json) -> Result<Report> {
         version,
         mode,
         seed,
+        simd: req_str(v, "simd")?,
         fingerprint: req_str(v, "fingerprint")?,
         config,
         cells,
@@ -551,11 +553,12 @@ pub fn report_markdown(report: &Report, assets: &[String]) -> String {
     let mut md = String::new();
     md.push_str("# rfdot reproduction report\n\n");
     md.push_str(&format!(
-        "> Generated by `rfdot report` (mode: **{}**, seed: {}, schema v{}).\n\
+        "> Generated by `rfdot report` (mode: **{}**, seed: {}, simd: {}, schema v{}).\n\
          > Do not edit by hand — rerun `rfdot report{}` to regenerate; the\n\
          > paired `REPORT.json` carries the same data machine-readably.\n\n",
         report.mode,
         report.seed,
+        report.simd,
         report.version,
         if report.mode == "quick" { " --quick" } else { "" },
     ));
@@ -805,6 +808,7 @@ mod tests {
             version: REPORT_VERSION,
             mode: "quick".into(),
             seed: 42,
+            simd: "scalar".into(),
             fingerprint: config.fingerprint(),
             config,
             cells: vec![ok, sparse, skipped],

@@ -192,10 +192,7 @@ impl FeatureMap for RandomFourier {
         assert_eq!(out.len(), self.output_dim());
         let p = self.freqs.as_projection();
         p.project_into_scratch(x, out, scratch.one(p.scratch_len()));
-        let scale = self.scale();
-        for (o, &bi) in out.iter_mut().zip(&self.b) {
-            *o = scale * (*o + bi).cos();
-        }
+        crate::simd::cos_activate(out, &self.b, self.scale());
     }
 
     /// Batch override: one pass through the projection stack (blocked
@@ -217,11 +214,14 @@ impl FeatureMap for RandomFourier {
         // ~4 flops per cosine coordinate.
         let work = b.saturating_mul(dd).saturating_mul(4);
         let threads = crate::parallel::resolve_threads_for_work(threads, b, work);
+        // Hoist the dispatch choice out of the worker closure so every
+        // row runs the identical kernel (the per-row bit-parity
+        // contract; the activation itself is the same one the
+        // single-vector paths call).
+        let path = crate::simd::selected();
         crate::parallel::par_chunks(threads, dd, out.as_mut_slice(), |_, block| {
             for row in block.chunks_mut(dd) {
-                for (o, &bi) in row.iter_mut().zip(&self.b) {
-                    *o = scale * (*o + bi).cos();
-                }
+                crate::simd::cos_activate_with(path, row, &self.b, scale);
             }
         });
         out
@@ -246,10 +246,7 @@ impl FeatureMap for RandomFourier {
         assert_eq!(out.len(), self.output_dim(), "output dim mismatch");
         let p = self.freqs.as_projection();
         p.project_sparse_into_scratch(x, out, scratch.one(p.scratch_len()));
-        let scale = self.scale();
-        for (o, &bi) in out.iter_mut().zip(&self.b) {
-            *o = scale * (*o + bi).cos();
-        }
+        crate::simd::cos_activate(out, &self.b, self.scale());
     }
 
     /// Sparse batch override: one sparse projection pass, then the same
@@ -269,11 +266,10 @@ impl FeatureMap for RandomFourier {
         let scale = self.scale();
         let work = b.saturating_mul(dd).saturating_mul(4);
         let threads = crate::parallel::resolve_threads_for_work(threads, b, work);
+        let path = crate::simd::selected();
         crate::parallel::par_chunks(threads, dd, out.as_mut_slice(), |_, block| {
             for row in block.chunks_mut(dd) {
-                for (o, &bi) in row.iter_mut().zip(&self.b) {
-                    *o = scale * (*o + bi).cos();
-                }
+                crate::simd::cos_activate_with(path, row, &self.b, scale);
             }
         });
         out

@@ -1,0 +1,723 @@
+//! Feature-detected SIMD kernel layer for the transform hot paths.
+//!
+//! Every per-element loop the paper's cost model is made of — dense
+//! dot products, `axpy`, the GEMM microkernel, FWHT butterflies, the
+//! RFF cosine pass and the CSR gather reductions — runs through one of
+//! three **kernel paths**, selected once per process:
+//!
+//! * [`SimdPath::Scalar`] — the original hand-unrolled scalar code,
+//!   kept verbatim as the portable fallback *and* the test oracle;
+//! * [`SimdPath::Avx2`] — x86_64 AVX2 + FMA intrinsics, used only when
+//!   the CPU reports both features at runtime;
+//! * [`SimdPath::Neon`] — aarch64 NEON (always available on aarch64).
+//!
+//! Selection is `--simd scalar|auto` on the CLI, the `RFDOT_SIMD`
+//! environment variable, or the `"simd"` config field; the resolved
+//! path is process-global ([`selected`]) the same way the
+//! [`crate::parallel`] thread knob is. Every kernel also has a
+//! path-explicit `*_with` variant so tests can compare paths without
+//! touching the global.
+//!
+//! ## Lane discipline and the parity contracts
+//!
+//! The crate promises two bit-level invariants that SIMD must not
+//! break *within a fixed path*:
+//!
+//! * **sparse = dense**: each path's dense `dot` has a fixed lane
+//!   structure (scalar: 4 accumulators, lane `k mod 4`; AVX2: 32
+//!   lanes, `k mod 32`; NEON: 16 lanes, `k mod 16`) and a fixed
+//!   reduction order. The sparse mirrors ([`sparse_dot_dense_with`],
+//!   [`sparse_self_dot_with`]) accumulate each stored entry into the
+//!   lane its *column position* dictates and reduce in the identical
+//!   order, so skipping zero entries changes nothing: a skipped zero
+//!   contributes an exact `+0.0` to its lane on the dense side.
+//! * **parallel = serial**: all kernels here are per-row routines;
+//!   the [`crate::parallel`] helpers only partition rows, so thread
+//!   count still never changes results.
+//!
+//! On the FMA paths every multiply-accumulate is *fused* (one
+//! rounding), including remainder tails and sparse mirrors, which use
+//! [`f32::mul_add`] — correctly rounded by spec and therefore bitwise
+//! equal to the hardware `vfmadd`. Butterflies and scaling use only
+//! IEEE add/sub/mul, so those kernels are bitwise identical across all
+//! paths; `dot`/`axpy`/GEMM differ across paths only by summation
+//! order and FMA rounding, bounded by [`dot_ulp_bound`] (the shared
+//! tolerance of the parity property tests in
+//! `rust/tests/properties.rs`). The vector cosine uses Cody-Waite
+//! range reduction plus a degree-16 even polynomial (max error ~1e-6
+//! absolute vs libm); within one path all four RFF activation sites
+//! share it, so sparse/dense/batch parity still holds bitwise.
+
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+// ------------------------------------------------------------ dispatch
+
+/// A concrete kernel implementation the dispatcher can select.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdPath {
+    /// The portable scalar kernels (also the test oracle).
+    Scalar,
+    /// x86_64 AVX2 + FMA (runtime-detected).
+    Avx2,
+    /// aarch64 NEON (baseline on aarch64).
+    Neon,
+}
+
+impl SimdPath {
+    /// Stable name used in bench samples, serve output and logs.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SimdPath::Scalar => "scalar",
+            SimdPath::Avx2 => "avx2",
+            SimdPath::Neon => "neon",
+        }
+    }
+}
+
+/// The dispatch policy (what the user can ask for; [`SimdPath`] is
+/// what the machine resolves it to).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Use the best runtime-detected path ([`detected`]).
+    Auto,
+    /// Force the portable scalar kernels.
+    Scalar,
+}
+
+impl SimdMode {
+    /// Parse a CLI/config/env spelling (`auto` or `scalar`).
+    pub fn parse(s: &str) -> Result<SimdMode> {
+        match s {
+            "auto" => Ok(SimdMode::Auto),
+            "scalar" => Ok(SimdMode::Scalar),
+            other => Err(Error::Config(format!("unknown simd mode {other:?} (auto|scalar)"))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Scalar => "scalar",
+        }
+    }
+}
+
+/// Process-wide dispatch mode; 0 = not yet resolved (the same lazy
+/// idiom as `parallel::MAX_THREADS`).
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+fn mode_code(m: SimdMode) -> u8 {
+    match m {
+        SimdMode::Auto => 1,
+        SimdMode::Scalar => 2,
+    }
+}
+
+/// The process-wide dispatch mode. Resolved on first use from
+/// `RFDOT_SIMD` (if set to a valid spelling) or `auto`; overridable at
+/// any time with [`set_mode`] (the single knob behind `--simd` and the
+/// `"simd"` config field).
+pub fn mode() -> SimdMode {
+    match MODE.load(Ordering::Relaxed) {
+        1 => SimdMode::Auto,
+        2 => SimdMode::Scalar,
+        _ => {
+            let m = std::env::var("RFDOT_SIMD")
+                .ok()
+                .and_then(|s| SimdMode::parse(s.trim()).ok())
+                .unwrap_or(SimdMode::Auto);
+            // Benign race: every initializer computes the same value.
+            MODE.store(mode_code(m), Ordering::Relaxed);
+            m
+        }
+    }
+}
+
+/// Set the process-wide dispatch mode.
+pub fn set_mode(m: SimdMode) {
+    MODE.store(mode_code(m), Ordering::Relaxed);
+}
+
+/// The best kernel path this machine supports, independent of the
+/// mode knob.
+pub fn detected() -> SimdPath {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return SimdPath::Avx2;
+        }
+        SimdPath::Scalar
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        SimdPath::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        SimdPath::Scalar
+    }
+}
+
+/// The path the global mode currently resolves to — what every
+/// dispatched wrapper below executes.
+pub fn selected() -> SimdPath {
+    match mode() {
+        SimdMode::Scalar => SimdPath::Scalar,
+        SimdMode::Auto => detected(),
+    }
+}
+
+/// The paths runnable on this machine (scalar first — the oracle the
+/// parity property tests compare everything else against).
+pub fn available_paths() -> Vec<SimdPath> {
+    let mut paths = vec![SimdPath::Scalar];
+    if detected() != SimdPath::Scalar {
+        paths.push(detected());
+    }
+    paths
+}
+
+/// True when `path` can execute on this machine (a non-native `*_with`
+/// call falls back to scalar, so asking first keeps tests honest).
+pub fn path_available(path: SimdPath) -> bool {
+    path == SimdPath::Scalar || path == detected()
+}
+
+// ---------------------------------------------------------- tolerances
+
+/// Length-scaled error bound for comparing two dot products of the
+/// same data computed with different (but fixed) summation orders /
+/// FMA contraction — the shared tolerance of `dot_matches_naive` and
+/// the SIMD parity property tests. With unit roundoff `u = eps/2`,
+/// any summation order's forward error is at most `(n-1)·u·Σ|aᵢ·bᵢ|`
+/// to first order; the two sides' summation depths plus the fused-vs-
+/// separate product roundings total under `(2n+16)·u`, i.e.
+/// `eps · (n + 8) · Σ|aᵢ·bᵢ|`.
+pub fn dot_ulp_bound(a: &[f32], b: &[f32]) -> f32 {
+    let mag: f32 = a.iter().zip(b).map(|(x, y)| (x * y).abs()).sum();
+    f32::EPSILON * (a.len() as f32 + 8.0) * mag
+}
+
+// ------------------------------------------------------------- kernels
+//
+// Each kernel: a dispatched wrapper (global mode) plus a path-explicit
+// `*_with` variant. The scalar bodies are the pre-SIMD hot-path code,
+// moved here verbatim so `linalg` can delegate without behavior drift.
+
+/// Dense dot product on the selected path.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_with(selected(), a, b)
+}
+
+/// Dense dot product on an explicit path.
+pub fn dot_with(path: SimdPath, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match path {
+        SimdPath::Scalar => dot_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only selected after runtime detection.
+        SimdPath::Avx2 => unsafe { x86::dot_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdPath::Neon => unsafe { neon::dot_neon(a, b) },
+        #[allow(unreachable_patterns)]
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// The original 4-lane scalar dot — the oracle every other path's
+/// sparse mirror and parity test is defined against.
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let chunks = a.len() / 4;
+    let mut acc = [0.0f32; 4];
+    for c in 0..chunks {
+        let k = c * 4;
+        acc[0] += a[k] * b[k];
+        acc[1] += a[k + 1] * b[k + 1];
+        acc[2] += a[k + 2] * b[k + 2];
+        acc[3] += a[k + 3] * b[k + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for k in chunks * 4..a.len() {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+/// `y += alpha * x` on the selected path.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    axpy_with(selected(), alpha, x, y);
+}
+
+/// `y += alpha * x` on an explicit path. On the FMA paths every
+/// element is `y[k] = fma(alpha, x[k], y[k])` (vector body and scalar
+/// tail alike), so the sparse mirror is a plain `mul_add` per stored
+/// entry.
+pub fn axpy_with(path: SimdPath, alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    match path {
+        SimdPath::Scalar => {
+            for (yi, xi) in y.iter_mut().zip(x) {
+                *yi += alpha * xi;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only selected after runtime detection.
+        SimdPath::Avx2 => unsafe { x86::axpy_avx2(alpha, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdPath::Neon => unsafe { neon::axpy_neon(alpha, x, y) },
+        #[allow(unreachable_patterns)]
+        _ => {
+            for (yi, xi) in y.iter_mut().zip(x) {
+                *yi += alpha * xi;
+            }
+        }
+    }
+}
+
+/// `x *= alpha` on the selected path. Pure IEEE multiplies — bitwise
+/// identical across paths.
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    scale_with(selected(), alpha, x);
+}
+
+/// `x *= alpha` on an explicit path.
+pub fn scale_with(path: SimdPath, alpha: f32, x: &mut [f32]) {
+    match path {
+        SimdPath::Scalar => {
+            for v in x.iter_mut() {
+                *v *= alpha;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only selected after runtime detection.
+        SimdPath::Avx2 => unsafe { x86::scale_avx2(alpha, x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdPath::Neon => unsafe { neon::scale_neon(alpha, x) },
+        #[allow(unreachable_patterns)]
+        _ => {
+            for v in x.iter_mut() {
+                *v *= alpha;
+            }
+        }
+    }
+}
+
+/// One FWHT butterfly layer: `(a[i], b[i]) = (a[i]+b[i], a[i]-b[i])`
+/// for every `i`. Pure IEEE add/sub — bitwise identical across paths.
+pub fn fwht_butterfly(a: &mut [f32], b: &mut [f32]) {
+    fwht_butterfly_with(selected(), a, b);
+}
+
+/// One FWHT butterfly layer on an explicit path.
+pub fn fwht_butterfly_with(path: SimdPath, a: &mut [f32], b: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    match path {
+        SimdPath::Scalar => fwht_butterfly_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only selected after runtime detection.
+        SimdPath::Avx2 => unsafe { x86::fwht_butterfly_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdPath::Neon => unsafe { neon::fwht_butterfly_neon(a, b) },
+        #[allow(unreachable_patterns)]
+        _ => fwht_butterfly_scalar(a, b),
+    }
+}
+
+fn fwht_butterfly_scalar(a: &mut [f32], b: &mut [f32]) {
+    for (ai, bi) in a.iter_mut().zip(b.iter_mut()) {
+        let (x, y) = (*ai, *bi);
+        *ai = x + y;
+        *bi = x - y;
+    }
+}
+
+/// The RFF cosine activation: `out[i] = scale * cos(out[i] + b[i])`,
+/// on the selected path.
+pub fn cos_activate(out: &mut [f32], b: &[f32], scale: f32) {
+    cos_activate_with(selected(), out, b, scale);
+}
+
+/// The RFF cosine activation on an explicit path. Scalar uses libm
+/// `cos`; the vector paths use [`cos_poly`] (Cody-Waite reduction +
+/// even polynomial, ~1e-6 absolute error). All four RFF call sites
+/// (dense/sparse × single/batch) share this kernel, so transforms stay
+/// bitwise identical across storages and thread counts within one
+/// path.
+pub fn cos_activate_with(path: SimdPath, out: &mut [f32], b: &[f32], scale: f32) {
+    debug_assert_eq!(out.len(), b.len());
+    match path {
+        SimdPath::Scalar => {
+            for (o, bi) in out.iter_mut().zip(b) {
+                *o = scale * (*o + bi).cos();
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only selected after runtime detection.
+        SimdPath::Avx2 => unsafe { x86::cos_activate_avx2(out, b, scale) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdPath::Neon => unsafe { neon::cos_activate_neon(out, b, scale) },
+        #[allow(unreachable_patterns)]
+        _ => {
+            for (o, bi) in out.iter_mut().zip(b) {
+                *o = scale * (*o + bi).cos();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------- vector cosine
+
+/// Cody-Waite constants: `2π = C1 + C2 + C3` split so `k·C1` and
+/// `k·C2` are exact for the `k` magnitudes the reduction sees (the
+/// cephes `DP1..DP3` constants scaled by 8, each a dyadic rational).
+const TWO_PI_A: f32 = 6.281_25; // 8 * 0.78515625
+const TWO_PI_B: f32 = 1.935_005_2e-3; // 8 * 2.4187564849853515625e-4
+const TWO_PI_C: f32 = 3.019_916e-7; // 2π - TWO_PI_A - TWO_PI_B
+const FRAC_1_2PI: f32 = 0.159_154_94;
+
+/// Even Maclaurin coefficients of `cos` in `z = r²`, through `r¹⁶`
+/// (truncation ≤ π¹⁸/18! ≈ 1.4e-7 on the reduced range `|r| ≤ π`).
+const COS_POLY: [f32; 8] = [
+    4.779_477_3e-14,  // +1/16!
+    -1.147_074_5e-11, // -1/14!
+    2.087_675_7e-9,   // +1/12!
+    -2.755_731_9e-7,  // -1/10!
+    2.480_158_7e-5,   // +1/8!
+    -1.388_888_9e-3,  // -1/6!
+    4.166_666_8e-2,   // +1/4!
+    -0.5,             // -1/2!
+];
+
+/// Scalar replica of the vector cosine (same constants, same FMA
+/// structure via `mul_add`) — the remainder-tail routine of the vector
+/// paths, and directly testable against libm. `round` ties differ
+/// from the vector round-to-nearest-even only at exact half-turns,
+/// where both reductions remain valid.
+pub fn cos_poly(x: f32) -> f32 {
+    let k = (x * FRAC_1_2PI).round();
+    let r = (-k).mul_add(TWO_PI_A, x);
+    let r = (-k).mul_add(TWO_PI_B, r);
+    let r = (-k).mul_add(TWO_PI_C, r);
+    let z = r * r;
+    let mut p = COS_POLY[0];
+    for c in &COS_POLY[1..] {
+        p = p.mul_add(z, *c);
+    }
+    p.mul_add(z, 1.0)
+}
+
+// ------------------------------------------------------ sparse mirrors
+
+/// Sparse·dense dot (`Σ values[e] * w[indices[e]]`) replicating the
+/// selected path's dense lane discipline by *column position*, so the
+/// result is bitwise equal to `dot(x_dense, w)` on the same path.
+pub fn sparse_dot_dense(indices: &[u32], values: &[f32], w: &[f32]) -> f32 {
+    sparse_dot_dense_with(selected(), indices, values, w)
+}
+
+/// [`sparse_dot_dense`] on an explicit path.
+pub fn sparse_dot_dense_with(path: SimdPath, indices: &[u32], values: &[f32], w: &[f32]) -> f32 {
+    match path {
+        SimdPath::Scalar => sparse_dot_scalar(indices, values, w.len(), |k| w[k]),
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => sparse_dot_fma32(indices, values, w.len(), |k| w[k]),
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => sparse_dot_fma16(indices, values, w.len(), |k| w[k]),
+        #[allow(unreachable_patterns)]
+        _ => sparse_dot_scalar(indices, values, w.len(), |k| w[k]),
+    }
+}
+
+/// Sparse self dot (`Σ values[e]²`) replicating the selected path's
+/// dense `dot(x, x)` lane discipline over a row of width `dim`.
+pub fn sparse_self_dot(indices: &[u32], values: &[f32], dim: usize) -> f32 {
+    sparse_self_dot_with(selected(), indices, values, dim)
+}
+
+/// [`sparse_self_dot`] on an explicit path.
+pub fn sparse_self_dot_with(path: SimdPath, indices: &[u32], values: &[f32], dim: usize) -> f32 {
+    match path {
+        SimdPath::Scalar => sparse_self_dot_scalar(indices, values, dim),
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => {
+            let mut e = 0usize;
+            sparse_dot_fma32(indices, values, dim, move |_| {
+                let v = values[e];
+                e += 1;
+                v
+            })
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => {
+            let mut e = 0usize;
+            sparse_dot_fma16(indices, values, dim, move |_| {
+                let v = values[e];
+                e += 1;
+                v
+            })
+        }
+        #[allow(unreachable_patterns)]
+        _ => sparse_self_dot_scalar(indices, values, dim),
+    }
+}
+
+/// Sparse `w[indices[e]] += alpha * values[e]` matching the selected
+/// path's dense [`axpy`] at the stored positions (skipped zeros leave
+/// `w` untouched on both sides).
+pub fn sparse_axpy(alpha: f32, indices: &[u32], values: &[f32], w: &mut [f32]) {
+    sparse_axpy_with(selected(), alpha, indices, values, w);
+}
+
+/// [`sparse_axpy`] on an explicit path: the FMA paths fuse each
+/// update exactly like their dense vector bodies do.
+pub fn sparse_axpy_with(
+    path: SimdPath,
+    alpha: f32,
+    indices: &[u32],
+    values: &[f32],
+    w: &mut [f32],
+) {
+    match path {
+        SimdPath::Scalar => {
+            for (&k, &v) in indices.iter().zip(values) {
+                w[k as usize] += alpha * v;
+            }
+        }
+        _ => {
+            for (&k, &v) in indices.iter().zip(values) {
+                w[k as usize] = alpha.mul_add(v, w[k as usize]);
+            }
+        }
+    }
+}
+
+/// The scalar 4-lane sparse mirror (pre-SIMD `SparseRow::dot_dense`,
+/// moved here verbatim): entries at columns below `cut = 4·(dim/4)`
+/// land in lane `k mod 4`, the lanes reduce in the dense order, and
+/// the tail accumulates ascending.
+fn sparse_dot_scalar(
+    indices: &[u32],
+    values: &[f32],
+    dim: usize,
+    mut other: impl FnMut(usize) -> f32,
+) -> f32 {
+    let cut = 4 * (dim / 4);
+    let split = indices.partition_point(|&k| (k as usize) < cut);
+    let mut acc = [0.0f32; 4];
+    for (&k, &v) in indices[..split].iter().zip(&values[..split]) {
+        acc[(k as usize) & 3] += v * other(k as usize);
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for (&k, &v) in indices[split..].iter().zip(&values[split..]) {
+        s += v * other(k as usize);
+    }
+    s
+}
+
+fn sparse_self_dot_scalar(indices: &[u32], values: &[f32], dim: usize) -> f32 {
+    let mut e = 0usize;
+    sparse_dot_scalar(indices, values, dim, move |_| {
+        let v = values[e];
+        e += 1;
+        v
+    })
+}
+
+/// The 32-lane FMA sparse mirror of the AVX2 dense `dot`: entries at
+/// columns below `cut = 32·(dim/32)` land in lane `k mod 32` via
+/// `mul_add` (correctly rounded, so bitwise equal to the vector
+/// `vfmadd` on that lane), lanes reduce as
+/// `t[j] = (m[j]+m[j+8]) + (m[j+16]+m[j+24])` for `j in 0..8` — the
+/// AVX2 `(acc0+acc1)+(acc2+acc3)` vector adds — followed by the same
+/// ascending fold over `t`, and the tail accumulates ascending with
+/// `mul_add` exactly like the dense remainder loop.
+#[cfg(target_arch = "x86_64")]
+fn sparse_dot_fma32(
+    indices: &[u32],
+    values: &[f32],
+    dim: usize,
+    mut other: impl FnMut(usize) -> f32,
+) -> f32 {
+    let cut = 32 * (dim / 32);
+    let split = indices.partition_point(|&k| (k as usize) < cut);
+    let mut m = [0.0f32; 32];
+    for (&k, &v) in indices[..split].iter().zip(&values[..split]) {
+        let lane = (k as usize) & 31;
+        m[lane] = v.mul_add(other(k as usize), m[lane]);
+    }
+    let mut s = 0.0f32;
+    for j in 0..8 {
+        s += (m[j] + m[j + 8]) + (m[j + 16] + m[j + 24]);
+    }
+    for (&k, &v) in indices[split..].iter().zip(&values[split..]) {
+        s = v.mul_add(other(k as usize), s);
+    }
+    s
+}
+
+/// The 16-lane FMA sparse mirror of the NEON dense `dot`: entries
+/// below `cut = 16·(dim/16)` land in lane `k mod 16` via `mul_add`
+/// (a single `fmadd` on aarch64), lanes reduce as
+/// `t[j] = (m[j]+m[j+4]) + (m[j+8]+m[j+12])` for `j in 0..4` — the
+/// NEON `(acc0+acc1)+(acc2+acc3)` vector adds — then the ascending
+/// fold and a `mul_add` tail, exactly the dense structure.
+#[cfg(target_arch = "aarch64")]
+fn sparse_dot_fma16(
+    indices: &[u32],
+    values: &[f32],
+    dim: usize,
+    mut other: impl FnMut(usize) -> f32,
+) -> f32 {
+    let cut = 16 * (dim / 16);
+    let split = indices.partition_point(|&k| (k as usize) < cut);
+    let mut m = [0.0f32; 16];
+    for (&k, &v) in indices[..split].iter().zip(&values[..split]) {
+        let lane = (k as usize) & 15;
+        m[lane] = v.mul_add(other(k as usize), m[lane]);
+    }
+    let mut s = 0.0f32;
+    for j in 0..4 {
+        s += (m[j] + m[j + 4]) + (m[j + 8] + m[j + 12]);
+    }
+    for (&k, &v) in indices[split..].iter().zip(&values[split..]) {
+        s = v.mul_add(other(k as usize), s);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = crate::rng::Rng::seed_from(seed);
+        let a: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn mode_parses_and_round_trips() {
+        assert_eq!(SimdMode::parse("auto").unwrap(), SimdMode::Auto);
+        assert_eq!(SimdMode::parse("scalar").unwrap(), SimdMode::Scalar);
+        assert!(SimdMode::parse("avx512").is_err());
+        for m in [SimdMode::Auto, SimdMode::Scalar] {
+            assert_eq!(SimdMode::parse(m.as_str()).unwrap(), m);
+        }
+        for p in [SimdPath::Scalar, SimdPath::Avx2, SimdPath::Neon] {
+            assert!(!p.as_str().is_empty());
+        }
+    }
+
+    #[test]
+    fn available_paths_start_with_the_oracle() {
+        let paths = available_paths();
+        assert_eq!(paths[0], SimdPath::Scalar);
+        assert!(paths.len() <= 2);
+        for p in paths {
+            assert!(path_available(p));
+        }
+        // `selected()` resolves to something runnable regardless of
+        // the (possibly env-seeded) mode.
+        assert!(path_available(selected()));
+    }
+
+    #[test]
+    fn every_path_matches_the_scalar_dot_within_bound() {
+        for n in [0usize, 1, 3, 7, 31, 32, 33, 64, 67, 131] {
+            let (a, b) = vecs(n, 1000 + n as u64);
+            let want = dot_with(SimdPath::Scalar, &a, &b);
+            for path in available_paths() {
+                let got = dot_with(path, &a, &b);
+                let bound = dot_ulp_bound(&a, &b);
+                assert!(
+                    (got - want).abs() <= bound,
+                    "dot n={n} {path:?}: {got} vs {want} (bound {bound})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn butterfly_and_scale_are_bitwise_across_paths() {
+        for n in [0usize, 1, 4, 8, 13, 64] {
+            let (a0, b0) = vecs(n, 2000 + n as u64);
+            for path in available_paths() {
+                let (mut a, mut b) = (a0.clone(), b0.clone());
+                fwht_butterfly_with(path, &mut a, &mut b);
+                let (mut ar, mut br) = (a0.clone(), b0.clone());
+                fwht_butterfly_scalar(&mut ar, &mut br);
+                assert_eq!((a, b), (ar, br), "butterfly n={n} {path:?}");
+
+                let mut x = a0.clone();
+                scale_with(path, 0.25, &mut x);
+                let want: Vec<f32> = a0.iter().map(|v| v * 0.25).collect();
+                assert_eq!(x, want, "scale n={n} {path:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn cos_poly_tracks_libm() {
+        for i in -2000..2000 {
+            let x = i as f32 * 0.037;
+            let got = cos_poly(x);
+            let want = x.cos();
+            assert!((got - want).abs() < 5e-6, "cos({x}): {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn cos_activate_paths_agree_with_libm_within_poly_error() {
+        for n in [0usize, 1, 7, 8, 9, 33] {
+            let (o0, b) = vecs(n, 3000 + n as u64);
+            for path in available_paths() {
+                let mut out = o0.clone();
+                cos_activate_with(path, &mut out, &b, 0.5);
+                for k in 0..n {
+                    let want = 0.5 * (o0[k] + b[k]).cos();
+                    assert!(
+                        (out[k] - want).abs() < 5e-6,
+                        "cos_activate n={n} k={k} {path:?}: {} vs {want}",
+                        out[k]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_mirrors_are_bitwise_on_every_path() {
+        let mut rng = crate::rng::Rng::seed_from(99);
+        for dim in [1usize, 3, 4, 15, 16, 17, 31, 32, 33, 64, 131] {
+            // ~40% dense pattern exercising lanes and tails.
+            let dense: Vec<f32> =
+                (0..dim).map(|_| if rng.f64() < 0.4 { rng.f32() - 0.5 } else { 0.0 }).collect();
+            let w: Vec<f32> = (0..dim).map(|_| rng.f32() - 0.5).collect();
+            let indices: Vec<u32> = (0..dim as u32).filter(|&k| dense[k as usize] != 0.0).collect();
+            let values: Vec<f32> = indices.iter().map(|&k| dense[k as usize]).collect();
+            for path in available_paths() {
+                let sd = sparse_dot_dense_with(path, &indices, &values, &w);
+                assert_eq!(sd, dot_with(path, &dense, &w), "dot_dense dim={dim} {path:?}");
+                let ss = sparse_self_dot_with(path, &indices, &values, dim);
+                assert_eq!(ss, dot_with(path, &dense, &dense), "self_dot dim={dim} {path:?}");
+                let mut wd = w.clone();
+                axpy_with(path, 0.75, &dense, &mut wd);
+                let mut ws = w.clone();
+                sparse_axpy_with(path, 0.75, &indices, &values, &mut ws);
+                assert_eq!(wd, ws, "axpy dim={dim} {path:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! aarch64 NEON kernels.
+//!
+//! NEON is part of the aarch64 baseline, so [`super::detected`] always
+//! returns [`super::SimdPath::Neon`] on this architecture; the
+//! intrinsics are still `unsafe fn`s, and the explicit
+//! `#[target_feature(enable = "neon")]` documents the requirement.
+//!
+//! Lane discipline (mirrored by the sparse helpers in `super`): `dot`
+//! accumulates 16 elements per iteration into four 4-lane FMA
+//! accumulators, reduces with the vector adds `(acc0+acc1) +
+//! (acc2+acc3)`, spills to a stack array and folds the 4 lanes
+//! ascending, then finishes the remainder `k ≥ 16·(n/16)` ascending
+//! with scalar [`f32::mul_add`] (correctly rounded = a 1-lane `fmla`).
+//! `axpy` fuses every element; butterflies and scaling are pure IEEE
+//! add/sub/mul and bitwise equal to the scalar path.
+
+use core::arch::aarch64::*;
+
+/// Dense dot, 4×4-lane FMA.
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let cut = 16 * (n / 16);
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut acc2 = vdupq_n_f32(0.0);
+    let mut acc3 = vdupq_n_f32(0.0);
+    let mut k = 0usize;
+    while k < cut {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(k)), vld1q_f32(bp.add(k)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(ap.add(k + 4)), vld1q_f32(bp.add(k + 4)));
+        acc2 = vfmaq_f32(acc2, vld1q_f32(ap.add(k + 8)), vld1q_f32(bp.add(k + 8)));
+        acc3 = vfmaq_f32(acc3, vld1q_f32(ap.add(k + 12)), vld1q_f32(bp.add(k + 12)));
+        k += 16;
+    }
+    let sum = vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3));
+    let mut t = [0.0f32; 4];
+    vst1q_f32(t.as_mut_ptr(), sum);
+    let mut s = 0.0f32;
+    for v in t {
+        s += v;
+    }
+    for k in cut..n {
+        s = a[k].mul_add(b[k], s);
+    }
+    s
+}
+
+/// `y += alpha * x`, fused at every position.
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn axpy_neon(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len();
+    let cut = 4 * (n / 4);
+    let av = vdupq_n_f32(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut k = 0usize;
+    while k < cut {
+        let v = vfmaq_f32(vld1q_f32(yp.add(k)), av, vld1q_f32(xp.add(k)));
+        vst1q_f32(yp.add(k), v);
+        k += 4;
+    }
+    for k in cut..n {
+        y[k] = alpha.mul_add(x[k], y[k]);
+    }
+}
+
+/// `x *= alpha` (pure IEEE multiplies — bitwise equal to scalar).
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn scale_neon(alpha: f32, x: &mut [f32]) {
+    let n = x.len();
+    let cut = 4 * (n / 4);
+    let av = vdupq_n_f32(alpha);
+    let xp = x.as_mut_ptr();
+    let mut k = 0usize;
+    while k < cut {
+        vst1q_f32(xp.add(k), vmulq_f32(av, vld1q_f32(xp.add(k))));
+        k += 4;
+    }
+    for v in &mut x[cut..] {
+        *v *= alpha;
+    }
+}
+
+/// One butterfly layer (pure IEEE add/sub — bitwise equal to scalar).
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn fwht_butterfly_neon(a: &mut [f32], b: &mut [f32]) {
+    let n = a.len();
+    let cut = 4 * (n / 4);
+    let ap = a.as_mut_ptr();
+    let bp = b.as_mut_ptr();
+    let mut k = 0usize;
+    while k < cut {
+        let x = vld1q_f32(ap.add(k));
+        let y = vld1q_f32(bp.add(k));
+        vst1q_f32(ap.add(k), vaddq_f32(x, y));
+        vst1q_f32(bp.add(k), vsubq_f32(x, y));
+        k += 4;
+    }
+    for k in cut..n {
+        let (x, y) = (a[k], b[k]);
+        a[k] = x + y;
+        b[k] = x - y;
+    }
+}
+
+/// `out[i] = scale * cos(out[i] + b[i])` via the shared Cody-Waite +
+/// polynomial evaluation ([`super::cos_poly`] is the scalar replica
+/// used for the remainder tail).
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn cos_activate_neon(out: &mut [f32], b: &[f32], scale: f32) {
+    let n = out.len();
+    let cut = 4 * (n / 4);
+    let op = out.as_mut_ptr();
+    let bp = b.as_ptr();
+    let sv = vdupq_n_f32(scale);
+    let inv = vdupq_n_f32(super::FRAC_1_2PI);
+    let c1 = vdupq_n_f32(-super::TWO_PI_A);
+    let c2 = vdupq_n_f32(-super::TWO_PI_B);
+    let c3 = vdupq_n_f32(-super::TWO_PI_C);
+    let one = vdupq_n_f32(1.0);
+    let mut k = 0usize;
+    while k < cut {
+        let x = vaddq_f32(vld1q_f32(op.add(k)), vld1q_f32(bp.add(k)));
+        // Nearest whole number of turns (frintn = round-to-nearest-
+        // even; the scalar tail's `round` differs only at exact
+        // half-turns, where either reduction target is valid).
+        let turns = vrndnq_f32(vmulq_f32(x, inv));
+        let mut r = vfmaq_f32(x, turns, c1);
+        r = vfmaq_f32(r, turns, c2);
+        r = vfmaq_f32(r, turns, c3);
+        let z = vmulq_f32(r, r);
+        let mut p = vdupq_n_f32(super::COS_POLY[0]);
+        for c in &super::COS_POLY[1..] {
+            p = vfmaq_f32(vdupq_n_f32(*c), p, z);
+        }
+        let cosv = vfmaq_f32(one, p, z);
+        vst1q_f32(op.add(k), vmulq_f32(sv, cosv));
+        k += 4;
+    }
+    for k in cut..n {
+        out[k] = scale * super::cos_poly(out[k] + b[k]);
+    }
+}

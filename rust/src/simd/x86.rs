@@ -1,0 +1,176 @@
+//! x86_64 AVX2 + FMA kernels.
+//!
+//! Every function here carries `#[target_feature(enable = "avx2,fma")]`
+//! and is reached only through [`super::SimdPath::Avx2`], which the
+//! dispatcher hands out only after `is_x86_feature_detected!` confirms
+//! both features — that runtime check is the safety argument for every
+//! call site in `super`.
+//!
+//! Lane discipline (the contract the sparse mirrors in `super`
+//! replicate): `dot` accumulates 32 elements per iteration into four
+//! 8-lane FMA accumulators (element `k` lands in accumulator `⌊(k mod
+//! 32) / 8⌋`, lane `k mod 8`), reduces with the vector adds
+//! `(acc0+acc1) + (acc2+acc3)`, spills to a stack array and folds the
+//! 8 lanes ascending, then finishes the remainder `k ≥ 32·(n/32)`
+//! ascending with scalar [`f32::mul_add`] — which is correctly rounded
+//! and therefore bitwise identical to a 1-lane `vfmadd`. `axpy` fuses
+//! every element the same way (vector body and scalar tail alike), so
+//! a sparse update can mirror it with one `mul_add` per stored entry.
+//! Butterflies and scaling use only IEEE add/sub/mul and are bitwise
+//! identical to the scalar path.
+
+use core::arch::x86_64::*;
+
+/// Dense dot, 4×8-lane FMA.
+///
+/// # Safety
+/// Requires AVX2 and FMA (guaranteed by the dispatcher's runtime
+/// detection).
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let cut = 32 * (n / 32);
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut k = 0usize;
+    while k < cut {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(k)), _mm256_loadu_ps(bp.add(k)), acc0);
+        acc1 =
+            _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(k + 8)), _mm256_loadu_ps(bp.add(k + 8)), acc1);
+        acc2 =
+            _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(k + 16)), _mm256_loadu_ps(bp.add(k + 16)), acc2);
+        acc3 =
+            _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(k + 24)), _mm256_loadu_ps(bp.add(k + 24)), acc3);
+        k += 32;
+    }
+    let sum = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+    let mut t = [0.0f32; 8];
+    _mm256_storeu_ps(t.as_mut_ptr(), sum);
+    let mut s = 0.0f32;
+    for v in t {
+        s += v;
+    }
+    for k in cut..n {
+        s = a[k].mul_add(b[k], s);
+    }
+    s
+}
+
+/// `y += alpha * x`, fused at every position.
+///
+/// # Safety
+/// Requires AVX2 and FMA (guaranteed by the dispatcher's runtime
+/// detection).
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len();
+    let cut = 8 * (n / 8);
+    let av = _mm256_set1_ps(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut k = 0usize;
+    while k < cut {
+        let v = _mm256_fmadd_ps(av, _mm256_loadu_ps(xp.add(k)), _mm256_loadu_ps(yp.add(k)));
+        _mm256_storeu_ps(yp.add(k), v);
+        k += 8;
+    }
+    for k in cut..n {
+        y[k] = alpha.mul_add(x[k], y[k]);
+    }
+}
+
+/// `x *= alpha` (pure IEEE multiplies — bitwise equal to scalar).
+///
+/// # Safety
+/// Requires AVX2 and FMA (guaranteed by the dispatcher's runtime
+/// detection).
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn scale_avx2(alpha: f32, x: &mut [f32]) {
+    let n = x.len();
+    let cut = 8 * (n / 8);
+    let av = _mm256_set1_ps(alpha);
+    let xp = x.as_mut_ptr();
+    let mut k = 0usize;
+    while k < cut {
+        _mm256_storeu_ps(xp.add(k), _mm256_mul_ps(av, _mm256_loadu_ps(xp.add(k))));
+        k += 8;
+    }
+    for v in &mut x[cut..] {
+        *v *= alpha;
+    }
+}
+
+/// One butterfly layer (pure IEEE add/sub — bitwise equal to scalar).
+///
+/// # Safety
+/// Requires AVX2 and FMA (guaranteed by the dispatcher's runtime
+/// detection).
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn fwht_butterfly_avx2(a: &mut [f32], b: &mut [f32]) {
+    let n = a.len();
+    let cut = 8 * (n / 8);
+    let ap = a.as_mut_ptr();
+    let bp = b.as_mut_ptr();
+    let mut k = 0usize;
+    while k < cut {
+        let x = _mm256_loadu_ps(ap.add(k));
+        let y = _mm256_loadu_ps(bp.add(k));
+        _mm256_storeu_ps(ap.add(k), _mm256_add_ps(x, y));
+        _mm256_storeu_ps(bp.add(k), _mm256_sub_ps(x, y));
+        k += 8;
+    }
+    for k in cut..n {
+        let (x, y) = (a[k], b[k]);
+        a[k] = x + y;
+        b[k] = x - y;
+    }
+}
+
+/// `out[i] = scale * cos(out[i] + b[i])` via the shared Cody-Waite +
+/// polynomial evaluation ([`super::cos_poly`] is the scalar replica
+/// used for the remainder tail).
+///
+/// # Safety
+/// Requires AVX2 and FMA (guaranteed by the dispatcher's runtime
+/// detection).
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn cos_activate_avx2(out: &mut [f32], b: &[f32], scale: f32) {
+    let n = out.len();
+    let cut = 8 * (n / 8);
+    let op = out.as_mut_ptr();
+    let bp = b.as_ptr();
+    let sv = _mm256_set1_ps(scale);
+    let inv = _mm256_set1_ps(super::FRAC_1_2PI);
+    let c1 = _mm256_set1_ps(-super::TWO_PI_A);
+    let c2 = _mm256_set1_ps(-super::TWO_PI_B);
+    let c3 = _mm256_set1_ps(-super::TWO_PI_C);
+    let one = _mm256_set1_ps(1.0);
+    let mut k = 0usize;
+    while k < cut {
+        let x = _mm256_add_ps(_mm256_loadu_ps(op.add(k)), _mm256_loadu_ps(bp.add(k)));
+        // Nearest whole number of turns (round-to-nearest-even; the
+        // scalar tail's `round` differs only at exact half-turns,
+        // where either reduction target is valid).
+        let turns = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(
+            _mm256_mul_ps(x, inv),
+        );
+        let mut r = _mm256_fmadd_ps(turns, c1, x);
+        r = _mm256_fmadd_ps(turns, c2, r);
+        r = _mm256_fmadd_ps(turns, c3, r);
+        let z = _mm256_mul_ps(r, r);
+        let mut p = _mm256_set1_ps(super::COS_POLY[0]);
+        for c in &super::COS_POLY[1..] {
+            p = _mm256_fmadd_ps(p, z, _mm256_set1_ps(*c));
+        }
+        let cosv = _mm256_fmadd_ps(p, z, one);
+        _mm256_storeu_ps(op.add(k), _mm256_mul_ps(sv, cosv));
+        k += 8;
+    }
+    for k in cut..n {
+        out[k] = scale * super::cos_poly(out[k] + b[k]);
+    }
+}

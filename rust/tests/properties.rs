@@ -9,6 +9,7 @@ use rfdot::features::FeatureMap;
 use rfdot::maclaurin::{serialize, RandomMaclaurin, RmConfig};
 use rfdot::prop::{forall, gens, PropConfig};
 use rfdot::rng::Rng;
+use rfdot::simd::{self, SimdPath};
 use rfdot::structured::ProjectionKind;
 
 /// A random built-in kernel.
@@ -227,6 +228,150 @@ fn prop_fwht_invariants() {
             for k in 0..n {
                 if (y[k] / n as f32 - x[k]).abs() > 1e-3 {
                     return Err(format!("involution violated at n={n} k={k}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Bit patterns of a float slice, for bitwise-equality assertions.
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every runtime-dispatched kernel agrees with the scalar oracle on
+/// every length `0..=67` — the range covers empty input, the vector
+/// bodies, and every remainder class of the 32-lane (AVX2), 16-lane
+/// (NEON) and 4-lane (scalar) strides. `dot` and `axpy` reassociate
+/// and fuse, so they get the shared rounding envelope; `scale` and the
+/// FWHT butterfly are pure lanewise IEEE mul/add/sub, so they must be
+/// bitwise identical; the cosine activation swaps libm for the
+/// polynomial on vector paths, so it gets the polynomial's error
+/// budget. Uses the explicit `_with(path)` API only — the process
+/// global dispatch mode is never touched, so this test is safe to run
+/// concurrently with everything else in the binary.
+#[test]
+fn prop_simd_kernels_match_scalar_oracle() {
+    forall(
+        PropConfig { cases: 40, seed: 0x51D0, max_size: 8 },
+        |rng: &mut Rng, _size: usize| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::seed_from(seed);
+            for n in 0..=67usize {
+                let a = gens::f32_vec(&mut rng, n);
+                let b = gens::f32_vec(&mut rng, n);
+                let alpha = rng.f32() * 2.0 - 1.0;
+                let scale = rng.f32() * 2.0 - 1.0;
+                for &path in &simd::available_paths() {
+                    // dot: both sides may reassociate; the ULP bound is
+                    // the contract shared with `linalg::dot`'s tests.
+                    let want = simd::dot_with(SimdPath::Scalar, &a, &b);
+                    let got = simd::dot_with(path, &a, &b);
+                    if (got - want).abs() > simd::dot_ulp_bound(&a, &b) {
+                        return Err(format!("dot n={n} {path:?}: {got} vs scalar {want}"));
+                    }
+                    // axpy: elementwise, fused vs unfused differ by at
+                    // most one rounding of the product per element.
+                    let mut want = b.clone();
+                    simd::axpy_with(SimdPath::Scalar, alpha, &a, &mut want);
+                    let mut got = b.clone();
+                    simd::axpy_with(path, alpha, &a, &mut got);
+                    for k in 0..n {
+                        let tol = 4.0 * f32::EPSILON * ((alpha * a[k]).abs() + b[k].abs());
+                        if (got[k] - want[k]).abs() > tol {
+                            return Err(format!(
+                                "axpy n={n} k={k} {path:?}: {} vs scalar {}",
+                                got[k], want[k]
+                            ));
+                        }
+                    }
+                    // scale: one IEEE multiply per lane — bitwise.
+                    let mut want = a.clone();
+                    simd::scale_with(SimdPath::Scalar, scale, &mut want);
+                    let mut got = a.clone();
+                    simd::scale_with(path, scale, &mut got);
+                    if bits(&got) != bits(&want) {
+                        return Err(format!("scale n={n} {path:?} not bitwise"));
+                    }
+                    // FWHT butterfly: one add + one sub per lane — bitwise.
+                    let (mut wa, mut wb) = (a.clone(), b.clone());
+                    simd::fwht_butterfly_with(SimdPath::Scalar, &mut wa, &mut wb);
+                    let (mut ga, mut gb) = (a.clone(), b.clone());
+                    simd::fwht_butterfly_with(path, &mut ga, &mut gb);
+                    if bits(&ga) != bits(&wa) || bits(&gb) != bits(&wb) {
+                        return Err(format!("fwht butterfly n={n} {path:?} not bitwise"));
+                    }
+                    // cos activation: vector paths use the Cody-Waite
+                    // polynomial (~1e-6 absolute) instead of libm.
+                    let mut want = a.clone();
+                    simd::cos_activate_with(SimdPath::Scalar, &mut want, &b, scale);
+                    let mut got = a.clone();
+                    simd::cos_activate_with(path, &mut got, &b, scale);
+                    for k in 0..n {
+                        if (got[k] - want[k]).abs() > 1e-5 * scale.abs().max(1.0) {
+                            return Err(format!(
+                                "cos n={n} k={k} {path:?}: {} vs scalar {}",
+                                got[k], want[k]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The sparse kernels mirror their dense counterparts *per path*: on
+/// the same dispatch path, a sparse row must produce bitwise the same
+/// dot / self-dot / axpy results as its zero-padded dense form. This
+/// is the invariant that keeps CSR and dense pipelines byte-identical
+/// (zeros contribute exactly `±0.0` to every lane, and the sparse
+/// mirrors replicate each path's lane discipline by column position).
+#[test]
+fn prop_sparse_mirrors_match_dense_kernels_per_path() {
+    forall(
+        PropConfig { cases: 40, seed: 0x5BA5, max_size: 8 },
+        |rng: &mut Rng, _size: usize| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::seed_from(seed);
+            for n in 0..=67usize {
+                let mut indices = Vec::new();
+                let mut values = Vec::new();
+                let mut dense = vec![0.0f32; n];
+                for k in 0..n {
+                    if rng.bernoulli(0.4) {
+                        let v = rng.f32() * 2.0 - 1.0;
+                        if v != 0.0 {
+                            indices.push(k as u32);
+                            values.push(v);
+                            dense[k] = v;
+                        }
+                    }
+                }
+                let w = gens::f32_vec(&mut rng, n);
+                let alpha = rng.f32() * 2.0 - 1.0;
+                for &path in &simd::available_paths() {
+                    let got = simd::sparse_dot_dense_with(path, &indices, &values, &w);
+                    let want = simd::dot_with(path, &dense, &w);
+                    if got.to_bits() != want.to_bits() {
+                        return Err(format!("sparse dot n={n} {path:?}: {got} vs dense {want}"));
+                    }
+                    let got = simd::sparse_self_dot_with(path, &indices, &values, n);
+                    let want = simd::dot_with(path, &dense, &dense);
+                    if got.to_bits() != want.to_bits() {
+                        return Err(format!(
+                            "sparse self-dot n={n} {path:?}: {got} vs dense {want}"
+                        ));
+                    }
+                    let mut got_w = w.clone();
+                    simd::sparse_axpy_with(path, alpha, &indices, &values, &mut got_w);
+                    let mut want_w = w.clone();
+                    simd::axpy_with(path, alpha, &dense, &mut want_w);
+                    if bits(&got_w) != bits(&want_w) {
+                        return Err(format!("sparse axpy n={n} {path:?} not bitwise"));
+                    }
                 }
             }
             Ok(())

@@ -11,9 +11,21 @@ use rfdot::kernels::{gram, mean_abs_gram_error, Polynomial};
 use rfdot::linalg::Matrix;
 use rfdot::maclaurin::{serialize, RandomMaclaurin, RmConfig};
 use rfdot::rng::Rng;
+use rfdot::simd::{self, SimdMode, SimdPath};
 use rfdot::structured::ProjectionKind;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
+
+/// One test in this binary flips the process-global kernel dispatch
+/// mode, and every other test's bit-identity assertions implicitly
+/// assume the mode holds still while they run. All tests here
+/// serialize on this lock so the harness's default test parallelism
+/// can never interleave a mode flip with a parity check.
+static DISPATCH: Mutex<()> = Mutex::new(());
+
+fn dispatch_lock() -> MutexGuard<'static, ()> {
+    DISPATCH.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 fn unit_points(n: usize, d: usize, seed: u64) -> Matrix {
     let mut rng = Rng::seed_from(seed);
@@ -51,6 +63,7 @@ fn err_at(kind: ProjectionKind, dd: usize, x: &Matrix, exact: &Matrix, rng: &mut
 /// most a small constant factor for its intra-block correlations.
 #[test]
 fn gram_errors_share_the_figure1_envelope() {
+    let _dispatch = dispatch_lock();
     let d = 16;
     let x = unit_points(30, d, 1);
     let exact = gram(&Polynomial::new(3, 1.0), &x);
@@ -87,6 +100,7 @@ fn gram_errors_share_the_figure1_envelope() {
 /// and the serialized record reconstructs the identical map.
 #[test]
 fn structured_end_to_end_config_serve_serialize() {
+    let _dispatch = dispatch_lock();
     // config → sampling
     let cfg = ExperimentConfig::from_json(
         r#"{"projection": "structured", "n_features": 64, "kernel": {"kind": "exponential", "sigma2": 1.0}}"#,
@@ -142,10 +156,61 @@ fn structured_end_to_end_config_serve_serialize() {
     std::fs::remove_file(&path).ok();
 }
 
+/// Forcing the scalar oracle (`--simd scalar` / `RFDOT_SIMD=scalar`)
+/// end to end is statistically indistinguishable from auto dispatch:
+/// with the map-sampling RNG reseeded identically, the two runs build
+/// the same maps and transform the same points, so their mean Gram
+/// errors may differ only by per-kernel rounding (reassociated FMA
+/// dots, polynomial vs libm cosine) — parts in 1e-6, far inside the
+/// 1e-4 envelope asserted here. On a host with no vector path the two
+/// runs are the same code and the difference is exactly zero.
+#[test]
+fn forced_scalar_matches_auto_dispatch_end_to_end() {
+    let _dispatch = dispatch_lock();
+    // Restore auto dispatch even if an assertion below panics, so a
+    // failure here can never leak a forced-scalar mode into later
+    // tests in this binary.
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            simd::set_mode(SimdMode::Auto);
+        }
+    }
+    let _restore = Restore;
+
+    let d = 16;
+    let x = unit_points(30, d, 21);
+    let exact = gram(&Polynomial::new(3, 1.0), &x);
+
+    simd::set_mode(SimdMode::Auto);
+    let auto_path = simd::selected();
+    let mut rng = Rng::seed_from(5);
+    let auto_dense = err_at(ProjectionKind::Dense, 256, &x, &exact, &mut rng);
+    let mut rng = Rng::seed_from(6);
+    let auto_structured = err_at(ProjectionKind::Structured, 256, &x, &exact, &mut rng);
+
+    simd::set_mode(SimdMode::Scalar);
+    assert_eq!(simd::selected(), SimdPath::Scalar);
+    let mut rng = Rng::seed_from(5);
+    let scalar_dense = err_at(ProjectionKind::Dense, 256, &x, &exact, &mut rng);
+    let mut rng = Rng::seed_from(6);
+    let scalar_structured = err_at(ProjectionKind::Structured, 256, &x, &exact, &mut rng);
+
+    assert!(
+        (auto_dense - scalar_dense).abs() < 1e-4,
+        "dense: auto ({auto_path:?}) err {auto_dense} vs forced-scalar err {scalar_dense}"
+    );
+    assert!(
+        (auto_structured - scalar_structured).abs() < 1e-4,
+        "structured: auto ({auto_path:?}) err {auto_structured} vs forced-scalar err {scalar_structured}"
+    );
+}
+
 /// Structured H0/1 maps keep their exact prefix and their random block
 /// riding the FWHT path end to end.
 #[test]
 fn structured_h01_prefix_stays_exact() {
+    let _dispatch = dispatch_lock();
     let kernel = Polynomial::new(10, 1.0);
     let d = 6;
     let mut rng = Rng::seed_from(7);

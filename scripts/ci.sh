@@ -4,11 +4,13 @@
 #
 #  * `cargo doc` runs with `-D warnings` so broken intra-doc links (the
 #    paper cross-references added in the rustdoc pass) fail the gate;
-#  * the structured/sparse/serve bench smokes exercise the BENCH_*.json
-#    regeneration paths (--quick diverts their noisy timings to the
-#    temp dir so checked-in baselines are only overwritten by full
-#    measured runs; the sparse smoke also asserts CSR/dense parity
-#    inside the bench);
+#  * the structured/sparse/serve/simd bench smokes exercise the
+#    BENCH_*.json regeneration paths (--quick diverts their noisy
+#    timings to the temp dir so checked-in baselines are only
+#    overwritten by full measured runs; the sparse smoke also asserts
+#    CSR/dense parity inside the bench);
+#  * the test suite runs twice: once under auto kernel dispatch and
+#    once with RFDOT_SIMD=scalar forcing the portable oracle kernels;
 #  * `report --quick` regenerates REPORT.md/REPORT.json into a temp dir
 #    and re-parses the JSON through the declared schema, failing on
 #    schema drift (the self-check inside `rfdot report`).
@@ -20,16 +22,25 @@ cd "$(dirname "$0")/../rust"
 
 cargo build --release
 cargo test -q
+# The full suite again with the kernel dispatcher pinned to the scalar
+# oracle: every SIMD-vs-scalar parity assertion must hold when the
+# "fast" side *is* the oracle, and any test that silently depended on
+# a vector path would surface here.
+RFDOT_SIMD=scalar cargo test -q
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo bench --bench micro -- --quick --only structured
 cargo bench --bench micro -- --quick --only sparse
 cargo bench --bench micro -- --quick --only serve-throughput
+cargo bench --bench micro -- --quick --only simd-kernels
 # bench-diff self-comparison: the regression gate parses the checked-in
-# baseline and exits 0 (pending/null samples compare clean), so wiring
-# real old-vs-new comparisons later is a one-line change.
+# baselines and exits 0 (pending/null samples compare clean), so wiring
+# real old-vs-new comparisons later is a one-line change. The simd
+# baseline also exercises the cross-axis rule: diffs across different
+# top-level `simd` axes are reported but never gate.
 cargo run --release --quiet -- bench-diff ../BENCH_serve.json ../BENCH_serve.json --max-regress 5
+cargo run --release --quiet -- bench-diff ../BENCH_simd.json ../BENCH_simd.json --max-regress 5
 report_dir="$(mktemp -d)"
 trap 'rm -rf "$report_dir"' EXIT
 cargo run --release --quiet -- report --quick --fresh --out-dir "$report_dir"
