@@ -13,6 +13,8 @@
 //! * the simd-kernels sweep — scalar vs runtime-detected path for every
 //!   dispatched kernel across remainder-heavy widths (recorded to
 //!   `BENCH_simd.json`),
+//! * the observability primitives' per-call cost (histogram record,
+//!   tracing span with the flag off and on),
 //! * SVM solver throughput on surrogate data.
 //!
 //! Run:  `cargo bench --bench micro`
@@ -879,6 +881,56 @@ fn bench_pjrt_bucketed_coordinator() {
     println!("   {}", coord.stats().summary());
 }
 
+/// Cost of the observability primitives (the ISSUE 7 overhead story):
+/// a histogram record (paid on every serving reply), a disabled span
+/// (one relaxed atomic load + an inert guard — the always-on price in
+/// every transform/projection hot path) and an enabled span (two ring
+/// pushes). These per-call numbers back the "tracing off must not
+/// regress serve throughput" gate.
+fn bench_obs_overhead() {
+    use std::hint::black_box;
+    println!("\n== obs primitives: histogram record / span off / span on ==");
+    let iters = if fast() { 5 } else { 20 };
+    let mut table = Table::new(&["primitive", "per call"]);
+
+    let reps = 100_000u64;
+    let hist = rfdot::obs::histogram("bench.obs.hist");
+    let m = bench("histogram", 2, iters, || {
+        for i in 0..reps {
+            hist.record(black_box(i & 0xFFFF));
+        }
+    });
+    table.row(&["histogram.record".into(), fmt_duration(m.mean_s() / reps as f64)]);
+
+    let was = rfdot::obs::enabled();
+    rfdot::obs::set_enabled(false);
+    let m = bench("span-off", 2, iters, || {
+        for _ in 0..reps {
+            let span = rfdot::obs::span("bench.obs.span");
+            black_box(&span);
+        }
+    });
+    table.row(&["span (disabled)".into(), fmt_duration(m.mean_s() / reps as f64)]);
+
+    // Enabled path: smaller rep count so 2 events/span fit the ring,
+    // drained at the start of each timed call (the drain is part of
+    // the measurement, amortized over 16k spans — the real serving
+    // loop pays the same drain in its exporter).
+    rfdot::obs::set_enabled(true);
+    let reps_on = 16_384u64;
+    let m = bench("span-on", 2, iters, || {
+        let _ = rfdot::obs::trace::drain();
+        for _ in 0..reps_on {
+            let span = rfdot::obs::span("bench.obs.span");
+            black_box(&span);
+        }
+    });
+    table.row(&["span (enabled)".into(), fmt_duration(m.mean_s() / reps_on as f64)]);
+    rfdot::obs::set_enabled(was);
+    let _ = rfdot::obs::trace::drain();
+    table.print();
+}
+
 fn bench_solvers() {
     println!("\n== svm solver throughput (nursery surrogate, scale 0.05) ==");
     use rfdot::data::UciSurrogate;
@@ -933,7 +985,7 @@ fn main() {
         }
     }
 
-    let sections: [(&str, fn()); 12] = [
+    let sections: [(&str, fn()); 13] = [
         ("native-transform", bench_native_transform),
         ("parallel-sweep", bench_parallel_sweep),
         ("structured-sweep", bench_structured_sweep),
@@ -945,6 +997,7 @@ fn main() {
         ("serve-throughput", bench_serve_throughput),
         ("pjrt-coordinator", bench_pjrt_coordinator),
         ("pjrt-bucketed-coordinator", bench_pjrt_bucketed_coordinator),
+        ("obs-overhead", bench_obs_overhead),
         ("solvers", bench_solvers),
     ];
     let mut ran = 0;

@@ -278,6 +278,11 @@ pub fn run_row(config: &ExperimentConfig, d_rf: usize, d_h01: usize) -> Result<R
     if let Some(mode) = config.simd {
         crate::simd::set_mode(mode);
     }
+    // And for the tracing knob: None leaves the process-global enable
+    // flag (--trace / RFDOT_TRACE) untouched.
+    if let Some(on) = config.trace {
+        crate::obs::set_enabled(on);
+    }
     let prep = prepare(config)?;
     let exact = run_exact(&prep, prep.config.kernel.build(kernel_sigma2(&prep)));
     let rf = run_random_features(&prep, d_rf, false, 1);

@@ -51,6 +51,20 @@ fn parse_projection(args: &mut Args) -> Result<crate::structured::ProjectionKind
     crate::structured::ProjectionKind::parse(&args.str_flag("projection", "dense"))
 }
 
+/// Consume `--trace` and `--trace-out PATH`. Either turns the
+/// process-global [`crate::obs`] span flag on (an export path without
+/// spans would always be empty); absent, the flag keeps its
+/// `RFDOT_TRACE` / config resolution. Returns the export path
+/// (empty = no export).
+fn apply_trace(args: &mut Args) -> String {
+    let trace = args.switch("trace");
+    let out = args.str_flag("trace-out", "");
+    if trace || !out.is_empty() {
+        crate::obs::set_enabled(true);
+    }
+    out
+}
+
 /// `rfdot info` — engine and artifact inventory.
 pub fn info(args: &mut Args) -> Result<()> {
     let dir = args.str_flag("artifact-dir", "artifacts");
@@ -353,6 +367,7 @@ pub fn serve(args: &mut Args) -> Result<()> {
     // (the native backend's data-parallel fan-out).
     let intra_op_threads = args.usize_flag("threads", 1)?;
     apply_simd(args)?;
+    let trace_out = apply_trace(args);
     warn_unknown(args);
 
     if projection == crate::structured::ProjectionKind::Structured && !native {
@@ -410,12 +425,41 @@ pub fn serve(args: &mut Args) -> Result<()> {
     ));
 
     println!(
-        "serving {requests} requests from {clients} clients (backend: {}, payload: {}, \
-         simd: {})",
-        if native { "native" } else { "pjrt" },
-        if sparse { "sparse" } else { "dense" },
-        crate::simd::selected().as_str(),
+        "{}",
+        serve_config_line(
+            if native { "native" } else { "pjrt" },
+            workers,
+            shards,
+            max_batch,
+            intra_op_threads,
+            sparse,
+            !trace_out.is_empty() || crate::obs::enabled(),
+        )
     );
+    println!("serving {requests} requests from {clients} clients");
+
+    // Periodic progress: a monitor thread prints one interval-gated
+    // stats line per second while the clients run (sub-second runs stay
+    // quiet; the final summary below prints regardless).
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let monitor = {
+        let coord = coord.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut last = std::time::Instant::now();
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::park_timeout(Duration::from_millis(100));
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                if last.elapsed() >= Duration::from_secs(1) {
+                    println!("stats: {}", coord.stats().summary());
+                    last = std::time::Instant::now();
+                }
+            }
+        })
+    };
+
     let sw = Stopwatch::start();
     let per_client = requests / clients;
     let mut handles = Vec::new();
@@ -456,6 +500,9 @@ pub fn serve(args: &mut Args) -> Result<()> {
         total_rej += rej;
     }
     let dt = sw.elapsed_secs();
+    stop.store(true, Ordering::Relaxed);
+    monitor.thread().unpark();
+    monitor.join().expect("monitor thread");
     let stats = coord.stats();
     println!("completed {total_ok} ok, {total_rej} rejected in {}", bench::fmt_duration(dt));
     println!("throughput: {:.0} req/s", total_ok as f64 / dt.max(1e-9));
@@ -476,7 +523,50 @@ pub fn serve(args: &mut Args) -> Result<()> {
         );
     }
     assert_eq!(total_ok as u64, stats.completed.load(Ordering::Relaxed));
+    // Merged latency histogram across shards: the estimated tail
+    // quantiles the per-shard lines cannot show (each shard only sees
+    // its own jobs).
+    let merged = coord.merged_latency();
+    if !merged.is_empty() {
+        let s = merged.summary();
+        println!(
+            "latency (all shards): p50={:.0}us p90={:.0}us max={:.0}us (n={})",
+            s.p50, s.p90, s.max, s.n
+        );
+    }
+    if !trace_out.is_empty() {
+        let doc = crate::obs::trace::chrome_trace(&crate::obs::trace::drain());
+        std::fs::write(&trace_out, doc.pretty())?;
+        let check = crate::obs::trace::check_balanced(&doc)?;
+        println!(
+            "wrote {trace_out}: {} trace events ({} spans, {} threads)",
+            check.events, check.spans, check.threads
+        );
+    }
     Ok(())
+}
+
+/// The consolidated `rfdot serve` startup line: every knob shaping the
+/// run in one stable `key=value` row (split out so the format is
+/// testable). `shards == 0` prints the resolved work-stealing default
+/// (one shard per worker).
+fn serve_config_line(
+    backend: &str,
+    workers: usize,
+    shards: usize,
+    max_batch: usize,
+    intra_op_threads: usize,
+    sparse: bool,
+    trace: bool,
+) -> String {
+    let eff_shards = if shards == 0 { workers.max(1) } else { shards };
+    format!(
+        "serve config: backend={backend} workers={workers} shards={eff_shards} \
+         max_batch={max_batch} threads={intra_op_threads} payload={} simd={} trace={}",
+        if sparse { "sparse" } else { "dense" },
+        crate::simd::selected().as_str(),
+        if trace { "on" } else { "off" },
+    )
 }
 
 /// A human label for an array element in a bench JSON file, derived
@@ -525,13 +615,15 @@ fn count_measured_secs(v: &Json) -> usize {
 /// timing leaf present in both — keys containing `secs` (the
 /// seconds-per-op convention of every `BENCH_*.json` schema), where
 /// larger means slower. Null leaves (pending baselines not yet measured
-/// in this environment) are counted as skipped, never compared.
+/// in this environment) and leaves without a counterpart are never
+/// compared; their paths land in `skipped` so the report can list
+/// exactly what the gate did not cover.
 fn collect_bench_timings(
     path: &str,
     old: &Json,
     new: &Json,
     out: &mut Vec<(String, f64, f64)>,
-    skipped: &mut usize,
+    skipped: &mut Vec<String>,
 ) {
     match (old, new) {
         (Json::Obj(a), Json::Obj(b)) => {
@@ -545,7 +637,7 @@ fn collect_bench_timings(
                         // here would let a renamed/dropped metric fail
                         // the gate open.
                         if k.contains("secs") {
-                            *skipped += 1;
+                            skipped.push(p);
                         }
                         continue;
                     }
@@ -553,7 +645,7 @@ fn collect_bench_timings(
                 if k.contains("secs") {
                     match (va.as_f64(), vb.as_f64()) {
                         (Some(x), Some(y)) if x > 0.0 => out.push((p, x, y)),
-                        _ => *skipped += 1,
+                        _ => skipped.push(p),
                     }
                 } else {
                     collect_bench_timings(&p, va, vb, out, skipped);
@@ -581,13 +673,13 @@ fn collect_bench_timings(
                         Some(vb) => {
                             collect_bench_timings(&format!("{path}[{label}]"), va, vb, out, skipped)
                         }
-                        None => *skipped += 1,
+                        None => skipped.push(format!("{path}[{label}]")),
                     },
                     None => match b.get(i) {
                         Some(vb) => {
                             collect_bench_timings(&format!("{path}[{i}]"), va, vb, out, skipped)
                         }
-                        None => *skipped += 1,
+                        None => skipped.push(format!("{path}[{i}]")),
                     },
                 }
             }
@@ -627,16 +719,15 @@ pub fn bench_diff(args: &mut Args) -> Result<()> {
         _ => None,
     };
     let mut pairs = Vec::new();
-    let mut skipped = 0usize;
+    let mut skipped = Vec::new();
     collect_bench_timings("", &old, &new, &mut pairs, &mut skipped);
     // Metrics the old baseline measured but the walk never reached
     // (renamed/moved containers): surface them instead of comparing a
     // smaller universe in silence. Best-effort — `skipped` also counts
     // null leaves, so this only catches net losses.
     let measured_old = count_measured_secs(&old);
-    let unaccounted = measured_old.saturating_sub(pairs.len() + skipped);
+    let unaccounted = measured_old.saturating_sub(pairs.len() + skipped.len());
     if unaccounted > 0 {
-        skipped += unaccounted;
         println!(
             "warning: {unaccounted} measured timing metric(s) in {old_path} have no \
              counterpart in {new_path} (renamed or moved section?)"
@@ -659,8 +750,14 @@ pub fn bench_diff(args: &mut Args) -> Result<()> {
         }
     }
     t.print();
-    if skipped > 0 {
-        println!("({skipped} metric(s) skipped — unmeasured/pending or without a counterpart)");
+    let skipped_total = skipped.len() + unaccounted;
+    if skipped_total > 0 {
+        println!(
+            "({skipped_total} metric(s) skipped — unmeasured/pending or without a counterpart)"
+        );
+        for p in &skipped {
+            println!("  skipped: {p}");
+        }
     }
     if pairs.is_empty() {
         // A pending baseline (all nulls) legitimately compares clean;
@@ -697,6 +794,25 @@ pub fn bench_diff(args: &mut Args) -> Result<()> {
             regressions.len()
         )))
     }
+}
+
+/// `rfdot trace-check <trace.json>` — validate a Chrome `trace_event`
+/// export: the document must parse, carry a `traceEvents` array, and
+/// every `"B"` must be closed by a same-name `"E"` on its thread with
+/// nothing left open (the shape `rfdot serve --trace-out` guarantees).
+/// Prints a one-line summary; any violation exits nonzero — the CI
+/// validator for the serve tracing smoke.
+pub fn trace_check(args: &mut Args) -> Result<()> {
+    let usage = "rfdot trace-check <trace.json>";
+    let path = args.require_positional(0, usage)?;
+    warn_unknown(args);
+    let doc = Json::parse(&std::fs::read_to_string(&path)?)?;
+    let check = crate::obs::trace::check_balanced(&doc)?;
+    println!(
+        "trace-check: ok — {} events, {} spans, {} threads ({path})",
+        check.events, check.spans, check.threads
+    );
+    Ok(())
 }
 
 #[cfg(test)]
@@ -1098,6 +1214,87 @@ mod tests {
             pending.to_str().unwrap(),
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn serve_config_line_names_every_knob() {
+        // shards=0 resolves to the work-stealing default (one per
+        // worker); every knob appears as a stable key=value token.
+        let line = serve_config_line("native", 2, 0, 256, 1, true, false);
+        for needle in [
+            "backend=native",
+            "workers=2",
+            "shards=2",
+            "max_batch=256",
+            "threads=1",
+            "payload=sparse",
+            "simd=",
+            "trace=off",
+        ] {
+            assert!(line.contains(needle), "missing {needle:?} in {line:?}");
+        }
+        let explicit = serve_config_line("pjrt", 4, 3, 128, 2, false, true);
+        assert!(explicit.contains("shards=3"), "{explicit}");
+        assert!(explicit.contains("payload=dense"), "{explicit}");
+        assert!(explicit.contains("trace=on"), "{explicit}");
+    }
+
+    #[test]
+    fn bench_diff_lists_skipped_leaf_paths() {
+        // Null (pending) leaves and rows without a counterpart must
+        // surface by path, not just as an opaque count.
+        let old = Json::parse(
+            r#"{"other_secs": 2.0e-6, "sweep": {"samples": [
+                 {"map": "a", "secs": 1.0e-6},
+                 {"map": "b", "secs": null}
+               ]}}"#,
+        )
+        .unwrap();
+        let new = Json::parse(
+            r#"{"sweep": {"samples": [
+                 {"map": "a", "secs": 1.5e-6}
+               ]}}"#,
+        )
+        .unwrap();
+        let mut pairs = Vec::new();
+        let mut skipped = Vec::new();
+        collect_bench_timings("", &old, &new, &mut pairs, &mut skipped);
+        assert_eq!(pairs.len(), 1, "{pairs:?}");
+        assert!(skipped.contains(&"other_secs".to_string()), "{skipped:?}");
+        assert!(skipped.iter().any(|p| p.contains("map=b")), "{skipped:?}");
+        assert_eq!(skipped.len(), 2, "{skipped:?}");
+    }
+
+    #[test]
+    fn trace_check_validates_files() {
+        let dir = std::env::temp_dir().join("rfdot_trace_check_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.json");
+        std::fs::write(
+            &good,
+            r#"{"displayTimeUnit": "ms", "traceEvents": [
+                 {"cat": "rfdot", "name": "a", "ph": "B", "pid": 1, "tid": 1, "ts": 0.0},
+                 {"cat": "rfdot", "name": "a", "ph": "E", "pid": 1, "tid": 1, "ts": 2.5}
+               ]}"#,
+        )
+        .unwrap();
+        trace_check(&mut argv(&["trace-check", good.to_str().unwrap()])).unwrap();
+        // An unclosed begin fails through the same path CI uses.
+        let bad = dir.join("bad.json");
+        std::fs::write(
+            &bad,
+            r#"{"traceEvents": [
+                 {"name": "a", "ph": "B", "pid": 1, "tid": 1, "ts": 0.0}
+               ]}"#,
+        )
+        .unwrap();
+        assert!(trace_check(&mut argv(&["trace-check", bad.to_str().unwrap()])).is_err());
+        // Operand and readability errors are loud too.
+        assert!(trace_check(&mut argv(&["trace-check"])).is_err());
+        assert!(
+            trace_check(&mut argv(&["trace-check", "/nonexistent/trace.json"])).is_err()
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! rfdot transform [flags]        # featurize a LIBSVM file
 //! rfdot serve [flags]            # serving demo over the coordinator
 //! rfdot bench-diff A B [flags]   # regression gate over bench baselines
+//! rfdot trace-check FILE         # validate a Chrome trace_event export
 //! ```
 
 pub mod args;
@@ -30,6 +31,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "transform" => commands::transform(&mut args),
         "serve" => commands::serve(&mut args),
         "bench-diff" => commands::bench_diff(&mut args),
+        "trace-check" => commands::trace_check(&mut args),
         "help" | "" => {
             print!("{}", HELP);
             Ok(())
@@ -69,9 +71,14 @@ COMMANDS:
                   --requests 2000 --clients 4 --native
                   --workers 2 --shards 0  (0 = one work-stealing shard
                   per worker; 1 = the shared-queue baseline)
+                  --trace-out trace.json  (write a Chrome trace_event
+                  file of the run; implies --trace)
   bench-diff    compare two bench baseline JSON files and exit nonzero
                 on regression (the CI perf gate)
                   rfdot bench-diff old.json new.json --max-regress 5
+  trace-check   validate a Chrome trace_event JSON file: parses, has
+                traceEvents, and every begin pairs with its end
+                  rfdot trace-check trace.json
   help          this message
 
   --projection dense|structured
@@ -88,4 +95,8 @@ COMMANDS:
                 default, or the RFDOT_SIMD env var) picks the best
                 runtime-detected path (AVX2+FMA / NEON); scalar forces
                 the portable oracle kernels everywhere.
+  --trace       enable tracing spans (also the RFDOT_TRACE env var or
+                the \"trace\" config field); near-zero cost when off.
+                Spans cover submit -> batch -> transform -> reply plus
+                every per-family transform/projection hot path.
 ";

@@ -130,6 +130,12 @@ pub struct ExperimentConfig {
     /// `"simd": "scalar" | "auto"`); `None` leaves the process-global
     /// knob untouched (auto-detect or `RFDOT_SIMD`).
     pub simd: Option<crate::simd::SimdMode>,
+    /// Tracing-span override for the [`crate::obs`] layer (JSON:
+    /// `"trace": true | false`); `None` leaves the process-global
+    /// enable flag untouched (`--trace` / `RFDOT_TRACE`). Like `simd`,
+    /// the knob is only *applied* by consumers — parsing never mutates
+    /// the global.
+    pub trace: Option<bool>,
 }
 
 impl Default for ExperimentConfig {
@@ -149,6 +155,7 @@ impl Default for ExperimentConfig {
             projection: ProjectionKind::Dense,
             sparse: false,
             simd: None,
+            trace: None,
         }
     }
 }
@@ -199,6 +206,9 @@ impl ExperimentConfig {
         }
         if let Some(s) = v.get("simd").and_then(Json::as_str) {
             cfg.simd = Some(crate::simd::SimdMode::parse(s)?);
+        }
+        if let Some(b) = v.get("trace").and_then(Json::as_bool) {
+            cfg.trace = Some(b);
         }
         cfg.validate()?;
         Ok(cfg)
@@ -543,6 +553,12 @@ mod tests {
         let forced = ExperimentConfig::from_json(r#"{"simd": "scalar"}"#).unwrap();
         assert_eq!(forced.simd, Some(crate::simd::SimdMode::Scalar));
         assert!(ExperimentConfig::from_json(r#"{"simd": "avx512"}"#).is_err());
+        // Same contract for the trace knob: parsed, never applied here.
+        assert_eq!(cfg.trace, None);
+        let traced = ExperimentConfig::from_json(r#"{"trace": true}"#).unwrap();
+        assert_eq!(traced.trace, Some(true));
+        let untraced = ExperimentConfig::from_json(r#"{"trace": false}"#).unwrap();
+        assert_eq!(untraced.trace, Some(false));
     }
 
     #[test]

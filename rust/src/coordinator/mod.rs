@@ -65,10 +65,18 @@
 //!   exactly-once contract are shared and the reply equals the dense
 //!   submission of the densified vector.
 //! * **Per-shard metrics** — every shard records batches, items, steal
-//!   counts and true nearest-rank latency percentiles
-//!   ([`crate::metrics::SampleBuffer`]), surfaced by
-//!   [`Coordinator::shard_snapshots`], `rfdot serve` and the `rfdot
-//!   report` serving panel.
+//!   counts and latency into a log-bucketed, mergeable
+//!   [`crate::obs::Histogram`] that never stops recording (steady-state
+//!   latency, not just a warm-up window), surfaced by
+//!   [`Coordinator::shard_snapshots`], [`Coordinator::merged_latency`],
+//!   `rfdot serve` and the `rfdot report` serving panel.
+//! * **Tracing** — when the process-wide [`crate::obs`] flag is on
+//!   (`--trace` / `RFDOT_TRACE`), the submit, batch-formation,
+//!   steal, backend-execution and reply-delivery stages each record
+//!   spans (`serve.submit`, `serve.batch_form`, `serve.steal`,
+//!   `serve.run_batch`, `serve.reply`), exportable as Chrome trace
+//!   JSON via `rfdot serve --trace-out`. Disabled, each span site is
+//!   one relaxed atomic load.
 
 pub mod backend;
 
@@ -78,7 +86,8 @@ pub use backend::{
     PjrtTransformBackend, PjrtTransformFactory,
 };
 
-use crate::metrics::{SampleBuffer, Stats, Summary};
+use crate::metrics::{Stats, Summary};
+use crate::obs;
 use crate::{Error, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -87,9 +96,6 @@ use std::sync::mpsc::{
 };
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
-
-/// Per-shard latency window (samples kept for the percentile summary).
-const SHARD_LATENCY_CAP: usize = 65_536;
 
 /// Tolerate mutex poisoning: the protected state (job deques, sample
 /// vecs) is valid at every instruction boundary, and the shutdown path
@@ -341,15 +347,18 @@ impl BatchTicket {
     }
 }
 
-/// Per-shard serving metrics: batch/item/steal counters plus a raw
-/// latency window for true percentiles. Batches are attributed to the
-/// shard they were *queued* on; `steals` counts how many of them were
-/// executed by a worker whose home shard is elsewhere.
+/// Per-shard serving metrics: batch/item/steal counters plus a
+/// log-bucketed latency histogram ([`obs::Histogram`]: bounded memory,
+/// records for the whole process lifetime, mergeable across shards —
+/// unlike the freeze-after-cap `SampleBuffer` it replaced). Batches
+/// are attributed to the shard they were *queued* on; `steals` counts
+/// how many of them were executed by a worker whose home shard is
+/// elsewhere.
 struct ShardStats {
     batches: AtomicU64,
     items: AtomicU64,
     steals: AtomicU64,
-    latency_us: SampleBuffer,
+    latency_us: obs::Histogram,
 }
 
 impl ShardStats {
@@ -358,7 +367,7 @@ impl ShardStats {
             batches: AtomicU64::new(0),
             items: AtomicU64::new(0),
             steals: AtomicU64::new(0),
-            latency_us: SampleBuffer::new(SHARD_LATENCY_CAP),
+            latency_us: obs::Histogram::new(),
         }
     }
 }
@@ -374,8 +383,9 @@ pub struct ShardSnapshot {
     pub items: u64,
     /// Batches of this shard executed by another shard's worker.
     pub steals: u64,
-    /// Nearest-rank percentile summary of this shard's request
-    /// latencies, in microseconds.
+    /// Percentile summary of this shard's request latencies in
+    /// microseconds — exact `n`/`mean`/`min`/`max`, log-bucket-estimated
+    /// `p50`/`p90` (see [`obs::Histogram`] for the error bound).
     pub latency_us: Summary,
 }
 
@@ -671,6 +681,7 @@ impl Coordinator {
         callback: impl FnOnce(Result<Vec<f32>>) + Send + 'static,
     ) -> Result<()> {
         self.check_dense(&x)?;
+        let _span = obs::span("serve.submit");
         self.enqueue(Job::new(Payload::Dense(x), Reply::Callback(Box::new(callback))))
     }
 
@@ -704,6 +715,7 @@ impl Coordinator {
     }
 
     fn submit_batch_payloads(&self, payloads: Vec<Payload>) -> BatchTicket {
+        let _span = obs::span("serve.submit");
         let n = payloads.len();
         let (tx, rx) = sync_channel::<(u32, Result<Vec<f32>>)>(n.max(1));
         let mut results: Vec<Option<Result<Vec<f32>>>> = Vec::with_capacity(n);
@@ -807,6 +819,7 @@ impl Coordinator {
     }
 
     fn submit_payload(&self, payload: Payload) -> Result<Ticket> {
+        let _span = obs::span("serve.submit");
         let (reply_tx, reply_rx) = sync_channel(1);
         self.enqueue(Job::new(payload, Reply::Channel(reply_tx)))?;
         Ok(Ticket { rx: reply_rx, taken: false })
@@ -858,7 +871,7 @@ impl Coordinator {
     }
 
     /// Point-in-time per-shard metrics (batches, items, steal counts,
-    /// nearest-rank latency percentiles), in shard order.
+    /// latency percentiles), in shard order.
     pub fn shard_snapshots(&self) -> Vec<ShardSnapshot> {
         self.queues
             .shards
@@ -872,6 +885,17 @@ impl Coordinator {
                 latency_us: s.stats.latency_us.summary(),
             })
             .collect()
+    }
+
+    /// Pool-wide latency histogram: every shard's histogram merged
+    /// into one (bucket-count merging is exact and associative — see
+    /// [`obs::Histogram::merge_from`]).
+    pub fn merged_latency(&self) -> obs::Histogram {
+        let merged = obs::Histogram::new();
+        for s in &self.queues.shards {
+            merged.merge_from(&s.stats.latency_us);
+        }
+        merged
     }
 
     /// Stop accepting requests, drain in-flight batches, join threads.
@@ -924,6 +948,7 @@ fn batcher_loop(
                 return;
             }
         };
+        let _span = obs::span("serve.batch_form");
         let mut batch = vec![first];
         let deadline = Instant::now() + max_wait;
         while batch.len() < max_batch {
@@ -968,15 +993,13 @@ fn worker_loop(
         b.set_intra_op_threads(intra_op_threads);
     }
     let spec = factory.spec();
-    // Worker-local latency accumulator: one shard-buffer lock per
-    // batch, never per reply (and no steady-state allocation).
-    let mut lat_buf: Vec<f64> = Vec::new();
     while let Some((shard, batch)) = queues.pop(home) {
         let shard_stats = &queues.shards[shard].stats;
         shard_stats.batches.fetch_add(1, Ordering::Relaxed);
         shard_stats.items.fetch_add(batch.len() as u64, Ordering::Relaxed);
         if shard != home {
             shard_stats.steals.fetch_add(1, Ordering::Relaxed);
+            obs::trace::mark("serve.steal");
         }
         let backend = match &backend {
             Ok(b) => b,
@@ -996,18 +1019,22 @@ fn worker_loop(
             // Rows start zeroed, so sparse payloads only scatter.
             job.x.scatter_into(x.row_mut(i));
         }
-        match backend.run_batch(&x) {
+        let run = {
+            let _span = obs::span("serve.run_batch");
+            backend.run_batch(&x)
+        };
+        match run {
             Ok(out) => {
-                lat_buf.clear();
+                let _span = obs::span("serve.reply");
                 for (i, mut job) in batch.into_iter().enumerate() {
                     let row = out.row(i).to_vec();
                     stats.completed.fetch_add(1, Ordering::Relaxed);
                     let lat = job.submitted.elapsed();
                     stats.record_latency(lat);
-                    lat_buf.push(lat.as_secs_f64() * 1e6);
+                    // Lock-free histogram record, per reply.
+                    shard_stats.latency_us.record_f64(lat.as_secs_f64() * 1e6);
                     job.respond(Ok(row));
                 }
-                shard_stats.latency_us.record_many(&lat_buf);
             }
             Err(e) => {
                 stats.backend_errors.fetch_add(1, Ordering::Relaxed);
@@ -1018,18 +1045,14 @@ fn worker_loop(
 }
 
 fn answer_all_err(batch: Vec<Job>, msg: &str, stats: &Stats, shard: Option<&ShardStats>) {
-    let mut lats = Vec::with_capacity(if shard.is_some() { batch.len() } else { 0 });
     for mut job in batch {
         stats.completed.fetch_add(1, Ordering::Relaxed);
         let lat = job.submitted.elapsed();
         stats.record_latency(lat);
-        if shard.is_some() {
-            lats.push(lat.as_secs_f64() * 1e6);
+        if let Some(s) = shard {
+            s.latency_us.record_f64(lat.as_secs_f64() * 1e6);
         }
         job.respond(Err(Error::Coordinator(msg.to_string())));
-    }
-    if let Some(s) = shard {
-        s.latency_us.record_many(&lats);
     }
 }
 

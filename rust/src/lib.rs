@@ -47,6 +47,14 @@
 //!   RFF cosine pass and the CSR reductions, overridable with the
 //!   `--simd scalar|auto` knob; within a fixed path the sparse/dense
 //!   and parallel/serial bit-parity contracts still hold.
+//! * [`obs`] — the observability layer: always-on counters/gauges and
+//!   mergeable log-bucketed histograms (`obs::Histogram`, the serving
+//!   layer's steady-state latency store), tracing spans
+//!   (`obs::span`, enabled by `--trace` / `RFDOT_TRACE` / config
+//!   `"trace"`, near-zero cost when off) threaded through the
+//!   coordinator and every transform/projection hot path, and
+//!   deterministic JSON export including a Chrome `trace_event`
+//!   emitter (`rfdot serve --trace-out`).
 //! * [`bench`], [`prop`], [`metrics`], [`config`], [`rng`], [`linalg`] —
 //!   infrastructure substrates (no external crates are reachable in the
 //!   build environment, so benchmarking, property testing, config
@@ -80,6 +88,7 @@ pub mod linalg;
 pub mod maclaurin;
 pub mod metrics;
 pub mod nystrom;
+pub mod obs;
 pub mod parallel;
 pub mod prop;
 pub mod report;

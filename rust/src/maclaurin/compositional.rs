@@ -125,6 +125,7 @@ impl<F: ScalarMapFactory> FeatureMap for CompositionalMaclaurin<F> {
     }
 
     fn transform_into(&self, x: &[f32], out: &mut [f32]) {
+        let _span = crate::obs::span("transform.compositional");
         assert_eq!(x.len(), self.input_dim(), "input dim mismatch");
         assert_eq!(out.len(), self.n_features, "output dim mismatch");
         for i in 0..self.n_features {

@@ -587,6 +587,7 @@ impl FeatureMap for RandomMaclaurin {
     /// product. Bit-identical to [`FeatureMap::transform_into`] (which
     /// delegates here with a throwaway scratch).
     fn transform_into_scratch(&self, x: &[f32], out: &mut [f32], scratch: &mut Scratch) {
+        let _span = crate::obs::span("transform.rm");
         assert_eq!(x.len(), self.d, "input dim mismatch");
         assert_eq!(out.len(), self.output_dim(), "output dim mismatch");
         let prefix = if self.config.h01 {
@@ -618,6 +619,7 @@ impl FeatureMap for RandomMaclaurin {
         x: &crate::linalg::Matrix,
         threads: usize,
     ) -> crate::linalg::Matrix {
+        let _span = crate::obs::span("transform.rm");
         assert_eq!(x.cols(), self.d, "input dim mismatch");
         let b = x.rows();
         let mut out = crate::linalg::Matrix::zeros(b, self.output_dim());
@@ -666,6 +668,7 @@ impl FeatureMap for RandomMaclaurin {
         out: &mut [f32],
         scratch: &mut Scratch,
     ) {
+        let _span = crate::obs::span("transform.rm");
         assert_eq!(x.dim, self.d, "input dim mismatch");
         assert_eq!(out.len(), self.output_dim(), "output dim mismatch");
         let prefix = if self.config.h01 {
@@ -689,6 +692,7 @@ impl FeatureMap for RandomMaclaurin {
         x: &crate::linalg::SparseMatrix,
         threads: usize,
     ) -> crate::linalg::Matrix {
+        let _span = crate::obs::span("transform.rm");
         assert_eq!(x.cols(), self.d, "input dim mismatch");
         let b = x.rows();
         let mut out = crate::linalg::Matrix::zeros(b, self.output_dim());

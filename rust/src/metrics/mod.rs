@@ -151,27 +151,34 @@ impl Summary {
     }
 }
 
-/// A bounded, shareable raw-sample recorder — the backing store of the
-/// per-shard latency [`Summary`] percentiles in the serving layer
-/// ([`crate::coordinator`]'s `ShardStats`).
+/// A bounded, shareable raw-sample recorder for benches and one-shot
+/// measurements that want true nearest-rank percentiles over the
+/// actual samples.
 ///
 /// Unlike the log-bucketed histogram in [`Stats`] (whose quantiles are
-/// power-of-two upper edges), this keeps the actual samples so
-/// [`SampleBuffer::summary`] reports true nearest-rank percentiles. To
-/// bound memory under open-ended serving, recording stops after `cap`
-/// samples (the warm-up window, which is what serving dashboards want
-/// anyway); `len()` vs `cap` tells an observer whether the window is
-/// saturated.
+/// power-of-two upper edges), this keeps the raw samples, so to bound
+/// memory recording stops after `cap` samples — a warm-up window, not
+/// a steady-state view. Overflow is *visible*: every sample dropped
+/// past the cap is counted and exposed via [`SampleBuffer::dropped`],
+/// so a saturated window can never masquerade as a complete one. The
+/// serving layer's per-shard latency no longer lives here — it records
+/// into [`crate::obs::Histogram`], which has bounded memory *and*
+/// never stops recording.
 #[derive(Debug)]
 pub struct SampleBuffer {
     cap: usize,
     samples: std::sync::Mutex<Vec<f64>>,
+    dropped: AtomicU64,
 }
 
 impl SampleBuffer {
     /// An empty buffer that keeps at most `cap` samples.
     pub fn new(cap: usize) -> SampleBuffer {
-        SampleBuffer { cap, samples: std::sync::Mutex::new(Vec::new()) }
+        SampleBuffer {
+            cap,
+            samples: std::sync::Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+        }
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, Vec<f64>> {
@@ -180,28 +187,37 @@ impl SampleBuffer {
         self.samples.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
     }
 
-    /// Record one sample (dropped silently once the buffer is full).
+    /// Record one sample (counted as dropped once the buffer is full).
     pub fn record(&self, v: f64) {
         self.record_many(std::slice::from_ref(&v));
     }
 
-    /// Record a batch of samples under one lock acquisition — the
-    /// serving hot loop records per *batch*, so per-item replies never
-    /// contend on this mutex (which would bias the shared-queue
-    /// topology baseline the serve bench compares against). Samples
-    /// beyond the cap are dropped silently.
+    /// Record a batch of samples under one lock acquisition, so
+    /// per-item recorders never contend on this mutex. Samples beyond
+    /// the cap are dropped — and counted, see [`SampleBuffer::dropped`].
     pub fn record_many(&self, vs: &[f64]) {
         if vs.is_empty() {
             return;
         }
         let mut s = self.lock();
         let room = self.cap.saturating_sub(s.len());
-        s.extend_from_slice(&vs[..vs.len().min(room)]);
+        let kept = vs.len().min(room);
+        s.extend_from_slice(&vs[..kept]);
+        if kept < vs.len() {
+            self.dropped.fetch_add((vs.len() - kept) as u64, Ordering::Relaxed);
+        }
     }
 
     /// Samples recorded so far (≤ the construction cap).
     pub fn len(&self) -> usize {
         self.lock().len()
+    }
+
+    /// Samples discarded because the buffer was already at capacity.
+    /// Nonzero means [`SampleBuffer::summary`] describes only the
+    /// warm-up window, not the full run.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
     }
 
     /// True when nothing has been recorded.
@@ -316,15 +332,22 @@ mod tests {
         let b = SampleBuffer::new(3);
         assert!(b.is_empty());
         assert_eq!(b.summary().n, 0);
+        assert_eq!(b.dropped(), 0);
         b.record(30.0);
         b.record_many(&[10.0, 20.0, 99.0]);
-        // The fourth sample fell off the cap.
+        // The fourth sample fell off the cap — visibly.
         assert_eq!(b.len(), 3);
+        assert_eq!(b.dropped(), 1);
         let s = b.summary();
         assert_eq!(s.n, 3);
         assert_eq!(s.min, 10.0);
         assert_eq!(s.max, 30.0);
         assert_eq!(s.p50, 20.0);
+        // Further records past the cap keep counting.
+        b.record(1.0);
+        b.record_many(&[2.0, 3.0]);
+        assert_eq!(b.dropped(), 4);
+        assert_eq!(b.len(), 3);
     }
 
     #[test]

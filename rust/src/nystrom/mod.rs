@@ -64,6 +64,7 @@ impl FeatureMap for Nystrom {
     }
 
     fn transform_into(&self, x: &[f32], out: &mut [f32]) {
+        let _span = crate::obs::span("transform.nystrom");
         assert_eq!(x.len(), self.input_dim());
         assert_eq!(out.len(), self.output_dim());
         let m = self.landmarks.rows();

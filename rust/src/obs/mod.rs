@@ -1,0 +1,237 @@
+//! Observability: always-on metrics, tracing spans and structured
+//! export for the transform + serving stack.
+//!
+//! Three pieces, threaded through every hot path:
+//!
+//! 1. **Metrics** — named [`Counter`]s, [`Gauge`]s and log-bucketed
+//!    [`Histogram`]s (base-2 octaves with linear sub-buckets, bounded
+//!    memory, mergeable across shards — `hist.rs`). The serving layer's
+//!    per-shard latency moved here from the freeze-after-cap
+//!    [`crate::metrics::SampleBuffer`], so steady-state latency is
+//!    recorded for the whole life of the process, not just a warm-up
+//!    window.
+//! 2. **Tracing spans** — [`span`] returns an RAII guard that records
+//!    begin/end events with monotonic timestamps into a per-thread ring
+//!    buffer (`trace.rs`), drained centrally. Near-zero cost when
+//!    disabled: one relaxed atomic load and an inert guard, no
+//!    allocation (asserted by `rust/tests/alloc_free_transform.rs`).
+//! 3. **Export** — [`MetricsSnapshot`] renders the registry to
+//!    deterministic JSON via [`Json::pretty`], and
+//!    [`trace::chrome_trace`] emits Chrome `trace_event` JSON
+//!    (`rfdot serve --trace-out trace.json`, loadable in
+//!    `chrome://tracing` / Perfetto).
+//!
+//! # The enable flag
+//!
+//! Tracing follows the same process-wide knob pattern as
+//! [`crate::simd`] and [`crate::parallel`]: `--trace` on the CLI, the
+//! `RFDOT_TRACE` environment variable (any value other than empty,
+//! `0` or `false` enables), or `"trace": true` in a config file —
+//! resolved lazily on first use, overridable via [`set_enabled`].
+//! Metrics (counters/gauges/histograms) are *always on*: they are a
+//! handful of relaxed atomic operations and never allocate on the
+//! record path.
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::Histogram;
+pub use trace::{span, Span};
+
+use crate::config::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+/// Process-wide trace enable flag. 0 = unresolved (consult
+/// `RFDOT_TRACE` on first use), 1 = off, 2 = on.
+static ENABLED: AtomicU8 = AtomicU8::new(0);
+
+/// Is tracing enabled? One relaxed atomic load on the hot path; the
+/// first call resolves the `RFDOT_TRACE` environment variable.
+pub fn enabled() -> bool {
+    match ENABLED.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => {
+            let on = std::env::var("RFDOT_TRACE")
+                .map(|s| {
+                    let t = s.trim();
+                    !t.is_empty() && t != "0" && !t.eq_ignore_ascii_case("false")
+                })
+                .unwrap_or(false);
+            // Benign race: every initializer computes the same value.
+            ENABLED.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Override the trace flag (the CLI's `--trace` and config `"trace"`
+/// call this; tests toggle it explicitly).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// A named monotonic counter (relaxed atomics, never allocates).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A named point-in-time value (relaxed atomics, never allocates).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The process-global registry of named metrics. Registration locks a
+/// mutex once per *name* (the returned `Arc` is cached by the caller);
+/// recording through the returned handles is lock-free.
+#[derive(Debug)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<&'static str, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<&'static str, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<&'static str, Arc<Histogram>>>,
+}
+
+static REGISTRY: Registry = Registry {
+    counters: Mutex::new(BTreeMap::new()),
+    gauges: Mutex::new(BTreeMap::new()),
+    histograms: Mutex::new(BTreeMap::new()),
+};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // Tolerate poisoning: metrics must never compound a failure.
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The process-global metric registry.
+pub fn registry() -> &'static Registry {
+    &REGISTRY
+}
+
+/// Get or create the named counter.
+pub fn counter(name: &'static str) -> Arc<Counter> {
+    lock(&REGISTRY.counters).entry(name).or_default().clone()
+}
+
+/// Get or create the named gauge.
+pub fn gauge(name: &'static str) -> Arc<Gauge> {
+    lock(&REGISTRY.gauges).entry(name).or_default().clone()
+}
+
+/// Get or create the named histogram.
+pub fn histogram(name: &'static str) -> Arc<Histogram> {
+    lock(&REGISTRY.histograms)
+        .entry(name)
+        .or_insert_with(|| Arc::new(Histogram::new()))
+        .clone()
+}
+
+/// A point-in-time copy of every registered metric, renderable to
+/// deterministic JSON (object keys come out in `BTreeMap` order, so
+/// equal snapshots produce byte-identical documents).
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, crate::metrics::Summary>,
+}
+
+impl MetricsSnapshot {
+    /// Snapshot the global registry.
+    pub fn collect() -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: lock(&REGISTRY.counters)
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.get()))
+                .collect(),
+            gauges: lock(&REGISTRY.gauges)
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.get()))
+                .collect(),
+            histograms: lock(&REGISTRY.histograms)
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.summary()))
+                .collect(),
+        }
+    }
+
+    /// Deterministic JSON rendering (see [`Json::pretty`]).
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (k, v) in &self.counters {
+            counters.insert(k.clone(), Json::Num(*v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, v) in &self.gauges {
+            gauges.insert(k.clone(), Json::Num(*v as f64));
+        }
+        let mut hists = BTreeMap::new();
+        for (k, s) in &self.histograms {
+            let mut h = BTreeMap::new();
+            h.insert("n".to_string(), Json::Num(s.n as f64));
+            h.insert("mean".to_string(), Json::Num(s.mean));
+            h.insert("min".to_string(), Json::Num(s.min));
+            h.insert("p50".to_string(), Json::Num(s.p50));
+            h.insert("p90".to_string(), Json::Num(s.p90));
+            h.insert("max".to_string(), Json::Num(s.max));
+            hists.insert(k.clone(), Json::Obj(h));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("counters".to_string(), Json::Obj(counters));
+        doc.insert("gauges".to_string(), Json::Obj(gauges));
+        doc.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let c = counter("test.obs.counter");
+        c.add(2);
+        c.add(3);
+        assert_eq!(c.get(), 5);
+        // Same name, same handle.
+        assert_eq!(counter("test.obs.counter").get(), 5);
+        let g = gauge("test.obs.gauge");
+        g.set(-7);
+        assert_eq!(gauge("test.obs.gauge").get(), -7);
+    }
+
+    #[test]
+    fn snapshot_renders_deterministic_json() {
+        counter("test.obs.snap").add(1);
+        gauge("test.obs.snap_gauge").set(4);
+        histogram("test.obs.snap_hist").record(100);
+        let snap = MetricsSnapshot::collect();
+        let json = snap.to_json().pretty();
+        assert_eq!(json, snap.to_json().pretty(), "rendering must be stable");
+        assert!(json.contains("\"test.obs.snap\": 1"), "{json}");
+        assert!(json.contains("\"test.obs.snap_gauge\": 4"), "{json}");
+        assert!(json.contains("\"test.obs.snap_hist\""), "{json}");
+        // And it parses back through the in-tree parser.
+        crate::config::json::Json::parse(&json).unwrap();
+    }
+}

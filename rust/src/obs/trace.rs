@@ -1,0 +1,405 @@
+//! Tracing spans: RAII guards recording begin/end events into
+//! per-thread ring buffers, drained centrally, exportable as Chrome
+//! `trace_event` JSON.
+//!
+//! # Recording
+//!
+//! [`span`] checks the process-wide enable flag ([`super::enabled`],
+//! one relaxed atomic load) and, when tracing is off, returns an inert
+//! guard — no allocation, no time source, nothing observable (pinned
+//! by `rust/tests/alloc_free_transform.rs`). When tracing is on, the
+//! guard records a `Begin` event at construction and an `End` event on
+//! drop into the calling thread's ring.
+//!
+//! Each ring is owned by exactly one writer thread and pre-allocates
+//! its full capacity ([`RING_CAP`] events), so the steady-state record
+//! path never allocates either. The writer never blocks: it `try_lock`s
+//! its own ring (the only possible contender is a central drain) and
+//! counts the event as dropped instead of waiting. When a ring fills,
+//! the *newest* events are dropped and counted — the retained prefix
+//! stays begin/end-consistent, so exports remain balanced.
+//!
+//! # Export
+//!
+//! [`drain`] empties every ring (events survive their thread: rings
+//! are registered globally and kept alive by `Arc`).
+//! [`chrome_trace`] pairs begin/end events per thread and emits only
+//! matched pairs as `"B"`/`"E"` `traceEvents` — balanced by
+//! construction, loadable in `chrome://tracing` / Perfetto, and
+//! checkable offline with `rfdot trace-check`.
+
+use crate::config::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+/// Events retained per thread ring (~1.5 MiB per traced thread).
+pub const RING_CAP: usize = 65_536;
+
+/// Begin or end of a span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Begin,
+    End,
+}
+
+/// One recorded trace event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Span name (static: span names are a fixed taxonomy, see
+    /// `ARCHITECTURE.md`).
+    pub name: &'static str,
+    pub kind: EventKind,
+    /// Nanoseconds since the shared process trace epoch.
+    pub t_ns: u64,
+}
+
+/// One thread's event ring. Single writer (the owning thread), drained
+/// centrally.
+#[derive(Debug)]
+struct ThreadRing {
+    tid: u64,
+    epoch: Instant,
+    dropped: AtomicU64,
+    buf: Mutex<Vec<Event>>,
+}
+
+impl ThreadRing {
+    fn record(&self, name: &'static str, kind: EventKind) {
+        let t_ns = self.epoch.elapsed().as_nanos() as u64;
+        match self.buf.try_lock() {
+            Ok(mut buf) => {
+                if buf.len() < RING_CAP {
+                    buf.push(Event { name, kind, t_ns });
+                } else {
+                    // Drop-newest: the retained prefix keeps its
+                    // begin/end structure intact.
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // A drain holds the lock; never block the hot path.
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+static RINGS: Mutex<Vec<Arc<ThreadRing>>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static EPOCH: Mutex<Option<Instant>> = Mutex::new(None);
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The process-wide trace epoch, fixed on first use so timestamps from
+/// different threads share one time base.
+fn shared_epoch() -> Instant {
+    *lock(&EPOCH).get_or_insert_with(Instant::now)
+}
+
+thread_local! {
+    static LOCAL: Arc<ThreadRing> = {
+        let ring = Arc::new(ThreadRing {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            epoch: shared_epoch(),
+            dropped: AtomicU64::new(0),
+            buf: Mutex::new(Vec::with_capacity(RING_CAP)),
+        });
+        lock(&RINGS).push(ring.clone());
+        ring
+    };
+}
+
+fn record(name: &'static str, kind: EventKind) {
+    // `try_with` tolerates TLS teardown: a span on a dying thread is
+    // silently not recorded rather than panicking.
+    let _ = LOCAL.try_with(|r| r.record(name, kind));
+}
+
+/// RAII span guard: see [`span`].
+#[must_use = "a span measures the scope it is bound to; bind it to a named guard"]
+#[derive(Debug)]
+pub struct Span {
+    name: &'static str,
+    armed: bool,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.armed {
+            record(self.name, EventKind::End);
+        }
+    }
+}
+
+/// Open a span covering the enclosing scope:
+///
+/// ```
+/// let _span = rfdot::obs::span("transform.rm");
+/// // ... traced work ...
+/// ```
+///
+/// When tracing is disabled this is one relaxed atomic load and an
+/// inert guard (no allocation); when enabled, a `Begin` event is
+/// recorded now and the matching `End` when the guard drops.
+pub fn span(name: &'static str) -> Span {
+    if !super::enabled() {
+        return Span { name, armed: false };
+    }
+    record(name, EventKind::Begin);
+    Span { name, armed: true }
+}
+
+/// Record an instantaneous marker (a zero-length span) — used for
+/// point events like a work-steal.
+pub fn mark(name: &'static str) {
+    if super::enabled() {
+        record(name, EventKind::Begin);
+        record(name, EventKind::End);
+    }
+}
+
+/// Everything one thread recorded since the last drain.
+#[derive(Clone, Debug)]
+pub struct ThreadEvents {
+    pub tid: u64,
+    /// Events lost to ring overflow or drain contention.
+    pub dropped: u64,
+    pub events: Vec<Event>,
+}
+
+/// Empty every thread ring and return the events, ordered by thread
+/// id. Rings stay registered (and keep their capacity), so tracing
+/// continues seamlessly after a drain.
+pub fn drain() -> Vec<ThreadEvents> {
+    let rings: Vec<Arc<ThreadRing>> = lock(&RINGS).clone();
+    let mut out: Vec<ThreadEvents> = rings
+        .iter()
+        .map(|r| ThreadEvents {
+            tid: r.tid,
+            dropped: r.dropped.load(Ordering::Relaxed),
+            events: lock(&r.buf).drain(..).collect(),
+        })
+        .collect();
+    out.sort_by_key(|t| t.tid);
+    out
+}
+
+/// Render drained events as a Chrome `trace_event` document. Begin/end
+/// events are paired per thread with a name-checked stack and only
+/// matched pairs are emitted, so the output always contains balanced
+/// `"B"`/`"E"` events (unpaired remnants of ring overflow are
+/// discarded).
+pub fn chrome_trace(threads: &[ThreadEvents]) -> Json {
+    let mut trace_events = Vec::new();
+    for t in threads {
+        let mut matched = vec![false; t.events.len()];
+        let mut stack: Vec<usize> = Vec::new();
+        for (i, e) in t.events.iter().enumerate() {
+            match e.kind {
+                EventKind::Begin => stack.push(i),
+                EventKind::End => {
+                    if let Some(&j) = stack.last() {
+                        if t.events[j].name == e.name {
+                            stack.pop();
+                            matched[j] = true;
+                            matched[i] = true;
+                        }
+                    }
+                }
+            }
+        }
+        for (i, e) in t.events.iter().enumerate() {
+            if !matched[i] {
+                continue;
+            }
+            let mut m = BTreeMap::new();
+            m.insert("cat".to_string(), Json::Str("rfdot".to_string()));
+            m.insert("name".to_string(), Json::Str(e.name.to_string()));
+            m.insert(
+                "ph".to_string(),
+                Json::Str(
+                    match e.kind {
+                        EventKind::Begin => "B",
+                        EventKind::End => "E",
+                    }
+                    .to_string(),
+                ),
+            );
+            m.insert("pid".to_string(), Json::Num(1.0));
+            m.insert("tid".to_string(), Json::Num(t.tid as f64));
+            m.insert("ts".to_string(), Json::Num(e.t_ns as f64 / 1000.0));
+            trace_events.push(Json::Obj(m));
+        }
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    doc.insert("traceEvents".to_string(), Json::Arr(trace_events));
+    Json::Obj(doc)
+}
+
+/// Statistics of a validated Chrome trace document.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceCheck {
+    /// Total `traceEvents` entries.
+    pub events: usize,
+    /// Matched begin/end pairs.
+    pub spans: usize,
+    /// Distinct thread ids.
+    pub threads: usize,
+}
+
+/// Validate a Chrome `trace_event` document: every `"B"` must be
+/// closed by a same-name `"E"` on the same `pid`/`tid`, with nothing
+/// left open. This is the `rfdot trace-check` gate CI runs on the file
+/// `rfdot serve --trace-out` writes.
+pub fn check_balanced(doc: &Json) -> Result<TraceCheck> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Config("trace document has no traceEvents array".into()))?;
+    let mut stacks: BTreeMap<(u64, u64), Vec<String>> = BTreeMap::new();
+    let mut tids: std::collections::BTreeSet<u64> = Default::default();
+    let mut spans = 0usize;
+    for (i, e) in events.iter().enumerate() {
+        let name = e
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Config(format!("traceEvents[{i}]: missing name")))?;
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Config(format!("traceEvents[{i}]: missing ph")))?;
+        let pid = e.get("pid").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let tid = e.get("tid").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        if e.get("ts").and_then(Json::as_f64).is_none() {
+            return Err(Error::Config(format!("traceEvents[{i}]: missing ts")));
+        }
+        tids.insert(tid);
+        let stack = stacks.entry((pid, tid)).or_default();
+        match ph {
+            "B" => stack.push(name.to_string()),
+            "E" => match stack.pop() {
+                Some(open) if open == name => spans += 1,
+                Some(open) => {
+                    return Err(Error::Config(format!(
+                        "traceEvents[{i}]: end of {name:?} while {open:?} is open (tid {tid})"
+                    )))
+                }
+                None => {
+                    return Err(Error::Config(format!(
+                        "traceEvents[{i}]: end of {name:?} with no span open (tid {tid})"
+                    )))
+                }
+            },
+            other => {
+                return Err(Error::Config(format!(
+                    "traceEvents[{i}]: unsupported phase {other:?} (only B/E are emitted)"
+                )))
+            }
+        }
+    }
+    for ((_, tid), stack) in &stacks {
+        if let Some(open) = stack.last() {
+            return Err(Error::Config(format!(
+                "unbalanced trace: span {open:?} never ends (tid {tid})"
+            )));
+        }
+    }
+    Ok(TraceCheck { events: events.len(), spans, threads: tids.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &'static str, kind: EventKind, t_ns: u64) -> Event {
+        Event { name, kind, t_ns }
+    }
+
+    #[test]
+    fn chrome_export_pairs_and_balances() {
+        // A well-nested thread plus a thread with an orphan Begin (ring
+        // overflow dropped its End): the orphan must not be emitted.
+        let threads = vec![
+            ThreadEvents {
+                tid: 1,
+                dropped: 0,
+                events: vec![
+                    ev("outer", EventKind::Begin, 100),
+                    ev("inner", EventKind::Begin, 200),
+                    ev("inner", EventKind::End, 300),
+                    ev("outer", EventKind::End, 400),
+                ],
+            },
+            ThreadEvents {
+                tid: 2,
+                dropped: 1,
+                events: vec![
+                    ev("orphan", EventKind::Begin, 50),
+                    ev("ok", EventKind::Begin, 60),
+                    ev("ok", EventKind::End, 70),
+                ],
+            },
+        ];
+        let doc = chrome_trace(&threads);
+        let check = check_balanced(&doc).unwrap();
+        assert_eq!(check.spans, 3, "outer, inner, ok");
+        assert_eq!(check.events, 6);
+        assert_eq!(check.threads, 2);
+        let text = doc.pretty();
+        assert!(!text.contains("orphan"), "unmatched Begin must be discarded:\n{text}");
+        // Deterministic and re-parseable.
+        assert_eq!(Json::parse(&text).unwrap().pretty(), text);
+    }
+
+    #[test]
+    fn check_balanced_rejects_malformed() {
+        let mk = |events: &str| {
+            Json::parse(&format!("{{\"traceEvents\": [{events}]}}")).unwrap()
+        };
+        let e = |name: &str, ph: &str, tid: u64| {
+            format!("{{\"name\": \"{name}\", \"ph\": \"{ph}\", \"pid\": 1, \"tid\": {tid}, \"ts\": 1.5}}")
+        };
+        // Balanced.
+        assert!(check_balanced(&mk(&format!("{}, {}", e("a", "B", 1), e("a", "E", 1)))).is_ok());
+        // End with nothing open.
+        assert!(check_balanced(&mk(&e("a", "E", 1))).is_err());
+        // Never-closed Begin.
+        assert!(check_balanced(&mk(&e("a", "B", 1))).is_err());
+        // Cross-name nesting violation.
+        let bad = format!("{}, {}, {}", e("a", "B", 1), e("b", "B", 1), e("a", "E", 1));
+        assert!(check_balanced(&mk(&bad)).is_err());
+        // Same names on *different* threads do not interact.
+        let ok = format!(
+            "{}, {}, {}, {}",
+            e("a", "B", 1),
+            e("a", "B", 2),
+            e("a", "E", 2),
+            e("a", "E", 1)
+        );
+        assert!(check_balanced(&mk(&ok)).is_ok());
+        // Not a trace document at all.
+        assert!(check_balanced(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        // The flag defaults off (unless the suite runs under
+        // RFDOT_TRACE=1, in which case this test is vacuous for the
+        // disabled branch but the guard still must not panic).
+        let was = super::super::enabled();
+        if !was {
+            let before: usize = drain().iter().map(|t| t.events.len()).sum();
+            {
+                let _span = span("test.disabled");
+            }
+            let after: usize = drain().iter().map(|t| t.events.len()).sum();
+            assert_eq!(before, after, "disabled spans must record nothing");
+        }
+    }
+}

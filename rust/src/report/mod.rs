@@ -58,8 +58,10 @@ use std::path::{Path, PathBuf};
 /// [`parse_report`] rejects documents from another version, which is
 /// what the CI smoke's "schema drift" gate trips on). v2 added the
 /// serving-throughput panel (`serving` section); v3 added the `simd`
-/// axis (which kernel-dispatch path the grid ran on).
-pub const REPORT_VERSION: u64 = 3;
+/// axis (which kernel-dispatch path the grid ran on); v4 added the
+/// per-cell `stages` wall-clock breakdown and the aggregated
+/// `metrics` section.
+pub const REPORT_VERSION: u64 = 4;
 
 /// The feature-map families of the grid, in declaration order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -276,6 +278,20 @@ pub struct CellStats {
     /// Seconds per input vector through the batch transform on this
     /// cell's storage.
     pub secs_per_vec: f64,
+    /// Wall-clock breakdown of the cell measurement itself, recorded
+    /// in the run-log so a resumed render never re-measures (schema
+    /// v4; pre-v4 run-logs decode these as zero).
+    pub stages: StageSecs,
+}
+
+/// Per-stage wall-clock seconds spent measuring one cell: sampling the
+/// `runs` independent maps, building the feature grams for the error
+/// envelope, and the timed batch-transform iterations.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageSecs {
+    pub sample_s: f64,
+    pub gram_s: f64,
+    pub transform_s: f64,
 }
 
 /// A cell's outcome: measured, or explicitly skipped with a reason.
@@ -502,25 +518,39 @@ fn run_cell(
     let mut rng = Rng::seed_from(config.seed ^ fnv1a(&spec.seed_key()));
     let mut errs = Vec::with_capacity(config.runs);
     let mut last: Option<Box<dyn FeatureMap>> = None;
+    let mut stages = StageSecs::default();
     for _ in 0..config.runs {
+        let sw = crate::metrics::Stopwatch::start();
         let map = sample_map(spec, &kspec, kernel.as_ref(), x, &mut rng)?;
+        stages.sample_s += sw.elapsed_secs();
+        let sw = crate::metrics::Stopwatch::start();
         let approx = match spec.storage {
             StorageKind::Dense => crate::features::feature_gram(map.as_ref(), x),
             StorageKind::Sparse => crate::features::feature_gram_sparse(map.as_ref(), sx),
         };
         errs.push(crate::kernels::mean_abs_gram_error(exact, &approx));
+        stages.gram_s += sw.elapsed_secs();
         last = Some(map);
     }
     let map = last.expect("runs >= 1 by validation");
     let iters = if config.quick { 2 } else { 5 };
+    let sw = crate::metrics::Stopwatch::start();
     let m = crate::bench::bench("cell-transform", 1, iters, || match spec.storage {
         StorageKind::Dense => map.transform_batch(x),
         StorageKind::Sparse => map.transform_batch_sparse(sx),
     });
+    stages.transform_s = sw.elapsed_secs();
+    // Mirror the breakdown into the live metrics registry so a
+    // `MetricsSnapshot` taken mid-grid sees where the time went; the
+    // report itself only ever reads the run-log copy.
+    crate::obs::histogram("report.cell.sample_us").record_f64(stages.sample_s * 1e6);
+    crate::obs::histogram("report.cell.gram_us").record_f64(stages.gram_s * 1e6);
+    crate::obs::histogram("report.cell.transform_us").record_f64(stages.transform_s * 1e6);
     Ok(CellStats {
         output_dim: map.output_dim(),
         err: Summary::from_samples(&errs),
         secs_per_vec: m.mean_s() / x.rows() as f64,
+        stages,
     })
 }
 

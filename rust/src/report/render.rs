@@ -12,7 +12,7 @@
 use super::svg::{self, Series};
 use super::{
     AccuracyRow, Cell, CellStats, CellStatus, Family, Report, RowOutcome, RunLog, ServePoint,
-    ThreadPoint, FAMILIES, REPORT_VERSION,
+    StageSecs, ThreadPoint, FAMILIES, REPORT_VERSION,
 };
 use crate::bench::{fmt_duration, Table};
 use crate::config::json::Json;
@@ -60,6 +60,14 @@ fn summary_json(x: &Summary) -> Json {
     ])
 }
 
+fn stages_json(st: &StageSecs) -> Json {
+    obj(vec![
+        ("sample_s", num(st.sample_s)),
+        ("gram_s", num(st.gram_s)),
+        ("transform_s", num(st.transform_s)),
+    ])
+}
+
 fn cell_json(c: &Cell) -> Json {
     let mut fields = vec![
         ("id", s(&c.id)),
@@ -75,6 +83,7 @@ fn cell_json(c: &Cell) -> Json {
             fields.push(("output_dim", int(stats.output_dim)));
             fields.push(("err", summary_json(&stats.err)));
             fields.push(("secs_per_vec", num(stats.secs_per_vec)));
+            fields.push(("stages", stages_json(&stats.stages)));
         }
         CellStatus::Skipped { reason } => {
             fields.push(("status", s("skipped")));
@@ -141,6 +150,47 @@ fn grid_json(c: &ReportConfig) -> Json {
     ])
 }
 
+/// Sum the per-stage wall-clock over live cells, alongside the
+/// ok/skipped split — the raw material of the v4 `metrics` section.
+fn stage_totals(report: &Report) -> (usize, usize, StageSecs) {
+    let (mut ok, mut skipped) = (0, 0);
+    let mut total = StageSecs::default();
+    for c in &report.cells {
+        match &c.status {
+            CellStatus::Ok(stats) => {
+                ok += 1;
+                total.sample_s += stats.stages.sample_s;
+                total.gram_s += stats.stages.gram_s;
+                total.transform_s += stats.stages.transform_s;
+            }
+            CellStatus::Skipped { .. } => skipped += 1,
+        }
+    }
+    (ok, skipped, total)
+}
+
+/// The v4 `metrics` section: a deterministic aggregate over the grid's
+/// cells. Derived data only — it is a pure function of the cell set
+/// (summed in declaration order, never live process state), so
+/// re-rendering from a cached run-log stays byte-identical and
+/// [`decode_report`] can verify it by recomputation.
+fn metrics_json(report: &Report) -> Json {
+    let (ok, skipped, total) = stage_totals(report);
+    obj(vec![
+        ("cells_ok", int(ok)),
+        ("cells_skipped", int(skipped)),
+        (
+            "stage_secs",
+            obj(vec![
+                ("sample", num(total.sample_s)),
+                ("gram", num(total.gram_s)),
+                ("transform", num(total.transform_s)),
+                ("total", num(total.sample_s + total.gram_s + total.transform_s)),
+            ]),
+        ),
+    ])
+}
+
 /// The full `REPORT.json` document (wrapped in a top-level `"report"`
 /// object so the format is self-identifying).
 pub fn report_json(report: &Report, assets: &[String]) -> Json {
@@ -157,6 +207,7 @@ pub fn report_json(report: &Report, assets: &[String]) -> Json {
             ("fingerprint", s(&report.fingerprint)),
             ("generated_by", s("rfdot report")),
             ("grid", grid_json(&report.config)),
+            ("metrics", metrics_json(report)),
             ("cells", Json::Arr(report.cells.iter().map(cell_json).collect())),
             ("accuracy", Json::Arr(report.accuracy.iter().map(accuracy_json).collect())),
             ("threads", Json::Arr(report.threads.iter().map(thread_json).collect())),
@@ -221,7 +272,23 @@ fn decode_summary(v: &Json) -> Result<Summary> {
     })
 }
 
-fn decode_cell(v: &Json) -> Result<Cell> {
+/// v4 stage breakdown. `strict` (REPORT.json, the drift gate) requires
+/// the object; the run-log decoder passes `strict = false` so a pre-v4
+/// log still resumes — absent stages read as zero, and the fingerprint
+/// (not these fields) decides whether cached cells are reused.
+fn decode_stages(v: Option<&Json>, strict: bool) -> Result<StageSecs> {
+    match v {
+        Some(v) => Ok(StageSecs {
+            sample_s: req_f64(v, "sample_s")?,
+            gram_s: req_f64(v, "gram_s")?,
+            transform_s: req_f64(v, "transform_s")?,
+        }),
+        None if strict => Err(Error::Config("ok cells must carry a stages breakdown".into())),
+        None => Ok(StageSecs::default()),
+    }
+}
+
+fn decode_cell(v: &Json, strict: bool) -> Result<Cell> {
     let family = req_str(v, "family")?;
     Family::parse(&family)?;
     let status = match req_str(v, "status")?.as_str() {
@@ -229,6 +296,7 @@ fn decode_cell(v: &Json) -> Result<Cell> {
             output_dim: req_usize(v, "output_dim")?,
             err: decode_summary(v.req("err")?)?,
             secs_per_vec: req_f64(v, "secs_per_vec")?,
+            stages: decode_stages(v.get("stages"), strict)?,
         }),
         "skipped" => {
             let reason = req_str(v, "reason")?;
@@ -342,7 +410,10 @@ pub fn decode_report(doc: &Json) -> Result<Report> {
         .parse::<u64>()
         .map_err(|_| Error::Config("report seed must be a u64 string".into()))?;
     let config = decode_grid(v.req("grid")?, &mode, seed)?;
-    let cells = req_arr(v, "cells")?.iter().map(decode_cell).collect::<Result<Vec<_>>>()?;
+    let cells = req_arr(v, "cells")?
+        .iter()
+        .map(|c| decode_cell(c, true))
+        .collect::<Result<Vec<_>>>()?;
     let accuracy =
         req_arr(v, "accuracy")?.iter().map(decode_accuracy).collect::<Result<Vec<_>>>()?;
     let threads =
@@ -351,7 +422,7 @@ pub fn decode_report(doc: &Json) -> Result<Report> {
         req_arr(v, "serving")?.iter().map(decode_serve).collect::<Result<Vec<_>>>()?;
     // Assets must be declared (the markdown references them).
     crate::config::str_list(req_arr(v, "assets")?, "assets")?;
-    Ok(Report {
+    let report = Report {
         version,
         mode,
         seed,
@@ -362,7 +433,16 @@ pub fn decode_report(doc: &Json) -> Result<Report> {
         accuracy,
         threads,
         serving,
-    })
+    };
+    // The v4 metrics section is derived data; recompute it from the
+    // decoded cells and require byte-for-byte agreement (an edited
+    // document or a drifted encoder both trip here).
+    if *v.req("metrics")? != metrics_json(&report) {
+        return Err(Error::Config(
+            "report metrics section disagrees with the aggregate of its cells".into(),
+        ));
+    }
+    Ok(report)
 }
 
 /// Decode a run-log document (tolerant counterpart of [`runlog_json`]:
@@ -374,7 +454,7 @@ pub fn parse_runlog(text: &str, path: PathBuf) -> Result<RunLog> {
     match doc.req("cells")? {
         Json::Obj(map) => {
             for (k, v) in map {
-                cells.insert(k.clone(), decode_cell(v)?);
+                cells.insert(k.clone(), decode_cell(v, false)?);
             }
         }
         _ => return Err(Error::Config("run-log cells must be an object".into())),
@@ -717,6 +797,25 @@ pub fn report_markdown(report: &Report, assets: &[String]) -> String {
     md.push_str(&t.render());
     md.push('\n');
 
+    md.push_str("## Metrics\n\n");
+    md.push_str(
+        "Where the grid's wall-clock went, summed over live cells (the\n\
+         same v4 breakdown `REPORT.json` carries under `metrics`):\n\
+         sampling the random maps, building the feature grams for the\n\
+         error envelope, and the timed batch transforms.\n\n",
+    );
+    let (ok_cells, skipped_cells, totals) = stage_totals(report);
+    let mut t = Table::new(&["stage", "total wall-clock"]);
+    t.row(&["map sampling".into(), fmt_duration(totals.sample_s)]);
+    t.row(&["gram error".into(), fmt_duration(totals.gram_s)]);
+    t.row(&["batch transform".into(), fmt_duration(totals.transform_s)]);
+    t.row(&[
+        "all stages".into(),
+        fmt_duration(totals.sample_s + totals.gram_s + totals.transform_s),
+    ]);
+    md.push_str(&t.render());
+    md.push_str(&format!("\n({ok_cells} live cells, {skipped_cells} skipped)\n\n"));
+
     md.push_str("## Skipped cells\n\n");
     md.push_str(
         "Every declared cell the grid could not run, with its reason —\n\
@@ -786,6 +885,7 @@ mod tests {
                 output_dim: 16,
                 err: Summary::from_samples(&[0.5, 0.3]),
                 secs_per_vec: 1.5e-6,
+                stages: StageSecs { sample_s: 0.5, gram_s: 0.25, transform_s: 0.125 },
             }),
         };
         let sparse = Cell {
@@ -795,6 +895,7 @@ mod tests {
                 output_dim: 16,
                 err: Summary::from_samples(&[0.5, 0.3]),
                 secs_per_vec: 0.5e-6,
+                stages: StageSecs { sample_s: 0.5, gram_s: 0.125, transform_s: 0.0625 },
             }),
             ..ok.clone()
         };
@@ -872,9 +973,22 @@ mod tests {
                 assert_eq!(stats.output_dim, 16);
                 assert_eq!(stats.err.n, 2);
                 assert!((stats.err.mean - 0.4).abs() < 1e-12);
+                // The v4 stage breakdown survives the round trip exactly
+                // (the fixture's powers of two have exact JSON forms).
+                assert_eq!(
+                    stats.stages,
+                    StageSecs { sample_s: 0.5, gram_s: 0.25, transform_s: 0.125 },
+                );
             }
             CellStatus::Skipped { .. } => panic!("cell 0 must be ok"),
         }
+        // The metrics section is present and aggregates the live cells.
+        let metrics = doc.req("report").unwrap().req("metrics").unwrap();
+        assert_eq!(metrics.req("cells_ok").unwrap().as_usize(), Some(2));
+        assert_eq!(metrics.req("cells_skipped").unwrap().as_usize(), Some(1));
+        let stage_secs = metrics.req("stage_secs").unwrap();
+        assert_eq!(stage_secs.req("sample").unwrap().as_f64(), Some(1.0));
+        assert_eq!(stage_secs.req("transform").unwrap().as_f64(), Some(0.1875));
         match &back.cells[2].status {
             CellStatus::Skipped { reason } => assert_eq!(reason, "not shift-invariant"),
             CellStatus::Ok(_) => panic!("cell 2 must be skipped"),
@@ -910,6 +1024,15 @@ mod tests {
         // A skipped cell without a reason = drift.
         let bad = good.replace("\"reason\": \"not shift-invariant\"", "\"reason\": \"\"");
         assert!(decode_report(&Json::parse(&bad).unwrap()).is_err());
+        // A missing metrics section = drift (the v4 section is required).
+        let bad = good.replace("\"metrics\"", "\"metrics_panel\"");
+        assert!(decode_report(&Json::parse(&bad).unwrap()).is_err());
+        // Ok cells without the v4 stage breakdown = drift.
+        let bad = good.replace("\"stages\"", "\"stage_breakdown\"");
+        assert!(decode_report(&Json::parse(&bad).unwrap()).is_err());
+        // A tampered aggregate (metrics disagreeing with its cells) = drift.
+        let bad = good.replace("\"cells_ok\": 2", "\"cells_ok\": 3");
+        assert!(decode_report(&Json::parse(&bad).unwrap()).is_err());
     }
 
     #[test]
@@ -937,6 +1060,34 @@ mod tests {
         assert_eq!(serving.len(), 2);
         assert_eq!(serving[1].shards, 2);
         assert_eq!(serving[1].steals, 3);
+
+        // A pre-v4 run-log (no per-cell stage breakdown) still loads:
+        // absent stages decode as zero rather than invalidating the log.
+        fn strip_stages(j: &mut Json) {
+            match j {
+                Json::Obj(m) => {
+                    m.remove("stages");
+                    for v in m.values_mut() {
+                        strip_stages(v);
+                    }
+                }
+                Json::Arr(xs) => xs.iter_mut().for_each(strip_stages),
+                _ => {}
+            }
+        }
+        let mut old = runlog_json(&log);
+        strip_stages(&mut old);
+        let back = parse_runlog(&old.pretty(), PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(back.cells.len(), 3);
+        let live = back
+            .cells
+            .values()
+            .find_map(|c| match &c.status {
+                CellStatus::Ok(stats) => Some(stats),
+                CellStatus::Skipped { .. } => None,
+            })
+            .expect("fixture has live cells");
+        assert_eq!(live.stages, StageSecs::default());
     }
 
     #[test]
@@ -952,11 +1103,13 @@ mod tests {
             "## Accuracy (Table 1)",
             "## Thread scaling",
             "## Serving throughput",
+            "## Metrics",
             "## Skipped cells",
         ] {
             assert!(md.contains(section), "missing {section:?}");
         }
         assert!(md.contains("sharded x2"), "serving table must label the sharded topology");
+        assert!(md.contains("(2 live cells, 1 skipped)"), "metrics section must count cells");
         assert!(md.contains("not shift-invariant"));
         assert!(md.contains("report/error_rm.svg"));
         assert!(md.contains("90.00%"));

@@ -188,6 +188,7 @@ impl FeatureMap for RandomFourier {
     /// stacks need no workspace at all). Bit-identical to
     /// [`FeatureMap::transform_into`].
     fn transform_into_scratch(&self, x: &[f32], out: &mut [f32], scratch: &mut Scratch) {
+        let _span = crate::obs::span("transform.rff");
         assert_eq!(x.len(), self.input_dim());
         assert_eq!(out.len(), self.output_dim());
         let p = self.freqs.as_projection();
@@ -204,6 +205,7 @@ impl FeatureMap for RandomFourier {
         x: &crate::linalg::Matrix,
         threads: usize,
     ) -> crate::linalg::Matrix {
+        let _span = crate::obs::span("transform.rff");
         assert_eq!(x.cols(), self.input_dim(), "input dim mismatch");
         let mut out = self.freqs.as_projection().project_batch(x, threads);
         let (b, dd) = (out.rows(), out.cols());
@@ -242,6 +244,7 @@ impl FeatureMap for RandomFourier {
         out: &mut [f32],
         scratch: &mut Scratch,
     ) {
+        let _span = crate::obs::span("transform.rff");
         assert_eq!(x.dim, self.input_dim(), "input dim mismatch");
         assert_eq!(out.len(), self.output_dim(), "output dim mismatch");
         let p = self.freqs.as_projection();

@@ -134,6 +134,7 @@ pub fn mode() -> SimdMode {
                 .unwrap_or(SimdMode::Auto);
             // Benign race: every initializer computes the same value.
             MODE.store(mode_code(m), Ordering::Relaxed);
+            note_dispatch(m);
             m
         }
     }
@@ -142,6 +143,27 @@ pub fn mode() -> SimdMode {
 /// Set the process-wide dispatch mode.
 pub fn set_mode(m: SimdMode) {
     MODE.store(mode_code(m), Ordering::Relaxed);
+    note_dispatch(m);
+}
+
+/// Record the dispatch decision in the observability layer: a zero-
+/// length `simd.dispatch` trace mark plus gauges exposing the mode
+/// knob and the kernel path it resolves to (by [`mode_code`] /
+/// [`SimdPath`] discriminant), so a metrics snapshot or trace always
+/// says which kernels the process ran.
+fn note_dispatch(m: SimdMode) {
+    crate::obs::trace::mark("simd.dispatch");
+    crate::obs::gauge("simd.mode").set(mode_code(m) as i64);
+    let path = match m {
+        SimdMode::Scalar => SimdPath::Scalar,
+        SimdMode::Auto => detected(),
+    };
+    let code = match path {
+        SimdPath::Scalar => 0,
+        SimdPath::Avx2 => 1,
+        SimdPath::Neon => 2,
+    };
+    crate::obs::gauge("simd.path").set(code);
 }
 
 /// The best kernel path this machine supports, independent of the

@@ -300,6 +300,7 @@ impl Projection for StructuredProjection {
     }
 
     fn project_into_scratch(&self, x: &[f32], out: &mut [f32], work: &mut [f32]) {
+        let _span = crate::obs::span("project.structured");
         assert_eq!(x.len(), self.d, "input dim mismatch");
         assert_eq!(out.len(), self.rows, "output len mismatch");
         let (buf, rest) = work.split_at_mut(self.n);
@@ -319,6 +320,7 @@ impl Projection for StructuredProjection {
     }
 
     fn project_sparse_into_scratch(&self, x: SparseRow<'_>, out: &mut [f32], work: &mut [f32]) {
+        let _span = crate::obs::span("project.structured");
         assert_eq!(x.dim, self.d, "input dim mismatch");
         assert_eq!(out.len(), self.rows, "output len mismatch");
         let (buf, rest) = work.split_at_mut(self.n);

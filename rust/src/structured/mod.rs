@@ -257,6 +257,7 @@ impl Projection for DenseProjection {
     }
 
     fn project_into(&self, x: &[f32], out: &mut [f32]) {
+        let _span = crate::obs::span("project.dense");
         assert_eq!(x.len(), self.input_dim(), "input dim mismatch");
         assert_eq!(out.len(), self.rows(), "output len mismatch");
         out.fill(0.0);
@@ -285,6 +286,7 @@ impl Projection for DenseProjection {
     /// `x[k] != 0` skips, so the output is bit-identical to the dense
     /// path on the densified row.
     fn project_sparse_into(&self, x: SparseRow<'_>, out: &mut [f32]) {
+        let _span = crate::obs::span("project.dense");
         assert_eq!(x.dim, self.input_dim(), "input dim mismatch");
         assert_eq!(out.len(), self.rows(), "output len mismatch");
         out.fill(0.0);

@@ -131,6 +131,7 @@ impl FeatureMap for TensorSketch {
     /// from the caller's reusable [`Scratch`]. Bit-identical to
     /// [`FeatureMap::transform_into`].
     fn transform_into_scratch(&self, x: &[f32], out: &mut [f32], scratch: &mut Scratch) {
+        let _span = crate::obs::span("transform.tensorsketch");
         assert_eq!(x.len(), self.d_in);
         assert_eq!(out.len(), self.width);
         self.combine_sketches(out, scratch, |j, buf| self.count_sketch(j, x, buf));
@@ -150,6 +151,7 @@ impl FeatureMap for TensorSketch {
         out: &mut [f32],
         scratch: &mut Scratch,
     ) {
+        let _span = crate::obs::span("transform.tensorsketch");
         assert_eq!(x.dim, self.d_in, "input dim mismatch");
         assert_eq!(out.len(), self.width, "output dim mismatch");
         self.combine_sketches(out, scratch, |j, buf| self.count_sketch_sparse(j, x, buf));

@@ -8,6 +8,13 @@
 //! *per-thread* counter, so the libtest harness running other threads
 //! concurrently cannot perturb the measurement. This file deliberately
 //! contains only these tests: the allocator wrapper is binary-global.
+//!
+//! The hot paths measured here carry [`rfdot::obs`] tracing spans
+//! (ISSUE 7), so the zero counts below also pin the span guards'
+//! contract: allocation-free when tracing is disabled (the default)
+//! *and* in the steady state when it is enabled (CI re-runs this suite
+//! under `RFDOT_TRACE=1`; the per-thread ring pre-allocates its full
+//! capacity at registration).
 
 use rfdot::features::{FeatureMap, Scratch};
 use rfdot::kernels::{Exponential, Polynomial};
@@ -160,6 +167,24 @@ fn steady_state_scratch_transforms_do_not_allocate() {
         });
         assert_eq!(n, 0, "{name}: sparse steady state allocated {n} times in 32 calls");
     }
+}
+
+#[test]
+fn span_guards_do_not_allocate() {
+    // Disabled (the default): one relaxed atomic load and an inert
+    // guard. Enabled (the RFDOT_TRACE=1 CI pass): recording pushes
+    // into the ring's pre-allocated buffer. Either way the steady
+    // state is allocation-free — the warm-up span registers this
+    // thread's ring (which does allocate, once, when tracing is on).
+    {
+        let _warm = rfdot::obs::span("test.alloc.warmup");
+    }
+    let n = allocations(|| {
+        for _ in 0..64 {
+            let _span = rfdot::obs::span("test.alloc.steady");
+        }
+    });
+    assert_eq!(n, 0, "span guards allocated {n} times over 64 spans");
 }
 
 #[test]

@@ -1,0 +1,104 @@
+//! Enabled-path tracing integration (ISSUE 7 tentpole): this binary
+//! flips the process-wide trace flag, so it lives apart from the unit
+//! suite — everything here shares one test function because the flag,
+//! the thread rings and the drain are process-global.
+//!
+//! Covered end to end: RAII spans (nested, cross-thread), the
+//! transform hot-path instrumentation, the Chrome `trace_event`
+//! export, its `check_balanced` gate, and the metrics snapshot.
+
+use rfdot::kernels::Polynomial;
+use rfdot::linalg::Matrix;
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
+use rfdot::obs::{self, trace};
+use rfdot::rng::Rng;
+
+fn sphere_points(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seed_from(seed);
+    let rows: Vec<Vec<f32>> = (0..n).map(|_| rfdot::prop::gens::unit_vec(&mut rng, d)).collect();
+    Matrix::from_rows(&rows).unwrap()
+}
+
+#[test]
+fn enabled_tracing_records_exports_and_validates() {
+    obs::set_enabled(true);
+    assert!(obs::enabled());
+    // Start from a clean slate (rings may hold events from test setup).
+    let _ = trace::drain();
+
+    // Nested spans on this thread, a marker, and spans on worker
+    // threads — every shape the serving stack produces.
+    {
+        let _outer = obs::span("test.outer");
+        {
+            let _inner = obs::span("test.inner");
+        }
+        trace::mark("test.mark");
+    }
+    let workers: Vec<_> = (0..3)
+        .map(|_| {
+            std::thread::spawn(|| {
+                for _ in 0..10 {
+                    let _span = obs::span("test.worker");
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    // The transform hot path emits its family span.
+    let x = sphere_points(8, 16, 1);
+    let mut rng = Rng::seed_from(2);
+    let map = RandomMaclaurin::sample(&Polynomial::new(3, 1.0), 16, 32, RmConfig::default(), &mut rng);
+    use rfdot::features::FeatureMap;
+    let _z = map.transform_batch(&x);
+
+    let threads = trace::drain();
+    let total: usize = threads.iter().map(|t| t.events.len()).sum();
+    // 3 local spans (outer, inner, mark) + 30 worker spans + at least
+    // one transform.rm span, two events each.
+    assert!(total >= 2 * (3 + 30 + 1), "expected >= 68 events, got {total}");
+    assert!(
+        threads
+            .iter()
+            .flat_map(|t| &t.events)
+            .any(|e| e.name == "transform.rm"),
+        "transform hot path must be traced"
+    );
+    // Worker rings survive their threads (kept alive by the registry).
+    let worker_tids: usize = threads
+        .iter()
+        .filter(|t| t.events.iter().any(|e| e.name == "test.worker"))
+        .count();
+    assert_eq!(worker_tids, 3, "each worker thread gets its own ring");
+
+    // Export round-trips through the parser and passes the balance
+    // gate `rfdot trace-check` runs in CI.
+    let doc = trace::chrome_trace(&threads);
+    let text = doc.pretty();
+    let parsed = rfdot::config::json::Json::parse(&text).unwrap();
+    let check = trace::check_balanced(&parsed).unwrap();
+    assert!(check.spans * 2 == check.events, "B/E events pair exactly");
+    assert!(check.threads >= 4, "main + 3 workers, got {}", check.threads);
+    assert!(text.contains("\"transform.rm\""));
+    assert!(text.contains("\"displayTimeUnit\": \"ms\""));
+
+    // A drain empties the rings; tracing continues afterwards.
+    let empty: usize = trace::drain().iter().map(|t| t.events.len()).sum();
+    assert_eq!(empty, 0, "drain must empty every ring");
+    {
+        let _s = obs::span("test.after_drain");
+    }
+    let after: usize = trace::drain().iter().map(|t| t.events.len()).sum();
+    assert_eq!(after, 2, "rings keep recording after a drain");
+
+    // The metrics side is always on: resolving the SIMD dispatch sets
+    // its gauges, which the snapshot then carries.
+    let _ = rfdot::simd::mode();
+    let snap = obs::MetricsSnapshot::collect();
+    assert!(snap.gauges.contains_key("simd.mode"), "gauges: {:?}", snap.gauges.keys());
+    let json = snap.to_json().pretty();
+    rfdot::config::json::Json::parse(&json).unwrap();
+}

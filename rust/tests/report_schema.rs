@@ -50,6 +50,10 @@ fn quick_grid_schema_coverage_and_byte_identical_regeneration() {
                 assert_eq!(stats.err.n, cfg.runs, "{}: wrong envelope width", cell.id);
                 assert!(stats.err.mean.is_finite() && stats.err.mean >= 0.0);
                 assert!(stats.secs_per_vec > 0.0);
+                // v4: the stage breakdown is measured, not defaulted.
+                assert!(stats.stages.sample_s.is_finite() && stats.stages.sample_s >= 0.0);
+                assert!(stats.stages.gram_s.is_finite() && stats.stages.gram_s >= 0.0);
+                assert!(stats.stages.transform_s > 0.0, "{}: unmeasured transform stage", cell.id);
             }
             CellStatus::Skipped { reason } => {
                 skipped += 1;

@@ -9,8 +9,14 @@
 #    timings to the temp dir so checked-in baselines are only
 #    overwritten by full measured runs; the sparse smoke also asserts
 #    CSR/dense parity inside the bench);
-#  * the test suite runs twice: once under auto kernel dispatch and
-#    once with RFDOT_SIMD=scalar forcing the portable oracle kernels;
+#  * the test suite runs three times: under auto kernel dispatch, with
+#    RFDOT_SIMD=scalar forcing the portable oracle kernels, and with
+#    RFDOT_TRACE=1 so every span/ring assertion also holds while
+#    tracing is live (including the steady-state allocation-free
+#    contract in tests/alloc_free_transform.rs);
+#  * `rfdot serve --trace --trace-out` runs a native serving smoke and
+#    `rfdot trace-check` validates the Chrome trace it wrote (every
+#    begin paired with its end, per thread);
 #  * `report --quick` regenerates REPORT.md/REPORT.json into a temp dir
 #    and re-parses the JSON through the declared schema, failing on
 #    schema drift (the self-check inside `rfdot report`).
@@ -27,6 +33,10 @@ cargo test -q
 # "fast" side *is* the oracle, and any test that silently depended on
 # a vector path would surface here.
 RFDOT_SIMD=scalar cargo test -q
+# And once more with tracing live: span recording must not break any
+# contract the suite pins while the flag is off — including the
+# steady-state zero-allocation transforms (rings pre-allocate).
+RFDOT_TRACE=1 cargo test -q
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
@@ -43,5 +53,11 @@ cargo run --release --quiet -- bench-diff ../BENCH_serve.json ../BENCH_serve.jso
 cargo run --release --quiet -- bench-diff ../BENCH_simd.json ../BENCH_simd.json --max-regress 5
 report_dir="$(mktemp -d)"
 trap 'rm -rf "$report_dir"' EXIT
+# Serving smoke with tracing on: the run must write a Chrome trace that
+# the offline validator accepts (balanced begin/end per thread).
+cargo run --release --quiet -- serve --native --requests 200 --clients 2 --workers 2 \
+    --trace --trace-out "$report_dir/trace.json"
+test -s "$report_dir/trace.json"
+cargo run --release --quiet -- trace-check "$report_dir/trace.json"
 cargo run --release --quiet -- report --quick --fresh --out-dir "$report_dir"
 test -s "$report_dir/REPORT.md" && test -s "$report_dir/REPORT.json"
