@@ -10,6 +10,9 @@
 //! * coordinator end-to-end round trip under load,
 //! * the serve-throughput sweep over workers × shard-vs-shared queue
 //!   topology × client batch size (recorded to `BENCH_serve.json`),
+//! * the artifact-load sweep — cold-load latency + resident bytes for
+//!   owned vs zero-copy vs recycled map records (recorded to
+//!   `BENCH_artifact.json`),
 //! * the simd-kernels sweep — scalar vs runtime-detected path for every
 //!   dispatched kernel across remainder-heavy widths (recorded to
 //!   `BENCH_simd.json`),
@@ -931,6 +934,118 @@ fn bench_obs_overhead() {
     table.print();
 }
 
+/// Cold-load latency and resident footprint of serialized maps across
+/// the three load paths: `owned` (the legacy seed-reconstructing
+/// `RFDM0002` record), `artifact` (the zero-copy `RFDM0003` container),
+/// and `recycled` (`RFDM0003` with the shared randomness pool).
+/// Recorded as the machine-readable baseline in `BENCH_artifact.json`
+/// at the repo root (targets: artifact load beats seeded
+/// reconstruction at scale, and recycling shrinks both the record and
+/// the resident bytes).
+fn bench_artifact_load() {
+    use rfdot::artifact::MapArtifact;
+    use rfdot::maclaurin::serialize;
+
+    println!("\n== artifact load: owned vs zero-copy vs recycled ==");
+    let shapes: &[(usize, usize)] =
+        if fast() { &[(22, 256)] } else { &[(22, 256), (64, 1024), (128, 4096)] };
+    let iters = if fast() { 3 } else { 20 };
+
+    let mut table = Table::new(&[
+        "d", "D", "variant", "record bytes", "resident bytes", "cold load",
+    ]);
+    // (d, D, variant, record_bytes, resident_bytes, load_s)
+    let mut samples: Vec<(usize, usize, &str, usize, i64, f64)> = Vec::new();
+    for &(d, n_feat) in shapes {
+        let sample_map = |recycle: bool| {
+            let mut rng = Rng::seed_from(0xA21F);
+            RandomMaclaurin::sample(
+                &Exponential::new(1.0),
+                d,
+                n_feat,
+                RmConfig::default()
+                    .with_projection(ProjectionKind::Structured)
+                    .with_recycle(recycle),
+                &mut rng,
+            )
+        };
+        let legacy = serialize::to_bytes(&sample_map(false));
+        let v3 = MapArtifact::from_map(&sample_map(false)).unwrap().as_bytes().to_vec();
+        let v3_recycled =
+            MapArtifact::from_map(&sample_map(true)).unwrap().as_bytes().to_vec();
+
+        for (variant, record) in
+            [("owned", &legacy), ("artifact", &v3), ("recycled", &v3_recycled)]
+        {
+            // Cold load end to end: bytes -> usable FeatureMap. The
+            // owned path reconstructs the projection from its seed; the
+            // artifact paths validate + copy once and borrow.
+            let load_s = bench(variant, 1, iters, || {
+                serialize::from_bytes(record).expect("bench record loads")
+            })
+            .mean_s();
+            // Resident delta while one loaded map is held: the aligned
+            // region for artifact-backed maps, nothing tracked for the
+            // legacy owned path (its weights live in untracked Vecs —
+            // report the expanded owned footprint instead).
+            let resident = if variant == "owned" {
+                MapArtifact::from_bytes(record).unwrap().info().expanded_weight_bytes as i64
+            } else {
+                let before = rfdot::artifact::resident_bytes();
+                let held = serialize::from_bytes(record).expect("bench record loads");
+                let delta = rfdot::artifact::resident_bytes() - before;
+                drop(held);
+                delta
+            };
+            table.row(&[
+                format!("{d}"),
+                format!("{n_feat}"),
+                variant.into(),
+                format!("{}", record.len()),
+                format!("{resident}"),
+                fmt_duration(load_s),
+            ]);
+            samples.push((d, n_feat, variant, record.len(), resident, load_s));
+        }
+    }
+    table.print();
+
+    let json_samples = samples
+        .iter()
+        .map(|(d, n_feat, variant, bytes, resident, load_s)| {
+            format!(
+                r#"{{"d": {d}, "features": {n_feat}, "variant": "{variant}", "record_bytes": {bytes}, "resident_bytes": {resident}, "load_s": {load_s:.9}}}"#
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n    ");
+    // Same policy as the structured/sparse/serve sweeps: --quick runs
+    // exercise the regeneration path but divert their noisy timings to
+    // the temp dir; only full measured runs overwrite the baseline.
+    let (status, invocation, path) = if fast() {
+        (
+            "smoke",
+            "cargo bench --bench micro -- --quick --only artifact-load",
+            std::env::temp_dir().join("BENCH_artifact.smoke.json"),
+        )
+    } else {
+        (
+            "measured",
+            "cargo bench --bench micro -- --only artifact-load",
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_artifact.json"),
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"artifact_load\",\n  \"status\": \"{status}\",\n  \
+         \"generated_by\": \"{invocation}\",\n  \
+         \"artifact\": {{\"samples\": [\n    {json_samples}\n  ]}}\n}}\n"
+    );
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("   baseline recorded to {}", path.display()),
+        Err(e) => println!("   (could not write {}: {e})", path.display()),
+    }
+}
+
 fn bench_solvers() {
     println!("\n== svm solver throughput (nursery surrogate, scale 0.05) ==");
     use rfdot::data::UciSurrogate;
@@ -985,7 +1100,7 @@ fn main() {
         }
     }
 
-    let sections: [(&str, fn()); 13] = [
+    let sections: [(&str, fn()); 14] = [
         ("native-transform", bench_native_transform),
         ("parallel-sweep", bench_parallel_sweep),
         ("structured-sweep", bench_structured_sweep),
@@ -995,6 +1110,7 @@ fn main() {
         ("pjrt-execute", bench_pjrt_execute),
         ("coordinator-roundtrip", bench_coordinator_roundtrip),
         ("serve-throughput", bench_serve_throughput),
+        ("artifact-load", bench_artifact_load),
         ("pjrt-coordinator", bench_pjrt_coordinator),
         ("pjrt-bucketed-coordinator", bench_pjrt_bucketed_coordinator),
         ("obs-overhead", bench_obs_overhead),

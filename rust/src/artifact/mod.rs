@@ -1,0 +1,1195 @@
+//! Zero-copy map artifacts: one page-aligned, read-only byte region
+//! backing every weight a sampled map owns.
+//!
+//! The paper's maps are sampled once and read forever, so the crate's
+//! serving tier should never pay a per-tenant copy of weight state.
+//! This module gives weights a single owner — a [`MapArtifact`]: an
+//! `Arc`-backed, 4096-byte-aligned allocation whose internal section
+//! layout matches the typed views (`&[f32]`, `&[u32]`, `&[u64]`) the
+//! transform hot paths read — and lets every layer above it *borrow*:
+//!
+//! * [`WeightStore<T>`] is the ownership seam. Sampling produces
+//!   `Owned` stores (an `Arc<[T]>`); loading an artifact produces
+//!   `Artifact` stores (an offset/length view into the shared region).
+//!   `RademacherMatrix`, `StructuredProjection` and `RandomMaclaurin`
+//!   hold `WeightStore`s and are bitwise-identical either way.
+//! * The `RFDM0003` container is the on-disk twin of the in-memory
+//!   layout: little-endian header, a section table, then 8-byte-aligned
+//!   sections. Loading is header-validate + **one** `memcpy` into one
+//!   aligned allocation (mmap-ready: the offsets in the table are the
+//!   offsets in memory). `tests/alloc_free_transform.rs` pins the
+//!   one-payload-allocation contract with a counting allocator.
+//! * `RFDM0001` (dense) and `RFDM0002` (structured, seed-only) records
+//!   are transparently up-converted on read, so old blobs keep loading.
+//!
+//! Randomness recycling (Choromanski & Sindhwani, *Recycling Randomness
+//! with Structure*) rides on the same seam: with `RmConfig::recycle`
+//! (CLI `--recycle`, default **off**), the HD/Fastfood chains draw
+//! their per-block Rademacher/Gaussian state as *views into one shared
+//! pool* instead of independent samples. The serializer interns backing
+//! storage by identity, so a recycled stack stores each pool once —
+//! state shrinks toward `O(d)` while every block's marginal law is
+//! exactly the fresh-sample law (see ARCHITECTURE.md for the argument).
+//! Default-off numerics are bit-identical to the unrecycled build.
+
+use crate::maclaurin::{serialize, RandomMaclaurin, RmConfig};
+use crate::rng::RademacherMatrix;
+use crate::structured::hd::HdBlock;
+use crate::structured::{ProjectionKind, StructuredProjection};
+use crate::{obs, Error, Result};
+use std::path::Path;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+/// Magic for the zero-copy container format.
+pub const MAGIC_V3: &[u8; 8] = b"RFDM0003";
+
+const FLAG_STRUCTURED: u32 = 1;
+const FLAG_RECYCLED: u32 = 2;
+
+/// Sections start (and end, via zero padding) on 8-byte boundaries so
+/// a `u64` view is always aligned inside the page-aligned region.
+const SEC_ALIGN: usize = 8;
+
+/// Fixed byte count of the v3 header before the kernel name.
+const HEADER_BYTES: usize = 56;
+
+const SEC_ORDERS: u32 = 1;
+const SEC_WEIGHTS: u32 = 2;
+const SEC_OFFSETS: u32 = 3;
+const SEC_WORDS: u32 = 4;
+const SEC_SCALES: u32 = 5;
+const SEC_BLOCKS: u32 = 6;
+const SEC_SIGNS: u32 = 7;
+const SEC_PERMS: u32 = 8;
+const SEC_GAINS: u32 = 9;
+const SEC_TAPS: u32 = 10;
+
+/// `u32`s per block in the `BLOCKS` descriptor section:
+/// `[signs_off, has_perm_gain, perm_off, gain_off, taps_off, n_taps]`.
+const BLOCK_WORDS: usize = 6;
+
+/// Canonical section sequences (dense / structured records).
+const DENSE_SECTIONS: [u32; 4] = [SEC_ORDERS, SEC_WEIGHTS, SEC_OFFSETS, SEC_WORDS];
+const STRUCTURED_SECTIONS: [u32; 9] = [
+    SEC_ORDERS,
+    SEC_WEIGHTS,
+    SEC_OFFSETS,
+    SEC_SCALES,
+    SEC_BLOCKS,
+    SEC_SIGNS,
+    SEC_PERMS,
+    SEC_GAINS,
+    SEC_TAPS,
+];
+
+const MAX_SECTIONS: usize = STRUCTURED_SECTIONS.len();
+
+fn sec_name(kind: u32) -> &'static str {
+    match kind {
+        SEC_ORDERS => "orders",
+        SEC_WEIGHTS => "weights",
+        SEC_OFFSETS => "offsets",
+        SEC_WORDS => "words",
+        SEC_SCALES => "scales",
+        SEC_BLOCKS => "blocks",
+        SEC_SIGNS => "signs",
+        SEC_PERMS => "perms",
+        SEC_GAINS => "gains",
+        SEC_TAPS => "taps",
+        _ => "unknown",
+    }
+}
+
+fn sec_elem_size(kind: u32) -> usize {
+    match kind {
+        SEC_WORDS => 8,
+        _ => 4,
+    }
+}
+
+fn align8(n: usize) -> usize {
+    n.div_ceil(SEC_ALIGN) * SEC_ALIGN
+}
+
+fn data_err(msg: impl Into<String>) -> Error {
+    Error::Data(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// Resident-byte accounting (obs wiring for the load paths).
+
+static RESIDENT_BYTES: AtomicI64 = AtomicI64::new(0);
+
+fn resident_add(delta: i64) {
+    let now = RESIDENT_BYTES.fetch_add(delta, Ordering::Relaxed) + delta;
+    obs::gauge("artifact.bytes").set(now);
+}
+
+/// Bytes currently held by live artifact regions (mirrors the
+/// `artifact.bytes` gauge; exposed for the bench sweep).
+pub fn resident_bytes() -> i64 {
+    RESIDENT_BYTES.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// AlignedBytes: the single allocation behind an artifact.
+
+/// A page-aligned, immutable byte region. One of these backs every
+/// [`MapArtifact`]; all typed weight views borrow from it through an
+/// `Arc`, so N workers / tenants share one copy of the weights.
+pub struct AlignedBytes {
+    ptr: std::ptr::NonNull<u8>,
+    len: usize,
+}
+
+// SAFETY: the region is written once at construction and never mutated
+// afterwards; `&AlignedBytes` only hands out shared `&[u8]` views.
+unsafe impl Send for AlignedBytes {}
+unsafe impl Sync for AlignedBytes {}
+
+impl AlignedBytes {
+    /// Allocation alignment: one page, so an eventual `mmap` swap-in
+    /// needs no layout change and every section view is aligned.
+    pub const ALIGN: usize = 4096;
+
+    fn layout(len: usize) -> std::alloc::Layout {
+        // Zero-length regions still get a real (1-byte) allocation so
+        // the pointer is never dangling.
+        std::alloc::Layout::from_size_align(len.max(1), Self::ALIGN)
+            .expect("artifact region layout")
+    }
+
+    /// One allocation + one `memcpy` of `src`.
+    pub(crate) fn copy_from(src: &[u8]) -> AlignedBytes {
+        let layout = Self::layout(src.len());
+        // SAFETY: `layout` has non-zero size by construction.
+        let raw = unsafe { std::alloc::alloc(layout) };
+        let Some(ptr) = std::ptr::NonNull::new(raw) else {
+            std::alloc::handle_alloc_error(layout);
+        };
+        // SAFETY: freshly allocated region of at least `src.len()`
+        // bytes; the ranges cannot overlap.
+        unsafe { std::ptr::copy_nonoverlapping(src.as_ptr(), ptr.as_ptr(), src.len()) };
+        resident_add(src.len() as i64);
+        AlignedBytes { ptr, len: src.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: `ptr` is valid for `len` bytes for the lifetime of
+        // `self` and never written after construction.
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for AlignedBytes {
+    fn drop(&mut self) {
+        resident_add(-(self.len as i64));
+        // SAFETY: allocated in `copy_from` with this exact layout.
+        unsafe { std::alloc::dealloc(self.ptr.as_ptr(), Self::layout(self.len)) };
+    }
+}
+
+impl std::fmt::Debug for AlignedBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AlignedBytes({} bytes)", self.len)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WeightStore: the ownership seam.
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for u32 {}
+    impl Sealed for u64 {}
+}
+
+/// Element types a [`WeightStore`] may hold. Sealed to the three plain
+/// little-endian scalars the container stores (every bit pattern of
+/// each is a valid value, which the artifact-backed view relies on).
+pub trait Scalar:
+    Copy + PartialEq + Send + Sync + std::fmt::Debug + sealed::Sealed + 'static
+{
+}
+
+impl Scalar for f32 {}
+impl Scalar for u32 {}
+impl Scalar for u64 {}
+
+#[derive(Clone)]
+enum Backing<T: Scalar> {
+    /// Sampled in-process; shared by refcount when cloned.
+    Owned(Arc<[T]>),
+    /// A section of a loaded artifact region: `total` elements of `T`
+    /// starting `base` bytes into `bytes` (alignment and bounds
+    /// validated at construction).
+    Artifact { bytes: Arc<AlignedBytes>, base: usize, total: usize },
+}
+
+/// Read-only weight storage: either owned (sampling) or a view into a
+/// shared [`MapArtifact`] region (loading). Cloning never copies the
+/// elements, and sub-[`view`](WeightStore::view)s share the backing —
+/// which is what lets randomness recycling alias one pool from many
+/// blocks at zero marginal cost.
+#[derive(Clone)]
+pub struct WeightStore<T: Scalar> {
+    backing: Backing<T>,
+    off: usize,
+    len: usize,
+}
+
+impl<T: Scalar> WeightStore<T> {
+    /// Owned store over freshly sampled values.
+    pub fn from_vec(v: Vec<T>) -> Self {
+        let len = v.len();
+        WeightStore { backing: Backing::Owned(v.into()), off: 0, len }
+    }
+
+    /// A view of `len` elements at `off` *of the shared backing* (not
+    /// relative to `self`'s own window). Views alias: two views of one
+    /// store share storage byte-for-byte.
+    pub fn view(&self, off: usize, len: usize) -> Self {
+        let total = self.backing_slice().len();
+        assert!(
+            off.checked_add(len).is_some_and(|end| end <= total),
+            "weight view [{off}, {off}+{len}) out of bounds for backing of {total}"
+        );
+        WeightStore { backing: self.backing.clone(), off, len }
+    }
+
+    /// Artifact-backed view: `total` elements at byte offset `base` of
+    /// `bytes`, windowed to `[off, off + len)`. Validates alignment and
+    /// bounds once; `as_slice` is then branch-free.
+    pub(crate) fn artifact_view(
+        bytes: &Arc<AlignedBytes>,
+        base: usize,
+        total: usize,
+        off: usize,
+        len: usize,
+    ) -> Result<Self> {
+        let esize = std::mem::size_of::<T>();
+        let end = total
+            .checked_mul(esize)
+            .and_then(|b| base.checked_add(b))
+            .ok_or_else(|| data_err("artifact section size overflows"))?;
+        if end > bytes.len() {
+            return Err(data_err(format!(
+                "artifact section [{base}, {end}) out of bounds for region of {}",
+                bytes.len()
+            )));
+        }
+        if base % std::mem::align_of::<T>() != 0 {
+            return Err(data_err(format!("artifact section at byte {base} is misaligned")));
+        }
+        if off.checked_add(len).is_none_or(|e| e > total) {
+            return Err(data_err("artifact weight view out of bounds"));
+        }
+        Ok(WeightStore {
+            backing: Backing::Artifact { bytes: bytes.clone(), base, total },
+            off,
+            len,
+        })
+    }
+
+    /// The full shared backing (a recycled pool is larger than any one
+    /// view of it).
+    #[inline]
+    pub(crate) fn backing_slice(&self) -> &[T] {
+        match &self.backing {
+            Backing::Owned(v) => v,
+            Backing::Artifact { bytes, base, total } => {
+                // SAFETY: `base`/`total` were bounds- and alignment-
+                // checked against the immutable region in
+                // `artifact_view`, and `T` (sealed) admits every bit
+                // pattern.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        bytes.as_slice().as_ptr().add(*base) as *const T,
+                        *total,
+                    )
+                }
+            }
+        }
+    }
+
+    /// This store's window of the backing.
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        &self.backing_slice()[self.off..self.off + self.len]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Element offset of this view inside its backing.
+    pub(crate) fn view_off(&self) -> usize {
+        self.off
+    }
+
+    /// Stable identity of the backing storage — equal iff two stores
+    /// alias the same bytes. The serializer interns pools by this key,
+    /// which is how recycled stacks dedupe to one stored copy.
+    pub(crate) fn backing_id(&self) -> usize {
+        match &self.backing {
+            Backing::Owned(v) => v.as_ptr() as usize,
+            Backing::Artifact { bytes, base, .. } => bytes.as_slice().as_ptr() as usize + *base,
+        }
+    }
+
+    /// True when this store borrows from a loaded artifact region.
+    pub fn is_artifact_backed(&self) -> bool {
+        matches!(self.backing, Backing::Artifact { .. })
+    }
+}
+
+impl<T: Scalar> From<Vec<T>> for WeightStore<T> {
+    fn from(v: Vec<T>) -> Self {
+        WeightStore::from_vec(v)
+    }
+}
+
+impl<T: Scalar> PartialEq for WeightStore<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Scalar> std::fmt::Debug for WeightStore<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match &self.backing {
+            Backing::Owned(_) => "owned",
+            Backing::Artifact { .. } => "artifact",
+        };
+        write!(f, "WeightStore<{kind}>[{}; off {}]", self.len, self.off)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MapArtifact.
+
+/// One parsed section: `elems` elements of the section's scalar type at
+/// `byte_off` inside the region.
+#[derive(Clone, Copy, Debug, Default)]
+struct Section {
+    kind: u32,
+    byte_off: usize,
+    elems: usize,
+}
+
+/// A loaded (or freshly encoded) map in `RFDM0003` form: the validated
+/// header plus one shared read-only byte region holding every weight.
+/// `instantiate()` builds a [`RandomMaclaurin`] whose stores *borrow*
+/// from this region; cloning the map or handing it to more workers
+/// never copies weights.
+#[derive(Clone, Debug)]
+pub struct MapArtifact {
+    bytes: Arc<AlignedBytes>,
+    d: usize,
+    n_random: usize,
+    rows: usize,
+    p: f64,
+    h01: bool,
+    max_order: u32,
+    w_const: f32,
+    w_linear: f32,
+    proj_seed: u64,
+    structured: bool,
+    recycled: bool,
+    /// Kernel name as a `(byte_off, byte_len)` range into the region
+    /// (validated UTF-8), so parsing allocates nothing per-field.
+    kname: (usize, usize),
+    nsec: usize,
+    sections: [Section; MAX_SECTIONS],
+}
+
+/// Human-readable description of one section (for `rfdot map-info`).
+#[derive(Clone, Debug)]
+pub struct SectionInfo {
+    pub name: &'static str,
+    pub elems: usize,
+    pub bytes: usize,
+    pub byte_off: usize,
+}
+
+/// Header + sizing summary (for `rfdot map-info` and the bench sweep).
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub kind: &'static str,
+    pub recycled: bool,
+    pub d: usize,
+    pub n_random: usize,
+    pub rows: usize,
+    pub p: f64,
+    pub h01: bool,
+    pub max_order: u32,
+    pub kernel: String,
+    pub proj_seed: u64,
+    /// Total container size (header + table + sections).
+    pub total_bytes: usize,
+    /// Weight bytes actually stored (recycled pools counted once).
+    pub stored_weight_bytes: u64,
+    /// Weight bytes a per-tenant owned copy would pay (recycled views
+    /// counted at expanded size) — the "bytes per tenant" an artifact
+    /// amortizes away.
+    pub expanded_weight_bytes: u64,
+    pub sections: Vec<SectionInfo>,
+}
+
+impl MapArtifact {
+    /// Parse any RFDM record. `RFDM0003` is validated in place and
+    /// copied once into an aligned region; `RFDM0001`/`0002` records
+    /// are up-converted (decode via the legacy reader, re-encode as
+    /// v3) so every load path lands on the same zero-copy layout.
+    pub fn from_bytes(buf: &[u8]) -> Result<MapArtifact> {
+        if buf.len() >= 8 && &buf[..8] == MAGIC_V3 {
+            let art = Self::parse_v3(buf)?;
+            obs::counter("artifact.loads").add(1);
+            return Ok(art);
+        }
+        // Legacy records: the serialize module rejects malformed input,
+        // then the round-trip through `encode` preserves bit-identity
+        // (`instantiate().transform(x)` equals the legacy map's).
+        let map = serialize::from_bytes(buf)?;
+        let art = Self::parse_v3(&Self::encode(&map))?;
+        obs::counter("artifact.loads").add(1);
+        Ok(art)
+    }
+
+    /// Encode a sampled map and re-load it as a shared artifact.
+    pub fn from_map(map: &RandomMaclaurin) -> Result<MapArtifact> {
+        Self::from_bytes(&Self::encode(map))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<MapArtifact> {
+        let buf = std::fs::read(path)?;
+        Self::from_bytes(&buf)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.as_bytes())?;
+        Ok(())
+    }
+
+    /// The full container bytes (re-encoding a loaded artifact is
+    /// byte-identical: the region *is* the serialized form).
+    pub fn as_bytes(&self) -> &[u8] {
+        self.bytes.as_slice()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn n_random(&self) -> usize {
+        self.n_random
+    }
+
+    pub fn is_structured(&self) -> bool {
+        self.structured
+    }
+
+    pub fn is_recycled(&self) -> bool {
+        self.recycled
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn kernel_name(&self) -> &str {
+        let (off, len) = self.kname;
+        std::str::from_utf8(&self.bytes.as_slice()[off..off + len]).expect("validated at parse")
+    }
+
+    fn section_index(&self, kind: u32) -> Option<usize> {
+        self.sections[..self.nsec].iter().position(|s| s.kind == kind)
+    }
+
+    /// Typed view of section `i`. Alignment/bounds hold by parse-time
+    /// validation; callers pass the `T` matching the section kind.
+    fn section<T: Scalar>(&self, i: usize) -> &[T] {
+        let s = self.sections[i];
+        debug_assert_eq!(sec_elem_size(s.kind), std::mem::size_of::<T>());
+        // SAFETY: byte_off/elems validated against the immutable region
+        // in `parse_v3`; sections are 8-byte aligned; `T` is sealed to
+        // types where every bit pattern is valid.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.bytes.as_slice().as_ptr().add(s.byte_off) as *const T,
+                s.elems,
+            )
+        }
+    }
+
+    fn store<T: Scalar>(&self, i: usize, off: usize, len: usize) -> Result<WeightStore<T>> {
+        let s = self.sections[i];
+        WeightStore::artifact_view(&self.bytes, s.byte_off, s.elems, off, len)
+    }
+
+    // -- parsing ----------------------------------------------------------
+
+    fn parse_v3(buf: &[u8]) -> Result<MapArtifact> {
+        let mut r = serialize::Reader::new(buf);
+        if r.take(8)? != MAGIC_V3 {
+            return Err(data_err("bad magic in RFDM0003 blob"));
+        }
+        let flags = r.u32()?;
+        if flags & !(FLAG_STRUCTURED | FLAG_RECYCLED) != 0 {
+            return Err(data_err(format!("unknown RFDM0003 flags {flags:#x}")));
+        }
+        let structured = flags & FLAG_STRUCTURED != 0;
+        let recycled = flags & FLAG_RECYCLED != 0;
+        if recycled && !structured {
+            return Err(data_err("RFDM0003 recycled flag on a dense record"));
+        }
+        let d = r.u32()? as usize;
+        let n_random = r.u32()? as usize;
+        let p = r.f64()?;
+        let h01_byte = r.take(1)?[0];
+        if h01_byte > 1 {
+            return Err(data_err("non-canonical h01 byte in RFDM0003 header"));
+        }
+        if r.take(3)? != [0u8; 3] {
+            return Err(data_err("non-zero header padding in RFDM0003 blob"));
+        }
+        let max_order = r.u32()?;
+        let w_const = r.f32()?;
+        let w_linear = r.f32()?;
+        let proj_seed = r.u64()?;
+        if d == 0 || n_random == 0 || !(p > 1.0) {
+            return Err(data_err("invalid RFDM0003 header"));
+        }
+        let klen = r.u32()? as usize;
+        debug_assert_eq!(r.pos(), HEADER_BYTES);
+        let kname_off = r.pos();
+        let kbytes = r.take(klen)?;
+        if std::str::from_utf8(kbytes).is_err() {
+            return Err(data_err("kernel name in RFDM0003 blob is not UTF-8"));
+        }
+        let pad = (SEC_ALIGN - r.pos() % SEC_ALIGN) % SEC_ALIGN;
+        if r.take(pad)?.iter().any(|&b| b != 0) {
+            return Err(data_err("non-zero kernel-name padding in RFDM0003 blob"));
+        }
+        let nsec = r.u32()? as usize;
+        if r.u32()? != 0 {
+            return Err(data_err("non-zero section-count padding in RFDM0003 blob"));
+        }
+        let expected: &[u32] =
+            if structured { &STRUCTURED_SECTIONS } else { &DENSE_SECTIONS };
+        if nsec != expected.len() {
+            return Err(data_err(format!(
+                "RFDM0003 section count {nsec} does not match record kind"
+            )));
+        }
+        let mut sections = [Section::default(); MAX_SECTIONS];
+        for (i, sec) in sections.iter_mut().take(nsec).enumerate() {
+            let kind = r.u32()?;
+            if r.u32()? != 0 {
+                return Err(data_err("non-zero section-entry padding in RFDM0003 blob"));
+            }
+            let byte_off = usize::try_from(r.u64()?)
+                .map_err(|_| data_err("RFDM0003 section offset overflows"))?;
+            let elems = usize::try_from(r.u64()?)
+                .map_err(|_| data_err("RFDM0003 section length overflows"))?;
+            if kind != expected[i] {
+                return Err(data_err(format!(
+                    "unexpected RFDM0003 section kind {kind} at index {i} (want {})",
+                    expected[i]
+                )));
+            }
+            *sec = Section { kind, byte_off, elems };
+        }
+        // Canonical layout: each section starts where the previous one
+        // (8-aligned, zero-padded) ended, and the blob ends exactly at
+        // the padded end of the last section. This makes the encoding
+        // injective — re-encode of a parse is byte-identical.
+        let mut cursor = r.pos();
+        debug_assert_eq!(cursor % SEC_ALIGN, 0);
+        for sec in &sections[..nsec] {
+            if sec.byte_off != cursor {
+                return Err(data_err(format!(
+                    "non-canonical RFDM0003 section offset {} (want {cursor})",
+                    sec.byte_off
+                )));
+            }
+            let byte_len = sec
+                .elems
+                .checked_mul(sec_elem_size(sec.kind))
+                .ok_or_else(|| data_err("RFDM0003 section size overflows"))?;
+            let end = cursor
+                .checked_add(byte_len)
+                .ok_or_else(|| data_err("RFDM0003 section size overflows"))?;
+            if end > buf.len() {
+                return Err(data_err("truncated RFDM0003 section payload"));
+            }
+            let padded = align8(end);
+            if padded > buf.len() {
+                return Err(data_err("truncated RFDM0003 section padding"));
+            }
+            if buf[end..padded].iter().any(|&b| b != 0) {
+                return Err(data_err("non-zero RFDM0003 section padding"));
+            }
+            cursor = padded;
+        }
+        if cursor != buf.len() {
+            return Err(data_err("trailing bytes in RFDM0003 blob"));
+        }
+
+        // One allocation, one copy: the region is the blob.
+        let bytes = Arc::new(AlignedBytes::copy_from(buf));
+        let art = MapArtifact {
+            bytes,
+            d,
+            n_random,
+            rows: 0,
+            p,
+            h01: h01_byte == 1,
+            max_order,
+            w_const,
+            w_linear,
+            proj_seed,
+            structured,
+            recycled,
+            kname: (kname_off, klen),
+            nsec,
+            sections,
+        };
+        art.validate_content()
+    }
+
+    /// Cross-field validation of section contents (runs on the aligned
+    /// copy; every read below is bounds-checked by the section table
+    /// validation above). Returns `self` with `rows` filled in.
+    fn validate_content(mut self) -> Result<MapArtifact> {
+        let d = self.d;
+        let n_random = self.n_random;
+        let orders: &[u32] = self.section(0);
+        let weights: &[f32] = self.section(1);
+        let offsets: &[u32] = self.section(2);
+        if orders.len() != n_random || weights.len() != n_random {
+            return Err(data_err("RFDM0003 orders/weights length does not match n_random"));
+        }
+        if offsets.len() != n_random + 1 {
+            return Err(data_err("RFDM0003 offsets length is not n_random + 1"));
+        }
+        if offsets[0] != 0 {
+            return Err(data_err("RFDM0003 offsets do not start at zero"));
+        }
+        for i in 0..n_random {
+            if orders[i] > self.max_order {
+                return Err(data_err(format!(
+                    "RFDM0003 order {} exceeds max_order {}",
+                    orders[i], self.max_order
+                )));
+            }
+            if u64::from(offsets[i]) + u64::from(orders[i]) != u64::from(offsets[i + 1]) {
+                return Err(data_err("RFDM0003 offsets are not the running order sum"));
+            }
+        }
+        let rows = offsets[n_random] as usize;
+        self.rows = rows;
+
+        if self.structured {
+            let n = crate::linalg::next_pow2(d);
+            let scales_i = self.section_index(SEC_SCALES).expect("layout checked");
+            let n_blocks = self.sections[scales_i].elems;
+            let blocks: &[u32] = self.section(self.section_index(SEC_BLOCKS).expect("layout"));
+            if blocks.len() != n_blocks * BLOCK_WORDS {
+                return Err(data_err("RFDM0003 blocks section length mismatch"));
+            }
+            let signs_len = self.sections[self.section_index(SEC_SIGNS).expect("layout")].elems;
+            let perms_i = self.section_index(SEC_PERMS).expect("layout");
+            let perms_len = self.sections[perms_i].elems;
+            let gains_len = self.sections[self.section_index(SEC_GAINS).expect("layout")].elems;
+            let taps_i = self.section_index(SEC_TAPS).expect("layout");
+            let taps_len = self.sections[taps_i].elems;
+            let perms: &[u32] = self.section(perms_i);
+            let taps: &[u32] = self.section(taps_i);
+            let fits = |off: u32, len: usize, total: usize| (off as usize) + len <= total;
+            for b in 0..n_blocks {
+                let desc = &blocks[b * BLOCK_WORDS..(b + 1) * BLOCK_WORDS];
+                let [s_off, has_pg, p_off, g_off, t_off, n_taps] =
+                    [desc[0], desc[1], desc[2], desc[3], desc[4], desc[5]];
+                if !fits(s_off, n, signs_len) {
+                    return Err(data_err("RFDM0003 block signs view out of bounds"));
+                }
+                match has_pg {
+                    0 => {
+                        if p_off != 0 || g_off != 0 {
+                            return Err(data_err(
+                                "non-canonical RFDM0003 block without perm/gain",
+                            ));
+                        }
+                    }
+                    1 => {
+                        if !fits(p_off, n, perms_len) || !fits(g_off, n, gains_len) {
+                            return Err(data_err(
+                                "RFDM0003 block perm/gain view out of bounds",
+                            ));
+                        }
+                        let pv = &perms[p_off as usize..p_off as usize + n];
+                        if pv.iter().any(|&x| x as usize >= n) {
+                            return Err(data_err("RFDM0003 permutation entry out of range"));
+                        }
+                    }
+                    _ => return Err(data_err("invalid RFDM0003 block perm/gain flag")),
+                }
+                let t_len = (n_taps as usize)
+                    .checked_mul(2)
+                    .ok_or_else(|| data_err("RFDM0003 tap count overflows"))?;
+                if !fits(t_off, t_len, taps_len) {
+                    return Err(data_err("RFDM0003 block taps view out of bounds"));
+                }
+                let tv = &taps[t_off as usize..t_off as usize + t_len];
+                for t in tv.chunks_exact(2) {
+                    if t[0] as usize >= n {
+                        return Err(data_err("RFDM0003 tap slot out of range"));
+                    }
+                    if t[1] as usize >= rows {
+                        return Err(data_err("RFDM0003 tap row out of range"));
+                    }
+                }
+            }
+        } else {
+            let words_i = self.section_index(SEC_WORDS).expect("layout checked");
+            let expect = rows
+                .checked_mul(d.div_ceil(64))
+                .ok_or_else(|| data_err("RFDM0003 word count overflows"))?;
+            if self.sections[words_i].elems != expect {
+                return Err(data_err(format!(
+                    "RFDM0003 words length {} does not match rows {rows} × dim {d}",
+                    self.sections[words_i].elems
+                )));
+            }
+        }
+        Ok(self)
+    }
+
+    // -- instantiation ----------------------------------------------------
+
+    /// Build a [`RandomMaclaurin`] whose every weight store borrows
+    /// from this artifact's shared region. Infallible modulo the
+    /// validation already performed at parse; cheap (no weight copies —
+    /// the counting-allocator test pins this).
+    pub fn instantiate(&self) -> Result<RandomMaclaurin> {
+        let orders = self.store::<u32>(0, 0, self.n_random)?;
+        let weights = self.store::<f32>(1, 0, self.n_random)?;
+        let offsets = self.store::<u32>(2, 0, self.n_random + 1)?;
+        let projection =
+            if self.structured { ProjectionKind::Structured } else { ProjectionKind::Dense };
+        let config = RmConfig::default()
+            .with_p(self.p)
+            .with_h01(self.h01)
+            .with_max_order(self.max_order)
+            .with_projection(projection)
+            .with_recycle(self.recycled);
+        let (omegas, structured) = if self.structured {
+            let n = crate::linalg::next_pow2(self.d);
+            let scales_i = self.section_index(SEC_SCALES).expect("layout");
+            let blocks_i = self.section_index(SEC_BLOCKS).expect("layout");
+            let signs_i = self.section_index(SEC_SIGNS).expect("layout");
+            let perms_i = self.section_index(SEC_PERMS).expect("layout");
+            let gains_i = self.section_index(SEC_GAINS).expect("layout");
+            let taps_i = self.section_index(SEC_TAPS).expect("layout");
+            let n_blocks = self.sections[scales_i].elems;
+            let scales: &[f32] = self.section(scales_i);
+            let descs: &[u32] = self.section(blocks_i);
+            let mut blocks = Vec::with_capacity(n_blocks);
+            for b in 0..n_blocks {
+                let desc = &descs[b * BLOCK_WORDS..(b + 1) * BLOCK_WORDS];
+                let signs = self.store::<f32>(signs_i, desc[0] as usize, n)?;
+                let perm_gain = if desc[1] == 1 {
+                    Some((
+                        self.store::<u32>(perms_i, desc[2] as usize, n)?,
+                        self.store::<f32>(gains_i, desc[3] as usize, n)?,
+                    ))
+                } else {
+                    None
+                };
+                let taps =
+                    self.store::<u32>(taps_i, desc[4] as usize, desc[5] as usize * 2)?;
+                blocks.push(HdBlock { signs, perm_gain, taps, scale: scales[b] });
+            }
+            let proj = StructuredProjection::from_blocks(self.d, self.rows, blocks);
+            (RademacherMatrix::from_words(0, self.d, Vec::new()), Some(proj))
+        } else {
+            let words_i = self.section_index(SEC_WORDS).expect("layout");
+            let words = self.store::<u64>(words_i, 0, self.sections[words_i].elems)?;
+            (RademacherMatrix::from_store(self.rows, self.d, words), None)
+        };
+        Ok(RandomMaclaurin::from_artifact_parts(
+            self.d,
+            self.n_random,
+            config,
+            orders,
+            weights,
+            offsets,
+            omegas,
+            structured,
+            self.proj_seed,
+            self.w_const,
+            self.w_linear,
+            self.kernel_name().to_string(),
+        ))
+    }
+
+    // -- encoding ---------------------------------------------------------
+
+    /// Serialize a map into the v3 container. Deterministic; pools are
+    /// interned by backing identity, so recycled stacks (and re-encodes
+    /// of artifact-backed maps, which alias one region) store each
+    /// shared pool exactly once.
+    pub fn encode(map: &RandomMaclaurin) -> Vec<u8> {
+        let structured = map.is_structured();
+        let recycled = structured && map.config().recycle;
+        let mut flags = 0u32;
+        if structured {
+            flags |= FLAG_STRUCTURED;
+        }
+        if recycled {
+            flags |= FLAG_RECYCLED;
+        }
+        let kname = map.kernel_name().as_bytes();
+
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC_V3);
+        put_u32(&mut out, flags);
+        put_u32(&mut out, map.input_dim() as u32);
+        put_u32(&mut out, map.n_random() as u32);
+        out.extend_from_slice(&map.config().p.to_le_bytes());
+        out.push(map.config().h01 as u8);
+        out.extend_from_slice(&[0u8; 3]);
+        put_u32(&mut out, map.config().max_order);
+        out.extend_from_slice(&map.w_const().to_le_bytes());
+        out.extend_from_slice(&map.w_linear().to_le_bytes());
+        out.extend_from_slice(&map.proj_seed().to_le_bytes());
+        put_u32(&mut out, kname.len() as u32);
+        debug_assert_eq!(out.len(), HEADER_BYTES);
+        out.extend_from_slice(kname);
+        while out.len() % SEC_ALIGN != 0 {
+            out.push(0);
+        }
+
+        // Gather section payloads.
+        enum SecData {
+            U32(Vec<u32>),
+            F32(Vec<f32>),
+            U64(Vec<u64>),
+        }
+        impl SecData {
+            fn elems(&self) -> usize {
+                match self {
+                    SecData::U32(v) => v.len(),
+                    SecData::F32(v) => v.len(),
+                    SecData::U64(v) => v.len(),
+                }
+            }
+            fn write(&self, out: &mut Vec<u8>) {
+                match self {
+                    SecData::U32(v) => v.iter().for_each(|x| put_u32(out, *x)),
+                    SecData::F32(v) => {
+                        v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes()))
+                    }
+                    SecData::U64(v) => {
+                        v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes()))
+                    }
+                }
+            }
+        }
+        let mut secs: Vec<(u32, SecData)> = vec![
+            (SEC_ORDERS, SecData::U32(map.orders().to_vec())),
+            (SEC_WEIGHTS, SecData::F32(map.weights().to_vec())),
+            (SEC_OFFSETS, SecData::U32(map.offsets().to_vec())),
+        ];
+        if structured {
+            let proj = map
+                .structured_projection()
+                .expect("structured map carries a projection");
+            let mut scales = Vec::new();
+            let mut descs: Vec<u32> = Vec::new();
+            let mut signs_pool: Vec<f32> = Vec::new();
+            let mut perms_pool: Vec<u32> = Vec::new();
+            let mut gains_pool: Vec<f32> = Vec::new();
+            let mut taps_pool: Vec<u32> = Vec::new();
+            // Interning tables: backing identity → element base in the
+            // pool section. Aliased stores serialize once.
+            let mut seen_signs = std::collections::HashMap::new();
+            let mut seen_perms = std::collections::HashMap::new();
+            let mut seen_gains = std::collections::HashMap::new();
+            let mut seen_taps = std::collections::HashMap::new();
+            fn intern<T: Scalar>(
+                pool: &mut Vec<T>,
+                seen: &mut std::collections::HashMap<usize, usize>,
+                store: &WeightStore<T>,
+            ) -> u32 {
+                let base = *seen.entry(store.backing_id()).or_insert_with(|| {
+                    let at = pool.len();
+                    pool.extend_from_slice(store.backing_slice());
+                    at
+                });
+                u32::try_from(base + store.view_off()).expect("pool offset fits u32")
+            }
+            for block in proj.blocks() {
+                scales.push(block.scale);
+                let s_off = intern(&mut signs_pool, &mut seen_signs, &block.signs);
+                let (has_pg, p_off, g_off) = match &block.perm_gain {
+                    Some((perm, gain)) => (
+                        1,
+                        intern(&mut perms_pool, &mut seen_perms, perm),
+                        intern(&mut gains_pool, &mut seen_gains, gain),
+                    ),
+                    None => (0, 0, 0),
+                };
+                let t_off = intern(&mut taps_pool, &mut seen_taps, &block.taps);
+                let n_taps = u32::try_from(block.taps.len() / 2).expect("tap count fits u32");
+                descs.extend_from_slice(&[s_off, has_pg, p_off, g_off, t_off, n_taps]);
+            }
+            secs.push((SEC_SCALES, SecData::F32(scales)));
+            secs.push((SEC_BLOCKS, SecData::U32(descs)));
+            secs.push((SEC_SIGNS, SecData::F32(signs_pool)));
+            secs.push((SEC_PERMS, SecData::U32(perms_pool)));
+            secs.push((SEC_GAINS, SecData::F32(gains_pool)));
+            secs.push((SEC_TAPS, SecData::U32(taps_pool)));
+        } else {
+            secs.push((SEC_WORDS, SecData::U64(map.omegas().words().to_vec())));
+        }
+
+        // Section table, then 8-aligned payloads.
+        put_u32(&mut out, secs.len() as u32);
+        put_u32(&mut out, 0);
+        let mut cursor = out.len() + secs.len() * 24;
+        debug_assert_eq!(cursor % SEC_ALIGN, 0);
+        for (kind, data) in &secs {
+            put_u32(&mut out, *kind);
+            put_u32(&mut out, 0);
+            out.extend_from_slice(&(cursor as u64).to_le_bytes());
+            out.extend_from_slice(&(data.elems() as u64).to_le_bytes());
+            cursor = align8(cursor + data.elems() * sec_elem_size(*kind));
+        }
+        for (_, data) in &secs {
+            data.write(&mut out);
+            while out.len() % SEC_ALIGN != 0 {
+                out.push(0);
+            }
+        }
+        debug_assert_eq!(out.len(), cursor);
+        out
+    }
+
+    // -- reporting --------------------------------------------------------
+
+    pub fn info(&self) -> ArtifactInfo {
+        let mut sections = Vec::with_capacity(self.nsec);
+        let mut stored = 0u64;
+        for s in &self.sections[..self.nsec] {
+            let bytes = s.elems * sec_elem_size(s.kind);
+            stored += bytes as u64;
+            sections.push(SectionInfo {
+                name: sec_name(s.kind),
+                elems: s.elems,
+                bytes,
+                byte_off: s.byte_off,
+            });
+        }
+        ArtifactInfo {
+            kind: if self.structured { "structured" } else { "dense" },
+            recycled: self.recycled,
+            d: self.d,
+            n_random: self.n_random,
+            rows: self.rows,
+            p: self.p,
+            h01: self.h01,
+            max_order: self.max_order,
+            kernel: self.kernel_name().to_string(),
+            proj_seed: self.proj_seed,
+            total_bytes: self.total_bytes(),
+            stored_weight_bytes: stored,
+            expanded_weight_bytes: self.expanded_weight_bytes(),
+            sections,
+        }
+    }
+
+    /// Weight bytes an *owned* copy of this map would hold: every block
+    /// view counted at its expanded size, shared pools multiply. The
+    /// gap to `stored_weight_bytes` is what recycling + sharing saves
+    /// per tenant.
+    pub fn expanded_weight_bytes(&self) -> u64 {
+        let base = (self.n_random * 4 + self.n_random * 4 + (self.n_random + 1) * 4) as u64;
+        if !self.structured {
+            let words_i = self.section_index(SEC_WORDS).expect("layout");
+            return base + self.sections[words_i].elems as u64 * 8;
+        }
+        let n = crate::linalg::next_pow2(self.d) as u64;
+        let blocks_i = self.section_index(SEC_BLOCKS).expect("layout");
+        let descs: &[u32] = self.section(blocks_i);
+        let mut total = base;
+        for desc in descs.chunks_exact(BLOCK_WORDS) {
+            total += n * 4; // signs
+            if desc[1] == 1 {
+                total += n * 4 + n * 4; // perm + gain
+            }
+            total += u64::from(desc[5]) * 2 * 4 + 4; // taps + scale
+        }
+        total
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Exponential, Polynomial};
+    use crate::maclaurin::FeatureMap;
+    use crate::rng::Rng;
+
+    fn sample_map(structured: bool, recycle: bool, seed: u64) -> RandomMaclaurin {
+        let kind = if structured { ProjectionKind::Structured } else { ProjectionKind::Dense };
+        RandomMaclaurin::sample(
+            &Polynomial::new(4, 0.5),
+            17,
+            40,
+            RmConfig::default().with_projection(kind).with_recycle(recycle),
+            &mut Rng::seed_from(seed),
+        )
+    }
+
+    fn probe(d: usize) -> Vec<f32> {
+        (0..d).map(|k| ((k * 7 + 3) as f32 * 0.173).sin()).collect()
+    }
+
+    #[test]
+    fn weight_store_views_alias_their_backing() {
+        let store = WeightStore::from_vec(vec![1u32, 2, 3, 4, 5, 6]);
+        let a = store.view(1, 3);
+        let b = store.view(1, 3);
+        assert_eq!(a.as_slice(), &[2, 3, 4]);
+        assert_eq!(a.backing_id(), b.backing_id());
+        assert_eq!(a, b);
+        let shifted = store.view(3, 3);
+        assert_eq!(shifted.as_slice(), &[4, 5, 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn weight_store_view_rejects_overflow() {
+        let store = WeightStore::from_vec(vec![0f32; 4]);
+        let _ = store.view(3, 2);
+    }
+
+    #[test]
+    fn aligned_bytes_are_page_aligned_and_tracked() {
+        let before = resident_bytes();
+        let region = AlignedBytes::copy_from(&[7u8; 100]);
+        assert_eq!(region.as_slice().as_ptr() as usize % AlignedBytes::ALIGN, 0);
+        assert_eq!(region.as_slice(), &[7u8; 100]);
+        assert_eq!(resident_bytes(), before + 100);
+        drop(region);
+        assert_eq!(resident_bytes(), before);
+    }
+
+    #[test]
+    fn v3_roundtrip_is_byte_identical_and_transform_exact() {
+        for structured in [false, true] {
+            let map = sample_map(structured, false, 99);
+            let bytes = MapArtifact::encode(&map);
+            let art = MapArtifact::from_bytes(&bytes).expect("parse own encoding");
+            assert_eq!(art.as_bytes(), &bytes[..], "region is the serialized form");
+            let thin = art.instantiate().expect("instantiate");
+            let x = probe(17);
+            assert_eq!(thin.transform(&x), map.transform(&x), "structured={structured}");
+            // Re-encode of the artifact-backed map: byte-identical.
+            assert_eq!(MapArtifact::encode(&thin), bytes);
+        }
+    }
+
+    #[test]
+    fn legacy_records_up_convert_bit_for_bit() {
+        for structured in [false, true] {
+            let map = sample_map(structured, false, 5);
+            let legacy = serialize::to_bytes(&map);
+            let art = MapArtifact::from_bytes(&legacy).expect("up-convert");
+            let thin = art.instantiate().expect("instantiate");
+            let x = probe(17);
+            assert_eq!(thin.transform(&x), map.transform(&x), "structured={structured}");
+        }
+    }
+
+    #[test]
+    fn recycled_stack_stores_pools_once() {
+        let plain = sample_map(true, false, 42);
+        let recycled = sample_map(true, true, 42);
+        let plain_bytes = MapArtifact::encode(&plain).len();
+        let recycled_bytes = MapArtifact::encode(&recycled).len();
+        assert!(
+            recycled_bytes < plain_bytes,
+            "recycling should shrink serialized structured state \
+             ({recycled_bytes} vs {plain_bytes})"
+        );
+        // And the recycled record round-trips exactly.
+        let art = MapArtifact::from_bytes(&MapArtifact::encode(&recycled)).unwrap();
+        assert!(art.is_recycled());
+        let x = probe(17);
+        assert_eq!(art.instantiate().unwrap().transform(&x), recycled.transform(&x));
+    }
+
+    #[test]
+    fn expanded_bytes_exceed_stored_bytes_for_recycled_maps() {
+        let art = MapArtifact::from_map(&sample_map(true, true, 7)).unwrap();
+        let info = art.info();
+        assert!(
+            info.expanded_weight_bytes > info.stored_weight_bytes,
+            "recycled map-info must show savings: expanded {} stored {}",
+            info.expanded_weight_bytes,
+            info.stored_weight_bytes
+        );
+        let plain = MapArtifact::from_map(&sample_map(true, false, 7)).unwrap().info();
+        assert_eq!(
+            plain.expanded_weight_bytes, plain.stored_weight_bytes,
+            "unrecycled structured maps store exactly their expanded state"
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_v3_blobs() {
+        let good = MapArtifact::encode(&sample_map(true, false, 3));
+        assert!(MapArtifact::from_bytes(&good).is_ok());
+        // Truncation anywhere must error, never panic.
+        for cut in [4, 20, 57, good.len() / 2, good.len() - 1] {
+            assert!(MapArtifact::from_bytes(&good[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing bytes are non-canonical.
+        let mut extra = good.clone();
+        extra.extend_from_slice(&[0u8; 8]);
+        assert!(MapArtifact::from_bytes(&extra).is_err());
+        // Unknown flag bits are rejected.
+        let mut flags = good.clone();
+        flags[8] |= 0x80;
+        assert!(MapArtifact::from_bytes(&flags).is_err());
+    }
+
+    #[test]
+    fn artifact_loads_counter_ticks() {
+        let c = obs::counter("artifact.loads");
+        let before = c.get();
+        let _ = MapArtifact::from_map(&sample_map(false, false, 1)).unwrap();
+        assert!(c.get() > before);
+    }
+}

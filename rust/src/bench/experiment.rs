@@ -116,7 +116,8 @@ pub fn run_random_features(
     let rm_config = RmConfig::default()
         .with_p(prep.config.p)
         .with_h01(h01)
-        .with_projection(prep.config.projection);
+        .with_projection(prep.config.projection)
+        .with_recycle(prep.config.recycle);
 
     let sw = Stopwatch::start();
     let map = RandomMaclaurin::sample(
@@ -225,11 +226,12 @@ pub fn run_variant(prep: &Prepared, variant: &MapVariant, seed_offset: u64) -> R
             let sigma2 = kernel_sigma2(prep);
             let mut rng = Rng::seed_from(prep.config.seed ^ 0xF0F0 ^ seed_offset);
             let sw = Stopwatch::start();
-            let map = RandomFourier::sample_with(
+            let map = RandomFourier::sample_with_opts(
                 0.5 / sigma2,
                 prep.train.dim(),
                 *d,
                 prep.config.projection,
+                prep.config.recycle,
                 &mut rng,
             );
             Ok(finish_linear(prep, &map, variant.label(), sw))

@@ -10,6 +10,7 @@
 //! rfdot serve [flags]            # serving demo over the coordinator
 //! rfdot bench-diff A B [flags]   # regression gate over bench baselines
 //! rfdot trace-check FILE         # validate a Chrome trace_event export
+//! rfdot map-info FILE            # inspect a serialized map record
 //! ```
 
 pub mod args;
@@ -32,6 +33,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "serve" => commands::serve(&mut args),
         "bench-diff" => commands::bench_diff(&mut args),
         "trace-check" => commands::trace_check(&mut args),
+        "map-info" => commands::map_info(&mut args),
         "help" | "" => {
             print!("{}", HELP);
             Ok(())
@@ -79,6 +81,14 @@ COMMANDS:
   trace-check   validate a Chrome trace_event JSON file: parses, has
                 traceEvents, and every begin pairs with its end
                   rfdot trace-check trace.json
+  map-info      inspect a serialized feature-map record (any RFDM
+                version; legacy records are shown up-converted to the
+                zero-copy RFDM0003 artifact layout): header fields,
+                section table, stored vs per-tenant weight bytes
+                  rfdot map-info map.rfdm
+                  rfdot map-info --selftest  (CI smoke: up-convert
+                  every record kind, verify bit-identical transforms,
+                  check recycling shrinks the container)
   help          this message
 
   --projection dense|structured
@@ -86,6 +96,11 @@ COMMANDS:
                 an explicit matrix (dense, the default) or FWHT-backed
                 HD blocks (structured, O(D log d) per input; served
                 natively — combine with --native for `serve`).
+  --recycle     recycle randomness across structured HD/Fastfood
+                blocks: blocks draw from one shared pool inside the
+                map artifact instead of independent per-block samples
+                (smaller serialized/shared state). Default off — the
+                default numerics stay bit-identical.
   --threads N   data-parallel CPU workers for the hot paths (default:
                 auto-detect, or the RFDOT_THREADS env var). For `serve`
                 this is the intra-op thread count per worker batch and

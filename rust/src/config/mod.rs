@@ -126,6 +126,13 @@ pub struct ExperimentConfig {
     /// Results are unchanged by the crate's sparse parity contract;
     /// only the cost model moves.
     pub sparse: bool,
+    /// Recycle randomness across structured HD/Fastfood blocks (JSON:
+    /// `"recycle"`): blocks draw their Rademacher/Gaussian state from
+    /// one shared pool in the map artifact instead of independent
+    /// per-block samples, shrinking serialized state. Default off so
+    /// the default numerics stay bit-identical; no effect on dense
+    /// projections.
+    pub recycle: bool,
     /// Kernel-dispatch override for the [`crate::simd`] layer (JSON:
     /// `"simd": "scalar" | "auto"`); `None` leaves the process-global
     /// knob untouched (auto-detect or `RFDOT_SIMD`).
@@ -154,6 +161,7 @@ impl Default for ExperimentConfig {
             threads: 0,
             projection: ProjectionKind::Dense,
             sparse: false,
+            recycle: false,
             simd: None,
             trace: None,
         }
@@ -203,6 +211,9 @@ impl ExperimentConfig {
         }
         if let Some(b) = v.get("sparse").and_then(Json::as_bool) {
             cfg.sparse = b;
+        }
+        if let Some(b) = v.get("recycle").and_then(Json::as_bool) {
+            cfg.recycle = b;
         }
         if let Some(s) = v.get("simd").and_then(Json::as_str) {
             cfg.simd = Some(crate::simd::SimdMode::parse(s)?);
@@ -547,6 +558,9 @@ mod tests {
         assert!(!cfg.sparse);
         let sparse = ExperimentConfig::from_json(r#"{"sparse": true}"#).unwrap();
         assert!(sparse.sparse);
+        assert!(!cfg.recycle, "recycling must default off (bit-identical numerics)");
+        let recycled = ExperimentConfig::from_json(r#"{"recycle": true}"#).unwrap();
+        assert!(recycled.recycle);
         // The simd knob parses but is only *applied* by consumers
         // (run_row), so decoding here never mutates the global mode.
         assert_eq!(cfg.simd, None);

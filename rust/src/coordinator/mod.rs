@@ -6,17 +6,16 @@
 //! is the production shell around that hot path:
 //!
 //! ```text
-//! clients ──submit(x)──────────▶ bounded queue ──▶ batcher thread
-//!         ──submit_callback──▶                        │ (coalesce ≤ max_batch
-//!         ──submit_batch tail─▶                       │  within max_wait)
-//!                                                     ▼
-//!         ──submit_batch(xs)── full max_batch chunks ─▶
-//!                              (bypass the batcher)   ▼
-//!                               shard 0 ─▶ worker 0  (round-robin push,
-//!                               shard 1 ─▶ worker 1   own shard first,
-//!                               ...        ...        steal when dry)
-//!                                            │ thread-local Backend::run_batch
-//!                                            ▼
+//! clients ──submit(x)────────▶ lane 0 ──▶ batcher 0 ──▶ shard 0 ─▶ worker 0
+//!         ──submit_callback─▶ lane 1 ──▶ batcher 1 ──▶ shard 1 ─▶ worker 1
+//!         ──submit_batch tail▶  ...        ...           ...        ...
+//!            (round-robin lane; each batcher coalesces  (own shard first,
+//!             ≤ max_batch within max_wait, feeds its     steal when dry)
+//!             own home shard)
+//!         ──submit_batch(xs)── full max_batch chunks ──▶ shards
+//!                              (bypass lanes + batchers)   │
+//!                                            thread-local Backend::run_batch
+//!                                                          ▼
 //!                               per-request replies (channel / batch
 //!                               slot / completion callback)
 //! ```
@@ -28,9 +27,19 @@
 //!   is gone. `shards = 1` reproduces the old shared-queue topology
 //!   (kept as the bench baseline). Shard choice is scheduling, never
 //!   semantics: replies are bit-identical for any shard count.
-//! * **Backpressure** — the submit queue is bounded; when full, callers
-//!   get [`Error::Coordinator`] instead of unbounded memory growth. The
-//!   shard queues are bounded too (the batcher blocks, clients do not).
+//! * **Sharded ingress** — the submit side is a set of bounded lanes,
+//!   one per shard, each fronted by its own `sync_channel` and drained
+//!   by its own batcher thread feeding its home shard — the same
+//!   topology the worker-side deques use, so a single hot ingress
+//!   channel never serializes a multi-shard pool. Submitters
+//!   round-robin the lanes; lane choice is scheduling, never
+//!   semantics (`shards = 1` reproduces the old single-queue path
+//!   exactly).
+//! * **Backpressure** — every submit lane is bounded (total depth
+//!   `queue_depth` split across lanes); when all lanes are full,
+//!   callers get [`Error::Coordinator`] instead of unbounded memory
+//!   growth. The shard queues are bounded too (batchers block,
+//!   clients do not).
 //! * **Async submission** — [`Ticket::poll`] is the non-blocking
 //!   counterpart of [`Ticket::wait`], and
 //!   [`Coordinator::submit_callback`] invokes a completion callback on
@@ -81,8 +90,8 @@
 pub mod backend;
 
 pub use backend::{
-    Backend, BackendFactory, BackendSpec, ClosureFactory, NativeBackend, NativeFactory,
-    PjrtBucketedBackend, PjrtBucketedFactory, PjrtScoreBackend, PjrtScoreFactory,
+    Backend, BackendFactory, BackendSpec, ClosureFactory, MapArtifactFactory, NativeBackend,
+    NativeFactory, PjrtBucketedBackend, PjrtBucketedFactory, PjrtScoreBackend, PjrtScoreFactory,
     PjrtTransformBackend, PjrtTransformFactory,
 };
 
@@ -579,7 +588,9 @@ impl Drop for WorkerGuard {
 /// vectors with [`Coordinator::submit`] (or the batch/callback/sparse
 /// variants), stop with [`Coordinator::shutdown`] (also runs on drop).
 pub struct Coordinator {
-    submit_tx: Option<SyncSender<Job>>,
+    /// Per-shard submit lanes (one bounded channel per shard, each
+    /// drained by its own batcher). `None` after shutdown.
+    submit_tx: Option<Vec<SyncSender<Job>>>,
     threads: Vec<std::thread::JoinHandle<()>>,
     queues: Arc<ShardQueues>,
     stats: Arc<Stats>,
@@ -588,9 +599,13 @@ pub struct Coordinator {
     /// chunk size for the pre-formed full-batch bypass.
     max_batch: usize,
     /// Round-robin shard cursor for directly pushed batches; the
-    /// batcher keeps its own, and shard choice is scheduling, never
-    /// semantics, so the two cursors need no coordination.
+    /// batchers keep their own home shards, and shard choice is
+    /// scheduling, never semantics, so the cursors need no
+    /// coordination.
     direct_shard: AtomicUsize,
+    /// Round-robin cursor over the submit lanes — like `direct_shard`,
+    /// purely scheduling.
+    ingress_cursor: AtomicUsize,
 }
 
 impl Coordinator {
@@ -601,23 +616,32 @@ impl Coordinator {
         let max_batch = config.max_batch.min(spec.max_batch).max(1);
         let workers = config.workers.max(1);
         let shards = if config.shards == 0 { workers } else { config.shards };
-        let (submit_tx, submit_rx) = sync_channel::<Job>(config.queue_depth);
         // Pool-wide batch bound: enough to keep workers busy without
         // hoarding requests away from latency accounting.
         let queues = Arc::new(ShardQueues::new(shards, workers, (workers * 2).max(shards)));
 
         let mut threads = Vec::new();
 
-        // Batcher thread.
-        {
+        // Per-shard ingress: one bounded lane + one batcher per shard,
+        // mirroring the worker-side deque topology. The total submit
+        // depth stays `queue_depth`, split across the lanes. The last
+        // batcher to see its lane close closes the shard queues
+        // (`ShardQueues::close` is idempotent, so the race is benign).
+        let lane_depth = (config.queue_depth / shards).max(1);
+        let batchers_alive = Arc::new(AtomicUsize::new(shards));
+        let mut submit_tx = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let (lane_tx, lane_rx) = sync_channel::<Job>(lane_depth);
+            submit_tx.push(lane_tx);
             let stats = stats.clone();
             let queues = queues.clone();
             let max_wait = config.max_wait;
+            let alive = batchers_alive.clone();
             threads.push(
                 std::thread::Builder::new()
-                    .name("rfdot-batcher".into())
+                    .name(format!("rfdot-batcher-{s}"))
                     .spawn(move || {
-                        batcher_loop(submit_rx, queues, max_batch, max_wait, stats);
+                        batcher_loop(lane_rx, s, queues, max_batch, max_wait, stats, alive);
                     })
                     .expect("spawn batcher"),
             );
@@ -647,6 +671,7 @@ impl Coordinator {
             spec,
             max_batch,
             direct_shard: AtomicUsize::new(0),
+            ingress_cursor: AtomicUsize::new(0),
         }
     }
 
@@ -826,28 +851,35 @@ impl Coordinator {
     }
 
     fn enqueue(&self, job: Job) -> Result<()> {
-        let tx = match self.submit_tx.as_ref() {
-            Some(tx) => tx,
+        let lanes = match self.submit_tx.as_ref() {
+            Some(lanes) => lanes,
             None => {
                 job.disarm();
                 return Err(Error::Coordinator("coordinator is shut down".into()));
             }
         };
-        match tx.try_send(job) {
-            Ok(()) => {
-                self.stats.submitted.fetch_add(1, Ordering::Relaxed);
-                Ok(())
-            }
-            Err(TrySendError::Full(job)) => {
-                job.disarm();
-                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(Error::Coordinator("queue full (backpressure)".into()))
-            }
-            Err(TrySendError::Disconnected(job)) => {
-                job.disarm();
-                Err(Error::Coordinator("coordinator is shut down".into()))
+        // Round-robin the submit lanes; a full lane falls through to
+        // the next one, so backpressure only fires when every lane is
+        // full. Lane choice is scheduling, never semantics.
+        let start = self.ingress_cursor.fetch_add(1, Ordering::Relaxed);
+        let mut job = job;
+        for k in 0..lanes.len() {
+            let lane = (start + k) % lanes.len();
+            match lanes[lane].try_send(job) {
+                Ok(()) => {
+                    self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err(TrySendError::Full(j)) => job = j,
+                Err(TrySendError::Disconnected(j)) => {
+                    j.disarm();
+                    return Err(Error::Coordinator("coordinator is shut down".into()));
+                }
             }
         }
+        job.disarm();
+        self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+        Err(Error::Coordinator("queue full (backpressure)".into()))
     }
 
     /// Convenience: submit and wait.
@@ -907,7 +939,7 @@ impl Coordinator {
     /// `shutdown_fails_queued_unserved_tickets_explicitly` in
     /// `rust/tests/serve_shard.rs`).
     pub fn shutdown(&mut self) {
-        self.submit_tx.take(); // closes the submit queue
+        self.submit_tx.take(); // closes every submit lane
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -931,20 +963,25 @@ impl Drop for Coordinator {
 
 fn batcher_loop(
     submit_rx: Receiver<Job>,
+    home: usize,
     queues: Arc<ShardQueues>,
     max_batch: usize,
     max_wait: Duration,
     stats: Arc<Stats>,
+    batchers_alive: Arc<AtomicUsize>,
 ) {
-    let shards = queues.shards.len();
-    let mut next = 0usize;
     loop {
         // Block for the first job of the batch.
         let first = match submit_rx.recv() {
             Ok(j) => j,
             Err(_) => {
-                // Submit side closed and drained: let workers finish.
-                queues.close();
+                // This lane closed and drained; the last batcher out
+                // closes the shard queues so workers finish. (`close`
+                // is idempotent — the AcqRel decrement just keeps the
+                // close after every lane's final push.)
+                if batchers_alive.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    queues.close();
+                }
                 return;
             }
         };
@@ -964,13 +1001,13 @@ fn batcher_loop(
         }
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.batched_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        // Round-robin shard assignment; stealing rebalances stragglers.
-        if let Err(batch) = queues.push(next % shards, batch) {
+        // Each batcher feeds its own home shard (lane s → shard s);
+        // stealing rebalances stragglers.
+        if let Err(batch) = queues.push(home, batch) {
             // Every worker is gone (they only die by panicking): answer
             // the accepted jobs instead of hanging their waits.
             answer_all_err(batch, "no live workers to serve the request", &stats, None);
         }
-        next = next.wrapping_add(1);
     }
 }
 

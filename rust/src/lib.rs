@@ -77,6 +77,7 @@
 //! assert_eq!(z.len(), 512);
 //! ```
 
+pub mod artifact;
 pub mod bench;
 pub mod cli;
 pub mod config;

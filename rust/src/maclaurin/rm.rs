@@ -51,6 +51,7 @@
 use crate::features::{FeatureMap, Scratch};
 use crate::kernels::DotProductKernel;
 use crate::rng::{Geometric, RademacherMatrix, Rng};
+use crate::artifact::WeightStore;
 use crate::structured::{DenseProjection, Projection, ProjectionKind, StructuredProjection};
 
 /// Sampling configuration for [`RandomMaclaurin`].
@@ -80,6 +81,14 @@ pub struct RmConfig {
     /// stack or the subquadratic FWHT-backed HD blocks (see the module
     /// docs for the statistical trade-off). Default dense.
     pub projection: ProjectionKind,
+    /// Randomness recycling (Choromanski & Sindhwani) for structured
+    /// stacks: HD/Fastfood blocks draw their per-block state as views
+    /// into one shared pool instead of independent samples, shrinking
+    /// sampled (and serialized) state toward `O(d)`. Default **off** so
+    /// numerics stay bit-identical to the unrecycled build; see
+    /// [`StructuredProjection::rademacher_for_segments_opts`] for the
+    /// statistical fine print. No effect on dense maps.
+    pub recycle: bool,
 }
 
 impl Default for RmConfig {
@@ -90,6 +99,7 @@ impl Default for RmConfig {
             max_order: 30,
             restrict_support: true,
             projection: ProjectionKind::Dense,
+            recycle: false,
         }
     }
 }
@@ -117,6 +127,11 @@ impl RmConfig {
 
     pub fn with_projection(mut self, kind: ProjectionKind) -> Self {
         self.projection = kind;
+        self
+    }
+
+    pub fn with_recycle(mut self, on: bool) -> Self {
+        self.recycle = on;
         self
     }
 }
@@ -183,14 +198,17 @@ pub struct RandomMaclaurin {
     /// Number of random coordinates `D` (excludes H0/1 exact terms).
     n_random: usize,
     config: RmConfig,
-    /// Sampled order `N_i` per random feature.
-    orders: Vec<u32>,
+    /// Sampled order `N_i` per random feature. All three index vectors
+    /// live behind [`WeightStore`]s (ISSUE 8): owned when sampled,
+    /// zero-copy views into a shared [`crate::artifact::MapArtifact`]
+    /// region when loaded.
+    orders: WeightStore<u32>,
     /// `sqrt(a_N / P[N]) / sqrt(D)` per random feature (the `1/√D`
     /// concatenation scale is folded in).
-    weights: Vec<f32>,
+    weights: WeightStore<f32>,
     /// Row offsets into `omegas`: feature `i` uses rows
     /// `offsets[i]..offsets[i+1]`.
-    offsets: Vec<u32>,
+    offsets: WeightStore<u32>,
     /// All Rademacher vectors, bit-packed (canonical/serialized form of
     /// the *dense* projection; empty for structured maps).
     omegas: RademacherMatrix,
@@ -283,12 +301,15 @@ impl RandomMaclaurin {
                 (RademacherMatrix::sample(total_rows as usize, d, rng), None, 0)
             }
             ProjectionKind::Structured => {
-                // The stack is a pure function of (d, offsets, seed), so
-                // the seed alone serializes it (see `super::serialize`).
+                // The stack is a pure function of (d, offsets, recycle,
+                // seed), so the seed alone serializes it (see
+                // `super::serialize`; recycled stacks serialize
+                // materialized, as RFDM0003).
                 let seed = rng.next_u64();
-                let proj = StructuredProjection::rademacher_for_segments(
+                let proj = StructuredProjection::rademacher_for_segments_opts(
                     d,
                     &offsets,
+                    config.recycle,
                     &mut Rng::seed_from(seed),
                 );
                 (RademacherMatrix::from_words(0, d, Vec::new()), Some(proj), seed)
@@ -305,9 +326,9 @@ impl RandomMaclaurin {
             d,
             n_random,
             config,
-            orders,
-            weights,
-            offsets,
+            orders: WeightStore::from_vec(orders),
+            weights: WeightStore::from_vec(weights),
+            offsets: WeightStore::from_vec(offsets),
             omegas,
             dense: std::sync::OnceLock::new(),
             structured,
@@ -397,17 +418,17 @@ impl RandomMaclaurin {
     /// Sampled order of random feature `i` (Algorithm 1 step 1: the
     /// draw from the external measure).
     pub fn order(&self, i: usize) -> u32 {
-        self.orders[i]
+        self.orders.as_slice()[i]
     }
 
     /// All sampled orders.
     pub fn orders(&self) -> &[u32] {
-        &self.orders
+        self.orders.as_slice()
     }
 
     /// Largest sampled order (0 for an empty map).
     pub fn max_sampled_order(&self) -> u32 {
-        self.orders.iter().copied().max().unwrap_or(0)
+        self.orders.as_slice().iter().copied().max().unwrap_or(0)
     }
 
     /// Per-feature estimator weights `√(a_N / P[N])` with `1/√D` folded
@@ -415,12 +436,12 @@ impl RandomMaclaurin {
     /// bound `|Z_i(x)Z_i(y)| ≤ C_Ω/D` (at `C_Ω = p·f(pR²)`) are proved
     /// for.
     pub fn weights(&self) -> &[f32] {
-        &self.weights
+        self.weights.as_slice()
     }
 
     /// Feature-to-row offsets into the Rademacher stack.
     pub fn offsets(&self) -> &[u32] {
-        &self.offsets
+        self.offsets.as_slice()
     }
 
     /// The packed Rademacher stack (empty for structured maps, whose
@@ -454,6 +475,12 @@ impl RandomMaclaurin {
         &self.kernel_name
     }
 
+    /// The FWHT-backed stack, when this map is structured (the artifact
+    /// serializer walks its blocks).
+    pub(crate) fn structured_projection(&self) -> Option<&StructuredProjection> {
+        self.structured.as_ref()
+    }
+
     /// Rebuild from serialized parts (see [`super::serialize`]). For
     /// structured records the stack is reconstructed from `proj_seed`
     /// and the offsets, which is bit-exact by construction.
@@ -473,12 +500,55 @@ impl RandomMaclaurin {
     ) -> Self {
         let structured = match config.projection {
             ProjectionKind::Dense => None,
-            ProjectionKind::Structured => Some(StructuredProjection::rademacher_for_segments(
-                d,
-                &offsets,
-                &mut Rng::seed_from(proj_seed),
-            )),
+            ProjectionKind::Structured => {
+                Some(StructuredProjection::rademacher_for_segments_opts(
+                    d,
+                    &offsets,
+                    config.recycle,
+                    &mut Rng::seed_from(proj_seed),
+                ))
+            }
         };
+        RandomMaclaurin {
+            d,
+            n_random,
+            config,
+            orders: WeightStore::from_vec(orders),
+            weights: WeightStore::from_vec(weights),
+            offsets: WeightStore::from_vec(offsets),
+            omegas,
+            dense: std::sync::OnceLock::new(),
+            structured,
+            proj_seed,
+            w_const,
+            w_linear,
+            kernel_name,
+        }
+    }
+
+    /// Rebuild over artifact-backed stores — zero weight copies; the
+    /// structured stack (if any) is handed in pre-assembled from the
+    /// artifact's block views rather than re-derived from the seed
+    /// ([`crate::artifact::MapArtifact::instantiate`]).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_artifact_parts(
+        d: usize,
+        n_random: usize,
+        config: RmConfig,
+        orders: WeightStore<u32>,
+        weights: WeightStore<f32>,
+        offsets: WeightStore<u32>,
+        omegas: RademacherMatrix,
+        structured: Option<StructuredProjection>,
+        proj_seed: u64,
+        w_const: f32,
+        w_linear: f32,
+        kernel_name: String,
+    ) -> Self {
+        debug_assert_eq!(
+            structured.is_some(),
+            matches!(config.projection, ProjectionKind::Structured)
+        );
         RandomMaclaurin {
             d,
             n_random,
@@ -517,11 +587,13 @@ impl RandomMaclaurin {
             self.max_sampled_order()
         );
         let (d, dd) = (self.d, self.n_random);
+        let offsets = self.offsets.as_slice();
+        let orders = self.orders.as_slice();
         let mut omega = vec![0.0f32; n_max as usize * d * dd];
         let mut mask = vec![0.0f32; n_max as usize * dd];
         for i in 0..dd {
-            let base = self.offsets[i];
-            for j in 0..self.orders[i] {
+            let base = offsets[i];
+            for j in 0..orders[i] {
                 let row = (base + j) as usize;
                 mask[j as usize * dd + i] = 1.0;
                 for k in 0..d {
@@ -529,7 +601,7 @@ impl RandomMaclaurin {
                 }
             }
         }
-        (omega, mask, self.weights.clone())
+        (omega, mask, self.weights.as_slice().to_vec())
     }
 
     /// Segmented product: turn the projection vector `proj[rows]` into
@@ -537,9 +609,11 @@ impl RandomMaclaurin {
     /// (order-0 features are the empty product, i.e. just `w_i`).
     #[inline]
     fn products_from_projections(&self, proj: &[f32], out: &mut [f32]) {
+        let offsets = self.offsets.as_slice();
+        let weights = self.weights.as_slice();
         for i in 0..self.n_random {
-            let (lo, hi) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
-            let mut prod = self.weights[i];
+            let (lo, hi) = (offsets[i] as usize, offsets[i + 1] as usize);
+            let mut prod = weights[i];
             for &p in &proj[lo..hi] {
                 prod *= p;
             }

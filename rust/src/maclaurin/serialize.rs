@@ -35,6 +35,20 @@
 //! and deserialization rebuilds the identical stack
 //! (`deserialize(serialize(m)).transform(x) == m.transform(x)`
 //! bit-for-bit, pinned by tests).
+//!
+//! A third record kind lives in [`crate::artifact`]: **`RFDM0003`**,
+//! the zero-copy container whose section layout matches the in-memory
+//! typed views. [`from_bytes`] accepts it transparently (the loaded map
+//! borrows from one shared region), and [`to_bytes`] *emits* it for
+//! maps that seed-only reconstruction cannot express — structured
+//! stacks sampled with `RmConfig::recycle` (their shared pools dedupe
+//! in the materialized form, so the record stays small). Everything
+//! else keeps its legacy format, byte-stable.
+//!
+//! The [`Reader`] here is the hardened bounds-checking cursor all three
+//! record parsers share: truncated payloads, oversized counts and
+//! non-canonical trailing bytes return `Error`, never panic or
+//! over-read (`tests/serialize_malformed.rs` pins this per field).
 
 use super::rm::{RandomMaclaurin, RmConfig};
 use super::FeatureMap;
@@ -55,14 +69,32 @@ fn put_f32(out: &mut Vec<u8>, v: f32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-struct Reader<'a> {
+/// Bounds-checked little-endian cursor over an untrusted blob. Every
+/// read is a checked `take`; counts read from the blob must be bounded
+/// by [`Reader::remaining`] before they size an allocation.
+pub(crate) struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Current byte offset.
+    pub(crate) fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes left to read — the hard ceiling on any count field.
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // Overflow-proof form of `pos + n > len` (n is attacker data).
+        if n > self.remaining() {
             return Err(Error::Data("truncated RFDM blob".into()));
         }
         let s = &self.buf[self.pos..self.pos + n];
@@ -70,26 +102,33 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
     }
 
-    fn f32(&mut self) -> Result<f32> {
+    pub(crate) fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
     }
 
-    fn f64(&mut self) -> Result<f64> {
+    pub(crate) fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
     }
 }
 
 /// Serialize a map to bytes (the record kind follows the map's
-/// projection: dense stacks get `RFDM0001`, structured `RFDM0002`).
+/// projection: dense stacks get `RFDM0001`, structured `RFDM0002` —
+/// except recycled structured stacks, whose shared pools the seed-only
+/// `RFDM0002` cannot express; those serialize as the materialized
+/// zero-copy `RFDM0003` container, where pool interning keeps them
+/// small).
 pub fn to_bytes(map: &RandomMaclaurin) -> Vec<u8> {
+    if map.is_structured() && map.config().recycle {
+        return crate::artifact::MapArtifact::encode(map);
+    }
     let mut out = Vec::new();
     out.extend_from_slice(if map.is_structured() { MAGIC_STRUCTURED } else { MAGIC });
     put_u32(&mut out, map.input_dim() as u32);
@@ -119,9 +158,14 @@ pub fn to_bytes(map: &RandomMaclaurin) -> Vec<u8> {
     out
 }
 
-/// Deserialize a map from bytes (either record kind).
+/// Deserialize a map from bytes (any of the three record kinds;
+/// `RFDM0003` containers come back artifact-backed — the map borrows
+/// one shared region instead of owning copies).
 pub fn from_bytes(buf: &[u8]) -> Result<RandomMaclaurin> {
-    let mut r = Reader { buf, pos: 0 };
+    if buf.len() >= 8 && &buf[..8] == crate::artifact::MAGIC_V3 {
+        return crate::artifact::MapArtifact::from_bytes(buf)?.instantiate();
+    }
+    let mut r = Reader::new(buf);
     let structured = match r.take(8)? {
         m if m == MAGIC => false,
         m if m == MAGIC_STRUCTURED => true,
@@ -139,6 +183,13 @@ pub fn from_bytes(buf: &[u8]) -> Result<RandomMaclaurin> {
         .map_err(|_| Error::Data("kernel name not utf-8".into()))?;
     if d == 0 || n_random == 0 || !(p > 1.0) {
         return Err(Error::Data("invalid RFDM header".into()));
+    }
+    // A crafted `D` can claim up to u32::MAX features; cap the eager
+    // reservation by the bytes actually present so the header alone can
+    // never force a multi-gigabyte allocation (the reads below fail
+    // fast on the first missing byte either way).
+    if n_random.checked_mul(8).is_none_or(|need| need > r.remaining()) {
+        return Err(Error::Data("truncated RFDM blob: orders/weights payload missing".into()));
     }
     let mut orders = Vec::with_capacity(n_random);
     for _ in 0..n_random {
@@ -187,8 +238,16 @@ pub fn from_bytes(buf: &[u8]) -> Result<RandomMaclaurin> {
             )));
         }
         let words_per_row = d.div_ceil(64);
-        let mut words = Vec::with_capacity(rows * words_per_row);
-        for _ in 0..rows * words_per_row {
+        let n_words = rows
+            .checked_mul(words_per_row)
+            .ok_or_else(|| Error::Data("RFDM word count overflows".into()))?;
+        // Same bomb guard as orders/weights: prove the payload bytes
+        // exist before reserving for them.
+        if n_words.checked_mul(8).is_none_or(|need| need > r.remaining()) {
+            return Err(Error::Data("truncated RFDM blob: sign payload missing".into()));
+        }
+        let mut words = Vec::with_capacity(n_words);
+        for _ in 0..n_words {
             words.push(r.u64()?);
         }
         (RademacherMatrix::from_words(rows, d, words), 0)
@@ -200,17 +259,25 @@ pub fn from_bytes(buf: &[u8]) -> Result<RandomMaclaurin> {
     offsets.push(0u32);
     let mut acc = 0u32;
     for &o in &orders {
-        acc += o;
+        // The checks above bound the sum (dense: equals the declared
+        // u32 row count; structured: the work budget), so a checked add
+        // is belt-and-braces against a parser change upstream.
+        acc = acc
+            .checked_add(o)
+            .ok_or_else(|| Error::Data("RFDM order sum overflows".into()))?;
         offsets.push(acc);
     }
     // `restrict_support` only affects sampling, not evaluation of an
-    // already-sampled map, so it is not part of the wire format.
+    // already-sampled map, so it is not part of the wire format; legacy
+    // records predate recycling, so it is always off here (recycled
+    // maps serialize as RFDM0003).
     let config = RmConfig {
         p,
         h01,
         max_order,
         restrict_support: true,
         projection: if structured { ProjectionKind::Structured } else { ProjectionKind::Dense },
+        recycle: false,
     };
     Ok(RandomMaclaurin::from_parts(
         d,

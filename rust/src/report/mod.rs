@@ -636,7 +636,7 @@ fn thread_sweep(config: &ReportConfig, x: &Matrix) -> Result<Vec<ThreadPoint>> {
 /// panel records what changes — throughput, latency percentiles and
 /// steal counts.
 fn serve_sweep(config: &ReportConfig) -> Result<Vec<ServePoint>> {
-    use crate::coordinator::{Coordinator, CoordinatorConfig, NativeFactory};
+    use crate::coordinator::{Coordinator, CoordinatorConfig, MapArtifactFactory};
     use std::sync::Arc;
 
     let kspec = KernelSpec::parse(&config.kernels[0])?;
@@ -644,13 +644,12 @@ fn serve_sweep(config: &ReportConfig) -> Result<Vec<ServePoint>> {
     let d = config.dim;
     let dd = *config.d_sweep.last().expect("validated non-empty");
     let mut rng = Rng::seed_from(config.seed ^ 0x5E87E);
-    let map = Arc::new(RandomMaclaurin::sample(
-        kernel.as_ref(),
-        d,
-        dd,
-        RmConfig::default(),
-        &mut rng,
-    ));
+    let map = RandomMaclaurin::sample(kernel.as_ref(), d, dd, RmConfig::default(), &mut rng);
+    // One zero-copy artifact serves every topology in the sweep: each
+    // coordinator's workers borrow the same read-only weight region
+    // (replies are bit-identical to an owned map — the artifact parity
+    // contract, `rust/tests/artifact_shared.rs`).
+    let artifact = Arc::new(crate::artifact::MapArtifact::from_map(&map)?);
     let mut points = Vec::new();
     for &workers in &config.threads_sweep {
         // workers == 1 has only one topology; dedup it.
@@ -660,7 +659,7 @@ fn serve_sweep(config: &ReportConfig) -> Result<Vec<ServePoint>> {
         }
         for &shards in &topologies {
             let coord = Arc::new(Coordinator::start(
-                Arc::new(NativeFactory::new(map.clone())),
+                Arc::new(MapArtifactFactory::new(artifact.clone())?),
                 CoordinatorConfig {
                     workers,
                     shards,

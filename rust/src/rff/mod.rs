@@ -132,6 +132,24 @@ impl RandomFourier {
         projection: ProjectionKind,
         rng: &mut Rng,
     ) -> Self {
+        Self::sample_with_opts(gamma, d, n_features, projection, false, rng)
+    }
+
+    /// [`Self::sample_with`] plus the randomness-recycling knob
+    /// (`--recycle`): structured stacks share one `(Π, G)` pool across
+    /// their Fastfood blocks
+    /// ([`StructuredProjection::gaussian_stack_opts`]) — exactly
+    /// unbiased, `O(n)` Gaussian state. `recycle = false` is
+    /// bit-identical to [`Self::sample_with`]; dense maps ignore the
+    /// knob.
+    pub fn sample_with_opts(
+        gamma: f64,
+        d: usize,
+        n_features: usize,
+        projection: ProjectionKind,
+        recycle: bool,
+        rng: &mut Rng,
+    ) -> Self {
         assert!(gamma > 0.0 && d > 0 && n_features > 0);
         let std = (2.0 * gamma).sqrt();
         let freqs = match projection {
@@ -145,7 +163,7 @@ impl RandomFourier {
                 FreqStack::Dense(DenseProjection::from_rows_matrix(&w))
             }
             ProjectionKind::Structured => FreqStack::Structured(
-                StructuredProjection::gaussian_stack(d, n_features, std, rng),
+                StructuredProjection::gaussian_stack_opts(d, n_features, std, recycle, rng),
             ),
         };
         let b = (0..n_features)

@@ -9,7 +9,13 @@
 //! The packed form is also the *canonical serialization*: the Python
 //! oracle and the PJRT artifact path expand the very same words to ±1
 //! floats, so all three engines agree bit-for-bit on the sampled map.
+//!
+//! The words live behind a [`WeightStore`] (ISSUE 8): sampling yields
+//! an owned store, while loading an `RFDM0003` artifact yields a
+//! zero-copy view into the shared region — the projection hot path is
+//! identical (and bit-identical) either way.
 
+use crate::artifact::WeightStore;
 use crate::rng::Rng;
 
 /// A stack of `rows` bit-packed Rademacher vectors of dimension `dim`.
@@ -19,8 +25,9 @@ pub struct RademacherMatrix {
     rows: usize,
     words_per_row: usize,
     /// Row-major packed bits; bit `k` of word `w` in a row encodes
-    /// coordinate `w * 64 + k`: 0 ↦ +1.0, 1 ↦ −1.0.
-    words: Vec<u64>,
+    /// coordinate `w * 64 + k`: 0 ↦ +1.0, 1 ↦ −1.0. Owned when
+    /// sampled, artifact-backed when loaded.
+    words: WeightStore<u64>,
 }
 
 impl RademacherMatrix {
@@ -41,7 +48,7 @@ impl RademacherMatrix {
                 words.push(bits);
             }
         }
-        RademacherMatrix { dim, rows, words_per_row, words }
+        RademacherMatrix { dim, rows, words_per_row, words: WeightStore::from_vec(words) }
     }
 
     /// Number of vectors.
@@ -56,11 +63,16 @@ impl RademacherMatrix {
 
     /// Raw packed words (row-major), for serialization.
     pub fn words(&self) -> &[u64] {
-        &self.words
+        self.words.as_slice()
     }
 
     /// Rebuild from packed words (inverse of [`Self::words`]).
     pub fn from_words(rows: usize, dim: usize, words: Vec<u64>) -> Self {
+        Self::from_store(rows, dim, WeightStore::from_vec(words))
+    }
+
+    /// Rebuild over any store — owned or a zero-copy artifact view.
+    pub fn from_store(rows: usize, dim: usize, words: WeightStore<u64>) -> Self {
         let words_per_row = dim.div_ceil(64);
         assert_eq!(words.len(), rows * words_per_row, "packed length mismatch");
         RademacherMatrix { dim, rows, words_per_row, words }
@@ -70,7 +82,7 @@ impl RademacherMatrix {
     #[inline]
     pub fn sign(&self, i: usize, j: usize) -> f32 {
         debug_assert!(i < self.rows && j < self.dim);
-        let w = self.words[i * self.words_per_row + j / 64];
+        let w = self.words.as_slice()[i * self.words_per_row + j / 64];
         if (w >> (j % 64)) & 1 == 0 {
             1.0
         } else {
@@ -84,7 +96,7 @@ impl RademacherMatrix {
     /// of the word, which the compiler turns into branch-free selects.
     pub fn project(&self, i: usize, x: &[f32]) -> f32 {
         debug_assert_eq!(x.len(), self.dim);
-        let row = &self.words[i * self.words_per_row..(i + 1) * self.words_per_row];
+        let row = &self.words.as_slice()[i * self.words_per_row..(i + 1) * self.words_per_row];
         let mut acc = 0.0f32;
         for (w, chunk) in row.iter().zip(x.chunks(64)) {
             let mut bits = *w;

@@ -36,22 +36,36 @@
 //! that layout; see its docs.
 
 use super::Projection;
+use crate::artifact::WeightStore;
 use crate::linalg::{fwht, next_pow2, SparseRow};
 use crate::rng::Rng;
 
 /// One seeded HD block plus the output taps it serves.
+///
+/// All random state lives in [`WeightStore`]s (ISSUE 8): freshly
+/// sampled blocks own their vectors; blocks of a loaded `RFDM0003`
+/// artifact are zero-copy views into the shared region; *recycled*
+/// blocks ([`StructuredProjection::rademacher_for_segments_opts`]) are
+/// aliased views into one shared pool.
 #[derive(Clone, Debug)]
-struct HdBlock {
+pub(crate) struct HdBlock {
     /// Rademacher diagonal `D` (±1), length `n`.
-    signs: Vec<f32>,
+    pub(crate) signs: WeightStore<f32>,
     /// Gaussian mode: permutation `Π` and gain diagonal `G` applied
     /// between two FWHTs (`1/√n` and the target std folded into the
     /// gains). `None` = single-HD Rademacher mode.
-    perm_gain: Option<(Vec<u32>, Vec<f32>)>,
-    /// `(slot in the transformed buffer, global output row)`.
-    taps: Vec<(u32, u32)>,
+    pub(crate) perm_gain: Option<(WeightStore<u32>, WeightStore<f32>)>,
+    /// Interleaved `(slot in the transformed buffer, global output
+    /// row)` pairs — flat `u32`s so the store layout matches the
+    /// serialized section exactly.
+    pub(crate) taps: WeightStore<u32>,
     /// Uniform output scale (1 for HD blocks, `1/√k` for SRHT).
-    scale: f32,
+    pub(crate) scale: f32,
+}
+
+/// Build the interleaved tap store from `(slot, row)` pairs.
+fn tap_store(pairs: impl Iterator<Item = (u32, u32)>) -> WeightStore<u32> {
+    WeightStore::from_vec(pairs.flat_map(|(s, r)| [s, r]).collect())
 }
 
 impl HdBlock {
@@ -59,8 +73,9 @@ impl HdBlock {
     /// tapped slots into `out`. `buf`/`tmp` are caller-owned `n`-length
     /// scratch.
     fn project(&self, x: &[f32], buf: &mut [f32], tmp: &mut [f32], out: &mut [f32]) {
+        let signs = self.signs.as_slice();
         for (k, &xk) in x.iter().enumerate() {
-            buf[k] = xk * self.signs[k];
+            buf[k] = xk * signs[k];
         }
         buf[x.len()..].fill(0.0);
         self.finish(buf, tmp, out);
@@ -81,9 +96,10 @@ impl HdBlock {
         out: &mut [f32],
     ) {
         buf.fill(0.0);
+        let signs = self.signs.as_slice();
         for (&k, &v) in x.indices.iter().zip(x.values) {
             let k = k as usize;
-            buf[k] = v * self.signs[k];
+            buf[k] = v * signs[k];
         }
         self.finish(buf, tmp, out);
     }
@@ -94,7 +110,9 @@ impl HdBlock {
         fwht(buf);
         let src: &[f32] = match &self.perm_gain {
             Some((perm, gain)) => {
-                for (l, (&p, &g)) in perm.iter().zip(gain).enumerate() {
+                for (l, (&p, &g)) in
+                    perm.as_slice().iter().zip(gain.as_slice()).enumerate()
+                {
                     tmp[l] = g * buf[p as usize];
                 }
                 fwht(tmp);
@@ -102,8 +120,8 @@ impl HdBlock {
             }
             None => buf,
         };
-        for &(slot, row) in &self.taps {
-            out[row as usize] = self.scale * src[slot as usize];
+        for t in self.taps.as_slice().chunks_exact(2) {
+            out[t[1] as usize] = self.scale * src[t[0] as usize];
         }
     }
 
@@ -168,9 +186,67 @@ impl StructuredProjection {
             }
             for chunk in outs.chunks(n) {
                 blocks.push(HdBlock {
-                    signs: sample_signs(n, rng),
+                    signs: WeightStore::from_vec(sample_signs(n, rng)),
                     perm_gain: None,
-                    taps: chunk.iter().enumerate().map(|(s, &r)| (s as u32, r)).collect(),
+                    taps: tap_store(chunk.iter().enumerate().map(|(s, &r)| (s as u32, r))),
+                    scale: 1.0,
+                });
+            }
+            layer += 1;
+        }
+        StructuredProjection { d, n, rows, blocks }
+    }
+
+    /// [`Self::rademacher_for_segments`] with optional **randomness
+    /// recycling** (Choromanski & Sindhwani). `recycle = false`
+    /// delegates verbatim — bit-identical numerics, same RNG stream.
+    ///
+    /// Recycled mode samples **one** sign pool of length `n`, stores it
+    /// doubled (`2n`), and gives each block the rotated zero-copy view
+    /// `pool[δ_b .. δ_b + n)` for a fresh uniform offset `δ_b` — one
+    /// `u64` draw per block instead of `n` sign draws. Each block's
+    /// diagonal is marginally a perfectly fair sign pattern *given the
+    /// pool is one* (each coordinate is a fixed ±1 pool entry at a
+    /// uniformly rotated position), and the serializer stores the pool
+    /// once, shrinking sampled state from `O(blocks · n)` to `O(n)`.
+    /// Cross-block couplings are introduced (rotations of one pool),
+    /// which biases order-≥2 Maclaurin products by `O(1/n)` — see
+    /// ARCHITECTURE.md for the math; hence the knob defaults off.
+    pub fn rademacher_for_segments_opts(
+        d: usize,
+        offsets: &[u32],
+        recycle: bool,
+        rng: &mut Rng,
+    ) -> Self {
+        if !recycle {
+            return Self::rademacher_for_segments(d, offsets, rng);
+        }
+        assert!(d > 0, "input dim must be positive");
+        assert!(!offsets.is_empty(), "offsets must contain at least the leading 0");
+        let n = next_pow2(d);
+        let rows = *offsets.last().expect("non-empty") as usize;
+        // The doubled pool: a rotation δ ∈ [0, n) is the contiguous
+        // window [δ, δ + n) — no wraparound indexing in the hot path.
+        let base = sample_signs(n, rng);
+        let mut doubled = base.clone();
+        doubled.extend_from_slice(&base);
+        let pool = WeightStore::from_vec(doubled);
+        let mut blocks = Vec::new();
+        let mut layer = 0u32;
+        loop {
+            let outs: Vec<u32> = (0..offsets.len() - 1)
+                .filter(|&i| offsets[i + 1] - offsets[i] > layer)
+                .map(|i| offsets[i] + layer)
+                .collect();
+            if outs.is_empty() {
+                break;
+            }
+            for chunk in outs.chunks(n) {
+                let delta = rng.below(n as u64) as usize;
+                blocks.push(HdBlock {
+                    signs: pool.view(delta, n),
+                    perm_gain: None,
+                    taps: tap_store(chunk.iter().enumerate().map(|(s, &r)| (s as u32, r))),
                     scale: 1.0,
                 });
             }
@@ -190,9 +266,9 @@ impl StructuredProjection {
         while start < rows {
             let take = (rows - start).min(n);
             blocks.push(HdBlock {
-                signs: sample_signs(n, rng),
+                signs: WeightStore::from_vec(sample_signs(n, rng)),
                 perm_gain: None,
-                taps: (0..take).map(|s| (s as u32, (start + s) as u32)).collect(),
+                taps: tap_store((0..take).map(|s| (s as u32, (start + s) as u32))),
                 scale: 1.0,
             });
             start += take;
@@ -217,9 +293,54 @@ impl StructuredProjection {
             let gain: Vec<f32> =
                 (0..n).map(|_| (std * rng.normal() * inv_sqrt_n) as f32).collect();
             blocks.push(HdBlock {
-                signs,
-                perm_gain: Some((perm, gain)),
-                taps: (0..take).map(|s| (s as u32, (start + s) as u32)).collect(),
+                signs: WeightStore::from_vec(signs),
+                perm_gain: Some((WeightStore::from_vec(perm), WeightStore::from_vec(gain))),
+                taps: tap_store((0..take).map(|s| (s as u32, (start + s) as u32))),
+                scale: 1.0,
+            });
+            start += take;
+        }
+        StructuredProjection { d, n, rows, blocks }
+    }
+
+    /// [`Self::gaussian_stack`] with optional randomness recycling.
+    /// `recycle = false` delegates verbatim (bit-identical numerics).
+    ///
+    /// Recycled mode samples `(Π, G)` **once** and aliases the pair
+    /// into every block (zero-copy `WeightStore` views, serialized
+    /// once); the diagonals `D_b` stay fresh per block. Conditioned on
+    /// `(Π, G)`, each block's rows are exactly `N(0, σ²)` marginally —
+    /// the joint per-block law `(D_b, Π, G)` equals the fresh-sample
+    /// law because `D_b ⊥ (Π, G)` — so the structured RFF estimator
+    /// stays **exactly unbiased**; only cross-block independence is
+    /// traded away (variance, not mean). Sampled state drops from
+    /// `O(blocks · n)` Gaussians to `O(n)`.
+    pub fn gaussian_stack_opts(
+        d: usize,
+        rows: usize,
+        std: f64,
+        recycle: bool,
+        rng: &mut Rng,
+    ) -> Self {
+        if !recycle {
+            return Self::gaussian_stack(d, rows, std, rng);
+        }
+        assert!(d > 0, "input dim must be positive");
+        let n = next_pow2(d);
+        let inv_sqrt_n = 1.0 / (n as f64).sqrt();
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut perm);
+        let gain: Vec<f32> = (0..n).map(|_| (std * rng.normal() * inv_sqrt_n) as f32).collect();
+        let perm = WeightStore::from_vec(perm);
+        let gain = WeightStore::from_vec(gain);
+        let mut blocks = Vec::new();
+        let mut start = 0usize;
+        while start < rows {
+            let take = (rows - start).min(n);
+            blocks.push(HdBlock {
+                signs: WeightStore::from_vec(sample_signs(n, rng)),
+                perm_gain: Some((perm.clone(), gain.clone())),
+                taps: tap_store((0..take).map(|s| (s as u32, (start + s) as u32))),
                 scale: 1.0,
             });
             start += take;
@@ -240,18 +361,28 @@ impl StructuredProjection {
             let take = (k - start).min(n);
             let slots = rng.sample_indices(n, take);
             blocks.push(HdBlock {
-                signs: sample_signs(n, rng),
+                signs: WeightStore::from_vec(sample_signs(n, rng)),
                 perm_gain: None,
-                taps: slots
-                    .iter()
-                    .enumerate()
-                    .map(|(s, &slot)| (slot as u32, (start + s) as u32))
-                    .collect(),
+                taps: tap_store(
+                    slots.iter().enumerate().map(|(s, &slot)| (slot as u32, (start + s) as u32)),
+                ),
                 scale,
             });
             start += take;
         }
         StructuredProjection { d, n, rows: k, blocks }
+    }
+
+    /// Reassemble from per-block stores — the artifact instantiation
+    /// path ([`crate::artifact::MapArtifact::instantiate`]); the blocks
+    /// borrow the shared region zero-copy.
+    pub(crate) fn from_blocks(d: usize, rows: usize, blocks: Vec<HdBlock>) -> Self {
+        StructuredProjection { d, n: next_pow2(d), rows, blocks }
+    }
+
+    /// The backing blocks (artifact serializer).
+    pub(crate) fn blocks(&self) -> &[HdBlock] {
+        &self.blocks
     }
 
     /// Padded (power-of-two) working length.
@@ -480,7 +611,8 @@ mod tests {
         let mut rng = Rng::seed_from(7);
         let p = StructuredProjection::srht(8, 5, &mut rng);
         assert_eq!(p.n_blocks(), 1);
-        let mut slots: Vec<u32> = p.blocks[0].taps.iter().map(|&(s, _)| s).collect();
+        let mut slots: Vec<u32> =
+            p.blocks[0].taps.as_slice().chunks_exact(2).map(|t| t[0]).collect();
         slots.sort_unstable();
         slots.dedup();
         assert_eq!(slots.len(), 5, "SRHT slots must be distinct");
@@ -552,6 +684,86 @@ mod tests {
             p.project_sparse_into_scratch(sm.row(0), &mut sparse2, &mut work);
             assert_eq!(plain, sparse2);
         }
+    }
+
+    #[test]
+    fn opts_with_recycle_off_are_bit_identical_to_the_plain_constructors() {
+        // The knob's default-off contract: same RNG stream, same
+        // blocks, same outputs, bit for bit.
+        let offsets = [0u32, 2, 5, 5, 9];
+        let x = unit_vec(11, 90);
+        let a = StructuredProjection::rademacher_for_segments(11, &offsets, &mut Rng::seed_from(8));
+        let b = StructuredProjection::rademacher_for_segments_opts(
+            11,
+            &offsets,
+            false,
+            &mut Rng::seed_from(8),
+        );
+        let (mut oa, mut ob) = (vec![0.0f32; 9], vec![0.0f32; 9]);
+        a.project_into(&x, &mut oa);
+        b.project_into(&x, &mut ob);
+        assert_eq!(oa, ob);
+
+        let xg = unit_vec(13, 91);
+        let g = StructuredProjection::gaussian_stack(13, 24, 0.9, &mut Rng::seed_from(9));
+        let g2 =
+            StructuredProjection::gaussian_stack_opts(13, 24, 0.9, false, &mut Rng::seed_from(9));
+        let (mut og, mut og2) = (vec![0.0f32; 24], vec![0.0f32; 24]);
+        g.project_into(&xg, &mut og);
+        g2.project_into(&xg, &mut og2);
+        assert_eq!(og, og2);
+    }
+
+    #[test]
+    fn recycled_segments_share_one_sign_pool_and_stay_pm_one() {
+        let offsets = [0u32, 2, 4, 7, 9];
+        let mut rng = Rng::seed_from(21);
+        let p = StructuredProjection::rademacher_for_segments_opts(10, &offsets, true, &mut rng);
+        assert!(p.n_blocks() >= 2, "layout needs several layers to recycle across");
+        // Zero-copy aliasing: every block's signs view the same backing.
+        let mut ids: Vec<usize> = p.blocks.iter().map(|b| b.signs.backing_id()).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 1, "recycled blocks must alias one pool");
+        // And the recovered rows are still genuine ±1 patterns.
+        for r in 0..p.rows() {
+            for &w in &direction(&p, r) {
+                assert!(w == 1.0 || w == -1.0, "row {r}: {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn recycled_gaussian_blocks_share_perm_gain_and_keep_marginals() {
+        // Shared (Π, G), fresh D per block: still N(0, std²) marginals.
+        let d = 16;
+        let std = 1.2f64;
+        let mut acc = 0.0f64;
+        let mut acc2 = 0.0f64;
+        let mut count = 0usize;
+        for s in 0..400 {
+            let mut rng = Rng::seed_from(700 + s);
+            let p = StructuredProjection::gaussian_stack_opts(d, 40, std, true, &mut rng);
+            assert!(p.n_blocks() >= 2);
+            let gains: Vec<usize> = p
+                .blocks
+                .iter()
+                .map(|b| b.perm_gain.as_ref().expect("gaussian block").1.backing_id())
+                .collect();
+            assert!(gains.windows(2).all(|w| w[0] == w[1]), "gain pool must be shared");
+            if s < 40 {
+                for r in 0..p.rows() {
+                    for &w in &direction(&p, r) {
+                        acc += w as f64;
+                        acc2 += (w as f64) * w as f64;
+                        count += 1;
+                    }
+                }
+            }
+        }
+        let mean = acc / count as f64;
+        let var = acc2 / count as f64 - mean * mean;
+        assert!(mean.abs() < 0.06, "mean {mean}");
+        assert!((var - std * std).abs() < 0.25, "var {var} vs {}", std * std);
     }
 
     #[test]

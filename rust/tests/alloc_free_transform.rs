@@ -188,6 +188,62 @@ fn span_guards_do_not_allocate() {
 }
 
 #[test]
+fn v3_artifact_load_is_one_payload_allocation_with_no_per_weight_copies() {
+    // The zero-copy artifact contract: loading an RFDM0003 blob is
+    // header-validate + one read into one aligned allocation. With the
+    // counting allocator, `MapArtifact::from_bytes` on a v3 blob must
+    // cost a *size-independent* handful of allocations — the payload
+    // region plus its `Arc` control block — and in particular zero
+    // per-weight/per-section copies: a ~64× larger map must load with
+    // exactly the same count.
+    use rfdot::artifact::MapArtifact;
+
+    let encode = |d: usize, features: usize, seed: u64| {
+        let map = RandomMaclaurin::sample(
+            &Exponential::new(1.0),
+            d,
+            features,
+            RmConfig::default().with_projection(ProjectionKind::Structured),
+            &mut Rng::seed_from(seed),
+        );
+        MapArtifact::from_map(&map).expect("encode artifact").as_bytes().to_vec()
+    };
+    let small = encode(8, 16, 21);
+    let large = encode(64, 512, 22);
+    assert!(large.len() > 32 * small.len(), "fixture sizes must differ by >32x");
+
+    // Warm up the obs registry (counter/gauge entries allocate on first
+    // lookup, once per process) and any lazy allocator state.
+    MapArtifact::from_bytes(&small).expect("warmup load");
+
+    let count = |blob: &[u8]| {
+        let mut n = 0;
+        let mut keep = None;
+        let got = allocations(|| {
+            keep = Some(MapArtifact::from_bytes(blob).expect("load"));
+        });
+        n += got;
+        drop(keep);
+        n
+    };
+    let n_small = count(&small);
+    let n_large = count(&large);
+    assert_eq!(
+        n_small, n_large,
+        "v3 load allocation count must be size-independent \
+         (small: {n_small}, large: {n_large}) — a per-weight copy crept in"
+    );
+    // One aligned payload region + one Arc control block (+ nothing
+    // else): keep a small safety margin so a harmless change to e.g.
+    // error formatting doesn't flake, while still catching any
+    // per-section copy (which would add at least 4 and scale).
+    assert!(
+        n_small <= 4,
+        "v3 load performed {n_small} allocations; expected the payload region + Arc only"
+    );
+}
+
+#[test]
 fn plain_transform_still_allocates_only_transiently() {
     // Sanity check on the measurement itself: the throwaway-scratch
     // plain path *does* allocate (so a zero count above is a property

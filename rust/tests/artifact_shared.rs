@@ -1,0 +1,220 @@
+//! The artifact sharing contract, end to end:
+//!
+//! 1. **Owned/artifact parity** — for every feature-map family ×
+//!    projection × storage combination, a map instantiated from its
+//!    zero-copy [`rfdot::artifact::MapArtifact`] transforms bitwise
+//!    identically to the owned map it was encoded from (dense rows,
+//!    sparse rows, and batches).
+//! 2. **Shared-state concurrency** — ≥ 4 coordinator workers serving
+//!    through *one* `Arc<MapArtifact>` concurrently produce replies
+//!    bitwise identical to the single-worker owned-map path.
+//! 3. **Serialization closure** — `deserialize(serialize(m))` preserves
+//!    transforms bit-for-bit for all three record kinds, including the
+//!    recycled maps that only `RFDM0003` can carry.
+
+use rfdot::artifact::MapArtifact;
+use rfdot::coordinator::{Coordinator, CoordinatorConfig, MapArtifactFactory, NativeFactory};
+use rfdot::features::FeatureMap;
+use rfdot::kernels::{DotProductKernel, Exponential, Polynomial};
+use rfdot::linalg::{Matrix, SparseRow};
+use rfdot::maclaurin::{serialize, RandomMaclaurin, RmConfig};
+use rfdot::rng::Rng;
+use rfdot::structured::ProjectionKind;
+use std::sync::Arc;
+use std::time::Duration;
+
+const D_IN: usize = 19;
+const D_OUT: usize = 48;
+
+/// Every (kernel, projection, h01, recycle) cell of the map grid.
+fn grid() -> Vec<(String, RandomMaclaurin)> {
+    let kernels: [(&str, Box<dyn DotProductKernel>); 2] = [
+        ("poly", Box::new(Polynomial::new(4, 0.5))),
+        ("exp", Box::new(Exponential::new(1.0))),
+    ];
+    let mut maps = Vec::new();
+    for (kname, kernel) in &kernels {
+        for projection in [ProjectionKind::Dense, ProjectionKind::Structured] {
+            for h01 in [false, true] {
+                for recycle in [false, true] {
+                    if recycle && projection == ProjectionKind::Dense {
+                        continue; // recycling is a structured-pool knob
+                    }
+                    let mut rng = Rng::seed_from(0xA57 ^ (h01 as u64) << 3 ^ (recycle as u64));
+                    let map = RandomMaclaurin::sample(
+                        kernel.as_ref(),
+                        D_IN,
+                        D_OUT,
+                        RmConfig::default()
+                            .with_h01(h01)
+                            .with_projection(projection)
+                            .with_recycle(recycle),
+                        &mut rng,
+                    );
+                    maps.push((
+                        format!("{kname}/{projection:?}/h01={h01}/recycle={recycle}"),
+                        map,
+                    ));
+                }
+            }
+        }
+    }
+    maps
+}
+
+fn probe(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from(seed);
+    (0..D_IN).map(|_| rng.f32() - 0.5).collect()
+}
+
+#[test]
+fn artifact_backed_maps_match_owned_maps_bitwise_across_the_grid() {
+    for (label, owned) in grid() {
+        let art = MapArtifact::from_map(&owned).expect("encode artifact");
+        let borrowed = art.instantiate().expect("instantiate artifact");
+
+        // Dense rows.
+        for seed in 0..8u64 {
+            let x = probe(seed);
+            assert_eq!(owned.transform(&x), borrowed.transform(&x), "dense row: {label}");
+        }
+
+        // Sparse rows (every other coordinate stored).
+        let x = probe(99);
+        let indices: Vec<u32> = (0..D_IN as u32).step_by(2).collect();
+        let values: Vec<f32> = indices.iter().map(|&i| x[i as usize]).collect();
+        let row = SparseRow { dim: D_IN, indices: &indices, values: &values };
+        let mut a = vec![0.0f32; owned.output_dim()];
+        let mut b = vec![0.0f32; borrowed.output_dim()];
+        owned.transform_sparse_into(row, &mut a);
+        borrowed.transform_sparse_into(row, &mut b);
+        assert_eq!(a, b, "sparse row: {label}");
+
+        // Batches.
+        let rows: Vec<Vec<f32>> = (0..5).map(probe).collect();
+        let mut batch = Matrix::zeros(rows.len(), D_IN);
+        for (i, r) in rows.iter().enumerate() {
+            batch.row_mut(i).copy_from_slice(r);
+        }
+        assert_eq!(
+            owned.transform_batch(&batch),
+            borrowed.transform_batch(&batch),
+            "batch: {label}"
+        );
+    }
+}
+
+#[test]
+fn serialize_roundtrip_is_bit_identical_for_every_record_kind() {
+    for (label, map) in grid() {
+        let reloaded = serialize::from_bytes(&serialize::to_bytes(&map))
+            .unwrap_or_else(|e| panic!("roundtrip {label}: {e}"));
+        for seed in 0..4u64 {
+            let x = probe(seed);
+            assert_eq!(map.transform(&x), reloaded.transform(&x), "roundtrip: {label}");
+        }
+    }
+}
+
+#[test]
+fn four_workers_through_one_artifact_match_the_single_worker_owned_path() {
+    let mut rng = Rng::seed_from(77);
+    let owned = RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        D_IN,
+        64,
+        RmConfig::default().with_projection(ProjectionKind::Structured),
+        &mut rng,
+    );
+    let artifact = Arc::new(MapArtifact::from_map(&owned).expect("encode"));
+
+    let requests: Vec<Vec<f32>> = (0..200).map(|i| probe(1000 + i as u64)).collect();
+
+    // Reference: one worker over the owned map.
+    let reference: Vec<Vec<f32>> = {
+        let coord = Coordinator::start(
+            Arc::new(NativeFactory::new(Arc::new(owned.clone()))),
+            CoordinatorConfig {
+                workers: 1,
+                max_batch: 16,
+                max_wait: Duration::from_micros(200),
+                ..Default::default()
+            },
+        );
+        requests
+            .iter()
+            .map(|x| coord.transform(x.clone()).expect("owned reply"))
+            .collect()
+    };
+
+    // ≥ 4 workers, all borrowing one shared read-only artifact region,
+    // hammered from 4 client threads concurrently.
+    let coord = Arc::new(Coordinator::start(
+        Arc::new(MapArtifactFactory::new(artifact.clone()).expect("factory")),
+        CoordinatorConfig {
+            workers: 4,
+            max_batch: 8,
+            max_wait: Duration::from_micros(100),
+            ..Default::default()
+        },
+    ));
+    let mut handles = Vec::new();
+    for c in 0..4usize {
+        let coord = coord.clone();
+        let requests = requests.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut got = Vec::new();
+            for (i, x) in requests.iter().enumerate() {
+                if i % 4 == c {
+                    got.push((i, coord.transform(x.clone()).expect("shared reply")));
+                }
+            }
+            got
+        }));
+    }
+    for h in handles {
+        for (i, reply) in h.join().expect("client thread") {
+            assert_eq!(
+                reply, reference[i],
+                "shared-artifact reply {i} must be bitwise identical to the owned path"
+            );
+        }
+    }
+
+    // Direct transform agrees too, and the factory really shares: the
+    // region is still referenced by our handle plus the factory's map.
+    for (x, want) in requests.iter().zip(&reference) {
+        assert_eq!(&owned.transform(x), want);
+    }
+    assert!(Arc::strong_count(&artifact) >= 2, "factory must hold the same artifact");
+}
+
+#[test]
+fn recycled_artifacts_are_smaller_and_still_exact() {
+    let sample = |recycle: bool| {
+        let mut rng = Rng::seed_from(31);
+        RandomMaclaurin::sample(
+            &Polynomial::new(4, 0.5),
+            D_IN,
+            64,
+            RmConfig::default()
+                .with_projection(ProjectionKind::Structured)
+                .with_recycle(recycle),
+            &mut rng,
+        )
+    };
+    let plain = MapArtifact::from_map(&sample(false)).unwrap();
+    let recycled = MapArtifact::from_map(&sample(true)).unwrap();
+    assert!(
+        recycled.total_bytes() < plain.total_bytes(),
+        "recycling must shrink the container ({} vs {})",
+        recycled.total_bytes(),
+        plain.total_bytes()
+    );
+    let map = sample(true);
+    let reloaded = recycled.instantiate().unwrap();
+    for seed in 0..4u64 {
+        let x = probe(seed);
+        assert_eq!(map.transform(&x), reloaded.transform(&x));
+    }
+}

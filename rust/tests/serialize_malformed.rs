@@ -1,0 +1,254 @@
+//! Hardening regression tests for the RFDM record readers: malformed
+//! input — truncated payloads, oversized count fields, non-canonical
+//! padding/trailing bytes — must come back as [`rfdot::Error`], never a
+//! panic, over-read, or unbounded allocation. One named test per
+//! hardened field, across all three record kinds (`RFDM0001` dense,
+//! `RFDM0002` structured seed-only, `RFDM0003` zero-copy artifact).
+//!
+//! Every test starts from a *valid* record produced by the real writer
+//! and corrupts exactly one thing, so a reader change that loosens a
+//! check fails the matching test by name.
+
+use rfdot::kernels::Polynomial;
+use rfdot::maclaurin::serialize::{from_bytes, to_bytes};
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
+use rfdot::rng::Rng;
+use rfdot::structured::ProjectionKind;
+
+/// Fixed legacy-header field offsets (RFDM0001/0002 share the layout).
+const LEGACY_D: usize = 8;
+const LEGACY_NFEAT: usize = 12;
+const LEGACY_KLEN: usize = 37;
+const LEGACY_BODY: usize = 41; // kname starts here; orders at 41 + klen
+
+/// RFDM0003 header field offsets (see `rfdot::artifact`).
+const V3_FLAGS: usize = 8;
+const V3_HEADER_PAD: usize = 29;
+const V3_KLEN: usize = 52;
+const V3_HEADER: usize = 56;
+
+fn sample(projection: ProjectionKind, recycle: bool, seed: u64) -> RandomMaclaurin {
+    let mut rng = Rng::seed_from(seed);
+    RandomMaclaurin::sample(
+        &Polynomial::new(4, 0.5),
+        17,
+        40,
+        RmConfig::default().with_projection(projection).with_recycle(recycle),
+        &mut rng,
+    )
+}
+
+fn dense_record() -> Vec<u8> {
+    to_bytes(&sample(ProjectionKind::Dense, false, 11))
+}
+
+fn structured_record() -> Vec<u8> {
+    to_bytes(&sample(ProjectionKind::Structured, false, 12))
+}
+
+fn v3_record() -> Vec<u8> {
+    // Recycled structured maps are exactly the maps whose canonical
+    // record kind is RFDM0003.
+    to_bytes(&sample(ProjectionKind::Structured, true, 13))
+}
+
+fn v3_dense_record() -> Vec<u8> {
+    rfdot::artifact::MapArtifact::from_map(&sample(ProjectionKind::Dense, false, 14))
+        .expect("encode dense artifact")
+        .as_bytes()
+        .to_vec()
+}
+
+fn patch_u32(buf: &mut [u8], off: usize, v: u32) {
+    buf[off..off + 4].copy_from_slice(&v.to_le_bytes());
+}
+
+fn patch_u64(buf: &mut [u8], off: usize, v: u64) {
+    buf[off..off + 8].copy_from_slice(&v.to_le_bytes());
+}
+
+fn read_u32(buf: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(buf[off..off + 4].try_into().unwrap())
+}
+
+/// Byte offset of the RFDM0003 section table (after the zero-padded
+/// kernel name and the `nsec` + pad words).
+fn v3_table_start(buf: &[u8]) -> usize {
+    let klen = read_u32(buf, V3_KLEN) as usize;
+    (V3_HEADER + klen).div_ceil(8) * 8 + 8
+}
+
+#[test]
+fn every_truncation_of_every_record_kind_errors_cleanly() {
+    for record in [dense_record(), structured_record(), v3_record(), v3_dense_record()] {
+        // Positive control: the untouched record parses.
+        from_bytes(&record).expect("valid record must parse");
+        for cut in 0..record.len() {
+            assert!(
+                from_bytes(&record[..cut]).is_err(),
+                "truncation to {cut}/{} bytes must error, not parse",
+                record.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn trailing_bytes_are_rejected_per_record_kind() {
+    for record in [dense_record(), structured_record(), v3_record(), v3_dense_record()] {
+        let mut extended = record.clone();
+        extended.push(0);
+        let err = from_bytes(&extended).expect_err("trailing byte must be rejected");
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+}
+
+#[test]
+fn bad_magic_is_rejected() {
+    let mut record = dense_record();
+    record[..8].copy_from_slice(b"RFDM9999");
+    let err = from_bytes(&record).expect_err("unknown magic must be rejected");
+    assert!(err.to_string().contains("magic"), "{err}");
+}
+
+#[test]
+fn legacy_oversized_klen_is_rejected() {
+    for record in [dense_record(), structured_record()] {
+        let mut record = record;
+        patch_u32(&mut record, LEGACY_KLEN, u32::MAX);
+        assert!(from_bytes(&record).is_err(), "klen past the buffer must error");
+    }
+}
+
+#[test]
+fn legacy_oversized_feature_count_cannot_force_allocation() {
+    // A crafted D claims u32::MAX features; the reader must prove the
+    // payload bytes exist before reserving, so this errors immediately
+    // instead of attempting a multi-gigabyte `Vec::with_capacity`.
+    for record in [dense_record(), structured_record()] {
+        let mut record = record;
+        patch_u32(&mut record, LEGACY_NFEAT, u32::MAX);
+        let err = from_bytes(&record).expect_err("bogus feature count must error");
+        assert!(err.to_string().contains("payload missing"), "{err}");
+    }
+}
+
+#[test]
+fn dense_rows_field_mismatching_order_sum_is_rejected() {
+    let record = dense_record();
+    let klen = read_u32(&record, LEGACY_KLEN) as usize;
+    let n_feat = read_u32(&record, LEGACY_NFEAT) as usize;
+    let rows_off = LEGACY_BODY + klen + 8 * n_feat;
+    let rows = read_u32(&record, rows_off);
+    let mut bad = record;
+    patch_u32(&mut bad, rows_off, rows + 1);
+    let err = from_bytes(&bad).expect_err("rows/order-sum mismatch must error");
+    assert!(err.to_string().contains("order sum"), "{err}");
+}
+
+#[test]
+fn dense_truncated_sign_payload_is_rejected() {
+    let record = dense_record();
+    let err = from_bytes(&record[..record.len() - 8])
+        .expect_err("missing sign words must error");
+    assert!(err.to_string().contains("sign payload"), "{err}");
+}
+
+#[test]
+fn structured_order_above_declared_max_order_is_rejected() {
+    let record = structured_record();
+    let klen = read_u32(&record, LEGACY_KLEN) as usize;
+    let mut bad = record;
+    // First entry of the orders array, set above the header's max_order.
+    patch_u32(&mut bad, LEGACY_BODY + klen, 10_000);
+    let err = from_bytes(&bad).expect_err("order above max_order must error");
+    assert!(err.to_string().contains("max_order"), "{err}");
+}
+
+#[test]
+fn structured_reconstruction_bomb_is_rejected() {
+    // Seeded reconstruction means a ~100-byte structured record could
+    // otherwise demand gigabytes of FWHT state via a huge `d`.
+    let mut record = structured_record();
+    patch_u32(&mut record, LEGACY_D, 1 << 30);
+    let err = from_bytes(&record).expect_err("reconstruction bomb must error");
+    assert!(err.to_string().contains("budget"), "{err}");
+}
+
+#[test]
+fn v3_unknown_flag_bits_are_rejected() {
+    let mut record = v3_record();
+    record[V3_FLAGS] |= 0x80;
+    let err = from_bytes(&record).expect_err("unknown flag bit must error");
+    assert!(err.to_string().contains("flags"), "{err}");
+}
+
+#[test]
+fn v3_recycled_flag_on_a_dense_record_is_rejected() {
+    let mut record = v3_dense_record();
+    assert_eq!(read_u32(&record, V3_FLAGS), 0, "dense artifact must carry no flags");
+    patch_u32(&mut record, V3_FLAGS, 2); // FLAG_RECYCLED without FLAG_STRUCTURED
+    assert!(from_bytes(&record).is_err(), "recycled dense record must error");
+}
+
+#[test]
+fn v3_nonzero_header_padding_is_rejected() {
+    let mut record = v3_record();
+    record[V3_HEADER_PAD] = 1;
+    let err = from_bytes(&record).expect_err("non-zero header padding must error");
+    assert!(err.to_string().contains("padding"), "{err}");
+}
+
+#[test]
+fn v3_nonzero_kernel_name_padding_is_rejected() {
+    let record = v3_record();
+    let klen = read_u32(&record, V3_KLEN) as usize;
+    let name_end = V3_HEADER + klen;
+    let padded = name_end.div_ceil(8) * 8;
+    assert!(padded > name_end, "fixture kernel name must need padding");
+    let mut bad = record;
+    bad[name_end] = 7;
+    let err = from_bytes(&bad).expect_err("non-zero name padding must error");
+    assert!(err.to_string().contains("padding"), "{err}");
+}
+
+#[test]
+fn v3_non_canonical_section_offset_is_rejected() {
+    let mut record = v3_record();
+    let off_field = v3_table_start(&record) + 8;
+    let off = u64::from_le_bytes(record[off_field..off_field + 8].try_into().unwrap());
+    patch_u64(&mut record, off_field, off + 8);
+    let err = from_bytes(&record).expect_err("non-canonical offset must error");
+    assert!(err.to_string().contains("offset"), "{err}");
+}
+
+#[test]
+fn v3_oversized_section_length_is_rejected() {
+    let mut record = v3_record();
+    let elems_field = v3_table_start(&record) + 16;
+    patch_u64(&mut record, elems_field, 1 << 40);
+    let err = from_bytes(&record).expect_err("oversized section must error");
+    assert!(err.to_string().contains("truncated"), "{err}");
+}
+
+#[test]
+fn v3_section_size_overflow_is_rejected() {
+    let mut record = v3_record();
+    let elems_field = v3_table_start(&record) + 16;
+    patch_u64(&mut record, elems_field, u64::MAX);
+    let err = from_bytes(&record).expect_err("section size overflow must error");
+    assert!(err.to_string().contains("overflow"), "{err}");
+}
+
+#[test]
+fn v3_reader_round_trips_the_untouched_records_bit_for_bit() {
+    // The hardening must not disturb the canonical path: a valid v3
+    // record parses, instantiates, and re-encodes byte-identically.
+    for record in [v3_record(), v3_dense_record()] {
+        let art = rfdot::artifact::MapArtifact::from_bytes(&record).unwrap();
+        assert_eq!(art.as_bytes(), &record[..], "parse must hold the exact bytes");
+        let map = art.instantiate().unwrap();
+        let re = rfdot::artifact::MapArtifact::from_map(&map).unwrap();
+        assert_eq!(re.as_bytes(), &record[..], "re-encode must be byte-identical");
+    }
+}

@@ -4,11 +4,15 @@
 #
 #  * `cargo doc` runs with `-D warnings` so broken intra-doc links (the
 #    paper cross-references added in the rustdoc pass) fail the gate;
-#  * the structured/sparse/serve/simd bench smokes exercise the
-#    BENCH_*.json regeneration paths (--quick diverts their noisy
+#  * the structured/sparse/serve/simd/artifact bench smokes exercise
+#    the BENCH_*.json regeneration paths (--quick diverts their noisy
 #    timings to the temp dir so checked-in baselines are only
 #    overwritten by full measured runs; the sparse smoke also asserts
 #    CSR/dense parity inside the bench);
+#  * `rfdot map-info --selftest` smokes the artifact layer end to end:
+#    RFDM0001/0002 records up-convert to the zero-copy RFDM0003 layout
+#    with bit-identical transforms, and recycling shrinks the
+#    materialized container;
 #  * the test suite runs three times: under auto kernel dispatch, with
 #    RFDOT_SIMD=scalar forcing the portable oracle kernels, and with
 #    RFDOT_TRACE=1 so every span/ring assertion also holds while
@@ -44,6 +48,10 @@ cargo bench --bench micro -- --quick --only structured
 cargo bench --bench micro -- --quick --only sparse
 cargo bench --bench micro -- --quick --only serve-throughput
 cargo bench --bench micro -- --quick --only simd-kernels
+cargo bench --bench micro -- --quick --only artifact-load
+# Artifact-layer smoke: legacy-record up-conversion, bitwise transform
+# parity, and the recycling size win, all behind one subcommand.
+cargo run --release --quiet -- map-info --selftest
 # bench-diff self-comparison: the regression gate parses the checked-in
 # baselines and exits 0 (pending/null samples compare clean), so wiring
 # real old-vs-new comparisons later is a one-line change. The simd
