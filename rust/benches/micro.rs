@@ -10,6 +10,9 @@
 //! * coordinator end-to-end round trip under load,
 //! * the serve-throughput sweep over workers × shard-vs-shared queue
 //!   topology × client batch size (recorded to `BENCH_serve.json`),
+//! * the net-roundtrip sweep — TCP loopback request/reply through the
+//!   `RFNP` front-end over clients × pipeline depth (recorded to
+//!   `BENCH_net.json`),
 //! * the artifact-load sweep — cold-load latency + resident bytes for
 //!   owned vs zero-copy vs recycled map records (recorded to
 //!   `BENCH_artifact.json`),
@@ -1046,6 +1049,117 @@ fn bench_artifact_load() {
     }
 }
 
+/// TCP round-trip throughput over loopback: the network serving tier
+/// end to end (client → RFNP framing → registry → coordinator → reply
+/// frame), across clients × pipeline depth. Depth 1 is the synchronous
+/// request/reply cost; depth 16 keeps the wire and the batcher busy and
+/// amortizes the per-frame syscalls. Recorded as the machine-readable
+/// baseline in `BENCH_net.json` at the repo root (gated on the
+/// secs_per_req column by `rfdot bench-diff`).
+fn bench_net_roundtrip() {
+    use rfdot::net::{NetClient, NetConfig, NetServer, Registry};
+    println!("\n== net round trip: clients x pipeline depth over loopback ==");
+    let (d, n_feat) = (22usize, 512usize);
+    let requests = if fast() { 200 } else { 2000 };
+    let mut rng = Rng::seed_from(77);
+    let map =
+        RandomMaclaurin::sample(&Exponential::new(1.0), d, n_feat, RmConfig::default(), &mut rng);
+    let artifact = Arc::new(rfdot::artifact::MapArtifact::from_map(&map).unwrap());
+    let registry = Arc::new(Registry::new(CoordinatorConfig {
+        max_batch: 128,
+        max_wait: Duration::from_micros(200),
+        queue_depth: 8192,
+        workers: 2,
+        intra_op_threads: 1,
+        ..Default::default()
+    }));
+    registry.insert("bench", artifact).unwrap();
+    let mut server = NetServer::start(registry.clone(), NetConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let mut table = Table::new(&["clients", "depth", "req/s", "secs/req"]);
+    // (clients, pipeline depth, reqs_per_s, secs_per_req)
+    let mut samples: Vec<(usize, usize, f64, f64)> = Vec::new();
+    for &clients in &[1usize, 4] {
+        for &depth in &[1usize, 16] {
+            let sw = rfdot::metrics::Stopwatch::start();
+            let mut handles = Vec::new();
+            for c in 0..clients {
+                handles.push(std::thread::spawn(move || {
+                    let mut client =
+                        NetClient::connect(addr, Duration::from_secs(30)).unwrap();
+                    let mut rng = Rng::seed_from(500 + c as u64);
+                    let mut ok = 0usize;
+                    let mut left = requests / clients;
+                    while left > 0 {
+                        let take = left.min(depth);
+                        left -= take;
+                        for _ in 0..take {
+                            let x: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+                            client.send_dense("bench", x).unwrap();
+                        }
+                        for _ in 0..take {
+                            ok += usize::from(client.recv_reply().is_ok());
+                        }
+                    }
+                    ok
+                }));
+            }
+            let completed: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            let dt = sw.elapsed_secs().max(1e-9);
+            let reqs_per_s = completed as f64 / dt;
+            let secs_per_req = dt / completed.max(1) as f64;
+            table.row(&[
+                format!("{clients}"),
+                format!("{depth}"),
+                format!("{reqs_per_s:.0}"),
+                fmt_duration(secs_per_req),
+            ]);
+            samples.push((clients, depth, reqs_per_s, secs_per_req));
+        }
+    }
+    table.print();
+    server.shutdown();
+    drop(server);
+    registry.shutdown();
+
+    let json_samples = samples
+        .iter()
+        .map(|(clients, depth, rps, spr)| {
+            format!(
+                r#"{{"clients": {clients}, "batch": {depth}, "reqs_per_s": {rps:.1}, "secs_per_req": {spr:.9}}}"#
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n    ");
+    // Same policy as the other sweeps: --quick runs exercise the
+    // regeneration path but divert their noisy timings to the temp dir;
+    // only full measured runs overwrite the checked-in baseline.
+    let (status, invocation, path) = if fast() {
+        (
+            "smoke",
+            "cargo bench --bench micro -- --quick --only net-roundtrip",
+            std::env::temp_dir().join("BENCH_net.smoke.json"),
+        )
+    } else {
+        (
+            "measured",
+            "cargo bench --bench micro -- --only net-roundtrip",
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_net.json"),
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"net_roundtrip\",\n  \"status\": \"{status}\",\n  \
+         \"generated_by\": \"{invocation}\",\n  \
+         \"net\": {{\"d\": {d}, \"features\": {n_feat}, \"requests\": {requests}, \
+         \"samples\": [\n    {json_samples}\n  ]}}\n}}\n"
+    );
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("   baseline recorded to {}", path.display()),
+        Err(e) => println!("   (could not write {}: {e})", path.display()),
+    }
+}
+
 fn bench_solvers() {
     println!("\n== svm solver throughput (nursery surrogate, scale 0.05) ==");
     use rfdot::data::UciSurrogate;
@@ -1100,7 +1214,7 @@ fn main() {
         }
     }
 
-    let sections: [(&str, fn()); 14] = [
+    let sections: [(&str, fn()); 15] = [
         ("native-transform", bench_native_transform),
         ("parallel-sweep", bench_parallel_sweep),
         ("structured-sweep", bench_structured_sweep),
@@ -1110,6 +1224,7 @@ fn main() {
         ("pjrt-execute", bench_pjrt_execute),
         ("coordinator-roundtrip", bench_coordinator_roundtrip),
         ("serve-throughput", bench_serve_throughput),
+        ("net-roundtrip", bench_net_roundtrip),
         ("artifact-load", bench_artifact_load),
         ("pjrt-coordinator", bench_pjrt_coordinator),
         ("pjrt-bucketed-coordinator", bench_pjrt_bucketed_coordinator),

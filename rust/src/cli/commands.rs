@@ -372,9 +372,36 @@ pub fn serve(args: &mut Args) -> Result<()> {
     // For serving, --threads means intra-op threads per worker batch
     // (the native backend's data-parallel fan-out).
     let intra_op_threads = args.usize_flag("threads", 1)?;
+    // Network front-end knobs (active only with --listen).
+    let listen = args.str_flag("listen", "");
+    let models_spec = args.str_flag("models", "");
+    let heartbeat_ms = args.num_flag("heartbeat-ms", 2000.0)? as u64;
+    let max_missed = args.usize_flag("max-missed", 3)? as u32;
+    let write_queue = args.usize_flag("write-queue", 256)?;
+    let conns = args.usize_flag("conns", 0)?;
     apply_simd(args)?;
     let trace_out = apply_trace(args);
     warn_unknown(args);
+
+    if !listen.is_empty() {
+        return serve_listen(ListenParams {
+            listen,
+            models_spec,
+            heartbeat_ms,
+            max_missed,
+            write_queue,
+            conns,
+            workers,
+            shards,
+            max_batch,
+            max_wait_ms,
+            intra_op_threads,
+            seed,
+            projection,
+            recycle,
+            trace_out,
+        });
+    }
 
     if projection == crate::structured::ProjectionKind::Structured && !native {
         return Err(crate::Error::Config(
@@ -582,13 +609,288 @@ fn serve_config_line(
     )
 }
 
+/// Everything `rfdot serve --listen` needs, carved off the flag soup.
+struct ListenParams {
+    listen: String,
+    models_spec: String,
+    heartbeat_ms: u64,
+    max_missed: u32,
+    write_queue: usize,
+    conns: usize,
+    workers: usize,
+    shards: usize,
+    max_batch: usize,
+    max_wait_ms: f64,
+    intra_op_threads: usize,
+    seed: u64,
+    projection: crate::structured::ProjectionKind,
+    recycle: bool,
+    trace_out: String,
+}
+
+/// `rfdot serve --listen ADDR` — the multi-tenant TCP front-end: a
+/// model registry (one coordinator per named model, hot-swappable)
+/// behind the RFNP wire protocol. Prints a parseable
+/// `listening on <addr>` line, then blocks until shutdown (or until
+/// `--conns N` connections have come and gone), and exits with the
+/// consolidated front-end + per-model stats lines.
+fn serve_listen(p: ListenParams) -> Result<()> {
+    let coord_config = CoordinatorConfig {
+        max_batch: p.max_batch,
+        max_wait: Duration::from_micros((p.max_wait_ms * 1000.0) as u64),
+        queue_depth: 8192,
+        workers: p.workers,
+        intra_op_threads: p.intra_op_threads,
+        shards: p.shards,
+    };
+    let registry = Arc::new(crate::net::Registry::new(coord_config));
+    if p.models_spec.is_empty() {
+        // Default tenant: the same synthetic model as the native demo
+        // path, served through its zero-copy artifact.
+        let kernel = crate::kernels::Exponential::new(1.0);
+        let mut rng = Rng::seed_from(p.seed);
+        let map = RandomMaclaurin::sample(
+            &kernel,
+            22,
+            512,
+            RmConfig::default()
+                .with_max_order(8)
+                .with_projection(p.projection)
+                .with_recycle(p.recycle),
+            &mut rng,
+        );
+        let artifact = Arc::new(crate::artifact::MapArtifact::from_map(&map)?);
+        registry.insert("default", artifact)?;
+    } else {
+        for part in p.models_spec.split(',') {
+            let (name, path) = part.split_once('=').ok_or_else(|| {
+                crate::Error::Config(format!(
+                    "--models entries are name=path.rfdm, got {part:?}"
+                ))
+            })?;
+            let artifact =
+                Arc::new(crate::artifact::MapArtifact::load(std::path::Path::new(path.trim()))?);
+            registry.insert(name.trim(), artifact)?;
+        }
+    }
+
+    let net_config = crate::net::NetConfig {
+        listen: p.listen.clone(),
+        heartbeat: Duration::from_millis(p.heartbeat_ms.max(1)),
+        max_missed: p.max_missed.max(1),
+        write_queue: p.write_queue.max(1),
+        write_timeout: Duration::from_secs(10),
+        max_conns: p.conns,
+    };
+    let mut server = crate::net::NetServer::start(registry.clone(), net_config)?;
+    let names: Vec<String> = registry.list().into_iter().map(|m| m.name).collect();
+    println!(
+        "listening on {} ({} models: {})",
+        server.local_addr(),
+        names.len(),
+        names.join(",")
+    );
+    if p.conns > 0 {
+        println!("exiting after {} connections", p.conns);
+    }
+    server.wait();
+
+    // Consolidated stats: front-end counters, then the per-model
+    // request/latency breakdown (same numbers as `MetricsSnapshot`).
+    println!(
+        "net: connections_total={} frames={} frames_sent={} rejects={} reaped={} bad_frames={}",
+        crate::obs::counter("net.connections_total").get(),
+        crate::obs::counter("net.frames").get(),
+        crate::obs::counter("net.frames_sent").get(),
+        crate::obs::counter("net.reject").get(),
+        crate::obs::counter("net.reaped").get(),
+        crate::obs::counter("net.bad_frames").get(),
+    );
+    for m in registry.model_stats() {
+        println!("{}", model_stats_line(&m));
+    }
+    server.shutdown();
+    drop(server);
+    registry.shutdown();
+
+    if !p.trace_out.is_empty() {
+        let doc = crate::obs::trace::chrome_trace(&crate::obs::trace::drain());
+        std::fs::write(&p.trace_out, doc.pretty())?;
+        let check = crate::obs::trace::check_balanced(&doc)?;
+        println!(
+            "wrote {}: {} trace events ({} spans, {} threads)",
+            p.trace_out, check.events, check.spans, check.threads
+        );
+    }
+    Ok(())
+}
+
+/// One per-model line of the consolidated serve stats: request count,
+/// swap count and the latency summary of `net.model.<name>.latency_us`
+/// (split out so the format is testable).
+fn model_stats_line(m: &crate::net::ModelStats) -> String {
+    format!(
+        "model {}: v{} requests={} swaps={} lat p50={:.0}us p90={:.0}us max={:.0}us (n={})",
+        m.name,
+        m.version,
+        m.requests,
+        m.swaps,
+        m.latency_us.p50,
+        m.latency_us.p90,
+        m.latency_us.max,
+        m.latency_us.n,
+    )
+}
+
+/// `rfdot net-client` — exercise a running RFNP server: ping, model
+/// discovery, interleaved dense + sparse requests with a client-side
+/// bitwise dense/sparse parity check, and (with `--malformed`) crafted
+/// bad frames that must come back as named error frames.
+pub fn net_client(args: &mut Args) -> Result<()> {
+    let connect = args.require("connect")?;
+    let requests = args.usize_flag("requests", 8)?.max(1);
+    let model_flag = args.str_flag("model", "");
+    let malformed = args.switch("malformed");
+    let seed = args.num_flag("seed", 42.0)? as u64;
+    warn_unknown(args);
+
+    let timeout = Duration::from_secs(10);
+    let mut client = crate::net::NetClient::connect(connect.as_str(), timeout)?;
+    client.ping()?;
+    let models = client.list_models()?;
+    if models.is_empty() {
+        return Err(crate::Error::Runtime("server lists no models".into()));
+    }
+    let entry = if model_flag.is_empty() {
+        models[0].clone()
+    } else {
+        models
+            .iter()
+            .find(|m| m.name == model_flag)
+            .cloned()
+            .ok_or_else(|| {
+                crate::Error::Config(format!(
+                    "model {model_flag:?} not served; available: {}",
+                    models.iter().map(|m| m.name.as_str()).collect::<Vec<_>>().join(",")
+                ))
+            })?
+    };
+    let d = entry.input_dim as usize;
+    let mut rng = Rng::seed_from(seed);
+    for _ in 0..requests {
+        // A sparse row and its densified twin must produce bitwise
+        // identical replies (the coordinator's CSR parity contract,
+        // observed end to end over the wire).
+        let indices: Vec<u32> = (0..d as u32).step_by(2).collect();
+        let values: Vec<f32> = indices.iter().map(|_| rng.f32() - 0.5).collect();
+        let mut dense_x = vec![0.0f32; d];
+        for (&i, &v) in indices.iter().zip(values.iter()) {
+            dense_x[i as usize] = v;
+        }
+        let dense = client.transform(&entry.name, &dense_x)?;
+        if dense.len() != entry.output_dim as usize {
+            return Err(crate::Error::Runtime(format!(
+                "reply dim {} does not match advertised output dim {}",
+                dense.len(),
+                entry.output_dim
+            )));
+        }
+        let sparse = client.transform_sparse(&entry.name, &indices, &values)?;
+        if sparse.len() != dense.len()
+            || sparse.iter().zip(dense.iter()).any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return Err(crate::Error::Runtime(
+                "sparse reply differs bitwise from the dense reply".into(),
+            ));
+        }
+    }
+    client.heartbeat()?;
+    if malformed {
+        probe_malformed(&connect)?;
+    }
+    println!(
+        "net-client: ping ok, {} models, {requests} dense/sparse pairs bitwise-equal{}",
+        models.len(),
+        if malformed { ", malformed frames rejected" } else { "" }
+    );
+    Ok(())
+}
+
+/// Two deliberately broken connections (bad magic; oversized length
+/// claim): each must be answered with a named protocol error frame and
+/// a close — never a hang or an allocation. Uses exactly two extra
+/// connections (CI's `--conns` budget counts on it).
+fn probe_malformed(addr: &str) -> Result<()> {
+    use crate::net::protocol::{encode_header, FrameType, HEADER_LEN, MAGIC, VERSION};
+    // Bad magic: fatal framing error.
+    let mut bad_magic = [0u8; HEADER_LEN];
+    bad_magic[..4].copy_from_slice(b"XXXX");
+    bad_magic[4] = VERSION;
+    bad_magic[5] = FrameType::Ping.as_u8();
+    expect_error_then_close(addr, &bad_magic, "magic")?;
+    // Oversized length: the allocation-bomb guard.
+    let mut bomb = encode_header(FrameType::Dense, 0);
+    debug_assert_eq!(bomb[..4], MAGIC);
+    bomb[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+    expect_error_then_close(addr, &bomb, "length")?;
+    Ok(())
+}
+
+/// Open a fresh connection, send `bytes`, and require a protocol error
+/// frame whose message contains `needle`, followed by EOF.
+fn expect_error_then_close(addr: &str, bytes: &[u8], needle: &str) -> Result<()> {
+    use crate::net::protocol::Frame;
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr)
+        .map_err(|e| crate::Error::Runtime(format!("connect: {e}")))?;
+    let _ = s.set_read_timeout(Some(Duration::from_secs(5)));
+    s.write_all(bytes)
+        .map_err(|e| crate::Error::Runtime(format!("send malformed frame: {e}")))?;
+    let mut header = [0u8; crate::net::protocol::HEADER_LEN];
+    s.read_exact(&mut header)
+        .map_err(|e| crate::Error::Runtime(format!("read error-frame header: {e}")))?;
+    let (ty, len) = crate::net::protocol::decode_header(&header)
+        .map_err(|e| crate::Error::Runtime(format!("server sent unframeable bytes: {e}")))?;
+    let mut payload = vec![0u8; len as usize];
+    s.read_exact(&mut payload)
+        .map_err(|e| crate::Error::Runtime(format!("read error-frame payload: {e}")))?;
+    match crate::net::protocol::decode_payload(ty, &payload).map_err(|e| e.to_error())? {
+        Frame::Error(e) if e.message.contains(needle) => {}
+        Frame::Error(e) => {
+            return Err(crate::Error::Runtime(format!(
+                "error frame does not name {needle:?}: {}",
+                e.message
+            )))
+        }
+        f => {
+            return Err(crate::Error::Runtime(format!(
+                "expected error frame, got {:?}",
+                f.frame_type()
+            )))
+        }
+    }
+    // The connection must be closed after a fatal framing error.
+    let mut probe = [0u8; 1];
+    match s.read(&mut probe) {
+        Ok(0) => Ok(()),
+        Ok(_) => Err(crate::Error::Runtime(
+            "connection still open after fatal framing error".into(),
+        )),
+        Err(e) => Err(crate::Error::Runtime(format!(
+            "connection not cleanly closed after fatal framing error: {e}"
+        ))),
+    }
+}
+
 /// A human label for an array element in a bench JSON file, derived
 /// from its identity fields (`{"map": "fourier", "threads": 4, ...}`),
 /// so a regression report reads `samples[map=fourier,threads=4]`
 /// instead of `samples[7]`.
 fn bench_elem_label(v: &Json) -> Option<String> {
     let mut parts = Vec::new();
-    for k in ["map", "kernel", "simd", "n", "threads", "workers", "shards", "batch", "sparsity"] {
+    for k in
+        ["map", "kernel", "simd", "n", "threads", "workers", "shards", "batch", "sparsity", "clients"]
+    {
         match v.get(k) {
             Some(Json::Str(s)) => parts.push(format!("{k}={s}")),
             Some(Json::Num(n)) => parts.push(format!("{k}={n}")),
@@ -1389,6 +1691,36 @@ mod tests {
         assert!(explicit.contains("shards=3"), "{explicit}");
         assert!(explicit.contains("payload=dense"), "{explicit}");
         assert!(explicit.contains("trace=on"), "{explicit}");
+    }
+
+    #[test]
+    fn model_stats_line_names_every_field() {
+        let line = model_stats_line(&crate::net::ModelStats {
+            name: "default".into(),
+            version: 3,
+            requests: 42,
+            swaps: 2,
+            latency_us: crate::metrics::Summary {
+                n: 42,
+                mean: 120.0,
+                min: 80.0,
+                p50: 110.0,
+                p90: 200.0,
+                max: 250.0,
+            },
+        });
+        for needle in [
+            "model default:",
+            "v3",
+            "requests=42",
+            "swaps=2",
+            "p50=110us",
+            "p90=200us",
+            "max=250us",
+            "(n=42)",
+        ] {
+            assert!(line.contains(needle), "missing {needle:?} in {line:?}");
+        }
     }
 
     #[test]

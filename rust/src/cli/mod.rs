@@ -8,6 +8,8 @@
 //! rfdot report [flags]           # full grid -> REPORT.md + REPORT.json
 //! rfdot transform [flags]        # featurize a LIBSVM file
 //! rfdot serve [flags]            # serving demo over the coordinator
+//! rfdot serve --listen ADDR      # multi-tenant TCP front-end (RFNP)
+//! rfdot net-client [flags]       # exercise a running RFNP server
 //! rfdot bench-diff A B [flags]   # regression gate over bench baselines
 //! rfdot trace-check FILE         # validate a Chrome trace_event export
 //! rfdot map-info FILE            # inspect a serialized map record
@@ -31,6 +33,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "report" => commands::report(&mut args),
         "transform" => commands::transform(&mut args),
         "serve" => commands::serve(&mut args),
+        "net-client" => commands::net_client(&mut args),
         "bench-diff" => commands::bench_diff(&mut args),
         "trace-check" => commands::trace_check(&mut args),
         "map-info" => commands::map_info(&mut args),
@@ -75,6 +78,25 @@ COMMANDS:
                   per worker; 1 = the shared-queue baseline)
                   --trace-out trace.json  (write a Chrome trace_event
                   file of the run; implies --trace)
+                with --listen the demo becomes a multi-tenant TCP
+                front-end speaking the RFNP wire protocol:
+                  --listen 127.0.0.1:7474  (port 0 = ephemeral; the
+                  bound address is printed as \"listening on <addr>\")
+                  --models name=path.rfdm,name2=path2.rfdm  (RFDM
+                  artifacts to serve; default: one sampled demo model
+                  named \"default\")
+                  --heartbeat-ms 2000 --max-missed 3  (liveness: reap
+                  clients silent for more than N intervals)
+                  --write-queue 256  (bounded per-client write-back
+                  queue; overflow is a retryable reject frame)
+                  --conns N  (exit after N connections close; CI)
+  net-client    exercise a running RFNP server: ping, list-models,
+                interleaved dense + sparse requests with client-side
+                dense/sparse parity checking, optional malformed-frame
+                probes (expects named error frames back)
+                  --connect 127.0.0.1:7474 --requests 8 --model default
+                  --malformed  (also probe bad magic + oversized frame
+                  on two extra connections)  --seed 42
   bench-diff    compare two bench baseline JSON files and exit nonzero
                 on regression (the CI perf gate)
                   rfdot bench-diff old.json new.json --max-regress 5

@@ -491,6 +491,17 @@ pub struct ServeConfig {
     /// Fall back to the native engine instead of PJRT.
     pub native: bool,
     pub seed: u64,
+    /// TCP bind address for the network front-end (empty = the
+    /// in-process serving demo; see `rfdot serve --listen`).
+    pub listen: String,
+    /// Heartbeat interval in milliseconds: the connection read timeout
+    /// and the liveness accounting unit.
+    pub heartbeat_ms: u64,
+    /// Consecutive silent heartbeat intervals before a client is reaped.
+    pub max_missed: u32,
+    /// Bounded per-client write-back queue (reply permits); overflow
+    /// surfaces as a retryable reject frame, never an unbounded buffer.
+    pub write_queue: usize,
 }
 
 impl Default for ServeConfig {
@@ -505,6 +516,10 @@ impl Default for ServeConfig {
             shards: 0,
             native: false,
             seed: 7,
+            listen: String::new(),
+            heartbeat_ms: 2000,
+            max_missed: 3,
+            write_queue: 256,
         }
     }
 }
@@ -512,6 +527,16 @@ impl Default for ServeConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn serve_config_net_defaults_match_net_config() {
+        let s = ServeConfig::default();
+        let n = crate::net::NetConfig::default();
+        assert_eq!(std::time::Duration::from_millis(s.heartbeat_ms), n.heartbeat);
+        assert_eq!(s.max_missed, n.max_missed);
+        assert_eq!(s.write_queue, n.write_queue);
+        assert!(s.listen.is_empty(), "default stays the in-process serving demo");
+    }
 
     #[test]
     fn kernel_spec_cli_parse() {

@@ -710,6 +710,24 @@ impl Coordinator {
         self.enqueue(Job::new(Payload::Dense(x), Reply::Callback(Box::new(callback))))
     }
 
+    /// CSR twin of [`Coordinator::submit_callback`]: one sparse row,
+    /// validated like [`Coordinator::submit_sparse`], answered through a
+    /// completion callback with the same exactly-once contract (the
+    /// network front-end's reply path rides this surface).
+    pub fn submit_sparse_callback(
+        &self,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+        callback: impl FnOnce(Result<Vec<f32>>) + Send + 'static,
+    ) -> Result<()> {
+        self.check_sparse(&indices, &values)?;
+        let _span = obs::span("serve.submit");
+        self.enqueue(Job::new(
+            Payload::Sparse { indices, values },
+            Reply::Callback(Box::new(callback)),
+        ))
+    }
+
     /// Submit a whole batch of vectors through one shared reply
     /// channel, amortizing the per-request ticket/channel overhead.
     /// Shape errors fail the whole call before anything is queued;

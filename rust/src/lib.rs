@@ -36,6 +36,12 @@
 //! * [`coordinator`] + [`runtime`] — the serving layer: a dynamic
 //!   batcher/router in front of AOT-compiled JAX/Pallas artifacts
 //!   executed through PJRT (the `xla` crate). Python is build-time only.
+//! * [`net`] — the network serving tier: a multi-tenant TCP front-end
+//!   (`rfdot serve --listen`) speaking the length-prefixed `RFNP` wire
+//!   protocol, backed by a hot-swappable model registry where each
+//!   named model is an RFDM0003 artifact instantiated through
+//!   [`coordinator::MapArtifactFactory`], with bounded per-client
+//!   write-back queues, heartbeat liveness and per-model metrics.
 //! * [`report`] — the self-documenting reproduction-report subsystem:
 //!   `rfdot report` runs the declared grid (feature-map family × kernel
 //!   × projection × storage × D), resumable via a JSON run-log, and
@@ -88,6 +94,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod maclaurin;
 pub mod metrics;
+pub mod net;
 pub mod nystrom;
 pub mod obs;
 pub mod parallel;

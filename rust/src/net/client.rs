@@ -1,0 +1,156 @@
+//! A minimal blocking client for the `RFNP` wire protocol — the
+//! reference implementation the README documents, used by the
+//! `rfdot net-client` CLI, the integration tests and the
+//! `net-roundtrip` bench. One synchronous request/reply per call,
+//! plus a split send/receive surface for pipelining.
+
+use crate::error::{Error, Result};
+use crate::net::protocol::{
+    decode_header, decode_payload, encode_frame, Frame, ModelEntry, Request, SparseRequest,
+    HEADER_LEN,
+};
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// A blocking RFNP connection.
+pub struct NetClient {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl NetClient {
+    /// Connect with a read timeout (a server that stops answering
+    /// surfaces as an error instead of a hang).
+    pub fn connect(addr: impl ToSocketAddrs, read_timeout: Duration) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Runtime(format!("connect: {e}")))?;
+        stream
+            .set_read_timeout(Some(read_timeout))
+            .map_err(|e| Error::Runtime(format!("set_read_timeout: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        Ok(NetClient { stream, next_id: 1 })
+    }
+
+    /// Send a raw frame (tests also write crafted bytes directly).
+    pub fn send_frame(&mut self, frame: &Frame) -> Result<()> {
+        self.stream
+            .write_all(&encode_frame(frame))
+            .map_err(|e| Error::Runtime(format!("send frame: {e}")))
+    }
+
+    /// Read one complete frame off the stream.
+    pub fn read_frame(&mut self) -> Result<Frame> {
+        let mut header = [0u8; HEADER_LEN];
+        self.stream
+            .read_exact(&mut header)
+            .map_err(|e| Error::Runtime(format!("read frame header: {e}")))?;
+        let (ty, len) = decode_header(&header).map_err(|e| e.to_error())?;
+        let mut payload = vec![0u8; len as usize];
+        self.stream
+            .read_exact(&mut payload)
+            .map_err(|e| Error::Runtime(format!("read frame payload: {e}")))?;
+        decode_payload(ty, &payload).map_err(|e| e.to_error())
+    }
+
+    /// Round-trip a ping with an opaque token.
+    pub fn ping(&mut self) -> Result<()> {
+        let token = self.next_id.to_le_bytes().to_vec();
+        self.next_id += 1;
+        self.send_frame(&Frame::Ping { token: token.clone() })?;
+        match self.read_frame()? {
+            Frame::Pong { token: echoed } if echoed == token => Ok(()),
+            Frame::Pong { .. } => Err(Error::Runtime("pong token mismatch".into())),
+            f => Err(Error::Runtime(format!("expected pong, got {:?}", f.frame_type()))),
+        }
+    }
+
+    /// Fire-and-forget liveness signal.
+    pub fn heartbeat(&mut self) -> Result<()> {
+        self.send_frame(&Frame::Heartbeat)
+    }
+
+    /// The server's model directory.
+    pub fn list_models(&mut self) -> Result<Vec<ModelEntry>> {
+        self.send_frame(&Frame::ListModels)?;
+        match self.read_frame()? {
+            Frame::Models(models) => Ok(models),
+            f => Err(Error::Runtime(format!("expected models, got {:?}", f.frame_type()))),
+        }
+    }
+
+    /// Send a dense request without waiting (pipelining); returns the
+    /// request id to match against [`NetClient::recv_reply`].
+    pub fn send_dense(&mut self, model: &str, values: Vec<f32>) -> Result<u64> {
+        let req_id = self.next_id;
+        self.next_id += 1;
+        self.send_frame(&Frame::Dense(Request { req_id, model: to_name(model)?, values }))?;
+        Ok(req_id)
+    }
+
+    /// Send a sparse (CSR) request without waiting.
+    pub fn send_sparse(&mut self, model: &str, indices: Vec<u32>, values: Vec<f32>) -> Result<u64> {
+        let req_id = self.next_id;
+        self.next_id += 1;
+        self.send_frame(&Frame::Sparse(SparseRequest {
+            req_id,
+            model: to_name(model)?,
+            indices,
+            values,
+        }))?;
+        Ok(req_id)
+    }
+
+    /// Receive the next reply; a server error frame comes back as the
+    /// reconstructed [`Error`] tagged with its request id.
+    pub fn recv_reply(&mut self) -> Result<(u64, Vec<f32>)> {
+        match self.read_frame()? {
+            Frame::Reply { req_id, values } => Ok((req_id, values)),
+            Frame::Error(e) => Err(Error::Runtime(format!(
+                "server error for request {}: {}",
+                e.req_id,
+                e.to_error()
+            ))),
+            f => Err(Error::Runtime(format!("expected reply, got {:?}", f.frame_type()))),
+        }
+    }
+
+    /// Synchronous dense transform.
+    pub fn transform(&mut self, model: &str, x: &[f32]) -> Result<Vec<f32>> {
+        let req_id = self.send_dense(model, x.to_vec())?;
+        let (got, values) = self.recv_reply()?;
+        if got != req_id {
+            return Err(Error::Runtime(format!(
+                "reply id {got} does not match request id {req_id}"
+            )));
+        }
+        Ok(values)
+    }
+
+    /// Synchronous sparse transform.
+    pub fn transform_sparse(
+        &mut self,
+        model: &str,
+        indices: &[u32],
+        values: &[f32],
+    ) -> Result<Vec<f32>> {
+        let req_id = self.send_sparse(model, indices.to_vec(), values.to_vec())?;
+        let (got, out) = self.recv_reply()?;
+        if got != req_id {
+            return Err(Error::Runtime(format!(
+                "reply id {got} does not match request id {req_id}"
+            )));
+        }
+        Ok(out)
+    }
+}
+
+fn to_name(model: &str) -> Result<String> {
+    if model.is_empty() || model.len() > crate::net::protocol::MAX_NAME {
+        return Err(Error::Config(format!(
+            "model name must be 1..={} bytes",
+            crate::net::protocol::MAX_NAME
+        )));
+    }
+    Ok(model.to_string())
+}

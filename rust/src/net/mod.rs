@@ -1,0 +1,40 @@
+//! The network serving tier: a multi-tenant TCP front-end over the
+//! sharded [`crate::coordinator`], following the request-handling /
+//! coordinator-state split (ROADMAP item 1, after xaynet's service
+//! layering).
+//!
+//! Three layers, each its own module:
+//!
+//! 1. [`protocol`] — the `RFNP` length-prefixed binary codec: magic +
+//!    version + frame-type header, dense and sparse CSR request forms,
+//!    `ping`/`heartbeat`/`list-models`, and an error frame carrying
+//!    the [`crate::Error`] taxonomy. Hardened like the RFDM readers:
+//!    every length proven before allocation, named per-field errors
+//!    (`rust/tests/net_protocol.rs` sweeps every truncation).
+//! 2. [`registry`] — named models, each a [`registry::Serving`]
+//!    instantiated from an RFDM0003 artifact through
+//!    [`crate::coordinator::MapArtifactFactory`] (tenants share one
+//!    read-only weight region), with zero-downtime hot-swap: load new
+//!    → atomic switch → drain in-flight → retire when the refcount
+//!    drains (`rust/tests/net_registry.rs`).
+//! 3. [`server`] — the threaded front-end: accept loop, reader/writer
+//!    thread pair per connection, bounded write-back queues with
+//!    permit-accounted backpressure, heartbeat liveness reaping
+//!    (`rust/tests/net_server.rs`), plus [`client::NetClient`], the
+//!    reference client.
+//!
+//! Observability: `net.connections`, `net.frames`, `net.frames_sent`,
+//! `net.reject`, `net.reaped`, `net.bad_frames`, `net.dropped_control`,
+//! `net.retired`, and per-model `net.model.<name>.requests` /
+//! `.latency_us` / `.swaps` — all through [`crate::obs`] and visible
+//! in [`crate::obs::MetricsSnapshot`]; `--trace` spans cover frame
+//! handling (`net.frame`, `net.write_frame`) and swaps (`net.swap`).
+
+pub mod client;
+pub mod protocol;
+pub mod registry;
+pub mod server;
+
+pub use client::NetClient;
+pub use registry::{ModelSlot, ModelStats, Registry, Serving};
+pub use server::{NetConfig, NetServer};

@@ -1,0 +1,703 @@
+//! The `RFNP` wire protocol: a small length-prefixed binary framing for
+//! the network serving tier.
+//!
+//! # Frame layout
+//!
+//! Every frame is a fixed 12-byte header followed by `payload_len`
+//! payload bytes, all integers little-endian:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic       b"RFNP"
+//! 4       1     version     1
+//! 5       1     frame type  (see below)
+//! 6       2     reserved    must be 0
+//! 8       4     payload_len u32, <= MAX_PAYLOAD (16 MiB)
+//! ```
+//!
+//! Client → server frames: `Ping` (0x01, opaque token echoed back),
+//! `Heartbeat` (0x02, empty payload, liveness only), `ListModels`
+//! (0x03, empty), `Dense` (0x04), `Sparse` (0x05, CSR). Server →
+//! client: `Pong` (0x81), `Models` (0x83), `Reply` (0x84), `Error`
+//! (0xEE, carrying the [`crate::Error`] taxonomy as a numeric code
+//! plus a retryable flag).
+//!
+//! # Error discipline
+//!
+//! [`decode_header`] failures are **fatal** ([`FrameError::fatal`]):
+//! bad magic/version, non-zero reserved bytes, or an oversized length
+//! mean the stream can no longer be framed, so the server sends one
+//! error frame and closes. [`decode_payload`] failures are
+//! **recoverable**: the header gave an exact payload length, so the
+//! frame boundary is known, the malformed frame is skipped with a
+//! named error frame, and the connection stays open in a defined
+//! state. Every length field is proven against the bytes actually
+//! present *before* any allocation, so a crafted count can never force
+//! a multi-gigabyte `Vec::with_capacity` (the allocation-bomb guard
+//! the torture suite in `rust/tests/net_protocol.rs` pins).
+
+use crate::error::{Error, Result};
+
+/// Frame magic: RFdot Network Protocol.
+pub const MAGIC: [u8; 4] = *b"RFNP";
+/// Current wire protocol version.
+pub const VERSION: u8 = 1;
+/// Fixed frame header size in bytes.
+pub const HEADER_LEN: usize = 12;
+/// Maximum payload size (16 MiB) — the allocation-bomb guard: a header
+/// claiming more is rejected before any payload byte is read.
+pub const MAX_PAYLOAD: u32 = 1 << 24;
+/// Maximum model name length in bytes.
+pub const MAX_NAME: usize = 255;
+
+/// Wire frame type tags.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameType {
+    Ping = 0x01,
+    Heartbeat = 0x02,
+    ListModels = 0x03,
+    Dense = 0x04,
+    Sparse = 0x05,
+    Pong = 0x81,
+    Models = 0x83,
+    Reply = 0x84,
+    Error = 0xEE,
+}
+
+impl FrameType {
+    pub fn from_u8(b: u8) -> Option<FrameType> {
+        match b {
+            0x01 => Some(FrameType::Ping),
+            0x02 => Some(FrameType::Heartbeat),
+            0x03 => Some(FrameType::ListModels),
+            0x04 => Some(FrameType::Dense),
+            0x05 => Some(FrameType::Sparse),
+            0x81 => Some(FrameType::Pong),
+            0x83 => Some(FrameType::Models),
+            0x84 => Some(FrameType::Reply),
+            0xEE => Some(FrameType::Error),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+}
+
+/// Numeric error codes carried by the error frame. Codes 1–9 map the
+/// [`crate::Error`] variants in declaration order; 10 and 11 are
+/// protocol-level conditions with no library counterpart.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    Config = 1,
+    Kernel = 2,
+    Data = 3,
+    Shape = 4,
+    Solver = 5,
+    Runtime = 6,
+    Coordinator = 7,
+    Bench = 8,
+    Io = 9,
+    /// Malformed frame or framing-level violation.
+    Protocol = 10,
+    /// Request named a model the registry does not serve.
+    UnknownModel = 11,
+}
+
+impl ErrorCode {
+    pub fn from_u8(b: u8) -> Option<ErrorCode> {
+        match b {
+            1 => Some(ErrorCode::Config),
+            2 => Some(ErrorCode::Kernel),
+            3 => Some(ErrorCode::Data),
+            4 => Some(ErrorCode::Shape),
+            5 => Some(ErrorCode::Solver),
+            6 => Some(ErrorCode::Runtime),
+            7 => Some(ErrorCode::Coordinator),
+            8 => Some(ErrorCode::Bench),
+            9 => Some(ErrorCode::Io),
+            10 => Some(ErrorCode::Protocol),
+            11 => Some(ErrorCode::UnknownModel),
+            _ => None,
+        }
+    }
+
+    /// Map a library error to its wire code plus the retryable flag.
+    /// Backpressure rejections (coordinator lane full, bounded write
+    /// queue full) are the retryable family: the request was never
+    /// accepted, so the client may simply resend it later.
+    pub fn from_error(e: &Error) -> (ErrorCode, bool) {
+        let code = match e {
+            Error::Config(_) => ErrorCode::Config,
+            Error::Kernel(_) => ErrorCode::Kernel,
+            Error::Data(_) => ErrorCode::Data,
+            Error::Shape { .. } => ErrorCode::Shape,
+            Error::Solver(_) => ErrorCode::Solver,
+            Error::Runtime(_) => ErrorCode::Runtime,
+            Error::Coordinator(_) => ErrorCode::Coordinator,
+            Error::Bench(_) => ErrorCode::Bench,
+            Error::Io(_) => ErrorCode::Io,
+        };
+        let retryable =
+            matches!(e, Error::Coordinator(m) if m.contains("backpressure"));
+        (code, retryable)
+    }
+}
+
+/// A dense transform request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub req_id: u64,
+    pub model: String,
+    pub values: Vec<f32>,
+}
+
+/// A sparse (CSR row) transform request. Indices must be strictly
+/// ascending; the counts for indices and values are carried separately
+/// on the wire so a ragged frame is a named protocol error, not a
+/// silent truncation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseRequest {
+    pub req_id: u64,
+    pub model: String,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+/// One entry of a `Models` response.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelEntry {
+    pub name: String,
+    pub version: u64,
+    pub input_dim: u32,
+    pub output_dim: u32,
+}
+
+/// The error frame body. `req_id` 0 marks a connection-level error
+/// (no specific request); otherwise it echoes the failing request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ErrorFrame {
+    pub req_id: u64,
+    pub code: ErrorCode,
+    pub retryable: bool,
+    pub message: String,
+}
+
+impl ErrorFrame {
+    /// Reconstruct a library error from the wire form (client side).
+    pub fn to_error(&self) -> Error {
+        let m = self.message.clone();
+        match self.code {
+            ErrorCode::Config => Error::Config(m),
+            ErrorCode::Kernel => Error::Kernel(m),
+            ErrorCode::Data => Error::Data(m),
+            ErrorCode::Shape => Error::Runtime(format!("shape error: {m}")),
+            ErrorCode::Solver => Error::Solver(m),
+            ErrorCode::Runtime => Error::Runtime(m),
+            ErrorCode::Coordinator => Error::Coordinator(m),
+            ErrorCode::Bench => Error::Bench(m),
+            ErrorCode::Io => Error::Runtime(format!("io error: {m}")),
+            ErrorCode::Protocol => Error::Runtime(format!("protocol error: {m}")),
+            ErrorCode::UnknownModel => Error::Runtime(format!("unknown model: {m}")),
+        }
+    }
+}
+
+/// A decoded wire frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Ping { token: Vec<u8> },
+    Heartbeat,
+    ListModels,
+    Dense(Request),
+    Sparse(SparseRequest),
+    Pong { token: Vec<u8> },
+    Models(Vec<ModelEntry>),
+    Reply { req_id: u64, values: Vec<f32> },
+    Error(ErrorFrame),
+}
+
+impl Frame {
+    pub fn frame_type(&self) -> FrameType {
+        match self {
+            Frame::Ping { .. } => FrameType::Ping,
+            Frame::Heartbeat => FrameType::Heartbeat,
+            Frame::ListModels => FrameType::ListModels,
+            Frame::Dense(_) => FrameType::Dense,
+            Frame::Sparse(_) => FrameType::Sparse,
+            Frame::Pong { .. } => FrameType::Pong,
+            Frame::Models(_) => FrameType::Models,
+            Frame::Reply { .. } => FrameType::Reply,
+            Frame::Error(_) => FrameType::Error,
+        }
+    }
+}
+
+/// A codec failure. `fatal` distinguishes framing-level corruption
+/// (bad magic/version/reserved/oversized length — the stream can no
+/// longer be framed, close after one error frame) from payload-shape
+/// errors (frame boundary known, connection stays open).
+#[derive(Clone, Debug)]
+pub struct FrameError {
+    pub fatal: bool,
+    pub message: String,
+}
+
+impl FrameError {
+    fn fatal(msg: impl Into<String>) -> FrameError {
+        FrameError { fatal: true, message: msg.into() }
+    }
+
+    fn soft(msg: impl Into<String>) -> FrameError {
+        FrameError { fatal: false, message: msg.into() }
+    }
+
+    /// The library-error form (always the protocol taxonomy slot).
+    pub fn to_error(&self) -> Error {
+        Error::Runtime(format!("protocol error: {}", self.message))
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+/// Encode a frame header. `payload_len` must already be `<=`
+/// [`MAX_PAYLOAD`] (all in-tree encoders guarantee it).
+pub fn encode_header(ty: FrameType, payload_len: usize) -> [u8; HEADER_LEN] {
+    debug_assert!(payload_len as u64 <= MAX_PAYLOAD as u64);
+    let mut h = [0u8; HEADER_LEN];
+    h[..4].copy_from_slice(&MAGIC);
+    h[4] = VERSION;
+    h[5] = ty.as_u8();
+    // h[6..8] reserved, zero.
+    h[8..12].copy_from_slice(&(payload_len as u32).to_le_bytes());
+    h
+}
+
+/// Decode and validate a frame header; returns the frame type and the
+/// payload length. All failures are fatal (see [`FrameError`]).
+pub fn decode_header(h: &[u8; HEADER_LEN]) -> std::result::Result<(FrameType, u32), FrameError> {
+    if h[..4] != MAGIC {
+        return Err(FrameError::fatal(format!(
+            "bad magic {:02x?} (want {:02x?} = \"RFNP\")",
+            &h[..4],
+            MAGIC
+        )));
+    }
+    if h[4] != VERSION {
+        return Err(FrameError::fatal(format!(
+            "unsupported protocol version {} (want {VERSION})",
+            h[4]
+        )));
+    }
+    let ty = FrameType::from_u8(h[5]).ok_or_else(|| {
+        FrameError::fatal(format!("unknown frame type 0x{:02x}", h[5]))
+    })?;
+    if h[6] != 0 || h[7] != 0 {
+        return Err(FrameError::fatal("non-zero reserved header bytes"));
+    }
+    let len = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+    if len > MAX_PAYLOAD {
+        return Err(FrameError::fatal(format!(
+            "frame length {len} exceeds MAX_PAYLOAD {MAX_PAYLOAD}"
+        )));
+    }
+    Ok((ty, len))
+}
+
+/// Little-endian payload cursor with named-field error messages.
+struct R<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> R<'a> {
+    fn new(b: &'a [u8]) -> R<'a> {
+        R { b, off: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.off
+    }
+
+    fn take(&mut self, n: usize, field: &str) -> std::result::Result<&'a [u8], FrameError> {
+        if self.remaining() < n {
+            return Err(FrameError::soft(format!(
+                "{field} truncated: need {n} bytes, have {}",
+                self.remaining()
+            )));
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, field: &str) -> std::result::Result<u8, FrameError> {
+        Ok(self.take(1, field)?[0])
+    }
+
+    fn u16(&mut self, field: &str) -> std::result::Result<u16, FrameError> {
+        let s = self.take(2, field)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self, field: &str) -> std::result::Result<u32, FrameError> {
+        let s = self.take(4, field)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self, field: &str) -> std::result::Result<u64, FrameError> {
+        let s = self.take(8, field)?;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    /// `count` little-endian f32 words. The byte count is proven
+    /// present before the Vec is reserved (allocation-bomb guard).
+    fn f32s(&mut self, count: usize, field: &str) -> std::result::Result<Vec<f32>, FrameError> {
+        let bytes = count.checked_mul(4).ok_or_else(|| {
+            FrameError::soft(format!("{field} count overflows"))
+        })?;
+        let s = self.take(bytes, field)?;
+        let mut v = Vec::with_capacity(count);
+        for c in s.chunks_exact(4) {
+            v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(v)
+    }
+
+    fn u32s(&mut self, count: usize, field: &str) -> std::result::Result<Vec<u32>, FrameError> {
+        let bytes = count.checked_mul(4).ok_or_else(|| {
+            FrameError::soft(format!("{field} count overflows"))
+        })?;
+        let s = self.take(bytes, field)?;
+        let mut v = Vec::with_capacity(count);
+        for c in s.chunks_exact(4) {
+            v.push(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(v)
+    }
+
+    fn name(&mut self) -> std::result::Result<String, FrameError> {
+        let len = self.u16("model name length")? as usize;
+        if len > MAX_NAME {
+            return Err(FrameError::soft(format!(
+                "model name length {len} exceeds {MAX_NAME}"
+            )));
+        }
+        let bytes = self.take(len, "model name")?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| FrameError::soft("model name is not valid UTF-8"))
+    }
+
+    fn finish(self, what: &str) -> std::result::Result<(), FrameError> {
+        if self.remaining() != 0 {
+            return Err(FrameError::soft(format!(
+                "{what}: {} trailing payload bytes",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Decode a payload for a known frame type. Failures are recoverable
+/// (`fatal == false`): the frame boundary came from the header, so the
+/// connection can keep framing after rejecting this frame.
+pub fn decode_payload(ty: FrameType, payload: &[u8]) -> std::result::Result<Frame, FrameError> {
+    let mut r = R::new(payload);
+    match ty {
+        FrameType::Ping => Ok(Frame::Ping { token: payload.to_vec() }),
+        FrameType::Pong => Ok(Frame::Pong { token: payload.to_vec() }),
+        FrameType::Heartbeat => {
+            r.finish("heartbeat frame")?;
+            Ok(Frame::Heartbeat)
+        }
+        FrameType::ListModels => {
+            r.finish("list-models frame")?;
+            Ok(Frame::ListModels)
+        }
+        FrameType::Dense => {
+            let req_id = r.u64("dense request id")?;
+            let model = r.name()?;
+            let dim = r.u32("dense dim")? as usize;
+            let values = r.f32s(dim, "dense values")?;
+            r.finish("dense frame")?;
+            Ok(Frame::Dense(Request { req_id, model, values }))
+        }
+        FrameType::Sparse => {
+            let req_id = r.u64("sparse request id")?;
+            let model = r.name()?;
+            let nidx = r.u32("sparse index count")? as usize;
+            let nval = r.u32("sparse value count")? as usize;
+            if nidx != nval {
+                return Err(FrameError::soft(format!(
+                    "sparse indices/values length mismatch: {nidx} indices vs {nval} values"
+                )));
+            }
+            let indices = r.u32s(nidx, "sparse indices")?;
+            let values = r.f32s(nval, "sparse values")?;
+            if let Some(w) = indices.windows(2).find(|w| w[0] >= w[1]) {
+                return Err(FrameError::soft(format!(
+                    "sparse indices not strictly ascending ({} then {})",
+                    w[0], w[1]
+                )));
+            }
+            r.finish("sparse frame")?;
+            Ok(Frame::Sparse(SparseRequest { req_id, model, indices, values }))
+        }
+        FrameType::Models => {
+            let count = r.u32("model count")? as usize;
+            // Each entry is at least 2 (name len) + 8 + 4 + 4 bytes, so
+            // a crafted count is proven against the payload before the
+            // Vec is reserved.
+            if count.saturating_mul(18) > payload.len() {
+                return Err(FrameError::soft(format!(
+                    "model count {count} exceeds payload ({} bytes)",
+                    payload.len()
+                )));
+            }
+            let mut models = Vec::with_capacity(count);
+            for _ in 0..count {
+                let name = r.name()?;
+                let version = r.u64("model version")?;
+                let input_dim = r.u32("model input dim")?;
+                let output_dim = r.u32("model output dim")?;
+                models.push(ModelEntry { name, version, input_dim, output_dim });
+            }
+            r.finish("models frame")?;
+            Ok(Frame::Models(models))
+        }
+        FrameType::Reply => {
+            let req_id = r.u64("reply request id")?;
+            let dim = r.u32("reply dim")? as usize;
+            let values = r.f32s(dim, "reply values")?;
+            r.finish("reply frame")?;
+            Ok(Frame::Reply { req_id, values })
+        }
+        FrameType::Error => {
+            let req_id = r.u64("error request id")?;
+            let code_byte = r.u8("error code")?;
+            let code = ErrorCode::from_u8(code_byte).ok_or_else(|| {
+                FrameError::soft(format!("unknown error code {code_byte}"))
+            })?;
+            let retryable = match r.u8("error retryable flag")? {
+                0 => false,
+                1 => true,
+                b => {
+                    return Err(FrameError::soft(format!(
+                        "error retryable flag must be 0 or 1, got {b}"
+                    )))
+                }
+            };
+            let msg_len = r.u16("error message length")? as usize;
+            let bytes = r.take(msg_len, "error message")?;
+            let message = String::from_utf8(bytes.to_vec())
+                .map_err(|_| FrameError::soft("error message is not valid UTF-8"))?;
+            r.finish("error frame")?;
+            Ok(Frame::Error(ErrorFrame { req_id, code, retryable, message }))
+        }
+    }
+}
+
+/// Encode one frame (header + payload).
+pub fn encode_frame(f: &Frame) -> Vec<u8> {
+    let mut p = Vec::new();
+    match f {
+        Frame::Ping { token } | Frame::Pong { token } => p.extend_from_slice(token),
+        Frame::Heartbeat | Frame::ListModels => {}
+        Frame::Dense(req) => {
+            p.extend_from_slice(&req.req_id.to_le_bytes());
+            put_name(&mut p, &req.model);
+            p.extend_from_slice(&(req.values.len() as u32).to_le_bytes());
+            for v in &req.values {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Frame::Sparse(req) => {
+            p.extend_from_slice(&req.req_id.to_le_bytes());
+            put_name(&mut p, &req.model);
+            p.extend_from_slice(&(req.indices.len() as u32).to_le_bytes());
+            p.extend_from_slice(&(req.values.len() as u32).to_le_bytes());
+            for i in &req.indices {
+                p.extend_from_slice(&i.to_le_bytes());
+            }
+            for v in &req.values {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Frame::Models(models) => {
+            p.extend_from_slice(&(models.len() as u32).to_le_bytes());
+            for m in models {
+                put_name(&mut p, &m.name);
+                p.extend_from_slice(&m.version.to_le_bytes());
+                p.extend_from_slice(&m.input_dim.to_le_bytes());
+                p.extend_from_slice(&m.output_dim.to_le_bytes());
+            }
+        }
+        Frame::Reply { req_id, values } => {
+            p.extend_from_slice(&req_id.to_le_bytes());
+            p.extend_from_slice(&(values.len() as u32).to_le_bytes());
+            for v in values {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Frame::Error(e) => {
+            p.extend_from_slice(&e.req_id.to_le_bytes());
+            p.push(e.code as u8);
+            p.push(e.retryable as u8);
+            let msg = e.message.as_bytes();
+            let len = msg.len().min(u16::MAX as usize);
+            p.extend_from_slice(&(len as u16).to_le_bytes());
+            p.extend_from_slice(&msg[..len]);
+        }
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + p.len());
+    out.extend_from_slice(&encode_header(f.frame_type(), p.len()));
+    out.extend_from_slice(&p);
+    out
+}
+
+fn put_name(p: &mut Vec<u8>, name: &str) {
+    let b = name.as_bytes();
+    debug_assert!(b.len() <= MAX_NAME);
+    p.extend_from_slice(&(b.len() as u16).to_le_bytes());
+    p.extend_from_slice(b);
+}
+
+/// Build the error frame for a library error (server reply path).
+pub fn error_frame(req_id: u64, e: &Error) -> Frame {
+    let (code, retryable) = ErrorCode::from_error(e);
+    Frame::Error(ErrorFrame { req_id, code, retryable, message: e.to_string() })
+}
+
+/// Build a protocol-level error frame (malformed frame, liveness reap).
+pub fn protocol_error_frame(req_id: u64, message: impl Into<String>) -> Frame {
+    Frame::Error(ErrorFrame {
+        req_id,
+        code: ErrorCode::Protocol,
+        retryable: false,
+        message: message.into(),
+    })
+}
+
+/// Decode exactly one frame from the front of `buf`; returns the frame
+/// and the number of bytes consumed. A buffer shorter than the header
+/// plus the declared payload is a truncation error (fatal — there is
+/// no more stream to wait on at this call level). This is the
+/// byte-slice entry point the torture suite sweeps; the server uses
+/// the streaming split ([`decode_header`] / [`decode_payload`]).
+pub fn decode_frame(buf: &[u8]) -> std::result::Result<(Frame, usize), FrameError> {
+    if buf.len() < HEADER_LEN {
+        return Err(FrameError::fatal(format!(
+            "header truncated: need {HEADER_LEN} bytes, have {}",
+            buf.len()
+        )));
+    }
+    let header: [u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().unwrap();
+    let (ty, len) = decode_header(&header)?;
+    let total = HEADER_LEN + len as usize;
+    if buf.len() < total {
+        return Err(FrameError::fatal(format!(
+            "payload truncated: need {} bytes, have {}",
+            total,
+            buf.len()
+        )));
+    }
+    let frame = decode_payload(ty, &buf[HEADER_LEN..total])?;
+    Ok((frame, total))
+}
+
+/// Convenience round-trip check used by the client: decode a whole
+/// buffer as exactly one frame.
+pub fn decode_single(buf: &[u8]) -> Result<Frame> {
+    let (frame, used) = decode_frame(buf).map_err(|e| e.to_error())?;
+    if used != buf.len() {
+        return Err(Error::Runtime(format!(
+            "protocol error: {} trailing bytes after frame",
+            buf.len() - used
+        )));
+    }
+    Ok(frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Ping { token: b"tok".to_vec() },
+            Frame::Heartbeat,
+            Frame::ListModels,
+            Frame::Dense(Request {
+                req_id: 7,
+                model: "m".into(),
+                values: vec![1.0, -2.5, 3.25],
+            }),
+            Frame::Sparse(SparseRequest {
+                req_id: 8,
+                model: "m".into(),
+                indices: vec![0, 3, 9],
+                values: vec![0.5, -1.0, 2.0],
+            }),
+            Frame::Pong { token: b"tok".to_vec() },
+            Frame::Models(vec![ModelEntry {
+                name: "m".into(),
+                version: 3,
+                input_dim: 10,
+                output_dim: 64,
+            }]),
+            Frame::Reply { req_id: 7, values: vec![9.0, 8.0] },
+            Frame::Error(ErrorFrame {
+                req_id: 7,
+                code: ErrorCode::Coordinator,
+                retryable: true,
+                message: "queue full (backpressure)".into(),
+            }),
+        ]
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        for f in sample_frames() {
+            let bytes = encode_frame(&f);
+            let (decoded, used) = decode_frame(&bytes).expect("valid frame must decode");
+            assert_eq!(used, bytes.len());
+            assert_eq!(decoded, f);
+        }
+    }
+
+    #[test]
+    fn error_code_maps_every_variant_and_round_trips() {
+        use crate::error::Error as E;
+        let cases: Vec<Error> = vec![
+            E::Config("c".into()),
+            E::Kernel("k".into()),
+            E::Data("d".into()),
+            E::shape(1, 2),
+            E::Solver("s".into()),
+            E::Runtime("r".into()),
+            E::Coordinator("queue full (backpressure)".into()),
+            E::Bench("b".into()),
+            E::Io(std::io::ErrorKind::UnexpectedEof.into()),
+        ];
+        let mut codes = std::collections::BTreeSet::new();
+        for e in &cases {
+            let (code, _) = ErrorCode::from_error(e);
+            assert_eq!(ErrorCode::from_u8(code as u8), Some(code));
+            codes.insert(code as u8);
+        }
+        assert_eq!(codes.len(), cases.len(), "each variant must map to a distinct code");
+        let (_, retryable) =
+            ErrorCode::from_error(&E::Coordinator("queue full (backpressure)".into()));
+        assert!(retryable, "backpressure must be retryable");
+        let (_, retryable) = ErrorCode::from_error(&E::Coordinator("shut down".into()));
+        assert!(!retryable);
+    }
+}

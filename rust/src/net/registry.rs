@@ -1,0 +1,415 @@
+//! The model registry behind the TCP front-end: several named maps
+//! served concurrently, each one a [`Serving`] — an [`RFDM0003`
+//! artifact](crate::artifact::MapArtifact) instantiated once through
+//! [`MapArtifactFactory`] (every worker shares the one read-only
+//! weight region) plus a dedicated [`Coordinator`].
+//!
+//! # Hot-swap protocol
+//!
+//! [`Registry::insert`] on an existing name is a zero-downtime swap:
+//!
+//! 1. **load new** — the incoming artifact is instantiated and its
+//!    coordinator started *before* any shared state is touched; a bad
+//!    artifact fails the swap without disturbing the live version.
+//! 2. **atomically switch** — the slot's `Arc<Serving>` is replaced
+//!    under a write lock; every subsequent [`ModelSlot::serving`]
+//!    lookup routes to the new version. Lookups hold the read lock
+//!    only long enough to clone the `Arc`.
+//! 3. **drain in-flight** — requests already admitted to the old
+//!    coordinator keep their exactly-once reply guarantee: clean
+//!    shutdown closes the ingress lanes and the workers answer every
+//!    queued job with its real reply.
+//! 4. **retire old when refcount drains** — a background retirer waits
+//!    for transient `Arc<Serving>` clones (readers mid-submit) to
+//!    drop, then tears the old serving down. Dropping it shuts the
+//!    coordinator down (drain above) and releases the artifact's
+//!    weight region, so the `artifact.bytes` gauge returns to
+//!    baseline — `rust/tests/net_registry.rs` pins all four steps.
+
+use crate::artifact::MapArtifact;
+use crate::coordinator::{Coordinator, CoordinatorConfig, MapArtifactFactory};
+use crate::error::{Error, Result};
+use crate::features::FeatureMap;
+use crate::maclaurin::RandomMaclaurin;
+use crate::metrics::Summary;
+use crate::net::protocol::ModelEntry;
+use crate::obs;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread;
+use std::time::Duration;
+
+/// One live model version: the shared artifact, its instantiated map
+/// (for dims and offline reference transforms) and a dedicated
+/// coordinator built over [`MapArtifactFactory`], so every worker
+/// thread reads the same weight region.
+pub struct Serving {
+    name: String,
+    version: u64,
+    artifact: Arc<MapArtifact>,
+    map: Arc<RandomMaclaurin>,
+    coord: Coordinator,
+}
+
+impl Serving {
+    fn start(
+        name: &str,
+        version: u64,
+        artifact: Arc<MapArtifact>,
+        config: CoordinatorConfig,
+    ) -> Result<Serving> {
+        let factory = MapArtifactFactory::new(artifact.clone())?;
+        let map = Arc::new(artifact.instantiate()?);
+        let coord = Coordinator::start(Arc::new(factory), config);
+        Ok(Serving { name: name.to_string(), version, artifact, map, coord })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.map.input_dim()
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.map.output_dim()
+    }
+
+    pub fn artifact(&self) -> &Arc<MapArtifact> {
+        &self.artifact
+    }
+
+    /// The instantiated map (offline reference transforms in tests).
+    pub fn map(&self) -> &Arc<RandomMaclaurin> {
+        &self.map
+    }
+
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+}
+
+/// A named registry slot. The slot outlives individual versions, so
+/// its per-model metric handles (`net.model.<name>.requests`,
+/// `net.model.<name>.latency_us`) accumulate across hot-swaps.
+pub struct ModelSlot {
+    name: String,
+    current: RwLock<Arc<Serving>>,
+    next_version: AtomicU64,
+    requests: Arc<obs::Counter>,
+    latency_us: Arc<obs::Histogram>,
+    swaps: Arc<obs::Counter>,
+}
+
+impl ModelSlot {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Clone the current version's handle (the atomic-switch read
+    /// side: lookups never block behind a swap for more than the
+    /// `Arc` clone).
+    pub fn serving(&self) -> Arc<Serving> {
+        self.current.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Per-model request counter (admission-side).
+    pub fn requests(&self) -> &Arc<obs::Counter> {
+        &self.requests
+    }
+
+    /// Per-model reply latency histogram in microseconds.
+    pub fn latency_us(&self) -> &Arc<obs::Histogram> {
+        &self.latency_us
+    }
+}
+
+/// Per-model stats for the consolidated serve stats line.
+#[derive(Clone, Debug)]
+pub struct ModelStats {
+    pub name: String,
+    pub version: u64,
+    pub requests: u64,
+    pub swaps: u64,
+    pub latency_us: Summary,
+}
+
+/// The multi-tenant model registry: named slots, hot-swap, retirement.
+pub struct Registry {
+    models: RwLock<BTreeMap<String, Arc<ModelSlot>>>,
+    /// Serializes administrative writes (insert/swap/remove) so the
+    /// slow part of a swap — instantiating the incoming artifact —
+    /// never runs under the `models` lock that lookups take.
+    admin: Mutex<()>,
+    coord_config: CoordinatorConfig,
+    retirers: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl Registry {
+    /// A registry whose servings run coordinators with this config.
+    pub fn new(coord_config: CoordinatorConfig) -> Registry {
+        Registry {
+            models: RwLock::new(BTreeMap::new()),
+            admin: Mutex::new(()),
+            coord_config,
+            retirers: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Insert a model or hot-swap an existing one (see the module docs
+    /// for the swap protocol). Returns the new version number.
+    pub fn insert(&self, name: &str, artifact: Arc<MapArtifact>) -> Result<u64> {
+        let _span = obs::span("net.swap");
+        if name.is_empty() || name.len() > crate::net::protocol::MAX_NAME {
+            return Err(Error::Config(format!(
+                "model name must be 1..={} bytes, got {}",
+                crate::net::protocol::MAX_NAME,
+                name.len()
+            )));
+        }
+        // The admin lock serializes writers; lookups stay on the
+        // `models` read lock and never wait on artifact instantiation.
+        let _admin = self.admin.lock().unwrap_or_else(|e| e.into_inner());
+        let slot = {
+            let models = self.models.read().unwrap_or_else(|e| e.into_inner());
+            models.get(name).cloned()
+        };
+        match slot {
+            Some(slot) => {
+                let version = slot.next_version.fetch_add(1, Ordering::Relaxed);
+                // Step 1 (load new) before touching shared state: a bad
+                // artifact must not disturb the live version.
+                let fresh = Arc::new(Serving::start(
+                    name,
+                    version,
+                    artifact,
+                    self.coord_config.clone(),
+                )?);
+                // Step 2: atomic switch.
+                let old = {
+                    let mut cur = slot.current.write().unwrap_or_else(|e| e.into_inner());
+                    std::mem::replace(&mut *cur, fresh)
+                };
+                slot.swaps.add(1);
+                // Steps 3–4: drain + retire off the request path.
+                self.spawn_retirer(old);
+                Ok(version)
+            }
+            None => {
+                let fresh = Arc::new(Serving::start(
+                    name,
+                    1,
+                    artifact,
+                    self.coord_config.clone(),
+                )?);
+                let slot = Arc::new(ModelSlot {
+                    name: name.to_string(),
+                    current: RwLock::new(fresh),
+                    next_version: AtomicU64::new(2),
+                    requests: obs::counter(&format!("net.model.{name}.requests")),
+                    latency_us: obs::histogram(&format!("net.model.{name}.latency_us")),
+                    swaps: obs::counter(&format!("net.model.{name}.swaps")),
+                });
+                let mut models = self.models.write().unwrap_or_else(|e| e.into_inner());
+                models.insert(name.to_string(), slot);
+                Ok(1)
+            }
+        }
+    }
+
+    /// Look up a slot by name.
+    pub fn get(&self, name: &str) -> Option<Arc<ModelSlot>> {
+        self.models.read().unwrap_or_else(|e| e.into_inner()).get(name).cloned()
+    }
+
+    /// Remove a model entirely (retires its current serving).
+    pub fn remove(&self, name: &str) -> bool {
+        let _admin = self.admin.lock().unwrap_or_else(|e| e.into_inner());
+        let slot = {
+            let mut models = self.models.write().unwrap_or_else(|e| e.into_inner());
+            models.remove(name)
+        };
+        match slot {
+            Some(slot) => {
+                // The retirer waits out both this clone and the slot's
+                // own reference (dropped with the slot below).
+                self.spawn_retirer(slot.serving());
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Wire-protocol directory listing (sorted by name).
+    pub fn list(&self) -> Vec<ModelEntry> {
+        let models = self.models.read().unwrap_or_else(|e| e.into_inner());
+        models
+            .values()
+            .map(|slot| {
+                let s = slot.serving();
+                ModelEntry {
+                    name: slot.name.clone(),
+                    version: s.version(),
+                    input_dim: s.input_dim() as u32,
+                    output_dim: s.output_dim() as u32,
+                }
+            })
+            .collect()
+    }
+
+    /// Per-model stats for the consolidated serve stats line and tests.
+    pub fn model_stats(&self) -> Vec<ModelStats> {
+        let models = self.models.read().unwrap_or_else(|e| e.into_inner());
+        models
+            .values()
+            .map(|slot| ModelStats {
+                name: slot.name.clone(),
+                version: slot.serving().version(),
+                requests: slot.requests.get(),
+                swaps: slot.swaps.get(),
+                latency_us: slot.latency_us.summary(),
+            })
+            .collect()
+    }
+
+    /// Step 4: wait (off-thread) for transient `Arc<Serving>` clones to
+    /// drop, then tear the old version down. `Serving::drop` shuts its
+    /// coordinator down cleanly — already-admitted jobs are answered
+    /// with real replies — and releases the artifact weight region.
+    fn spawn_retirer(&self, old: Arc<Serving>) {
+        let handle = thread::Builder::new()
+            .name("rfdot-net-retire".into())
+            .spawn(move || {
+                let mut old = old;
+                loop {
+                    match Arc::try_unwrap(old) {
+                        Ok(serving) => {
+                            drop(serving); // Coordinator::drop drains + joins.
+                            obs::counter("net.retired").add(1);
+                            return;
+                        }
+                        Err(still_shared) => {
+                            old = still_shared;
+                            thread::sleep(Duration::from_micros(200));
+                        }
+                    }
+                }
+            })
+            .expect("spawn retirer thread");
+        self.retirers
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(handle);
+    }
+
+    /// Retire every model and join all retirer threads. Call after the
+    /// front-end has stopped (no connection still holds a `Serving`).
+    pub fn shutdown(&self) {
+        let names: Vec<String> = {
+            let models = self.models.read().unwrap_or_else(|e| e.into_inner());
+            models.keys().cloned().collect()
+        };
+        for name in names {
+            self.remove(&name);
+        }
+        self.drain_retirers();
+    }
+
+    /// Join every spawned retirer (tests use this to assert the
+    /// `artifact.bytes` gauge returned to baseline).
+    pub fn drain_retirers(&self) {
+        let handles: Vec<_> = {
+            let mut g = self.retirers.lock().unwrap_or_else(|e| e.into_inner());
+            g.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Registry {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Exponential;
+    use crate::maclaurin::RmConfig;
+    use crate::rng::Rng;
+
+    fn artifact(seed: u64, d: usize, n: usize) -> Arc<MapArtifact> {
+        let mut rng = Rng::seed_from(seed);
+        let map = RandomMaclaurin::sample(
+            &Exponential::new(1.0),
+            d,
+            n,
+            RmConfig::default().with_max_order(6),
+            &mut rng,
+        );
+        Arc::new(MapArtifact::from_map(&map).expect("encode artifact"))
+    }
+
+    fn config() -> CoordinatorConfig {
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    #[test]
+    fn insert_swap_and_retire_release_the_artifact() {
+        let baseline = crate::artifact::resident_bytes();
+        let reg = Registry::new(config());
+        assert_eq!(reg.insert("reg-test", artifact(1, 6, 16)).unwrap(), 1);
+        let v1 = reg.get("reg-test").unwrap().serving();
+        assert_eq!(v1.version(), 1);
+        let x = vec![0.25; 6];
+        let y1 = v1.coordinator().submit(x.clone()).unwrap().wait().unwrap();
+        assert_eq!(y1, v1.map().transform(&x), "reply must match the offline map");
+        drop(v1);
+
+        assert_eq!(reg.insert("reg-test", artifact(2, 6, 16)).unwrap(), 2);
+        let v2 = reg.get("reg-test").unwrap().serving();
+        assert_eq!(v2.version(), 2);
+        let y2 = v2.coordinator().submit(x.clone()).unwrap().wait().unwrap();
+        assert_eq!(y2, v2.map().transform(&x));
+        assert_ne!(y1, y2, "independently sampled maps must differ");
+        drop(v2);
+
+        let entries = reg.list();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].version, 2);
+        assert_eq!(entries[0].input_dim, 6);
+
+        reg.shutdown();
+        assert_eq!(
+            crate::artifact::resident_bytes(),
+            baseline,
+            "retirement must release every artifact weight region"
+        );
+    }
+
+    #[test]
+    fn bad_artifact_swap_leaves_live_version_untouched() {
+        let reg = Registry::new(config());
+        reg.insert("reg-bad", artifact(3, 5, 8)).unwrap();
+        let bytes = artifact(3, 5, 8).as_bytes().to_vec();
+        let broken = MapArtifact::from_bytes(&bytes[..]).unwrap();
+        // An empty-named insert is the cheap invalid-swap stand-in.
+        assert!(reg.insert("", Arc::new(broken)).is_err());
+        let live = reg.get("reg-bad").unwrap().serving();
+        assert_eq!(live.version(), 1, "failed swap must not advance the version");
+    }
+}

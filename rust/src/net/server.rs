@@ -1,0 +1,542 @@
+//! The threaded TCP front-end: accept loop, per-connection reader /
+//! writer pair, bounded write-back queues and liveness reaping.
+//!
+//! # Connection state machine
+//!
+//! Each accepted connection runs two threads. The **reader** frames
+//! the byte stream (header → payload), decodes and dispatches; the
+//! **writer** drains a bounded queue of outbound frames. States:
+//!
+//! ```text
+//!            ┌────────────── valid frame ──────────────┐
+//!            ▼                                          │
+//! OPEN ── read frame ── payload malformed ──▶ error frame, stay OPEN
+//!   │                └── header unframeable ─▶ error frame, CLOSED
+//!   ├── peer closes / io error ─────────────▶ CLOSED
+//!   └── missed > max heartbeat intervals ───▶ reap frame, CLOSED
+//! ```
+//!
+//! * **Recoverable** payload errors (bad field, ragged sparse row,
+//!   unknown model) answer with a named error frame and keep the
+//!   connection open — the frame boundary was known from the header.
+//! * **Fatal** framing errors (bad magic/version, non-zero reserved
+//!   bytes, oversized length) poison the stream: one error frame,
+//!   then close.
+//!
+//! # Backpressure
+//!
+//! The write-back queue is bounded by construction, never by luck:
+//! a request is admitted only after claiming one of `write_queue`
+//! reply permits, released by the writer once the reply frame is on
+//! the wire. A slow reader therefore stalls its *own* permit supply —
+//! further requests get a retryable reject frame (`net.reject`) while
+//! every other connection keeps its own budget. Control frames
+//! (pong, model lists, rejects, reap notices) ride a separate small
+//! budget and are dropped (`net.dropped_control`) rather than ever
+//! letting a worker callback block on a dead client.
+//!
+//! # Liveness
+//!
+//! The reader's socket read timeout is one heartbeat interval; an
+//! interval with no bytes is a miss, any byte resets the count, and
+//! more than `max_missed` consecutive misses reaps the connection
+//! (`net.reaped`) with a final protocol error frame. A client only
+//! has to send *something* per interval — `Heartbeat` is the no-op
+//! frame for exactly that.
+
+use crate::error::{Error, Result};
+use crate::net::protocol::{
+    self, decode_header, decode_payload, encode_frame, error_frame, protocol_error_frame, Frame,
+    FrameType, HEADER_LEN,
+};
+use crate::net::registry::{ModelSlot, Registry};
+use crate::obs;
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Outbound frames the writer may drop when its budget is exhausted
+/// (pongs, model lists, rejects) vs. replies that own a permit.
+const CONTROL_HEADROOM: usize = 64;
+
+/// Front-end tuning knobs (the coordinator behind each model has its
+/// own [`crate::coordinator::CoordinatorConfig`]).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Bind address, e.g. `127.0.0.1:0` (port 0 = ephemeral).
+    pub listen: String,
+    /// Heartbeat interval: the reader's read timeout, and the unit the
+    /// liveness reaper counts in.
+    pub heartbeat: Duration,
+    /// Consecutive heartbeat intervals without a byte before the
+    /// connection is reaped.
+    pub max_missed: u32,
+    /// Reply permits per connection — the bound on the write-back
+    /// queue (backpressure beyond it is a retryable reject frame).
+    pub write_queue: usize,
+    /// Socket write timeout; a writer blocked this long marks the
+    /// connection dead.
+    pub write_timeout: Duration,
+    /// Accept at most this many connections, then exit once they all
+    /// close (0 = unlimited). CI smokes use this for determinism.
+    pub max_conns: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            listen: "127.0.0.1:0".to_string(),
+            heartbeat: Duration::from_secs(2),
+            max_missed: 3,
+            write_queue: 256,
+            write_timeout: Duration::from_secs(10),
+            max_conns: 0,
+        }
+    }
+}
+
+/// A running TCP front-end over a shared [`Registry`].
+pub struct NetServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+    conns: Arc<Mutex<BTreeMap<u64, TcpStream>>>,
+}
+
+impl NetServer {
+    /// Bind and start accepting. The registry stays owned by the
+    /// caller (shut the server down *before* the registry so no
+    /// connection still holds a serving).
+    pub fn start(registry: Arc<Registry>, config: NetConfig) -> Result<NetServer> {
+        if config.write_queue == 0 {
+            return Err(Error::Config("write_queue must be at least 1".into()));
+        }
+        if config.max_missed == 0 {
+            return Err(Error::Config("max_missed must be at least 1".into()));
+        }
+        let listener = TcpListener::bind(&config.listen)
+            .map_err(|e| Error::Runtime(format!("bind {}: {e}", config.listen)))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::Runtime(format!("local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Runtime(format!("set_nonblocking: {e}")))?;
+
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<BTreeMap<u64, TcpStream>>> = Arc::new(Mutex::new(BTreeMap::new()));
+        let accept = {
+            let shutdown = shutdown.clone();
+            let conns = conns.clone();
+            let config = config.clone();
+            thread::Builder::new()
+                .name("rfdot-net-accept".into())
+                .spawn(move || accept_loop(listener, registry, config, shutdown, conns))
+                .map_err(|e| Error::Runtime(format!("spawn accept thread: {e}")))?
+        };
+        Ok(NetServer { addr, shutdown, accept: Some(accept), conns })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the accept loop exits — only returns on
+    /// [`NetServer::shutdown`] or once a `max_conns` budget is spent
+    /// and every connection has closed.
+    pub fn wait(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, close every connection, join all threads.
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        {
+            let conns = self.conns.lock().unwrap_or_else(|e| e.into_inner());
+            for stream in conns.values() {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+        }
+        self.wait();
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    config: NetConfig,
+    shutdown: Arc<AtomicBool>,
+    conns: Arc<Mutex<BTreeMap<u64, TcpStream>>>,
+) {
+    let gauge_conns = obs::gauge("net.connections");
+    let total = obs::counter("net.connections_total");
+    let mut handles: Vec<thread::JoinHandle<()>> = Vec::new();
+    let mut accepted = 0usize;
+    loop {
+        if shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        if config.max_conns > 0 && accepted >= config.max_conns {
+            if handles.iter().all(|h| h.is_finished()) {
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                accepted += 1;
+                let conn_id = accepted as u64;
+                total.add(1);
+                gauge_conns.add(1);
+                if let Ok(clone) = stream.try_clone() {
+                    conns
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .insert(conn_id, clone);
+                }
+                let registry = registry.clone();
+                let config = config.clone();
+                let conns = conns.clone();
+                let handle = thread::Builder::new()
+                    .name(format!("rfdot-net-conn-{conn_id}"))
+                    .spawn(move || {
+                        conn_loop(stream, conn_id, registry, &config);
+                        conns.lock().unwrap_or_else(|e| e.into_inner()).remove(&conn_id);
+                        obs::gauge("net.connections").add(-1);
+                    });
+                match handle {
+                    Ok(h) => handles.push(h),
+                    Err(_) => gauge_conns.add(-1),
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(2)),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+/// Outbound queue items: replies own a reply permit, control frames
+/// own a control slot; the writer returns the budget after the bytes
+/// hit the socket (or the connection dies).
+enum Out {
+    Reply(Vec<u8>),
+    Control(Vec<u8>),
+}
+
+/// Claim one unit from a budget without blocking.
+fn claim(budget: &AtomicUsize) -> bool {
+    budget
+        .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| v.checked_sub(1))
+        .is_ok()
+}
+
+fn writer_loop(
+    stream: TcpStream,
+    rx: Receiver<Out>,
+    permits: Arc<AtomicUsize>,
+    control: Arc<AtomicUsize>,
+) {
+    let frames_sent = obs::counter("net.frames_sent");
+    let mut stream = stream;
+    let mut dead = false;
+    for out in rx {
+        let (bytes, budget) = match &out {
+            Out::Reply(b) => (b, &permits),
+            Out::Control(b) => (b, &control),
+        };
+        if !dead {
+            let _span = obs::span("net.write_frame");
+            if stream.write_all(bytes).is_err() {
+                dead = true;
+                let _ = stream.shutdown(Shutdown::Both);
+            } else {
+                frames_sent.add(1);
+            }
+        }
+        // Budgets recover even on a dead connection so the reader
+        // never deadlocks on permits while winding down.
+        budget.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+/// What one blocking read attempt of an exact-size buffer concluded.
+enum ReadStatus {
+    /// Buffer filled.
+    Full,
+    /// Clean EOF on a frame boundary.
+    Closed,
+    /// Too many heartbeat intervals without a byte.
+    Reaped,
+    /// Mid-frame EOF or an unrecoverable socket error.
+    Dead,
+}
+
+/// Fill `buf` exactly, counting heartbeat-interval timeouts into
+/// `missed` (any received byte resets it). Works under a socket read
+/// timeout, so partial reads across timeout boundaries keep their
+/// already-received prefix — framing never desynchronizes.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    missed: &mut u32,
+    max_missed: u32,
+) -> ReadStatus {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                return if got == 0 { ReadStatus::Closed } else { ReadStatus::Dead };
+            }
+            Ok(n) => {
+                got += n;
+                *missed = 0;
+            }
+            Err(e) => match e.kind() {
+                ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+                    *missed += 1;
+                    if *missed > max_missed {
+                        return ReadStatus::Reaped;
+                    }
+                }
+                ErrorKind::Interrupted => {}
+                _ => return ReadStatus::Dead,
+            },
+        }
+    }
+    ReadStatus::Full
+}
+
+fn conn_loop(mut stream: TcpStream, _conn_id: u64, registry: Arc<Registry>, config: &NetConfig) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(config.heartbeat));
+    let wstream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let _ = wstream.set_write_timeout(Some(config.write_timeout));
+
+    let frames = obs::counter("net.frames");
+    let bad_frames = obs::counter("net.bad_frames");
+    let rejects = obs::counter("net.reject");
+    let reaped = obs::counter("net.reaped");
+    let dropped_control = obs::counter("net.dropped_control");
+
+    let (tx, rx) = mpsc::sync_channel::<Out>(config.write_queue + CONTROL_HEADROOM);
+    let permits = Arc::new(AtomicUsize::new(config.write_queue));
+    let control = Arc::new(AtomicUsize::new(CONTROL_HEADROOM));
+    let writer = {
+        let permits = permits.clone();
+        let control = control.clone();
+        thread::Builder::new()
+            .name("rfdot-net-writer".into())
+            .spawn(move || writer_loop(wstream, rx, permits, control))
+    };
+    let writer = match writer {
+        Ok(h) => h,
+        Err(_) => return,
+    };
+
+    // Control-frame send: claims a control slot, drops the frame (and
+    // counts it) when the budget is gone — never blocks the reader.
+    let send_control = |frame: &Frame| {
+        if claim(&control) {
+            if tx.send(Out::Control(encode_frame(frame))).is_err() {
+                control.fetch_add(1, Ordering::AcqRel);
+            }
+        } else {
+            dropped_control.add(1);
+        }
+    };
+
+    let mut missed = 0u32;
+    loop {
+        let mut header = [0u8; HEADER_LEN];
+        match read_full(&mut stream, &mut header, &mut missed, config.max_missed) {
+            ReadStatus::Full => {}
+            ReadStatus::Closed | ReadStatus::Dead => break,
+            ReadStatus::Reaped => {
+                reaped.add(1);
+                send_control(&protocol_error_frame(
+                    0,
+                    format!(
+                        "liveness: no frame in {} heartbeat intervals, reaping connection",
+                        config.max_missed + 1
+                    ),
+                ));
+                break;
+            }
+        }
+        let _span = obs::span("net.frame");
+        let (ty, len) = match decode_header(&header) {
+            Ok(x) => x,
+            Err(e) => {
+                // Fatal: the stream can no longer be framed.
+                bad_frames.add(1);
+                send_control(&protocol_error_frame(0, e.message.clone()));
+                break;
+            }
+        };
+        let mut payload = vec![0u8; len as usize];
+        match read_full(&mut stream, &mut payload, &mut missed, config.max_missed) {
+            ReadStatus::Full => {}
+            ReadStatus::Closed | ReadStatus::Dead => break,
+            ReadStatus::Reaped => {
+                reaped.add(1);
+                send_control(&protocol_error_frame(0, "liveness: stalled mid-frame"));
+                break;
+            }
+        }
+        frames.add(1);
+        let frame = match decode_payload(ty, &payload) {
+            Ok(f) => f,
+            Err(e) => {
+                // Recoverable: the boundary was known; reject the frame
+                // by name, echo the request id when the prefix has one,
+                // and keep the connection open.
+                bad_frames.add(1);
+                let rid = match ty {
+                    FrameType::Dense | FrameType::Sparse if payload.len() >= 8 => {
+                        u64::from_le_bytes(payload[..8].try_into().unwrap())
+                    }
+                    _ => 0,
+                };
+                send_control(&protocol_error_frame(rid, e.message.clone()));
+                continue;
+            }
+        };
+        match frame {
+            Frame::Heartbeat => {}
+            Frame::Ping { token } => send_control(&Frame::Pong { token }),
+            Frame::ListModels => send_control(&Frame::Models(registry.list())),
+            Frame::Dense(req) => {
+                let Some(slot) = registry.get(&req.model) else {
+                    send_control(&unknown_model(req.req_id, &req.model));
+                    continue;
+                };
+                if !admit(&slot, &permits, &rejects, req.req_id, &send_control) {
+                    continue;
+                }
+                let cb = reply_callback(req.req_id, &slot, &tx);
+                let serving = slot.serving();
+                let res = serving.coordinator().submit_callback(req.values, cb);
+                drop(serving);
+                if let Err(e) = res {
+                    settle_admission_error(&tx, &rejects, req.req_id, e);
+                }
+            }
+            Frame::Sparse(req) => {
+                let Some(slot) = registry.get(&req.model) else {
+                    send_control(&unknown_model(req.req_id, &req.model));
+                    continue;
+                };
+                if !admit(&slot, &permits, &rejects, req.req_id, &send_control) {
+                    continue;
+                }
+                let cb = reply_callback(req.req_id, &slot, &tx);
+                let serving = slot.serving();
+                let res =
+                    serving.coordinator().submit_sparse_callback(req.indices, req.values, cb);
+                drop(serving);
+                if let Err(e) = res {
+                    settle_admission_error(&tx, &rejects, req.req_id, e);
+                }
+            }
+            // Server-to-client frames arriving at the server are a
+            // protocol violation, but a harmless, framed one.
+            Frame::Pong { .. } | Frame::Models(_) | Frame::Reply { .. } | Frame::Error(_) => {
+                bad_frames.add(1);
+                send_control(&protocol_error_frame(
+                    0,
+                    format!("unexpected server frame type 0x{:02x}", ty.as_u8()),
+                ));
+            }
+        }
+    }
+    // Drain: dropping our sender leaves only in-flight callbacks; the
+    // writer exits after the last of their replies is on the wire.
+    drop(tx);
+    let _ = writer.join();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn unknown_model(req_id: u64, name: &str) -> Frame {
+    Frame::Error(protocol::ErrorFrame {
+        req_id,
+        code: protocol::ErrorCode::UnknownModel,
+        retryable: false,
+        message: format!("unknown model {name:?}"),
+    })
+}
+
+/// Claim a reply permit for a request; on exhaustion send the
+/// retryable write-queue reject and refuse admission.
+fn admit(
+    slot: &Arc<ModelSlot>,
+    permits: &AtomicUsize,
+    rejects: &obs::Counter,
+    req_id: u64,
+    send_control: &impl Fn(&Frame),
+) -> bool {
+    if !claim(permits) {
+        rejects.add(1);
+        send_control(&error_frame(
+            req_id,
+            &Error::Coordinator("write queue full (backpressure)".into()),
+        ));
+        return false;
+    }
+    slot.requests().add(1);
+    true
+}
+
+/// The exactly-once reply path: runs on whichever worker answers the
+/// job, records per-model latency, and hands the encoded frame to the
+/// bounded writer queue (never blocks: the send rides the permit
+/// claimed at admission).
+fn reply_callback(
+    req_id: u64,
+    slot: &Arc<ModelSlot>,
+    tx: &SyncSender<Out>,
+) -> impl FnOnce(Result<Vec<f32>>) + Send + 'static {
+    let latency = slot.latency_us().clone();
+    let tx = tx.clone();
+    let start = Instant::now();
+    move |r: Result<Vec<f32>>| {
+        latency.record_f64(start.elapsed().as_secs_f64() * 1e6);
+        let frame = match r {
+            Ok(values) => Frame::Reply { req_id, values },
+            Err(e) => error_frame(req_id, &e),
+        };
+        let _ = tx.send(Out::Reply(encode_frame(&frame)));
+    }
+}
+
+/// A submission the coordinator refused at admission (lane
+/// backpressure, shape error): the callback never armed, so answer on
+/// the already-claimed reply permit.
+fn settle_admission_error(tx: &SyncSender<Out>, rejects: &obs::Counter, req_id: u64, e: Error) {
+    if matches!(&e, Error::Coordinator(m) if m.contains("backpressure")) {
+        rejects.add(1);
+    }
+    let _ = tx.send(Out::Reply(encode_frame(&error_frame(req_id, &e))));
+}

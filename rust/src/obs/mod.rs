@@ -96,6 +96,11 @@ impl Gauge {
         self.0.store(v, Ordering::Relaxed);
     }
 
+    /// Adjust the gauge by a signed delta (e.g. connection open/close).
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
     pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -103,12 +108,15 @@ impl Gauge {
 
 /// The process-global registry of named metrics. Registration locks a
 /// mutex once per *name* (the returned `Arc` is cached by the caller);
-/// recording through the returned handles is lock-free.
+/// recording through the returned handles is lock-free. Keys are owned
+/// strings so dynamically-scoped metrics (per-model serving counters
+/// like `net.model.<name>.requests`) register through the same path as
+/// the static hot-path names and flow into [`MetricsSnapshot`].
 #[derive(Debug)]
 pub struct Registry {
-    counters: Mutex<BTreeMap<&'static str, Arc<Counter>>>,
-    gauges: Mutex<BTreeMap<&'static str, Arc<Gauge>>>,
-    histograms: Mutex<BTreeMap<&'static str, Arc<Histogram>>>,
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
 }
 
 static REGISTRY: Registry = Registry {
@@ -127,22 +135,41 @@ pub fn registry() -> &'static Registry {
     &REGISTRY
 }
 
-/// Get or create the named counter.
-pub fn counter(name: &'static str) -> Arc<Counter> {
-    lock(&REGISTRY.counters).entry(name).or_default().clone()
+/// Get or create the named counter. Accepts dynamic names (the key is
+/// stored as an owned `String`); callers on hot paths should cache the
+/// returned handle rather than re-registering per record.
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut g = lock(&REGISTRY.counters);
+    if let Some(c) = g.get(name) {
+        return c.clone();
+    }
+    let c = Arc::new(Counter::default());
+    g.insert(name.to_string(), c.clone());
+    c
 }
 
-/// Get or create the named gauge.
-pub fn gauge(name: &'static str) -> Arc<Gauge> {
-    lock(&REGISTRY.gauges).entry(name).or_default().clone()
+/// Get or create the named gauge (dynamic names accepted; see
+/// [`counter`]).
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let mut g = lock(&REGISTRY.gauges);
+    if let Some(v) = g.get(name) {
+        return v.clone();
+    }
+    let v = Arc::new(Gauge::default());
+    g.insert(name.to_string(), v.clone());
+    v
 }
 
-/// Get or create the named histogram.
-pub fn histogram(name: &'static str) -> Arc<Histogram> {
-    lock(&REGISTRY.histograms)
-        .entry(name)
-        .or_insert_with(|| Arc::new(Histogram::new()))
-        .clone()
+/// Get or create the named histogram (dynamic names accepted; see
+/// [`counter`]).
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    let mut g = lock(&REGISTRY.histograms);
+    if let Some(h) = g.get(name) {
+        return h.clone();
+    }
+    let h = Arc::new(Histogram::new());
+    g.insert(name.to_string(), h.clone());
+    h
 }
 
 /// A point-in-time copy of every registered metric, renderable to
@@ -218,6 +245,20 @@ mod tests {
         let g = gauge("test.obs.gauge");
         g.set(-7);
         assert_eq!(gauge("test.obs.gauge").get(), -7);
+    }
+
+    #[test]
+    fn dynamic_names_register_and_snapshot() {
+        let name = format!("test.obs.dyn.{}", "model-a");
+        counter(&name).add(3);
+        let g = gauge("test.obs.dyn_gauge");
+        g.add(5);
+        g.add(-2);
+        assert_eq!(g.get(), 3);
+        let snap = MetricsSnapshot::collect();
+        assert_eq!(snap.counters.get(&name), Some(&3));
+        // Re-registering by the same dynamic name returns the same handle.
+        assert_eq!(counter(&name).get(), 3);
     }
 
     #[test]

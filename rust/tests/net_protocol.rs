@@ -1,0 +1,535 @@
+//! Wire-protocol torture suite for the `RFNP` framing (mirrors
+//! `serialize_malformed.rs` for the RFDM records): every-byte
+//! truncation sweeps over every frame type, oversized-length
+//! allocation-bomb guards, bad magic/version/reserved bytes, ragged
+//! sparse frames — each rejected with a *named* error, never a panic,
+//! over-read or unbounded allocation. The socket-level half then pins
+//! the connection state machine: recoverable frame errors answer with
+//! a named error frame and leave the connection usable; fatal framing
+//! errors answer once and close; and the server survives the whole
+//! sweep.
+
+use rfdot::artifact::MapArtifact;
+use rfdot::coordinator::CoordinatorConfig;
+use rfdot::kernels::Exponential;
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
+use rfdot::net::protocol::{
+    decode_frame, encode_frame, encode_header, ErrorCode, ErrorFrame, Frame, FrameType,
+    ModelEntry, Request, SparseRequest, HEADER_LEN, MAGIC, MAX_PAYLOAD, VERSION,
+};
+use rfdot::net::{NetClient, NetConfig, NetServer, Registry};
+use rfdot::rng::Rng;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Input dim of the fixture model (small so sweeps stay fast).
+const D: usize = 6;
+
+fn artifact(seed: u64) -> Arc<MapArtifact> {
+    let mut rng = Rng::seed_from(seed);
+    let map = RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        D,
+        16,
+        RmConfig::default().with_max_order(6),
+        &mut rng,
+    );
+    Arc::new(MapArtifact::from_map(&map).expect("encode artifact"))
+}
+
+fn start_server(model: &str) -> (NetServer, Arc<Registry>) {
+    let registry = Arc::new(Registry::new(CoordinatorConfig {
+        workers: 1,
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        ..CoordinatorConfig::default()
+    }));
+    registry.insert(model, artifact(17)).unwrap();
+    let server = NetServer::start(
+        registry.clone(),
+        NetConfig {
+            heartbeat: Duration::from_millis(200),
+            // The sweeps hold many short connections open; liveness is
+            // exercised separately (net_server.rs).
+            max_missed: 100,
+            ..NetConfig::default()
+        },
+    )
+    .unwrap();
+    (server, registry)
+}
+
+/// Every client→server frame kind, as wire bytes.
+fn client_frames(model: &str) -> Vec<(&'static str, Vec<u8>)> {
+    vec![
+        ("ping", encode_frame(&Frame::Ping { token: b"abc".to_vec() })),
+        ("heartbeat", encode_frame(&Frame::Heartbeat)),
+        ("list-models", encode_frame(&Frame::ListModels)),
+        (
+            "dense",
+            encode_frame(&Frame::Dense(Request {
+                req_id: 5,
+                model: model.into(),
+                values: vec![0.5; D],
+            })),
+        ),
+        (
+            "sparse",
+            encode_frame(&Frame::Sparse(SparseRequest {
+                req_id: 6,
+                model: model.into(),
+                indices: vec![0, 2, 4],
+                values: vec![1.0, 2.0, 3.0],
+            })),
+        ),
+    ]
+}
+
+/// Every server→client frame kind, as wire bytes.
+fn server_frames() -> Vec<(&'static str, Vec<u8>)> {
+    vec![
+        ("pong", encode_frame(&Frame::Pong { token: b"abc".to_vec() })),
+        (
+            "models",
+            encode_frame(&Frame::Models(vec![ModelEntry {
+                name: "m".into(),
+                version: 2,
+                input_dim: D as u32,
+                output_dim: 16,
+            }])),
+        ),
+        ("reply", encode_frame(&Frame::Reply { req_id: 5, values: vec![1.0, 2.0] })),
+        (
+            "error",
+            encode_frame(&Frame::Error(ErrorFrame {
+                req_id: 5,
+                code: ErrorCode::Coordinator,
+                retryable: true,
+                message: "queue full (backpressure)".into(),
+            })),
+        ),
+    ]
+}
+
+fn patch_u16(buf: &mut [u8], off: usize, v: u16) {
+    buf[off..off + 2].copy_from_slice(&v.to_le_bytes());
+}
+
+fn patch_u32(buf: &mut [u8], off: usize, v: u32) {
+    buf[off..off + 4].copy_from_slice(&v.to_le_bytes());
+}
+
+fn decode_err(bytes: &[u8]) -> String {
+    decode_frame(bytes).expect_err("malformed frame must error").message
+}
+
+// ---------------------------------------------------------------- codec
+
+#[test]
+fn every_truncation_of_every_frame_type_errors_cleanly() {
+    let mut frames = client_frames("m");
+    frames.extend(server_frames());
+    for (kind, bytes) in frames {
+        // Positive control: the untouched frame decodes and consumes
+        // exactly its own bytes.
+        let (_, used) = decode_frame(&bytes)
+            .unwrap_or_else(|e| panic!("valid {kind} frame must decode: {e}"));
+        assert_eq!(used, bytes.len(), "{kind}");
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_frame(&bytes[..cut]).is_err(),
+                "{kind}: truncation to {cut}/{} bytes must error, not parse",
+                bytes.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn trailing_payload_bytes_are_rejected_per_frame_type() {
+    // Ping/pong payloads are opaque tokens; every other frame has an
+    // exact layout and must reject a padded payload by name.
+    let mut frames: Vec<(&str, Vec<u8>)> = client_frames("m")
+        .into_iter()
+        .chain(server_frames())
+        .filter(|(kind, _)| *kind != "ping" && *kind != "pong")
+        .collect();
+    for (kind, bytes) in frames.iter_mut() {
+        bytes.push(0);
+        let len = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        patch_u32(bytes, 8, len + 1);
+        let msg = decode_err(bytes);
+        assert!(msg.contains("trailing"), "{kind}: {msg}");
+    }
+}
+
+#[test]
+fn bad_magic_version_reserved_and_frame_type_are_fatal() {
+    let valid = encode_frame(&Frame::Heartbeat);
+
+    let mut bad = valid.clone();
+    bad[..4].copy_from_slice(b"XXXX");
+    let e = decode_frame(&bad).expect_err("bad magic must error");
+    assert!(e.fatal && e.message.contains("magic"), "{e}");
+
+    let mut bad = valid.clone();
+    bad[4] = VERSION + 1;
+    let e = decode_frame(&bad).expect_err("bad version must error");
+    assert!(e.fatal && e.message.contains("version"), "{e}");
+
+    let mut bad = valid.clone();
+    bad[6] = 1;
+    let e = decode_frame(&bad).expect_err("non-zero reserved must error");
+    assert!(e.fatal && e.message.contains("reserved"), "{e}");
+
+    let mut bad = valid.clone();
+    bad[5] = 0x7f;
+    let e = decode_frame(&bad).expect_err("unknown frame type must error");
+    assert!(e.fatal && e.message.contains("frame type"), "{e}");
+}
+
+#[test]
+fn oversized_length_claims_are_rejected_before_allocation() {
+    // Header claims are checked against MAX_PAYLOAD before any payload
+    // allocation, and per-field counts are proven against the bytes
+    // actually present before `Vec::with_capacity`.
+    let mut bytes = encode_frame(&Frame::Heartbeat);
+    patch_u32(&mut bytes, 8, MAX_PAYLOAD + 1);
+    let e = decode_frame(&bytes).expect_err("oversized length must error");
+    assert!(e.fatal && e.message.contains("exceeds"), "{e}");
+
+    let mut bytes = encode_frame(&Frame::Heartbeat);
+    patch_u32(&mut bytes, 8, u32::MAX);
+    assert!(decode_frame(&bytes).is_err(), "u32::MAX length must error");
+}
+
+/// Payload offsets for a dense/sparse frame with a 1-byte model name:
+/// `req_id` at +0, name length at +8, name at +10, counts after.
+const NAME_LEN_OFF: usize = HEADER_LEN + 8;
+const DENSE_DIM_OFF: usize = HEADER_LEN + 8 + 2 + 1;
+const SPARSE_NIDX_OFF: usize = HEADER_LEN + 8 + 2 + 1;
+const SPARSE_NVAL_OFF: usize = SPARSE_NIDX_OFF + 4;
+
+fn dense_bytes() -> Vec<u8> {
+    encode_frame(&Frame::Dense(Request {
+        req_id: 5,
+        model: "m".into(),
+        values: vec![0.5; D],
+    }))
+}
+
+fn sparse_bytes() -> Vec<u8> {
+    encode_frame(&Frame::Sparse(SparseRequest {
+        req_id: 6,
+        model: "m".into(),
+        indices: vec![0, 2, 4],
+        values: vec![1.0, 2.0, 3.0],
+    }))
+}
+
+#[test]
+fn oversized_counts_cannot_force_allocation() {
+    let mut bad = dense_bytes();
+    patch_u32(&mut bad, DENSE_DIM_OFF, u32::MAX);
+    let msg = decode_err(&bad);
+    assert!(msg.contains("dense values"), "{msg}");
+
+    let mut bad = sparse_bytes();
+    patch_u32(&mut bad, SPARSE_NIDX_OFF, u32::MAX);
+    patch_u32(&mut bad, SPARSE_NVAL_OFF, u32::MAX);
+    let msg = decode_err(&bad);
+    assert!(msg.contains("sparse indices"), "{msg}");
+
+    let mut bad = encode_frame(&Frame::Reply { req_id: 5, values: vec![1.0, 2.0] });
+    patch_u32(&mut bad, HEADER_LEN + 8, u32::MAX);
+    let msg = decode_err(&bad);
+    assert!(msg.contains("reply values"), "{msg}");
+
+    let mut bad = encode_frame(&Frame::Models(vec![]));
+    patch_u32(&mut bad, HEADER_LEN, u32::MAX);
+    let msg = decode_err(&bad);
+    assert!(msg.contains("model count"), "{msg}");
+}
+
+#[test]
+fn ragged_sparse_frames_are_named_errors() {
+    // Index/value counts disagree.
+    let mut bad = sparse_bytes();
+    patch_u32(&mut bad, SPARSE_NVAL_OFF, 4);
+    let msg = decode_err(&bad);
+    assert!(msg.contains("mismatch"), "{msg}");
+
+    // Non-ascending indices (descending pair).
+    let bad = encode_frame(&Frame::Sparse(SparseRequest {
+        req_id: 6,
+        model: "m".into(),
+        indices: vec![2, 0],
+        values: vec![1.0, 2.0],
+    }));
+    let msg = decode_err(&bad);
+    assert!(msg.contains("ascending"), "{msg}");
+
+    // Duplicate indices count as non-ascending too.
+    let bad = encode_frame(&Frame::Sparse(SparseRequest {
+        req_id: 6,
+        model: "m".into(),
+        indices: vec![1, 1],
+        values: vec![1.0, 2.0],
+    }));
+    let msg = decode_err(&bad);
+    assert!(msg.contains("ascending"), "{msg}");
+}
+
+#[test]
+fn per_field_corruptions_are_named() {
+    // Model name length runs past the payload.
+    let mut bad = dense_bytes();
+    patch_u16(&mut bad, NAME_LEN_OFF, 200);
+    let msg = decode_err(&bad);
+    assert!(msg.contains("model name"), "{msg}");
+
+    // Model name is not UTF-8.
+    let mut bad = dense_bytes();
+    bad[NAME_LEN_OFF + 2] = 0xFF;
+    let msg = decode_err(&bad);
+    assert!(msg.contains("UTF-8"), "{msg}");
+
+    // Unknown error code byte.
+    let mut bad = encode_frame(&Frame::Error(ErrorFrame {
+        req_id: 1,
+        code: ErrorCode::Data,
+        retryable: false,
+        message: "x".into(),
+    }));
+    bad[HEADER_LEN + 8] = 200;
+    let msg = decode_err(&bad);
+    assert!(msg.contains("error code"), "{msg}");
+
+    // Retryable flag outside {0, 1}.
+    let mut bad = encode_frame(&Frame::Error(ErrorFrame {
+        req_id: 1,
+        code: ErrorCode::Data,
+        retryable: false,
+        message: "x".into(),
+    }));
+    bad[HEADER_LEN + 9] = 2;
+    let msg = decode_err(&bad);
+    assert!(msg.contains("retryable"), "{msg}");
+}
+
+// --------------------------------------------------------------- socket
+
+/// Read one frame off a raw socket (panics on timeout — tests bound
+/// every read with a socket timeout so a hung connection fails, not
+/// wedges).
+fn read_frame_raw(s: &mut TcpStream) -> Frame {
+    let mut header = [0u8; HEADER_LEN];
+    s.read_exact(&mut header).expect("read frame header");
+    let (ty, len) = rfdot::net::protocol::decode_header(&header).expect("decode header");
+    let mut payload = vec![0u8; len as usize];
+    s.read_exact(&mut payload).expect("read frame payload");
+    rfdot::net::protocol::decode_payload(ty, &payload).expect("decode payload")
+}
+
+fn connect_raw(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s
+}
+
+#[test]
+fn socket_truncation_sweep_leaves_the_server_alive() {
+    let (server, _registry) = start_server("t");
+    let addr = server.local_addr();
+    for (kind, bytes) in client_frames("t") {
+        for cut in 0..bytes.len() {
+            let mut s = connect_raw(addr);
+            s.write_all(&bytes[..cut]).expect("send truncated frame");
+            s.shutdown(std::net::Shutdown::Write).expect("half-close");
+            // The server must reach a defined state: either silently
+            // close (mid-frame EOF) or answer with frames and close.
+            // Either way the read drains to EOF instead of hanging.
+            let mut sink = Vec::new();
+            s.read_to_end(&mut sink)
+                .unwrap_or_else(|e| panic!("{kind} cut={cut}: connection wedged: {e}"));
+        }
+    }
+    // The server survived ~150 mangled connections: a full round trip
+    // still works.
+    let mut client = NetClient::connect(addr, Duration::from_secs(10)).unwrap();
+    client.ping().unwrap();
+    let y = client.transform("t", &vec![0.25; D]).unwrap();
+    assert_eq!(y.len(), 16);
+}
+
+#[test]
+fn fatal_framing_errors_answer_once_and_close() {
+    let (server, _registry) = start_server("t2");
+    let addr = server.local_addr();
+    let cases: Vec<(&str, Vec<u8>, &str)> = vec![
+        {
+            let mut h = encode_header(FrameType::Ping, 0).to_vec();
+            h[..4].copy_from_slice(b"XXXX");
+            ("bad magic", h, "magic")
+        },
+        {
+            let mut h = encode_header(FrameType::Ping, 0).to_vec();
+            h[4] = VERSION + 9;
+            ("bad version", h, "version")
+        },
+        {
+            let mut h = encode_header(FrameType::Ping, 0).to_vec();
+            h[7] = 3;
+            ("reserved bytes", h, "reserved")
+        },
+        {
+            let mut h = encode_header(FrameType::Dense, 0).to_vec();
+            patch_u32(&mut h, 8, u32::MAX);
+            ("oversized length", h, "exceeds")
+        },
+    ];
+    for (kind, bytes, needle) in cases {
+        assert_eq!(bytes[..4] == MAGIC, kind != "bad magic");
+        let mut s = connect_raw(addr);
+        s.write_all(&bytes).expect("send mangled header");
+        match read_frame_raw(&mut s) {
+            Frame::Error(e) => {
+                assert_eq!(e.code, ErrorCode::Protocol, "{kind}");
+                assert!(e.message.contains(needle), "{kind}: {}", e.message);
+            }
+            f => panic!("{kind}: expected error frame, got {:?}", f.frame_type()),
+        }
+        // Fatal => the server closes after the error frame.
+        let mut probe = [0u8; 1];
+        assert_eq!(
+            s.read(&mut probe).expect("post-error read"),
+            0,
+            "{kind}: connection must be closed after a fatal framing error"
+        );
+    }
+}
+
+#[test]
+fn recoverable_frame_errors_keep_the_connection_usable() {
+    let (server, _registry) = start_server("t3");
+    let addr = server.local_addr();
+    let mut s = connect_raw(addr);
+    let x = vec![0.25; D];
+
+    // 1. Ragged sparse frame: named error frame echoing the req id,
+    //    connection stays open.
+    let mut ragged = encode_frame(&Frame::Sparse(SparseRequest {
+        req_id: 41,
+        model: "t3".into(),
+        indices: vec![0, 2, 4],
+        values: vec![1.0, 2.0, 3.0],
+    }));
+    // Value-count offset for the 2-byte name "t3": header + req_id +
+    // name_len + name + index count.
+    patch_u32(&mut ragged, HEADER_LEN + 8 + 2 + 2 + 4, 9);
+    s.write_all(&ragged).unwrap();
+    match read_frame_raw(&mut s) {
+        Frame::Error(e) => {
+            assert_eq!(e.code, ErrorCode::Protocol);
+            assert_eq!(e.req_id, 41, "recoverable request errors echo the req id");
+            assert!(e.message.contains("mismatch"), "{}", e.message);
+        }
+        f => panic!("expected error frame, got {:?}", f.frame_type()),
+    }
+
+    // 2. Non-ascending sparse indices: named error, still open.
+    s.write_all(&encode_frame(&Frame::Sparse(SparseRequest {
+        req_id: 42,
+        model: "t3".into(),
+        indices: vec![3, 1],
+        values: vec![1.0, 2.0],
+    })))
+    .unwrap();
+    match read_frame_raw(&mut s) {
+        Frame::Error(e) => assert!(e.message.contains("ascending"), "{}", e.message),
+        f => panic!("expected error frame, got {:?}", f.frame_type()),
+    }
+
+    // 3. Unknown model: its own error code, still open.
+    s.write_all(&encode_frame(&Frame::Dense(Request {
+        req_id: 43,
+        model: "nope".into(),
+        values: x.clone(),
+    })))
+    .unwrap();
+    match read_frame_raw(&mut s) {
+        Frame::Error(e) => {
+            assert_eq!(e.code, ErrorCode::UnknownModel);
+            assert_eq!(e.req_id, 43);
+        }
+        f => panic!("expected error frame, got {:?}", f.frame_type()),
+    }
+
+    // 4. Wrong dense dim: the coordinator's shape error over the wire.
+    s.write_all(&encode_frame(&Frame::Dense(Request {
+        req_id: 44,
+        model: "t3".into(),
+        values: vec![0.5; D + 1],
+    })))
+    .unwrap();
+    match read_frame_raw(&mut s) {
+        Frame::Error(e) => {
+            assert_eq!(e.code, ErrorCode::Shape);
+            assert_eq!(e.req_id, 44);
+        }
+        f => panic!("expected error frame, got {:?}", f.frame_type()),
+    }
+
+    // 5. Out-of-range sparse index: decodes fine, the coordinator's
+    //    Data-taxonomy rejection comes back as an error frame.
+    s.write_all(&encode_frame(&Frame::Sparse(SparseRequest {
+        req_id: 45,
+        model: "t3".into(),
+        indices: vec![0, D as u32],
+        values: vec![1.0, 2.0],
+    })))
+    .unwrap();
+    match read_frame_raw(&mut s) {
+        Frame::Error(e) => {
+            assert_eq!(e.code, ErrorCode::Data);
+            assert!(e.message.contains("out of range"), "{}", e.message);
+        }
+        f => panic!("expected error frame, got {:?}", f.frame_type()),
+    }
+
+    // After five rejected frames, the same connection still serves a
+    // real request — the defined-state guarantee.
+    s.write_all(&encode_frame(&Frame::Dense(Request {
+        req_id: 46,
+        model: "t3".into(),
+        values: x,
+    })))
+    .unwrap();
+    match read_frame_raw(&mut s) {
+        Frame::Reply { req_id, values } => {
+            assert_eq!(req_id, 46);
+            assert_eq!(values.len(), 16);
+        }
+        f => panic!("expected reply, got {:?}", f.frame_type()),
+    }
+}
+
+#[test]
+fn unexpected_server_frames_at_the_server_are_rejected_not_fatal() {
+    let (server, _registry) = start_server("t4");
+    let addr = server.local_addr();
+    let mut s = connect_raw(addr);
+    s.write_all(&encode_frame(&Frame::Reply { req_id: 9, values: vec![1.0] })).unwrap();
+    match read_frame_raw(&mut s) {
+        Frame::Error(e) => assert!(e.message.contains("unexpected"), "{}", e.message),
+        f => panic!("expected error frame, got {:?}", f.frame_type()),
+    }
+    // Recoverable: a ping still round-trips on the same connection.
+    s.write_all(&encode_frame(&Frame::Ping { token: b"x".to_vec() })).unwrap();
+    match read_frame_raw(&mut s) {
+        Frame::Pong { token } => assert_eq!(token, b"x".to_vec()),
+        f => panic!("expected pong, got {:?}", f.frame_type()),
+    }
+}

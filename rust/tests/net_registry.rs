@@ -1,0 +1,244 @@
+//! Hot-swap-under-load parity: clients stream dense requests over TCP
+//! while the registry swaps the model several times. Pins the four
+//! steps of the swap protocol (load new → atomic switch → drain
+//! in-flight → retire on refcount): every reply is bitwise-equal to
+//! the offline transform of *some* served version, post-swap replies
+//! are exactly the final version, nothing is dropped or duplicated,
+//! and after shutdown the artifact weight region is back to baseline.
+
+use rfdot::artifact::MapArtifact;
+use rfdot::coordinator::CoordinatorConfig;
+use rfdot::features::FeatureMap;
+use rfdot::kernels::Exponential;
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
+use rfdot::net::{NetClient, NetConfig, NetServer, Registry};
+use rfdot::obs::MetricsSnapshot;
+use rfdot::rng::Rng;
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Serializes the tests in this binary: they assert on the global
+/// `artifact.bytes` gauge and the obs counters, which concurrent
+/// artifact-touching tests would perturb.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+const D: usize = 8;
+const FEATS: usize = 32;
+const CLIENTS: usize = 4;
+const SWAPS: u64 = 3;
+
+fn artifact(seed: u64) -> Arc<MapArtifact> {
+    let mut rng = Rng::seed_from(seed);
+    let map = RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        D,
+        FEATS,
+        RmConfig::default().with_max_order(6),
+        &mut rng,
+    );
+    Arc::new(MapArtifact::from_map(&map).expect("encode artifact"))
+}
+
+fn coord_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers: 2,
+        max_batch: 8,
+        max_wait: Duration::from_micros(200),
+        ..CoordinatorConfig::default()
+    }
+}
+
+#[test]
+fn hot_swap_under_load_keeps_every_reply_exact() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let baseline = rfdot::artifact::resident_bytes();
+    let before = MetricsSnapshot::collect();
+    let requests_before =
+        before.counters.get("net.model.hot.requests").copied().unwrap_or(0);
+
+    // One artifact per version, plus the offline reference transform of
+    // each version for every client's fixed input. Only the plain
+    // expectation vectors outlive this block, so the weight regions can
+    // all drain back to baseline at the end.
+    let arts: Vec<Arc<MapArtifact>> = (0..=SWAPS).map(|v| artifact(100 + v)).collect();
+    let inputs: Vec<Vec<f32>> = (0..CLIENTS)
+        .map(|c| (0..D).map(|i| (c * D + i) as f32 * 0.01 - 0.3).collect())
+        .collect();
+    let expected: Vec<Vec<Vec<f32>>> = arts
+        .iter()
+        .map(|a| {
+            let map = a.instantiate().expect("instantiate reference map");
+            inputs.iter().map(|x| map.transform(x)).collect()
+        })
+        .collect();
+
+    let registry = Arc::new(Registry::new(coord_config()));
+    assert_eq!(registry.insert("hot", arts[0].clone()).unwrap(), 1);
+    let mut server = NetServer::start(
+        registry.clone(),
+        NetConfig {
+            heartbeat: Duration::from_secs(1),
+            max_missed: 10,
+            ..NetConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let barrier = Arc::new(Barrier::new(CLIENTS + 1));
+    let stop = Arc::new(AtomicBool::new(false));
+    let final_v = SWAPS as usize; // index into `expected`
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let barrier = barrier.clone();
+            let stop = stop.clone();
+            let x = inputs[c].clone();
+            let expect: Vec<Vec<f32>> = expected.iter().map(|e| e[c].clone()).collect();
+            thread::spawn(move || {
+                let mut client =
+                    NetClient::connect(addr, Duration::from_secs(30)).unwrap();
+                let mut versions_seen = BTreeSet::new();
+                let mut sent = 0u64;
+                let mut classify = |y: &[f32], post_swap: bool| {
+                    let v = expect
+                        .iter()
+                        .position(|e| {
+                            e.len() == y.len()
+                                && e.iter().zip(y).all(|(a, b)| a.to_bits() == b.to_bits())
+                        })
+                        .unwrap_or_else(|| {
+                            panic!("reply matches no served version bitwise")
+                        });
+                    if post_swap {
+                        assert_eq!(
+                            v, final_v,
+                            "a reply requested after the last swap must come from \
+                             the final version"
+                        );
+                    }
+                    versions_seen.insert(v);
+                };
+                // First round trip before the swaps start, so version 1
+                // is observably serving under load.
+                let y = client.transform("hot", &x).unwrap();
+                sent += 1;
+                classify(&y, false);
+                barrier.wait();
+                while !stop.load(Ordering::Acquire) {
+                    let y = client.transform("hot", &x).unwrap();
+                    sent += 1;
+                    classify(&y, false);
+                }
+                // The swapper set `stop` strictly after the last swap's
+                // atomic switch: these requests must hit the final
+                // version, exactly.
+                for _ in 0..5 {
+                    let y = client.transform("hot", &x).unwrap();
+                    sent += 1;
+                    classify(&y, true);
+                }
+                (versions_seen, sent)
+            })
+        })
+        .collect();
+
+    barrier.wait();
+    for v in 0..SWAPS {
+        thread::sleep(Duration::from_millis(20));
+        let got = registry.insert("hot", arts[(v + 1) as usize].clone()).unwrap();
+        assert_eq!(got, v + 2, "swap must advance the version");
+    }
+    stop.store(true, Ordering::Release);
+
+    let mut all_versions = BTreeSet::new();
+    let mut total_sent = 0u64;
+    for c in clients {
+        let (versions, sent) = c.join().expect("client thread");
+        // `NetClient::transform` checks the reply id against the
+        // request id, so `sent` replies means exactly-once delivery.
+        assert!(sent >= 6, "each client must complete its request quota");
+        total_sent += sent;
+        all_versions.extend(versions);
+    }
+    assert!(
+        all_versions.len() >= 2,
+        "the load must observe at least two versions (saw {all_versions:?})"
+    );
+    assert!(
+        all_versions.contains(&final_v),
+        "the final version must serve the post-swap requests"
+    );
+
+    let stats = registry.model_stats();
+    assert_eq!(stats.len(), 1);
+    assert_eq!(stats[0].name, "hot");
+    assert_eq!(stats[0].version, SWAPS + 1);
+    assert_eq!(stats[0].swaps, SWAPS);
+    assert!(
+        stats[0].requests >= total_sent,
+        "admission counter {} must cover the {} client requests",
+        stats[0].requests,
+        total_sent
+    );
+    assert!(stats[0].latency_us.n > 0, "latency histogram must have samples");
+
+    // Per-model metrics flow into the global snapshot under their
+    // dynamic names.
+    let snap = MetricsSnapshot::collect();
+    let requests = snap.counters.get("net.model.hot.requests").copied().unwrap_or(0);
+    assert!(
+        requests - requests_before >= total_sent,
+        "net.model.hot.requests must appear in MetricsSnapshot and cover the load"
+    );
+    assert!(
+        snap.histograms.contains_key("net.model.hot.latency_us"),
+        "per-model latency histogram must appear in MetricsSnapshot"
+    );
+
+    // Teardown order from the server module docs: front-end first, then
+    // the registry. Dropping our own artifact handles lets every weight
+    // region drain; `shutdown` joins the retirers, so the gauge check
+    // is race-free.
+    server.shutdown();
+    drop(server);
+    drop(arts);
+    registry.shutdown();
+    assert_eq!(
+        rfdot::artifact::resident_bytes(),
+        baseline,
+        "after retiring all versions the artifact bytes must return to baseline"
+    );
+}
+
+#[test]
+fn removed_model_turns_unknown_without_disturbing_others() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let baseline = rfdot::artifact::resident_bytes();
+    let registry = Arc::new(Registry::new(coord_config()));
+    registry.insert("keep", artifact(7)).unwrap();
+    registry.insert("gone", artifact(8)).unwrap();
+    let mut server = NetServer::start(registry.clone(), NetConfig::default()).unwrap();
+    let mut client =
+        NetClient::connect(server.local_addr(), Duration::from_secs(10)).unwrap();
+
+    let x = vec![0.5; D];
+    assert_eq!(client.list_models().unwrap().len(), 2);
+    client.transform("gone", &x).unwrap();
+    assert!(registry.remove("gone"));
+
+    // The removed name now rejects with the unknown-model error, while
+    // the surviving model keeps serving on the same connection.
+    let err = client.transform("gone", &x).unwrap_err().to_string();
+    assert!(err.contains("unknown model"), "{err}");
+    let y = client.transform("keep", &x).unwrap();
+    assert_eq!(y.len(), FEATS);
+
+    drop(client);
+    server.shutdown();
+    drop(server);
+    registry.shutdown();
+    assert_eq!(rfdot::artifact::resident_bytes(), baseline);
+}

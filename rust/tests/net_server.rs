@@ -1,0 +1,253 @@
+//! Front-end behavior regressions: heartbeat liveness reaping,
+//! permit-accounted write-queue backpressure, and loopback bitwise
+//! parity between TCP replies and in-process `Coordinator::submit_batch`
+//! over the same artifact.
+
+use rfdot::artifact::MapArtifact;
+use rfdot::coordinator::{Coordinator, CoordinatorConfig, MapArtifactFactory};
+use rfdot::kernels::Exponential;
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
+use rfdot::net::protocol::{
+    decode_header, decode_payload, encode_frame, ErrorCode, Frame, Request, HEADER_LEN,
+};
+use rfdot::net::{NetClient, NetConfig, NetServer, Registry};
+use rfdot::rng::Rng;
+use std::collections::BTreeSet;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Serializes the tests in this binary: they assert deltas on global
+/// obs counters.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn artifact(seed: u64, d: usize, feats: usize) -> Arc<MapArtifact> {
+    let mut rng = Rng::seed_from(seed);
+    let map = RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        d,
+        feats,
+        RmConfig::default().with_max_order(6),
+        &mut rng,
+    );
+    Arc::new(MapArtifact::from_map(&map).expect("encode artifact"))
+}
+
+fn coord_config(workers: usize, max_wait: Duration) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        max_batch: 64,
+        max_wait,
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn read_frame_raw(s: &mut TcpStream) -> Frame {
+    let mut header = [0u8; HEADER_LEN];
+    s.read_exact(&mut header).expect("read frame header");
+    let (ty, len) = decode_header(&header).expect("decode header");
+    let mut payload = vec![0u8; len as usize];
+    s.read_exact(&mut payload).expect("read frame payload");
+    decode_payload(ty, &payload).expect("decode payload")
+}
+
+#[test]
+fn silent_connections_are_reaped_while_heartbeating_peers_survive() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let reaped_before = rfdot::obs::counter("net.reaped").get();
+    let registry = Arc::new(Registry::new(coord_config(1, Duration::from_micros(200))));
+    registry.insert("live", artifact(11, 6, 16)).unwrap();
+    let mut server = NetServer::start(
+        registry.clone(),
+        NetConfig {
+            heartbeat: Duration::from_millis(40),
+            max_missed: 2,
+            ..NetConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // The silent connection never sends a byte; the heartbeating peer
+    // stays chatty through the whole reap window.
+    let mut silent = TcpStream::connect(addr).unwrap();
+    silent.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let peer = thread::spawn(move || {
+        let mut client = NetClient::connect(addr, Duration::from_secs(10)).unwrap();
+        for _ in 0..12 {
+            client.heartbeat().unwrap();
+            thread::sleep(Duration::from_millis(25));
+        }
+        client.transform("live", &vec![0.25; 6]).unwrap()
+    });
+
+    // Reap fires after (max_missed + 1) empty intervals ≈ 120 ms: one
+    // final protocol error frame naming the liveness policy, then EOF.
+    match read_frame_raw(&mut silent) {
+        Frame::Error(e) => {
+            assert_eq!(e.code, ErrorCode::Protocol);
+            assert!(e.message.contains("liveness"), "{}", e.message);
+        }
+        f => panic!("expected reap error frame, got {:?}", f.frame_type()),
+    }
+    let mut probe = [0u8; 1];
+    assert_eq!(
+        silent.read(&mut probe).expect("post-reap read"),
+        0,
+        "reaped connection must be closed"
+    );
+    assert!(
+        rfdot::obs::counter("net.reaped").get() > reaped_before,
+        "reaping must count into net.reaped"
+    );
+
+    // The heartbeats kept the peer alive well past the reap window, and
+    // its request still round-trips.
+    let y = peer.join().expect("peer thread");
+    assert_eq!(y.len(), 16);
+    server.shutdown();
+}
+
+#[test]
+fn write_queue_overflow_rejects_retryably_and_answers_exactly_once() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let rejects_before = rfdot::obs::counter("net.reject").get();
+    const D: usize = 4;
+    const FEATS: usize = 4096;
+    const REQUESTS: u64 = 30;
+    // A long coalescing window holds the first reply back until well
+    // after every request has hit admission, so the two reply permits
+    // stay claimed while the rest of the burst arrives.
+    let registry = Arc::new(Registry::new(coord_config(1, Duration::from_millis(50))));
+    registry.insert("big", artifact(12, D, FEATS)).unwrap();
+    let mut server = NetServer::start(
+        registry.clone(),
+        NetConfig {
+            write_queue: 2,
+            heartbeat: Duration::from_secs(5),
+            max_missed: 10,
+            ..NetConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // The whole burst goes out in one write before a single reply is
+    // read: with 2 permits, the overflow must reject retryably.
+    let mut burst = Vec::new();
+    for req_id in 1..=REQUESTS {
+        burst.extend_from_slice(&encode_frame(&Frame::Dense(Request {
+            req_id,
+            model: "big".into(),
+            values: vec![0.125; D],
+        })));
+    }
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.write_all(&burst).unwrap();
+
+    // A second connection is a different permit budget: its request
+    // must sail through while the first connection is saturated.
+    let mut other = NetClient::connect(addr, Duration::from_secs(10)).unwrap();
+    assert_eq!(other.transform("big", &vec![0.5; D]).unwrap().len(), FEATS);
+
+    // Exactly one frame per request: replies for the admitted ones,
+    // retryable coordinator rejects naming the write queue for the
+    // overflow. No drops, no duplicates.
+    let mut answered = BTreeSet::new();
+    let mut replies = 0u64;
+    let mut rejects = 0u64;
+    for _ in 0..REQUESTS {
+        match read_frame_raw(&mut stream) {
+            Frame::Reply { req_id, values } => {
+                assert!(answered.insert(req_id), "duplicate reply for {req_id}");
+                assert_eq!(values.len(), FEATS);
+                replies += 1;
+            }
+            Frame::Error(e) => {
+                assert!(answered.insert(e.req_id), "duplicate answer for {}", e.req_id);
+                assert_eq!(e.code, ErrorCode::Coordinator);
+                assert!(e.retryable, "backpressure rejects must be retryable");
+                assert!(e.message.contains("write queue"), "{}", e.message);
+                rejects += 1;
+            }
+            f => panic!("expected reply or reject, got {:?}", f.frame_type()),
+        }
+    }
+    assert_eq!(answered.len() as u64, REQUESTS);
+    assert_eq!(answered, (1..=REQUESTS).collect::<BTreeSet<_>>());
+    assert!(replies >= 1, "the admitted requests must still be answered");
+    assert!(rejects >= 1, "overflow beyond the write queue must reject");
+    assert!(
+        rfdot::obs::counter("net.reject").get() - rejects_before >= rejects,
+        "rejects must count into net.reject"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn loopback_replies_are_bitwise_equal_to_in_process_batches() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    const D: usize = 10;
+    const FEATS: usize = 64;
+    const ROWS: usize = 8;
+    let art = artifact(13, D, FEATS);
+
+    let registry = Arc::new(Registry::new(coord_config(2, Duration::from_micros(200))));
+    registry.insert("par", art.clone()).unwrap();
+    let mut server = NetServer::start(registry.clone(), NetConfig::default()).unwrap();
+    let mut client =
+        NetClient::connect(server.local_addr(), Duration::from_secs(10)).unwrap();
+
+    let mut rng = Rng::seed_from(99);
+    let dense_rows: Vec<Vec<f32>> =
+        (0..ROWS).map(|_| (0..D).map(|_| rng.f32() - 0.5).collect()).collect();
+    let sparse_rows: Vec<(Vec<u32>, Vec<f32>)> = (0..ROWS)
+        .map(|_| {
+            let indices: Vec<u32> = (0..D as u32).step_by(2).collect();
+            let values: Vec<f32> = indices.iter().map(|_| rng.f32() - 0.5).collect();
+            (indices, values)
+        })
+        .collect();
+
+    // The in-process reference: a coordinator over the same artifact
+    // through the same factory, answering the same rows as one batch.
+    let factory = MapArtifactFactory::new(art.clone()).unwrap();
+    let coord =
+        Coordinator::start(Arc::new(factory), coord_config(2, Duration::from_micros(200)));
+    let offline_dense: Vec<Vec<f32>> = coord
+        .submit_batch(dense_rows.clone())
+        .unwrap()
+        .wait()
+        .into_iter()
+        .map(|r| r.expect("in-process dense reply"))
+        .collect();
+    let offline_sparse: Vec<Vec<f32>> = coord
+        .submit_batch_sparse(sparse_rows.clone())
+        .unwrap()
+        .wait()
+        .into_iter()
+        .map(|r| r.expect("in-process sparse reply"))
+        .collect();
+
+    for (row, offline) in dense_rows.iter().zip(&offline_dense) {
+        let wire = client.transform("par", row).unwrap();
+        assert_eq!(wire.len(), offline.len());
+        assert!(
+            wire.iter().zip(offline).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "dense TCP reply must be bitwise-equal to the in-process batch"
+        );
+    }
+    for ((indices, values), offline) in sparse_rows.iter().zip(&offline_sparse) {
+        let wire = client.transform_sparse("par", indices, values).unwrap();
+        assert_eq!(wire.len(), offline.len());
+        assert!(
+            wire.iter().zip(offline).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "sparse TCP reply must be bitwise-equal to the in-process batch"
+        );
+    }
+    drop(client);
+    server.shutdown();
+}

@@ -21,6 +21,11 @@
 #  * `rfdot serve --trace --trace-out` runs a native serving smoke and
 #    `rfdot trace-check` validates the Chrome trace it wrote (every
 #    begin paired with its end, per thread);
+#  * `rfdot serve --listen 127.0.0.1:0` runs the TCP front-end on an
+#    ephemeral loopback port and `rfdot net-client --malformed` drives
+#    it end to end: ping, list-models, dense/sparse bitwise parity, and
+#    two crafted malformed frames that must come back as named error
+#    frames; the server's stats line and its trace are then checked;
 #  * `report --quick` regenerates REPORT.md/REPORT.json into a temp dir
 #    and re-parses the JSON through the declared schema, failing on
 #    schema drift (the self-check inside `rfdot report`).
@@ -47,6 +52,7 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo bench --bench micro -- --quick --only structured
 cargo bench --bench micro -- --quick --only sparse
 cargo bench --bench micro -- --quick --only serve-throughput
+cargo bench --bench micro -- --quick --only net-roundtrip
 cargo bench --bench micro -- --quick --only simd-kernels
 cargo bench --bench micro -- --quick --only artifact-load
 # Artifact-layer smoke: legacy-record up-conversion, bitwise transform
@@ -59,6 +65,7 @@ cargo run --release --quiet -- map-info --selftest
 # top-level `simd` axes are reported but never gate.
 cargo run --release --quiet -- bench-diff ../BENCH_serve.json ../BENCH_serve.json --max-regress 5
 cargo run --release --quiet -- bench-diff ../BENCH_simd.json ../BENCH_simd.json --max-regress 5
+cargo run --release --quiet -- bench-diff ../BENCH_net.json ../BENCH_net.json --max-regress 5
 report_dir="$(mktemp -d)"
 trap 'rm -rf "$report_dir"' EXIT
 # Serving smoke with tracing on: the run must write a Chrome trace that
@@ -67,5 +74,26 @@ cargo run --release --quiet -- serve --native --requests 200 --clients 2 --worke
     --trace --trace-out "$report_dir/trace.json"
 test -s "$report_dir/trace.json"
 cargo run --release --quiet -- trace-check "$report_dir/trace.json"
+# Network serving smoke: a real TCP front-end on an ephemeral loopback
+# port (--conns 3 = the net-client's main connection plus its two
+# malformed probes, so the server exits deterministically). net-client
+# checks ping, list-models, dense/sparse bitwise parity, and that both
+# crafted malformed frames come back as named error frames; afterwards
+# the server's consolidated stats line and its Chrome trace are checked.
+cargo run --release --quiet -- serve --listen 127.0.0.1:0 --conns 3 \
+    --trace --trace-out "$report_dir/net_trace.json" > "$report_dir/serve.log" 2>&1 &
+serve_pid=$!
+addr=""
+for _ in $(seq 1 100); do
+    addr="$(sed -n 's/^listening on \([^ ]*\).*/\1/p' "$report_dir/serve.log")"
+    [ -n "$addr" ] && break
+    sleep 0.1
+done
+test -n "$addr"
+cargo run --release --quiet -- net-client --connect "$addr" --requests 8 --malformed
+wait "$serve_pid"
+grep -q 'model default' "$report_dir/serve.log"
+test -s "$report_dir/net_trace.json"
+cargo run --release --quiet -- trace-check "$report_dir/net_trace.json"
 cargo run --release --quiet -- report --quick --fresh --out-dir "$report_dir"
 test -s "$report_dir/REPORT.md" && test -s "$report_dir/REPORT.json"
