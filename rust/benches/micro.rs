@@ -1055,7 +1055,9 @@ fn bench_artifact_load() {
 /// request/reply cost; depth 16 keeps the wire and the batcher busy and
 /// amortizes the per-frame syscalls. Recorded as the machine-readable
 /// baseline in `BENCH_net.json` at the repo root (gated on the
-/// secs_per_req column by `rfdot bench-diff`).
+/// secs_per_req column by `rfdot bench-diff`), together with the
+/// faults-disabled failpoint overhead probe — the "chaos hooks off
+/// must cost one relaxed load" gate from the fault-injection tier.
 fn bench_net_roundtrip() {
     use rfdot::net::{NetClient, NetConfig, NetServer, Registry};
     println!("\n== net round trip: clients x pipeline depth over loopback ==");
@@ -1123,6 +1125,51 @@ fn bench_net_roundtrip() {
     drop(server);
     registry.shutdown();
 
+    // Faults-disabled overhead probe: every request above crossed the
+    // serving tier's failpoints (accept/read/write, submit, reply, ...)
+    // with no plan installed, and the contract is that each such
+    // crossing costs one relaxed atomic load. Pin that price against a
+    // raw `AtomicU8` relaxed-load baseline, plus the armed-elsewhere
+    // cost (plan installed, some OTHER site armed — the plan-lookup
+    // price a production `--faults` run pays on unarmed sites). The
+    // disabled cost lands in `BENCH_net.json` so `rfdot bench-diff`
+    // gates it like any other timing.
+    use std::hint::black_box;
+    use std::sync::atomic::{AtomicU8, Ordering};
+    println!("\n   faults overhead: disabled failpoint vs raw relaxed load");
+    rfdot::faults::clear();
+    let iters = if fast() { 5 } else { 20 };
+    let reps = 1_000_000u64;
+    static RAW: AtomicU8 = AtomicU8::new(1);
+    let raw_s = bench("faults-atomic-load", 2, iters, || {
+        for _ in 0..reps {
+            black_box(RAW.load(Ordering::Relaxed));
+        }
+    })
+    .mean_s()
+        / reps as f64;
+    let off_s = bench("faults-failpoint-off", 2, iters, || {
+        for _ in 0..reps {
+            let _ = black_box(rfdot::faults::failpoint("net.write"));
+        }
+    })
+    .mean_s()
+        / reps as f64;
+    rfdot::faults::install_spec("seed=1,net.accept=error").unwrap();
+    let armed_s = bench("faults-armed-elsewhere", 2, iters, || {
+        for _ in 0..reps {
+            let _ = black_box(rfdot::faults::failpoint("net.write"));
+        }
+    })
+    .mean_s()
+        / reps as f64;
+    rfdot::faults::clear();
+    let mut ftable = Table::new(&["probe", "per call"]);
+    ftable.row(&["raw relaxed load (baseline)".into(), fmt_duration(raw_s)]);
+    ftable.row(&["failpoint (disabled)".into(), fmt_duration(off_s)]);
+    ftable.row(&["failpoint (armed elsewhere)".into(), fmt_duration(armed_s)]);
+    ftable.print();
+
     let json_samples = samples
         .iter()
         .map(|(clients, depth, rps, spr)| {
@@ -1152,7 +1199,10 @@ fn bench_net_roundtrip() {
         "{{\n  \"bench\": \"net_roundtrip\",\n  \"status\": \"{status}\",\n  \
          \"generated_by\": \"{invocation}\",\n  \
          \"net\": {{\"d\": {d}, \"features\": {n_feat}, \"requests\": {requests}, \
-         \"samples\": [\n    {json_samples}\n  ]}}\n}}\n"
+         \"samples\": [\n    {json_samples}\n  ],\n    \
+         \"faults_overhead\": {{\"atomic_load_secs_per_call\": {raw_s:.12}, \
+         \"failpoint_off_secs_per_call\": {off_s:.12}, \
+         \"failpoint_armed_other_site_secs_per_call\": {armed_s:.12}}}}}\n}}\n"
     );
     match std::fs::write(&path, json) {
         Ok(()) => println!("   baseline recorded to {}", path.display()),

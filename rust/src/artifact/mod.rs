@@ -476,7 +476,12 @@ impl MapArtifact {
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<MapArtifact> {
-        let buf = std::fs::read(path)?;
+        crate::faults::failpoint("artifact.load")?;
+        let mut buf = std::fs::read(path)?;
+        // Chaos site: a torn or bit-flipped read surfaces here exactly
+        // as it would from failing storage — the parser below must turn
+        // it into a named error, never a panic.
+        crate::faults::mangle("artifact.read", &mut buf)?;
         Self::from_bytes(&buf)
     }
 
@@ -544,6 +549,9 @@ impl MapArtifact {
     // -- parsing ----------------------------------------------------------
 
     fn parse_v3(buf: &[u8]) -> Result<MapArtifact> {
+        // Same chaos site as the legacy serialize reader: both are
+        // "RFDM decode", whichever container generation is on disk.
+        crate::faults::failpoint("rfdm.decode")?;
         let mut r = serialize::Reader::new(buf);
         if r.take(8)? != MAGIC_V3 {
             return Err(data_err("bad magic in RFDM0003 blob"));

@@ -65,6 +65,18 @@ fn apply_trace(args: &mut Args) -> String {
     out
 }
 
+/// Consume `--faults SPEC` and, when given, parse + install the fault
+/// plan (absent keeps the lazy `RFDOT_FAULTS` / config resolution). An
+/// invalid spec is a config error — a typo'd site must fail loudly,
+/// not silently inject nothing.
+fn apply_faults(args: &mut Args) -> Result<()> {
+    let spec = args.str_flag("faults", "");
+    if !spec.is_empty() {
+        crate::faults::install_spec(&spec)?;
+    }
+    Ok(())
+}
+
 /// `rfdot info` — engine and artifact inventory.
 pub fn info(args: &mut Args) -> Result<()> {
     let dir = args.str_flag("artifact-dir", "artifacts");
@@ -379,6 +391,11 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let max_missed = args.usize_flag("max-missed", 3)? as u32;
     let write_queue = args.usize_flag("write-queue", 256)?;
     let conns = args.usize_flag("conns", 0)?;
+    // Robustness knobs: per-request deadline (0 = off), load-shed
+    // in-flight threshold (0 = off), and a fault-injection spec.
+    let deadline_ms = args.num_flag("deadline-ms", 0.0)? as u64;
+    let shed = args.usize_flag("shed", 0)?;
+    apply_faults(args)?;
     apply_simd(args)?;
     let trace_out = apply_trace(args);
     warn_unknown(args);
@@ -391,6 +408,8 @@ pub fn serve(args: &mut Args) -> Result<()> {
             max_missed,
             write_queue,
             conns,
+            deadline_ms,
+            shed,
             workers,
             shards,
             max_batch,
@@ -617,6 +636,8 @@ struct ListenParams {
     max_missed: u32,
     write_queue: usize,
     conns: usize,
+    deadline_ms: u64,
+    shed: usize,
     workers: usize,
     shards: usize,
     max_batch: usize,
@@ -681,6 +702,9 @@ fn serve_listen(p: ListenParams) -> Result<()> {
         write_queue: p.write_queue.max(1),
         write_timeout: Duration::from_secs(10),
         max_conns: p.conns,
+        request_deadline: Duration::from_millis(p.deadline_ms),
+        shed_inflight: p.shed,
+        ..crate::net::NetConfig::default()
     };
     let mut server = crate::net::NetServer::start(registry.clone(), net_config)?;
     let names: Vec<String> = registry.list().into_iter().map(|m| m.name).collect();
@@ -698,13 +722,20 @@ fn serve_listen(p: ListenParams) -> Result<()> {
     // Consolidated stats: front-end counters, then the per-model
     // request/latency breakdown (same numbers as `MetricsSnapshot`).
     println!(
-        "net: connections_total={} frames={} frames_sent={} rejects={} reaped={} bad_frames={}",
+        "net: connections_total={} frames={} frames_sent={} rejects={} reaped={} bad_frames={} \
+         shed={} deadline_exceeded={} retired={} pending_retires={} stuck_retires={} faults={}",
         crate::obs::counter("net.connections_total").get(),
         crate::obs::counter("net.frames").get(),
         crate::obs::counter("net.frames_sent").get(),
         crate::obs::counter("net.reject").get(),
         crate::obs::counter("net.reaped").get(),
         crate::obs::counter("net.bad_frames").get(),
+        crate::obs::counter("net.shed").get(),
+        crate::obs::counter("net.deadline_exceeded").get(),
+        crate::obs::counter("net.registry.retired").get(),
+        crate::obs::gauge("net.registry.pending_retires").get(),
+        crate::obs::counter("net.registry.stuck_retires").get(),
+        crate::obs::counter("faults.injected").get(),
     );
     for m in registry.model_stats() {
         println!("{}", model_stats_line(&m));
@@ -752,10 +783,18 @@ pub fn net_client(args: &mut Args) -> Result<()> {
     let model_flag = args.str_flag("model", "");
     let malformed = args.switch("malformed");
     let seed = args.num_flag("seed", 42.0)? as u64;
+    // Survival knobs: one deadline for connect/read/write, and how
+    // many times a retryable server rejection (backpressure, shed,
+    // deadline) is retried with backoff before giving up.
+    let timeout_ms = args.num_flag("timeout-ms", 10_000.0)? as u64;
+    let retries = args.usize_flag("retries", 0)? as u32;
     warn_unknown(args);
 
-    let timeout = Duration::from_secs(10);
-    let mut client = crate::net::NetClient::connect(connect.as_str(), timeout)?;
+    let client_config = crate::net::ClientConfig::default()
+        .with_timeout(Duration::from_millis(timeout_ms.max(1)))
+        .with_retries(retries);
+    let mut client =
+        crate::net::NetClient::connect_with(connect.as_str(), client_config)?;
     client.ping()?;
     let models = client.list_models()?;
     if models.is_empty() {

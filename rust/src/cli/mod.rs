@@ -89,6 +89,11 @@ COMMANDS:
                   clients silent for more than N intervals)
                   --write-queue 256  (bounded per-client write-back
                   queue; overflow is a retryable reject frame)
+                  --deadline-ms N  (per-request answer deadline: late
+                  replies become retryable deadline-exceeded frames;
+                  0 = off, the default)
+                  --shed N  (load-shed threshold: reject new requests
+                  with a retryable frame once N are in flight; 0 = off)
                   --conns N  (exit after N connections close; CI)
   net-client    exercise a running RFNP server: ping, list-models,
                 interleaved dense + sparse requests with client-side
@@ -97,6 +102,11 @@ COMMANDS:
                   --connect 127.0.0.1:7474 --requests 8 --model default
                   --malformed  (also probe bad magic + oversized frame
                   on two extra connections)  --seed 42
+                  --timeout-ms 10000  (connect/read/write socket
+                  deadline — a silent server is an error, not a hang)
+                  --retries N  (re-send a request up to N times when
+                  the server answers with a retryable error frame,
+                  with jittered exponential backoff; default 0)
   bench-diff    compare two bench baseline JSON files and exit nonzero
                 on regression (the CI perf gate)
                   rfdot bench-diff old.json new.json --max-regress 5
@@ -136,4 +146,13 @@ COMMANDS:
                 the \"trace\" config field); near-zero cost when off.
                 Spans cover submit -> batch -> transform -> reply plus
                 every per-family transform/projection hot path.
+  --faults SPEC deterministic fault injection (also the RFDOT_FAULTS
+                env var or the \"faults\" config field); one relaxed
+                atomic load when off. SPEC is comma-separated
+                site=action[:prob][:after_n] rules plus an optional
+                seed=N term, e.g.
+                  seed=7,net.write=error:0.05,rfdm.decode=error::100
+                Actions: error | panic | delay-<ms> | corrupt-byte.
+                Same seed + same spec replays the identical fault
+                schedule. Site catalogue: ARCHITECTURE.md (robustness).
 ";

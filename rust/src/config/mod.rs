@@ -143,6 +143,11 @@ pub struct ExperimentConfig {
     /// the knob is only *applied* by consumers — parsing never mutates
     /// the global.
     pub trace: Option<bool>,
+    /// Fault-injection spec for the [`crate::faults`] layer (JSON:
+    /// `"faults": "seed=7,net.write=error:0.1"`); `None` leaves the
+    /// process-global plan untouched (`--faults` / `RFDOT_FAULTS`).
+    /// Parsed and *validated* here, applied only by consumers.
+    pub faults: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -164,6 +169,7 @@ impl Default for ExperimentConfig {
             recycle: false,
             simd: None,
             trace: None,
+            faults: None,
         }
     }
 }
@@ -220,6 +226,13 @@ impl ExperimentConfig {
         }
         if let Some(b) = v.get("trace").and_then(Json::as_bool) {
             cfg.trace = Some(b);
+        }
+        if let Some(s) = v.get("faults").and_then(Json::as_str) {
+            // Validate eagerly so a typo'd site name fails at config
+            // parse time, but install nothing — like simd/trace, the
+            // global is only mutated by consumers.
+            crate::faults::parse_spec(s)?;
+            cfg.faults = Some(s.to_string());
         }
         cfg.validate()?;
         Ok(cfg)
@@ -598,6 +611,12 @@ mod tests {
         assert_eq!(traced.trace, Some(true));
         let untraced = ExperimentConfig::from_json(r#"{"trace": false}"#).unwrap();
         assert_eq!(untraced.trace, Some(false));
+        // And for the faults knob: parsed + validated, never installed.
+        assert_eq!(cfg.faults, None);
+        let faulted =
+            ExperimentConfig::from_json(r#"{"faults": "seed=7,net.write=error:0.1"}"#).unwrap();
+        assert_eq!(faulted.faults.as_deref(), Some("seed=7,net.write=error:0.1"));
+        assert!(ExperimentConfig::from_json(r#"{"faults": "net.typo=error"}"#).is_err());
     }
 
     #[test]

@@ -869,6 +869,11 @@ impl Coordinator {
     }
 
     fn enqueue(&self, job: Job) -> Result<()> {
+        if let Err(e) = crate::faults::failpoint("coord.submit") {
+            job.disarm();
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(e);
+        }
         let lanes = match self.submit_tx.as_ref() {
             Some(lanes) => lanes,
             None => {
@@ -878,9 +883,14 @@ impl Coordinator {
         };
         // Round-robin the submit lanes; a full lane falls through to
         // the next one, so backpressure only fires when every lane is
-        // full. Lane choice is scheduling, never semantics.
+        // full. Lane choice is scheduling, never semantics. A lane whose
+        // batcher died (injected panic) reports `Disconnected` — skip it
+        // like a full one and keep scanning: one dead batcher must not
+        // fail submissions while other lanes are live (regression:
+        // `submissions_survive_a_dead_batcher_lane` in serve_shard.rs).
         let start = self.ingress_cursor.fetch_add(1, Ordering::Relaxed);
         let mut job = job;
+        let mut dead_lanes = 0;
         for k in 0..lanes.len() {
             let lane = (start + k) % lanes.len();
             match lanes[lane].try_send(job) {
@@ -890,12 +900,15 @@ impl Coordinator {
                 }
                 Err(TrySendError::Full(j)) => job = j,
                 Err(TrySendError::Disconnected(j)) => {
-                    j.disarm();
-                    return Err(Error::Coordinator("coordinator is shut down".into()));
+                    job = j;
+                    dead_lanes += 1;
                 }
             }
         }
         job.disarm();
+        if dead_lanes == lanes.len() {
+            return Err(Error::Coordinator("coordinator is shut down".into()));
+        }
         self.stats.rejected.fetch_add(1, Ordering::Relaxed);
         Err(Error::Coordinator("queue full (backpressure)".into()))
     }
@@ -979,6 +992,29 @@ impl Drop for Coordinator {
     }
 }
 
+/// Decrements `batchers_alive` however the batcher exits. The unwind
+/// path matters: a batcher that dies mid-batch (injected panic at
+/// `coord.batch_form`) must still count itself out, or the last live
+/// count never reaches zero, `ShardQueues::close` never fires, and
+/// workers + `shutdown` hang forever waiting on `work_cv` (regression:
+/// `batcher_panic_still_closes_the_shard_queues` in serve_shard.rs).
+/// The in-flight batch itself is answered by `Job::drop` during the
+/// unwind, so exactly-once holds on this path too.
+struct BatcherGuard {
+    queues: Arc<ShardQueues>,
+    batchers_alive: Arc<AtomicUsize>,
+}
+
+impl Drop for BatcherGuard {
+    fn drop(&mut self) {
+        // The AcqRel decrement keeps the close after every lane's final
+        // push; `close` is idempotent, so the last-out race is benign.
+        if self.batchers_alive.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.queues.close();
+        }
+    }
+}
+
 fn batcher_loop(
     submit_rx: Receiver<Job>,
     home: usize,
@@ -988,20 +1024,14 @@ fn batcher_loop(
     stats: Arc<Stats>,
     batchers_alive: Arc<AtomicUsize>,
 ) {
+    let _guard = BatcherGuard { queues: queues.clone(), batchers_alive };
     loop {
         // Block for the first job of the batch.
         let first = match submit_rx.recv() {
             Ok(j) => j,
-            Err(_) => {
-                // This lane closed and drained; the last batcher out
-                // closes the shard queues so workers finish. (`close`
-                // is idempotent — the AcqRel decrement just keeps the
-                // close after every lane's final push.)
-                if batchers_alive.fetch_sub(1, Ordering::AcqRel) == 1 {
-                    queues.close();
-                }
-                return;
-            }
+            // Lane closed and drained; the guard counts this batcher
+            // out (and the last one out closes the shard queues).
+            Err(_) => return,
         };
         let _span = obs::span("serve.batch_form");
         let mut batch = vec![first];
@@ -1016,6 +1046,13 @@ fn batcher_loop(
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
+        }
+        // Chaos site: a panic here unwinds through the guard (count
+        // decremented, queues closed if last) and `Job::drop` answers
+        // the formed batch; an error answers it explicitly.
+        if let Err(e) = crate::faults::failpoint("coord.batch_form") {
+            answer_all_err(batch, &e.to_string(), &stats, None);
+            continue;
         }
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.batched_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
@@ -1055,6 +1092,20 @@ fn worker_loop(
         if shard != home {
             shard_stats.steals.fetch_add(1, Ordering::Relaxed);
             obs::trace::mark("serve.steal");
+            // Chaos site: fires only on stolen batches. A panic unwinds
+            // through `Job::drop` + `WorkerGuard`; an error answers the
+            // batch here — either way every job is answered once.
+            if let Err(e) = crate::faults::failpoint("coord.steal") {
+                answer_all_err(batch, &e.to_string(), &stats, Some(shard_stats));
+                continue;
+            }
+        }
+        // Chaos site for the PR 5 worker-death path: `panic` kills this
+        // worker mid-claim, exercising the guard's drain-and-fail of
+        // everything still queued when the last worker dies.
+        if let Err(e) = crate::faults::failpoint("coord.worker_panic") {
+            answer_all_err(batch, &e.to_string(), &stats, Some(shard_stats));
+            continue;
         }
         let backend = match &backend {
             Ok(b) => b,
@@ -1081,6 +1132,13 @@ fn worker_loop(
         match run {
             Ok(out) => {
                 let _span = obs::span("serve.reply");
+                // Chaos site: an error downgrades the whole batch to
+                // error replies (still exactly once); a panic drops the
+                // jobs and `Job::drop` answers them during the unwind.
+                if let Err(e) = crate::faults::failpoint("coord.reply") {
+                    answer_all_err(batch, &e.to_string(), &stats, Some(shard_stats));
+                    continue;
+                }
                 for (i, mut job) in batch.into_iter().enumerate() {
                     let row = out.row(i).to_vec();
                     stats.completed.fetch_add(1, Ordering::Relaxed);

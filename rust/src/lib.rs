@@ -61,6 +61,11 @@
 //!   coordinator and every transform/projection hot path, and
 //!   deterministic JSON export including a Chrome `trace_event`
 //!   emitter (`rfdot serve --trace-out`).
+//! * [`faults`] — deterministic, seeded fault injection: named
+//!   failpoints (`--faults SPEC` / `RFDOT_FAULTS` / config `"faults"`)
+//!   threaded through the artifact/decode/coordinator/registry/socket
+//!   paths, zero-cost when disarmed, replaying bit-identically from
+//!   the seed (`rust/tests/chaos.rs` sweeps every site).
 //! * [`bench`], [`prop`], [`metrics`], [`config`], [`rng`], [`linalg`] —
 //!   infrastructure substrates (no external crates are reachable in the
 //!   build environment, so benchmarking, property testing, config
@@ -89,6 +94,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod faults;
 pub mod features;
 pub mod kernels;
 pub mod linalg;

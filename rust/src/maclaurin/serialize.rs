@@ -162,6 +162,7 @@ pub fn to_bytes(map: &RandomMaclaurin) -> Vec<u8> {
 /// `RFDM0003` containers come back artifact-backed — the map borrows
 /// one shared region instead of owning copies).
 pub fn from_bytes(buf: &[u8]) -> Result<RandomMaclaurin> {
+    crate::faults::failpoint("rfdm.decode")?;
     if buf.len() >= 8 && &buf[..8] == crate::artifact::MAGIC_V3 {
         return crate::artifact::MapArtifact::from_bytes(buf)?.instantiate();
     }

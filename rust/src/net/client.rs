@@ -3,33 +3,117 @@
 //! `rfdot net-client` CLI, the integration tests and the
 //! `net-roundtrip` bench. One synchronous request/reply per call,
 //! plus a split send/receive surface for pipelining.
+//!
+//! # Survival semantics
+//!
+//! Every socket operation is bounded: connect, read *and* write
+//! deadlines are set unconditionally ([`ClientConfig`]), so a server
+//! that accepts and then goes silent surfaces as an error instead of a
+//! hang (`rust/tests/chaos.rs` pins this with a never-replying
+//! server). When [`ClientConfig::retries`] is non-zero, the
+//! synchronous transform calls retry — with bounded exponential
+//! backoff and decorrelated jitter — *only* requests the server
+//! answered with a `retryable` error frame (backpressure, load shed,
+//! deadline exceeded). Transport failures are never retried here: the
+//! connection state is unknown, so reconnecting is the caller's
+//! decision (the `net-client` CLI loop does exactly that).
 
 use crate::error::{Error, Result};
 use crate::net::protocol::{
-    decode_header, decode_payload, encode_frame, Frame, ModelEntry, Request, SparseRequest,
-    HEADER_LEN,
+    decode_header, decode_payload, encode_frame, ErrorFrame, Frame, ModelEntry, Request,
+    SparseRequest, HEADER_LEN,
 };
+use crate::rng::splitmix64;
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
+
+/// Socket deadlines and retry policy for a [`NetClient`].
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// TCP connect deadline.
+    pub connect_timeout: Duration,
+    /// Per-read socket deadline.
+    pub read_timeout: Duration,
+    /// Per-write socket deadline.
+    pub write_timeout: Duration,
+    /// How many times a retryable server error is retried (0 = the
+    /// first answer is final, which is the library default).
+    pub retries: u32,
+    /// First backoff sleep; later sleeps jitter in
+    /// `[backoff_base, 3 × previous]`, capped at `backoff_max`.
+    pub backoff_base: Duration,
+    pub backoff_max: Duration,
+    /// Seed for the jitter stream (deterministic backoff in tests).
+    pub retry_seed: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(10),
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
+            retries: 0,
+            backoff_base: Duration::from_millis(2),
+            backoff_max: Duration::from_millis(250),
+            retry_seed: 0x5EED,
+        }
+    }
+}
+
+impl ClientConfig {
+    /// One deadline for connect, read and write.
+    pub fn with_timeout(mut self, d: Duration) -> ClientConfig {
+        self.connect_timeout = d;
+        self.read_timeout = d;
+        self.write_timeout = d;
+        self
+    }
+
+    pub fn with_retries(mut self, n: u32) -> ClientConfig {
+        self.retries = n;
+        self
+    }
+}
 
 /// A blocking RFNP connection.
 pub struct NetClient {
     stream: TcpStream,
     next_id: u64,
+    config: ClientConfig,
+    /// Decorrelated-jitter state: the previous sleep in micros plus the
+    /// seeded RNG word.
+    backoff_prev_us: u64,
+    backoff_rng: u64,
 }
 
 impl NetClient {
-    /// Connect with a read timeout (a server that stops answering
-    /// surfaces as an error instead of a hang).
-    pub fn connect(addr: impl ToSocketAddrs, read_timeout: Duration) -> Result<NetClient> {
-        let stream = TcpStream::connect(addr)
+    /// Connect with one deadline for everything (a server that stops
+    /// answering — or never starts — surfaces as an error, not a hang).
+    pub fn connect(addr: impl ToSocketAddrs, timeout: Duration) -> Result<NetClient> {
+        Self::connect_with(addr, ClientConfig::default().with_timeout(timeout))
+    }
+
+    /// Connect with explicit deadlines and retry policy. All three
+    /// socket timeouts are set unconditionally.
+    pub fn connect_with(addr: impl ToSocketAddrs, config: ClientConfig) -> Result<NetClient> {
+        let addr = addr
+            .to_socket_addrs()
+            .map_err(|e| Error::Runtime(format!("resolve: {e}")))?
+            .next()
+            .ok_or_else(|| Error::Runtime("resolve: no addresses".into()))?;
+        let stream = TcpStream::connect_timeout(&addr, config.connect_timeout)
             .map_err(|e| Error::Runtime(format!("connect: {e}")))?;
         stream
-            .set_read_timeout(Some(read_timeout))
+            .set_read_timeout(Some(config.read_timeout))
             .map_err(|e| Error::Runtime(format!("set_read_timeout: {e}")))?;
+        stream
+            .set_write_timeout(Some(config.write_timeout))
+            .map_err(|e| Error::Runtime(format!("set_write_timeout: {e}")))?;
         let _ = stream.set_nodelay(true);
-        Ok(NetClient { stream, next_id: 1 })
+        let backoff_rng = config.retry_seed;
+        Ok(NetClient { stream, next_id: 1, config, backoff_prev_us: 0, backoff_rng })
     }
 
     /// Send a raw frame (tests also write crafted bytes directly).
@@ -101,30 +185,87 @@ impl NetClient {
         Ok(req_id)
     }
 
-    /// Receive the next reply; a server error frame comes back as the
-    /// reconstructed [`Error`] tagged with its request id.
-    pub fn recv_reply(&mut self) -> Result<(u64, Vec<f32>)> {
+    /// Receive the next answer with the server's error taxonomy kept
+    /// intact: `Ok(Ok(..))` is a reply, `Ok(Err(frame))` is a server
+    /// error frame (the `retryable` flag drives the retry loop), and
+    /// the outer `Err` is a transport/protocol failure.
+    pub fn recv_outcome(
+        &mut self,
+    ) -> Result<std::result::Result<(u64, Vec<f32>), ErrorFrame>> {
         match self.read_frame()? {
-            Frame::Reply { req_id, values } => Ok((req_id, values)),
-            Frame::Error(e) => Err(Error::Runtime(format!(
-                "server error for request {}: {}",
-                e.req_id,
-                e.to_error()
-            ))),
+            Frame::Reply { req_id, values } => Ok(Ok((req_id, values))),
+            Frame::Error(e) => Ok(Err(e)),
             f => Err(Error::Runtime(format!("expected reply, got {:?}", f.frame_type()))),
         }
     }
 
-    /// Synchronous dense transform.
-    pub fn transform(&mut self, model: &str, x: &[f32]) -> Result<Vec<f32>> {
-        let req_id = self.send_dense(model, x.to_vec())?;
-        let (got, values) = self.recv_reply()?;
-        if got != req_id {
-            return Err(Error::Runtime(format!(
-                "reply id {got} does not match request id {req_id}"
-            )));
+    /// Receive the next reply; a server error frame comes back as the
+    /// reconstructed [`Error`] tagged with its request id.
+    pub fn recv_reply(&mut self) -> Result<(u64, Vec<f32>)> {
+        match self.recv_outcome()? {
+            Ok(reply) => Ok(reply),
+            Err(e) => Err(Error::Runtime(format!(
+                "server error for request {}: {}",
+                e.req_id,
+                e.to_error()
+            ))),
         }
-        Ok(values)
+    }
+
+    /// Decorrelated jitter: sleep uniformly in
+    /// `[base, 3 × previous sleep]`, capped, seeded — the classic
+    /// backoff that avoids thundering-herd resubmission.
+    fn backoff(&mut self) {
+        let base = self.config.backoff_base.as_micros() as u64;
+        let cap = self.config.backoff_max.as_micros() as u64;
+        let hi = (self.backoff_prev_us.max(base)).saturating_mul(3).min(cap);
+        let span = hi.saturating_sub(base).max(1);
+        let sleep_us = base + splitmix64(&mut self.backoff_rng) % span;
+        self.backoff_prev_us = sleep_us;
+        std::thread::sleep(Duration::from_micros(sleep_us));
+    }
+
+    /// One request with the configured retry policy: resend (with a
+    /// fresh request id) only when the server marked the answer
+    /// retryable and attempts remain.
+    fn request_with_retry(
+        &mut self,
+        model: &str,
+        send: impl Fn(&mut NetClient, &str) -> Result<u64>,
+    ) -> Result<Vec<f32>> {
+        self.backoff_prev_us = 0;
+        let mut attempt = 0u32;
+        loop {
+            let req_id = send(self, model)?;
+            match self.recv_outcome()? {
+                Ok((got, values)) => {
+                    if got != req_id {
+                        return Err(Error::Runtime(format!(
+                            "reply id {got} does not match request id {req_id}"
+                        )));
+                    }
+                    return Ok(values);
+                }
+                Err(e) if e.retryable && attempt < self.config.retries => {
+                    attempt += 1;
+                    self.backoff();
+                }
+                Err(e) => {
+                    return Err(Error::Runtime(format!(
+                        "server error for request {}: {}",
+                        e.req_id,
+                        e.to_error()
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Synchronous dense transform (retries retryable rejections when
+    /// the config allows).
+    pub fn transform(&mut self, model: &str, x: &[f32]) -> Result<Vec<f32>> {
+        let values = x.to_vec();
+        self.request_with_retry(model, move |c, m| c.send_dense(m, values.clone()))
     }
 
     /// Synchronous sparse transform.
@@ -134,14 +275,10 @@ impl NetClient {
         indices: &[u32],
         values: &[f32],
     ) -> Result<Vec<f32>> {
-        let req_id = self.send_sparse(model, indices.to_vec(), values.to_vec())?;
-        let (got, out) = self.recv_reply()?;
-        if got != req_id {
-            return Err(Error::Runtime(format!(
-                "reply id {got} does not match request id {req_id}"
-            )));
-        }
-        Ok(out)
+        let (indices, values) = (indices.to_vec(), values.to_vec());
+        self.request_with_retry(model, move |c, m| {
+            c.send_sparse(m, indices.clone(), values.clone())
+        })
     }
 }
 

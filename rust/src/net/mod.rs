@@ -25,16 +25,22 @@
 //!
 //! Observability: `net.connections`, `net.frames`, `net.frames_sent`,
 //! `net.reject`, `net.reaped`, `net.bad_frames`, `net.dropped_control`,
-//! `net.retired`, and per-model `net.model.<name>.requests` /
-//! `.latency_us` / `.swaps` — all through [`crate::obs`] and visible
-//! in [`crate::obs::MetricsSnapshot`]; `--trace` spans cover frame
+//! `net.retired`, `net.shed`, `net.deadline_exceeded`,
+//! `net.drain_forced`, the registry retirement family
+//! (`net.registry.retired`, `net.registry.pending_retires` gauge,
+//! `net.registry.stuck_retires`), and per-model
+//! `net.model.<name>.requests` / `.latency_us` / `.swaps` — all
+//! through [`crate::obs`] and visible in
+//! [`crate::obs::MetricsSnapshot`]; `--trace` spans cover frame
 //! handling (`net.frame`, `net.write_frame`) and swaps (`net.swap`).
+//! Fault injection for the whole tier (accept/read/write plus the
+//! coordinator and registry sites) lives in [`crate::faults`].
 
 pub mod client;
 pub mod protocol;
 pub mod registry;
 pub mod server;
 
-pub use client::NetClient;
+pub use client::{ClientConfig, NetClient};
 pub use registry::{ModelSlot, ModelStats, Registry, Serving};
 pub use server::{NetConfig, NetServer};

@@ -126,9 +126,12 @@ impl ErrorCode {
     }
 
     /// Map a library error to its wire code plus the retryable flag.
-    /// Backpressure rejections (coordinator lane full, bounded write
-    /// queue full) are the retryable family: the request was never
-    /// accepted, so the client may simply resend it later.
+    /// The retryable family is transient server state the client may
+    /// simply wait out and resend: backpressure rejections
+    /// (coordinator lane full, bounded write queue full), load
+    /// shedding, and per-request deadline overruns — in every case the
+    /// request either was never accepted or already got its one
+    /// (error) answer, so a resend can never double-execute.
     pub fn from_error(e: &Error) -> (ErrorCode, bool) {
         let code = match e {
             Error::Config(_) => ErrorCode::Config,
@@ -141,8 +144,9 @@ impl ErrorCode {
             Error::Bench(_) => ErrorCode::Bench,
             Error::Io(_) => ErrorCode::Io,
         };
-        let retryable =
-            matches!(e, Error::Coordinator(m) if m.contains("backpressure"));
+        let retryable = matches!(e, Error::Coordinator(m) if m.contains("backpressure")
+            || m.contains("load shed")
+            || m.contains("deadline exceeded"));
         (code, retryable)
     }
 }

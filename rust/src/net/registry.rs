@@ -38,7 +38,12 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// How long a retirer waits for transient `Arc<Serving>` clones to
+/// drop before declaring the retire stuck (see
+/// [`Registry::with_retire_deadline`]).
+pub const DEFAULT_RETIRE_DEADLINE: Duration = Duration::from_secs(5);
 
 /// One live model version: the shared artifact, its instantiated map
 /// (for dims and offline reference transforms) and a dedicated
@@ -149,6 +154,7 @@ pub struct Registry {
     admin: Mutex<()>,
     coord_config: CoordinatorConfig,
     retirers: Mutex<Vec<thread::JoinHandle<()>>>,
+    retire_deadline: Duration,
 }
 
 impl Registry {
@@ -159,7 +165,19 @@ impl Registry {
             admin: Mutex::new(()),
             coord_config,
             retirers: Mutex::new(Vec::new()),
+            retire_deadline: DEFAULT_RETIRE_DEADLINE,
         }
+    }
+
+    /// Bound how long a retirer waits for a replaced version's
+    /// refcount to drain. Past the deadline the retire degrades to a
+    /// logged + metered *stuck retire* (`net.registry.stuck_retires`):
+    /// the retirer drops its handle and exits, and the old serving
+    /// tears down whenever the leaked holder finally lets go — a
+    /// bounded background thread instead of an unbounded hang.
+    pub fn with_retire_deadline(mut self, deadline: Duration) -> Registry {
+        self.retire_deadline = deadline;
+        self
     }
 
     /// Insert a model or hot-swap an existing one (see the module docs
@@ -173,6 +191,10 @@ impl Registry {
                 name.len()
             )));
         }
+        // Chaos site: an injected error fails the swap before any
+        // shared state is touched — the live version must stay intact
+        // (same contract as a bad artifact).
+        crate::faults::failpoint("registry.swap")?;
         // The admin lock serializes writers; lookups stay on the
         // `models` read lock and never wait on artifact instantiation.
         let _admin = self.admin.lock().unwrap_or_else(|e| e.into_inner());
@@ -282,24 +304,68 @@ impl Registry {
     /// drop, then tear the old version down. `Serving::drop` shuts its
     /// coordinator down cleanly — already-admitted jobs are answered
     /// with real replies — and releases the artifact weight region.
+    /// The wait is bounded by the registry's retire deadline: a leaked
+    /// `Arc<Serving>` (a connection that never lets go) degrades to a
+    /// logged + metered stuck retire instead of an unbounded hang, and
+    /// the serving still tears down whenever the holder finally drops.
     fn spawn_retirer(&self, old: Arc<Serving>) {
+        let deadline = self.retire_deadline;
+        // Gauge guard: pending accounting must survive injected panics
+        // inside the retirer thread.
+        struct Pending;
+        impl Drop for Pending {
+            fn drop(&mut self) {
+                obs::gauge("net.registry.pending_retires").add(-1);
+            }
+        }
+        obs::gauge("net.registry.pending_retires").add(1);
         let handle = thread::Builder::new()
             .name("rfdot-net-retire".into())
             .spawn(move || {
+                let _pending = Pending;
+                let name = old.name().to_string();
+                let version = old.version();
+                // Chaos site: an injected error degrades this retire to
+                // the stuck path immediately (the deterministic way to
+                // exercise it); an injected panic unwinds — the gauge
+                // guard and the `Arc` drop still run.
+                let drain_ok = crate::faults::failpoint("registry.drain").is_ok();
+                let give_up = Instant::now() + deadline;
                 let mut old = old;
-                loop {
+                while drain_ok {
                     match Arc::try_unwrap(old) {
                         Ok(serving) => {
+                            // Chaos site: retire must complete even when
+                            // it fires — an error is logged, a panic
+                            // unwinds; either way `serving` drops and
+                            // the weight region is released.
+                            if let Err(e) = crate::faults::failpoint("registry.retire") {
+                                eprintln!("rfdot: retire fault for {name} v{version}: {e}");
+                            }
                             drop(serving); // Coordinator::drop drains + joins.
                             obs::counter("net.retired").add(1);
+                            obs::counter("net.registry.retired").add(1);
                             return;
                         }
                         Err(still_shared) => {
+                            if Instant::now() >= give_up {
+                                old = still_shared;
+                                break;
+                            }
                             old = still_shared;
                             thread::sleep(Duration::from_micros(200));
                         }
                     }
                 }
+                // Stuck: someone still holds the old version past the
+                // deadline. Log + meter, drop our handle, exit — the
+                // teardown runs from the leaked holder's final drop.
+                obs::counter("net.registry.stuck_retires").add(1);
+                eprintln!(
+                    "rfdot: stuck retire: {name} v{version} still referenced after {:?}",
+                    deadline
+                );
+                drop(old);
             })
             .expect("spawn retirer thread");
         self.retirers
@@ -398,6 +464,57 @@ mod tests {
             crate::artifact::resident_bytes(),
             baseline,
             "retirement must release every artifact weight region"
+        );
+    }
+
+    #[test]
+    fn retirement_is_metered() {
+        let retired_before = obs::counter("net.registry.retired").get();
+        let stuck_before = obs::counter("net.registry.stuck_retires").get();
+        let reg = Registry::new(config());
+        reg.insert("reg-meter", artifact(7, 5, 8)).unwrap();
+        reg.insert("reg-meter", artifact(8, 5, 8)).unwrap(); // one swap-retire
+        reg.shutdown(); // plus the final remove-retire
+        assert!(
+            obs::counter("net.registry.retired").get() >= retired_before + 2,
+            "swap + shutdown must both count into net.registry.retired"
+        );
+        assert_eq!(
+            obs::counter("net.registry.stuck_retires").get(),
+            stuck_before,
+            "clean retires must not count as stuck"
+        );
+    }
+
+    #[test]
+    fn stuck_retire_degrades_to_a_metered_bounded_exit() {
+        let baseline = crate::artifact::resident_bytes();
+        let stuck_before = obs::counter("net.registry.stuck_retires").get();
+        let reg = Registry::new(config()).with_retire_deadline(Duration::from_millis(20));
+        reg.insert("reg-stuck", artifact(9, 5, 8)).unwrap();
+        // A leaked holder: this clone outlives the swap's drain window.
+        let leaked = reg.get("reg-stuck").unwrap().serving();
+        reg.insert("reg-stuck", artifact(10, 5, 8)).unwrap();
+        // The bounded deadline means this join completes instead of
+        // hanging behind the leaked Arc.
+        reg.drain_retirers();
+        assert!(
+            obs::counter("net.registry.stuck_retires").get() > stuck_before,
+            "a held Arc past the deadline must count as a stuck retire"
+        );
+        // The old version still works while leaked, and tears down when
+        // the holder finally lets go.
+        let x = vec![0.5; 5];
+        assert_eq!(
+            leaked.coordinator().submit(x.clone()).unwrap().wait().unwrap(),
+            leaked.map().transform(&x)
+        );
+        drop(leaked);
+        reg.shutdown();
+        assert_eq!(
+            crate::artifact::resident_bytes(),
+            baseline,
+            "stuck retires must still release the weights once the holder drops"
         );
     }
 

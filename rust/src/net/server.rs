@@ -85,6 +85,20 @@ pub struct NetConfig {
     /// Accept at most this many connections, then exit once they all
     /// close (0 = unlimited). CI smokes use this for determinism.
     pub max_conns: usize,
+    /// Per-request deadline, measured from admission to the moment the
+    /// worker answers: a reply that took longer is downgraded to a
+    /// *retryable* deadline-exceeded error frame (`Duration::ZERO`
+    /// disables; exactly one frame per request either way).
+    pub request_deadline: Duration,
+    /// Load shedding: when a model's coordinator has this many
+    /// requests in flight (submitted − completed), further admissions
+    /// get an immediate retryable load-shed frame instead of queueing
+    /// behind a saturated pool (0 disables).
+    pub shed_inflight: usize,
+    /// Shutdown drain budget: how long [`NetServer::shutdown`] lets
+    /// in-flight replies flush (read halves closed, writers draining)
+    /// before force-closing the stragglers' sockets.
+    pub drain: Duration,
 }
 
 impl Default for NetConfig {
@@ -96,6 +110,9 @@ impl Default for NetConfig {
             write_queue: 256,
             write_timeout: Duration::from_secs(10),
             max_conns: 0,
+            request_deadline: Duration::ZERO,
+            shed_inflight: 0,
+            drain: Duration::from_secs(5),
         }
     }
 }
@@ -106,6 +123,7 @@ pub struct NetServer {
     shutdown: Arc<AtomicBool>,
     accept: Option<thread::JoinHandle<()>>,
     conns: Arc<Mutex<BTreeMap<u64, TcpStream>>>,
+    drain: Duration,
 }
 
 impl NetServer {
@@ -139,7 +157,7 @@ impl NetServer {
                 .spawn(move || accept_loop(listener, registry, config, shutdown, conns))
                 .map_err(|e| Error::Runtime(format!("spawn accept thread: {e}")))?
         };
-        Ok(NetServer { addr, shutdown, accept: Some(accept), conns })
+        Ok(NetServer { addr, shutdown, accept: Some(accept), conns, drain: config.drain })
     }
 
     /// The bound address (resolves port 0).
@@ -156,12 +174,39 @@ impl NetServer {
         }
     }
 
-    /// Stop accepting, close every connection, join all threads.
+    /// Stop accepting and drain: phase 1 closes every connection's
+    /// *read* half (no new requests; writers keep flushing in-flight
+    /// replies), then waits up to the configured drain budget for the
+    /// connection threads to wind down; phase 2 force-closes whatever
+    /// is left (`net.drain_forced` counts those sockets). In-flight
+    /// replies therefore reach the wire before their sockets close,
+    /// unless the peer stalls past the budget.
     pub fn shutdown(&mut self) {
         self.shutdown.store(true, Ordering::Release);
         {
             let conns = self.conns.lock().unwrap_or_else(|e| e.into_inner());
             for stream in conns.values() {
+                let _ = stream.shutdown(Shutdown::Read);
+            }
+        }
+        let deadline = Instant::now() + self.drain;
+        let drained = loop {
+            let done = match &self.accept {
+                Some(h) => h.is_finished(),
+                None => true,
+            };
+            if done {
+                break true;
+            }
+            if Instant::now() >= deadline {
+                break false;
+            }
+            thread::sleep(Duration::from_millis(2));
+        };
+        if !drained {
+            let conns = self.conns.lock().unwrap_or_else(|e| e.into_inner());
+            for stream in conns.values() {
+                obs::counter("net.drain_forced").add(1);
                 let _ = stream.shutdown(Shutdown::Both);
             }
         }
@@ -199,6 +244,14 @@ fn accept_loop(
         }
         match listener.accept() {
             Ok((stream, _peer)) => {
+                // Chaos site: an injected error drops the fresh socket
+                // on the floor (the peer sees a refused/reset connect),
+                // before any accounting — the server itself keeps
+                // accepting.
+                if crate::faults::failpoint("net.accept").is_err() {
+                    drop(stream);
+                    continue;
+                }
                 accepted += 1;
                 let conn_id = accepted as u64;
                 total.add(1);
@@ -260,13 +313,18 @@ fn writer_loop(
     let mut stream = stream;
     let mut dead = false;
     for out in rx {
-        let (bytes, budget) = match &out {
+        let (mut bytes, budget) = match out {
             Out::Reply(b) => (b, &permits),
             Out::Control(b) => (b, &control),
         };
         if !dead {
             let _span = obs::span("net.write_frame");
-            if stream.write_all(bytes).is_err() {
+            // Chaos site: `error` is a socket write failure (connection
+            // dies), `corrupt` flips a byte of the outbound frame (the
+            // client's framing layer must catch it), `delay` is a slow
+            // wire.
+            let fault = crate::faults::mangle("net.write", &mut bytes);
+            if fault.is_err() || stream.write_all(&bytes).is_err() {
                 dead = true;
                 let _ = stream.shutdown(Shutdown::Both);
             } else {
@@ -370,6 +428,12 @@ fn conn_loop(mut stream: TcpStream, _conn_id: u64, registry: Arc<Registry>, conf
 
     let mut missed = 0u32;
     loop {
+        // Chaos site: an injected error is a failed socket read — the
+        // connection winds down exactly like a peer reset (in-flight
+        // replies still flush through the writer drain below).
+        if crate::faults::failpoint("net.read").is_err() {
+            break;
+        }
         let mut header = [0u8; HEADER_LEN];
         match read_full(&mut stream, &mut header, &mut missed, config.max_missed) {
             ReadStatus::Full => {}
@@ -433,10 +497,11 @@ fn conn_loop(mut stream: TcpStream, _conn_id: u64, registry: Arc<Registry>, conf
                     send_control(&unknown_model(req.req_id, &req.model));
                     continue;
                 };
-                if !admit(&slot, &permits, &rejects, req.req_id, &send_control) {
+                if !admit(&slot, &permits, &rejects, req.req_id, config.shed_inflight, &send_control)
+                {
                     continue;
                 }
-                let cb = reply_callback(req.req_id, &slot, &tx);
+                let cb = reply_callback(req.req_id, &slot, &tx, config.request_deadline);
                 let serving = slot.serving();
                 let res = serving.coordinator().submit_callback(req.values, cb);
                 drop(serving);
@@ -449,10 +514,11 @@ fn conn_loop(mut stream: TcpStream, _conn_id: u64, registry: Arc<Registry>, conf
                     send_control(&unknown_model(req.req_id, &req.model));
                     continue;
                 };
-                if !admit(&slot, &permits, &rejects, req.req_id, &send_control) {
+                if !admit(&slot, &permits, &rejects, req.req_id, config.shed_inflight, &send_control)
+                {
                     continue;
                 }
-                let cb = reply_callback(req.req_id, &slot, &tx);
+                let cb = reply_callback(req.req_id, &slot, &tx, config.request_deadline);
                 let serving = slot.serving();
                 let res =
                     serving.coordinator().submit_sparse_callback(req.indices, req.values, cb);
@@ -489,14 +555,36 @@ fn unknown_model(req_id: u64, name: &str) -> Frame {
 }
 
 /// Claim a reply permit for a request; on exhaustion send the
-/// retryable write-queue reject and refuse admission.
+/// retryable write-queue reject and refuse admission. When load
+/// shedding is configured and the model's coordinator is saturated
+/// (in-flight ≥ the threshold), the request is shed *before* touching
+/// the permit budget — an immediate retryable frame (`net.shed`)
+/// instead of queueing behind a pool that cannot keep up.
 fn admit(
     slot: &Arc<ModelSlot>,
     permits: &AtomicUsize,
     rejects: &obs::Counter,
     req_id: u64,
+    shed_inflight: usize,
     send_control: &impl Fn(&Frame),
 ) -> bool {
+    if shed_inflight > 0 {
+        let serving = slot.serving();
+        let stats = serving.coordinator().stats();
+        let submitted = stats.submitted.load(Ordering::Relaxed);
+        let completed = stats.completed.load(Ordering::Relaxed);
+        if submitted.saturating_sub(completed) >= shed_inflight as u64 {
+            obs::counter("net.shed").add(1);
+            send_control(&error_frame(
+                req_id,
+                &Error::Coordinator(format!(
+                    "load shed: {} requests in flight (limit {shed_inflight})",
+                    submitted.saturating_sub(completed)
+                )),
+            ));
+            return false;
+        }
+    }
     if !claim(permits) {
         rejects.add(1);
         send_control(&error_frame(
@@ -512,20 +600,38 @@ fn admit(
 /// The exactly-once reply path: runs on whichever worker answers the
 /// job, records per-model latency, and hands the encoded frame to the
 /// bounded writer queue (never blocks: the send rides the permit
-/// claimed at admission).
+/// claimed at admission). With a request deadline configured, an
+/// answer that arrives late is downgraded to a *retryable*
+/// deadline-exceeded error frame (`net.deadline_exceeded`) — still
+/// exactly one frame for the request, so the client can resubmit
+/// without ever double-counting.
 fn reply_callback(
     req_id: u64,
     slot: &Arc<ModelSlot>,
     tx: &SyncSender<Out>,
+    deadline: Duration,
 ) -> impl FnOnce(Result<Vec<f32>>) + Send + 'static {
     let latency = slot.latency_us().clone();
     let tx = tx.clone();
     let start = Instant::now();
     move |r: Result<Vec<f32>>| {
-        latency.record_f64(start.elapsed().as_secs_f64() * 1e6);
-        let frame = match r {
-            Ok(values) => Frame::Reply { req_id, values },
-            Err(e) => error_frame(req_id, &e),
+        let elapsed = start.elapsed();
+        latency.record_f64(elapsed.as_secs_f64() * 1e6);
+        let frame = if deadline > Duration::ZERO && elapsed > deadline {
+            obs::counter("net.deadline_exceeded").add(1);
+            error_frame(
+                req_id,
+                &Error::Coordinator(format!(
+                    "deadline exceeded: answered in {:.1}ms (limit {:.1}ms)",
+                    elapsed.as_secs_f64() * 1e3,
+                    deadline.as_secs_f64() * 1e3
+                )),
+            )
+        } else {
+            match r {
+                Ok(values) => Frame::Reply { req_id, values },
+                Err(e) => error_frame(req_id, &e),
+            }
         };
         let _ = tx.send(Out::Reply(encode_frame(&frame)));
     }

@@ -1,0 +1,420 @@
+//! Chaos suite for the serving stack (ISSUE 10 tentpole): every fault
+//! site from [`rfdot::faults::SITES`] is swept against a live loopback
+//! server under a seeded fault plan, asserting the survival contract:
+//!
+//! * no panic ever escapes to the test (drop guards everywhere),
+//! * every request gets **exactly one** answer — a reply or an error,
+//! * every successful reply is **bitwise-equal** to the offline oracle
+//!   (`serving.map().transform`), during the storm and after it,
+//! * artifact resident bytes return to baseline after teardown,
+//! * the same seed replays the identical client-visible schedule.
+//!
+//! Plus the deadline / load-shed / drain / client-timeout semantics
+//! that make the survival story usable from the client side.
+//!
+//! Fault plans are process-global, so every test here serializes on
+//! one mutex and clears the plan on exit (panic-safe via `ChaosGuard`).
+
+use rfdot::artifact::MapArtifact;
+use rfdot::coordinator::CoordinatorConfig;
+use rfdot::kernels::Exponential;
+use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
+use rfdot::net::{ClientConfig, NetClient, NetConfig, NetServer, Registry};
+use rfdot::rng::Rng;
+use std::collections::BTreeSet;
+use std::net::TcpListener;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread;
+use std::time::{Duration, Instant};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Serializes the tests (fault plans and obs counters are global) and
+/// guarantees the plan is disarmed however the test exits.
+struct ChaosGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for ChaosGuard {
+    fn drop(&mut self) {
+        rfdot::faults::clear();
+    }
+}
+
+fn chaos() -> ChaosGuard {
+    let g = SERIAL.lock().unwrap_or_else(PoisonError::into_inner);
+    rfdot::faults::clear();
+    ChaosGuard(g)
+}
+
+fn artifact(seed: u64, d: usize, feats: usize) -> Arc<MapArtifact> {
+    let mut rng = Rng::seed_from(seed);
+    let map = RandomMaclaurin::sample(
+        &Exponential::new(1.0),
+        d,
+        feats,
+        RmConfig::default().with_max_order(6),
+        &mut rng,
+    );
+    Arc::new(MapArtifact::from_map(&map).expect("encode artifact"))
+}
+
+fn coord_config(workers: usize, max_wait: Duration) -> CoordinatorConfig {
+    CoordinatorConfig { workers, max_batch: 64, max_wait, ..CoordinatorConfig::default() }
+}
+
+fn bitwise_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+const D: usize = 6;
+const FEATS: usize = 16;
+const REQS: usize = 12;
+
+/// One storm: arm `site=error:0.5`, drive client traffic (reconnecting
+/// on failure, the way the `net-client` CLI loop does), interleave the
+/// admin paths (hot-swap, artifact file load) so the non-request sites
+/// get real hits, then disarm and prove the world is intact. Returns
+/// how many requests succeeded (their replies were oracle-checked).
+fn run_site_storm(site: &str) -> usize {
+    // Everything that decodes an RFDM container is built *before* the
+    // plan goes in: the storm must hit serving, not test setup.
+    let art = artifact(31, D, FEATS);
+    let art2 = artifact(32, D, FEATS);
+    let oracle = art.instantiate().expect("instantiate oracle");
+    let tmp = std::env::temp_dir().join(format!("rfdot-chaos-{}-{site}.rfdm", std::process::id()));
+    art.save(&tmp).expect("write tmp artifact");
+
+    let registry = Arc::new(Registry::new(coord_config(2, Duration::from_micros(200))));
+    registry.insert("chaos", art.clone()).expect("insert primary model");
+    registry.insert("swapme", art2.clone()).expect("insert swap target");
+
+    rfdot::faults::install_spec(&format!("seed=11,{site}=error:0.5")).expect("install plan");
+    let server = NetServer::start(registry.clone(), NetConfig::default()).expect("start server");
+    let addr = server.local_addr();
+    let cfg = || ClientConfig::default().with_timeout(Duration::from_secs(10)).with_retries(3);
+
+    let mut client = NetClient::connect_with(addr, cfg()).ok();
+    let mut ok = 0usize;
+    for i in 0..REQS {
+        // Admin chaos rides along mid-storm: a hot-swap (registry.swap
+        // / drain / retire hits) and a file load (artifact.load /
+        // artifact.read / rfdm.decode hits). Failures are the point;
+        // the live version and the request path must shrug them off.
+        if i == 4 {
+            let _ = registry.insert("swapme", art2.clone());
+        }
+        if i == 8 {
+            let _ = MapArtifact::load(&tmp);
+        }
+        let mut rng = Rng::seed_from(1000 + i as u64);
+        let x: Vec<f32> = (0..D).map(|_| rng.f32() - 0.5).collect();
+        if client.is_none() {
+            client = NetClient::connect_with(addr, cfg()).ok();
+        }
+        let c = match client.as_mut() {
+            Some(c) => c,
+            None => continue,
+        };
+        match c.transform("chaos", &x) {
+            Ok(y) => {
+                assert!(
+                    bitwise_eq(&y, &oracle.transform(&x)),
+                    "site {site}: a reply that survived the storm must be bitwise-exact"
+                );
+                ok += 1;
+            }
+            // Injected server errors and dead connections both land
+            // here; a fresh connection is the client's recovery move.
+            Err(_) => client = None,
+        }
+    }
+
+    // Disarm and prove full recovery on a fresh connection.
+    rfdot::faults::clear();
+    let mut fresh = NetClient::connect(addr, Duration::from_secs(10))
+        .unwrap_or_else(|e| panic!("site {site}: post-storm connect failed: {e}"));
+    let x = vec![0.25; D];
+    let y = fresh
+        .transform("chaos", &x)
+        .unwrap_or_else(|e| panic!("site {site}: post-storm request failed: {e}"));
+    assert!(
+        bitwise_eq(&y, &oracle.transform(&x)),
+        "site {site}: post-storm replies must be bitwise-equal to the no-fault oracle"
+    );
+
+    drop(fresh);
+    drop(client);
+    let mut server = server;
+    server.shutdown();
+    registry.shutdown();
+    let _ = std::fs::remove_file(&tmp);
+    ok
+}
+
+#[test]
+fn chaos_sweep_every_fault_site() {
+    let _g = chaos();
+    let baseline = rfdot::artifact::resident_bytes();
+    let injected_before = rfdot::obs::counter("faults.injected").get();
+    let mut total_ok = 0usize;
+    for site in rfdot::faults::SITES {
+        total_ok += run_site_storm(site);
+        assert_eq!(
+            rfdot::artifact::resident_bytes(),
+            baseline,
+            "site {site}: teardown must release every artifact weight region"
+        );
+    }
+    assert!(
+        rfdot::obs::counter("faults.injected").get() > injected_before,
+        "the sweep must actually inject faults (counter never moved)"
+    );
+    assert!(total_ok > 0, "some requests must survive the storms");
+}
+
+#[test]
+fn same_seed_replays_the_same_client_visible_schedule() {
+    let _g = chaos();
+    // One sequential client, one reply write per request: the net.write
+    // hit ordinals are exactly the request sequence, so the ok/err
+    // pattern the client sees is a pure function of the seed.
+    let run = || -> Vec<bool> {
+        let art = artifact(41, 5, 8);
+        let registry = Arc::new(Registry::new(coord_config(1, Duration::from_micros(200))));
+        registry.insert("replay", art).expect("insert model");
+        rfdot::faults::install_spec("seed=3,net.write=error:0.5").expect("install plan");
+        let mut server =
+            NetServer::start(registry.clone(), NetConfig::default()).expect("start server");
+        let addr = server.local_addr();
+        let mut client = NetClient::connect(addr, Duration::from_secs(10)).ok();
+        let mut pattern = Vec::with_capacity(20);
+        for _ in 0..20 {
+            if client.is_none() {
+                client = Some(
+                    NetClient::connect(addr, Duration::from_secs(10))
+                        .expect("reconnect (accept path is not under fault)"),
+                );
+            }
+            let c = client.as_mut().unwrap();
+            match c.transform("replay", &vec![0.5; 5]) {
+                Ok(_) => pattern.push(true),
+                Err(_) => {
+                    pattern.push(false);
+                    client = None; // the injected write killed the conn
+                }
+            }
+        }
+        rfdot::faults::clear();
+        drop(client);
+        server.shutdown();
+        registry.shutdown();
+        pattern
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed + same spec must replay the identical schedule");
+    assert!(a.contains(&false), "p=0.5 over 20 writes must kill some (seeded, so stable)");
+    assert!(a.contains(&true), "p=0.5 over 20 writes must spare some (seeded, so stable)");
+}
+
+#[test]
+fn corrupted_wire_frames_surface_as_errors_never_panics_or_hangs() {
+    let _g = chaos();
+    let art = artifact(51, D, FEATS);
+    let oracle = art.instantiate().expect("instantiate oracle");
+    let registry = Arc::new(Registry::new(coord_config(1, Duration::from_micros(200))));
+    registry.insert("wire", art).expect("insert model");
+    rfdot::faults::install_spec("seed=13,net.write=corrupt").expect("install plan");
+    let mut server = NetServer::start(registry.clone(), NetConfig::default()).expect("start");
+    let addr = server.local_addr();
+    // A corrupted length field desynchronizes the stream; the short
+    // client timeout bounds how long that costs before the reconnect.
+    let cfg = || ClientConfig::default().with_timeout(Duration::from_millis(500));
+    let t0 = Instant::now();
+    let mut client = NetClient::connect_with(addr, cfg()).ok();
+    for _ in 0..8 {
+        if client.is_none() {
+            client = NetClient::connect_with(addr, cfg()).ok();
+        }
+        let c = match client.as_mut() {
+            Some(c) => c,
+            None => continue,
+        };
+        // Every outbound frame has one flipped byte: the client must
+        // come back with *something* — a decode error, a framing error,
+        // a timeout, or (when the flip landed in the payload floats) a
+        // reply — without panicking or hanging.
+        if c.transform("wire", &vec![0.125; D]).is_err() {
+            client = None;
+        }
+    }
+    assert!(t0.elapsed() < Duration::from_secs(30), "corruption must never hang the client");
+    rfdot::faults::clear();
+    let mut fresh = NetClient::connect(addr, Duration::from_secs(10)).expect("reconnect");
+    let x = vec![0.375; D];
+    let y = fresh.transform("wire", &x).expect("clean request after the storm");
+    assert!(bitwise_eq(&y, &oracle.transform(&x)), "post-storm parity");
+    drop(fresh);
+    server.shutdown();
+    registry.shutdown();
+}
+
+#[test]
+fn silent_server_times_out_instead_of_hanging_the_client() {
+    let _g = chaos();
+    // ISSUE 10 satellite: a server that accepts and then never writes a
+    // byte. Before unconditional socket deadlines the client hung in
+    // read_exact forever; now it errors within the configured timeout.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("local addr");
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+    let hold = thread::spawn(move || {
+        let _conn = listener.accept().expect("accept");
+        let _ = done_rx.recv(); // keep the socket open, silently
+    });
+    let mut client = NetClient::connect_with(
+        addr,
+        ClientConfig::default().with_timeout(Duration::from_millis(200)),
+    )
+    .expect("connect");
+    let t0 = Instant::now();
+    let err = client.ping().expect_err("a silent server must be an error, not a hang");
+    assert!(t0.elapsed() < Duration::from_secs(5), "timeout must bound the wait");
+    assert!(
+        err.to_string().contains("read frame header"),
+        "the error must name the stalled read, got: {err}"
+    );
+    let _ = done_tx.send(());
+    let _ = hold.join();
+}
+
+#[test]
+fn saturation_sheds_retryably_with_exactly_one_answer_per_request() {
+    let _g = chaos();
+    let shed_before = rfdot::obs::counter("net.shed").get();
+    let art = artifact(61, 4, 64);
+    let oracle = art.instantiate().expect("instantiate oracle");
+    // One worker with a long coalescing window: the first admitted
+    // request holds in-flight ≥ 1 for ~60ms while the rest of the
+    // burst arrives and must shed.
+    let registry = Arc::new(Registry::new(coord_config(1, Duration::from_millis(60))));
+    registry.insert("shed", art).expect("insert model");
+    let mut server = NetServer::start(
+        registry.clone(),
+        NetConfig { shed_inflight: 1, ..NetConfig::default() },
+    )
+    .expect("start server");
+    let mut client =
+        NetClient::connect(server.local_addr(), Duration::from_secs(10)).expect("connect");
+
+    const BURST: usize = 6;
+    let x = vec![0.25; 4];
+    let ids: Vec<u64> =
+        (0..BURST).map(|_| client.send_dense("shed", x.clone()).expect("send")).collect();
+    let mut answered = BTreeSet::new();
+    let mut replies = 0usize;
+    let mut sheds = 0usize;
+    for _ in 0..BURST {
+        match client.recv_outcome().expect("transport must stay healthy") {
+            Ok((req_id, values)) => {
+                assert!(answered.insert(req_id), "duplicate reply for {req_id}");
+                assert!(bitwise_eq(&values, &oracle.transform(&x)), "shed-survivor parity");
+                replies += 1;
+            }
+            Err(e) => {
+                assert!(answered.insert(e.req_id), "duplicate answer for {}", e.req_id);
+                assert!(e.retryable, "shed frames must be retryable: {}", e.message);
+                assert!(e.message.contains("load shed"), "{}", e.message);
+                sheds += 1;
+            }
+        }
+    }
+    assert_eq!(answered, ids.into_iter().collect::<BTreeSet<_>>(), "exactly-once accounting");
+    assert!(replies >= 1, "the admitted request must still be answered");
+    assert!(sheds >= 1, "the burst beyond the in-flight limit must shed");
+    assert!(rfdot::obs::counter("net.shed").get() - shed_before >= sheds as u64);
+
+    // The burst has drained, so a synchronous retrying client gets a
+    // real answer even against a shedding server.
+    let mut retrier = NetClient::connect_with(
+        server.local_addr(),
+        ClientConfig::default().with_timeout(Duration::from_secs(10)).with_retries(5),
+    )
+    .expect("connect retrier");
+    let y = retrier.transform("shed", &x).expect("retry must eventually get through");
+    assert!(bitwise_eq(&y, &oracle.transform(&x)));
+    drop(retrier);
+    drop(client);
+    server.shutdown();
+    registry.shutdown();
+}
+
+#[test]
+fn late_replies_downgrade_to_retryable_deadline_errors() {
+    let _g = chaos();
+    let exceeded_before = rfdot::obs::counter("net.deadline_exceeded").get();
+    let art = artifact(71, 4, 8);
+    // The 50ms coalescing window guarantees every answer misses a 1ms
+    // deadline.
+    let registry = Arc::new(Registry::new(coord_config(1, Duration::from_millis(50))));
+    registry.insert("late", art).expect("insert model");
+    let mut server = NetServer::start(
+        registry.clone(),
+        NetConfig { request_deadline: Duration::from_millis(1), ..NetConfig::default() },
+    )
+    .expect("start server");
+    let mut client =
+        NetClient::connect(server.local_addr(), Duration::from_secs(10)).expect("connect");
+    let id = client.send_dense("late", vec![0.5; 4]).expect("send");
+    match client.recv_outcome().expect("transport must stay healthy") {
+        Ok((req_id, _)) => panic!("request {req_id} must have missed the 1ms deadline"),
+        Err(e) => {
+            assert_eq!(e.req_id, id, "exactly one frame, for the right request");
+            assert!(e.retryable, "deadline overruns must be retryable");
+            assert!(e.message.contains("deadline exceeded"), "{}", e.message);
+        }
+    }
+    assert!(rfdot::obs::counter("net.deadline_exceeded").get() > exceeded_before);
+
+    // A retrying client exhausts its budget — every answer is late —
+    // and surfaces the deadline error instead of succeeding spuriously.
+    let mut retrier = NetClient::connect_with(
+        server.local_addr(),
+        ClientConfig::default().with_timeout(Duration::from_secs(10)).with_retries(2),
+    )
+    .expect("connect retrier");
+    let err = retrier.transform("late", &vec![0.5; 4]).expect_err("every answer is late");
+    assert!(err.to_string().contains("deadline exceeded"), "{err}");
+    drop(retrier);
+    drop(client);
+    server.shutdown();
+    registry.shutdown();
+}
+
+#[test]
+fn shutdown_drains_in_flight_replies_before_closing_sockets() {
+    let _g = chaos();
+    let forced_before = rfdot::obs::counter("net.drain_forced").get();
+    let art = artifact(81, 4, 8);
+    let oracle = art.instantiate().expect("instantiate oracle");
+    // The 80ms window keeps the request in flight when shutdown lands.
+    let registry = Arc::new(Registry::new(coord_config(1, Duration::from_millis(80))));
+    registry.insert("drain", art).expect("insert model");
+    let mut server = NetServer::start(registry.clone(), NetConfig::default()).expect("start");
+    let mut client =
+        NetClient::connect(server.local_addr(), Duration::from_secs(10)).expect("connect");
+    let x = vec![0.75; 4];
+    let id = client.send_dense("drain", x.clone()).expect("send");
+    thread::sleep(Duration::from_millis(20)); // let admission happen
+    server.shutdown(); // phase 1 closes read halves; the reply must still flush
+    let (req_id, values) =
+        client.recv_reply().expect("the in-flight reply must reach the wire during drain");
+    assert_eq!(req_id, id);
+    assert!(bitwise_eq(&values, &oracle.transform(&x)), "drained reply parity");
+    assert_eq!(
+        rfdot::obs::counter("net.drain_forced").get(),
+        forced_before,
+        "a clean drain must not force-close any socket"
+    );
+    drop(client);
+    registry.shutdown();
+}

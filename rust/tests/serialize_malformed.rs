@@ -241,6 +241,56 @@ fn v3_section_size_overflow_is_rejected() {
 }
 
 #[test]
+fn container_truncation_at_every_byte_errors_cleanly() {
+    // The container-level twin of the legacy-reader sweep (ISSUE 10):
+    // `MapArtifact::from_bytes` is the path every serving artifact
+    // takes — native v3 parse plus the legacy up-convert — and a
+    // truncation at ANY byte must be a named error, never a panic,
+    // over-read, or parse of a half record.
+    for record in [v3_record(), v3_dense_record(), dense_record(), structured_record()] {
+        rfdot::artifact::MapArtifact::from_bytes(&record)
+            .expect("valid container must load");
+        for cut in 0..record.len() {
+            assert!(
+                rfdot::artifact::MapArtifact::from_bytes(&record[..cut]).is_err(),
+                "container truncated to {cut}/{} bytes must error, not parse",
+                record.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn container_single_byte_corruption_never_panics() {
+    // A seeded sweep of random single-byte flips over valid v3 records
+    // (the bit-rot model `faults::mangle` injects at `artifact.read`):
+    // structural corruption must come back as a named [`rfdot::Error`];
+    // a flip landing in the weight floats is data, not structure, and
+    // may parse — but then the artifact must still instantiate without
+    // panicking. Either way: no panic, no unbounded allocation.
+    for record in [v3_record(), v3_dense_record()] {
+        let mut rng = Rng::seed_from(99);
+        for _ in 0..400 {
+            let pos = rng.below(record.len() as u64) as usize;
+            let mask = (rng.below(255) + 1) as u8; // never the identity flip
+            let mut bad = record.clone();
+            bad[pos] ^= mask;
+            match rfdot::artifact::MapArtifact::from_bytes(&bad) {
+                Ok(art) => {
+                    let _ = art.instantiate();
+                }
+                Err(e) => {
+                    assert!(
+                        !e.to_string().is_empty(),
+                        "corruption at byte {pos} must produce a named error"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn v3_reader_round_trips_the_untouched_records_bit_for_bit() {
     // The hardening must not disturb the canonical path: a valid v3
     // record parses, instantiates, and re-encodes byte-identically.

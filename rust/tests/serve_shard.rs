@@ -10,6 +10,10 @@
 //!    steals): replies are never duplicated, dropped, or cross-wired.
 //! 3. **Shutdown never hangs** — queued-but-unserved tickets (a worker
 //!    died mid-run) are failed with an explicit shutdown error.
+//! 4. **Batcher-death survival** (ISSUE 10) — a batcher killed by an
+//!    injected panic still closes the shard queues (no shutdown hang)
+//!    and a single dead ingress lane never fails submissions while
+//!    other lanes are live.
 
 use rfdot::coordinator::{
     Backend, BackendSpec, ClosureFactory, Coordinator, CoordinatorConfig, NativeFactory,
@@ -21,8 +25,19 @@ use rfdot::maclaurin::{RandomMaclaurin, RmConfig};
 use rfdot::rng::Rng;
 use rfdot::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
+
+/// Serializes every test in this binary: the batcher-death regressions
+/// arm process-global fault plans on `coord.*` sites, which the other
+/// tests' coordinators would hit if they ran concurrently.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    let g = SERIAL.lock().unwrap_or_else(PoisonError::into_inner);
+    rfdot::faults::clear();
+    g
+}
 
 fn sample_map(d: usize, n_feat: usize, seed: u64) -> Arc<RandomMaclaurin> {
     Arc::new(RandomMaclaurin::sample(
@@ -36,6 +51,7 @@ fn sample_map(d: usize, n_feat: usize, seed: u64) -> Arc<RandomMaclaurin> {
 
 #[test]
 fn replies_bit_identical_across_shard_topologies() {
+    let _serial = serial();
     // The serving parity pin: the same seeded map served through every
     // topology — shared queue, one shard per worker, more shards than
     // workers — answers every input with exactly transform(x).
@@ -96,6 +112,7 @@ impl Backend for MaybeSlow {
 
 #[test]
 fn stress_exactly_once_replies_under_forced_stealing() {
+    let _serial = serial();
     let d = 6;
     let map = sample_map(d, 32, 7);
     let built = Arc::new(AtomicUsize::new(0));
@@ -254,6 +271,7 @@ fn panic_when_told_coordinator() -> (Coordinator, std::sync::mpsc::Sender<()>) {
 
 #[test]
 fn shutdown_fails_queued_unserved_tickets_explicitly() {
+    let _serial = serial();
     // Regression (ISSUE 5 satellite): a queued-but-unserved request's
     // `Ticket::wait` used to hang until shutdown (or forever) when its
     // worker died. It must now be failed with an explicit error — at
@@ -291,6 +309,7 @@ fn shutdown_fails_queued_unserved_tickets_explicitly() {
 
 #[test]
 fn callbacks_fire_even_when_the_worker_panics() {
+    let _serial = serial();
     // The exactly-once contract for the callback surface on the
     // worker-death path: the callback must still be invoked (with an
     // error), not silently dropped with the unwound batch.
@@ -308,6 +327,7 @@ fn callbacks_fire_even_when_the_worker_panics() {
 
 #[test]
 fn submitting_after_worker_death_still_answers() {
+    let _serial = serial();
     // With every worker dead, newly accepted requests must be answered
     // by the batcher's no-live-workers route instead of queueing
     // forever.
@@ -331,4 +351,93 @@ fn submitting_after_worker_death_still_answers() {
             "request hung instead of failing fast: {err}"
         );
     }
+}
+
+#[test]
+fn batcher_panic_still_closes_the_shard_queues() {
+    let _serial = serial();
+    // Regression (ISSUE 10 audit): a batcher that panicked mid-batch
+    // never counted itself out of `batchers_alive`, so the last-out
+    // `ShardQueues::close` never fired — workers blocked on `work_cv`
+    // forever and `shutdown` hung joining them. The `BatcherGuard`
+    // drop guard closes the queues on the unwind path too.
+    rfdot::faults::install_spec("coord.batch_form=panic").expect("arm the batcher panic");
+    let map = sample_map(4, 8, 21);
+    let coord = Coordinator::start(
+        Arc::new(NativeFactory::new(map)),
+        CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            max_batch: 2,
+            max_wait: Duration::from_micros(100),
+            ..Default::default()
+        },
+    );
+    let t = coord.submit(vec![0.1; 4]).unwrap();
+    // The formed batch is answered by `Job::drop` during the unwind —
+    // exactly once, as an error, never a hang.
+    assert!(t.wait().is_err(), "a panicked batch cannot produce a success reply");
+    rfdot::faults::clear();
+    // The hang regression: teardown must complete promptly.
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        drop(coord); // Drop runs shutdown: close lanes, join threads.
+        let _ = done_tx.send(());
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("shutdown hung after a batcher panic (shard queues never closed)");
+}
+
+#[test]
+fn submissions_survive_a_dead_batcher_lane() {
+    let _serial = serial();
+    // Regression (ISSUE 10 audit): `enqueue` reported "coordinator is
+    // shut down" on the FIRST disconnected lane it scanned, so one
+    // dead batcher failed roughly half of all submissions while the
+    // other lane was perfectly healthy. A dead lane must be skipped
+    // like a full one; only all-lanes-dead means shut down.
+    let map = sample_map(4, 8, 22);
+    rfdot::faults::install_spec("coord.batch_form=panic").expect("arm the batcher panic");
+    let coord = Coordinator::start(
+        Arc::new(NativeFactory::new(map.clone())),
+        CoordinatorConfig {
+            workers: 2,
+            shards: 2, // two ingress lanes, one batcher each
+            max_batch: 2,
+            max_wait: Duration::from_micros(100),
+            ..Default::default()
+        },
+    );
+    // Kill exactly one batcher: the single submitted job lands on one
+    // lane, whose batcher panics forming the batch; disarm before the
+    // other lane ever sees a job.
+    let killer = coord.submit(vec![0.9; 4]).unwrap();
+    assert!(killer.wait().is_err(), "the sacrificial job dies with its batcher");
+    rfdot::faults::clear();
+    // Give the panicked batcher time to finish unwinding (its lane
+    // receiver drops at the end of the unwind).
+    std::thread::sleep(Duration::from_millis(50));
+    // Every submission must now route around the dead lane — before
+    // the fix, the round-robin scan failed whenever it started there.
+    for i in 0..8 {
+        let x = vec![0.1 * (i as f32 + 1.0); 4];
+        let t = coord
+            .submit(x.clone())
+            .unwrap_or_else(|e| panic!("submission {i} failed around the dead lane: {e}"));
+        assert_eq!(
+            t.wait().unwrap(),
+            map.transform(&x),
+            "submission {i}: the surviving lane must serve exact replies"
+        );
+    }
+    // Teardown still completes with one batcher already gone.
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        drop(coord);
+        let _ = done_tx.send(());
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("shutdown hung with a dead batcher lane");
 }

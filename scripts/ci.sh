@@ -26,6 +26,10 @@
 #    it end to end: ping, list-models, dense/sparse bitwise parity, and
 #    two crafted malformed frames that must come back as named error
 #    frames; the server's stats line and its trace are then checked;
+#  * a second loopback run arms `--faults` with a seeded delay plan
+#    (plus deadline/shed/retry knobs) and asserts the stats line shows
+#    faults=N>0 — the deterministic fault-injection tier, live through
+#    the CLI; the test suite also re-runs once with RFDOT_FAULTS set;
 #  * `report --quick` regenerates REPORT.md/REPORT.json into a temp dir
 #    and re-parses the JSON through the declared schema, failing on
 #    schema drift (the self-check inside `rfdot report`).
@@ -46,6 +50,13 @@ RFDOT_SIMD=scalar cargo test -q
 # contract the suite pins while the flag is off — including the
 # steady-state zero-allocation transforms (rings pre-allocate).
 RFDOT_TRACE=1 cargo test -q
+# And once more with a benign seeded fault plan armed process-wide via
+# the environment (1ms delays on a twentieth of socket writes): every
+# contract must hold while the failpoint layer is live, not just while
+# it is compiled in but disarmed. Tests that need their own plans
+# (tests/chaos.rs, tests/serve_shard.rs) install/clear per test, which
+# overrides the env arming there.
+RFDOT_FAULTS='seed=1,net.write=delay-1:0.05' cargo test -q
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
@@ -95,5 +106,28 @@ wait "$serve_pid"
 grep -q 'model default' "$report_dir/serve.log"
 test -s "$report_dir/net_trace.json"
 cargo run --release --quiet -- trace-check "$report_dir/net_trace.json"
+# Seeded chaos smoke: the same front-end with a deterministic fault
+# plan injecting 1ms delays on half of all socket reads/writes, the
+# per-request deadline and load-shed knobs armed at harmless levels,
+# and the client driving it with its survival knobs (socket deadline +
+# retry budget) set. The run must exit clean AND the stats line must
+# report faults=N with N > 0 — the plan really fired, the tier really
+# survived it. The schedule is a pure function of seed 7, so this
+# smoke is bit-reproducible.
+cargo run --release --quiet -- serve --listen 127.0.0.1:0 --conns 1 \
+    --faults 'seed=7,net.read=delay-1:0.5,net.write=delay-1:0.5' \
+    --deadline-ms 2000 --shed 64 > "$report_dir/chaos.log" 2>&1 &
+chaos_pid=$!
+addr=""
+for _ in $(seq 1 100); do
+    addr="$(sed -n 's/^listening on \([^ ]*\).*/\1/p' "$report_dir/chaos.log")"
+    [ -n "$addr" ] && break
+    sleep 0.1
+done
+test -n "$addr"
+cargo run --release --quiet -- net-client --connect "$addr" --requests 8 \
+    --timeout-ms 5000 --retries 3
+wait "$chaos_pid"
+grep -Eq 'faults=[1-9][0-9]*' "$report_dir/chaos.log"
 cargo run --release --quiet -- report --quick --fresh --out-dir "$report_dir"
 test -s "$report_dir/REPORT.md" && test -s "$report_dir/REPORT.json"
